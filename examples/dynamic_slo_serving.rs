@@ -1,0 +1,182 @@
+//! End-to-end live serving driver (the repo's "prove all layers compose"
+//! example): the real AOT model (L1 Pallas kernels inside an L2 JAX
+//! network, compiled to HLO and executed via PJRT) served by the L3
+//! coordinator over real threads and a real HTTP server, with a workload
+//! generator replaying a synthetic 4G bandwidth trace as per-request
+//! dynamic SLOs.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example dynamic_slo_serving \
+//!     [--duration-s 30] [--rate 20] [--slo-ms 1000]
+//! ```
+//!
+//! Reports served/violated/dropped counts, the latency distribution, and
+//! throughput — the row recorded in EXPERIMENTS.md §End-to-end.
+
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+use sponge::coordinator::{Coordinator, CoordinatorCfg, LiveRequest};
+use sponge::network::{BandwidthTrace, NetworkModel};
+use sponge::perfmodel::LatencyModel;
+use sponge::profiler::{calibrate_from_single_core, PAPER_PARALLEL_FRACTION};
+use sponge::runtime::{InferenceEngine, PjrtEngine, PjrtProxy};
+use sponge::server::{client, serve};
+use sponge::solver::SolverLimits;
+use sponge::util::cli::Args;
+use sponge::util::json::Json;
+use sponge::util::rng::Pcg32;
+use sponge::util::stats::Summary;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env(&[], false).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let duration_s = args.u64_or("duration-s", 30)?;
+    let rate = args.f64_or("rate", 20.0)?;
+    let slo_ms = args.f64_or("slo-ms", 1_000.0)?;
+    let variant = args.str_or("variant", "resnet18lite");
+
+    // --- 1. Calibrate the scaler's latency model from the real engine. ---
+    println!("[1/4] profiling the PJRT engine (batch axis, c = 1)...");
+    let mut single = PjrtEngine::load("artifacts", &variant)?;
+    let mut points = Vec::new();
+    for &b in &single.supported_batches() {
+        let _ = single.execute(b, 1)?; // warm-up compile caches
+        let mut best = f64::INFINITY;
+        let mut lat = Vec::new();
+        for _ in 0..7 {
+            let l = single.execute(b, 1)?;
+            best = best.min(l);
+            lat.push(l);
+        }
+        let s = Summary::of(&lat);
+        println!("    batch {b:>2}: p50 {:.2} ms (min {best:.2})", s.p50);
+        points.push((b, s.p50));
+    }
+    let model = calibrate_from_single_core(&points, PAPER_PARALLEL_FRACTION)?;
+    println!(
+        "    calibrated l(b,c) = {:.3}*b/c + {:.3}/c + {:.3}*b + {:.3}",
+        model.gamma, model.epsilon, model.delta, model.eta
+    );
+    drop(single);
+
+    // --- 2. Start the full serving stack. ---
+    println!("[2/4] starting coordinator + HTTP server...");
+    let engine = PjrtProxy::spawn("artifacts", &variant)?;
+    let image_len = engine.image_len();
+    let coordinator = Arc::new(Coordinator::start(
+        CoordinatorCfg {
+            limits: SolverLimits::default(),
+            adaptation_interval_ms: 1_000.0,
+            model,
+            drop_expired: true,
+            online_calibration: true,
+        },
+        Arc::new(engine),
+    ));
+    let http = serve("127.0.0.1:0", Arc::clone(&coordinator))?;
+    println!("    http on {}", http.addr());
+
+    // --- 3. Replay a 4G trace as per-request dynamic SLOs. ---
+    println!("[3/4] generating {rate} RPS for {duration_s} s (SLO {slo_ms} ms)...");
+    let trace = BandwidthTrace::synthetic_4g(duration_s as usize + 1, 1_000.0, 0xe2e);
+    let net = NetworkModel::new(trace);
+    let payload = sponge::network::PAYLOAD_200KB;
+
+    let started = Instant::now();
+    let gap = Duration::from_secs_f64(1.0 / rate);
+    let mut rng = Pcg32::seeded(7);
+    let mut rxs: Vec<(mpsc::Receiver<sponge::coordinator::LiveResponse>, f64)> = Vec::new();
+    let mut next = Instant::now();
+    let mut sent = 0u64;
+    while started.elapsed().as_secs_f64() < duration_s as f64 {
+        let now_ms = started.elapsed().as_secs_f64() * 1_000.0;
+        let comm = net.comm_latency_ms(now_ms, payload);
+        let image: Vec<f32> = (0..image_len).map(|_| rng.f64() as f32).collect();
+        let (tx, rx) = mpsc::channel();
+        coordinator.submit(LiveRequest {
+            id: 0,
+            image,
+            slo_ms,
+            comm_latency_ms: comm,
+            reply: tx,
+        });
+        rxs.push((rx, comm));
+        sent += 1;
+        next += gap;
+        if let Some(sleep) = next.checked_duration_since(Instant::now()) {
+            std::thread::sleep(sleep);
+        }
+    }
+    let send_window = started.elapsed().as_secs_f64();
+
+    // --- 4. Collect results. ---
+    println!("[4/4] collecting responses...");
+    let mut server_ms = Vec::new();
+    let mut e2e_ms = Vec::new();
+    let mut violated = 0u64;
+    let mut dropped = 0u64;
+    for (rx, comm) in rxs {
+        match rx.recv_timeout(Duration::from_secs(30)) {
+            Ok(r) => {
+                if r.dropped {
+                    dropped += 1;
+                } else {
+                    server_ms.push(r.server_ms);
+                    e2e_ms.push(r.server_ms + comm);
+                    if r.violated {
+                        violated += 1;
+                    }
+                }
+            }
+            Err(_) => dropped += 1,
+        }
+    }
+    let served = server_ms.len() as u64;
+    let total = served + dropped;
+    let s = Summary::of(&server_ms);
+    let e = Summary::of(&e2e_ms);
+    let (cores, batch) = coordinator.decision();
+
+    println!();
+    println!("== dynamic_slo_serving results ==");
+    println!("sent {sent}, served {served}, dropped {dropped}, SLO-violated {violated}");
+    println!(
+        "violation rate     : {:.2}% (incl. drops)",
+        (violated + dropped) as f64 / total.max(1) as f64 * 100.0
+    );
+    println!("throughput         : {:.1} req/s over the {:.1} s send window", sent as f64 / send_window, send_window);
+    println!(
+        "server latency ms  : p50 {:.1}  p90 {:.1}  p99 {:.1}  max {:.1}",
+        s.p50, s.p90, s.p99, s.max
+    );
+    println!(
+        "end-to-end ms      : p50 {:.1}  p90 {:.1}  p99 {:.1}",
+        e.p50, e.p90, e.p99
+    );
+    println!("final decision     : cores={cores} batch={batch}");
+
+    // Smoke-check the HTTP plane too.
+    let (code, metrics) = client::get(&http.addr(), "/metrics")?;
+    anyhow::ensure!(code == 200, "metrics endpoint failed");
+    let batches = metrics
+        .lines()
+        .find(|l| l.starts_with("sponge_batches_total"))
+        .unwrap_or("sponge_batches_total 0");
+    println!("metrics            : {batches}");
+    let req = Json::obj(vec![
+        ("slo_ms", Json::num(1_000.0)),
+        ("comm_ms", Json::num(20.0)),
+        ("image", Json::arr((0..image_len).map(|_| Json::num(0.5)))),
+    ]);
+    let (code, body) = client::post_json(&http.addr(), "/infer", &req.to_string())?;
+    anyhow::ensure!(code == 200, "http infer failed: {body}");
+    println!("http /infer        : 200 OK");
+
+    http.stop();
+    match Arc::try_unwrap(coordinator) {
+        Ok(c) => c.shutdown(),
+        Err(_) => {}
+    }
+    println!("dynamic_slo_serving OK");
+    Ok(())
+}

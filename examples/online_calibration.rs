@@ -1,0 +1,95 @@
+//! Online performance-model calibration under drift.
+//!
+//! Scenario: the serving node slows down mid-run (noisy neighbour, thermal
+//! throttling — a 1.8x latency inflation). A Sponge whose performance
+//! model is frozen keeps under-provisioning and violates; one whose model
+//! is recalibrated online (paper §3.1: the monitor tracks "the accuracy of
+//! the performance model") detects the drift, refits, and recovers.
+//!
+//! ```bash
+//! cargo run --release --example online_calibration
+//! ```
+
+use sponge::perfmodel::{LatencyModel, OnlineCalibrator};
+use sponge::solver::{IncrementalSolver, IpSolver, SolverInput, SolverLimits};
+use sponge::util::rng::Pcg32;
+
+fn main() {
+    let offline = LatencyModel::resnet_human_detector();
+    // Reality after the slowdown: everything 1.8x slower.
+    let drifted = LatencyModel::new(
+        offline.gamma * 1.8,
+        offline.epsilon * 1.8,
+        offline.delta * 1.8,
+        offline.eta * 1.8,
+    );
+    let limits = SolverLimits::default();
+    let solver = IncrementalSolver;
+    let mut cal = OnlineCalibrator::new(offline);
+    let mut rng = Pcg32::seeded(0xd01f);
+
+    println!("node slows down 1.8x at t=0; per-interval decisions follow");
+    println!();
+    println!(
+        "{:>4}  {:>18}  {:>18}  {:>10}  {:>8}",
+        "t s", "frozen (c,b)->ok?", "online (c,b)->ok?", "live MAPE%", "refits"
+    );
+    println!("{}", "-".repeat(68));
+
+    let budgets = vec![300.0; 12];
+    let lambda = 60.0;
+    let mut frozen_viol = 0;
+    let mut online_viol = 0;
+    for t in 0..20 {
+        let input = SolverInput::per_request(budgets.clone(), lambda);
+        // Frozen planner believes the stale offline model.
+        let f = solver.solve(&offline, &input, limits).unwrap();
+        // Online planner uses the calibrator's current model.
+        let o = solver.solve(cal.model(), &input, limits).unwrap();
+
+        // "Execute": reality is the drifted model. A decision violates if
+        // the real drain time of the 12 queued requests exceeds budget.
+        let real_ok = |c: u32, b: u32| {
+            let l = drifted.latency_ms(b, c);
+            let batches = (budgets.len() as f64 / b as f64).ceil();
+            batches * l <= 300.0
+        };
+        let f_ok = real_ok(f.cores, f.batch);
+        let o_ok = real_ok(o.cores, o.batch);
+        frozen_viol += u32::from(!f_ok);
+        online_viol += u32::from(!o_ok);
+
+        // The monitor observes real batch latencies and feeds the
+        // calibrator (with 3% measurement noise).
+        for _ in 0..6 {
+            let b = *rng.choose(&[1u32, 2, 4, 8]);
+            let c = o.cores;
+            let l = drifted.latency_ms(b, c) * rng.lognormal(0.0, 0.03);
+            cal.observe(b, c, l);
+        }
+        let mape = cal.live_error().map_or(0.0, |(_, m)| m);
+        println!(
+            "{:>4}  {:>12} -> {:>3}  {:>12} -> {:>3}  {:>10.1}  {:>8}",
+            t,
+            format!("c={},b={}", f.cores, f.batch),
+            if f_ok { "ok" } else { "MISS" },
+            format!("c={},b={}", o.cores, o.batch),
+            if o_ok { "ok" } else { "MISS" },
+            mape,
+            cal.refits(),
+        );
+    }
+
+    println!();
+    println!("frozen model : {frozen_viol}/20 intervals violated");
+    println!("online model : {online_viol}/20 intervals violated");
+    println!("refits       : {}", cal.refits());
+    let m = cal.model();
+    println!(
+        "learned      : l(b,c) = {:.1}*b/c + {:.1}/c + {:.2}*b + {:.2}  (truth: {:.1}, {:.1}, {:.2}, {:.2})",
+        m.gamma, m.epsilon, m.delta, m.eta,
+        drifted.gamma, drifted.epsilon, drifted.delta, drifted.eta
+    );
+    assert!(online_viol < frozen_viol, "calibration must win");
+    println!("online_calibration OK");
+}

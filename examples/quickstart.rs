@@ -1,0 +1,50 @@
+//! Quickstart: load the AOT-compiled model and serve one request through
+//! the public API.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use std::sync::{mpsc, Arc};
+
+use sponge::coordinator::{Coordinator, CoordinatorCfg, LiveRequest};
+use sponge::runtime::PjrtProxy;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Load the model compiled by `make artifacts` (JAX/Pallas → HLO
+    //    text → PJRT executable). Python is not involved at runtime.
+    let engine = PjrtProxy::spawn("artifacts", "resnet18lite")?;
+    println!(
+        "engine: {} | image {} floats | batches {:?}",
+        engine.platform(),
+        engine.image_len(),
+        engine.supported_batches()
+    );
+
+    // 2. Start the coordinator: EDF queue + dynamic batcher + IP scaler.
+    let image_len = engine.image_len();
+    let coordinator = Coordinator::start(CoordinatorCfg::default(), Arc::new(engine));
+
+    // 3. Submit one inference request with a 1000 ms SLO of which 150 ms
+    //    was already consumed by the (simulated) network.
+    let image: Vec<f32> = (0..image_len).map(|i| (i % 255) as f32 / 255.0).collect();
+    let (tx, rx) = mpsc::channel();
+    coordinator.submit(LiveRequest {
+        id: 0,
+        image,
+        slo_ms: 1_000.0,
+        comm_latency_ms: 150.0,
+        reply: tx,
+    });
+    let resp = rx.recv()?;
+    println!(
+        "logits = {:?}  (queue {:.2} ms, processing {:.2} ms, violated: {})",
+        resp.logits, resp.queue_ms, resp.processing_ms, resp.violated
+    );
+    let (cores, batch) = coordinator.decision();
+    println!("scaler decision: cores={cores} batch={batch}");
+
+    coordinator.shutdown();
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,90 @@
+//! Trace replay: the paper's Fig. 4 experiment, all policies, full length.
+//!
+//! Replays the embedded 10-minute 4G bandwidth trace at 20 RPS / SLO
+//! 1000 ms and compares Sponge against FA2, static-8, static-16, and the
+//! VPA-style ablation in the discrete-event simulator (virtual time — the
+//! 10-minute experiment takes well under a second per policy).
+//!
+//! ```bash
+//! cargo run --release --example trace_replay_comparison [--horizon-s N]
+//! ```
+
+use sponge::cluster::ClusterCfg;
+use sponge::config::Policy;
+use sponge::network::{BandwidthTrace, NetworkModel};
+use sponge::perfmodel::LatencyModel;
+use sponge::sim::{run, SimConfig};
+use sponge::solver::SolverLimits;
+use sponge::util::cli::Args;
+use sponge::workload::WorkloadGen;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env(&[], false).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let horizon_s = args.u64_or("horizon-s", 600)? as usize;
+    let seed = args.u64_or("seed", 0x46_4721)?;
+
+    let trace = if horizon_s == 600 {
+        BandwidthTrace::embedded_4g()
+    } else {
+        BandwidthTrace::synthetic_4g(horizon_s, 1_000.0, seed)
+    };
+    let stats = trace.stats();
+    println!(
+        "4G trace: {} s, bandwidth {:.2}-{:.2} MB/s (mean {:.2})",
+        stats.len,
+        stats.min_bps / 1e6,
+        stats.max_bps / 1e6,
+        stats.mean_bps / 1e6
+    );
+    let net = NetworkModel::new(trace);
+
+    let cfg = SimConfig {
+        horizon_ms: horizon_s as f64 * 1_000.0,
+        adaptation_interval_ms: 1_000.0,
+        workload: WorkloadGen::paper_default(),
+        model: LatencyModel::yolov5s(),
+        cluster: ClusterCfg::default(),
+        latency_noise_cv: 0.05,
+        seed,
+        admission_control: false,
+    };
+
+    println!(
+        "workload: {} RPS fixed, SLO {} ms, model yolov5s, adaptation 1 s\n",
+        cfg.workload.rate_rps, cfg.workload.slo_ms
+    );
+    println!(
+        "{:<16} {:>10} {:>12} {:>10} {:>11} {:>12} {:>12}",
+        "policy", "requests", "violations", "rate %", "mean cores", "core-sec", "mean e2e ms"
+    );
+    println!("{}", "-".repeat(89));
+
+    let mut sponge_viol = None;
+    let mut fa2_viol = None;
+    for policy in Policy::all() {
+        let r = run(&cfg, &net, policy.build(SolverLimits::default()));
+        println!(
+            "{:<16} {:>10} {:>12} {:>10.2} {:>11.2} {:>12.0} {:>12.1}",
+            policy.name(),
+            r.generated,
+            r.tracker.violations(),
+            r.tracker.violation_rate_pct(),
+            r.mean_cores,
+            r.core_ms / 1_000.0,
+            r.tracker.mean_e2e_ms(),
+        );
+        match policy {
+            Policy::Sponge => sponge_viol = Some(r.tracker.violations()),
+            Policy::Fa2 => fa2_viol = Some(r.tracker.violations()),
+            _ => {}
+        }
+    }
+
+    if let (Some(s), Some(f)) = (sponge_viol, fa2_viol) {
+        let factor = f as f64 / s.max(1) as f64;
+        println!(
+            "\nSLO-violation reduction vs FA2: {factor:.1}x (paper reports >15x)"
+        );
+    }
+    Ok(())
+}

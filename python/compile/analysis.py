@@ -1,0 +1,171 @@
+"""HLO cost analysis for the AOT artifacts (the L2 §Perf tooling).
+
+Parses HLO *text* (the interchange format the Rust runtime consumes) and
+reports op counts, dot/convolution FLOP estimates, constant (weight) bytes,
+and fusion statistics — enough to verify that the lowered module has no
+redundant recomputation and that all contraction FLOPs flow through the
+expected ops.
+
+Usage:
+    python -m compile.analysis ../artifacts/resnet18lite_b1.hlo.txt
+"""
+
+import re
+import sys
+from collections import Counter
+from dataclasses import dataclass, field
+from typing import Dict, List
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_OP_RE = re.compile(r"^\s*(?:ROOT\s+)?%?[\w.\-]+\s*=\s*[a-z0-9]+\[[0-9,]*\]\S*\s+([a-z\-]+)\(")
+
+_DTYPE_BYTES = {
+    "f32": 4, "f16": 2, "bf16": 2, "f64": 8,
+    "s32": 4, "s64": 8, "u32": 4, "u8": 1, "pred": 1, "s8": 1,
+}
+
+
+def _shape_elems(dims: str) -> int:
+    if not dims:
+        return 1
+    n = 1
+    for d in dims.split(","):
+        n *= int(d)
+    return n
+
+
+@dataclass
+class HloReport:
+    """Aggregate statistics of one HLO module.
+
+    ``dot_flops`` is *static*: each dot instruction is counted once even
+    when it sits inside a while-loop body (interpret-mode Pallas grids
+    lower to loops), so it measures the per-grid-step cost, not the total
+    executed FLOPs.
+    """
+
+    op_counts: Dict[str, int] = field(default_factory=dict)
+    total_ops: int = 0
+    dot_flops: int = 0
+    constant_bytes: int = 0
+    while_loops: int = 0
+    computations: int = 0
+
+    def summary(self) -> str:
+        lines = [
+            f"computations     : {self.computations}",
+            f"instructions     : {self.total_ops}",
+            f"while loops      : {self.while_loops}",
+            f"dot FLOPs        : {self.dot_flops:,}",
+            f"constant bytes   : {self.constant_bytes:,}",
+            "top ops          : "
+            + ", ".join(
+                f"{op}={n}"
+                for op, n in sorted(
+                    self.op_counts.items(), key=lambda kv: -kv[1]
+                )[:8]
+            ),
+        ]
+        return "\n".join(lines)
+
+
+_NAME_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*([a-z0-9]+)\[([0-9,]*)\]")
+_OPERANDS_RE = re.compile(r"\(([^)]*)\)")
+_LHS_CDIM_RE = re.compile(r"lhs_contracting_dims=\{(\d+)\}")
+
+
+def _dot_flops(line: str, shapes_by_name: Dict[str, List[int]]) -> int:
+    """Estimate FLOPs of a dot: ``2 * |output| * K``.
+
+    The HLO text prints operands by *name* (`dot(a, b)`), so the lhs shape
+    comes from the symbol table built while scanning; the contraction dim
+    index comes from ``lhs_contracting_dims={k}``.
+    """
+    m = _NAME_RE.match(line)
+    if not m:
+        return 0
+    out = [int(d) for d in m.group(3).split(",") if d]
+    ops = _OPERANDS_RE.search(line)
+    if not ops:
+        return 0
+    operand_names = [
+        o.strip().lstrip("%") for o in ops.group(1).split(",") if o.strip()
+    ]
+    if not operand_names:
+        return 0
+    lhs = shapes_by_name.get(operand_names[0])
+    if not lhs:
+        return 0
+    cm = _LHS_CDIM_RE.search(line)
+    cdim = int(cm.group(1)) if cm else len(lhs) - 1
+    if cdim >= len(lhs):
+        return 0
+    k = lhs[cdim]
+    n_out = 1
+    for d in out:
+        n_out *= d
+    return 2 * n_out * k
+
+
+def analyze_text(text: str) -> HloReport:
+    """Analyze an HLO text module (two passes: symbol table, then ops)."""
+    rep = HloReport()
+    counts: Counter = Counter()
+    # Pass 1: instruction name -> result dims (operands are printed by
+    # name only in HLO text, so dot FLOPs need the table). Names may be
+    # reused across computations; for our machine-generated modules the
+    # dims of same-named locals agree, so last-wins is fine.
+    shapes_by_name: Dict[str, List[int]] = {}
+    for line in text.splitlines():
+        m = _NAME_RE.match(line)
+        if m:
+            shapes_by_name[m.group(1)] = [
+                int(d) for d in m.group(3).split(",") if d
+            ]
+    # Pass 2: counts and costs.
+    for line in text.splitlines():
+        stripped = line.strip()
+        if stripped.startswith(("HloModule", "//", "#")):
+            continue
+        if stripped.endswith("{") and ("ENTRY" in stripped or "(" in stripped):
+            rep.computations += 1
+            continue
+        m = _OP_RE.match(line)
+        if not m:
+            continue
+        op = m.group(1)
+        counts[op] += 1
+        rep.total_ops += 1
+        if op == "while":
+            rep.while_loops += 1
+        elif op == "dot":
+            rep.dot_flops += _dot_flops(line, shapes_by_name)
+        elif op == "constant":
+            shapes = _SHAPE_RE.findall(line)
+            if shapes:
+                dtype, dims = shapes[0]
+                rep.constant_bytes += _shape_elems(dims) * _DTYPE_BYTES.get(dtype, 4)
+    rep.op_counts = dict(counts)
+    return rep
+
+
+def analyze_file(path: str) -> HloReport:
+    with open(path) as f:
+        return analyze_text(f.read())
+
+
+def compare(paths: List[str]) -> str:
+    """Side-by-side op-count comparison of several artifacts."""
+    reports = [(p, analyze_file(p)) for p in paths]
+    out = []
+    for p, r in reports:
+        out.append(f"== {p}")
+        out.append(r.summary())
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    if len(sys.argv) < 2:
+        print(__doc__)
+        sys.exit(1)
+    print(compare(sys.argv[1:]))

@@ -1,0 +1,138 @@
+"""AOT lowering: (variant, batch) -> artifacts/<variant>_b<k>.hlo.txt.
+
+Interchange format is HLO **text**, not a serialized HloModuleProto: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version the published ``xla`` 0.1.6 Rust crate links) rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly.  Lowered with ``return_tuple=True``; the Rust side unwraps with
+``to_tuple1()``.
+
+Also emits ``artifacts/manifest.json`` describing every artifact (variant,
+batch, input/output shapes, expected logits for a fixed probe input) so the
+Rust runtime can discover artifacts and its integration tests can check
+numerics against the Python oracle without importing Python.
+
+Run once via ``make artifacts``; python never runs on the request path.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+BATCH_SIZES = [1, 2, 4, 8, 16]
+PROBE_SEED = 1234
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO MLIR -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # as_hlo_text(True) == print_large_constants: the baked model weights
+    # must round-trip through the text parser; the default elides anything
+    # large as `constant({...})`, which the Rust-side parser cannot load.
+    text = comp.as_hlo_text(True)
+    if "{...}" in text:
+        raise RuntimeError("HLO text still contains elided constants")
+    return text
+
+
+def probe_input(batch: int) -> jax.Array:
+    """Deterministic probe batch used for cross-language numeric checks."""
+    key = jax.random.PRNGKey(PROBE_SEED)
+    return jax.random.uniform(
+        key, (batch, model.INPUT_HW, model.INPUT_HW, model.INPUT_C),
+        jnp.float32,
+    )
+
+
+def lower_variant(variant: str, batch: int, seed: int):
+    """Lower one (variant, batch) with params baked in as constants."""
+    params = model.init_params(variant, seed=seed)
+
+    def fn(x):
+        return (model.forward(params, x, variant=variant),)
+
+    spec = jax.ShapeDtypeStruct(
+        (batch, model.INPUT_HW, model.INPUT_HW, model.INPUT_C), jnp.float32
+    )
+    lowered = jax.jit(fn).lower(spec)
+    return lowered, params
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--variants", nargs="*", default=list(model.VARIANTS))
+    ap.add_argument("--batches", nargs="*", type=int, default=BATCH_SIZES)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    entries = []
+    for variant in args.variants:
+        params = model.init_params(variant, seed=args.seed)
+        nparams = model.param_count(params)
+        for batch in args.batches:
+            lowered, _ = lower_variant(variant, batch, args.seed)
+            text = to_hlo_text(lowered)
+            fname = f"{variant}_b{batch}.hlo.txt"
+            path = os.path.join(args.out_dir, fname)
+            with open(path, "w") as f:
+                f.write(text)
+            # Oracle numerics for the Rust integration test: run the same
+            # jitted computation on the probe input.
+            x = probe_input(batch)
+            logits = np.asarray(
+                jax.jit(
+                    lambda x: model.forward(params, x, variant=variant)
+                )(x)
+            )
+            # Full probe input as little-endian f32 so the Rust integration
+            # test can feed the exact same batch (jax PRNG is not
+            # reproducible from Rust).
+            probe_file = f"probe_b{batch}.f32"
+            with open(os.path.join(args.out_dir, probe_file), "wb") as f:
+                f.write(np.asarray(x, dtype="<f4").tobytes())
+            digest = hashlib.sha256(text.encode()).hexdigest()
+            entries.append({
+                "variant": variant,
+                "batch": batch,
+                "file": fname,
+                "sha256": digest,
+                "param_count": int(nparams),
+                "input_shape": [batch, model.INPUT_HW, model.INPUT_HW,
+                                model.INPUT_C],
+                "output_shape": [batch, model.NUM_CLASSES],
+                "probe_seed": PROBE_SEED,
+                "probe_file": probe_file,
+                "probe_input_head": [float(v) for v in
+                                     np.asarray(x).ravel()[:8]],
+                "probe_logits": [[float(v) for v in row] for row in logits],
+            })
+            print(f"wrote {path} ({len(text)} chars, {nparams} params)")
+
+    manifest = {
+        "schema": 1,
+        "input_hw": model.INPUT_HW,
+        "input_c": model.INPUT_C,
+        "num_classes": model.NUM_CLASSES,
+        "artifacts": entries,
+    }
+    mpath = os.path.join(args.out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {mpath} ({len(entries)} artifacts)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,18 @@
+"""Layer-1 Pallas kernels for the Sponge served model.
+
+All kernels are authored for TPU idioms (MXU-shaped tiles, BlockSpec
+HBM<->VMEM schedules) but lowered with ``interpret=True`` so the resulting
+HLO contains plain ops executable by any PJRT backend, including the Rust
+CPU client on the request path.  ``ref.py`` holds the pure-jnp oracles the
+pytest suite checks against.
+"""
+
+from .matmul import matmul, DEFAULT_BLOCK
+from .conv import conv2d_im2col, bias_act
+from .pool import global_avg_pool
+from . import ref
+
+__all__ = [
+    "matmul", "conv2d_im2col", "bias_act", "global_avg_pool", "ref",
+    "DEFAULT_BLOCK",
+]

@@ -1,0 +1,103 @@
+"""Conv2D lowered onto the Pallas matmul (im2col) + fused bias/activation.
+
+The conv hot loop is re-expressed as the MXU-friendly primitive: patches are
+gathered once (im2col), then the contraction runs through the same tiled
+Pallas matmul the FC head uses, so *all* FLOPs of the served model flow
+through the L1 kernel.  The bias + activation epilogue is a separate
+elementwise Pallas kernel fused over (rows, channels) tiles — the classic
+"epilogue fusion" a GPU kernel would do in registers, expressed here as a
+VMEM-resident block.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .matmul import matmul
+
+
+def _im2col(x: jax.Array, kh: int, kw: int, stride: int, padding: str):
+    """Gather conv patches: NHWC -> (N*OH*OW, KH*KW*C).
+
+    Uses conv_general_dilated_patches, which XLA fuses into a handful of
+    slice/pad ops — the contraction itself (the FLOPs) stays in Pallas.
+    """
+    n, h, w, c = x.shape
+    patches = jax.lax.conv_general_dilated_patches(
+        x,
+        filter_shape=(kh, kw),
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )  # (N, OH, OW, C*KH*KW) with feature dim ordered C-major
+    oh, ow = patches.shape[1], patches.shape[2]
+    # conv_general_dilated_patches orders features as (C, KH, KW); reorder to
+    # (KH, KW, C) to match HWIO weight layout.
+    patches = patches.reshape(n, oh, ow, c, kh, kw)
+    patches = patches.transpose(0, 1, 2, 4, 5, 3)
+    return patches.reshape(n * oh * ow, kh * kw * c), oh, ow
+
+
+def conv2d_im2col(x: jax.Array, w: jax.Array, *, stride: int = 1,
+                  padding: str = "SAME") -> jax.Array:
+    """NHWC x HWIO convolution through the Pallas tiled matmul.
+
+    Returns f32 NHWC.  Oracle: ``ref.conv2d``.
+    """
+    if x.ndim != 4 or w.ndim != 4:
+        raise ValueError(f"conv2d expects NHWC x HWIO, got {x.shape}, {w.shape}")
+    kh, kw, cin, cout = w.shape
+    if x.shape[3] != cin:
+        raise ValueError(f"channel mismatch: {x.shape} conv {w.shape}")
+    cols, oh, ow = _im2col(x, kh, kw, stride, padding)
+    wmat = w.reshape(kh * kw * cin, cout)
+    out = matmul(cols, wmat)  # (N*OH*OW, COUT) f32
+    return out.reshape(x.shape[0], oh, ow, cout)
+
+
+def _bias_act_kernel(x_ref, b_ref, o_ref, *, act: str):
+    """Elementwise epilogue over one (rows, channels) VMEM tile."""
+    y = x_ref[...] + b_ref[...]
+    if act == "relu":
+        y = jnp.maximum(y, 0.0)
+    elif act == "silu":
+        y = y * (1.0 / (1.0 + jnp.exp(-y)))
+    elif act != "none":
+        raise ValueError(f"unknown activation {act!r}")
+    o_ref[...] = y
+
+
+@functools.partial(jax.jit, static_argnames=("act",))
+def bias_act(x: jax.Array, b: jax.Array, *, act: str = "relu") -> jax.Array:
+    """Fused bias-add + activation, broadcast over the trailing axis.
+
+    Accepts any rank >= 1 with ``x.shape[-1] == b.shape[0]``; internally
+    flattened to (rows, channels) and tiled (VPU-style 8x128-spirit blocks).
+    """
+    if b.ndim != 1 or x.shape[-1] != b.shape[0]:
+        raise ValueError(f"bias shape {b.shape} does not match x {x.shape}")
+    shape = x.shape
+    c = shape[-1]
+    rows = 1
+    for d in shape[:-1]:
+        rows *= d
+    x2 = x.reshape(rows, c).astype(jnp.float32)
+    bm = min(256, max(8, rows))
+    gm = pl.cdiv(rows, bm)
+    pad = gm * bm - rows
+    if pad:
+        x2 = jnp.pad(x2, ((0, pad), (0, 0)))
+    out = pl.pallas_call(
+        functools.partial(_bias_act_kernel, act=act),
+        grid=(gm,),
+        in_specs=[
+            pl.BlockSpec((bm, c), lambda i: (i, 0)),
+            pl.BlockSpec((c,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((bm, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((gm * bm, c), jnp.float32),
+        interpret=True,
+    )(x2, b.astype(jnp.float32))
+    return out[:rows].reshape(shape)

@@ -1,0 +1,34 @@
+"""Global average-pool Pallas kernel (the model's head reduction).
+
+One grid step per batch element: the (H*W, C) activation tile is reduced
+over rows in VMEM (a VPU-style reduction, f32 accumulation). Oracle:
+``ref.global_avg_pool``.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pool_kernel(x_ref, o_ref):
+    # x_ref: (1, HW, C) VMEM tile; mean over the HW axis.
+    o_ref[...] = jnp.mean(x_ref[...], axis=1)
+
+
+@jax.jit
+def global_avg_pool(x: jax.Array) -> jax.Array:
+    """NHWC -> (N, C) mean over the spatial axes, f32."""
+    if x.ndim != 4:
+        raise ValueError(f"expected NHWC, got {x.shape}")
+    n, h, w, c = x.shape
+    x2 = x.reshape(n, h * w, c).astype(jnp.float32)
+    return pl.pallas_call(
+        _pool_kernel,
+        grid=(n,),
+        in_specs=[pl.BlockSpec((1, h * w, c), lambda i: (i, 0, 0))],
+        out_specs=pl.BlockSpec((1, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, c), jnp.float32),
+        interpret=True,  # CPU-PJRT cannot execute Mosaic custom-calls
+    )(x2)

@@ -1,0 +1,44 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the correctness contract: ``python/tests/`` asserts each Pallas
+kernel is allclose to its oracle across a hypothesis-driven sweep of shapes
+and dtypes.  Keep these boring and obviously-correct (direct jnp/lax calls,
+no tiling tricks).
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul(x: jax.Array, y: jax.Array) -> jax.Array:
+    """f32-accumulating matmul oracle."""
+    return jnp.dot(x, y, preferred_element_type=jnp.float32)
+
+
+def conv2d(x: jax.Array, w: jax.Array, *, stride: int = 1,
+           padding: str = "SAME") -> jax.Array:
+    """NHWC x HWIO conv oracle via lax.conv_general_dilated."""
+    return jax.lax.conv_general_dilated(
+        x.astype(jnp.float32),
+        w.astype(jnp.float32),
+        window_strides=(stride, stride),
+        padding=padding,
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def global_avg_pool(x: jax.Array) -> jax.Array:
+    """NHWC -> (N, C) spatial mean oracle."""
+    return jnp.mean(x.astype(jnp.float32), axis=(1, 2))
+
+
+def bias_act(x: jax.Array, b: jax.Array, *, act: str = "relu") -> jax.Array:
+    """Bias-add + activation oracle (broadcast over the last axis)."""
+    y = x.astype(jnp.float32) + b.astype(jnp.float32)
+    if act == "relu":
+        return jnp.maximum(y, 0.0)
+    if act == "silu":
+        return y * jax.nn.sigmoid(y)
+    if act == "none":
+        return y
+    raise ValueError(f"unknown activation {act!r}")

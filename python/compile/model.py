@@ -1,0 +1,131 @@
+"""Layer-2 served model: small conv-net "human detector" variants.
+
+The paper serves YOLOv5s / YOLOv5n / ResNet18 human detectors; the serving
+layer (Sponge's contribution) only observes an opaque ``execute(batch)``
+whose latency scales with batch and cores, so we build two *structurally*
+analogous JAX conv-nets whose FLOPs all flow through the L1 Pallas kernels:
+
+* ``resnet18lite``  — ReLU residual stages (ResNet18 analogue)
+* ``yolov5nlite``   — SiLU CSP-ish stages + wider head (YOLOv5n analogue)
+
+Input:  f32 NHWC ``(B, 32, 32, 3)`` (decoded thumbnail of the camera frame)
+Output: f32 ``(B, 2)`` logits (human / no-human)
+
+Parameters are initialised from a fixed seed and baked into the AOT artifact
+as constants, so the HLO file is self-contained and the Rust runtime feeds
+only the image batch.
+"""
+
+import dataclasses
+from typing import Dict, List
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import matmul, conv2d_im2col, bias_act, global_avg_pool
+
+INPUT_HW = 32
+INPUT_C = 3
+NUM_CLASSES = 2
+
+
+@dataclasses.dataclass(frozen=True)
+class VariantCfg:
+    """Architecture knobs for one served-model variant."""
+
+    name: str
+    widths: List[int]       # channels per stage (stride-2 between stages)
+    blocks_per_stage: int   # residual blocks per stage
+    act: str                # activation for bias_act epilogues
+    head_dim: int           # hidden dim of the classifier head
+
+
+VARIANTS: Dict[str, VariantCfg] = {
+    "resnet18lite": VariantCfg("resnet18lite", [8, 16, 32], 2, "relu", 64),
+    "yolov5nlite": VariantCfg("yolov5nlite", [12, 24, 48], 1, "silu", 96),
+}
+
+
+def _conv_init(key, kh, kw, cin, cout):
+    """He-normal conv weights (HWIO)."""
+    fan_in = kh * kw * cin
+    return jax.random.normal(key, (kh, kw, cin, cout), jnp.float32) * (
+        2.0 / fan_in
+    ) ** 0.5
+
+
+def init_params(variant: str, seed: int = 0):
+    """Build the parameter pytree for ``variant`` from a fixed seed."""
+    cfg = VARIANTS[variant]
+    key = jax.random.PRNGKey(seed)
+    params = {"stem": {}, "stages": [], "head": {}}
+    key, k = jax.random.split(key)
+    params["stem"]["w"] = _conv_init(k, 3, 3, INPUT_C, cfg.widths[0])
+    params["stem"]["b"] = jnp.zeros((cfg.widths[0],), jnp.float32)
+
+    cin = cfg.widths[0]
+    for width in cfg.widths:
+        stage = {"down": {}, "blocks": []}
+        key, k = jax.random.split(key)
+        stage["down"]["w"] = _conv_init(k, 3, 3, cin, width)
+        stage["down"]["b"] = jnp.zeros((width,), jnp.float32)
+        for _ in range(cfg.blocks_per_stage):
+            key, k1, k2 = jax.random.split(key, 3)
+            stage["blocks"].append({
+                "w1": _conv_init(k1, 3, 3, width, width),
+                "b1": jnp.zeros((width,), jnp.float32),
+                "w2": _conv_init(k2, 3, 3, width, width),
+                "b2": jnp.zeros((width,), jnp.float32),
+            })
+        params["stages"].append(stage)
+        cin = width
+
+    key, k1, k2 = jax.random.split(key, 3)
+    params["head"]["w1"] = jax.random.normal(
+        k1, (cfg.widths[-1], cfg.head_dim), jnp.float32
+    ) * (2.0 / cfg.widths[-1]) ** 0.5
+    params["head"]["b1"] = jnp.zeros((cfg.head_dim,), jnp.float32)
+    params["head"]["w2"] = jax.random.normal(
+        k2, (cfg.head_dim, NUM_CLASSES), jnp.float32
+    ) * (2.0 / cfg.head_dim) ** 0.5
+    params["head"]["b2"] = jnp.zeros((NUM_CLASSES,), jnp.float32)
+    return params
+
+
+def _residual_block(x, blk, act):
+    y = conv2d_im2col(x, blk["w1"])
+    y = bias_act(y, blk["b1"], act=act)
+    y = conv2d_im2col(y, blk["w2"])
+    y = bias_act(y + x, blk["b2"], act=act)  # pre-activation residual join
+    return y
+
+
+def forward(params, x: jax.Array, *, variant: str) -> jax.Array:
+    """Model forward pass: ``(B, 32, 32, 3)`` f32 -> ``(B, 2)`` logits.
+
+    Every contraction (convs via im2col, FC head) runs through the Pallas
+    tiled matmul; every epilogue through the fused bias_act kernel.
+    """
+    cfg = VARIANTS[variant]
+    if x.ndim != 4 or x.shape[1:] != (INPUT_HW, INPUT_HW, INPUT_C):
+        raise ValueError(
+            f"expected (B, {INPUT_HW}, {INPUT_HW}, {INPUT_C}), got {x.shape}"
+        )
+    y = conv2d_im2col(x, params["stem"]["w"])
+    y = bias_act(y, params["stem"]["b"], act=cfg.act)
+    for stage in params["stages"]:
+        y = conv2d_im2col(y, stage["down"]["w"], stride=2)
+        y = bias_act(y, stage["down"]["b"], act=cfg.act)
+        for blk in stage["blocks"]:
+            y = _residual_block(y, blk, cfg.act)
+    # global average pool -> (B, C_last), via the Pallas reduction kernel
+    y = global_avg_pool(y)
+    h = matmul(y, params["head"]["w1"])
+    h = bias_act(h, params["head"]["b1"], act=cfg.act)
+    logits = matmul(h, params["head"]["w2"]) + params["head"]["b2"]
+    return logits
+
+
+def param_count(params) -> int:
+    """Total scalar parameter count of a pytree."""
+    return sum(p.size for p in jax.tree_util.tree_leaves(params))

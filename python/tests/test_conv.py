@@ -1,0 +1,87 @@
+"""Pallas conv (im2col) + fused bias/activation vs lax oracles."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import conv2d_im2col, bias_act, ref
+
+settings.register_profile("ci", deadline=None, max_examples=15)
+settings.load_profile("ci")
+
+
+def _rand(key, shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+@pytest.mark.parametrize("n,h,w,cin,cout,kh,stride,padding", [
+    (1, 8, 8, 3, 8, 3, 1, "SAME"),
+    (2, 16, 16, 3, 8, 3, 2, "SAME"),
+    (4, 32, 32, 8, 16, 3, 1, "SAME"),
+    (1, 9, 7, 5, 4, 3, 1, "VALID"),
+    (2, 8, 8, 4, 4, 1, 1, "SAME"),   # 1x1 conv == channel matmul
+    (1, 8, 8, 2, 6, 5, 2, "SAME"),
+])
+def test_conv2d_shapes(n, h, w, cin, cout, kh, stride, padding):
+    x = _rand(0, (n, h, w, cin))
+    wgt = _rand(1, (kh, kh, cin, cout))
+    got = conv2d_im2col(x, wgt, stride=stride, padding=padding)
+    want = ref.conv2d(x, wgt, stride=stride, padding=padding)
+    assert got.shape == want.shape
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+@given(
+    n=st.integers(1, 4), hw=st.integers(4, 20),
+    cin=st.integers(1, 8), cout=st.integers(1, 8),
+    stride=st.sampled_from([1, 2]), seed=st.integers(0, 2**31 - 1),
+)
+def test_conv2d_hypothesis_sweep(n, hw, cin, cout, stride, seed):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(k1, (n, hw, hw, cin), jnp.float32)
+    wgt = jax.random.normal(k2, (3, 3, cin, cout), jnp.float32)
+    got = conv2d_im2col(x, wgt, stride=stride)
+    want = ref.conv2d(x, wgt, stride=stride)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+
+
+def test_conv2d_rejects_bad_shapes():
+    with pytest.raises(ValueError):
+        conv2d_im2col(jnp.zeros((2, 8, 8, 3)), jnp.zeros((3, 3, 4, 8)))
+    with pytest.raises(ValueError):
+        conv2d_im2col(jnp.zeros((8, 8, 3)), jnp.zeros((3, 3, 3, 8)))
+
+
+@pytest.mark.parametrize("act", ["relu", "silu", "none"])
+@pytest.mark.parametrize("shape", [(7, 5), (2, 4, 4, 8), (300, 16), (1, 1)])
+def test_bias_act(act, shape):
+    x = _rand(2, shape)
+    b = _rand(3, (shape[-1],))
+    np.testing.assert_allclose(
+        bias_act(x, b, act=act), ref.bias_act(x, b, act=act),
+        rtol=1e-5, atol=1e-5)
+
+
+@given(rows=st.integers(1, 400), c=st.integers(1, 32),
+       seed=st.integers(0, 2**31 - 1))
+def test_bias_act_hypothesis_sweep(rows, c, seed):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(k1, (rows, c), jnp.float32)
+    b = jax.random.normal(k2, (c,), jnp.float32)
+    np.testing.assert_allclose(
+        bias_act(x, b, act="silu"), ref.bias_act(x, b, act="silu"),
+        rtol=1e-4, atol=1e-4)
+
+
+def test_bias_act_rejects_bad_bias():
+    with pytest.raises(ValueError):
+        bias_act(jnp.zeros((4, 8)), jnp.zeros((7,)))
+    with pytest.raises(ValueError):
+        bias_act(jnp.zeros((4, 8)), jnp.zeros((4, 8)))
+
+
+def test_bias_act_unknown_activation():
+    with pytest.raises(ValueError):
+        bias_act(jnp.zeros((4, 8)), jnp.zeros((8,)), act="gelu")

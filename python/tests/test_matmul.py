@@ -1,0 +1,76 @@
+"""Pallas tiled matmul vs pure-jnp oracle — the core L1 correctness signal."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import matmul, ref
+
+settings.register_profile("ci", deadline=None, max_examples=25)
+settings.load_profile("ci")
+
+
+def _rand(key, shape, dtype):
+    return jax.random.normal(jax.random.PRNGKey(key), shape).astype(dtype)
+
+
+@pytest.mark.parametrize("m,k,n", [
+    (1, 1, 1), (1, 27, 2), (8, 8, 8), (13, 7, 5),
+    (128, 128, 128), (130, 257, 31), (256, 64, 256),
+])
+def test_matmul_shapes(m, k, n):
+    x, y = _rand(0, (m, k), jnp.float32), _rand(1, (k, n), jnp.float32)
+    # tolerance accommodates tiled-vs-flat f32 accumulation order for large K
+    np.testing.assert_allclose(
+        matmul(x, y), ref.matmul(x, y), rtol=2e-4, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype,rtol", [
+    (jnp.float32, 1e-5),
+    (jnp.bfloat16, 5e-2),
+])
+def test_matmul_dtypes(dtype, rtol):
+    x, y = _rand(2, (64, 96), dtype), _rand(3, (96, 32), dtype)
+    out = matmul(x, y)
+    assert out.dtype == jnp.float32  # MXU accumulate dtype
+    np.testing.assert_allclose(
+        out, ref.matmul(x, y), rtol=rtol, atol=rtol)
+
+
+@given(
+    m=st.integers(1, 80), k=st.integers(1, 80), n=st.integers(1, 80),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_hypothesis_sweep(m, k, n, seed):
+    """Property: kernel == oracle for arbitrary small shapes."""
+    kx, ky = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(kx, (m, k), jnp.float32)
+    y = jax.random.normal(ky, (k, n), jnp.float32)
+    np.testing.assert_allclose(
+        matmul(x, y), ref.matmul(x, y), rtol=1e-4, atol=1e-4)
+
+
+@given(block=st.sampled_from([(8, 8, 8), (16, 32, 8), (128, 128, 128)]))
+def test_matmul_block_invariance(block):
+    """Property: the tile shape never changes the numerics."""
+    x, y = _rand(4, (33, 65), jnp.float32), _rand(5, (65, 17), jnp.float32)
+    np.testing.assert_allclose(
+        matmul(x, y, block=block), ref.matmul(x, y), rtol=1e-4, atol=1e-4)
+
+
+def test_matmul_zero_and_identity():
+    x = _rand(6, (16, 16), jnp.float32)
+    eye = jnp.eye(16, dtype=jnp.float32)
+    np.testing.assert_allclose(matmul(x, eye), x, rtol=1e-6, atol=1e-6)
+    zeros = jnp.zeros((16, 16), jnp.float32)
+    np.testing.assert_allclose(matmul(x, zeros), zeros, atol=0)
+
+
+def test_matmul_rejects_bad_shapes():
+    x = jnp.zeros((3, 4))
+    with pytest.raises(ValueError):
+        matmul(x, jnp.zeros((5, 2)))
+    with pytest.raises(ValueError):
+        matmul(jnp.zeros((3,)), jnp.zeros((3, 2)))

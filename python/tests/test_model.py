@@ -1,0 +1,91 @@
+"""L2 model: shapes, determinism, batch invariance, variant structure."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+
+@pytest.fixture(scope="module", params=list(model.VARIANTS))
+def variant(request):
+    return request.param
+
+
+@pytest.fixture(scope="module")
+def params_cache():
+    return {v: model.init_params(v, seed=0) for v in model.VARIANTS}
+
+
+def _x(batch, seed=0):
+    return jax.random.uniform(
+        jax.random.PRNGKey(seed),
+        (batch, model.INPUT_HW, model.INPUT_HW, model.INPUT_C), jnp.float32)
+
+
+def test_output_shape(variant, params_cache):
+    out = model.forward(params_cache[variant], _x(3), variant=variant)
+    assert out.shape == (3, model.NUM_CLASSES)
+    assert out.dtype == jnp.float32
+
+
+def test_deterministic(variant, params_cache):
+    x = _x(2)
+    a = model.forward(params_cache[variant], x, variant=variant)
+    b = model.forward(params_cache[variant], x, variant=variant)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_param_init_deterministic(variant):
+    p1 = model.init_params(variant, seed=0)
+    p2 = model.init_params(variant, seed=0)
+    for a, b in zip(jax.tree_util.tree_leaves(p1),
+                    jax.tree_util.tree_leaves(p2)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_param_init_seed_sensitivity(variant):
+    p1 = model.init_params(variant, seed=0)
+    p2 = model.init_params(variant, seed=1)
+    # compare weights, not biases (biases are zero-initialised in both)
+    assert not np.allclose(np.asarray(p1["stem"]["w"]),
+                           np.asarray(p2["stem"]["w"]))
+
+
+def test_batch_invariance(variant, params_cache):
+    """Row i of a batched forward equals the single-sample forward."""
+    x = _x(4, seed=7)
+    batched = model.forward(params_cache[variant], x, variant=variant)
+    for i in range(4):
+        single = model.forward(
+            params_cache[variant], x[i:i + 1], variant=variant)
+        np.testing.assert_allclose(
+            np.asarray(batched[i]), np.asarray(single[0]),
+            rtol=1e-4, atol=1e-4)
+
+
+def test_variants_differ(params_cache):
+    x = _x(2)
+    a = model.forward(params_cache["resnet18lite"], x,
+                      variant="resnet18lite")
+    b = model.forward(params_cache["yolov5nlite"], x, variant="yolov5nlite")
+    assert not np.allclose(np.asarray(a), np.asarray(b))
+
+
+def test_param_counts(params_cache):
+    # Regression guard: architecture changes show up here first.
+    assert model.param_count(params_cache["resnet18lite"]) == 57466
+    assert model.param_count(params_cache["yolov5nlite"]) == 74174
+
+
+def test_rejects_bad_input_shape(variant, params_cache):
+    with pytest.raises(ValueError):
+        model.forward(params_cache[variant],
+                      jnp.zeros((2, 16, 16, 3)), variant=variant)
+
+
+def test_finite_outputs(variant, params_cache):
+    out = model.forward(params_cache[variant], _x(8, seed=3),
+                        variant=variant)
+    assert np.isfinite(np.asarray(out)).all()

@@ -1,0 +1,42 @@
+"""Pallas global-average-pool kernel vs oracle."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import global_avg_pool, ref
+
+settings.register_profile("ci", deadline=None, max_examples=15)
+settings.load_profile("ci")
+
+
+@pytest.mark.parametrize("n,h,w,c", [
+    (1, 1, 1, 1), (2, 4, 4, 8), (4, 8, 8, 32), (3, 5, 7, 2), (16, 4, 4, 48),
+])
+def test_pool_shapes(n, h, w, c):
+    x = jax.random.normal(jax.random.PRNGKey(0), (n, h, w, c), jnp.float32)
+    got = global_avg_pool(x)
+    want = ref.global_avg_pool(x)
+    assert got.shape == (n, c)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+@given(n=st.integers(1, 8), hw=st.integers(1, 12), c=st.integers(1, 16),
+       seed=st.integers(0, 2**31 - 1))
+def test_pool_hypothesis_sweep(n, hw, c, seed):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (n, hw, hw, c),
+                          jnp.float32)
+    np.testing.assert_allclose(
+        global_avg_pool(x), ref.global_avg_pool(x), rtol=1e-4, atol=1e-5)
+
+
+def test_pool_constant_input():
+    x = jnp.full((2, 3, 3, 4), 2.5, jnp.float32)
+    np.testing.assert_allclose(global_avg_pool(x), jnp.full((2, 4), 2.5))
+
+
+def test_pool_rejects_bad_rank():
+    with pytest.raises(ValueError):
+        global_avg_pool(jnp.zeros((3, 3, 4)))

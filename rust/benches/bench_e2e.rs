@@ -1,0 +1,127 @@
+//! End-to-end serving bench on the REAL PJRT engine: raw engine latency
+//! per batch size, coordinator overhead on top of the engine, and a short
+//! closed-loop serving run. Skips gracefully when artifacts are missing.
+
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+use sponge::coordinator::{Coordinator, CoordinatorCfg, LiveRequest};
+use sponge::runtime::{InferenceEngine, PjrtEngine, PjrtProxy};
+use sponge::solver::SolverLimits;
+use sponge::util::bench::{banner, Reporter};
+use sponge::util::stats::Summary;
+
+fn main() {
+    banner("End-to-end — PJRT engine + coordinator");
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        println!("  artifacts/ missing — run `make artifacts` first; skipping");
+        return;
+    }
+    let mut rep = Reporter::new("e2e serving bench");
+
+    // 1. Raw engine latency per batch (the L1/L2 hot path through PJRT).
+    let mut engine = PjrtEngine::load("artifacts", "resnet18lite").expect("load");
+    let mut rows = Vec::new();
+    for &b in &engine.supported_batches() {
+        let _ = engine.execute(b, 1); // warm-up
+        let lat: Vec<f64> = (0..20).map(|_| engine.execute(b, 1).unwrap()).collect();
+        let s = Summary::of(&lat);
+        rows.push(vec![
+            b.to_string(),
+            format!("{:.2}", s.p50),
+            format!("{:.2}", s.p99),
+            format!("{:.1}", b as f64 / s.p50 * 1_000.0),
+            format!("{:.2}", s.p50 / b as f64),
+        ]);
+    }
+    rep.table(
+        "raw PJRT engine latency (resnet18lite, 1 vCPU)",
+        vec!["batch".into(), "p50 ms".into(), "p99 ms".into(), "rps".into(), "ms/img".into()],
+        rows,
+    );
+    drop(engine);
+
+    // 2. Coordinator overhead: single request end-to-end vs raw engine.
+    let proxy = PjrtProxy::spawn("artifacts", "resnet18lite").expect("proxy");
+    let image_len = proxy.image_len();
+    let raw_p50 = {
+        let lat: Vec<f64> = (0..20)
+            .map(|_| {
+                let img = vec![0.3f32; image_len];
+                let t0 = Instant::now();
+                proxy.infer(&img, 1).unwrap();
+                t0.elapsed().as_secs_f64() * 1e3
+            })
+            .collect();
+        Summary::of(&lat).p50
+    };
+    let coordinator = Arc::new(Coordinator::start(
+        CoordinatorCfg { limits: SolverLimits::default(), ..Default::default() },
+        Arc::new(PjrtProxy::spawn("artifacts", "resnet18lite").expect("proxy2")),
+    ));
+    let coord_lat: Vec<f64> = (0..20)
+        .map(|_| {
+            let (tx, rx) = mpsc::channel();
+            let t0 = Instant::now();
+            coordinator.submit(LiveRequest {
+                id: 0,
+                image: vec![0.3; image_len],
+                slo_ms: 5_000.0,
+                comm_latency_ms: 0.0,
+                reply: tx,
+            });
+            let _ = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+            t0.elapsed().as_secs_f64() * 1e3
+        })
+        .collect();
+    let coord_p50 = Summary::of(&coord_lat).p50;
+    rep.table(
+        "coordinator overhead (single request, batch 1)",
+        vec!["path".into(), "p50 ms".into()],
+        vec![
+            vec!["raw proxy infer".into(), format!("{raw_p50:.2}")],
+            vec!["through coordinator".into(), format!("{coord_p50:.2}")],
+            vec!["overhead".into(), format!("{:.2}", coord_p50 - raw_p50)],
+        ],
+    );
+
+    // 3. Closed-loop throughput: 300 requests as fast as the pipe drains.
+    let t0 = Instant::now();
+    let rxs: Vec<_> = (0..300)
+        .map(|_| {
+            let (tx, rx) = mpsc::channel();
+            coordinator.submit(LiveRequest {
+                id: 0,
+                image: vec![0.1; image_len],
+                slo_ms: 60_000.0,
+                comm_latency_ms: 0.0,
+                reply: tx,
+            });
+            rx
+        })
+        .collect();
+    let mut served = 0;
+    for rx in rxs {
+        if rx.recv_timeout(Duration::from_secs(60)).is_ok() {
+            served += 1;
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    rep.table(
+        "closed-loop burst (300 requests, dynamic batching)",
+        vec!["served".into(), "wall s".into(), "req/s".into()],
+        vec![vec![
+            served.to_string(),
+            format!("{wall:.2}"),
+            format!("{:.1}", served as f64 / wall),
+        ]],
+    );
+    let (cores, batch) = coordinator.decision();
+    rep.note(&format!("final scaler decision under burst: cores={cores} batch={batch}"));
+
+    match Arc::try_unwrap(coordinator) {
+        Ok(c) => c.shutdown(),
+        Err(_) => {}
+    }
+    rep.finish();
+}

@@ -1,0 +1,71 @@
+//! Figure 1: 4G bandwidth trace (top) and the remaining server-side SLO
+//! for 100/200/500 KB payloads over that trace (bottom).
+//!
+//! Regenerates both series from the embedded trace; prints summary rows
+//! and dumps the full series into the JSON report.
+
+use sponge::network::{
+    BandwidthTrace, NetworkModel, PAYLOAD_100KB, PAYLOAD_200KB, PAYLOAD_500KB,
+};
+use sponge::util::bench::{banner, Reporter};
+use sponge::util::stats::Summary;
+
+fn main() {
+    banner("Figure 1 — 4G bandwidth and remaining SLO");
+    let mut rep = Reporter::new("fig1 bandwidth remaining slo");
+
+    let trace = BandwidthTrace::embedded_4g();
+    let stats = trace.stats();
+    rep.table(
+        "Fig. 1 top — bandwidth trace (paper: 0.5–7 MB/s over 10 min)",
+        vec!["len s".into(), "min MB/s".into(), "max MB/s".into(), "mean MB/s".into()],
+        vec![vec![
+            stats.len.to_string(),
+            format!("{:.2}", stats.min_bps / 1e6),
+            format!("{:.2}", stats.max_bps / 1e6),
+            format!("{:.2}", stats.mean_bps / 1e6),
+        ]],
+    );
+
+    let net = NetworkModel::new(trace);
+    let slo = 1_000.0;
+    let mut rows = Vec::new();
+    for (label, payload) in [
+        ("100 KB", PAYLOAD_100KB),
+        ("200 KB", PAYLOAD_200KB),
+        ("500 KB", PAYLOAD_500KB),
+    ] {
+        let series: Vec<f64> = (0..600)
+            .map(|t| net.remaining_slo_ms(t as f64 * 1_000.0, payload, slo))
+            .collect();
+        let s = Summary::of(&series);
+        let exhausted = series.iter().filter(|&&v| v <= 0.0).count();
+        rows.push(vec![
+            label.to_string(),
+            format!("{:.0}", s.min),
+            format!("{:.0}", s.p50),
+            format!("{:.0}", s.max),
+            format!("{exhausted}"),
+        ]);
+    }
+    rep.table(
+        "Fig. 1 bottom — remaining SLO (ms) per payload size over the trace",
+        vec![
+            "payload".into(),
+            "min".into(),
+            "median".into(),
+            "max".into(),
+            "seconds fully eaten".into(),
+        ],
+        rows,
+    );
+
+    // The figure's qualitative claim: bigger payloads leave less budget,
+    // and budgets vary strongly over time.
+    let b100 = net.remaining_slo_ms(5_000.0, PAYLOAD_100KB, slo);
+    let b500 = net.remaining_slo_ms(5_000.0, PAYLOAD_500KB, slo);
+    rep.note(&format!(
+        "at t=5 s: 100 KB leaves {b100:.0} ms, 500 KB leaves {b500:.0} ms"
+    ));
+    rep.finish();
+}

@@ -1,0 +1,75 @@
+//! Figure 3: measured vs. predicted latency across CPU cores and batch
+//! sizes for YOLOv5n and ResNet18 — validates the Eq. 2 performance model
+//! (and shows the core-oblivious baselines failing where Eq. 2 holds).
+
+use sponge::perfmodel::{BaselineModel, LatencyModel, ProfilePoint};
+use sponge::profiler::{fit_profile, profile, ProfileCfg, ProfileStat};
+use sponge::runtime::SimEngine;
+use sponge::util::bench::{banner, Reporter};
+
+fn eval_model(name: &str, truth: LatencyModel, rep: &mut Reporter, seed: u64) {
+    // "Measured": noisy profiling runs on the engine implementing `truth`.
+    let mut engine = SimEngine::new(truth, 0.06, seed);
+    let cfg = ProfileCfg {
+        batches: (1..=16).collect(),
+        cores: (1..=16).collect(),
+        reps: 30,
+        stat: ProfileStat::Mean,
+    };
+    let measured = profile(&mut engine, &cfg).expect("profiling");
+
+    // "Predicted": Eq. 2 fit on the measured data (as Sponge does online).
+    let fitted = fit_profile(&measured).expect("fit");
+    let clean: Vec<ProfilePoint> = measured
+        .iter()
+        .map(|p| ProfilePoint { latency_ms: truth.latency_ms(p.batch, p.cores), ..*p })
+        .collect();
+    let (mse, mape) = fitted.error(&clean);
+
+    // Core-oblivious baselines fit on the same data (GrandSLAm linear,
+    // FA2 quadratic) — they must do visibly worse across cores.
+    let flat: Vec<(u32, f64)> = measured.iter().map(|p| (p.batch, p.latency_ms)).collect();
+    let lin = BaselineModel::fit_linear(&flat);
+    let quad = BaselineModel::fit_quadratic(&flat);
+    let baseline_mape = |m: &BaselineModel| {
+        clean
+            .iter()
+            .map(|p| ((m.latency_ms(p.batch) - p.latency_ms) / p.latency_ms).abs())
+            .sum::<f64>()
+            / clean.len() as f64
+            * 100.0
+    };
+
+    rep.table(
+        &format!("Fig. 3 — {name}: predicted vs real latency (sample points)"),
+        vec!["cores".into(), "batch".into(), "real ms".into(), "Eq.2 ms".into(), "err %".into()],
+        [(1u32, 1u32), (1, 8), (4, 4), (8, 2), (16, 16)]
+            .iter()
+            .map(|&(c, b)| {
+                let real = truth.latency_ms(b, c);
+                let pred = fitted.latency_ms(b, c);
+                vec![
+                    c.to_string(),
+                    b.to_string(),
+                    format!("{real:.1}"),
+                    format!("{pred:.1}"),
+                    format!("{:.1}", ((pred - real) / real).abs() * 100.0),
+                ]
+            })
+            .collect(),
+    );
+    rep.note(&format!(
+        "{name}: Eq.2 fit MAPE {mape:.2}% (MSE {mse:.2}) vs GrandSLAm-linear {:.1}% / FA2-quadratic {:.1}% (core-oblivious)",
+        baseline_mape(&lin),
+        baseline_mape(&quad)
+    ));
+    assert!(mape < 8.0, "{name}: Eq.2 fit MAPE {mape}% too high");
+}
+
+fn main() {
+    banner("Figure 3 — performance-model validation");
+    let mut rep = Reporter::new("fig3 perfmodel validation");
+    eval_model("YOLOv5n", LatencyModel::yolov5n(), &mut rep, 31);
+    eval_model("ResNet18", LatencyModel::resnet_human_detector(), &mut rep, 32);
+    rep.finish();
+}

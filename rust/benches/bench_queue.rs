@@ -1,0 +1,80 @@
+//! EDF queue + batcher hot-path microbenchmarks: push/pop, batch
+//! extraction, expiry sweeps, and budget snapshots at serving-relevant
+//! queue depths.
+
+use sponge::queue::EdfQueue;
+use sponge::util::bench::{banner, bench, keep, Reporter};
+use sponge::util::rng::Pcg32;
+use sponge::workload::Request;
+
+fn request(id: u64, rng: &mut Pcg32) -> Request {
+    let sent = rng.uniform(0.0, 10_000.0);
+    let comm = rng.uniform(5.0, 600.0);
+    Request {
+        id,
+        sent_at_ms: sent,
+        comm_latency_ms: comm,
+        arrived_at_ms: sent + comm,
+        slo_ms: 1_000.0,
+        payload_bytes: 200_000.0,
+    }
+}
+
+fn main() {
+    banner("Queue — EDF + batcher hot path");
+    let mut rep = Reporter::new("queue microbench");
+
+    for &n in &[100usize, 10_000, 100_000] {
+        let mut rng = Pcg32::seeded(n as u64);
+        let reqs: Vec<Request> = (0..n as u64).map(|i| request(i, &mut rng)).collect();
+
+        let r = bench(&format!("push+drain       n={n}"), || {
+            let mut q = EdfQueue::new();
+            for req in &reqs {
+                q.push(req.clone());
+            }
+            while let Some(b) = q.take_batch(8) {
+                keep(b.len());
+            }
+        });
+        // per-request cost:
+        let per_req = r.mean_ns() / n as f64;
+        rep.record(r);
+        rep.note(&format!("push+drain per request at n={n}: {per_req:.0} ns"));
+    }
+
+    // Steady-state single-op costs on a deep queue.
+    let mut rng = Pcg32::seeded(99);
+    let mut q = EdfQueue::new();
+    for i in 0..50_000u64 {
+        q.push(request(i, &mut rng));
+    }
+    let mut i = 50_000u64;
+    let r = bench("push+pop steady  n=50k", || {
+        q.push(request(i, &mut rng));
+        i += 1;
+        keep(q.pop());
+    });
+    rep.record(r);
+
+    let r = bench("budgets snapshot n=50k", || {
+        keep(q.remaining_budgets(5_000.0).len());
+    });
+    rep.record(r);
+
+    let r = bench("take_batch(16)+refill n=50k", || {
+        if let Some(b) = q.take_batch(16) {
+            for req in b.requests {
+                q.push(req);
+            }
+        }
+    });
+    rep.record(r);
+
+    let r = bench("drop_expired sweep (none expired)", || {
+        keep(q.drop_expired(0.0).len());
+    });
+    rep.record(r);
+
+    rep.finish();
+}

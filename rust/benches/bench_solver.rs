@@ -1,0 +1,70 @@
+//! Solver microbenchmarks + ablation: Algorithm 1 (brute force) vs the
+//! monotonicity-pruned incremental solver, across queue depths and search
+//! limits. The solver runs once per adaptation interval (1 s) — it must be
+//! orders of magnitude faster than that.
+
+use sponge::perfmodel::LatencyModel;
+use sponge::solver::{BruteForceSolver, IncrementalSolver, IpSolver, SolverInput, SolverLimits};
+use sponge::util::bench::{banner, bench, keep, Reporter};
+use sponge::util::rng::Pcg32;
+
+fn random_input(n: usize, seed: u64) -> SolverInput {
+    let mut rng = Pcg32::seeded(seed);
+    let mut budgets: Vec<f64> = (0..n).map(|_| rng.uniform(50.0, 1_500.0)).collect();
+    budgets.sort_by(f64::total_cmp);
+    SolverInput::per_request(budgets, rng.uniform(5.0, 120.0))
+}
+
+fn main() {
+    banner("Solver — Algorithm 1 vs incremental");
+    let mut rep = Reporter::new("solver microbench");
+    let model = LatencyModel::resnet_human_detector();
+
+    for &n in &[0usize, 10, 100, 1_000] {
+        let input = random_input(n, 0x50 + n as u64);
+        let limits = SolverLimits::default();
+        let r = bench(&format!("brute-force      n={n:<5} 16x16"), || {
+            keep(BruteForceSolver.solve(&model, &input, limits));
+        });
+        rep.record(r);
+        let r = bench(&format!("incremental      n={n:<5} 16x16"), || {
+            keep(IncrementalSolver.solve(&model, &input, limits));
+        });
+        rep.record(r);
+    }
+
+    // Larger search spaces (the ablation for the paper's "simple algorithm
+    // for small cases" remark).
+    for &cmax in &[16u32, 64, 256] {
+        let input = random_input(100, 0x60 + cmax as u64);
+        let limits = SolverLimits { c_max: cmax, b_max: 64, delta: 1e-3 };
+        let r = bench(&format!("brute-force      n=100   {cmax}x64"), || {
+            keep(BruteForceSolver.solve(&model, &input, limits));
+        });
+        let brute_ns = r.mean_ns();
+        rep.record(r);
+        let r = bench(&format!("incremental      n=100   {cmax}x64"), || {
+            keep(IncrementalSolver.solve(&model, &input, limits));
+        });
+        let inc_ns = r.mean_ns();
+        rep.record(r);
+        rep.note(&format!(
+            "speedup at {cmax}x64: {:.1}x",
+            brute_ns / inc_ns
+        ));
+    }
+
+    // Budget check: the adaptation interval is 1 s; the solver must be
+    // invisible next to it even on deep queues.
+    let input = random_input(1_000, 7);
+    let r = bench("incremental      worst-case check", || {
+        keep(IncrementalSolver.solve(&model, &input, SolverLimits::default()));
+    });
+    let frac = r.mean_ns() / 1e9;
+    rep.note(&format!(
+        "incremental at n=1000 uses {:.4}% of the 1 s adaptation interval",
+        frac * 100.0
+    ));
+    rep.record(r);
+    rep.finish();
+}

@@ -1,0 +1,114 @@
+//! Table 1: execution latency (P99) of the ResNet human detector per
+//! (cores, batch), throughput, and the instance count needed to sustain
+//! 100 RPS at SLO 1000 ms.
+//!
+//! Regenerates the paper's exact rows from the calibrated performance
+//! model + profiled engine; also cross-checks the real PJRT engine's
+//! batch-axis latencies when artifacts are present.
+
+use sponge::perfmodel::LatencyModel;
+use sponge::profiler::{profile, ProfileCfg, ProfileStat};
+use sponge::runtime::{InferenceEngine, PjrtEngine, SimEngine};
+use sponge::util::bench::{banner, Reporter};
+
+fn main() {
+    banner("Table 1 — latency/throughput per (cores, batch)");
+    let mut rep = Reporter::new("table1 latency throughput grid");
+    let model = LatencyModel::resnet_human_detector();
+    let lambda = 100.0; // paper: 100 RPS at SLO 1000 ms
+
+    // The paper's exact grid rows.
+    let grid = [(1u32, 1u32), (1, 2), (2, 4), (4, 8), (8, 4), (8, 8)];
+    let paper = [55.0, 97.0, 94.0, 92.0, 37.0, 62.0];
+
+    // Profile the simulated engine (noise + P99, as the paper measures).
+    let mut engine = SimEngine::new(model, 0.05, 0xbea7);
+    let cfg = ProfileCfg {
+        batches: vec![1, 2, 4, 8],
+        cores: vec![1, 2, 4, 8],
+        reps: 200,
+        stat: ProfileStat::P99,
+    };
+    let points = profile(&mut engine, &cfg).expect("profiling");
+
+    let mut rows = Vec::new();
+    for (i, &(c, b)) in grid.iter().enumerate() {
+        let p99 = points
+            .iter()
+            .find(|p| p.cores == c && p.batch == b)
+            .map(|p| p.latency_ms)
+            .unwrap_or_else(|| model.latency_ms(b, c));
+        let h = model.throughput_rps(b, c);
+        // Feasible per-instance only if a batch fits the SLO; instances
+        // needed = ceil(lambda / h) as in the paper's §2.1 accounting.
+        let instances = (lambda / h).ceil() as u32;
+        let total_cores = instances * c;
+        rows.push(vec![
+            c.to_string(),
+            b.to_string(),
+            format!("{p99:.0}"),
+            format!("{:.0}", paper[i]),
+            format!("{h:.0}"),
+            format!("{instances}"),
+            format!("{total_cores}"),
+        ]);
+    }
+    rep.table(
+        "Table 1 (model ResNet human detector, SLO 1000 ms, λ=100 RPS)",
+        vec![
+            "cores".into(),
+            "batch".into(),
+            "P99 ms".into(),
+            "paper ms".into(),
+            "h rps".into(),
+            "instances".into(),
+            "total cores".into(),
+        ],
+        rows,
+    );
+
+    // Shape checks the paper's narrative relies on.
+    let l_1_2 = model.latency_ms(2, 1);
+    let l_8_4 = model.latency_ms(4, 8);
+    rep.note(&format!(
+        "1-core b=2 ({l_1_2:.0} ms) is ~{:.1}x slower than 8-core b=4 ({l_8_4:.0} ms)",
+        l_1_2 / l_8_4
+    ));
+
+    // Real-engine cross-check (batch axis at c=1), if artifacts exist.
+    if std::path::Path::new("artifacts/manifest.json").exists() {
+        let mut eng = PjrtEngine::load("artifacts", "resnet18lite").expect("artifacts");
+        let mut rows = Vec::new();
+        let mut prev = 0.0;
+        let mut monotone = true;
+        for &b in &eng.supported_batches() {
+            let _ = eng.execute(b, 1); // warm-up
+            let mut lat = Vec::new();
+            for _ in 0..15 {
+                lat.push(eng.execute(b, 1).expect("execute"));
+            }
+            let s = sponge::util::stats::Summary::of(&lat);
+            monotone &= s.p50 >= prev * 0.8; // allow small jitter
+            prev = s.p50;
+            rows.push(vec![
+                b.to_string(),
+                format!("{:.2}", s.p50),
+                format!("{:.2}", s.p99),
+                format!("{:.1}", b as f64 / s.p50 * 1_000.0),
+            ]);
+        }
+        rep.table(
+            "PJRT engine (real model, batch axis @ 1 vCPU)",
+            vec!["batch".into(), "p50 ms".into(), "p99 ms".into(), "rps".into()],
+            rows,
+        );
+        rep.note(&format!(
+            "latency grows with batch on the real engine: {}",
+            if monotone { "yes" } else { "NO (check!)" }
+        ));
+    } else {
+        rep.note("artifacts/ missing — PJRT cross-check skipped (run `make artifacts`)");
+    }
+
+    rep.finish();
+}

@@ -1,0 +1,194 @@
+//! Multi-node fleet substrate (paper §6: "multiple instances of the same
+//! DL model may need to reside in different computing nodes to support
+//! the incoming workload").
+//!
+//! A [`Fleet`] owns several single-node [`Cluster`]s and places instance
+//! launches across them. Placement is worst-fit (most free cores first):
+//! vertical scaling wants headroom *around* existing instances, so keeping
+//! nodes evenly loaded preserves each instance's room to grow — the
+//! interplay the paper's future-work section calls out.
+
+use super::{Cluster, ClusterCfg, ClusterError, Instance};
+use crate::{Cores, Ms};
+
+/// Fleet-level instance handle: (node index, instance id on that node).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct FleetId {
+    pub node: usize,
+    pub instance: u32,
+}
+
+/// A set of nodes with placement.
+#[derive(Debug)]
+pub struct Fleet {
+    nodes: Vec<Cluster>,
+}
+
+impl Fleet {
+    pub fn new(node_count: usize, cfg: ClusterCfg) -> Fleet {
+        assert!(node_count >= 1);
+        Fleet { nodes: (0..node_count).map(|_| Cluster::new(cfg)).collect() }
+    }
+
+    pub fn node_count(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn node(&self, idx: usize) -> &Cluster {
+        &self.nodes[idx]
+    }
+
+    /// Launch on the node with the most free cores (worst-fit), to keep
+    /// vertical-scaling headroom balanced. Returns the fleet-level id.
+    pub fn launch(&mut self, cores: Cores, now: Ms) -> Result<FleetId, ClusterError> {
+        let best = (0..self.nodes.len())
+            .max_by_key(|&i| self.nodes[i].available_cores())
+            .expect(">= 1 node");
+        if self.nodes[best].available_cores() < cores {
+            return Err(ClusterError::CapacityExceeded {
+                requested: cores,
+                available: self.nodes[best].available_cores(),
+            });
+        }
+        let instance = self.nodes[best].launch(cores, now)?;
+        Ok(FleetId { node: best, instance })
+    }
+
+    /// In-place resize, bounded by the instance's own node capacity (an
+    /// instance cannot grow across nodes — exactly why the paper says
+    /// vertical scaling "sustains workloads to some extent").
+    pub fn resize(&mut self, id: FleetId, cores: Cores, now: Ms) -> Result<(), ClusterError> {
+        self.nodes
+            .get_mut(id.node)
+            .ok_or(ClusterError::NoSuchInstance(id.instance))?
+            .resize(id.instance, cores, now)
+    }
+
+    pub fn terminate(&mut self, id: FleetId, now: Ms) -> Result<(), ClusterError> {
+        self.nodes
+            .get_mut(id.node)
+            .ok_or(ClusterError::NoSuchInstance(id.instance))?
+            .terminate(id.instance, now)
+    }
+
+    pub fn tick(&mut self, now: Ms) {
+        for n in &mut self.nodes {
+            n.tick(now);
+        }
+    }
+
+    /// All live instances with fleet ids.
+    pub fn instances(&self) -> Vec<(FleetId, &Instance)> {
+        self.nodes
+            .iter()
+            .enumerate()
+            .flat_map(|(ni, n)| {
+                n.instances().map(move |i| (FleetId { node: ni, instance: i.id }, i))
+            })
+            .collect()
+    }
+
+    pub fn allocated_cores(&self) -> Cores {
+        self.nodes.iter().map(|n| n.allocated_cores()).sum()
+    }
+
+    pub fn ready_cores(&self, now: Ms) -> Cores {
+        self.nodes.iter().map(|n| n.ready_cores(now)).sum()
+    }
+
+    pub fn core_ms_integral(&self) -> f64 {
+        self.nodes.iter().map(|n| n.core_ms_integral()).sum()
+    }
+
+    /// Largest single contiguous growth room of any live instance: the
+    /// fleet's *vertical* capacity ceiling (contrast with total free
+    /// cores, which may be fragmented across nodes).
+    pub fn max_vertical_ceiling(&self) -> Cores {
+        self.nodes
+            .iter()
+            .flat_map(|n| {
+                n.instances()
+                    .map(move |i| i.cores().max(i.target_cores()) + n.available_cores())
+            })
+            .max()
+            .unwrap_or(0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(node_cores: Cores) -> ClusterCfg {
+        ClusterCfg { node_cores, ..ClusterCfg::default() }
+    }
+
+    #[test]
+    fn worst_fit_balances_nodes() {
+        let mut f = Fleet::new(3, cfg(16));
+        let ids: Vec<FleetId> =
+            (0..3).map(|_| f.launch(4, 0.0).unwrap()).collect();
+        let nodes: std::collections::BTreeSet<usize> =
+            ids.iter().map(|i| i.node).collect();
+        assert_eq!(nodes.len(), 3, "each launch on a different node: {ids:?}");
+    }
+
+    #[test]
+    fn launch_fails_when_all_nodes_full() {
+        let mut f = Fleet::new(2, cfg(8));
+        f.launch(8, 0.0).unwrap();
+        f.launch(8, 0.0).unwrap();
+        assert!(matches!(
+            f.launch(1, 0.0),
+            Err(ClusterError::CapacityExceeded { .. })
+        ));
+    }
+
+    #[test]
+    fn resize_bounded_by_own_node() {
+        let mut f = Fleet::new(2, cfg(8));
+        let a = f.launch(4, 0.0).unwrap();
+        let _b = f.launch(4, 0.0).unwrap(); // lands on the other node
+        f.tick(20_000.0);
+        // Node has 8 cores; instance holds 4, can grow to 8 but not 9 —
+        // even though the fleet as a whole has 8 free cores.
+        assert!(f.resize(a, 8, 20_000.0).is_ok());
+        f.tick(21_000.0);
+        assert!(f.resize(a, 9, 21_000.0).is_err());
+        assert_eq!(f.allocated_cores(), 12);
+    }
+
+    #[test]
+    fn vertical_ceiling_vs_total_free() {
+        let mut f = Fleet::new(2, cfg(8));
+        let _a = f.launch(6, 0.0).unwrap();
+        let _b = f.launch(6, 0.0).unwrap();
+        f.tick(20_000.0);
+        // 4 free cores fleet-wide, but each instance can only reach 8.
+        assert_eq!(f.allocated_cores(), 12);
+        assert_eq!(f.max_vertical_ceiling(), 8);
+    }
+
+    #[test]
+    fn fleet_accounting_sums_nodes() {
+        let mut f = Fleet::new(2, cfg(16));
+        let a = f.launch(4, 0.0).unwrap();
+        let _b = f.launch(2, 0.0).unwrap();
+        f.tick(20_000.0);
+        assert_eq!(f.ready_cores(20_000.0), 6);
+        assert_eq!(f.instances().len(), 2);
+        f.terminate(a, 20_000.0).unwrap();
+        assert_eq!(f.allocated_cores(), 2);
+        assert!(f.core_ms_integral() > 0.0);
+    }
+
+    #[test]
+    fn cold_start_applies_per_node() {
+        let mut f = Fleet::new(2, cfg(16));
+        let id = f.launch(4, 0.0).unwrap();
+        assert_eq!(f.ready_cores(0.0), 0);
+        f.tick(10_000.0);
+        assert_eq!(f.ready_cores(10_000.0), 4);
+        let _ = id;
+    }
+}

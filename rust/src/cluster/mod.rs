@@ -1,0 +1,427 @@
+//! Cluster substrate: nodes, instances, in-place vertical resize, and the
+//! cold-start semantics that horizontal scaling pays (paper §1–2).
+//!
+//! This is the minikube/Kubernetes stand-in. The load-bearing behaviours
+//! for the paper's claims are:
+//!
+//! * **In-place resize** (K8s in-place pod resize, the paper's [3]):
+//!   changing an instance's core allocation takes effect after a small
+//!   actuation delay (~100 ms API round-trip) *without* losing the warm
+//!   model or dropping the queue.
+//! * **Cold start**: a *new* instance (horizontal scale-out, what FA2
+//!   does) only becomes Ready after `cold_start_ms` (~10 s per the paper's
+//!   §4 observation: "FA2 needs roughly 10 seconds to find a new
+//!   configuration, adjust itself, and stabilize").
+//! * **Capacity**: a node has `c_max` cores; allocations are integral and
+//!   ledger-checked.
+
+mod fleet;
+
+pub use fleet::{Fleet, FleetId};
+
+use crate::{Cores, Ms};
+
+/// Instance lifecycle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InstanceState {
+    /// Booting: model loading, runtime warm-up. Cannot serve.
+    ColdStarting { ready_at_ms_bits: u64 },
+    /// Serving.
+    Ready,
+    /// In-place resize actuation window. Keeps serving at the *old*
+    /// allocation until the resize lands (K8s semantics: the container is
+    /// not restarted).
+    Resizing { effective_at_ms_bits: u64, target: Cores },
+    /// Removed (scale-in); terminal.
+    Terminated,
+}
+
+// f64 times are stored as bits so InstanceState can be Eq/Copy.
+fn ms(bits: u64) -> Ms {
+    f64::from_bits(bits)
+}
+
+/// One model-serving instance (a pod).
+#[derive(Debug, Clone)]
+pub struct Instance {
+    pub id: u32,
+    cores: Cores,
+    state: InstanceState,
+}
+
+impl Instance {
+    /// Allocated cores *currently effective* (old allocation during a
+    /// resize window).
+    pub fn cores(&self) -> Cores {
+        self.cores
+    }
+
+    /// Cores this instance will have once pending transitions land.
+    pub fn target_cores(&self) -> Cores {
+        match self.state {
+            InstanceState::Resizing { target, .. } => target,
+            _ => self.cores,
+        }
+    }
+
+    pub fn state(&self) -> InstanceState {
+        self.state
+    }
+
+    pub fn is_ready(&self, now: Ms) -> bool {
+        match self.state {
+            InstanceState::Ready => true,
+            InstanceState::Resizing { .. } => true, // keeps serving
+            InstanceState::ColdStarting { ready_at_ms_bits } => now >= ms(ready_at_ms_bits),
+            InstanceState::Terminated => false,
+        }
+    }
+
+    /// Advance the lifecycle clock: promote finished cold starts and land
+    /// finished resizes.
+    pub fn tick(&mut self, now: Ms) {
+        match self.state {
+            InstanceState::ColdStarting { ready_at_ms_bits } if now >= ms(ready_at_ms_bits) => {
+                self.state = InstanceState::Ready;
+            }
+            InstanceState::Resizing { effective_at_ms_bits, target }
+                if now >= ms(effective_at_ms_bits) =>
+            {
+                self.cores = target;
+                self.state = InstanceState::Ready;
+            }
+            _ => {}
+        }
+    }
+}
+
+/// Cluster timing knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct ClusterCfg {
+    /// Node capacity in cores (the paper's testbed: 48-thread Xeon; the
+    /// search space caps at c_max=16).
+    pub node_cores: Cores,
+    /// Cold-start duration for new instances (paper: ~10 s).
+    pub cold_start_ms: Ms,
+    /// In-place resize actuation delay (K8s API round trip; paper treats
+    /// it as negligible next to cold start).
+    pub resize_ms: Ms,
+}
+
+impl Default for ClusterCfg {
+    fn default() -> Self {
+        ClusterCfg { node_cores: 48, cold_start_ms: 10_000.0, resize_ms: 100.0 }
+    }
+}
+
+/// Cluster error type.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ClusterError {
+    CapacityExceeded { requested: Cores, available: Cores },
+    NoSuchInstance(u32),
+    InstanceNotReady(u32),
+}
+
+impl std::fmt::Display for ClusterError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ClusterError::CapacityExceeded { requested, available } => {
+                write!(f, "capacity exceeded: requested {requested}, available {available}")
+            }
+            ClusterError::NoSuchInstance(id) => write!(f, "no such instance {id}"),
+            ClusterError::InstanceNotReady(id) => write!(f, "instance {id} not ready"),
+        }
+    }
+}
+
+impl std::error::Error for ClusterError {}
+
+/// A single node hosting model instances (multi-node is future work in the
+/// paper; the ledger is per-node).
+#[derive(Debug)]
+pub struct Cluster {
+    cfg: ClusterCfg,
+    instances: Vec<Instance>,
+    next_id: u32,
+    /// Audit counters for tests: total core-ms integral.
+    core_ms_integral: f64,
+    last_integral_at: Ms,
+}
+
+impl Cluster {
+    pub fn new(cfg: ClusterCfg) -> Cluster {
+        Cluster {
+            cfg,
+            instances: Vec::new(),
+            next_id: 0,
+            core_ms_integral: 0.0,
+            last_integral_at: 0.0,
+        }
+    }
+
+    pub fn cfg(&self) -> ClusterCfg {
+        self.cfg
+    }
+
+    /// Live (non-terminated) instances.
+    pub fn instances(&self) -> impl Iterator<Item = &Instance> {
+        self.instances
+            .iter()
+            .filter(|i| i.state != InstanceState::Terminated)
+    }
+
+    /// Total cores currently allocated (including instances still cold-
+    /// starting: they hold their reservation — that is what makes cold
+    /// start expensive).
+    pub fn allocated_cores(&self) -> Cores {
+        self.instances().map(|i| i.cores.max(i.target_cores())).sum()
+    }
+
+    pub fn available_cores(&self) -> Cores {
+        self.cfg.node_cores - self.allocated_cores()
+    }
+
+    /// Launch a new instance (horizontal scale-out): pays the cold start.
+    pub fn launch(&mut self, cores: Cores, now: Ms) -> Result<u32, ClusterError> {
+        assert!(cores >= 1);
+        self.integrate(now);
+        if cores > self.available_cores() {
+            return Err(ClusterError::CapacityExceeded {
+                requested: cores,
+                available: self.available_cores(),
+            });
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        self.instances.push(Instance {
+            id,
+            cores,
+            state: InstanceState::ColdStarting {
+                ready_at_ms_bits: (now + self.cfg.cold_start_ms).to_bits(),
+            },
+        });
+        Ok(id)
+    }
+
+    /// In-place vertical resize (the paper's key mechanism): no restart,
+    /// old allocation keeps serving until `resize_ms` elapses.
+    pub fn resize(&mut self, id: u32, cores: Cores, now: Ms) -> Result<(), ClusterError> {
+        assert!(cores >= 1);
+        self.integrate(now);
+        let available = self.available_cores();
+        let inst = self
+            .instances
+            .iter_mut()
+            .find(|i| i.id == id && i.state != InstanceState::Terminated)
+            .ok_or(ClusterError::NoSuchInstance(id))?;
+        if !inst.is_ready(now) {
+            return Err(ClusterError::InstanceNotReady(id));
+        }
+        let headroom = available + inst.cores.max(inst.target_cores());
+        if cores > headroom {
+            return Err(ClusterError::CapacityExceeded {
+                requested: cores,
+                available: headroom,
+            });
+        }
+        if cores == inst.cores {
+            inst.state = InstanceState::Ready;
+            return Ok(());
+        }
+        inst.state = InstanceState::Resizing {
+            effective_at_ms_bits: (now + self.cfg.resize_ms).to_bits(),
+            target: cores,
+        };
+        Ok(())
+    }
+
+    /// Terminate an instance (horizontal scale-in); frees its cores.
+    pub fn terminate(&mut self, id: u32, now: Ms) -> Result<(), ClusterError> {
+        self.integrate(now);
+        let inst = self
+            .instances
+            .iter_mut()
+            .find(|i| i.id == id && i.state != InstanceState::Terminated)
+            .ok_or(ClusterError::NoSuchInstance(id))?;
+        inst.state = InstanceState::Terminated;
+        inst.cores = 0;
+        Ok(())
+    }
+
+    /// Advance lifecycle timers to `now`.
+    pub fn tick(&mut self, now: Ms) {
+        self.integrate(now);
+        for inst in &mut self.instances {
+            inst.tick(now);
+        }
+    }
+
+    /// Instances able to serve at `now`.
+    pub fn ready_instances(&self, now: Ms) -> Vec<&Instance> {
+        self.instances().filter(|i| i.is_ready(now)).collect()
+    }
+
+    /// Sum of cores of ready instances at `now` — the serving capacity.
+    pub fn ready_cores(&self, now: Ms) -> Cores {
+        self.ready_instances(now).iter().map(|i| i.cores()).sum()
+    }
+
+    pub fn get(&self, id: u32) -> Option<&Instance> {
+        self.instances.iter().find(|i| i.id == id)
+    }
+
+    /// Allocated-cores time integral (core-ms) — the resource-usage metric
+    /// behind Fig. 4 (bottom) and the ">20 % fewer cores" headline.
+    pub fn core_ms_integral(&self) -> f64 {
+        self.core_ms_integral
+    }
+
+    fn integrate(&mut self, now: Ms) {
+        if now > self.last_integral_at {
+            self.core_ms_integral +=
+                self.allocated_cores() as f64 * (now - self.last_integral_at);
+            self.last_integral_at = now;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::run_prop;
+
+    fn cluster() -> Cluster {
+        Cluster::new(ClusterCfg::default())
+    }
+
+    #[test]
+    fn launch_pays_cold_start() {
+        let mut c = cluster();
+        let id = c.launch(4, 0.0).unwrap();
+        assert!(!c.get(id).unwrap().is_ready(0.0));
+        assert!(!c.get(id).unwrap().is_ready(9_999.0));
+        c.tick(10_000.0);
+        assert!(c.get(id).unwrap().is_ready(10_000.0));
+        assert_eq!(c.ready_cores(10_000.0), 4);
+    }
+
+    #[test]
+    fn resize_is_in_place_and_fast() {
+        let mut c = cluster();
+        let id = c.launch(2, 0.0).unwrap();
+        c.tick(10_000.0);
+        c.resize(id, 8, 10_000.0).unwrap();
+        // Keeps serving during the resize window, at the OLD allocation.
+        assert!(c.get(id).unwrap().is_ready(10_050.0));
+        assert_eq!(c.get(id).unwrap().cores(), 2);
+        c.tick(10_100.0);
+        assert_eq!(c.get(id).unwrap().cores(), 8);
+        assert_eq!(c.ready_cores(10_100.0), 8);
+    }
+
+    #[test]
+    fn resize_reserves_target_capacity() {
+        let mut c = Cluster::new(ClusterCfg { node_cores: 10, ..Default::default() });
+        let a = c.launch(4, 0.0).unwrap();
+        c.tick(10_000.0);
+        c.resize(a, 8, 10_000.0).unwrap();
+        // During the window the instance reserves max(old, target) = 8.
+        assert_eq!(c.allocated_cores(), 8);
+        assert!(c.launch(4, 10_001.0).is_err());
+        assert!(c.launch(2, 10_001.0).is_ok());
+    }
+
+    #[test]
+    fn capacity_enforced() {
+        let mut c = Cluster::new(ClusterCfg { node_cores: 8, ..Default::default() });
+        c.launch(6, 0.0).unwrap();
+        match c.launch(4, 0.0) {
+            Err(ClusterError::CapacityExceeded { requested: 4, available: 2 }) => {}
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn resize_cannot_exceed_node() {
+        let mut c = Cluster::new(ClusterCfg { node_cores: 8, ..Default::default() });
+        let a = c.launch(2, 0.0).unwrap();
+        let _b = c.launch(4, 0.0).unwrap();
+        c.tick(10_000.0);
+        assert!(c.resize(a, 5, 10_000.0).is_err()); // 5 + 4 > 8
+        assert!(c.resize(a, 4, 10_000.0).is_ok());
+    }
+
+    #[test]
+    fn cold_instance_cannot_resize() {
+        let mut c = cluster();
+        let id = c.launch(2, 0.0).unwrap();
+        assert_eq!(
+            c.resize(id, 4, 1_000.0),
+            Err(ClusterError::InstanceNotReady(id))
+        );
+    }
+
+    #[test]
+    fn terminate_frees_cores() {
+        let mut c = Cluster::new(ClusterCfg { node_cores: 8, ..Default::default() });
+        let id = c.launch(6, 0.0).unwrap();
+        c.terminate(id, 100.0).unwrap();
+        assert_eq!(c.allocated_cores(), 0);
+        assert!(c.launch(8, 200.0).is_ok());
+        assert!(c.terminate(id, 300.0).is_err()); // already gone
+    }
+
+    #[test]
+    fn core_ms_integral_accumulates() {
+        let mut c = cluster();
+        let id = c.launch(4, 0.0).unwrap();
+        c.tick(1_000.0); // 4 cores for 1 s
+        c.terminate(id, 1_000.0).unwrap();
+        c.tick(2_000.0); // 0 cores for 1 s
+        assert!((c.core_ms_integral() - 4_000.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn prop_ledger_never_over_allocates() {
+        run_prop("cluster-ledger", 40, |g| {
+            let node = g.u32(4, 32);
+            let mut c = Cluster::new(ClusterCfg {
+                node_cores: node,
+                cold_start_ms: 1_000.0,
+                resize_ms: 50.0,
+            });
+            let mut now = 0.0;
+            let mut ids: Vec<u32> = Vec::new();
+            for _ in 0..g.usize(5, 60) {
+                now += g.f64(1.0, 500.0);
+                c.tick(now);
+                match g.u32(0, 2) {
+                    0 => {
+                        if let Ok(id) = c.launch(g.u32(1, 8), now) {
+                            ids.push(id);
+                        }
+                    }
+                    1 => {
+                        if !ids.is_empty() {
+                            let id = ids[g.usize(0, ids.len() - 1)];
+                            let _ = c.resize(id, g.u32(1, 8), now);
+                        }
+                    }
+                    _ => {
+                        if !ids.is_empty() {
+                            let idx = g.usize(0, ids.len() - 1);
+                            let id = ids.swap_remove(idx);
+                            let _ = c.terminate(id, now);
+                        }
+                    }
+                }
+                crate::prop_assert!(
+                    c.allocated_cores() <= node,
+                    "over-allocated: {} > {node}",
+                    c.allocated_cores()
+                );
+            }
+            Ok(())
+        });
+    }
+}

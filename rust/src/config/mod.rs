@@ -1,0 +1,307 @@
+//! Configuration system: typed experiment/serving configs plus a
+//! TOML-subset parser (`key = value` pairs under `[section]` headers —
+//! exactly the shape our config files use; no external crates offline).
+
+mod toml_lite;
+
+pub use toml_lite::{parse_toml, TomlDoc, TomlError};
+
+use crate::cluster::ClusterCfg;
+use crate::perfmodel::LatencyModel;
+use crate::solver::SolverLimits;
+use crate::workload::{ArrivalProcess, PayloadMix, WorkloadGen};
+use crate::Ms;
+
+/// Scaling policies selectable from configs and the CLI.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Policy {
+    Sponge,
+    SpongeVerbatim,
+    /// Ablation: Sponge provisioning at utilization 1 (no λ headroom, no
+    /// latency safety margin).
+    SpongeNoMargin,
+    Fa2,
+    Static8,
+    Static16,
+    Vpa,
+    /// Extension (paper §6 future work): vertical-first, horizontal-when-
+    /// saturated.
+    Hybrid,
+}
+
+impl Policy {
+    pub fn parse(s: &str) -> Result<Policy, String> {
+        match s {
+            "sponge" => Ok(Policy::Sponge),
+            "sponge-verbatim" => Ok(Policy::SpongeVerbatim),
+            "sponge-nomargin" => Ok(Policy::SpongeNoMargin),
+            "fa2" => Ok(Policy::Fa2),
+            "static8" => Ok(Policy::Static8),
+            "static16" => Ok(Policy::Static16),
+            "vpa" => Ok(Policy::Vpa),
+            "hybrid" => Ok(Policy::Hybrid),
+            other => Err(format!(
+                "unknown policy '{other}' (expected sponge|sponge-verbatim|sponge-nomargin|fa2|static8|static16|vpa|hybrid)"
+            )),
+        }
+    }
+
+    /// The paper's Fig. 4 comparison set (+ the VPA ablation).
+    pub fn all() -> [Policy; 6] {
+        [
+            Policy::Sponge,
+            Policy::SpongeVerbatim,
+            Policy::Fa2,
+            Policy::Static8,
+            Policy::Static16,
+            Policy::Vpa,
+        ]
+    }
+
+    /// Everything, including our extensions/ablations.
+    pub fn extended() -> [Policy; 8] {
+        [
+            Policy::Sponge,
+            Policy::SpongeVerbatim,
+            Policy::SpongeNoMargin,
+            Policy::Fa2,
+            Policy::Static8,
+            Policy::Static16,
+            Policy::Vpa,
+            Policy::Hybrid,
+        ]
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Policy::Sponge => "sponge",
+            Policy::SpongeVerbatim => "sponge-verbatim",
+            Policy::SpongeNoMargin => "sponge-nomargin",
+            Policy::Fa2 => "fa2",
+            Policy::Static8 => "static8",
+            Policy::Static16 => "static16",
+            Policy::Vpa => "vpa",
+            Policy::Hybrid => "hybrid",
+        }
+    }
+
+    /// Instantiate the autoscaler for this policy.
+    pub fn build(&self, limits: SolverLimits) -> Box<dyn crate::scaler::Autoscaler> {
+        use crate::scaler::*;
+        match self {
+            Policy::Sponge => Box::new(SpongeScaler::new(limits)),
+            Policy::SpongeVerbatim => Box::new(SpongeScaler::paper_verbatim(limits)),
+            Policy::SpongeNoMargin => Box::new(SpongeScaler::new(limits).without_margins()),
+            Policy::Fa2 => Box::new(Fa2Scaler::new(limits.b_max)),
+            Policy::Static8 => Box::new(StaticScaler::new(8, limits.b_max)),
+            Policy::Static16 => Box::new(StaticScaler::new(16, limits.b_max)),
+            Policy::Vpa => Box::new(VpaScaler::new(limits.c_max)),
+            Policy::Hybrid => Box::new(HybridScaler::new(limits, 4)),
+        }
+    }
+}
+
+/// Full experiment configuration (the `simulate` subcommand's input).
+#[derive(Debug, Clone)]
+pub struct ExperimentCfg {
+    pub horizon_s: usize,
+    pub adaptation_interval_ms: Ms,
+    pub rate_rps: f64,
+    pub slo_ms: Ms,
+    pub payload_bytes: f64,
+    pub policy: Policy,
+    pub model: String,
+    pub seed: u64,
+    pub noise_cv: f64,
+    pub c_max: u32,
+    pub b_max: u32,
+}
+
+impl Default for ExperimentCfg {
+    fn default() -> Self {
+        ExperimentCfg {
+            horizon_s: 600,
+            adaptation_interval_ms: 1_000.0,
+            rate_rps: 20.0,
+            slo_ms: 1_000.0,
+            payload_bytes: 200_000.0,
+            policy: Policy::Sponge,
+            model: "yolov5s".into(),
+            seed: 42,
+            noise_cv: 0.05,
+            c_max: 16,
+            b_max: 16,
+        }
+    }
+}
+
+impl ExperimentCfg {
+    /// Parse from a TOML-lite document (all keys optional; see Default).
+    pub fn from_toml(text: &str) -> Result<ExperimentCfg, String> {
+        let doc = parse_toml(text).map_err(|e| e.to_string())?;
+        let mut cfg = ExperimentCfg::default();
+        let get = |sec: &str, key: &str| doc.get(sec, key);
+        if let Some(v) = get("experiment", "horizon_s") {
+            cfg.horizon_s = v.parse().map_err(|e| format!("horizon_s: {e}"))?;
+        }
+        if let Some(v) = get("experiment", "adaptation_interval_ms") {
+            cfg.adaptation_interval_ms =
+                v.parse().map_err(|e| format!("adaptation_interval_ms: {e}"))?;
+        }
+        if let Some(v) = get("experiment", "seed") {
+            cfg.seed = v.parse().map_err(|e| format!("seed: {e}"))?;
+        }
+        if let Some(v) = get("experiment", "policy") {
+            cfg.policy = Policy::parse(&v)?;
+        }
+        if let Some(v) = get("workload", "rate_rps") {
+            cfg.rate_rps = v.parse().map_err(|e| format!("rate_rps: {e}"))?;
+        }
+        if let Some(v) = get("workload", "slo_ms") {
+            cfg.slo_ms = v.parse().map_err(|e| format!("slo_ms: {e}"))?;
+        }
+        if let Some(v) = get("workload", "payload_bytes") {
+            cfg.payload_bytes = v.parse().map_err(|e| format!("payload_bytes: {e}"))?;
+        }
+        if let Some(v) = get("model", "name") {
+            cfg.model = v;
+        }
+        if let Some(v) = get("model", "noise_cv") {
+            cfg.noise_cv = v.parse().map_err(|e| format!("noise_cv: {e}"))?;
+        }
+        if let Some(v) = get("solver", "c_max") {
+            cfg.c_max = v.parse().map_err(|e| format!("c_max: {e}"))?;
+        }
+        if let Some(v) = get("solver", "b_max") {
+            cfg.b_max = v.parse().map_err(|e| format!("b_max: {e}"))?;
+        }
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.horizon_s == 0 {
+            return Err("horizon_s must be positive".into());
+        }
+        if self.rate_rps <= 0.0 {
+            return Err("rate_rps must be positive".into());
+        }
+        if self.slo_ms <= 0.0 {
+            return Err("slo_ms must be positive".into());
+        }
+        if self.c_max == 0 || self.b_max == 0 {
+            return Err("c_max/b_max must be >= 1".into());
+        }
+        if !(0.0..=1.0).contains(&self.noise_cv) {
+            return Err("noise_cv must be in [0, 1]".into());
+        }
+        Ok(())
+    }
+
+    pub fn latency_model(&self) -> Result<LatencyModel, String> {
+        match self.model.as_str() {
+            "resnet" => Ok(LatencyModel::resnet_human_detector()),
+            "yolov5n" => Ok(LatencyModel::yolov5n()),
+            "yolov5s" => Ok(LatencyModel::yolov5s()),
+            other => Err(format!("unknown model '{other}' (resnet|yolov5n|yolov5s)")),
+        }
+    }
+
+    pub fn limits(&self) -> SolverLimits {
+        SolverLimits { c_max: self.c_max, b_max: self.b_max, delta: 1e-3 }
+    }
+
+    pub fn workload(&self) -> WorkloadGen {
+        WorkloadGen {
+            rate_rps: self.rate_rps,
+            slo_ms: self.slo_ms,
+            process: ArrivalProcess::FixedRate,
+            payload: PayloadMix::Constant(self.payload_bytes),
+            seed: self.seed ^ 0xa11ce,
+        }
+    }
+
+    pub fn sim_config(&self) -> Result<crate::sim::SimConfig, String> {
+        Ok(crate::sim::SimConfig {
+            horizon_ms: self.horizon_s as f64 * 1_000.0,
+            adaptation_interval_ms: self.adaptation_interval_ms,
+            workload: self.workload(),
+            model: self.latency_model()?,
+            cluster: ClusterCfg::default(),
+            latency_noise_cv: self.noise_cv,
+            seed: self.seed,
+            admission_control: false,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_is_paper_setup() {
+        let c = ExperimentCfg::default();
+        assert_eq!(c.horizon_s, 600);
+        assert_eq!(c.rate_rps, 20.0);
+        assert_eq!(c.slo_ms, 1_000.0);
+        assert_eq!(c.c_max, 16);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn parses_full_document() {
+        let text = r#"
+            [experiment]
+            horizon_s = 60
+            policy = "fa2"
+            seed = 7
+
+            [workload]
+            rate_rps = 50.5
+            slo_ms = 800
+
+            [model]
+            name = "resnet"
+            noise_cv = 0.1
+
+            [solver]
+            c_max = 8
+            b_max = 4
+        "#;
+        let c = ExperimentCfg::from_toml(text).unwrap();
+        assert_eq!(c.horizon_s, 60);
+        assert_eq!(c.policy, Policy::Fa2);
+        assert_eq!(c.seed, 7);
+        assert_eq!(c.rate_rps, 50.5);
+        assert_eq!(c.slo_ms, 800.0);
+        assert_eq!(c.model, "resnet");
+        assert_eq!(c.c_max, 8);
+        assert_eq!(c.b_max, 4);
+    }
+
+    #[test]
+    fn rejects_bad_values() {
+        assert!(ExperimentCfg::from_toml("[workload]\nrate_rps = -2").is_err());
+        assert!(ExperimentCfg::from_toml("[experiment]\npolicy = \"zeus\"").is_err());
+        assert!(ExperimentCfg::from_toml("[solver]\nc_max = 0").is_err());
+    }
+
+    #[test]
+    fn policy_roundtrip() {
+        for p in Policy::all() {
+            assert_eq!(Policy::parse(p.name()).unwrap(), p);
+        }
+    }
+
+    #[test]
+    fn latency_model_lookup() {
+        let mut c = ExperimentCfg::default();
+        for m in ["resnet", "yolov5n", "yolov5s"] {
+            c.model = m.into();
+            assert!(c.latency_model().is_ok());
+        }
+        c.model = "gpt5".into();
+        assert!(c.latency_model().is_err());
+    }
+}

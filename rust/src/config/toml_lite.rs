@@ -1,0 +1,163 @@
+//! TOML-subset parser: `[section]` headers, `key = value` pairs, `#`
+//! comments. Values are returned as strings with quotes stripped; typed
+//! parsing happens at the config layer where the expected type is known.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Parsed document: section → key → raw value.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TomlDoc {
+    sections: BTreeMap<String, BTreeMap<String, String>>,
+}
+
+impl TomlDoc {
+    /// Look up `key` in `section` ("" = top level). Quotes are stripped.
+    pub fn get(&self, section: &str, key: &str) -> Option<String> {
+        self.sections.get(section)?.get(key).cloned()
+    }
+
+    pub fn sections(&self) -> impl Iterator<Item = &String> {
+        self.sections.keys()
+    }
+
+    pub fn keys(&self, section: &str) -> Vec<String> {
+        self.sections
+            .get(section)
+            .map(|m| m.keys().cloned().collect())
+            .unwrap_or_default()
+    }
+}
+
+/// Parse error with line number.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TomlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for TomlError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "config line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for TomlError {}
+
+/// Parse a TOML-subset document.
+pub fn parse_toml(text: &str) -> Result<TomlDoc, TomlError> {
+    let mut doc = TomlDoc::default();
+    let mut section = String::new();
+    doc.sections.entry(section.clone()).or_default();
+    for (i, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(inner) = line.strip_prefix('[') {
+            let name = inner
+                .strip_suffix(']')
+                .ok_or_else(|| TomlError { line: i + 1, msg: "unterminated section header".into() })?
+                .trim();
+            if name.is_empty() {
+                return Err(TomlError { line: i + 1, msg: "empty section name".into() });
+            }
+            section = name.to_string();
+            doc.sections.entry(section.clone()).or_default();
+            continue;
+        }
+        let (key, value) = line.split_once('=').ok_or_else(|| TomlError {
+            line: i + 1,
+            msg: format!("expected 'key = value', got '{line}'"),
+        })?;
+        let key = key.trim();
+        if key.is_empty() {
+            return Err(TomlError { line: i + 1, msg: "empty key".into() });
+        }
+        let value = unquote(value.trim());
+        let prev = doc
+            .sections
+            .get_mut(&section)
+            .unwrap()
+            .insert(key.to_string(), value);
+        if prev.is_some() {
+            return Err(TomlError {
+                line: i + 1,
+                msg: format!("duplicate key '{key}' in section '[{section}]'"),
+            });
+        }
+    }
+    Ok(doc)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' inside quotes is preserved.
+    let mut in_str = false;
+    for (idx, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..idx],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn unquote(v: &str) -> String {
+    if v.len() >= 2 && v.starts_with('"') && v.ends_with('"') {
+        v[1..v.len() - 1].to_string()
+    } else {
+        v.to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_pairs() {
+        let doc = parse_toml(
+            "top = 1\n[alpha]\nx = 2\nname = \"hi there\"\n[beta]\ny = 3.5\n",
+        )
+        .unwrap();
+        assert_eq!(doc.get("", "top").as_deref(), Some("1"));
+        assert_eq!(doc.get("alpha", "x").as_deref(), Some("2"));
+        assert_eq!(doc.get("alpha", "name").as_deref(), Some("hi there"));
+        assert_eq!(doc.get("beta", "y").as_deref(), Some("3.5"));
+        assert_eq!(doc.get("beta", "x"), None);
+    }
+
+    #[test]
+    fn comments_and_blanks_skipped() {
+        let doc = parse_toml("# header\n\n[a]\nk = 5 # trailing\n").unwrap();
+        assert_eq!(doc.get("a", "k").as_deref(), Some("5"));
+    }
+
+    #[test]
+    fn hash_inside_quotes_preserved() {
+        let doc = parse_toml("[a]\nk = \"v#1\"\n").unwrap();
+        assert_eq!(doc.get("a", "k").as_deref(), Some("v#1"));
+    }
+
+    #[test]
+    fn errors_have_line_numbers() {
+        let err = parse_toml("[a]\nbroken line\n").unwrap_err();
+        assert_eq!(err.line, 2);
+        let err = parse_toml("[never-closed\n").unwrap_err();
+        assert_eq!(err.line, 1);
+    }
+
+    #[test]
+    fn duplicate_keys_rejected() {
+        let err = parse_toml("[a]\nk = 1\nk = 2\n").unwrap_err();
+        assert!(err.msg.contains("duplicate"));
+    }
+
+    #[test]
+    fn keys_listing() {
+        let doc = parse_toml("[s]\nb = 1\na = 2\n").unwrap();
+        assert_eq!(doc.keys("s"), vec!["a", "b"]);
+        assert!(doc.keys("missing").is_empty());
+    }
+}

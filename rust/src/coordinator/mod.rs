@@ -1,0 +1,595 @@
+//! Live serving coordinator: the paper's Fig. 2 pipeline on real threads.
+//!
+//! ```text
+//! ingest → EDF queue → batcher → processor (PJRT engine) → responses
+//!              ↑            ↑
+//!          scaler loop (solver, every adaptation interval)
+//! ```
+//!
+//! Built on std threads + channels (no tokio offline): one processor
+//! thread owns the inference engine; a scaler thread runs the IP solver
+//! each adaptation interval and publishes `(cores, batch)` atomically; the
+//! monitoring registry is shared. Python never runs here — the engine
+//! executes the AOT artifacts.
+
+use std::collections::BinaryHeap;
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+
+use crate::monitoring::MetricRegistry;
+use crate::perfmodel::{LatencyModel, OnlineCalibrator};
+use crate::solver::{IncrementalSolver, IpSolver, SolverInput, SolverLimits};
+use crate::{BatchSize, Cores, Ms};
+
+/// Batch executor abstraction for the live path. [`crate::runtime::PjrtProxy`]
+/// implements it (the engine itself is !Send); tests use [`MockExecutor`].
+pub trait BatchExecutor: Send + Sync {
+    /// Floats per image.
+    fn image_len(&self) -> usize;
+    fn num_classes(&self) -> usize;
+    /// Run `n` images (flat f32), return `n * num_classes` logits.
+    fn infer(&self, images: &[f32], n: usize) -> Result<Vec<f32>>;
+    fn supported_batches(&self) -> Vec<BatchSize>;
+}
+
+impl BatchExecutor for crate::runtime::PjrtProxy {
+    fn image_len(&self) -> usize {
+        crate::runtime::PjrtProxy::image_len(self)
+    }
+
+    fn num_classes(&self) -> usize {
+        crate::runtime::PjrtProxy::num_classes(self)
+    }
+
+    fn infer(&self, images: &[f32], n: usize) -> Result<Vec<f32>> {
+        crate::runtime::PjrtProxy::infer(self, images, n)
+    }
+
+    fn supported_batches(&self) -> Vec<BatchSize> {
+        crate::runtime::PjrtProxy::supported_batches(self)
+    }
+}
+
+/// Deterministic test double: sleeps `per_item_ms * n + base_ms`, returns
+/// zero logits.
+pub struct MockExecutor {
+    pub image_len: usize,
+    pub num_classes: usize,
+    pub base_ms: f64,
+    pub per_item_ms: f64,
+}
+
+impl Default for MockExecutor {
+    fn default() -> Self {
+        MockExecutor { image_len: 4, num_classes: 2, base_ms: 1.0, per_item_ms: 0.5 }
+    }
+}
+
+impl BatchExecutor for MockExecutor {
+    fn image_len(&self) -> usize {
+        self.image_len
+    }
+
+    fn num_classes(&self) -> usize {
+        self.num_classes
+    }
+
+    fn infer(&self, images: &[f32], n: usize) -> Result<Vec<f32>> {
+        anyhow::ensure!(images.len() == n * self.image_len, "bad input length");
+        std::thread::sleep(Duration::from_secs_f64(
+            (self.base_ms + self.per_item_ms * n as f64) / 1_000.0,
+        ));
+        Ok(vec![0.0; n * self.num_classes])
+    }
+
+    fn supported_batches(&self) -> Vec<BatchSize> {
+        vec![1, 2, 4, 8, 16]
+    }
+}
+
+/// A live inference request.
+pub struct LiveRequest {
+    pub id: u64,
+    /// Flat NHWC f32 image.
+    pub image: Vec<f32>,
+    /// End-to-end SLO and the communication latency already consumed.
+    pub slo_ms: Ms,
+    pub comm_latency_ms: Ms,
+    /// Where to deliver the result.
+    pub reply: std::sync::mpsc::Sender<LiveResponse>,
+}
+
+/// Result delivered to the client.
+#[derive(Debug, Clone)]
+pub struct LiveResponse {
+    pub id: u64,
+    pub logits: Vec<f32>,
+    pub queue_ms: Ms,
+    pub processing_ms: Ms,
+    /// Server-side latency (queue + processing).
+    pub server_ms: Ms,
+    /// Whether the end-to-end budget (slo − comm) was met.
+    pub violated: bool,
+    /// True when the request was dropped (deadline passed in queue).
+    pub dropped: bool,
+}
+
+struct QueuedReq {
+    req: LiveRequest,
+    enqueued_at: Instant,
+    deadline: Instant,
+}
+
+impl PartialEq for QueuedReq {
+    fn eq(&self, other: &Self) -> bool {
+        self.req.id == other.req.id
+    }
+}
+
+impl Eq for QueuedReq {}
+
+impl PartialOrd for QueuedReq {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for QueuedReq {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        // min-heap on deadline via reversed compare (EDF).
+        other
+            .deadline
+            .cmp(&self.deadline)
+            .then_with(|| other.req.id.cmp(&self.req.id))
+    }
+}
+
+/// Coordinator configuration.
+#[derive(Debug, Clone)]
+pub struct CoordinatorCfg {
+    pub limits: SolverLimits,
+    pub adaptation_interval_ms: Ms,
+    /// Latency model the scaler starts from (offline profile); the online
+    /// calibrator refines it from live batch latencies (paper §3.1: the
+    /// monitor tracks "the accuracy of the performance model").
+    pub model: LatencyModel,
+    /// Drop requests whose deadline passed while queued.
+    pub drop_expired: bool,
+    /// Enable online model recalibration from observed batch latencies.
+    pub online_calibration: bool,
+}
+
+impl Default for CoordinatorCfg {
+    fn default() -> Self {
+        CoordinatorCfg {
+            limits: SolverLimits::default(),
+            adaptation_interval_ms: 1_000.0,
+            model: LatencyModel::resnet_human_detector(),
+            drop_expired: true,
+            online_calibration: true,
+        }
+    }
+}
+
+struct Shared {
+    queue: Mutex<BinaryHeap<QueuedReq>>,
+    notify: Condvar,
+    running: AtomicBool,
+    batch: AtomicU32,
+    cores: AtomicU32,
+    next_id: AtomicU64,
+    arrivals_window: Mutex<Vec<Instant>>,
+    calibrator: Mutex<OnlineCalibrator>,
+    calibrate: bool,
+}
+
+/// The live serving coordinator. Spawns processor + scaler threads on
+/// [`Coordinator::start`]; submit requests with [`Coordinator::submit`].
+pub struct Coordinator {
+    cfg: CoordinatorCfg,
+    shared: Arc<Shared>,
+    pub metrics: Arc<MetricRegistry>,
+    threads: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Coordinator {
+    pub fn start(cfg: CoordinatorCfg, executor: Arc<dyn BatchExecutor>) -> Coordinator {
+        let shared = Arc::new(Shared {
+            queue: Mutex::new(BinaryHeap::new()),
+            notify: Condvar::new(),
+            running: AtomicBool::new(true),
+            batch: AtomicU32::new(1),
+            cores: AtomicU32::new(1),
+            next_id: AtomicU64::new(0),
+            arrivals_window: Mutex::new(Vec::new()),
+            calibrator: Mutex::new(OnlineCalibrator::new(cfg.model)),
+            calibrate: cfg.online_calibration,
+        });
+        let metrics = Arc::new(MetricRegistry::new());
+
+        let mut threads = Vec::new();
+        // Processor thread: owns the executor, drains EDF batches.
+        {
+            let shared = Arc::clone(&shared);
+            let metrics = Arc::clone(&metrics);
+            let drop_expired = cfg.drop_expired;
+            threads.push(std::thread::spawn(move || {
+                processor_loop(shared, metrics, executor, drop_expired)
+            }));
+        }
+        // Scaler thread: solver every adaptation interval.
+        {
+            let shared = Arc::clone(&shared);
+            let metrics = Arc::clone(&metrics);
+            let cfg = cfg.clone();
+            threads.push(std::thread::spawn(move || scaler_loop(shared, metrics, cfg)));
+        }
+        Coordinator { cfg, shared, metrics, threads }
+    }
+
+    /// Enqueue a request. The response arrives on `req.reply`.
+    pub fn submit(&self, mut req: LiveRequest) -> u64 {
+        let id = self.shared.next_id.fetch_add(1, Ordering::Relaxed);
+        req.id = id;
+        let now = Instant::now();
+        let remaining = (req.slo_ms - req.comm_latency_ms).max(0.0);
+        let deadline = now + Duration::from_secs_f64(remaining / 1_000.0);
+        self.metrics.counter_add("sponge_requests_total", "requests received", 1.0);
+        self.shared.arrivals_window.lock().unwrap().push(now);
+        {
+            let mut q = self.shared.queue.lock().unwrap();
+            q.push(QueuedReq { req, enqueued_at: now, deadline });
+        }
+        self.shared.notify.notify_all();
+        id
+    }
+
+    /// Current published decision (cores, batch).
+    pub fn decision(&self) -> (Cores, BatchSize) {
+        (
+            self.shared.cores.load(Ordering::Relaxed),
+            self.shared.batch.load(Ordering::Relaxed),
+        )
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.shared.queue.lock().unwrap().len()
+    }
+
+    /// Number of online performance-model refits so far.
+    pub fn model_refits(&self) -> u64 {
+        self.shared.calibrator.lock().unwrap().refits()
+    }
+
+    /// The model the scaler is currently planning with.
+    pub fn current_model(&self) -> LatencyModel {
+        *self.shared.calibrator.lock().unwrap().model()
+    }
+
+    /// Stop threads and join. Queued requests get dropped responses.
+    pub fn shutdown(mut self) {
+        self.shared.running.store(false, Ordering::SeqCst);
+        self.shared.notify.notify_all();
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+        // Flush the queue with dropped responses.
+        let mut q = self.shared.queue.lock().unwrap();
+        while let Some(item) = q.pop() {
+            let _ = item.req.reply.send(LiveResponse {
+                id: item.req.id,
+                logits: Vec::new(),
+                queue_ms: item.enqueued_at.elapsed().as_secs_f64() * 1e3,
+                processing_ms: 0.0,
+                server_ms: item.enqueued_at.elapsed().as_secs_f64() * 1e3,
+                violated: true,
+                dropped: true,
+            });
+        }
+    }
+
+    pub fn cfg(&self) -> &CoordinatorCfg {
+        &self.cfg
+    }
+}
+
+fn processor_loop(
+    shared: Arc<Shared>,
+    metrics: Arc<MetricRegistry>,
+    executor: Arc<dyn BatchExecutor>,
+    drop_expired: bool,
+) {
+    let image_len = executor.image_len();
+    let classes = executor.num_classes();
+    while shared.running.load(Ordering::SeqCst) {
+        // Collect a batch under the lock.
+        let batch: Vec<QueuedReq> = {
+            let mut q = shared.queue.lock().unwrap();
+            while q.is_empty() && shared.running.load(Ordering::SeqCst) {
+                let (guard, _) = shared
+                    .notify
+                    .wait_timeout(q, Duration::from_millis(50))
+                    .unwrap();
+                q = guard;
+            }
+            if !shared.running.load(Ordering::SeqCst) {
+                return;
+            }
+            let bsize = shared.batch.load(Ordering::Relaxed).max(1) as usize;
+            let mut items = Vec::with_capacity(bsize);
+            while items.len() < bsize {
+                match q.pop() {
+                    Some(item) => items.push(item),
+                    None => break,
+                }
+            }
+            items
+        };
+        if batch.is_empty() {
+            continue;
+        }
+        let now = Instant::now();
+        // Expired requests are answered as drops without spending compute.
+        let (live, expired): (Vec<_>, Vec<_>) = if drop_expired {
+            batch.into_iter().partition(|i| i.deadline > now)
+        } else {
+            (batch, Vec::new())
+        };
+        for item in expired {
+            metrics.counter_add("sponge_dropped_total", "requests dropped expired", 1.0);
+            let waited = item.enqueued_at.elapsed().as_secs_f64() * 1e3;
+            let _ = item.req.reply.send(LiveResponse {
+                id: item.req.id,
+                logits: Vec::new(),
+                queue_ms: waited,
+                processing_ms: 0.0,
+                server_ms: waited,
+                violated: true,
+                dropped: true,
+            });
+        }
+        if live.is_empty() {
+            continue;
+        }
+        let n = live.len();
+        let mut input = Vec::with_capacity(n * image_len);
+        for item in &live {
+            debug_assert_eq!(item.req.image.len(), image_len);
+            input.extend_from_slice(&item.req.image);
+        }
+        let t0 = Instant::now();
+        let logits = executor.infer(&input, n);
+        let processing_ms = t0.elapsed().as_secs_f64() * 1e3;
+        metrics.histogram_observe(
+            "sponge_processing_ms",
+            "batch processing latency",
+            processing_ms,
+        );
+        metrics.counter_add("sponge_batches_total", "batches processed", 1.0);
+        // Feed the online calibrator with the real (b, c, latency) sample.
+        if shared.calibrate && logits.is_ok() {
+            let cores = shared.cores.load(Ordering::Relaxed).max(1);
+            let refit = shared
+                .calibrator
+                .lock()
+                .unwrap()
+                .observe(n as BatchSize, cores, processing_ms.max(1e-3));
+            if refit {
+                metrics.counter_add(
+                    "sponge_model_refits_total",
+                    "online perf-model refits",
+                    1.0,
+                );
+            }
+        }
+        for (i, item) in live.into_iter().enumerate() {
+            let queue_ms =
+                (t0 - item.enqueued_at).as_secs_f64() * 1e3;
+            let server_ms = queue_ms + processing_ms;
+            let violated = Instant::now() > item.deadline;
+            metrics.histogram_observe("sponge_server_ms", "server-side latency", server_ms);
+            if violated {
+                metrics.counter_add("sponge_violations_total", "SLO violations", 1.0);
+            }
+            let row = match &logits {
+                Ok(all) => all[i * classes..(i + 1) * classes].to_vec(),
+                Err(_) => Vec::new(),
+            };
+            let _ = item.req.reply.send(LiveResponse {
+                id: item.req.id,
+                logits: row,
+                queue_ms,
+                processing_ms,
+                server_ms,
+                violated,
+                dropped: false,
+            });
+        }
+    }
+}
+
+fn scaler_loop(shared: Arc<Shared>, metrics: Arc<MetricRegistry>, cfg: CoordinatorCfg) {
+    let solver = IncrementalSolver;
+    let interval = Duration::from_secs_f64(cfg.adaptation_interval_ms / 1_000.0);
+    while shared.running.load(Ordering::SeqCst) {
+        // Sleep the adaptation interval in small chunks so shutdown stays
+        // responsive.
+        let mut slept = Duration::ZERO;
+        while slept < interval && shared.running.load(Ordering::SeqCst) {
+            let chunk = Duration::from_millis(20).min(interval - slept);
+            std::thread::sleep(chunk);
+            slept += chunk;
+        }
+        if !shared.running.load(Ordering::SeqCst) {
+            break;
+        }
+        // λ̂ over the trailing 5 s.
+        let lambda = {
+            let mut w = shared.arrivals_window.lock().unwrap();
+            let cutoff = Instant::now() - Duration::from_secs(5);
+            w.retain(|t| *t >= cutoff);
+            w.len() as f64 / 5.0
+        };
+        // EDF budgets snapshot.
+        let budgets: Vec<Ms> = {
+            let q = shared.queue.lock().unwrap();
+            let now = Instant::now();
+            let mut b: Vec<Ms> = q
+                .iter()
+                .map(|i| {
+                    i.deadline
+                        .checked_duration_since(now)
+                        .map_or(0.0, |d| d.as_secs_f64() * 1e3)
+                })
+                .collect();
+            b.sort_by(f64::total_cmp);
+            b
+        };
+        let input = SolverInput::per_request(budgets, lambda);
+        // Plan with the online-calibrated model (falls back to the static
+        // offline profile when calibration is disabled).
+        let model = *shared.calibrator.lock().unwrap().model();
+        let (cores, batch) = match solver.solve(&model, &input, cfg.limits) {
+            Some(sol) => (sol.cores, sol.batch),
+            None => (cfg.limits.c_max, 1),
+        };
+        shared.cores.store(cores, Ordering::Relaxed);
+        shared.batch.store(batch, Ordering::Relaxed);
+        metrics.gauge_set("sponge_cores", "allocated cores (decision)", cores as f64);
+        metrics.gauge_set("sponge_batch", "batch size (decision)", batch as f64);
+        metrics.gauge_set("sponge_lambda_rps", "estimated arrival rate", lambda);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+
+    fn submit_one(c: &Coordinator, slo_ms: f64) -> mpsc::Receiver<LiveResponse> {
+        let (tx, rx) = mpsc::channel();
+        c.submit(LiveRequest {
+            id: 0,
+            image: vec![0.0; 4],
+            slo_ms,
+            comm_latency_ms: 0.0,
+            reply: tx,
+        });
+        rx
+    }
+
+    #[test]
+    fn serves_single_request() {
+        let c = Coordinator::start(
+            CoordinatorCfg::default(),
+            Arc::new(MockExecutor::default()),
+        );
+        let rx = submit_one(&c, 1_000.0);
+        let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert!(!resp.dropped);
+        assert!(!resp.violated, "{resp:?}");
+        assert_eq!(resp.logits.len(), 2);
+        c.shutdown();
+    }
+
+    #[test]
+    fn serves_many_requests_in_batches() {
+        let c = Coordinator::start(
+            CoordinatorCfg::default(),
+            Arc::new(MockExecutor::default()),
+        );
+        let rxs: Vec<_> = (0..32).map(|_| submit_one(&c, 2_000.0)).collect();
+        for rx in rxs {
+            let resp = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+            assert!(!resp.dropped);
+        }
+        c.shutdown();
+    }
+
+    #[test]
+    fn drops_already_expired_requests() {
+        let c = Coordinator::start(
+            CoordinatorCfg::default(),
+            Arc::new(MockExecutor { base_ms: 20.0, ..Default::default() }),
+        );
+        // comm latency already exceeds the SLO: remaining budget 0.
+        let (tx, rx) = mpsc::channel();
+        c.submit(LiveRequest {
+            id: 0,
+            image: vec![0.0; 4],
+            slo_ms: 100.0,
+            comm_latency_ms: 500.0,
+            reply: tx,
+        });
+        let resp = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert!(resp.dropped, "{resp:?}");
+        c.shutdown();
+    }
+
+    #[test]
+    fn shutdown_flushes_queue() {
+        let c = Coordinator::start(
+            // Huge mock latency so requests stay queued.
+            CoordinatorCfg::default(),
+            Arc::new(MockExecutor { base_ms: 2_000.0, ..Default::default() }),
+        );
+        let rxs: Vec<_> = (0..8).map(|_| submit_one(&c, 10_000.0)).collect();
+        std::thread::sleep(Duration::from_millis(50));
+        c.shutdown();
+        let mut got = 0;
+        for rx in rxs {
+            if rx.recv_timeout(Duration::from_secs(5)).is_ok() {
+                got += 1;
+            }
+        }
+        assert_eq!(got, 8, "all requests must receive a response");
+    }
+
+    #[test]
+    fn online_calibration_corrects_bad_profile() {
+        // Start the scaler with a wildly wrong offline model; the mock
+        // executor's real behaviour (1 + 0.5n ms) must be learned online.
+        let cfg = CoordinatorCfg {
+            model: LatencyModel::new(400.0, 100.0, 40.0, 20.0), // ~100x off
+            adaptation_interval_ms: 100.0,
+            ..Default::default()
+        };
+        let c = Coordinator::start(cfg, Arc::new(MockExecutor::default()));
+        // Drive enough traffic at varying batch sizes for grid diversity.
+        for round in 0..40 {
+            let rxs: Vec<_> = (0..(round % 5 + 1))
+                .map(|_| submit_one(&c, 10_000.0))
+                .collect();
+            for rx in rxs {
+                let _ = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+            }
+        }
+        assert!(c.model_refits() >= 1, "never refit");
+        let m = c.current_model();
+        // Learned model predicts the mock's ~3 ms batch-4 latency, not
+        // the bogus profile's ~600 ms.
+        assert!(
+            m.latency_ms(4, 1) < 50.0,
+            "model still wrong: l(4,1) = {}",
+            m.latency_ms(4, 1)
+        );
+        c.shutdown();
+    }
+
+    #[test]
+    fn metrics_flow() {
+        let c = Coordinator::start(
+            CoordinatorCfg::default(),
+            Arc::new(MockExecutor::default()),
+        );
+        let rx = submit_one(&c, 1_000.0);
+        rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        let text = c.metrics.expose();
+        assert!(text.contains("sponge_requests_total 1"));
+        assert!(text.contains("sponge_batches_total"));
+        c.shutdown();
+    }
+}

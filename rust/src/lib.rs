@@ -1,0 +1,57 @@
+//! # Sponge — inference serving with dynamic SLOs via in-place vertical scaling
+//!
+//! A from-scratch reproduction of *Sponge: Inference Serving with Dynamic
+//! SLOs Using In-Place Vertical Scaling* (Razavi et al., EuroMLSys '24) as a
+//! three-layer Rust + JAX + Pallas stack. This crate is Layer 3: the serving
+//! coordinator carrying the paper's contribution — EDF request reordering,
+//! dynamic batching, and an Integer-Programming scaler that resizes the model
+//! instance's CPU allocation in place — plus every substrate the paper's
+//! evaluation depends on (4G network model, workload generators, performance
+//! model fitting, cluster with cold-start semantics, baseline autoscalers,
+//! a discrete-event simulator, metrics, and a PJRT runtime executing the
+//! AOT-compiled JAX/Pallas model with Python never on the request path).
+//!
+//! ## Layout
+//!
+//! * [`util`] — hand-rolled substrates (PRNG, stats, JSON, CLI, prop-tests)
+//! * [`config`] — typed configuration + TOML-subset parser
+//! * [`network`] — 4G/LTE bandwidth traces and communication latency
+//! * [`workload`] — request types and arrival-process generators
+//! * [`perfmodel`] — the paper's Eq. 1/2 latency model + robust fitting
+//! * [`profiler`] — (b, c) profiling sweeps feeding the fit
+//! * [`queue`] — EDF queue and dynamic batcher
+//! * [`solver`] — Algorithm 1 (brute force) + optimized incremental solver
+//! * [`scaler`] — Sponge scaler and the FA2 / static / VPA baselines
+//! * [`cluster`] — instances with in-place resize vs. cold-start scale-out
+//! * [`monitoring`] — metrics registry, SLO tracking, Prometheus exposition
+//! * [`sim`] — discrete-event serving simulator (virtual time)
+//! * [`runtime`] — PJRT engine executing `artifacts/*.hlo.txt`
+//! * [`coordinator`] — live serving pipeline (threads + channels)
+//! * [`server`] — minimal HTTP/1.0 ingest + metrics endpoint
+
+pub mod cluster;
+pub mod config;
+pub mod coordinator;
+pub mod monitoring;
+pub mod network;
+pub mod perfmodel;
+pub mod profiler;
+pub mod queue;
+pub mod runtime;
+pub mod scaler;
+pub mod server;
+pub mod sim;
+pub mod solver;
+pub mod util;
+pub mod workload;
+
+/// Milliseconds as f64 — the universal time unit of the serving layer
+/// (matches the paper's tables; virtual time in the simulator, wall time in
+/// the live coordinator).
+pub type Ms = f64;
+
+/// Integer core count (the paper's `c`).
+pub type Cores = u32;
+
+/// Integer batch size (the paper's `b`).
+pub type BatchSize = u32;

@@ -1,0 +1,243 @@
+//! `sponge` CLI — the Layer-3 leader entrypoint.
+//!
+//! Subcommands:
+//! * `serve`     — start the live coordinator + HTTP server on the AOT
+//!   artifacts (real PJRT inference; Python not involved).
+//! * `simulate`  — run a Fig. 4-style experiment in the discrete-event
+//!   simulator and print the result summary.
+//! * `profile`   — run a (batch, cores) profiling sweep on the sim or
+//!   PJRT engine and print profile points as CSV.
+//! * `fit`       — fit the Eq. 2 model on a profile CSV.
+//! * `solve`     — one-shot solver invocation (debugging aid).
+//! * `trace-gen` — emit a synthetic 4G bandwidth trace as CSV.
+
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use sponge::config::{ExperimentCfg, Policy};
+use sponge::coordinator::{Coordinator, CoordinatorCfg};
+use sponge::network::{BandwidthTrace, NetworkModel};
+use sponge::perfmodel::{fit_ransac, LatencyModel, ProfilePoint, RansacCfg};
+use sponge::profiler::{profile, ProfileCfg, ProfileStat};
+use sponge::runtime::{PjrtEngine, SimEngine};
+use sponge::sim;
+use sponge::solver::{BruteForceSolver, IpSolver, SolverInput, SolverLimits};
+use sponge::util::cli::Args;
+
+const USAGE: &str = "\
+sponge — inference serving with dynamic SLOs (EuroMLSys'24 reproduction)
+
+USAGE: sponge <COMMAND> [OPTIONS]
+
+COMMANDS:
+  serve      --artifacts DIR --variant NAME --bind ADDR   live serving
+  simulate   --policy P --horizon-s N --rate RPS --seed S  run experiment
+  profile    --engine sim|pjrt --artifacts DIR --variant V  profiling sweep
+  fit        --input profile.csv                            fit Eq. 2 model
+  solve      --budget MS --n N --lambda RPS                 one-shot solve
+  trace-gen  --seconds N --seed S                           synthetic 4G CSV
+  workload-gen --rate RPS --horizon-s N --seed S            request-trace CSV
+";
+
+fn main() {
+    env_logger_lite();
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn env_logger_lite() {
+    // `log` facade consumer: print warnings+ to stderr.
+    struct L;
+    impl log::Log for L {
+        fn enabled(&self, m: &log::Metadata) -> bool {
+            m.level() <= log::Level::Info
+        }
+        fn log(&self, r: &log::Record) {
+            if self.enabled(r.metadata()) {
+                eprintln!("[{}] {}", r.level(), r.args());
+            }
+        }
+        fn flush(&self) {}
+    }
+    let _ = log::set_logger(&L);
+    log::set_max_level(log::LevelFilter::Info);
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env(&["verbose", "paper-verbatim"], true)
+        .map_err(|e| anyhow::anyhow!("{e}\n{USAGE}"))?;
+    match args.command.as_deref() {
+        Some("serve") => cmd_serve(&args),
+        Some("simulate") => cmd_simulate(&args),
+        Some("profile") => cmd_profile(&args),
+        Some("fit") => cmd_fit(&args),
+        Some("solve") => cmd_solve(&args),
+        Some("trace-gen") => cmd_trace_gen(&args),
+        Some("workload-gen") => cmd_workload_gen(&args),
+        _ => {
+            print!("{USAGE}");
+            Ok(())
+        }
+    }
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let dir = args.str_or("artifacts", "artifacts");
+    let variant = args.str_or("variant", "resnet18lite");
+    let bind = args.str_or("bind", "127.0.0.1:8080");
+    let engine = sponge::runtime::PjrtProxy::spawn(&dir, &variant)?;
+    println!(
+        "loaded {variant} on {} ({} batch executables)",
+        engine.platform(),
+        engine.supported_batches().len()
+    );
+    let coordinator = Arc::new(Coordinator::start(
+        CoordinatorCfg::default(),
+        Arc::new(engine),
+    ));
+    let handle = sponge::server::serve(&bind, Arc::clone(&coordinator))?;
+    println!("serving on http://{}  (POST /infer, GET /metrics)", handle.addr());
+    // Run until killed.
+    loop {
+        std::thread::sleep(std::time::Duration::from_secs(3600));
+    }
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let mut cfg = if let Some(path) = args.get("config") {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {path}"))?;
+        ExperimentCfg::from_toml(&text).map_err(|e| anyhow::anyhow!(e))?
+    } else {
+        ExperimentCfg::default()
+    };
+    if let Some(p) = args.get("policy") {
+        cfg.policy = Policy::parse(p).map_err(|e| anyhow::anyhow!(e))?;
+    }
+    cfg.horizon_s = args.u64_or("horizon-s", cfg.horizon_s as u64)? as usize;
+    cfg.rate_rps = args.f64_or("rate", cfg.rate_rps)?;
+    cfg.seed = args.u64_or("seed", cfg.seed)?;
+    cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
+
+    let sim_cfg = cfg.sim_config().map_err(|e| anyhow::anyhow!(e))?;
+    let trace = BandwidthTrace::synthetic_4g(cfg.horizon_s, 1_000.0, cfg.seed ^ 0x7ace);
+    let net = NetworkModel::new(trace);
+    let scaler = cfg.policy.build(cfg.limits());
+    let r = sim::run(&sim_cfg, &net, scaler);
+    println!("policy            : {}", r.policy);
+    println!("requests          : {}", r.generated);
+    println!("violations        : {} ({:.2}%)", r.tracker.violations(), r.tracker.violation_rate_pct());
+    println!("dropped           : {}", r.tracker.dropped());
+    println!("mean cores        : {:.2}", r.mean_cores);
+    println!("core-seconds      : {:.0}", r.core_ms / 1_000.0);
+    println!("mean e2e latency  : {:.1} ms", r.tracker.mean_e2e_ms());
+    println!("mean queue        : {:.1} ms", r.tracker.mean_queue_ms());
+    println!(
+        "scaler decide     : {:.1} µs/call over {} calls",
+        r.scaler_ns_total as f64 / r.scaler_calls.max(1) as f64 / 1_000.0,
+        r.scaler_calls
+    );
+    Ok(())
+}
+
+fn cmd_profile(args: &Args) -> Result<()> {
+    let which = args.str_or("engine", "sim");
+    let cfg = ProfileCfg {
+        reps: args.u32_or("reps", 20)?,
+        stat: ProfileStat::P99,
+        ..Default::default()
+    };
+    let points = match which.as_str() {
+        "sim" => {
+            let mut e = SimEngine::new(LatencyModel::resnet_human_detector(), 0.05, 7);
+            profile(&mut e, &cfg)?
+        }
+        "pjrt" => {
+            let dir = args.str_or("artifacts", "artifacts");
+            let variant = args.str_or("variant", "resnet18lite");
+            let mut e = PjrtEngine::load(&dir, &variant)?;
+            // Physical cores can't vary in-sandbox: profile the batch axis.
+            let cfg = ProfileCfg { cores: vec![1], ..cfg };
+            profile(&mut e, &cfg)?
+        }
+        other => bail!("unknown engine '{other}'"),
+    };
+    println!("batch,cores,latency_ms");
+    for p in points {
+        println!("{},{},{:.4}", p.batch, p.cores, p.latency_ms);
+    }
+    Ok(())
+}
+
+fn cmd_fit(args: &Args) -> Result<()> {
+    let path = args.get("input").context("--input profile.csv required")?;
+    let text = std::fs::read_to_string(path)?;
+    let mut points = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        if i == 0 && line.starts_with("batch") {
+            continue;
+        }
+        let mut f = line.split(',');
+        let (b, c, l) = (
+            f.next().context("batch")?.trim().parse()?,
+            f.next().context("cores")?.trim().parse()?,
+            f.next().context("latency")?.trim().parse()?,
+        );
+        points.push(ProfilePoint { batch: b, cores: c, latency_ms: l });
+    }
+    let m = fit_ransac(&points, RansacCfg::default()).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let (mse, mape) = m.error(&points);
+    println!("l(b,c) = {:.4}*b/c + {:.4}/c + {:.4}*b + {:.4}", m.gamma, m.epsilon, m.delta, m.eta);
+    println!("MSE  = {mse:.4}");
+    println!("MAPE = {mape:.2}%");
+    Ok(())
+}
+
+fn cmd_solve(args: &Args) -> Result<()> {
+    let budget = args.f64_or("budget", 400.0)?;
+    let n = args.u64_or("n", 20)? as usize;
+    let lambda = args.f64_or("lambda", 20.0)?;
+    let model = LatencyModel::resnet_human_detector();
+    let input = SolverInput::per_request(vec![budget; n], lambda);
+    match BruteForceSolver.solve(&model, &input, SolverLimits::default()) {
+        Some(sol) => println!(
+            "c={} b={}  l(b,c)={:.1} ms  h(b,c)={:.1} rps  objective={:.3}",
+            sol.cores,
+            sol.batch,
+            sol.predicted_latency_ms,
+            model.throughput_rps(sol.batch, sol.cores),
+            sol.objective
+        ),
+        None => println!("infeasible within c_max=16, b_max=16"),
+    }
+    Ok(())
+}
+
+fn cmd_trace_gen(args: &Args) -> Result<()> {
+    let seconds = args.u64_or("seconds", 600)? as usize;
+    let seed = args.u64_or("seed", 0x46_4721)?;
+    let trace = BandwidthTrace::synthetic_4g(seconds, 1_000.0, seed);
+    print!("{}", trace.to_csv());
+    Ok(())
+}
+
+fn cmd_workload_gen(args: &Args) -> Result<()> {
+    let horizon_s = args.u64_or("horizon-s", 60)?;
+    let rate = args.f64_or("rate", 20.0)?;
+    let slo = args.f64_or("slo-ms", 1_000.0)?;
+    let seed = args.u64_or("seed", 0xa11ce)?;
+    let gen = sponge::workload::WorkloadGen {
+        rate_rps: rate,
+        slo_ms: slo,
+        seed,
+        ..sponge::workload::WorkloadGen::paper_default()
+    };
+    let trace = BandwidthTrace::synthetic_4g(horizon_s as usize + 1, 1_000.0, seed ^ 0x7ace);
+    let net = NetworkModel::new(trace);
+    let reqs = gen.generate(horizon_s as f64 * 1_000.0, &net);
+    print!("{}", sponge::workload::requests_to_csv(&reqs));
+    Ok(())
+}

@@ -1,0 +1,188 @@
+//! Metric registry with Prometheus text exposition (the paper's monitoring
+//! component uses Prometheus; `GET /metrics` on the live server serves
+//! this format).
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+use crate::util::stats::Histogram;
+
+/// A metric's current value.
+#[derive(Debug, Clone)]
+pub enum MetricValue {
+    Counter(f64),
+    Gauge(f64),
+    Histogram(Histogram),
+}
+
+struct Entry {
+    help: String,
+    value: MetricValue,
+}
+
+/// Thread-safe metric registry keyed by `name{label="v",…}` strings.
+/// BTreeMap keeps exposition deterministic.
+pub struct MetricRegistry {
+    inner: Mutex<BTreeMap<String, Entry>>,
+}
+
+impl Default for MetricRegistry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl MetricRegistry {
+    pub fn new() -> MetricRegistry {
+        MetricRegistry { inner: Mutex::new(BTreeMap::new()) }
+    }
+
+    pub fn counter_add(&self, name: &str, help: &str, delta: f64) {
+        debug_assert!(delta >= 0.0, "counters only go up");
+        let mut m = self.inner.lock().unwrap();
+        let e = m.entry(name.to_string()).or_insert_with(|| Entry {
+            help: help.to_string(),
+            value: MetricValue::Counter(0.0),
+        });
+        if let MetricValue::Counter(v) = &mut e.value {
+            *v += delta;
+        }
+    }
+
+    pub fn gauge_set(&self, name: &str, help: &str, value: f64) {
+        let mut m = self.inner.lock().unwrap();
+        let e = m.entry(name.to_string()).or_insert_with(|| Entry {
+            help: help.to_string(),
+            value: MetricValue::Gauge(0.0),
+        });
+        e.value = MetricValue::Gauge(value);
+    }
+
+    pub fn histogram_observe(&self, name: &str, help: &str, value: f64) {
+        let mut m = self.inner.lock().unwrap();
+        let e = m.entry(name.to_string()).or_insert_with(|| Entry {
+            help: help.to_string(),
+            value: MetricValue::Histogram(Histogram::latency_ms()),
+        });
+        if let MetricValue::Histogram(h) = &mut e.value {
+            h.observe(value);
+        }
+    }
+
+    pub fn get(&self, name: &str) -> Option<MetricValue> {
+        self.inner.lock().unwrap().get(name).map(|e| e.value.clone())
+    }
+
+    /// Prometheus text exposition format (v0.0.4).
+    pub fn expose(&self) -> String {
+        let m = self.inner.lock().unwrap();
+        let mut out = String::new();
+        for (name, entry) in m.iter() {
+            let base = name.split('{').next().unwrap_or(name);
+            match &entry.value {
+                MetricValue::Counter(v) => {
+                    out.push_str(&format!("# HELP {base} {}\n", entry.help));
+                    out.push_str(&format!("# TYPE {base} counter\n"));
+                    out.push_str(&format!("{name} {v}\n"));
+                }
+                MetricValue::Gauge(v) => {
+                    out.push_str(&format!("# HELP {base} {}\n", entry.help));
+                    out.push_str(&format!("# TYPE {base} gauge\n"));
+                    out.push_str(&format!("{name} {v}\n"));
+                }
+                MetricValue::Histogram(h) => {
+                    out.push_str(&format!("# HELP {base} {}\n", entry.help));
+                    out.push_str(&format!("# TYPE {base} histogram\n"));
+                    for (bound, count) in h.cumulative() {
+                        let le = if bound.is_infinite() {
+                            "+Inf".to_string()
+                        } else {
+                            format!("{bound}")
+                        };
+                        out.push_str(&format!("{base}_bucket{{le=\"{le}\"}} {count}\n"));
+                    }
+                    out.push_str(&format!("{base}_sum {}\n", h.sum()));
+                    out.push_str(&format!("{base}_count {}\n", h.count()));
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_accumulates() {
+        let r = MetricRegistry::new();
+        r.counter_add("requests_total", "total requests", 1.0);
+        r.counter_add("requests_total", "total requests", 2.0);
+        match r.get("requests_total") {
+            Some(MetricValue::Counter(v)) => assert_eq!(v, 3.0),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn gauge_overwrites() {
+        let r = MetricRegistry::new();
+        r.gauge_set("cores", "allocated cores", 4.0);
+        r.gauge_set("cores", "allocated cores", 8.0);
+        match r.get("cores") {
+            Some(MetricValue::Gauge(v)) => assert_eq!(v, 8.0),
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn exposition_format() {
+        let r = MetricRegistry::new();
+        r.counter_add("reqs_total", "reqs", 5.0);
+        r.gauge_set("cores{instance=\"0\"}", "cores", 4.0);
+        r.histogram_observe("latency_ms", "latency", 42.0);
+        let text = r.expose();
+        assert!(text.contains("# TYPE reqs_total counter"));
+        assert!(text.contains("reqs_total 5"));
+        assert!(text.contains("cores{instance=\"0\"} 4"));
+        assert!(text.contains("# TYPE latency_ms histogram"));
+        assert!(text.contains("latency_ms_bucket{le=\"50\"} 1"));
+        assert!(text.contains("latency_ms_bucket{le=\"+Inf\"} 1"));
+        assert!(text.contains("latency_ms_count 1"));
+    }
+
+    #[test]
+    fn exposition_is_deterministic() {
+        let r = MetricRegistry::new();
+        r.gauge_set("b_metric", "b", 1.0);
+        r.gauge_set("a_metric", "a", 2.0);
+        let a = r.expose();
+        let b = r.expose();
+        assert_eq!(a, b);
+        assert!(a.find("a_metric").unwrap() < a.find("b_metric").unwrap());
+    }
+
+    #[test]
+    fn threadsafe_updates() {
+        use std::sync::Arc;
+        let r = Arc::new(MetricRegistry::new());
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let r = Arc::clone(&r);
+                std::thread::spawn(move || {
+                    for _ in 0..1000 {
+                        r.counter_add("n", "n", 1.0);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        match r.get("n") {
+            Some(MetricValue::Counter(v)) => assert_eq!(v, 4000.0),
+            other => panic!("{other:?}"),
+        }
+    }
+}

@@ -1,0 +1,213 @@
+//! Monitoring component (paper §3.1): metrics, SLO accounting, workload
+//! estimation, and Prometheus text exposition (the Prometheus stand-in).
+
+mod metrics;
+mod timeseries;
+
+pub use metrics::{MetricRegistry, MetricValue};
+pub use timeseries::{assemble as assemble_series, to_csv as series_to_csv, RingSeries, SeriesPoint};
+
+use crate::util::stats::Welford;
+use crate::Ms;
+
+/// Per-request outcome record.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Outcome {
+    pub request_id: u64,
+    /// End-to-end latency (comm + queue + processing), ms.
+    pub e2e_ms: Ms,
+    pub queue_ms: Ms,
+    pub processing_ms: Ms,
+    pub violated: bool,
+    /// Dropped before processing (counted as a violation in Fig. 4).
+    pub dropped: bool,
+}
+
+/// SLO bookkeeping for an experiment run (drives Fig. 4's violation series
+/// and the headline totals).
+#[derive(Debug, Default, Clone)]
+pub struct SloTracker {
+    completed: u64,
+    violated: u64,
+    dropped: u64,
+    e2e: Welford,
+    queue: Welford,
+    processing: Welford,
+    /// Per-interval violation counts: (interval_start_ms, violations, total).
+    timeline: Vec<(Ms, u64, u64)>,
+    interval_ms: Ms,
+}
+
+impl SloTracker {
+    /// `interval_ms` buckets the timeline (the paper plots per-second).
+    pub fn new(interval_ms: Ms) -> SloTracker {
+        SloTracker { interval_ms, ..Default::default() }
+    }
+
+    pub fn record(&mut self, at_ms: Ms, outcome: &Outcome) {
+        let idx = (at_ms / self.interval_ms) as usize;
+        while self.timeline.len() <= idx {
+            self.timeline
+                .push((self.timeline.len() as f64 * self.interval_ms, 0, 0));
+        }
+        let slot = &mut self.timeline[idx];
+        slot.2 += 1;
+        if outcome.dropped {
+            self.dropped += 1;
+            slot.1 += 1;
+            return;
+        }
+        self.completed += 1;
+        self.e2e.push(outcome.e2e_ms);
+        self.queue.push(outcome.queue_ms);
+        self.processing.push(outcome.processing_ms);
+        if outcome.violated {
+            self.violated += 1;
+            slot.1 += 1;
+        }
+    }
+
+    pub fn completed(&self) -> u64 {
+        self.completed
+    }
+
+    /// Violations including drops (the paper counts both against the SLO).
+    pub fn violations(&self) -> u64 {
+        self.violated + self.dropped
+    }
+
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+
+    pub fn total(&self) -> u64 {
+        self.completed + self.dropped
+    }
+
+    /// Overall violation rate in percent (Fig. 4 headline metric).
+    pub fn violation_rate_pct(&self) -> f64 {
+        if self.total() == 0 {
+            0.0
+        } else {
+            self.violations() as f64 / self.total() as f64 * 100.0
+        }
+    }
+
+    pub fn mean_e2e_ms(&self) -> Ms {
+        self.e2e.mean()
+    }
+
+    pub fn mean_queue_ms(&self) -> Ms {
+        self.queue.mean()
+    }
+
+    pub fn mean_processing_ms(&self) -> Ms {
+        self.processing.mean()
+    }
+
+    /// Per-interval (start_ms, violations, total) series — Fig. 4 top.
+    pub fn timeline(&self) -> &[(Ms, u64, u64)] {
+        &self.timeline
+    }
+}
+
+/// Sliding-window arrival-rate estimator: the monitoring component reports
+/// λ̂ to the scaler every adaptation interval.
+#[derive(Debug, Clone)]
+pub struct RateEstimator {
+    window_ms: Ms,
+    arrivals: std::collections::VecDeque<Ms>,
+}
+
+impl RateEstimator {
+    pub fn new(window_ms: Ms) -> RateEstimator {
+        assert!(window_ms > 0.0);
+        RateEstimator { window_ms, arrivals: Default::default() }
+    }
+
+    pub fn on_arrival(&mut self, at_ms: Ms) {
+        self.arrivals.push_back(at_ms);
+    }
+
+    /// Estimated arrival rate (requests/second) over the trailing window.
+    pub fn rate_rps(&mut self, now: Ms) -> f64 {
+        while let Some(&front) = self.arrivals.front() {
+            if front < now - self.window_ms {
+                self.arrivals.pop_front();
+            } else {
+                break;
+            }
+        }
+        self.arrivals.len() as f64 / (self.window_ms / 1_000.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ok(id: u64) -> Outcome {
+        Outcome {
+            request_id: id,
+            e2e_ms: 500.0,
+            queue_ms: 50.0,
+            processing_ms: 100.0,
+            violated: false,
+            dropped: false,
+        }
+    }
+
+    #[test]
+    fn tracker_counts_and_rate() {
+        let mut t = SloTracker::new(1_000.0);
+        for i in 0..8 {
+            t.record(i as f64 * 100.0, &ok(i));
+        }
+        t.record(850.0, &Outcome { violated: true, ..ok(8) });
+        t.record(900.0, &Outcome { dropped: true, ..ok(9) });
+        assert_eq!(t.completed(), 9);
+        assert_eq!(t.dropped(), 1);
+        assert_eq!(t.violations(), 2);
+        assert_eq!(t.total(), 10);
+        assert!((t.violation_rate_pct() - 20.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tracker_timeline_buckets() {
+        let mut t = SloTracker::new(1_000.0);
+        t.record(100.0, &ok(0));
+        t.record(2_500.0, &Outcome { violated: true, ..ok(1) });
+        let tl = t.timeline();
+        assert_eq!(tl.len(), 3);
+        assert_eq!(tl[0], (0.0, 0, 1));
+        assert_eq!(tl[1], (1_000.0, 0, 0)); // gap interval materialized
+        assert_eq!(tl[2], (2_000.0, 1, 1));
+    }
+
+    #[test]
+    fn tracker_latency_means() {
+        let mut t = SloTracker::new(1_000.0);
+        t.record(0.0, &Outcome { e2e_ms: 100.0, queue_ms: 10.0, processing_ms: 40.0, ..ok(0) });
+        t.record(1.0, &Outcome { e2e_ms: 300.0, queue_ms: 30.0, processing_ms: 60.0, ..ok(1) });
+        assert!((t.mean_e2e_ms() - 200.0).abs() < 1e-9);
+        assert!((t.mean_queue_ms() - 20.0).abs() < 1e-9);
+        assert!((t.mean_processing_ms() - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_tracker_zero_rate() {
+        let t = SloTracker::new(1_000.0);
+        assert_eq!(t.violation_rate_pct(), 0.0);
+    }
+
+    #[test]
+    fn rate_estimator_window() {
+        let mut e = RateEstimator::new(1_000.0);
+        for i in 0..20 {
+            e.on_arrival(i as f64 * 50.0); // 20 arrivals over 1 s
+        }
+        assert!((e.rate_rps(1_000.0) - 20.0).abs() < 1.0);
+        // 2 s later with no arrivals, the window has drained.
+        assert_eq!(e.rate_rps(3_000.0), 0.0);
+    }
+}

@@ -1,0 +1,179 @@
+//! Experiment time-series export: the per-interval series behind Fig. 4
+//! (violations, allocated cores, batch size) as plot-ready CSV, plus a
+//! bounded ring buffer for live dashboards.
+
+use crate::{BatchSize, Cores, Ms};
+
+/// One Fig. 4-style sample row.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SeriesPoint {
+    pub t_ms: Ms,
+    pub violations: u64,
+    pub total: u64,
+    pub cores: Cores,
+    pub batch: BatchSize,
+}
+
+/// Assemble the export rows from the tracker timeline and decision series
+/// (both indexed by adaptation interval; shorter series are padded by
+/// repeating the last decision, matching how the system holds state).
+pub fn assemble(
+    timeline: &[(Ms, u64, u64)],
+    cores_series: &[(Ms, Cores)],
+    batch_series: &[(Ms, BatchSize)],
+) -> Vec<SeriesPoint> {
+    let n = timeline
+        .len()
+        .max(cores_series.len())
+        .max(batch_series.len());
+    let mut out = Vec::with_capacity(n);
+    for i in 0..n {
+        let (t, v, tot) = timeline
+            .get(i)
+            .copied()
+            .unwrap_or_else(|| (i as f64 * 1_000.0, 0, 0));
+        let cores = cores_series
+            .get(i)
+            .or(cores_series.last())
+            .map_or(0, |&(_, c)| c);
+        let batch = batch_series
+            .get(i)
+            .or(batch_series.last())
+            .map_or(1, |&(_, b)| b);
+        out.push(SeriesPoint { t_ms: t, violations: v, total: tot, cores, batch });
+    }
+    out
+}
+
+/// CSV with a header (gnuplot/pandas friendly).
+pub fn to_csv(points: &[SeriesPoint]) -> String {
+    let mut out = String::from("t_s,violations,total,violation_pct,cores,batch\n");
+    for p in points {
+        let pct = if p.total == 0 {
+            0.0
+        } else {
+            p.violations as f64 / p.total as f64 * 100.0
+        };
+        out.push_str(&format!(
+            "{:.0},{},{},{:.2},{},{}\n",
+            p.t_ms / 1_000.0,
+            p.violations,
+            p.total,
+            pct,
+            p.cores,
+            p.batch
+        ));
+    }
+    out
+}
+
+/// Fixed-capacity ring buffer of recent samples (live dashboard feed).
+#[derive(Debug, Clone)]
+pub struct RingSeries {
+    buf: Vec<SeriesPoint>,
+    head: usize,
+    len: usize,
+}
+
+impl RingSeries {
+    pub fn new(capacity: usize) -> RingSeries {
+        assert!(capacity > 0);
+        RingSeries {
+            buf: Vec::with_capacity(capacity),
+            head: 0,
+            len: 0,
+        }
+    }
+
+    pub fn push(&mut self, p: SeriesPoint) {
+        let cap = self.buf.capacity();
+        if self.buf.len() < cap {
+            self.buf.push(p);
+        } else {
+            self.buf[self.head] = p;
+        }
+        self.head = (self.head + 1) % cap;
+        self.len = (self.len + 1).min(cap);
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Samples oldest-first.
+    pub fn iter_ordered(&self) -> Vec<SeriesPoint> {
+        let cap = self.buf.len();
+        if cap == 0 {
+            return Vec::new();
+        }
+        let start = if self.len < cap { 0 } else { self.head };
+        (0..self.len)
+            .map(|i| self.buf[(start + i) % cap])
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pt(t: f64, c: Cores) -> SeriesPoint {
+        SeriesPoint { t_ms: t, violations: 0, total: 1, cores: c, batch: 1 }
+    }
+
+    #[test]
+    fn assemble_aligns_and_pads() {
+        let timeline = vec![(0.0, 1, 20), (1_000.0, 0, 20), (2_000.0, 2, 20)];
+        let cores = vec![(0.0, 4), (1_000.0, 8)];
+        let batch = vec![(0.0, 2)];
+        let rows = assemble(&timeline, &cores, &batch);
+        assert_eq!(rows.len(), 3);
+        assert_eq!(rows[0].cores, 4);
+        assert_eq!(rows[1].cores, 8);
+        assert_eq!(rows[2].cores, 8); // padded with last decision
+        assert_eq!(rows[2].batch, 2);
+        assert_eq!(rows[2].violations, 2);
+    }
+
+    #[test]
+    fn csv_format_and_pct() {
+        let rows = vec![SeriesPoint {
+            t_ms: 5_000.0,
+            violations: 5,
+            total: 20,
+            cores: 12,
+            batch: 4,
+        }];
+        let csv = to_csv(&rows);
+        assert!(csv.starts_with("t_s,violations"));
+        assert!(csv.contains("5,5,20,25.00,12,4"), "{csv}");
+    }
+
+    #[test]
+    fn ring_wraps_and_orders() {
+        let mut r = RingSeries::new(3);
+        for i in 0..5 {
+            r.push(pt(i as f64, i));
+        }
+        assert_eq!(r.len(), 3);
+        let ordered = r.iter_ordered();
+        assert_eq!(
+            ordered.iter().map(|p| p.cores).collect::<Vec<_>>(),
+            vec![2, 3, 4]
+        );
+    }
+
+    #[test]
+    fn ring_partial_fill() {
+        let mut r = RingSeries::new(10);
+        r.push(pt(0.0, 1));
+        r.push(pt(1.0, 2));
+        assert_eq!(r.len(), 2);
+        assert_eq!(r.iter_ordered().len(), 2);
+        assert!(!r.is_empty());
+    }
+}

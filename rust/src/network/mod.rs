@@ -1,0 +1,105 @@
+//! 4G/LTE network substrate (paper §2.1, Fig. 1).
+//!
+//! The paper replays the van der Hooft et al. [34] 4G bandwidth logs —
+//! bandwidth swinging 0.5–7 MB/s within a 10-minute window — and derives
+//! each request's *communication latency* (payload / bandwidth), which eats
+//! into the end-to-end SLO and leaves a dynamic *remaining* budget for the
+//! server. We do not have the original logs in this sandbox, so this module
+//! provides (a) an embedded representative trace with the same range and
+//! variability and (b) a seeded synthetic generator (lognormal level +
+//! regime switching + drop-outs) for arbitrary-length experiments. See
+//! DESIGN.md §3 for the substitution rationale.
+
+mod trace;
+
+pub use trace::{BandwidthTrace, TraceStats};
+
+use crate::Ms;
+
+/// Payload sizes the paper's Fig. 1 (bottom) sweeps.
+pub const PAYLOAD_100KB: f64 = 100_000.0;
+pub const PAYLOAD_200KB: f64 = 200_000.0;
+pub const PAYLOAD_500KB: f64 = 500_000.0;
+
+/// Maps a bandwidth trace + payload size to per-request communication
+/// latency and remaining SLO budget.
+#[derive(Debug, Clone)]
+pub struct NetworkModel {
+    trace: BandwidthTrace,
+    /// Fixed per-request overhead (RTT, radio wake-up) in ms.
+    pub base_rtt_ms: Ms,
+}
+
+impl NetworkModel {
+    pub fn new(trace: BandwidthTrace) -> NetworkModel {
+        NetworkModel { trace, base_rtt_ms: 10.0 }
+    }
+
+    pub fn with_base_rtt(mut self, rtt_ms: Ms) -> NetworkModel {
+        self.base_rtt_ms = rtt_ms;
+        self
+    }
+
+    pub fn trace(&self) -> &BandwidthTrace {
+        &self.trace
+    }
+
+    /// Bandwidth (bytes/s) at absolute time `t_ms`.
+    pub fn bandwidth_at(&self, t_ms: Ms) -> f64 {
+        self.trace.bandwidth_at(t_ms)
+    }
+
+    /// Communication latency (ms) of sending `payload_bytes` at `t_ms`:
+    /// `base_rtt + payload / bandwidth`.
+    pub fn comm_latency_ms(&self, t_ms: Ms, payload_bytes: f64) -> Ms {
+        assert!(payload_bytes >= 0.0);
+        let bw = self.bandwidth_at(t_ms);
+        self.base_rtt_ms + payload_bytes / bw * 1_000.0
+    }
+
+    /// Remaining server-side budget after transmission (Fig. 1 bottom):
+    /// `SLO - comm_latency`, clamped at zero (an already-late request).
+    pub fn remaining_slo_ms(&self, t_ms: Ms, payload_bytes: f64, slo_ms: Ms) -> Ms {
+        (slo_ms - self.comm_latency_ms(t_ms, payload_bytes)).max(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn constant_trace(bw: f64) -> BandwidthTrace {
+        BandwidthTrace::from_samples(1_000.0, vec![bw; 10]).unwrap()
+    }
+
+    #[test]
+    fn comm_latency_formula() {
+        let m = NetworkModel::new(constant_trace(1_000_000.0)); // 1 MB/s
+        // 200 KB at 1 MB/s = 200 ms + 10 ms RTT
+        let got = m.comm_latency_ms(0.0, PAYLOAD_200KB);
+        assert!((got - 210.0).abs() < 1e-9, "{got}");
+    }
+
+    #[test]
+    fn remaining_slo_clamps_at_zero() {
+        let m = NetworkModel::new(constant_trace(100_000.0)); // 0.1 MB/s
+        // 500 KB at 0.1 MB/s = 5000 ms >> 1000 ms SLO
+        assert_eq!(m.remaining_slo_ms(0.0, PAYLOAD_500KB, 1_000.0), 0.0);
+    }
+
+    #[test]
+    fn bigger_payload_less_budget() {
+        let m = NetworkModel::new(constant_trace(2_000_000.0));
+        let slo = 1_000.0;
+        let b100 = m.remaining_slo_ms(0.0, PAYLOAD_100KB, slo);
+        let b200 = m.remaining_slo_ms(0.0, PAYLOAD_200KB, slo);
+        let b500 = m.remaining_slo_ms(0.0, PAYLOAD_500KB, slo);
+        assert!(b100 > b200 && b200 > b500, "{b100} {b200} {b500}");
+    }
+
+    #[test]
+    fn rtt_configurable() {
+        let m = NetworkModel::new(constant_trace(1_000_000.0)).with_base_rtt(0.0);
+        assert!((m.comm_latency_ms(0.0, PAYLOAD_100KB) - 100.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,236 @@
+//! Bandwidth traces: embedded 4G profile, synthetic generator, CSV I/O.
+
+use crate::util::rng::Pcg32;
+use crate::Ms;
+
+/// A bandwidth time series sampled on a fixed interval (the paper's dataset
+/// uses 1-second samples; Sponge's adaptation interval matches it).
+#[derive(Debug, Clone)]
+pub struct BandwidthTrace {
+    interval_ms: Ms,
+    /// Bandwidth samples in bytes/second.
+    samples: Vec<f64>,
+}
+
+/// Descriptive statistics of a trace (for EXPERIMENTS.md and validation).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceStats {
+    pub len: usize,
+    pub duration_ms: Ms,
+    pub min_bps: f64,
+    pub max_bps: f64,
+    pub mean_bps: f64,
+}
+
+impl BandwidthTrace {
+    /// Build from raw samples (bytes/s) on a fixed interval.
+    pub fn from_samples(interval_ms: Ms, samples: Vec<f64>) -> Result<Self, String> {
+        if interval_ms <= 0.0 {
+            return Err(format!("interval must be positive, got {interval_ms}"));
+        }
+        if samples.is_empty() {
+            return Err("empty trace".into());
+        }
+        if let Some(bad) = samples.iter().find(|&&s| !(s > 0.0) || !s.is_finite()) {
+            return Err(format!("non-positive bandwidth sample {bad}"));
+        }
+        Ok(BandwidthTrace { interval_ms, samples })
+    }
+
+    /// The embedded representative 4G trace: 600 s at 1 Hz reproducing the
+    /// character of the van der Hooft logs shown in the paper's Fig. 1 —
+    /// range ~0.5–7 MB/s, multi-second regimes, sharp dips (underpasses /
+    /// handovers) around t = 0 and t = 360 s where the paper reports FA2
+    /// collapsing.
+    pub fn embedded_4g() -> BandwidthTrace {
+        Self::synthetic_4g(600, 1_000.0, 0x46_4721)
+    }
+
+    /// Seeded synthetic 4G generator (see module docs): lognormal level
+    /// around a slow sinusoidal drift, Markov regime switching between
+    /// "good" and "degraded", and occasional deep fades. Output clamped to
+    /// [0.4, 7.2] MB/s to match the dataset's observed range.
+    pub fn synthetic_4g(seconds: usize, interval_ms: Ms, seed: u64) -> BandwidthTrace {
+        assert!(seconds > 0);
+        let mut rng = Pcg32::seeded(seed);
+        let mut samples = Vec::with_capacity(seconds);
+        let mut degraded = false;
+        let mut fade = 0usize; // remaining deep-fade seconds
+        let mut level = 3.8e6; // smoothed level, bytes/s
+        for t in 0..seconds {
+            // Slow drift (user mobility): period ~200 s.
+            let drift = 1.0 + 0.45 * (t as f64 / 200.0 * std::f64::consts::TAU).sin();
+            // Regime switching: ~2 %/s into degraded, ~10 %/s back out.
+            if degraded {
+                if rng.f64() < 0.10 {
+                    degraded = false;
+                }
+            } else if rng.f64() < 0.02 {
+                degraded = true;
+            }
+            // Deep fades: rare, last 2–6 s. Force one at t=0 and one at
+            // t=360 if the trace is long enough (the paper's Fig. 4 calls
+            // these out as FA2's worst moments).
+            if fade == 0 && (rng.f64() < 0.004 || t == 0 || t == 360) {
+                fade = 2 + rng.below(5) as usize;
+            }
+            let regime = if fade > 0 {
+                fade -= 1;
+                0.12
+            } else if degraded {
+                0.45
+            } else {
+                1.0
+            };
+            // Lognormal jitter around the drifting level.
+            let jitter = rng.lognormal(0.0, 0.18);
+            let target = 3.9e6 * drift * regime * jitter;
+            // First-order smoothing: bandwidth has short-term memory
+            // (except the very first sample, which has no history).
+            level = if t == 0 { target } else { 0.55 * level + 0.45 * target };
+            samples.push(level.clamp(0.4e6, 7.2e6));
+        }
+        BandwidthTrace { interval_ms, samples }
+    }
+
+    /// Piecewise-constant lookup; times beyond the end wrap around (so
+    /// short traces can drive long experiments deterministically).
+    pub fn bandwidth_at(&self, t_ms: Ms) -> f64 {
+        assert!(t_ms >= 0.0, "negative time {t_ms}");
+        let idx = (t_ms / self.interval_ms) as usize % self.samples.len();
+        self.samples[idx]
+    }
+
+    pub fn interval_ms(&self) -> Ms {
+        self.interval_ms
+    }
+
+    pub fn samples(&self) -> &[f64] {
+        &self.samples
+    }
+
+    pub fn duration_ms(&self) -> Ms {
+        self.interval_ms * self.samples.len() as f64
+    }
+
+    pub fn stats(&self) -> TraceStats {
+        let min = self.samples.iter().cloned().fold(f64::INFINITY, f64::min);
+        let max = self.samples.iter().cloned().fold(0.0, f64::max);
+        let mean = self.samples.iter().sum::<f64>() / self.samples.len() as f64;
+        TraceStats {
+            len: self.samples.len(),
+            duration_ms: self.duration_ms(),
+            min_bps: min,
+            max_bps: max,
+            mean_bps: mean,
+        }
+    }
+
+    /// Serialize as `time_s,bytes_per_s` CSV.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::from("time_s,bytes_per_s\n");
+        for (i, s) in self.samples.iter().enumerate() {
+            out.push_str(&format!(
+                "{},{:.0}\n",
+                i as f64 * self.interval_ms / 1_000.0,
+                s
+            ));
+        }
+        out
+    }
+
+    /// Parse the CSV format written by [`to_csv`].
+    pub fn from_csv(text: &str) -> Result<BandwidthTrace, String> {
+        let mut times = Vec::new();
+        let mut samples = Vec::new();
+        for (lineno, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || lineno == 0 && line.starts_with("time") {
+                continue;
+            }
+            let (t, bw) = line
+                .split_once(',')
+                .ok_or_else(|| format!("line {}: expected 2 fields", lineno + 1))?;
+            times.push(
+                t.trim()
+                    .parse::<f64>()
+                    .map_err(|e| format!("line {}: {e}", lineno + 1))?,
+            );
+            samples.push(
+                bw.trim()
+                    .parse::<f64>()
+                    .map_err(|e| format!("line {}: {e}", lineno + 1))?,
+            );
+        }
+        if samples.len() < 2 {
+            return Err("trace needs >= 2 samples".into());
+        }
+        let interval_ms = (times[1] - times[0]) * 1_000.0;
+        BandwidthTrace::from_samples(interval_ms, samples)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn embedded_trace_matches_paper_envelope() {
+        let t = BandwidthTrace::embedded_4g();
+        let s = t.stats();
+        assert_eq!(s.len, 600);
+        assert_eq!(s.duration_ms, 600_000.0);
+        // Fig. 1 top: 0.5–7 MB/s range.
+        assert!(s.min_bps >= 0.3e6 && s.min_bps <= 1.0e6, "min={}", s.min_bps);
+        assert!(s.max_bps >= 5.0e6 && s.max_bps <= 7.5e6, "max={}", s.max_bps);
+        assert!(s.mean_bps > 1.5e6 && s.mean_bps < 5.0e6, "mean={}", s.mean_bps);
+    }
+
+    #[test]
+    fn embedded_trace_has_forced_fades() {
+        let t = BandwidthTrace::embedded_4g();
+        // Fades at t=0 and t=360 per Fig. 4's worst cases.
+        assert!(t.samples()[0] < 1.5e6, "t=0: {}", t.samples()[0]);
+        let dip = t.samples()[360..365].iter().cloned().fold(f64::INFINITY, f64::min);
+        assert!(dip < 1.5e6, "t=360 dip: {dip}");
+    }
+
+    #[test]
+    fn synthetic_deterministic_per_seed() {
+        let a = BandwidthTrace::synthetic_4g(100, 1_000.0, 7);
+        let b = BandwidthTrace::synthetic_4g(100, 1_000.0, 7);
+        assert_eq!(a.samples(), b.samples());
+        let c = BandwidthTrace::synthetic_4g(100, 1_000.0, 8);
+        assert_ne!(a.samples(), c.samples());
+    }
+
+    #[test]
+    fn lookup_is_piecewise_constant_and_wraps() {
+        let t = BandwidthTrace::from_samples(1_000.0, vec![1.0e6, 2.0e6, 3.0e6]).unwrap();
+        assert_eq!(t.bandwidth_at(0.0), 1.0e6);
+        assert_eq!(t.bandwidth_at(999.9), 1.0e6);
+        assert_eq!(t.bandwidth_at(1_000.0), 2.0e6);
+        assert_eq!(t.bandwidth_at(3_000.0), 1.0e6); // wraps
+        assert_eq!(t.bandwidth_at(7_500.0), 2.0e6); // wraps into [1]
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let t = BandwidthTrace::synthetic_4g(20, 1_000.0, 3);
+        let csv = t.to_csv();
+        let back = BandwidthTrace::from_csv(&csv).unwrap();
+        assert_eq!(back.samples().len(), 20);
+        assert_eq!(back.interval_ms(), 1_000.0);
+        for (a, b) in t.samples().iter().zip(back.samples()) {
+            assert!((a - b).abs() < 1.0); // CSV rounds to whole bytes
+        }
+    }
+
+    #[test]
+    fn rejects_bad_traces() {
+        assert!(BandwidthTrace::from_samples(0.0, vec![1.0]).is_err());
+        assert!(BandwidthTrace::from_samples(1.0, vec![]).is_err());
+        assert!(BandwidthTrace::from_samples(1.0, vec![1.0, -2.0]).is_err());
+        assert!(BandwidthTrace::from_csv("garbage").is_err());
+    }
+}

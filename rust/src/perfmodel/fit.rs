@@ -1,0 +1,325 @@
+//! Coefficient fitting for the Eq. 2 latency model.
+//!
+//! Eq. 2 is linear in its four coefficients over the feature vector
+//! `[b/c, 1/c, b, 1]`, so ordinary least squares via the normal equations
+//! suffices; RANSAC (Fischler & Bolles 1981, the paper's [13]) wraps it for
+//! robustness against the latency outliers real profiling runs produce
+//! (GC pauses, noisy neighbours, cold caches).
+
+use super::{LatencyModel, ProfilePoint};
+use crate::util::rng::Pcg32;
+
+/// Fit failure (rank-deficient design matrix or not enough points).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FitError(pub String);
+
+impl std::fmt::Display for FitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "fit error: {}", self.0)
+    }
+}
+
+impl std::error::Error for FitError {}
+
+fn features(p: &ProfilePoint) -> Vec<f64> {
+    let (b, c) = (p.batch as f64, p.cores as f64);
+    vec![b / c, 1.0 / c, b, 1.0]
+}
+
+/// Solve `min ||X β - y||²` via the normal equations with Gaussian
+/// elimination + partial pivoting. Returns `None` if `XᵀX` is singular.
+pub fn solve_normal_equations(rows: &[Vec<f64>], ys: &[f64]) -> Option<Vec<f64>> {
+    assert_eq!(rows.len(), ys.len());
+    let n = rows.first()?.len();
+    // Build XᵀX (n×n) and Xᵀy (n).
+    let mut a = vec![vec![0.0; n + 1]; n];
+    for (row, &y) in rows.iter().zip(ys) {
+        debug_assert_eq!(row.len(), n);
+        for i in 0..n {
+            for j in 0..n {
+                a[i][j] += row[i] * row[j];
+            }
+            a[i][n] += row[i] * y;
+        }
+    }
+    // Gaussian elimination with partial pivoting on the augmented system.
+    for col in 0..n {
+        let pivot = (col..n)
+            .max_by(|&i, &j| a[i][col].abs().total_cmp(&a[j][col].abs()))
+            .unwrap();
+        if a[pivot][col].abs() < 1e-12 {
+            return None; // singular
+        }
+        a.swap(col, pivot);
+        for row in 0..n {
+            if row != col {
+                let f = a[row][col] / a[col][col];
+                for k in col..=n {
+                    a[row][k] -= f * a[col][k];
+                }
+            }
+        }
+    }
+    Some((0..n).map(|i| a[i][n] / a[i][i]).collect())
+}
+
+/// Ordinary least squares fit of Eq. 2 with non-negativity clamping:
+/// negative coefficients are pinned to zero and the remaining terms refit
+/// (one pass — adequate for well-posed profiles, and keeps the model's
+/// monotonicity guarantees for the solver).
+pub fn fit_least_squares(profile: &[ProfilePoint]) -> Result<LatencyModel, FitError> {
+    if profile.len() < 4 {
+        return Err(FitError(format!(
+            "need >= 4 profile points, got {}",
+            profile.len()
+        )));
+    }
+    let rows: Vec<Vec<f64>> = profile.iter().map(features).collect();
+    let ys: Vec<f64> = profile.iter().map(|p| p.latency_ms).collect();
+    let beta = solve_normal_equations(&rows, &ys)
+        .ok_or_else(|| FitError("rank-deficient profile grid".into()))?;
+
+    if beta.iter().all(|&x| x >= 0.0) {
+        return Ok(LatencyModel::new(beta[0], beta[1], beta[2], beta[3]));
+    }
+
+    // Clamp negatives to zero, refit the active set.
+    let active: Vec<usize> =
+        (0..4).filter(|&i| beta[i] > 0.0).collect();
+    if active.is_empty() {
+        return Err(FitError("all coefficients clamped to zero".into()));
+    }
+    let sub_rows: Vec<Vec<f64>> = rows
+        .iter()
+        .map(|r| active.iter().map(|&i| r[i]).collect())
+        .collect();
+    let sub = solve_normal_equations(&sub_rows, &ys)
+        .ok_or_else(|| FitError("rank-deficient after clamping".into()))?;
+    let mut full = [0.0; 4];
+    for (k, &i) in active.iter().enumerate() {
+        full[i] = sub[k].max(0.0);
+    }
+    Ok(LatencyModel::new(full[0], full[1], full[2], full[3]))
+}
+
+/// RANSAC configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct RansacCfg {
+    /// Number of random minimal-sample iterations.
+    pub iterations: u32,
+    /// Inlier threshold as a fraction of the observed latency
+    /// (relative residual), e.g. 0.15 = within 15 %.
+    pub inlier_rel_tol: f64,
+    /// Minimum inlier fraction for a candidate to be considered.
+    pub min_inlier_frac: f64,
+    /// PRNG seed (deterministic fits).
+    pub seed: u64,
+}
+
+impl Default for RansacCfg {
+    fn default() -> Self {
+        RansacCfg {
+            iterations: 200,
+            inlier_rel_tol: 0.15,
+            min_inlier_frac: 0.5,
+            seed: 0x5eed,
+        }
+    }
+}
+
+/// RANSAC robust regression: repeatedly fit on random minimal subsets,
+/// score by inlier count, refit on the best consensus set.
+pub fn fit_ransac(
+    profile: &[ProfilePoint],
+    cfg: RansacCfg,
+) -> Result<LatencyModel, FitError> {
+    const MIN_SAMPLE: usize = 6; // > 4 params, for a stable minimal fit
+    if profile.len() < MIN_SAMPLE {
+        return fit_least_squares(profile);
+    }
+    let mut rng = Pcg32::seeded(cfg.seed);
+    let mut best: Option<(usize, Vec<usize>)> = None;
+    let mut idx: Vec<usize> = (0..profile.len()).collect();
+
+    for _ in 0..cfg.iterations {
+        rng.shuffle(&mut idx);
+        let sample: Vec<ProfilePoint> =
+            idx[..MIN_SAMPLE].iter().map(|&i| profile[i]).collect();
+        let Ok(candidate) = fit_least_squares(&sample) else {
+            continue;
+        };
+        let inliers: Vec<usize> = (0..profile.len())
+            .filter(|&i| {
+                let p = profile[i];
+                let pred = candidate.latency_ms(p.batch, p.cores);
+                (pred - p.latency_ms).abs()
+                    <= cfg.inlier_rel_tol * p.latency_ms.max(1e-9)
+            })
+            .collect();
+        if inliers.len() as f64
+            >= cfg.min_inlier_frac * profile.len() as f64
+            && best.as_ref().map_or(true, |(n, _)| inliers.len() > *n)
+        {
+            best = Some((inliers.len(), inliers));
+        }
+    }
+
+    match best {
+        Some((_, inliers)) => {
+            let consensus: Vec<ProfilePoint> =
+                inliers.iter().map(|&i| profile[i]).collect();
+            fit_least_squares(&consensus)
+        }
+        // Degenerate data: fall back to the non-robust fit.
+        None => fit_least_squares(profile),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::run_prop;
+
+    fn planted_profile(
+        m: &LatencyModel,
+        noise: impl Fn(usize) -> f64,
+    ) -> Vec<ProfilePoint> {
+        let mut out = Vec::new();
+        let mut i = 0;
+        for c in 1..=8u32 {
+            for b in 1..=8u32 {
+                out.push(ProfilePoint {
+                    batch: b,
+                    cores: c,
+                    latency_ms: m.latency_ms(b, c) + noise(i),
+                });
+                i += 1;
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn lsq_recovers_planted_coefficients() {
+        let truth = LatencyModel::new(40.0, 12.0, 2.5, 1.0);
+        let profile = planted_profile(&truth, |_| 0.0);
+        let fit = fit_least_squares(&profile).unwrap();
+        assert!((fit.gamma - 40.0).abs() < 1e-6, "{fit:?}");
+        assert!((fit.epsilon - 12.0).abs() < 1e-6);
+        assert!((fit.delta - 2.5).abs() < 1e-6);
+        assert!((fit.eta - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn lsq_tolerates_small_noise() {
+        let truth = LatencyModel::new(40.0, 12.0, 2.5, 1.0);
+        // deterministic pseudo-noise in ±0.5 ms
+        let profile =
+            planted_profile(&truth, |i| ((i * 2654435761) % 1000) as f64 / 1000.0 - 0.5);
+        let fit = fit_least_squares(&profile).unwrap();
+        let (_, mape) = fit.error(&planted_profile(&truth, |_| 0.0));
+        assert!(mape < 2.0, "mape={mape}");
+    }
+
+    #[test]
+    fn lsq_needs_enough_points() {
+        let p = ProfilePoint { batch: 1, cores: 1, latency_ms: 10.0 };
+        assert!(fit_least_squares(&[p, p, p]).is_err());
+    }
+
+    #[test]
+    fn lsq_rejects_rank_deficient_grid() {
+        // Single (b, c) observed repeatedly: features identical -> singular.
+        let p = ProfilePoint { batch: 2, cores: 2, latency_ms: 30.0 };
+        assert!(fit_least_squares(&[p; 8]).is_err());
+    }
+
+    #[test]
+    fn lsq_clamps_negative_coefficients() {
+        // A latency surface flat in batch: delta/gamma ~ 0. Add a slight
+        // negative batch trend that OLS would chase below zero.
+        let mut profile = Vec::new();
+        for c in 1..=4u32 {
+            for b in 1..=4u32 {
+                profile.push(ProfilePoint {
+                    batch: b,
+                    cores: c,
+                    latency_ms: 20.0 / c as f64 + 5.0 - 0.01 * b as f64,
+                });
+            }
+        }
+        let fit = fit_least_squares(&profile).unwrap();
+        assert!(fit.gamma >= 0.0 && fit.delta >= 0.0);
+        assert!(fit.epsilon > 0.0 && fit.eta > 0.0);
+    }
+
+    #[test]
+    fn ransac_ignores_outliers() {
+        let truth = LatencyModel::new(40.0, 12.0, 2.5, 1.0);
+        let mut profile = planted_profile(&truth, |_| 0.0);
+        // Corrupt 20 % of points with massive outliers (cold-start spikes).
+        for i in (0..profile.len()).step_by(5) {
+            profile[i].latency_ms *= 8.0;
+        }
+        let lsq = fit_least_squares(&profile).unwrap();
+        let ransac = fit_ransac(&profile, RansacCfg::default()).unwrap();
+        let clean = planted_profile(&truth, |_| 0.0);
+        let (_, lsq_mape) = lsq.error(&clean);
+        let (_, ransac_mape) = ransac.error(&clean);
+        assert!(
+            ransac_mape < 1.0,
+            "ransac mape={ransac_mape} (lsq={lsq_mape})"
+        );
+        assert!(ransac_mape < lsq_mape / 5.0);
+    }
+
+    #[test]
+    fn ransac_falls_back_on_tiny_profiles() {
+        let truth = LatencyModel::new(10.0, 5.0, 1.0, 0.5);
+        let profile: Vec<ProfilePoint> = [(1u32, 1u32), (2, 1), (1, 2), (4, 2), (2, 4)]
+            .iter()
+            .map(|&(b, c)| ProfilePoint {
+                batch: b,
+                cores: c,
+                latency_ms: truth.latency_ms(b, c),
+            })
+            .collect();
+        let fit = fit_ransac(&profile, RansacCfg::default()).unwrap();
+        assert!((fit.gamma - 10.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn prop_fit_recovers_random_planted_models() {
+        run_prop("fit-recovers-planted", 40, |g| {
+            let truth = LatencyModel::new(
+                g.f64(5.0, 80.0),
+                g.f64(1.0, 30.0),
+                g.f64(0.1, 6.0),
+                g.f64(0.1, 4.0),
+            );
+            let profile = planted_profile(&truth, |_| 0.0);
+            let fit = fit_least_squares(&profile)
+                .map_err(|e| format!("fit failed: {e}"))?;
+            let (_, mape) = fit.error(&profile);
+            crate::prop_assert!(mape < 0.01, "mape={mape} truth={truth:?}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn normal_equations_simple_system() {
+        // y = 2x + 3 exactly.
+        let rows = vec![vec![1.0, 1.0], vec![2.0, 1.0], vec![3.0, 1.0]];
+        let ys = vec![5.0, 7.0, 9.0];
+        let beta = solve_normal_equations(&rows, &ys).unwrap();
+        assert!((beta[0] - 2.0).abs() < 1e-10);
+        assert!((beta[1] - 3.0).abs() < 1e-10);
+    }
+
+    #[test]
+    fn normal_equations_singular_returns_none() {
+        let rows = vec![vec![1.0, 2.0], vec![2.0, 4.0], vec![3.0, 6.0]];
+        let ys = vec![1.0, 2.0, 3.0];
+        assert_eq!(solve_normal_equations(&rows, &ys), None);
+    }
+}

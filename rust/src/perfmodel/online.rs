@@ -1,0 +1,352 @@
+//! Online model calibration (paper §3.1: the monitoring component
+//! "receives the end-to-end request latency from the processing component
+//! to calculate ... the accuracy of the performance model").
+//!
+//! The serving system starts from an offline-profiled model, then keeps
+//! observing real `(batch, cores) → latency` samples. When the live error
+//! exceeds a drift threshold, the calibrator refits (RANSAC) on the
+//! observation window and swaps the model the solver plans with. This
+//! closes the loop the paper describes without ever stopping the server.
+
+use std::collections::VecDeque;
+
+use super::{fit_ransac, LatencyModel, ProfilePoint, RansacCfg};
+use crate::{BatchSize, Cores, Ms};
+
+/// Rolling-window online calibrator.
+#[derive(Debug, Clone)]
+pub struct OnlineCalibrator {
+    model: LatencyModel,
+    window: VecDeque<ProfilePoint>,
+    capacity: usize,
+    /// Refit when live MAPE (%) exceeds this.
+    pub drift_mape_pct: f64,
+    /// Minimum observations (and distinct (b, c) pairs) before a refit.
+    pub min_samples: usize,
+    refits: u64,
+    observations: u64,
+}
+
+impl OnlineCalibrator {
+    pub fn new(initial: LatencyModel) -> OnlineCalibrator {
+        OnlineCalibrator {
+            model: initial,
+            window: VecDeque::new(),
+            capacity: 512,
+            drift_mape_pct: 15.0,
+            min_samples: 32,
+            refits: 0,
+            observations: 0,
+        }
+    }
+
+    pub fn with_capacity(mut self, cap: usize) -> OnlineCalibrator {
+        assert!(cap >= 8);
+        self.capacity = cap;
+        self
+    }
+
+    /// The model the solver should currently plan with.
+    pub fn model(&self) -> &LatencyModel {
+        &self.model
+    }
+
+    pub fn refits(&self) -> u64 {
+        self.refits
+    }
+
+    pub fn observations(&self) -> u64 {
+        self.observations
+    }
+
+    /// Live prediction error over the window: (MSE, MAPE %).
+    pub fn live_error(&self) -> Option<(f64, f64)> {
+        if self.window.is_empty() {
+            return None;
+        }
+        let pts: Vec<ProfilePoint> = self.window.iter().copied().collect();
+        Some(self.model.error(&pts))
+    }
+
+    /// Record one real batch execution. Returns `true` when the
+    /// observation triggered a refit (model swapped).
+    pub fn observe(&mut self, batch: BatchSize, cores: Cores, latency_ms: Ms) -> bool {
+        debug_assert!(latency_ms > 0.0);
+        self.observations += 1;
+        if self.window.len() == self.capacity {
+            self.window.pop_front();
+        }
+        self.window.push_back(ProfilePoint { batch, cores, latency_ms });
+
+        if self.window.len() < self.min_samples {
+            return false;
+        }
+        let (_, mape) = self.live_error().unwrap();
+        if mape <= self.drift_mape_pct {
+            return false;
+        }
+        let pts: Vec<ProfilePoint> = self.window.iter().copied().collect();
+        if self.grid_diverse() {
+            match fit_ransac(
+                &pts,
+                RansacCfg { seed: 0xca1 + self.refits, ..RansacCfg::default() },
+            ) {
+                Ok(newm) => {
+                    // Accept only if the refit actually explains the
+                    // window better (guards against transients).
+                    let (_, new_mape) = newm.error(&pts);
+                    if new_mape < mape {
+                        self.model = newm;
+                        self.refits += 1;
+                        return true;
+                    }
+                    false
+                }
+                Err(_) => false,
+            }
+        } else {
+            // Live systems often sit at ONE core allocation for long
+            // stretches: the full 4-coefficient surface is unidentifiable,
+            // but the batch line at the observed c is. Partial refit:
+            // rescale (γ, δ) and (ε, η) proportionally so the model's
+            // line at c matches the observed slope/intercept while the
+            // parallel/serial split is preserved.
+            self.partial_refit(&pts, mape)
+        }
+    }
+
+    fn partial_refit(&mut self, pts: &[ProfilePoint], old_mape: f64) -> bool {
+        let cores_set: std::collections::BTreeSet<Cores> =
+            pts.iter().map(|p| p.cores).collect();
+        let batch_set: std::collections::BTreeSet<BatchSize> =
+            pts.iter().map(|p| p.batch).collect();
+        if cores_set.len() == 1 && batch_set.len() == 1 {
+            // Fully pinned operating point: only a multiplicative
+            // correction is identifiable. Rescale all coefficients by the
+            // median observed/predicted ratio — enough to un-stick a
+            // badly wrong offline profile so the solver starts exploring
+            // other (b, c) points, after which richer refits kick in.
+            let (b, c) = (pts[0].batch, pts[0].cores);
+            let mut obs: Vec<Ms> = pts.iter().map(|p| p.latency_ms).collect();
+            obs.sort_by(f64::total_cmp);
+            let med = obs[obs.len() / 2];
+            let pred = self.model.latency_ms(b, c);
+            if pred <= 1e-12 {
+                return false;
+            }
+            let f = med / pred;
+            let candidate = LatencyModel::new(
+                self.model.gamma * f,
+                self.model.epsilon * f,
+                self.model.delta * f,
+                self.model.eta * f,
+            );
+            let (_, new_mape) = candidate.error(pts);
+            if new_mape < old_mape {
+                self.model = candidate;
+                self.refits += 1;
+                return true;
+            }
+            return false;
+        }
+        if cores_set.len() != 1 || batch_set.len() < 2 {
+            return false;
+        }
+        let c = *cores_set.iter().next().unwrap();
+        // Robust line fit on (b, l) at this c: median-based (repeated
+        // median is overkill; use the median of pairwise slopes between
+        // consecutive distinct batches, which resists outliers well).
+        let mut by_batch: std::collections::BTreeMap<BatchSize, Vec<Ms>> = Default::default();
+        for p in pts {
+            by_batch.entry(p.batch).or_default().push(p.latency_ms);
+        }
+        let med = |v: &mut Vec<Ms>| {
+            v.sort_by(f64::total_cmp);
+            v[v.len() / 2]
+        };
+        let line: Vec<(f64, f64)> = by_batch
+            .iter_mut()
+            .map(|(b, v)| (*b as f64, med(v)))
+            .collect();
+        let mut slopes: Vec<f64> = line
+            .windows(2)
+            .map(|w| (w[1].1 - w[0].1) / (w[1].0 - w[0].0))
+            .collect();
+        slopes.sort_by(f64::total_cmp);
+        let slope = slopes[slopes.len() / 2].max(0.0);
+        let intercept = (line[0].1 - slope * line[0].0).max(0.0);
+
+        let cf = c as f64;
+        let old_slope = self.model.gamma / cf + self.model.delta;
+        let old_intercept = self.model.epsilon / cf + self.model.eta;
+        let fs = if old_slope > 1e-12 { slope / old_slope } else { 1.0 };
+        let fi = if old_intercept > 1e-12 { intercept / old_intercept } else { 1.0 };
+        let candidate = LatencyModel::new(
+            self.model.gamma * fs,
+            self.model.epsilon * fi,
+            self.model.delta * fs,
+            self.model.eta * fi,
+        );
+        let (_, new_mape) = candidate.error(pts);
+        if new_mape < old_mape {
+            self.model = candidate;
+            self.refits += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Enough distinct (b, c) points to identify 4 coefficients?
+    fn grid_diverse(&self) -> bool {
+        let mut pairs: Vec<(BatchSize, Cores)> =
+            self.window.iter().map(|p| (p.batch, p.cores)).collect();
+        pairs.sort_unstable();
+        pairs.dedup();
+        // 4 unknowns; require comfortably more distinct feature rows, with
+        // variation in both axes.
+        let batches: std::collections::BTreeSet<_> =
+            pairs.iter().map(|&(b, _)| b).collect();
+        let cores: std::collections::BTreeSet<_> =
+            pairs.iter().map(|&(_, c)| c).collect();
+        pairs.len() >= 6 && batches.len() >= 2 && cores.len() >= 2
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn feed(
+        cal: &mut OnlineCalibrator,
+        truth: &LatencyModel,
+        rng: &mut Pcg32,
+        n: usize,
+        noise: f64,
+    ) -> u64 {
+        let mut refits = 0;
+        for _ in 0..n {
+            let b = *rng.choose(&[1u32, 2, 4, 8, 16]);
+            let c = rng.range_u32(1, 16);
+            let l = truth.latency_ms(b, c) * rng.lognormal(0.0, noise);
+            if cal.observe(b, c, l) {
+                refits += 1;
+            }
+        }
+        refits
+    }
+
+    #[test]
+    fn stable_model_never_refits() {
+        let truth = LatencyModel::resnet_human_detector();
+        let mut cal = OnlineCalibrator::new(truth);
+        let mut rng = Pcg32::seeded(1);
+        let refits = feed(&mut cal, &truth, &mut rng, 400, 0.03);
+        assert_eq!(refits, 0, "live error {:?}", cal.live_error());
+        assert_eq!(cal.observations(), 400);
+    }
+
+    #[test]
+    fn drifted_model_triggers_refit_and_converges() {
+        // Solver starts with a model 2x too optimistic (e.g. the node got
+        // slower after a co-tenant moved in).
+        let optimistic = LatencyModel::new(20.0, 6.0, 1.25, 0.5);
+        let reality = LatencyModel::resnet_human_detector(); // 2x slower
+        let mut cal = OnlineCalibrator::new(optimistic);
+        let mut rng = Pcg32::seeded(2);
+        let refits = feed(&mut cal, &reality, &mut rng, 300, 0.03);
+        assert!(refits >= 1, "never refit; live {:?}", cal.live_error());
+        let (_, mape) = cal.live_error().unwrap();
+        assert!(mape < 8.0, "post-refit MAPE {mape}");
+        // Refit model close to reality on the paper grid:
+        for (b, c) in [(1u32, 1u32), (4, 8), (8, 4)] {
+            let rel = (cal.model().latency_ms(b, c) - reality.latency_ms(b, c)).abs()
+                / reality.latency_ms(b, c);
+            assert!(rel < 0.15, "l({b},{c}) rel err {rel}");
+        }
+    }
+
+    #[test]
+    fn pinned_operating_point_rescales_uniformly() {
+        let truth = LatencyModel::yolov5n();
+        let wrong = LatencyModel::new(100.0, 10.0, 10.0, 10.0);
+        let mut cal = OnlineCalibrator::new(wrong);
+        // Only ever observe (b=4, c=8): the full surface is
+        // unidentifiable, but the multiplicative correction is.
+        let mut refit = false;
+        for _ in 0..100 {
+            refit |= cal.observe(4, 8, truth.latency_ms(4, 8));
+        }
+        assert!(refit, "pinned point never rescaled");
+        let rel = (cal.model().latency_ms(4, 8) - truth.latency_ms(4, 8)).abs()
+            / truth.latency_ms(4, 8);
+        assert!(rel < 0.05, "l(4,8) rel err {rel}");
+        // The correction is proportional: coefficient RATIOS unchanged.
+        let r0 = wrong.gamma / wrong.eta;
+        let r1 = cal.model().gamma / cal.model().eta;
+        assert!((r0 - r1).abs() < 1e-9);
+    }
+
+    #[test]
+    fn partial_refit_with_single_core_allocation() {
+        // System pinned at c=2, model 3x optimistic: the batch line at
+        // c=2 is identifiable and must be corrected proportionally.
+        let reality = LatencyModel::resnet_human_detector();
+        let optimistic = LatencyModel::new(
+            reality.gamma / 3.0,
+            reality.epsilon / 3.0,
+            reality.delta / 3.0,
+            reality.eta / 3.0,
+        );
+        let mut cal = OnlineCalibrator::new(optimistic);
+        let mut rng = Pcg32::seeded(9);
+        let mut refits = 0;
+        for _ in 0..120 {
+            let b = *rng.choose(&[1u32, 2, 4, 8]);
+            let l = reality.latency_ms(b, 2) * rng.lognormal(0.0, 0.02);
+            if cal.observe(b, 2, l) {
+                refits += 1;
+            }
+        }
+        assert!(refits >= 1, "no partial refit; live {:?}", cal.live_error());
+        for b in [1u32, 2, 4, 8] {
+            let rel = (cal.model().latency_ms(b, 2) - reality.latency_ms(b, 2)).abs()
+                / reality.latency_ms(b, 2);
+            assert!(rel < 0.1, "l({b},2) rel err {rel}");
+        }
+    }
+
+    #[test]
+    fn window_is_bounded() {
+        let truth = LatencyModel::yolov5n();
+        let mut cal = OnlineCalibrator::new(truth).with_capacity(16);
+        let mut rng = Pcg32::seeded(3);
+        feed(&mut cal, &truth, &mut rng, 100, 0.01);
+        assert!(cal.window.len() <= 16);
+        assert_eq!(cal.observations(), 100);
+    }
+
+    #[test]
+    fn transient_outliers_do_not_poison_model() {
+        let truth = LatencyModel::resnet_human_detector();
+        let mut cal = OnlineCalibrator::new(truth);
+        let mut rng = Pcg32::seeded(4);
+        feed(&mut cal, &truth, &mut rng, 100, 0.02);
+        // Burst of 12 wild outliers (GC pause / page faults).
+        for _ in 0..12 {
+            let b = *rng.choose(&[1u32, 2, 4]);
+            let c = rng.range_u32(1, 8);
+            cal.observe(b, c, truth.latency_ms(b, c) * 10.0);
+        }
+        feed(&mut cal, &truth, &mut rng, 100, 0.02);
+        let (_, mape) = cal.live_error().unwrap();
+        // Model still predicts the clean points well (RANSAC robustness +
+        // accept-only-if-better guard).
+        let clean: Vec<ProfilePoint> = (1..=8)
+            .map(|c| ProfilePoint { batch: 4, cores: c, latency_ms: truth.latency_ms(4, c) })
+            .collect();
+        let (_, clean_mape) = cal.model().error(&clean);
+        assert!(clean_mape < 10.0, "poisoned: clean MAPE {clean_mape}, live {mape}");
+    }
+}

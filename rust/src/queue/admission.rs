@@ -1,0 +1,145 @@
+//! Admission control: reject requests at ingest whose remaining budget
+//! cannot possibly be met even by the best configuration.
+//!
+//! The paper drops requests once their deadline passes in the queue; an
+//! admission controller moves that decision to arrival time — a request
+//! whose remaining budget is below `l(1, c_max)` (the floor of any
+//! processing schedule) can be refused immediately, returning capacity to
+//! requests that still have a chance. This is a standard serving-system
+//! guard (cf. Clipper/Nexus-style SLO-aware admission) and an ablation
+//! point: it trades explicit rejections for queue pollution.
+
+use crate::perfmodel::LatencyModel;
+use crate::solver::SolverLimits;
+use crate::workload::Request;
+use crate::Ms;
+
+/// Admission decision for one request.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Admission {
+    Accept,
+    /// Hopeless: budget below the processing floor.
+    RejectHopeless,
+    /// Overloaded: queue backlog implies the deadline will pass before
+    /// this request can start (only checked when backlog info is given).
+    RejectBacklog,
+}
+
+/// Stateless admission policy.
+#[derive(Debug, Clone, Copy)]
+pub struct AdmissionControl {
+    /// Fastest possible batch-of-1 processing time, `l(1, c_max)`.
+    floor_ms: Ms,
+    /// Safety multiplier on the floor (0 disables the hopeless check).
+    pub floor_margin: f64,
+    /// Enable the backlog check.
+    pub check_backlog: bool,
+}
+
+impl AdmissionControl {
+    pub fn new(model: &LatencyModel, limits: SolverLimits) -> AdmissionControl {
+        AdmissionControl {
+            floor_ms: model.latency_ms(1, limits.c_max),
+            floor_margin: 1.0,
+            check_backlog: true,
+        }
+    }
+
+    pub fn floor_ms(&self) -> Ms {
+        self.floor_ms
+    }
+
+    /// Decide admission for `r` arriving at `now`. `backlog_work_ms` is an
+    /// estimate of the work already queued ahead of this request under
+    /// the current configuration (0 if unknown).
+    pub fn admit(&self, r: &Request, now: Ms, backlog_work_ms: Ms) -> Admission {
+        let budget = r.remaining_budget_ms(now);
+        if budget < self.floor_ms * self.floor_margin {
+            return Admission::RejectHopeless;
+        }
+        if self.check_backlog && budget < self.floor_ms + backlog_work_ms {
+            return Admission::RejectBacklog;
+        }
+        Admission::Accept
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(budget_from_now: Ms, now: Ms) -> Request {
+        Request {
+            id: 0,
+            sent_at_ms: now,
+            comm_latency_ms: 0.0,
+            arrived_at_ms: now,
+            slo_ms: budget_from_now,
+            payload_bytes: 0.0,
+        }
+    }
+
+    fn ac() -> AdmissionControl {
+        AdmissionControl::new(
+            &LatencyModel::resnet_human_detector(),
+            SolverLimits::default(),
+        )
+    }
+
+    #[test]
+    fn floor_is_best_case_latency() {
+        let a = ac();
+        // l(1,16) = 40/16 + 12/16 + 2.5 + 1 = 6.75
+        assert!((a.floor_ms() - 6.75).abs() < 1e-9);
+    }
+
+    #[test]
+    fn accepts_healthy_budget() {
+        let a = ac();
+        assert_eq!(a.admit(&req(500.0, 0.0), 0.0, 0.0), Admission::Accept);
+    }
+
+    #[test]
+    fn rejects_hopeless_budget() {
+        let a = ac();
+        assert_eq!(
+            a.admit(&req(5.0, 0.0), 0.0, 0.0),
+            Admission::RejectHopeless
+        );
+        // Even exactly at the floor minus epsilon:
+        assert_eq!(
+            a.admit(&req(6.74, 0.0), 0.0, 0.0),
+            Admission::RejectHopeless
+        );
+    }
+
+    #[test]
+    fn rejects_on_backlog() {
+        let a = ac();
+        // 100 ms budget but 200 ms of work queued ahead.
+        assert_eq!(
+            a.admit(&req(100.0, 0.0), 0.0, 200.0),
+            Admission::RejectBacklog
+        );
+        // Same budget, empty queue: fine.
+        assert_eq!(a.admit(&req(100.0, 0.0), 0.0, 0.0), Admission::Accept);
+    }
+
+    #[test]
+    fn backlog_check_can_be_disabled() {
+        let mut a = ac();
+        a.check_backlog = false;
+        assert_eq!(a.admit(&req(100.0, 0.0), 0.0, 1_000.0), Admission::Accept);
+    }
+
+    #[test]
+    fn margin_tightens_the_floor() {
+        let mut a = ac();
+        a.floor_margin = 3.0; // require 3x the floor
+        assert_eq!(
+            a.admit(&req(15.0, 0.0), 0.0, 0.0),
+            Admission::RejectHopeless
+        );
+        assert_eq!(a.admit(&req(25.0, 0.0), 0.0, 0.0), Admission::Accept);
+    }
+}

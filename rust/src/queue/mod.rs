@@ -1,0 +1,296 @@
+//! Queuing component (paper §3.1): EDF reordering + dynamic batching.
+//!
+//! Requests are held in an Earliest-Deadline-First priority queue so the
+//! request with the smallest remaining SLO is always processed first, and
+//! batches of the solver-chosen size are formed from the head of the queue.
+//! The batch inherits the *minimum* remaining budget among its members
+//! (paper §3.3: "we use the smallest SLO in the current batch ... because we
+//! do not intend to violate any remaining SLO requests").
+
+mod admission;
+
+pub use admission::{Admission, AdmissionControl};
+
+use std::collections::BinaryHeap;
+
+use crate::workload::Request;
+use crate::{BatchSize, Ms};
+
+/// Heap entry ordered by earliest absolute deadline, ties broken by id for
+/// determinism (BinaryHeap is a max-heap, so orderings are reversed).
+#[derive(Debug, Clone)]
+struct EdfEntry(Request);
+
+impl PartialEq for EdfEntry {
+    fn eq(&self, other: &Self) -> bool {
+        self.0.id == other.0.id
+    }
+}
+
+impl Eq for EdfEntry {}
+
+impl PartialOrd for EdfEntry {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for EdfEntry {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        other
+            .0
+            .deadline_ms()
+            .total_cmp(&self.0.deadline_ms())
+            .then_with(|| other.0.id.cmp(&self.0.id))
+    }
+}
+
+/// EDF priority queue with batch extraction and drop accounting.
+#[derive(Debug, Default)]
+pub struct EdfQueue {
+    heap: BinaryHeap<EdfEntry>,
+    enqueued: u64,
+    dequeued: u64,
+    dropped: u64,
+}
+
+/// A batch handed to the processing component.
+#[derive(Debug, Clone)]
+pub struct Batch {
+    pub requests: Vec<Request>,
+}
+
+impl Batch {
+    pub fn len(&self) -> usize {
+        self.requests.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.requests.is_empty()
+    }
+
+    /// Earliest absolute deadline in the batch — the deadline the whole
+    /// batch must meet (paper §3.3).
+    pub fn min_deadline_ms(&self) -> Ms {
+        self.requests
+            .iter()
+            .map(|r| r.deadline_ms())
+            .fold(f64::INFINITY, f64::min)
+    }
+
+    /// Smallest remaining budget at `now`.
+    pub fn min_remaining_ms(&self, now: Ms) -> Ms {
+        self.min_deadline_ms() - now
+    }
+}
+
+impl EdfQueue {
+    pub fn new() -> EdfQueue {
+        EdfQueue::default()
+    }
+
+    pub fn push(&mut self, r: Request) {
+        self.enqueued += 1;
+        self.heap.push(EdfEntry(r));
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Peek at the most urgent request.
+    pub fn peek(&self) -> Option<&Request> {
+        self.heap.peek().map(|e| &e.0)
+    }
+
+    /// Pop the most urgent request.
+    pub fn pop(&mut self) -> Option<Request> {
+        let r = self.heap.pop().map(|e| e.0);
+        if r.is_some() {
+            self.dequeued += 1;
+        }
+        r
+    }
+
+    /// Form a batch of up to `batch_size` most-urgent requests. Returns
+    /// `None` when empty. A partial (short) batch is returned when fewer
+    /// requests are queued — the dynamic batcher never waits for stragglers
+    /// once the processor is free (work-conserving).
+    pub fn take_batch(&mut self, batch_size: BatchSize) -> Option<Batch> {
+        assert!(batch_size >= 1);
+        if self.heap.is_empty() {
+            return None;
+        }
+        let mut requests = Vec::with_capacity(batch_size as usize);
+        while requests.len() < batch_size as usize {
+            match self.pop() {
+                Some(r) => requests.push(r),
+                None => break,
+            }
+        }
+        Some(Batch { requests })
+    }
+
+    /// Drop every request whose deadline already passed at `now`, returning
+    /// them (the caller records the violations). Requests that cannot
+    /// possibly finish are not worth server time — matches FA2's and
+    /// Sponge's drop accounting.
+    pub fn drop_expired(&mut self, now: Ms) -> Vec<Request> {
+        let mut dropped = Vec::new();
+        while let Some(head) = self.heap.peek() {
+            if head.0.deadline_ms() <= now {
+                dropped.push(self.heap.pop().unwrap().0);
+            } else {
+                break;
+            }
+        }
+        self.dropped += dropped.len() as u64;
+        dropped
+    }
+
+    /// Remaining budgets (ms) of all queued requests at `now`, in EDF
+    /// order — the solver's per-request constraint inputs.
+    pub fn remaining_budgets(&self, now: Ms) -> Vec<Ms> {
+        let mut deadlines: Vec<Ms> =
+            self.heap.iter().map(|e| e.0.deadline_ms() - now).collect();
+        // Stable sort deliberately: the heap's backing array is already
+        // partially ordered, which timsort exploits — measured ~25 %
+        // faster than sort_unstable's pdqsort at 50 k entries (§Perf
+        // iteration 2, tried and reverted).
+        deadlines.sort_by(f64::total_cmp);
+        deadlines
+    }
+
+    /// Conservation counters: (enqueued, dequeued, dropped, in-queue).
+    pub fn counters(&self) -> (u64, u64, u64, usize) {
+        (self.enqueued, self.dequeued, self.dropped, self.heap.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::run_prop;
+
+    fn req(id: u64, sent: Ms, slo: Ms) -> Request {
+        Request {
+            id,
+            sent_at_ms: sent,
+            comm_latency_ms: 0.0,
+            arrived_at_ms: sent,
+            slo_ms: slo,
+            payload_bytes: 0.0,
+        }
+    }
+
+    #[test]
+    fn pops_in_deadline_order() {
+        let mut q = EdfQueue::new();
+        q.push(req(1, 0.0, 900.0)); // deadline 900
+        q.push(req(2, 100.0, 300.0)); // deadline 400 — most urgent
+        q.push(req(3, 0.0, 600.0)); // deadline 600
+        assert_eq!(q.pop().unwrap().id, 2);
+        assert_eq!(q.pop().unwrap().id, 3);
+        assert_eq!(q.pop().unwrap().id, 1);
+        assert!(q.pop().is_none());
+    }
+
+    #[test]
+    fn ties_break_by_id() {
+        let mut q = EdfQueue::new();
+        q.push(req(9, 0.0, 500.0));
+        q.push(req(3, 0.0, 500.0));
+        q.push(req(7, 0.0, 500.0));
+        assert_eq!(q.pop().unwrap().id, 3);
+        assert_eq!(q.pop().unwrap().id, 7);
+        assert_eq!(q.pop().unwrap().id, 9);
+    }
+
+    #[test]
+    fn take_batch_sizes() {
+        let mut q = EdfQueue::new();
+        for i in 0..5 {
+            q.push(req(i, i as f64, 1_000.0));
+        }
+        let b = q.take_batch(4).unwrap();
+        assert_eq!(b.len(), 4);
+        assert_eq!(
+            b.requests.iter().map(|r| r.id).collect::<Vec<_>>(),
+            vec![0, 1, 2, 3]
+        );
+        let short = q.take_batch(4).unwrap();
+        assert_eq!(short.len(), 1); // partial batch, work-conserving
+        assert!(q.take_batch(4).is_none());
+    }
+
+    #[test]
+    fn batch_min_deadline() {
+        let b = Batch {
+            requests: vec![req(0, 0.0, 800.0), req(1, 50.0, 400.0)],
+        };
+        assert_eq!(b.min_deadline_ms(), 450.0);
+        assert_eq!(b.min_remaining_ms(100.0), 350.0);
+    }
+
+    #[test]
+    fn drop_expired_only_past_deadline() {
+        let mut q = EdfQueue::new();
+        q.push(req(0, 0.0, 100.0)); // deadline 100
+        q.push(req(1, 0.0, 500.0)); // deadline 500
+        q.push(req(2, 0.0, 200.0)); // deadline 200
+        let dropped = q.drop_expired(250.0);
+        assert_eq!(dropped.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0, 2]);
+        assert_eq!(q.len(), 1);
+        let (enq, deq, drop, inq) = q.counters();
+        assert_eq!((enq, deq, drop, inq), (3, 0, 2, 1));
+    }
+
+    #[test]
+    fn remaining_budgets_sorted_ascending() {
+        let mut q = EdfQueue::new();
+        q.push(req(0, 0.0, 900.0));
+        q.push(req(1, 0.0, 300.0));
+        q.push(req(2, 0.0, 600.0));
+        assert_eq!(q.remaining_budgets(100.0), vec![200.0, 500.0, 800.0]);
+    }
+
+    #[test]
+    fn prop_edf_order_and_conservation() {
+        run_prop("edf-order-conservation", 60, |g| {
+            let n = g.usize(1, 200);
+            let mut q = EdfQueue::new();
+            for i in 0..n {
+                q.push(req(
+                    i as u64,
+                    g.f64(0.0, 1_000.0),
+                    g.f64(10.0, 2_000.0),
+                ));
+            }
+            let bsize = g.u32(1, 16);
+            let mut seen = 0usize;
+            let mut last_deadline = f64::NEG_INFINITY;
+            while let Some(b) = q.take_batch(bsize) {
+                for r in &b.requests {
+                    crate::prop_assert!(
+                        r.deadline_ms() >= last_deadline - 1e-9,
+                        "EDF violated: {} after {last_deadline}",
+                        r.deadline_ms()
+                    );
+                    last_deadline = r.deadline_ms();
+                    seen += 1;
+                }
+            }
+            crate::prop_assert!(seen == n, "lost requests: {seen}/{n}");
+            let (enq, deq, drop, inq) = q.counters();
+            crate::prop_assert!(
+                enq == deq + drop + inq as u64,
+                "conservation broken: {enq} != {deq}+{drop}+{inq}"
+            );
+            Ok(())
+        });
+    }
+}

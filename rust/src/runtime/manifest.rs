@@ -1,0 +1,177 @@
+//! Artifact manifest reader (`artifacts/manifest.json`, written by
+//! `python/compile/aot.py`).
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+use crate::BatchSize;
+
+/// One AOT artifact: a (variant, batch) HLO text file plus its probe data.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactEntry {
+    pub variant: String,
+    pub batch: BatchSize,
+    pub file: String,
+    pub sha256: String,
+    pub param_count: u64,
+    pub input_shape: Vec<usize>,
+    pub output_shape: Vec<usize>,
+    pub probe_file: String,
+    /// Expected logits for the probe input (oracle numerics from Python).
+    pub probe_logits: Vec<Vec<f64>>,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub input_hw: usize,
+    pub input_c: usize,
+    pub num_classes: usize,
+    pub artifacts: Vec<ArtifactEntry>,
+}
+
+impl Manifest {
+    pub fn load(dir: &str) -> Result<Manifest> {
+        let path = format!("{dir}/manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {path}"))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let doc = Json::parse(text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        let schema = doc.get("schema").as_u64().unwrap_or(0);
+        if schema != 1 {
+            bail!("unsupported manifest schema {schema}");
+        }
+        let as_usize = |j: &Json, what: &str| -> Result<usize> {
+            j.as_u64()
+                .map(|v| v as usize)
+                .with_context(|| format!("manifest field {what}"))
+        };
+        let mut artifacts = Vec::new();
+        for e in doc.get("artifacts").as_arr().context("artifacts array")? {
+            let shape = |key: &str| -> Result<Vec<usize>> {
+                e.get(key)
+                    .as_arr()
+                    .with_context(|| format!("{key} array"))?
+                    .iter()
+                    .map(|d| as_usize(d, key))
+                    .collect()
+            };
+            let probe_logits = e
+                .get("probe_logits")
+                .as_arr()
+                .context("probe_logits")?
+                .iter()
+                .map(|row| {
+                    row.as_arr()
+                        .context("logit row")
+                        .map(|r| r.iter().filter_map(|v| v.as_f64()).collect())
+                })
+                .collect::<Result<Vec<Vec<f64>>>>()?;
+            artifacts.push(ArtifactEntry {
+                variant: e.get("variant").as_str().context("variant")?.to_string(),
+                batch: as_usize(e.get("batch"), "batch")? as BatchSize,
+                file: e.get("file").as_str().context("file")?.to_string(),
+                sha256: e.get("sha256").as_str().unwrap_or("").to_string(),
+                param_count: e.get("param_count").as_u64().unwrap_or(0),
+                input_shape: shape("input_shape")?,
+                output_shape: shape("output_shape")?,
+                probe_file: e.get("probe_file").as_str().context("probe_file")?.to_string(),
+                probe_logits,
+            });
+        }
+        if artifacts.is_empty() {
+            bail!("manifest lists no artifacts");
+        }
+        Ok(Manifest {
+            input_hw: as_usize(doc.get("input_hw"), "input_hw")?,
+            input_c: as_usize(doc.get("input_c"), "input_c")?,
+            num_classes: as_usize(doc.get("num_classes"), "num_classes")?,
+            artifacts,
+        })
+    }
+
+    /// Variants present in the manifest (sorted, deduped).
+    pub fn variants(&self) -> Vec<String> {
+        let mut v: Vec<String> =
+            self.artifacts.iter().map(|a| a.variant.clone()).collect();
+        v.sort();
+        v.dedup();
+        v
+    }
+
+    pub fn batches_for(&self, variant: &str) -> Vec<BatchSize> {
+        let mut b: Vec<BatchSize> = self
+            .artifacts
+            .iter()
+            .filter(|a| a.variant == variant)
+            .map(|a| a.batch)
+            .collect();
+        b.sort_unstable();
+        b
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+        "schema": 1,
+        "input_hw": 32,
+        "input_c": 3,
+        "num_classes": 2,
+        "artifacts": [
+            {
+                "variant": "resnet18lite", "batch": 1,
+                "file": "resnet18lite_b1.hlo.txt", "sha256": "ab",
+                "param_count": 57466,
+                "input_shape": [1, 32, 32, 3], "output_shape": [1, 2],
+                "probe_file": "probe_b1.f32",
+                "probe_logits": [[0.25, -0.5]]
+            },
+            {
+                "variant": "yolov5nlite", "batch": 2,
+                "file": "yolov5nlite_b2.hlo.txt", "sha256": "cd",
+                "param_count": 74174,
+                "input_shape": [2, 32, 32, 3], "output_shape": [2, 2],
+                "probe_file": "probe_b2.f32",
+                "probe_logits": [[0.1, 0.2], [0.3, 0.4]]
+            }
+        ]
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.input_hw, 32);
+        assert_eq!(m.num_classes, 2);
+        assert_eq!(m.artifacts.len(), 2);
+        assert_eq!(m.artifacts[0].variant, "resnet18lite");
+        assert_eq!(m.artifacts[0].input_shape, vec![1, 32, 32, 3]);
+        assert_eq!(m.artifacts[1].probe_logits[1], vec![0.3, 0.4]);
+    }
+
+    #[test]
+    fn variants_and_batches() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.variants(), vec!["resnet18lite", "yolov5nlite"]);
+        assert_eq!(m.batches_for("yolov5nlite"), vec![2]);
+        assert!(m.batches_for("nope").is_empty());
+    }
+
+    #[test]
+    fn rejects_bad_schema() {
+        let bad = SAMPLE.replace("\"schema\": 1", "\"schema\": 9");
+        assert!(Manifest::parse(&bad).is_err());
+    }
+
+    #[test]
+    fn rejects_empty_artifacts() {
+        let bad = r#"{"schema": 1, "input_hw": 32, "input_c": 3,
+                       "num_classes": 2, "artifacts": []}"#;
+        assert!(Manifest::parse(bad).is_err());
+    }
+}

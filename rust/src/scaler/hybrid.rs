@@ -1,0 +1,193 @@
+//! Hybrid vertical + horizontal scaler — the paper's §6 "Multidimensional
+//! scaling" future-work direction, implemented as an extension.
+//!
+//! Vertical scaling saturates at the node/search limit `c_max`; beyond it
+//! the only move is horizontal (more instances, each paying the cold
+//! start). The hybrid scaler searches the smallest fleet size `k` for
+//! which a per-instance `(c, b)` exists: instance `i` of `k` serves every
+//! k-th request of the EDF queue (round-robin over the sorted deadlines),
+//! so its constraint set is the thinned budget list and `λ/k`.
+//!
+//! Design notes mirroring the paper's discussion: scale-out is *sticky*
+//! (a new instance is only launched when vertical capacity is exhausted,
+//! and fleets shrink one instance at a time) because cold starts are the
+//! expensive, oscillation-prone move.
+
+use super::{Action, Autoscaler, ScalerObs};
+use crate::cluster::Cluster;
+use crate::perfmodel::LatencyModel;
+use crate::solver::{IncrementalSolver, IpSolver, SolverInput, SolverLimits};
+use crate::{BatchSize, Cores, Ms};
+
+/// Vertical-first, horizontal-when-saturated autoscaler.
+pub struct HybridScaler {
+    pub limits: SolverLimits,
+    pub max_instances: u32,
+    pub lambda_headroom: f64,
+    pub latency_margin: f64,
+    solver: IncrementalSolver,
+}
+
+impl HybridScaler {
+    pub fn new(limits: SolverLimits, max_instances: u32) -> HybridScaler {
+        assert!(max_instances >= 1);
+        HybridScaler {
+            limits,
+            max_instances,
+            lambda_headroom: 1.15,
+            latency_margin: 1.1,
+            solver: IncrementalSolver,
+        }
+    }
+
+    /// Find the smallest fleet (k, c, b) satisfying all constraints.
+    fn plan(
+        &self,
+        obs: &ScalerObs<'_>,
+        model: &LatencyModel,
+    ) -> Option<(u32, Cores, BatchSize)> {
+        let planning = LatencyModel::new(
+            model.gamma * self.latency_margin,
+            model.epsilon * self.latency_margin,
+            model.delta * self.latency_margin,
+            model.eta * self.latency_margin,
+        );
+        let lambda = obs.lambda_rps * self.lambda_headroom;
+        for k in 1..=self.max_instances {
+            // Instance share under round-robin over EDF order: every k-th
+            // budget (the thinned list is still sorted ascending).
+            let thinned: Vec<Ms> =
+                obs.budgets_ms.iter().copied().step_by(k as usize).collect();
+            let input = SolverInput::per_request(thinned, lambda / k as f64);
+            if let Some(sol) = self.solver.solve(&planning, &input, self.limits) {
+                return Some((k, sol.cores, sol.batch));
+            }
+        }
+        None
+    }
+}
+
+impl Autoscaler for HybridScaler {
+    fn name(&self) -> &'static str {
+        "hybrid"
+    }
+
+    fn decide(
+        &mut self,
+        obs: &ScalerObs<'_>,
+        cluster: &Cluster,
+        model: &LatencyModel,
+    ) -> Vec<Action> {
+        let have: Vec<u32> = cluster.instances().map(|i| i.id).collect();
+        if have.is_empty() {
+            return vec![Action::Launch { cores: 1 }];
+        }
+        let (k, cores, batch) = match self.plan(obs, model) {
+            Some(plan) => plan,
+            // Globally infeasible: best effort at max everything.
+            None => (self.max_instances, self.limits.c_max, 1),
+        };
+        let mut actions = vec![Action::SetBatch { batch }];
+        // Resize every retained instance in place.
+        for id in have.iter().take(k as usize) {
+            actions.push(Action::Resize { id: *id, cores });
+        }
+        match (have.len() as u32).cmp(&k) {
+            std::cmp::Ordering::Less => {
+                for _ in 0..(k - have.len() as u32) {
+                    actions.push(Action::Launch { cores });
+                }
+            }
+            std::cmp::Ordering::Greater => {
+                // Shrink one instance per interval (anti-oscillation).
+                if let Some(id) = have.last() {
+                    actions.push(Action::Terminate { id: *id });
+                }
+            }
+            std::cmp::Ordering::Equal => {}
+        }
+        actions
+    }
+
+    fn initial_cores(&self) -> Vec<Cores> {
+        vec![1]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{Cluster, ClusterCfg};
+
+    fn ready_cluster(instances: &[Cores]) -> Cluster {
+        let mut c = Cluster::new(ClusterCfg { node_cores: 128, ..Default::default() });
+        for &cores in instances {
+            c.launch(cores, 0.0).unwrap();
+        }
+        c.tick(10_000.0);
+        c
+    }
+
+    fn obs<'a>(budgets: &'a [f64], lambda: f64) -> ScalerObs<'a> {
+        ScalerObs {
+            now_ms: 10_000.0,
+            lambda_rps: lambda,
+            budgets_ms: budgets,
+            cl_max_ms: 100.0,
+            slo_ms: 1_000.0,
+        }
+    }
+
+    #[test]
+    fn stays_vertical_within_capacity() {
+        let cluster = ready_cluster(&[2]);
+        let mut s = HybridScaler::new(SolverLimits::default(), 4);
+        let model = LatencyModel::resnet_human_detector();
+        let actions = s.decide(&obs(&[500.0; 10], 50.0), &cluster, &model);
+        assert!(
+            !actions.iter().any(|a| matches!(a, Action::Launch { .. })),
+            "{actions:?}"
+        );
+        assert!(actions.iter().any(|a| matches!(a, Action::Resize { .. })));
+    }
+
+    #[test]
+    fn scales_out_when_vertical_saturated() {
+        // yolov5s max single-instance throughput ~30 rps; demand 100 rps
+        // must go horizontal.
+        let cluster = ready_cluster(&[16]);
+        let mut s = HybridScaler::new(SolverLimits::default(), 8);
+        let model = LatencyModel::yolov5s();
+        let actions = s.decide(&obs(&[800.0; 20], 100.0), &cluster, &model);
+        let launches = actions
+            .iter()
+            .filter(|a| matches!(a, Action::Launch { .. }))
+            .count();
+        assert!(launches >= 2, "expected scale-out: {actions:?}");
+    }
+
+    #[test]
+    fn shrinks_one_instance_at_a_time() {
+        let cluster = ready_cluster(&[8, 8, 8, 8]);
+        let mut s = HybridScaler::new(SolverLimits::default(), 8);
+        let model = LatencyModel::resnet_human_detector();
+        // Tiny load: k=1 suffices.
+        let actions = s.decide(&obs(&[900.0; 2], 2.0), &cluster, &model);
+        let terms = actions
+            .iter()
+            .filter(|a| matches!(a, Action::Terminate { .. }))
+            .count();
+        assert_eq!(terms, 1, "one shrink per interval: {actions:?}");
+    }
+
+    #[test]
+    fn infeasible_goes_best_effort_wide() {
+        let cluster = ready_cluster(&[1]);
+        let mut s = HybridScaler::new(SolverLimits::default(), 3);
+        let model = LatencyModel::yolov5s();
+        // Demand far beyond even max_instances * capacity.
+        let actions = s.decide(&obs(&[50.0; 30], 500.0), &cluster, &model);
+        assert!(actions.iter().any(|a| matches!(a, Action::Launch { .. })));
+        assert!(actions.contains(&Action::SetBatch { batch: 1 }));
+    }
+}

@@ -1,0 +1,519 @@
+//! Autoscalers: Sponge and the paper's comparison baselines (§4).
+//!
+//! * [`SpongeScaler`] — the paper's contribution: per-adaptation-interval
+//!   IP solve over the live EDF queue, actuated as one in-place vertical
+//!   resize + a batch-size signal to the queue.
+//! * [`Fa2Scaler`] — the horizontal state-of-the-art baseline: fleets of
+//!   one-core instances, reconfigured every ~10 s, paying cold starts.
+//! * [`StaticScaler`] — fixed 8- or 16-core instance (Fig. 4's static
+//!   rows); batch size still solved per interval at the fixed core count.
+//! * [`VpaScaler`] — Kubernetes-VPA-like threshold autoscaler (ablation:
+//!   in-place resize *without* the IP solver / deadline awareness).
+//! * [`HybridScaler`] — vertical-first, horizontal-when-saturated
+//!   extension (the paper's §6 multidimensional-scaling future work).
+
+mod hybrid;
+mod variant;
+
+pub use hybrid::HybridScaler;
+pub use variant::{Variant, VariantScaler};
+
+use crate::cluster::Cluster;
+use crate::perfmodel::LatencyModel;
+use crate::solver::{drain_feasible, throughput_ok, IncrementalSolver, IpSolver, SolverInput, SolverLimits};
+use crate::{BatchSize, Cores, Ms};
+
+/// Scaler observation at an adaptation tick.
+#[derive(Debug, Clone)]
+pub struct ScalerObs<'a> {
+    pub now_ms: Ms,
+    /// Monitored arrival rate λ̂ (requests/second).
+    pub lambda_rps: f64,
+    /// EDF-sorted remaining budgets of all queued requests (ms).
+    pub budgets_ms: &'a [Ms],
+    /// Largest observed communication latency in the last interval —
+    /// the paper's `cl_max`.
+    pub cl_max_ms: Ms,
+    /// Nominal end-to-end SLO.
+    pub slo_ms: Ms,
+}
+
+/// Actuation commands the adapter applies to the cluster/queue.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Action {
+    /// In-place vertical resize of an existing instance.
+    Resize { id: u32, cores: Cores },
+    /// Launch a new instance (pays cold start).
+    Launch { cores: Cores },
+    /// Terminate an instance.
+    Terminate { id: u32 },
+    /// Set the batcher's batch size.
+    SetBatch { batch: BatchSize },
+    /// Switch the served model variant (pre-loaded, so free of cold
+    /// starts); carries the variant's latency model for the engine.
+    SwitchModel { model: LatencyModel },
+}
+
+/// An autoscaling policy.
+pub trait Autoscaler: Send {
+    fn name(&self) -> &'static str;
+
+    /// Decide actions for this adaptation interval.
+    fn decide(
+        &mut self,
+        obs: &ScalerObs<'_>,
+        cluster: &Cluster,
+        model: &LatencyModel,
+    ) -> Vec<Action>;
+
+    /// Cores the policy wants at steady state before the experiment
+    /// starts (instances are pre-warmed so every policy begins stable,
+    /// as in the paper's Fig. 4 where t=0 starts from a working system).
+    fn initial_cores(&self) -> Vec<Cores>;
+}
+
+// ---------------------------------------------------------------- Sponge --
+
+/// The paper's scaler: solve the IP each interval, resize in place.
+pub struct SpongeScaler {
+    pub limits: SolverLimits,
+    solver: IncrementalSolver,
+    /// Use Algorithm 1's uniform `SLO − cl_max` budget instead of
+    /// per-request budgets (paper-verbatim mode; default off).
+    pub uniform_budget: bool,
+    /// Provisioning headroom on the arrival rate: the stability constraint
+    /// becomes `h(b,c) ≥ headroom·λ̂`. Without it the solver provisions at
+    /// utilization 1.0 and any latency noise queues up (the paper's
+    /// prototype monitors over 1 s windows, which smooths the same way).
+    pub lambda_headroom: f64,
+    /// Safety factor on predicted latency in the drain check (covers the
+    /// engine's latency noise / P99-vs-mean gap).
+    pub latency_margin: f64,
+    last_batch: BatchSize,
+}
+
+impl SpongeScaler {
+    pub fn new(limits: SolverLimits) -> SpongeScaler {
+        SpongeScaler {
+            limits,
+            solver: IncrementalSolver,
+            uniform_budget: false,
+            lambda_headroom: 1.15,
+            latency_margin: 1.1,
+            last_batch: 1,
+        }
+    }
+
+    pub fn paper_verbatim(limits: SolverLimits) -> SpongeScaler {
+        SpongeScaler { uniform_budget: true, ..Self::new(limits) }
+    }
+
+    /// Disable margins (ablation: utilization-1 provisioning).
+    pub fn without_margins(mut self) -> SpongeScaler {
+        self.lambda_headroom = 1.0;
+        self.latency_margin = 1.0;
+        self
+    }
+
+    /// The latency model the solver plans with: real model inflated by the
+    /// safety margin.
+    fn planning_model(&self, model: &LatencyModel) -> LatencyModel {
+        LatencyModel::new(
+            model.gamma * self.latency_margin,
+            model.epsilon * self.latency_margin,
+            model.delta * self.latency_margin,
+            model.eta * self.latency_margin,
+        )
+    }
+}
+
+impl Autoscaler for SpongeScaler {
+    fn name(&self) -> &'static str {
+        "sponge"
+    }
+
+    fn decide(
+        &mut self,
+        obs: &ScalerObs<'_>,
+        cluster: &Cluster,
+        model: &LatencyModel,
+    ) -> Vec<Action> {
+        let Some(inst) = cluster.instances().next() else {
+            return vec![Action::Launch { cores: 1 }];
+        };
+        let lambda = obs.lambda_rps * self.lambda_headroom;
+        let input = if self.uniform_budget {
+            SolverInput::uniform(
+                obs.budgets_ms.len().max(1),
+                obs.slo_ms,
+                obs.cl_max_ms,
+                lambda,
+            )
+        } else {
+            SolverInput::per_request(obs.budgets_ms.to_vec(), lambda)
+        };
+        let planning = self.planning_model(model);
+        match self.solver.solve(&planning, &input, self.limits) {
+            Some(sol) => {
+                self.last_batch = sol.batch;
+                vec![
+                    Action::Resize { id: inst.id, cores: sol.cores },
+                    Action::SetBatch { batch: sol.batch },
+                ]
+            }
+            None => {
+                // Infeasible: best effort — max cores, smallest batch, so
+                // the most urgent requests have the best chance. (The
+                // violations that remain are the experiment's signal.)
+                self.last_batch = 1;
+                vec![
+                    Action::Resize { id: inst.id, cores: self.limits.c_max },
+                    Action::SetBatch { batch: 1 },
+                ]
+            }
+        }
+    }
+
+    fn initial_cores(&self) -> Vec<Cores> {
+        vec![1]
+    }
+}
+
+// ------------------------------------------------------------------- FA2 --
+
+/// Horizontal baseline: one-core instances only, reconfiguration every
+/// `reconfig_period_ms` (the paper observes ~10 s to find a new config and
+/// stabilize), scale-out pays the cold start.
+pub struct Fa2Scaler {
+    pub b_max: BatchSize,
+    pub reconfig_period_ms: Ms,
+    /// Queueing headroom factor: the chosen batch must fit within
+    /// `headroom × budget` (GrandSLAm-style rule of thumb).
+    pub headroom: f64,
+    last_reconfig_ms: Ms,
+    target_batch: BatchSize,
+}
+
+impl Fa2Scaler {
+    pub fn new(b_max: BatchSize) -> Fa2Scaler {
+        Fa2Scaler {
+            b_max,
+            reconfig_period_ms: 10_000.0,
+            headroom: 0.5,
+            last_reconfig_ms: f64::NEG_INFINITY,
+            target_batch: 2,
+        }
+    }
+}
+
+impl Autoscaler for Fa2Scaler {
+    fn name(&self) -> &'static str {
+        "fa2"
+    }
+
+    fn decide(
+        &mut self,
+        obs: &ScalerObs<'_>,
+        cluster: &Cluster,
+        model: &LatencyModel,
+    ) -> Vec<Action> {
+        if obs.now_ms - self.last_reconfig_ms < self.reconfig_period_ms {
+            return vec![Action::SetBatch { batch: self.target_batch }];
+        }
+        self.last_reconfig_ms = obs.now_ms;
+
+        let budget = (obs.slo_ms - obs.cl_max_ms).max(0.0);
+        // Highest-throughput one-core batch fitting the headroom budget.
+        let mut best: Option<(BatchSize, f64)> = None;
+        for b in 1..=self.b_max {
+            if model.latency_ms(b, 1) <= self.headroom * budget {
+                let h = model.throughput_rps(b, 1);
+                if best.map_or(true, |(_, bh)| h > bh) {
+                    best = Some((b, h));
+                }
+            }
+        }
+        let Some((batch, h1)) = best else {
+            // No one-core configuration can meet the budget: FA2 has no
+            // move (the §2.1 failure case) — keep the fleet, keep batching.
+            return vec![Action::SetBatch { batch: self.target_batch }];
+        };
+        self.target_batch = batch;
+        let want = (obs.lambda_rps / h1).ceil().max(1.0) as usize;
+        let have: Vec<u32> = cluster.instances().map(|i| i.id).collect();
+        let mut actions = vec![Action::SetBatch { batch }];
+        if want > have.len() {
+            for _ in 0..(want - have.len()) {
+                actions.push(Action::Launch { cores: 1 });
+            }
+        } else {
+            for id in &have[want..] {
+                actions.push(Action::Terminate { id: *id });
+            }
+        }
+        actions
+    }
+
+    fn initial_cores(&self) -> Vec<Cores> {
+        // Paper §2.1: five one-core instances handle 100 RPS at b=2; the
+        // sim pre-warms the fleet FA2 would pick for the nominal workload.
+        vec![1; 5]
+    }
+}
+
+// ---------------------------------------------------------------- Static --
+
+/// Fixed-size single instance (Fig. 4's "static 8" / "static 16").
+pub struct StaticScaler {
+    pub cores: Cores,
+    pub b_max: BatchSize,
+}
+
+impl StaticScaler {
+    pub fn new(cores: Cores, b_max: BatchSize) -> StaticScaler {
+        StaticScaler { cores, b_max }
+    }
+}
+
+impl Autoscaler for StaticScaler {
+    fn name(&self) -> &'static str {
+        "static"
+    }
+
+    fn decide(
+        &mut self,
+        obs: &ScalerObs<'_>,
+        _cluster: &Cluster,
+        model: &LatencyModel,
+    ) -> Vec<Action> {
+        // Cores are fixed; batch is still chosen per interval (smallest
+        // batch that is drain-feasible and sustains λ at this core count).
+        let input = SolverInput::per_request(obs.budgets_ms.to_vec(), obs.lambda_rps);
+        for b in 1..=self.b_max {
+            if throughput_ok(model, &input, b, self.cores)
+                && drain_feasible(model, &input, b, self.cores)
+            {
+                return vec![Action::SetBatch { batch: b }];
+            }
+        }
+        // Infeasible: biggest batch = max throughput, ride it out.
+        vec![Action::SetBatch { batch: self.b_max }]
+    }
+
+    fn initial_cores(&self) -> Vec<Cores> {
+        vec![self.cores]
+    }
+}
+
+// ------------------------------------------------------------------- VPA --
+
+/// Threshold-based vertical autoscaler (K8s VPA flavoured): utilization
+/// above `hi` ⇒ +1 core, below `lo` ⇒ −1 core. In-place resize but no
+/// deadline model — the ablation isolating "in-place resize alone is not
+/// enough; the IP solver is what guarantees SLOs".
+pub struct VpaScaler {
+    pub c_max: Cores,
+    pub batch: BatchSize,
+    pub hi: f64,
+    pub lo: f64,
+}
+
+impl VpaScaler {
+    pub fn new(c_max: Cores) -> VpaScaler {
+        VpaScaler { c_max, batch: 4, hi: 0.9, lo: 0.5 }
+    }
+}
+
+impl Autoscaler for VpaScaler {
+    fn name(&self) -> &'static str {
+        "vpa"
+    }
+
+    fn decide(
+        &mut self,
+        obs: &ScalerObs<'_>,
+        cluster: &Cluster,
+        model: &LatencyModel,
+    ) -> Vec<Action> {
+        let Some(inst) = cluster.instances().next() else {
+            return vec![Action::Launch { cores: 1 }];
+        };
+        let cores = inst.target_cores();
+        let capacity = model.throughput_rps(self.batch, cores);
+        let util = obs.lambda_rps / capacity;
+        let new_cores = if util > self.hi {
+            (cores + 1).min(self.c_max)
+        } else if util < self.lo && cores > 1 {
+            cores - 1
+        } else {
+            cores
+        };
+        let mut actions = vec![Action::SetBatch { batch: self.batch }];
+        if new_cores != cores {
+            actions.push(Action::Resize { id: inst.id, cores: new_cores });
+        }
+        actions
+    }
+
+    fn initial_cores(&self) -> Vec<Cores> {
+        vec![1]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{Cluster, ClusterCfg};
+
+    fn ready_cluster(cores_list: &[Cores]) -> Cluster {
+        let mut c = Cluster::new(ClusterCfg::default());
+        for &cores in cores_list {
+            c.launch(cores, 0.0).unwrap();
+        }
+        c.tick(10_000.0); // past cold start
+        c
+    }
+
+    fn obs<'a>(budgets: &'a [Ms], lambda: f64, cl_max: Ms) -> ScalerObs<'a> {
+        ScalerObs {
+            now_ms: 10_000.0,
+            lambda_rps: lambda,
+            budgets_ms: budgets,
+            cl_max_ms: cl_max,
+            slo_ms: 1_000.0,
+        }
+    }
+
+    #[test]
+    fn sponge_emits_resize_and_batch() {
+        let cluster = ready_cluster(&[1]);
+        let mut s = SpongeScaler::new(SolverLimits::default());
+        let model = LatencyModel::resnet_human_detector();
+        let budgets = vec![400.0; 10];
+        let actions = s.decide(&obs(&budgets, 100.0, 600.0), &cluster, &model);
+        assert_eq!(actions.len(), 2);
+        let Action::Resize { cores, .. } = actions[0] else {
+            panic!("{actions:?}")
+        };
+        assert!(cores >= 4, "{actions:?}"); // §2.1: needs many cores under 600ms delay
+        assert!(matches!(actions[1], Action::SetBatch { .. }));
+    }
+
+    #[test]
+    fn sponge_best_effort_when_infeasible() {
+        let cluster = ready_cluster(&[1]);
+        let mut s = SpongeScaler::new(SolverLimits::default());
+        let model = LatencyModel::resnet_human_detector();
+        let budgets = vec![1.0; 4]; // hopeless budgets
+        let actions = s.decide(&obs(&budgets, 20.0, 999.0), &cluster, &model);
+        assert!(actions.contains(&Action::Resize { id: 0, cores: 16 }));
+        assert!(actions.contains(&Action::SetBatch { batch: 1 }));
+    }
+
+    #[test]
+    fn sponge_launches_if_no_instance() {
+        let cluster = Cluster::new(ClusterCfg::default());
+        let mut s = SpongeScaler::new(SolverLimits::default());
+        let model = LatencyModel::resnet_human_detector();
+        let actions = s.decide(&obs(&[], 1.0, 0.0), &cluster, &model);
+        assert_eq!(actions, vec![Action::Launch { cores: 1 }]);
+    }
+
+    #[test]
+    fn fa2_scales_fleet_with_lambda() {
+        let cluster = ready_cluster(&[1; 2]);
+        let mut s = Fa2Scaler::new(16);
+        let model = LatencyModel::resnet_human_detector();
+        let actions = s.decide(&obs(&[], 100.0, 0.0), &cluster, &model);
+        let launches = actions
+            .iter()
+            .filter(|a| matches!(a, Action::Launch { .. }))
+            .count();
+        assert!(launches >= 2, "needs more 1-core instances: {actions:?}");
+    }
+
+    #[test]
+    fn fa2_respects_reconfig_period() {
+        let cluster = ready_cluster(&[1; 2]);
+        let mut s = Fa2Scaler::new(16);
+        let model = LatencyModel::resnet_human_detector();
+        let first = s.decide(&obs(&[], 100.0, 0.0), &cluster, &model);
+        assert!(first.len() > 1);
+        // 1 s later: inside the reconfig window, no new launches.
+        let mut o = obs(&[], 200.0, 0.0);
+        o.now_ms = 11_000.0;
+        let second = s.decide(&o, &cluster, &model);
+        assert_eq!(
+            second
+                .iter()
+                .filter(|a| matches!(a, Action::Launch { .. }))
+                .count(),
+            0,
+            "{second:?}"
+        );
+    }
+
+    #[test]
+    fn fa2_stuck_when_one_core_infeasible() {
+        let cluster = ready_cluster(&[1; 5]);
+        let mut s = Fa2Scaler::new(16);
+        let model = LatencyModel::resnet_human_detector();
+        // cl_max = 900 ⇒ budget 100 ms, headroom 50 ms < l(1,1) = 55.5 ms.
+        let actions = s.decide(&obs(&[], 100.0, 900.0), &cluster, &model);
+        assert_eq!(
+            actions
+                .iter()
+                .filter(|a| !matches!(a, Action::SetBatch { .. }))
+                .count(),
+            0,
+            "FA2 should have no move: {actions:?}"
+        );
+    }
+
+    #[test]
+    fn fa2_scales_in_when_over_provisioned() {
+        let cluster = ready_cluster(&[1; 10]);
+        let mut s = Fa2Scaler::new(16);
+        let model = LatencyModel::resnet_human_detector();
+        let actions = s.decide(&obs(&[], 20.0, 0.0), &cluster, &model);
+        assert!(
+            actions.iter().any(|a| matches!(a, Action::Terminate { .. })),
+            "{actions:?}"
+        );
+    }
+
+    #[test]
+    fn static_scaler_only_sets_batch() {
+        let cluster = ready_cluster(&[8]);
+        let mut s = StaticScaler::new(8, 16);
+        let model = LatencyModel::resnet_human_detector();
+        let budgets = vec![500.0; 5];
+        let actions = s.decide(&obs(&budgets, 20.0, 100.0), &cluster, &model);
+        assert_eq!(actions.len(), 1);
+        assert!(matches!(actions[0], Action::SetBatch { .. }));
+    }
+
+    #[test]
+    fn vpa_scales_up_on_high_utilization() {
+        let cluster = ready_cluster(&[2]);
+        let mut s = VpaScaler::new(16);
+        let model = LatencyModel::resnet_human_detector();
+        let actions = s.decide(&obs(&[], 200.0, 0.0), &cluster, &model);
+        assert!(
+            actions.contains(&Action::Resize { id: 0, cores: 3 }),
+            "{actions:?}"
+        );
+    }
+
+    #[test]
+    fn vpa_scales_down_when_idle() {
+        let cluster = ready_cluster(&[4]);
+        let mut s = VpaScaler::new(16);
+        let model = LatencyModel::resnet_human_detector();
+        let actions = s.decide(&obs(&[], 1.0, 0.0), &cluster, &model);
+        assert!(
+            actions.contains(&Action::Resize { id: 0, cores: 3 }),
+            "{actions:?}"
+        );
+    }
+}

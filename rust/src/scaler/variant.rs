@@ -1,0 +1,204 @@
+//! Model-variant switching scaler — the paper's §6 "Model variant"
+//! future-work direction (and the Jellyfish [27] / INFaaS [29] related
+//! work): when even vertical scaling cannot meet the remaining budgets,
+//! fall back to a lighter model variant, trading accuracy for latency;
+//! switch back up when slack returns.
+//!
+//! Variants are assumed pre-loaded (the paper's related work notes
+//! Jellyfish uses preloaded model switching to avoid cold starts; our AOT
+//! runtime compiles every variant at startup, so switching is free).
+
+use super::{Action, Autoscaler, ScalerObs, SpongeScaler};
+use crate::cluster::Cluster;
+use crate::perfmodel::LatencyModel;
+use crate::solver::{IncrementalSolver, IpSolver, SolverInput, SolverLimits};
+
+/// One switchable model variant.
+#[derive(Debug, Clone)]
+pub struct Variant {
+    pub name: String,
+    pub model: LatencyModel,
+    /// Reference accuracy (e.g. mAP) — only used for reporting/objective
+    /// ordering; higher is better.
+    pub accuracy: f64,
+}
+
+/// Sponge + variant switching: run the IP per variant from most- to
+/// least-accurate, pick the first feasible one, and emit the Sponge
+/// actions for it plus a `SwitchVariant` marker via the decision log.
+pub struct VariantScaler {
+    pub limits: SolverLimits,
+    variants: Vec<Variant>, // sorted by accuracy, descending
+    inner: SpongeScaler,
+    active: usize,
+    switches: u64,
+}
+
+impl VariantScaler {
+    /// `variants` in any order; sorted by accuracy descending internally.
+    pub fn new(limits: SolverLimits, mut variants: Vec<Variant>) -> VariantScaler {
+        assert!(!variants.is_empty());
+        variants.sort_by(|a, b| b.accuracy.total_cmp(&a.accuracy));
+        VariantScaler {
+            limits,
+            variants,
+            inner: SpongeScaler::new(limits),
+            active: 0,
+            switches: 0,
+        }
+    }
+
+    /// The paper-adjacent default ladder: YOLOv5s > ResNet18 > YOLOv5n.
+    pub fn paper_ladder(limits: SolverLimits) -> VariantScaler {
+        VariantScaler::new(
+            limits,
+            vec![
+                Variant {
+                    name: "yolov5s".into(),
+                    model: LatencyModel::yolov5s(),
+                    accuracy: 0.568,
+                },
+                Variant {
+                    name: "resnet18".into(),
+                    model: LatencyModel::resnet_human_detector(),
+                    accuracy: 0.48,
+                },
+                Variant {
+                    name: "yolov5n".into(),
+                    model: LatencyModel::yolov5n(),
+                    accuracy: 0.459,
+                },
+            ],
+        )
+    }
+
+    pub fn active_variant(&self) -> &Variant {
+        &self.variants[self.active]
+    }
+
+    pub fn switches(&self) -> u64 {
+        self.switches
+    }
+
+    /// Pick the most accurate variant with a feasible (c, b).
+    fn choose(&self, obs: &ScalerObs<'_>) -> usize {
+        let solver = IncrementalSolver;
+        let lambda = obs.lambda_rps * self.inner.lambda_headroom;
+        for (i, v) in self.variants.iter().enumerate() {
+            let input =
+                SolverInput::per_request(obs.budgets_ms.to_vec(), lambda);
+            if solver.solve(&v.model, &input, self.limits).is_some() {
+                return i;
+            }
+        }
+        // Nothing feasible: run the lightest variant best-effort.
+        self.variants.len() - 1
+    }
+}
+
+impl Autoscaler for VariantScaler {
+    fn name(&self) -> &'static str {
+        "variant-sponge"
+    }
+
+    fn decide(
+        &mut self,
+        obs: &ScalerObs<'_>,
+        cluster: &Cluster,
+        _model: &LatencyModel,
+    ) -> Vec<Action> {
+        let pick = self.choose(obs);
+        if pick != self.active {
+            self.switches += 1;
+            self.active = pick;
+        }
+        // Delegate the (c, b) decision to the Sponge core, planning with
+        // the ACTIVE variant's model (ignoring the engine-reported model —
+        // the variant IS the model here), and tell the engine to switch.
+        let model = self.variants[self.active].model;
+        let mut actions = vec![Action::SwitchModel { model }];
+        actions.extend(self.inner.decide(obs, cluster, &model));
+        actions
+    }
+
+    fn initial_cores(&self) -> Vec<u32> {
+        vec![1]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{Cluster, ClusterCfg};
+
+    fn ready_cluster() -> Cluster {
+        let mut c = Cluster::new(ClusterCfg::default());
+        c.launch(4, 0.0).unwrap();
+        c.tick(10_000.0);
+        c
+    }
+
+    fn obs<'a>(budgets: &'a [f64], lambda: f64) -> ScalerObs<'a> {
+        ScalerObs {
+            now_ms: 10_000.0,
+            lambda_rps: lambda,
+            budgets_ms: budgets,
+            cl_max_ms: 0.0,
+            slo_ms: 1_000.0,
+        }
+    }
+
+    #[test]
+    fn ladder_sorted_by_accuracy() {
+        let s = VariantScaler::paper_ladder(SolverLimits::default());
+        assert_eq!(s.variants[0].name, "yolov5s");
+        assert_eq!(s.variants[2].name, "yolov5n");
+    }
+
+    #[test]
+    fn keeps_accurate_variant_when_slack() {
+        let mut s = VariantScaler::paper_ladder(SolverLimits::default());
+        let cluster = ready_cluster();
+        let budgets = vec![900.0; 5];
+        let _ = s.decide(&obs(&budgets, 10.0), &cluster, &LatencyModel::yolov5s());
+        assert_eq!(s.active_variant().name, "yolov5s");
+        assert_eq!(s.switches(), 0);
+    }
+
+    #[test]
+    fn downgrades_under_pressure_and_recovers() {
+        let mut s = VariantScaler::paper_ladder(SolverLimits::default());
+        let cluster = ready_cluster();
+        // λ = 100 rps: yolov5s tops out ~30 rps even at c=16 → must
+        // downshift to a lighter variant that can sustain it.
+        let budgets = vec![600.0; 20];
+        let _ = s.decide(&obs(&budgets, 100.0), &cluster, &LatencyModel::yolov5s());
+        assert_ne!(s.active_variant().name, "yolov5s", "did not downshift");
+        assert_eq!(s.switches(), 1);
+        // Pressure gone: upshift back.
+        let relaxed = vec![900.0; 3];
+        let _ = s.decide(&obs(&relaxed, 5.0), &cluster, &LatencyModel::yolov5s());
+        assert_eq!(s.active_variant().name, "yolov5s");
+        assert_eq!(s.switches(), 2);
+    }
+
+    #[test]
+    fn hopeless_budget_runs_lightest_best_effort() {
+        let mut s = VariantScaler::paper_ladder(SolverLimits::default());
+        let cluster = ready_cluster();
+        let budgets = vec![1.0; 10];
+        let actions = s.decide(&obs(&budgets, 50.0), &cluster, &LatencyModel::yolov5s());
+        assert_eq!(s.active_variant().name, "yolov5n");
+        assert!(!actions.is_empty());
+    }
+
+    #[test]
+    fn emits_sponge_shaped_actions() {
+        let mut s = VariantScaler::paper_ladder(SolverLimits::default());
+        let cluster = ready_cluster();
+        let budgets = vec![800.0; 8];
+        let actions = s.decide(&obs(&budgets, 20.0), &cluster, &LatencyModel::yolov5s());
+        assert!(actions.iter().any(|a| matches!(a, Action::Resize { .. })));
+        assert!(actions.iter().any(|a| matches!(a, Action::SetBatch { .. })));
+    }
+}

@@ -1,0 +1,217 @@
+//! Minimal HTTP/1.0 server: request ingest + Prometheus metrics endpoint.
+//!
+//! Routes:
+//! * `POST /infer`   — JSON `{"slo_ms": float, "comm_ms": float,
+//!   "image": [f32; image_len]}` → JSON response with logits and timing.
+//! * `GET /metrics`  — Prometheus text exposition.
+//! * `GET /healthz`  — liveness probe.
+//!
+//! Hand-rolled (no HTTP crate offline): enough of HTTP/1.0 for our own
+//! client, curl, and Prometheus scrapers. One thread per connection —
+//! fine at the paper's 20 RPS; the inference hot path is inside the
+//! coordinator, not here.
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::{Coordinator, LiveRequest};
+use crate::util::json::Json;
+
+/// A running HTTP server; dropping the handle does not stop it — call
+/// [`ServerHandle::stop`].
+pub struct ServerHandle {
+    addr: std::net::SocketAddr,
+    stop: Arc<AtomicBool>,
+    thread: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ServerHandle {
+    pub fn addr(&self) -> std::net::SocketAddr {
+        self.addr
+    }
+
+    pub fn stop(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // Nudge the accept loop.
+        let _ = TcpStream::connect(self.addr);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Start serving `coordinator` on `bind` (e.g. "127.0.0.1:0").
+pub fn serve(bind: &str, coordinator: Arc<Coordinator>) -> Result<ServerHandle> {
+    let listener = TcpListener::bind(bind).with_context(|| format!("binding {bind}"))?;
+    let addr = listener.local_addr()?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let stop2 = Arc::clone(&stop);
+    let thread = std::thread::spawn(move || {
+        for conn in listener.incoming() {
+            if stop2.load(Ordering::SeqCst) {
+                break;
+            }
+            let Ok(stream) = conn else { continue };
+            let coordinator = Arc::clone(&coordinator);
+            std::thread::spawn(move || {
+                let _ = handle_conn(stream, &coordinator);
+            });
+        }
+    });
+    Ok(ServerHandle { addr, stop, thread: Some(thread) })
+}
+
+fn handle_conn(stream: TcpStream, coordinator: &Coordinator) -> Result<()> {
+    stream.set_read_timeout(Some(Duration::from_secs(10)))?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut request_line = String::new();
+    reader.read_line(&mut request_line)?;
+    let mut parts = request_line.split_whitespace();
+    let method = parts.next().unwrap_or("").to_string();
+    let path = parts.next().unwrap_or("").to_string();
+
+    // Headers: we only need Content-Length.
+    let mut content_length = 0usize;
+    loop {
+        let mut line = String::new();
+        reader.read_line(&mut line)?;
+        let line = line.trim();
+        if line.is_empty() {
+            break;
+        }
+        if let Some((k, v)) = line.split_once(':') {
+            if k.eq_ignore_ascii_case("content-length") {
+                content_length = v.trim().parse().unwrap_or(0);
+            }
+        }
+    }
+
+    // Read the body BEFORE discarding the BufReader — its internal buffer
+    // may already hold body bytes.
+    let mut body = vec![0u8; content_length];
+    if content_length > 0 {
+        reader.read_exact(&mut body)?;
+    }
+    let mut stream = reader.into_inner();
+    match (method.as_str(), path.as_str()) {
+        ("GET", "/healthz") => respond(&mut stream, 200, "text/plain", "ok"),
+        ("GET", "/metrics") => {
+            let body = coordinator.metrics.expose();
+            respond(&mut stream, 200, "text/plain; version=0.0.4", &body)
+        }
+        ("POST", "/infer") => {
+            let text = String::from_utf8_lossy(&body);
+            match handle_infer(&text, coordinator) {
+                Ok(json) => respond(&mut stream, 200, "application/json", &json.to_string()),
+                Err(e) => respond(
+                    &mut stream,
+                    400,
+                    "application/json",
+                    &Json::obj(vec![("error", Json::str(&e.to_string()))]).to_string(),
+                ),
+            }
+        }
+        _ => respond(&mut stream, 404, "text/plain", "not found"),
+    }
+}
+
+fn handle_infer(body: &str, coordinator: &Coordinator) -> Result<Json> {
+    let doc = Json::parse(body).map_err(|e| anyhow::anyhow!("bad json: {e}"))?;
+    let slo_ms = doc.get("slo_ms").as_f64().unwrap_or(1_000.0);
+    let comm_ms = doc.get("comm_ms").as_f64().unwrap_or(0.0);
+    let image: Vec<f32> = doc
+        .get("image")
+        .as_arr()
+        .context("missing 'image' array")?
+        .iter()
+        .filter_map(|v| v.as_f64())
+        .map(|v| v as f32)
+        .collect();
+    let (tx, rx) = mpsc::channel();
+    coordinator.submit(LiveRequest { id: 0, image, slo_ms, comm_latency_ms: comm_ms, reply: tx });
+    let resp = rx
+        .recv_timeout(Duration::from_secs_f64(slo_ms.max(1_000.0) / 1_000.0 * 3.0))
+        .map_err(|_| anyhow::anyhow!("inference timed out"))?;
+    Ok(Json::obj(vec![
+        ("id", Json::num(resp.id as f64)),
+        ("logits", Json::arr(resp.logits.iter().map(|&v| Json::num(v as f64)))),
+        ("queue_ms", Json::num(resp.queue_ms)),
+        ("processing_ms", Json::num(resp.processing_ms)),
+        ("server_ms", Json::num(resp.server_ms)),
+        ("violated", Json::Bool(resp.violated)),
+        ("dropped", Json::Bool(resp.dropped)),
+    ]))
+}
+
+fn respond(stream: &mut TcpStream, code: u16, ctype: &str, body: &str) -> Result<()> {
+    let status = match code {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        _ => "Internal Server Error",
+    };
+    write!(
+        stream,
+        "HTTP/1.0 {code} {status}\r\nContent-Type: {ctype}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    )?;
+    stream.flush()?;
+    Ok(())
+}
+
+/// Tiny blocking HTTP client for tests and the example workload generator
+/// (no HTTP crate offline).
+pub mod client {
+    use super::*;
+
+    /// `GET path` → (status, body).
+    pub fn get(addr: &std::net::SocketAddr, path: &str) -> Result<(u16, String)> {
+        let mut stream = TcpStream::connect(addr)?;
+        write!(stream, "GET {path} HTTP/1.0\r\nHost: sponge\r\n\r\n")?;
+        read_response(stream)
+    }
+
+    /// `POST path` with a JSON body → (status, body).
+    pub fn post_json(
+        addr: &std::net::SocketAddr,
+        path: &str,
+        body: &str,
+    ) -> Result<(u16, String)> {
+        let mut stream = TcpStream::connect(addr)?;
+        write!(
+            stream,
+            "POST {path} HTTP/1.0\r\nHost: sponge\r\nContent-Type: application/json\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        )?;
+        read_response(stream)
+    }
+
+    fn read_response(stream: TcpStream) -> Result<(u16, String)> {
+        let mut reader = BufReader::new(stream);
+        let mut status_line = String::new();
+        reader.read_line(&mut status_line)?;
+        let code: u16 = status_line
+            .split_whitespace()
+            .nth(1)
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0);
+        let mut line = String::new();
+        loop {
+            line.clear();
+            reader.read_line(&mut line)?;
+            if line.trim().is_empty() {
+                break;
+            }
+        }
+        let mut body = String::new();
+        reader.read_to_string(&mut body)?;
+        Ok((code, body))
+    }
+}
+
+// Integration tests live in rust/tests/server_http.rs.

@@ -1,0 +1,483 @@
+//! Discrete-event serving simulator (virtual time).
+//!
+//! Wires workload + network + EDF queue + cluster + autoscaler + a latency
+//! engine into one deterministic event loop, so the paper's 10-minute
+//! Fig. 4 experiments replay in milliseconds of wall time. The live
+//! coordinator ([`crate::coordinator`]) runs the same components against
+//! the real PJRT engine; the simulator swaps only the clock and the
+//! compute.
+//!
+//! Event order is fully deterministic: ties break on a monotone sequence
+//! number, and all randomness (arrival gaps, latency noise) is PCG-seeded.
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
+
+use crate::cluster::{Cluster, ClusterCfg};
+use crate::monitoring::{Outcome, RateEstimator, SloTracker};
+use crate::network::NetworkModel;
+use crate::perfmodel::LatencyModel;
+use crate::queue::EdfQueue;
+use crate::scaler::{Action, Autoscaler, ScalerObs};
+use crate::util::rng::Pcg32;
+use crate::workload::{Request, WorkloadGen};
+use crate::{BatchSize, Cores, Ms};
+
+/// Simulation configuration.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    /// Experiment horizon (ms of virtual time). Paper: 600_000 (10 min).
+    pub horizon_ms: Ms,
+    /// Scaler adaptation interval. Paper: 1_000 ms ("same as the network
+    /// bandwidth interval in the dataset").
+    pub adaptation_interval_ms: Ms,
+    pub workload: WorkloadGen,
+    pub model: LatencyModel,
+    pub cluster: ClusterCfg,
+    /// Lognormal latency-noise coefficient of variation (0 = exact model).
+    pub latency_noise_cv: f64,
+    /// Seed for the engine-noise stream.
+    pub seed: u64,
+    /// Reject hopeless requests at arrival (budget below `l(1, c_max)`)
+    /// instead of letting them pollute the queue. Ablation knob; the
+    /// paper's prototype only drops at deadline expiry.
+    pub admission_control: bool,
+}
+
+impl SimConfig {
+    /// The paper's §4 experiment shape (model + 20 RPS + 1 s adaptation).
+    pub fn paper_default() -> SimConfig {
+        SimConfig {
+            horizon_ms: 600_000.0,
+            adaptation_interval_ms: 1_000.0,
+            workload: WorkloadGen::paper_default(),
+            model: LatencyModel::yolov5s(),
+            cluster: ClusterCfg::default(),
+            latency_noise_cv: 0.05,
+            seed: 0x5f0_46e,
+            admission_control: false,
+        }
+    }
+}
+
+/// Simulation output: everything the Fig. 4 bench and the integration
+/// tests need.
+#[derive(Debug)]
+pub struct SimResult {
+    pub policy: String,
+    pub tracker: SloTracker,
+    /// Per-adaptation-interval allocated cores (Fig. 4 bottom).
+    pub cores_series: Vec<(Ms, Cores)>,
+    /// Per-interval batch size decisions.
+    pub batch_series: Vec<(Ms, BatchSize)>,
+    /// Allocated core-ms integral over the run.
+    pub core_ms: f64,
+    /// Mean allocated cores over the run.
+    pub mean_cores: f64,
+    /// Total wall-clock nanoseconds spent inside `scaler.decide` and the
+    /// number of calls (the scaler hot path, for §Perf).
+    pub scaler_ns_total: u64,
+    pub scaler_calls: u64,
+    /// Requests generated / completed / dropped.
+    pub generated: u64,
+}
+
+#[derive(Debug)]
+enum EventKind {
+    Arrival(Request),
+    /// Batch finished on an instance; carries the requests and completion
+    /// metadata.
+    Done { instance: u32, requests: Vec<Request>, started_ms: Ms },
+    Tick,
+}
+
+struct Event {
+    t: Ms,
+    seq: u64,
+    kind: EventKind,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.t == other.t && self.seq == other.seq
+    }
+}
+
+impl Eq for Event {}
+
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.t.total_cmp(&other.t).then_with(|| self.seq.cmp(&other.seq))
+    }
+}
+
+/// Run one policy over one workload/trace. Deterministic per config+seed.
+pub fn run(cfg: &SimConfig, net: &NetworkModel, mut scaler: Box<dyn Autoscaler>) -> SimResult {
+    let requests = cfg.workload.generate(cfg.horizon_ms, net);
+    let generated = requests.len() as u64;
+
+    let mut heap: BinaryHeap<Reverse<Event>> = BinaryHeap::new();
+    let mut seq = 0u64;
+    let push = |heap: &mut BinaryHeap<Reverse<Event>>, seq: &mut u64, t: Ms, kind: EventKind| {
+        *seq += 1;
+        heap.push(Reverse(Event { t, seq: *seq, kind }));
+    };
+
+    for r in requests {
+        push(&mut heap, &mut seq, r.arrived_at_ms, EventKind::Arrival(r));
+    }
+    push(&mut heap, &mut seq, 0.0, EventKind::Tick);
+
+    let mut cluster = Cluster::new(cfg.cluster);
+    // Pre-warm the policy's initial fleet (the paper's runs start from a
+    // stable system): launch in the past so instances are Ready at t=0.
+    for cores in scaler.initial_cores() {
+        let id = cluster.launch(cores, 0.0).expect("initial fleet fits node");
+        let _ = id;
+    }
+    cluster.tick(cfg.cluster.cold_start_ms); // cold start elapses pre-experiment
+    // Reset the ledger so core-ms counts only the experiment window.
+    let mut cluster = rebuild_warm(&cluster, cfg);
+
+    let mut queue = EdfQueue::new();
+    let mut tracker = SloTracker::new(cfg.adaptation_interval_ms);
+    let mut rate = RateEstimator::new(5_000.0);
+    let mut noise = Pcg32::seeded(cfg.seed);
+    let mut busy: HashMap<u32, bool> = HashMap::new();
+    let mut batch_size: BatchSize = 1;
+    let mut cl_max_window: Ms = 0.0;
+    let mut cores_series = Vec::new();
+    let mut batch_series = Vec::new();
+    let mut scaler_ns_total = 0u64;
+    let mut scaler_calls = 0u64;
+
+    let sigma = if cfg.latency_noise_cv > 0.0 {
+        (cfg.latency_noise_cv.powi(2) + 1.0).ln().sqrt()
+    } else {
+        0.0
+    };
+    // Fastest possible single-request processing time — the admission
+    // controller's floor (queue::AdmissionControl semantics).
+    let admission_floor: Ms = cfg.model.latency_ms(1, 16);
+    // The model the engine currently executes (variant switching swaps it
+    // via Action::SwitchModel; plain policies never touch it).
+    let mut exec_model = cfg.model;
+
+    while let Some(Reverse(ev)) = heap.pop() {
+        let now = ev.t;
+        match ev.kind {
+            EventKind::Arrival(r) => {
+                rate.on_arrival(now);
+                cl_max_window = cl_max_window.max(r.comm_latency_ms);
+                if cfg.admission_control && r.remaining_budget_ms(now) < admission_floor {
+                    // Hopeless at arrival: reject without queueing.
+                    tracker.record(
+                        now,
+                        &Outcome {
+                            request_id: r.id,
+                            e2e_ms: now - r.sent_at_ms,
+                            queue_ms: 0.0,
+                            processing_ms: 0.0,
+                            violated: true,
+                            dropped: true,
+                        },
+                    );
+                    continue;
+                }
+                queue.push(r);
+                dispatch(
+                    now, &mut queue, &mut cluster, &mut busy, batch_size, &exec_model,
+                    sigma, &mut noise, &mut heap, &mut seq, &mut tracker,
+                );
+            }
+            EventKind::Done { instance, requests, started_ms } => {
+                busy.insert(instance, false);
+                for r in &requests {
+                    let e2e = now - r.sent_at_ms;
+                    tracker.record(
+                        now,
+                        &Outcome {
+                            request_id: r.id,
+                            e2e_ms: e2e,
+                            queue_ms: started_ms - r.arrived_at_ms,
+                            processing_ms: now - started_ms,
+                            violated: e2e > r.slo_ms + 1e-9,
+                            dropped: false,
+                        },
+                    );
+                }
+                dispatch(
+                    now, &mut queue, &mut cluster, &mut busy, batch_size, &exec_model,
+                    sigma, &mut noise, &mut heap, &mut seq, &mut tracker,
+                );
+            }
+            EventKind::Tick => {
+                cluster.tick(now);
+                drop_expired(now, &mut queue, &mut tracker);
+                let budgets = queue.remaining_budgets(now);
+                let obs = ScalerObs {
+                    now_ms: now,
+                    lambda_rps: rate.rate_rps(now),
+                    budgets_ms: &budgets,
+                    cl_max_ms: cl_max_window,
+                    slo_ms: cfg.workload.slo_ms,
+                };
+                let t0 = std::time::Instant::now();
+                let actions = scaler.decide(&obs, &cluster, &exec_model);
+                scaler_ns_total += t0.elapsed().as_nanos() as u64;
+                scaler_calls += 1;
+                cl_max_window = 0.0;
+                for a in actions {
+                    apply(a, now, &mut cluster, &mut batch_size, &mut exec_model);
+                }
+                cores_series.push((now, cluster.allocated_cores()));
+                batch_series.push((now, batch_size));
+                let next = now + cfg.adaptation_interval_ms;
+                if next < cfg.horizon_ms {
+                    push(&mut heap, &mut seq, next, EventKind::Tick);
+                }
+                dispatch(
+                    now, &mut queue, &mut cluster, &mut busy, batch_size, &exec_model,
+                    sigma, &mut noise, &mut heap, &mut seq, &mut tracker,
+                );
+            }
+        }
+    }
+
+    // Anything still queued at the end (no events left to drive it) is a
+    // drop — can only happen when no instance ever became ready.
+    let end = cfg.horizon_ms;
+    for r in queue.remaining_budgets(end) {
+        let _ = r;
+    }
+    while let Some(r) = queue.pop() {
+        tracker.record(
+            end,
+            &Outcome {
+                request_id: r.id,
+                e2e_ms: end - r.sent_at_ms,
+                queue_ms: end - r.arrived_at_ms,
+                processing_ms: 0.0,
+                violated: true,
+                dropped: true,
+            },
+        );
+    }
+    cluster.tick(end.max(cores_series.last().map_or(0.0, |c| c.0)));
+
+    let mean_cores = if cores_series.is_empty() {
+        0.0
+    } else {
+        cores_series.iter().map(|&(_, c)| c as f64).sum::<f64>() / cores_series.len() as f64
+    };
+    SimResult {
+        policy: scaler.name().to_string(),
+        tracker,
+        core_ms: cluster.core_ms_integral(),
+        mean_cores,
+        cores_series,
+        batch_series,
+        scaler_ns_total,
+        scaler_calls,
+        generated,
+    }
+}
+
+/// Re-create the pre-warmed cluster with a fresh ledger (so core-ms
+/// integrals exclude the warm-up phase).
+fn rebuild_warm(cluster: &Cluster, cfg: &SimConfig) -> Cluster {
+    let mut fresh = Cluster::new(cfg.cluster);
+    for inst in cluster.instances() {
+        let id = fresh.launch(inst.cores(), -cfg.cluster.cold_start_ms).unwrap();
+        let _ = id;
+    }
+    fresh.tick(0.0);
+    fresh
+}
+
+fn drop_expired(now: Ms, queue: &mut EdfQueue, tracker: &mut SloTracker) {
+    for r in queue.drop_expired(now) {
+        tracker.record(
+            now,
+            &Outcome {
+                request_id: r.id,
+                e2e_ms: now - r.sent_at_ms,
+                queue_ms: now - r.arrived_at_ms,
+                processing_ms: 0.0,
+                violated: true,
+                dropped: true,
+            },
+        );
+    }
+}
+
+/// Work-conserving dispatch: every ready idle instance takes the next
+/// batch off the EDF queue.
+#[allow(clippy::too_many_arguments)]
+fn dispatch(
+    now: Ms,
+    queue: &mut EdfQueue,
+    cluster: &mut Cluster,
+    busy: &mut HashMap<u32, bool>,
+    batch_size: BatchSize,
+    model: &LatencyModel,
+    sigma: f64,
+    noise: &mut Pcg32,
+    heap: &mut BinaryHeap<Reverse<Event>>,
+    seq: &mut u64,
+    tracker: &mut SloTracker,
+) {
+    if queue.is_empty() {
+        // Fast path: arrivals/done events with nothing waiting — skip the
+        // expiry sweep and instance scan (§Perf iteration 4).
+        cluster.tick(now);
+        return;
+    }
+    drop_expired(now, queue, tracker);
+    cluster.tick(now);
+    let ready: Vec<(u32, Cores)> = cluster
+        .ready_instances(now)
+        .iter()
+        .map(|i| (i.id, i.cores()))
+        .collect();
+    for (id, cores) in ready {
+        if *busy.get(&id).unwrap_or(&false) {
+            continue;
+        }
+        let Some(batch) = queue.take_batch(batch_size) else {
+            break;
+        };
+        let mut latency = model.latency_ms(batch.len() as BatchSize, cores);
+        if sigma > 0.0 {
+            latency *= noise.lognormal(-sigma * sigma / 2.0, sigma);
+        }
+        busy.insert(id, true);
+        *seq += 1;
+        heap.push(Reverse(Event {
+            t: now + latency,
+            seq: *seq,
+            kind: EventKind::Done { instance: id, requests: batch.requests, started_ms: now },
+        }));
+    }
+}
+
+fn apply(
+    action: Action,
+    now: Ms,
+    cluster: &mut Cluster,
+    batch_size: &mut BatchSize,
+    exec_model: &mut LatencyModel,
+) {
+    match action {
+        Action::Resize { id, cores } => {
+            // Capacity errors surface as no-ops: the scaler retries next
+            // tick (matches K8s behaviour of rejecting invalid patches).
+            let _ = cluster.resize(id, cores, now);
+        }
+        Action::Launch { cores } => {
+            let _ = cluster.launch(cores, now);
+        }
+        Action::Terminate { id } => {
+            let _ = cluster.terminate(id, now);
+        }
+        Action::SetBatch { batch } => {
+            *batch_size = batch.max(1);
+        }
+        Action::SwitchModel { model } => {
+            // Variant switch: pre-loaded executables, takes effect on the
+            // next dispatched batch (no cold start).
+            *exec_model = model;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::network::BandwidthTrace;
+    use crate::scaler::{SpongeScaler, StaticScaler};
+    use crate::solver::SolverLimits;
+
+    fn fast_cfg(horizon_s: usize) -> (SimConfig, NetworkModel) {
+        let cfg = SimConfig {
+            horizon_ms: horizon_s as f64 * 1_000.0,
+            adaptation_interval_ms: 1_000.0,
+            workload: WorkloadGen::paper_default(),
+            model: LatencyModel::resnet_human_detector(),
+            cluster: ClusterCfg::default(),
+            latency_noise_cv: 0.0,
+            seed: 42,
+            admission_control: false,
+        };
+        let net = NetworkModel::new(BandwidthTrace::synthetic_4g(horizon_s, 1_000.0, 9));
+        (cfg, net)
+    }
+
+    #[test]
+    fn sponge_run_conserves_requests() {
+        let (cfg, net) = fast_cfg(30);
+        let r = run(&cfg, &net, Box::new(SpongeScaler::new(SolverLimits::default())));
+        assert_eq!(r.tracker.total(), r.generated, "{r:?}");
+        assert_eq!(r.generated, 600); // 20 rps * 30 s
+    }
+
+    #[test]
+    fn sponge_keeps_violations_low_on_good_network() {
+        let (mut cfg, _) = fast_cfg(60);
+        cfg.latency_noise_cv = 0.05;
+        // Constant high bandwidth: comm latency small and stable.
+        let net = NetworkModel::new(
+            BandwidthTrace::from_samples(1_000.0, vec![5.0e6; 60]).unwrap(),
+        );
+        let r = run(&cfg, &net, Box::new(SpongeScaler::new(SolverLimits::default())));
+        assert!(
+            r.tracker.violation_rate_pct() < 1.0,
+            "violations {}% ({} of {})",
+            r.tracker.violation_rate_pct(),
+            r.tracker.violations(),
+            r.tracker.total()
+        );
+    }
+
+    #[test]
+    fn static16_overprovisions_relative_to_sponge() {
+        let (cfg, net) = fast_cfg(120);
+        let sponge = run(
+            &cfg,
+            &net,
+            Box::new(SpongeScaler::new(SolverLimits::default())),
+        );
+        let static16 = run(&cfg, &net, Box::new(StaticScaler::new(16, 16)));
+        assert!(
+            sponge.core_ms < static16.core_ms,
+            "sponge {} vs static16 {}",
+            sponge.core_ms,
+            static16.core_ms
+        );
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (cfg, net) = fast_cfg(20);
+        let a = run(&cfg, &net, Box::new(SpongeScaler::new(SolverLimits::default())));
+        let b = run(&cfg, &net, Box::new(SpongeScaler::new(SolverLimits::default())));
+        assert_eq!(a.tracker.violations(), b.tracker.violations());
+        assert_eq!(a.cores_series, b.cores_series);
+        assert_eq!(a.core_ms, b.core_ms);
+    }
+
+    #[test]
+    fn series_lengths_match_horizon() {
+        let (cfg, net) = fast_cfg(30);
+        let r = run(&cfg, &net, Box::new(SpongeScaler::new(SolverLimits::default())));
+        assert_eq!(r.cores_series.len(), 30);
+        assert_eq!(r.batch_series.len(), 30);
+        assert!(r.scaler_calls == 30);
+    }
+}

@@ -1,0 +1,247 @@
+//! Bench harness (the `criterion` substitute).
+//!
+//! Each `rust/benches/bench_*.rs` binary (`harness = false`) drives this:
+//! warmup, timed iterations until a sample budget is reached, summary
+//! statistics, and a formatted table + JSON dump so EXPERIMENTS.md rows can
+//! be regenerated mechanically.
+
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+use super::json::Json;
+use super::stats::Summary;
+
+/// One measured benchmark with timing statistics in nanoseconds.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub summary: Summary,
+}
+
+impl BenchResult {
+    pub fn mean_ns(&self) -> f64 {
+        self.summary.mean
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(&self.name)),
+            ("iters", Json::num(self.iters as f64)),
+            ("mean_ns", Json::num(self.summary.mean)),
+            ("p50_ns", Json::num(self.summary.p50)),
+            ("p99_ns", Json::num(self.summary.p99)),
+            ("std_ns", Json::num(self.summary.std)),
+        ])
+    }
+}
+
+/// Measure `f` by timing batches. `min_samples` timed samples are taken,
+/// each over enough iterations to exceed ~1 ms of work (so timer overhead
+/// vanishes) unless a single call is already slow.
+pub fn bench<F: FnMut()>(name: &str, mut f: F) -> BenchResult {
+    bench_with(name, Duration::from_millis(300), 30, &mut f)
+}
+
+/// Full-control variant: total budget + target sample count.
+pub fn bench_with<F: FnMut()>(
+    name: &str,
+    budget: Duration,
+    min_samples: usize,
+    f: &mut F,
+) -> BenchResult {
+    // Warmup + calibration: how many iters fit in ~1 ms?
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed().max(Duration::from_nanos(10));
+    let per_sample_iters = ((Duration::from_millis(1).as_nanos()
+        / once.as_nanos().max(1)) as u64)
+        .clamp(1, 1_000_000);
+
+    let mut samples = Vec::with_capacity(min_samples);
+    let mut total_iters = 0u64;
+    let start = Instant::now();
+    while samples.len() < min_samples
+        || (start.elapsed() < budget && samples.len() < 10_000)
+    {
+        let t = Instant::now();
+        for _ in 0..per_sample_iters {
+            f();
+        }
+        let dt = t.elapsed().as_nanos() as f64 / per_sample_iters as f64;
+        samples.push(dt);
+        total_iters += per_sample_iters;
+        if start.elapsed() > budget && samples.len() >= min_samples {
+            break;
+        }
+    }
+    BenchResult {
+        name: name.to_string(),
+        iters: total_iters,
+        summary: Summary::of(&samples),
+    }
+}
+
+/// Re-export for bench bodies to defeat constant folding.
+pub fn keep<T>(x: T) -> T {
+    black_box(x)
+}
+
+/// Collects results across a bench binary and prints the report.
+#[derive(Default)]
+pub struct Reporter {
+    pub title: String,
+    results: Vec<BenchResult>,
+    tables: Vec<(String, Vec<String>, Vec<Vec<String>>)>,
+    notes: Vec<String>,
+}
+
+impl Reporter {
+    pub fn new(title: &str) -> Reporter {
+        Reporter { title: title.to_string(), ..Default::default() }
+    }
+
+    pub fn record(&mut self, r: BenchResult) {
+        println!(
+            "  {:<44} {:>12.1} ns/iter  (p50 {:>10.1}, p99 {:>12.1}, n={})",
+            r.name, r.summary.mean, r.summary.p50, r.summary.p99, r.iters
+        );
+        self.results.push(r);
+    }
+
+    /// Add a paper-style table (headers + string rows) to the report.
+    pub fn table(&mut self, caption: &str, headers: Vec<String>, rows: Vec<Vec<String>>) {
+        println!("\n  {caption}");
+        let widths: Vec<usize> = headers
+            .iter()
+            .enumerate()
+            .map(|(i, h)| {
+                rows.iter()
+                    .map(|r| r.get(i).map_or(0, |c| c.len()))
+                    .chain([h.len()])
+                    .max()
+                    .unwrap()
+            })
+            .collect();
+        let fmt_row = |cells: &[String]| {
+            cells
+                .iter()
+                .zip(&widths)
+                .map(|(c, w)| format!("{c:>w$}", w = w))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        println!("  {}", fmt_row(&headers));
+        println!(
+            "  {}",
+            widths.iter().map(|w| "-".repeat(*w)).collect::<Vec<_>>().join("  ")
+        );
+        for row in &rows {
+            println!("  {}", fmt_row(row));
+        }
+        self.tables.push((caption.to_string(), headers, rows));
+    }
+
+    pub fn note(&mut self, text: &str) {
+        println!("  note: {text}");
+        self.notes.push(text.to_string());
+    }
+
+    /// Write the JSON report under `target/bench-results/` and print a
+    /// closing banner. Call last in each bench main().
+    pub fn finish(self) {
+        let tables = self
+            .tables
+            .iter()
+            .map(|(cap, headers, rows)| {
+                Json::obj(vec![
+                    ("caption", Json::str(cap)),
+                    (
+                        "headers",
+                        Json::arr(headers.iter().map(|h| Json::str(h))),
+                    ),
+                    (
+                        "rows",
+                        Json::arr(rows.iter().map(|r| {
+                            Json::arr(r.iter().map(|c| Json::str(c)))
+                        })),
+                    ),
+                ])
+            })
+            .collect::<Vec<_>>();
+        let doc = Json::obj(vec![
+            ("title", Json::str(&self.title)),
+            (
+                "timings",
+                Json::arr(self.results.iter().map(|r| r.to_json())),
+            ),
+            ("tables", Json::Arr(tables)),
+            ("notes", Json::arr(self.notes.iter().map(|n| Json::str(n)))),
+        ]);
+        let dir = std::path::Path::new("target/bench-results");
+        let _ = std::fs::create_dir_all(dir);
+        let slug: String = self
+            .title
+            .chars()
+            .map(|c| if c.is_alphanumeric() { c.to_ascii_lowercase() } else { '_' })
+            .collect();
+        let path = dir.join(format!("{slug}.json"));
+        if let Err(e) = std::fs::write(&path, doc.pretty()) {
+            eprintln!("warn: could not write {path:?}: {e}");
+        } else {
+            println!("\n  report -> {}", path.display());
+        }
+        println!("== {} done ==", self.title);
+    }
+}
+
+/// Standard entry banner for bench binaries.
+pub fn banner(title: &str) {
+    println!("\n== {title} ==");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let r = bench_with(
+            "spin",
+            Duration::from_millis(20),
+            5,
+            &mut || {
+                let mut acc = 0u64;
+                for i in 0..100u64 {
+                    acc = acc.wrapping_add(keep(i));
+                }
+                keep(acc);
+            },
+        );
+        assert!(r.summary.mean > 0.0);
+        assert!(r.iters >= 5);
+        assert_eq!(r.name, "spin");
+    }
+
+    #[test]
+    fn reporter_table_roundtrip() {
+        let mut rep = Reporter::new("test report");
+        rep.table(
+            "caption",
+            vec!["a".into(), "b".into()],
+            vec![vec!["1".into(), "2".into()]],
+        );
+        rep.note("a note");
+        rep.finish(); // writes into target/bench-results
+        let text = std::fs::read_to_string(
+            "target/bench-results/test_report.json",
+        )
+        .unwrap();
+        let doc = crate::util::json::Json::parse(&text).unwrap();
+        assert_eq!(doc.get("title").as_str(), Some("test report"));
+        assert_eq!(
+            doc.get("tables").at(0).get("caption").as_str(),
+            Some("caption")
+        );
+    }
+}

@@ -1,0 +1,170 @@
+//! Tiny CLI argument parser (the `clap` substitute).
+//!
+//! Supports `command --flag value --flag=value --bool-flag positional`
+//! with typed getters, defaults, and a generated usage string. Used by
+//! `main.rs` and the bench binaries (which must at minimum swallow the
+//! `--bench` flag cargo passes).
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Parsed arguments: a subcommand (if any), `--key value` options, bare
+/// `--switch` flags, and positionals.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub command: Option<String>,
+    opts: BTreeMap<String, String>,
+    switches: Vec<String>,
+    pub positionals: Vec<String>,
+}
+
+/// Argument parse/type error.
+#[derive(Debug, Clone)]
+pub struct ArgError(pub String);
+
+impl fmt::Display for ArgError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "argument error: {}", self.0)
+    }
+}
+
+impl std::error::Error for ArgError {}
+
+impl Args {
+    /// Parse from an iterator of argument strings (exclusive of argv[0]).
+    /// `known_switches` lists flags that take no value; anything else that
+    /// starts with `--` consumes the following token (or `=suffix`) as its
+    /// value. The first non-flag token becomes the subcommand if
+    /// `with_command` is set.
+    pub fn parse<I: IntoIterator<Item = String>>(
+        argv: I,
+        known_switches: &[&str],
+        with_command: bool,
+    ) -> Result<Args, ArgError> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(stripped) = tok.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if known_switches.contains(&stripped) {
+                    out.switches.push(stripped.to_string());
+                } else {
+                    let v = it.next().ok_or_else(|| {
+                        ArgError(format!("--{stripped} expects a value"))
+                    })?;
+                    out.opts.insert(stripped.to_string(), v);
+                }
+            } else if with_command && out.command.is_none() {
+                out.command = Some(tok);
+            } else {
+                out.positionals.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Parse the process arguments.
+    pub fn from_env(known_switches: &[&str], with_command: bool) -> Result<Args, ArgError> {
+        Self::parse(std::env::args().skip(1), known_switches, with_command)
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64, ArgError> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| ArgError(format!("--{key}: '{v}' is not an integer"))),
+        }
+    }
+
+    pub fn u32_or(&self, key: &str, default: u32) -> Result<u32, ArgError> {
+        Ok(self.u64_or(key, default as u64)? as u32)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64, ArgError> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| ArgError(format!("--{key}: '{v}' is not a number"))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(args: &[&str]) -> Args {
+        Args::parse(
+            args.iter().map(|s| s.to_string()),
+            &["verbose", "bench"],
+            true,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parses_command_opts_switches_positionals() {
+        let a = parse(&[
+            "simulate", "--seed", "7", "--policy=sponge", "--verbose",
+            "trace.csv",
+        ]);
+        assert_eq!(a.command.as_deref(), Some("simulate"));
+        assert_eq!(a.get("seed"), Some("7"));
+        assert_eq!(a.get("policy"), Some("sponge"));
+        assert!(a.has("verbose"));
+        assert!(!a.has("bench"));
+        assert_eq!(a.positionals, vec!["trace.csv"]);
+    }
+
+    #[test]
+    fn typed_getters_with_defaults() {
+        let a = parse(&["run", "--rate", "20.5", "--cores", "16"]);
+        assert_eq!(a.f64_or("rate", 1.0).unwrap(), 20.5);
+        assert_eq!(a.u32_or("cores", 4).unwrap(), 16);
+        assert_eq!(a.u32_or("batch", 8).unwrap(), 8);
+        assert_eq!(a.str_or("policy", "sponge"), "sponge");
+    }
+
+    #[test]
+    fn type_errors_reported() {
+        let a = parse(&["run", "--cores", "many"]);
+        assert!(a.u32_or("cores", 1).is_err());
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        let r = Args::parse(
+            ["--seed".to_string()].into_iter(),
+            &[],
+            false,
+        );
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn no_command_mode() {
+        let a = Args::parse(
+            ["pos1".to_string(), "pos2".to_string()].into_iter(),
+            &[],
+            false,
+        )
+        .unwrap();
+        assert_eq!(a.command, None);
+        assert_eq!(a.positionals, vec!["pos1", "pos2"]);
+    }
+}

@@ -1,0 +1,17 @@
+//! Hand-rolled substrates.
+//!
+//! The sandbox has no network access, so only the crates vendored with the
+//! XLA example are available (`xla`, `anyhow`, `log`, `once_cell`). Every
+//! convenience crate a serving system normally pulls in — `rand`,
+//! `serde`/`serde_json`, `clap`, `proptest`, `criterion` — is therefore
+//! built here from scratch and unit-tested like any other module.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+
+pub use rng::Pcg32;
+pub use stats::{percentile, Summary};

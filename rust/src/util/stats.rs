@@ -1,0 +1,273 @@
+//! Streaming statistics, exact percentiles, and fixed-bucket histograms.
+//!
+//! The paper reports P99 execution latencies (Table 1) and SLO-violation
+//! rates (Fig. 4); this module is the measurement substrate behind both the
+//! monitoring component and the bench harness.
+
+/// Exact percentile of a sample by linear interpolation (the "linear"
+/// method, matching numpy's default). `p` in [0, 100].
+pub fn percentile(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty(), "percentile of empty sample");
+    assert!((0.0..=100.0).contains(&p), "p={p} out of range");
+    debug_assert!(
+        sorted.windows(2).all(|w| w[0] <= w[1]),
+        "input must be sorted"
+    );
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let rank = p / 100.0 * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] + (sorted[hi] - sorted[lo]) * frac
+}
+
+/// Summary statistics of a sample (consumes one sort).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Summary {
+    pub count: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub p50: f64,
+    pub p90: f64,
+    pub p95: f64,
+    pub p99: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    /// Compute a summary from raw samples (need not be sorted).
+    pub fn of(samples: &[f64]) -> Summary {
+        assert!(!samples.is_empty(), "summary of empty sample");
+        let mut v = samples.to_vec();
+        v.sort_by(|a, b| a.partial_cmp(b).expect("NaN in samples"));
+        let n = v.len() as f64;
+        let mean = v.iter().sum::<f64>() / n;
+        let var = v.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n;
+        Summary {
+            count: v.len(),
+            mean,
+            std: var.sqrt(),
+            min: v[0],
+            p50: percentile(&v, 50.0),
+            p90: percentile(&v, 90.0),
+            p95: percentile(&v, 95.0),
+            p99: percentile(&v, 99.0),
+            max: *v.last().unwrap(),
+        }
+    }
+}
+
+/// Welford online mean/variance accumulator — O(1) memory, used on hot
+/// paths where keeping every sample would allocate.
+#[derive(Debug, Clone, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Welford {
+    pub fn new() -> Self {
+        Welford { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let delta = x - self.mean;
+        self.mean += delta / self.n as f64;
+        self.m2 += delta * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    /// Population variance.
+    pub fn variance(&self) -> f64 {
+        if self.n == 0 { 0.0 } else { self.m2 / self.n as f64 }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+}
+
+/// Fixed-boundary histogram (Prometheus-style cumulative buckets).
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    bounds: Vec<f64>,
+    counts: Vec<u64>, // one per bound, plus +Inf at the end
+    sum: f64,
+    total: u64,
+}
+
+impl Histogram {
+    /// Create with the given ascending upper bounds.
+    pub fn new(bounds: Vec<f64>) -> Histogram {
+        assert!(!bounds.is_empty());
+        assert!(bounds.windows(2).all(|w| w[0] < w[1]), "bounds not ascending");
+        let n = bounds.len();
+        Histogram { bounds, counts: vec![0; n + 1], sum: 0.0, total: 0 }
+    }
+
+    /// Latency-shaped default buckets (ms): 1..10_000 log-spaced.
+    pub fn latency_ms() -> Histogram {
+        Histogram::new(vec![
+            1.0, 2.0, 5.0, 10.0, 20.0, 50.0, 100.0, 200.0, 500.0, 1_000.0,
+            2_000.0, 5_000.0, 10_000.0,
+        ])
+    }
+
+    pub fn observe(&mut self, x: f64) {
+        let idx = self
+            .bounds
+            .iter()
+            .position(|&b| x <= b)
+            .unwrap_or(self.bounds.len());
+        self.counts[idx] += 1;
+        self.sum += x;
+        self.total += 1;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    /// Cumulative (bound, count) pairs, Prometheus semantics.
+    pub fn cumulative(&self) -> Vec<(f64, u64)> {
+        let mut acc = 0;
+        let mut out = Vec::with_capacity(self.bounds.len() + 1);
+        for (i, &b) in self.bounds.iter().enumerate() {
+            acc += self.counts[i];
+            out.push((b, acc));
+        }
+        out.push((f64::INFINITY, acc + self.counts[self.bounds.len()]));
+        out
+    }
+
+    /// Estimated quantile by linear interpolation within the bucket.
+    pub fn quantile(&self, q: f64) -> f64 {
+        assert!((0.0..=1.0).contains(&q));
+        if self.total == 0 {
+            return 0.0;
+        }
+        let target = (q * self.total as f64).ceil().max(1.0) as u64;
+        let mut acc = 0u64;
+        let mut lo = 0.0;
+        for (i, &b) in self.bounds.iter().enumerate() {
+            let next = acc + self.counts[i];
+            if next >= target {
+                let within = (target - acc) as f64 / self.counts[i] as f64;
+                return lo + (b - lo) * within;
+            }
+            acc = next;
+            lo = b;
+        }
+        *self.bounds.last().unwrap()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn percentile_interpolates() {
+        let v = [1.0, 2.0, 3.0, 4.0];
+        assert_eq!(percentile(&v, 0.0), 1.0);
+        assert_eq!(percentile(&v, 100.0), 4.0);
+        assert!((percentile(&v, 50.0) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_single_sample() {
+        assert_eq!(percentile(&[7.0], 99.0), 7.0);
+    }
+
+    #[test]
+    #[should_panic]
+    fn percentile_empty_panics() {
+        percentile(&[], 50.0);
+    }
+
+    #[test]
+    fn summary_moments() {
+        let s = Summary::of(&[2.0, 4.0, 4.0, 4.0, 5.0, 5.0, 7.0, 9.0]);
+        assert_eq!(s.count, 8);
+        assert!((s.mean - 5.0).abs() < 1e-12);
+        assert!((s.std - 2.0).abs() < 1e-12);
+        assert_eq!(s.min, 2.0);
+        assert_eq!(s.max, 9.0);
+    }
+
+    #[test]
+    fn welford_matches_summary() {
+        let xs: Vec<f64> = (0..1000).map(|i| (i as f64).sin() * 10.0).collect();
+        let s = Summary::of(&xs);
+        let mut w = Welford::new();
+        for &x in &xs {
+            w.push(x);
+        }
+        assert_eq!(w.count(), 1000);
+        assert!((w.mean() - s.mean).abs() < 1e-9);
+        assert!((w.std() - s.std).abs() < 1e-9);
+        assert_eq!(w.min(), s.min);
+        assert_eq!(w.max(), s.max);
+    }
+
+    #[test]
+    fn histogram_cumulative_counts() {
+        let mut h = Histogram::new(vec![10.0, 100.0]);
+        for x in [1.0, 5.0, 50.0, 500.0] {
+            h.observe(x);
+        }
+        assert_eq!(h.count(), 4);
+        assert_eq!(h.cumulative(), vec![
+            (10.0, 2),
+            (100.0, 3),
+            (f64::INFINITY, 4),
+        ]);
+    }
+
+    #[test]
+    fn histogram_quantile_reasonable() {
+        let mut h = Histogram::latency_ms();
+        for i in 1..=1000 {
+            h.observe(i as f64); // uniform 1..1000 ms
+        }
+        let p50 = h.quantile(0.5);
+        assert!((400.0..600.0).contains(&p50), "p50={p50}");
+        let p99 = h.quantile(0.99);
+        assert!((900.0..1000.0).contains(&p99), "p99={p99}");
+    }
+
+    #[test]
+    fn histogram_boundary_inclusive() {
+        let mut h = Histogram::new(vec![10.0]);
+        h.observe(10.0); // <= bound goes in the bucket
+        assert_eq!(h.cumulative()[0].1, 1);
+    }
+}

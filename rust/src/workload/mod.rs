@@ -1,0 +1,275 @@
+//! Workload substrate: request types and arrival-process generators.
+//!
+//! The paper's workload generator (§4) produces requests asynchronously at
+//! a fixed 20 RPS with per-request SLOs shaped by the 4G trace; the §2.1
+//! motivation uses 100 RPS. We provide fixed-rate, Poisson, and MMPP
+//! (bursty) arrival processes plus the payload-size mixes of Fig. 1.
+
+mod replay;
+
+pub use replay::{from_csv as requests_from_csv, to_csv as requests_to_csv, ReplayWorkload};
+
+use crate::network::NetworkModel;
+use crate::util::rng::Pcg32;
+use crate::Ms;
+
+/// A single inference request as seen by the server.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Request {
+    /// Unique, monotone id (also encodes arrival order).
+    pub id: u64,
+    /// Time the user sent the request (ms, experiment clock).
+    pub sent_at_ms: Ms,
+    /// Communication latency it experienced on the access network (ms).
+    pub comm_latency_ms: Ms,
+    /// Time it arrived at the server queue: `sent_at + comm_latency`.
+    pub arrived_at_ms: Ms,
+    /// End-to-end SLO (ms) the user expects.
+    pub slo_ms: Ms,
+    /// Payload size in bytes (drives comm latency).
+    pub payload_bytes: f64,
+}
+
+impl Request {
+    /// Absolute deadline on the experiment clock.
+    pub fn deadline_ms(&self) -> Ms {
+        self.sent_at_ms + self.slo_ms
+    }
+
+    /// Remaining server-side budget at time `now` (can be negative when
+    /// already violated).
+    pub fn remaining_budget_ms(&self, now: Ms) -> Ms {
+        self.deadline_ms() - now
+    }
+}
+
+/// Arrival process shapes.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArrivalProcess {
+    /// Deterministic gaps of `1000/rate` ms (the paper's generator).
+    FixedRate,
+    /// Exponential gaps (M/…/… arrivals).
+    Poisson,
+    /// Markov-modulated Poisson: alternates calm/burst phases.
+    Mmpp {
+        /// Burst rate multiplier (e.g. 4.0 = 4x the base rate in bursts).
+        burst_factor: f64,
+        /// Mean phase length in ms.
+        mean_phase_ms: f64,
+    },
+}
+
+/// Payload-size mix (bytes). The paper's Fig. 1 uses 100/200/500 KB.
+#[derive(Debug, Clone, PartialEq)]
+pub enum PayloadMix {
+    Constant(f64),
+    /// Uniform choice among the given sizes.
+    Choice(Vec<f64>),
+}
+
+/// Generates the full request timeline for an experiment.
+#[derive(Debug, Clone)]
+pub struct WorkloadGen {
+    pub rate_rps: f64,
+    pub slo_ms: Ms,
+    pub process: ArrivalProcess,
+    pub payload: PayloadMix,
+    pub seed: u64,
+}
+
+impl WorkloadGen {
+    /// The paper's §4 setup: 20 RPS fixed rate, 1000 ms SLO, 200 KB images.
+    pub fn paper_default() -> WorkloadGen {
+        WorkloadGen {
+            rate_rps: 20.0,
+            slo_ms: 1_000.0,
+            process: ArrivalProcess::FixedRate,
+            payload: PayloadMix::Constant(crate::network::PAYLOAD_200KB),
+            seed: 0xa11ce,
+        }
+    }
+
+    /// Generate all requests sent in `[0, horizon_ms)`, with communication
+    /// latency (and hence server arrival time) derived from `net`.
+    /// Returned sorted by *arrival* time — what the server observes; note
+    /// bandwidth dips can reorder arrivals relative to send order.
+    pub fn generate(&self, horizon_ms: Ms, net: &NetworkModel) -> Vec<Request> {
+        assert!(self.rate_rps > 0.0 && horizon_ms > 0.0);
+        let mut rng = Pcg32::seeded(self.seed);
+        let mut out = Vec::with_capacity((self.rate_rps * horizon_ms / 1_000.0) as usize + 1);
+        let mut t = 0.0;
+        let mut id = 0u64;
+        // MMPP phase state.
+        let mut in_burst = false;
+        let mut phase_left = match self.process {
+            ArrivalProcess::Mmpp { mean_phase_ms, .. } => rng.exp(1.0 / mean_phase_ms),
+            _ => f64::INFINITY,
+        };
+        while t < horizon_ms {
+            let payload = match &self.payload {
+                PayloadMix::Constant(s) => *s,
+                PayloadMix::Choice(sizes) => *rng.choose(sizes),
+            };
+            let comm = net.comm_latency_ms(t, payload);
+            out.push(Request {
+                id,
+                sent_at_ms: t,
+                comm_latency_ms: comm,
+                arrived_at_ms: t + comm,
+                slo_ms: self.slo_ms,
+                payload_bytes: payload,
+            });
+            id += 1;
+            let rate_ms = self.rate_rps / 1_000.0; // requests per ms
+            let gap = match self.process {
+                ArrivalProcess::FixedRate => 1.0 / rate_ms,
+                ArrivalProcess::Poisson => rng.exp(rate_ms),
+                ArrivalProcess::Mmpp { burst_factor, mean_phase_ms } => {
+                    let eff = if in_burst { rate_ms * burst_factor } else { rate_ms };
+                    let gap = rng.exp(eff);
+                    phase_left -= gap;
+                    if phase_left <= 0.0 {
+                        in_burst = !in_burst;
+                        phase_left = rng.exp(1.0 / mean_phase_ms);
+                    }
+                    gap
+                }
+            };
+            t += gap;
+        }
+        out.sort_by(|a, b| a.arrived_at_ms.total_cmp(&b.arrived_at_ms));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::network::{BandwidthTrace, NetworkModel};
+    use crate::util::proptest::run_prop;
+
+    fn net(bw: f64) -> NetworkModel {
+        NetworkModel::new(BandwidthTrace::from_samples(1_000.0, vec![bw; 4]).unwrap())
+    }
+
+    #[test]
+    fn fixed_rate_count_and_spacing() {
+        let w = WorkloadGen::paper_default();
+        let reqs = w.generate(10_000.0, &net(2.0e6));
+        assert_eq!(reqs.len(), 200); // 20 rps * 10 s
+        // deterministic gaps of 50 ms in *send* time
+        let mut by_send = reqs.clone();
+        by_send.sort_by(|a, b| a.sent_at_ms.total_cmp(&b.sent_at_ms));
+        for pair in by_send.windows(2) {
+            assert!((pair[1].sent_at_ms - pair[0].sent_at_ms - 50.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn poisson_rate_approximately_matches() {
+        let w = WorkloadGen {
+            process: ArrivalProcess::Poisson,
+            rate_rps: 50.0,
+            ..WorkloadGen::paper_default()
+        };
+        let reqs = w.generate(100_000.0, &net(2.0e6));
+        let got = reqs.len() as f64 / 100.0;
+        assert!((got - 50.0).abs() < 5.0, "rate={got}");
+    }
+
+    #[test]
+    fn mmpp_is_burstier_than_poisson() {
+        let horizon = 200_000.0;
+        let base = WorkloadGen {
+            process: ArrivalProcess::Poisson,
+            rate_rps: 20.0,
+            ..WorkloadGen::paper_default()
+        };
+        let bursty = WorkloadGen {
+            process: ArrivalProcess::Mmpp { burst_factor: 6.0, mean_phase_ms: 5_000.0 },
+            ..base.clone()
+        };
+        let var_of = |reqs: &[Request]| {
+            // variance of per-second arrival counts
+            let mut counts = vec![0f64; (horizon / 1_000.0) as usize];
+            for r in reqs {
+                let idx = (r.sent_at_ms / 1_000.0) as usize;
+                if idx < counts.len() {
+                    counts[idx] += 1.0;
+                }
+            }
+            let m = counts.iter().sum::<f64>() / counts.len() as f64;
+            counts.iter().map(|c| (c - m).powi(2)).sum::<f64>() / counts.len() as f64
+        };
+        let n = net(2.0e6);
+        assert!(var_of(&bursty.generate(horizon, &n)) > 2.0 * var_of(&base.generate(horizon, &n)));
+    }
+
+    #[test]
+    fn arrival_time_includes_comm_latency() {
+        let w = WorkloadGen::paper_default();
+        let reqs = w.generate(1_000.0, &net(1.0e6)); // 200 KB / 1 MB/s = 200 ms (+10 RTT)
+        for r in &reqs {
+            assert!((r.comm_latency_ms - 210.0).abs() < 1e-9);
+            assert!((r.arrived_at_ms - r.sent_at_ms - 210.0).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn deadline_and_budget() {
+        let r = Request {
+            id: 0,
+            sent_at_ms: 100.0,
+            comm_latency_ms: 250.0,
+            arrived_at_ms: 350.0,
+            slo_ms: 1_000.0,
+            payload_bytes: 1.0,
+        };
+        assert_eq!(r.deadline_ms(), 1_100.0);
+        assert_eq!(r.remaining_budget_ms(350.0), 750.0);
+        assert!(r.remaining_budget_ms(1_200.0) < 0.0);
+    }
+
+    #[test]
+    fn payload_mix_choice_hits_all_sizes() {
+        let w = WorkloadGen {
+            payload: PayloadMix::Choice(vec![1.0e5, 2.0e5, 5.0e5]),
+            ..WorkloadGen::paper_default()
+        };
+        let reqs = w.generate(30_000.0, &net(2.0e6));
+        for size in [1.0e5, 2.0e5, 5.0e5] {
+            assert!(reqs.iter().any(|r| r.payload_bytes == size));
+        }
+    }
+
+    #[test]
+    fn prop_generation_deterministic_and_sorted() {
+        run_prop("workload-deterministic-sorted", 20, |g| {
+            let w = WorkloadGen {
+                rate_rps: g.f64(1.0, 100.0),
+                slo_ms: g.f64(100.0, 2_000.0),
+                process: if g.bool() {
+                    ArrivalProcess::Poisson
+                } else {
+                    ArrivalProcess::FixedRate
+                },
+                payload: PayloadMix::Constant(g.f64(1e4, 1e6)),
+                seed: g.rng.next_u64(),
+            };
+            let n = net(g.f64(0.5e6, 7.0e6));
+            let a = w.generate(5_000.0, &n);
+            let b = w.generate(5_000.0, &n);
+            crate::prop_assert!(a == b, "non-deterministic generation");
+            crate::prop_assert!(
+                a.windows(2).all(|p| p[0].arrived_at_ms <= p[1].arrived_at_ms),
+                "not sorted by arrival"
+            );
+            // ids unique
+            let mut ids: Vec<u64> = a.iter().map(|r| r.id).collect();
+            ids.sort_unstable();
+            ids.dedup();
+            crate::prop_assert!(ids.len() == a.len(), "duplicate ids");
+            Ok(())
+        });
+    }
+}

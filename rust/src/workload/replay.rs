@@ -1,0 +1,183 @@
+//! Request-trace I/O: record generated workloads to CSV and replay traces
+//! from disk, so experiments can be reproduced bit-exactly across runs and
+//! compared against external tooling.
+//!
+//! Format (one request per line):
+//!
+//! ```csv
+//! id,sent_at_ms,comm_latency_ms,slo_ms,payload_bytes
+//! 0,0.000,210.000,1000,200000
+//! ```
+
+use crate::workload::Request;
+use crate::Ms;
+
+/// Serialize requests (sorted however the caller wishes) to CSV.
+pub fn to_csv(requests: &[Request]) -> String {
+    let mut out = String::from("id,sent_at_ms,comm_latency_ms,slo_ms,payload_bytes\n");
+    for r in requests {
+        out.push_str(&format!(
+            "{},{:.3},{:.3},{:.3},{:.0}\n",
+            r.id, r.sent_at_ms, r.comm_latency_ms, r.slo_ms, r.payload_bytes
+        ));
+    }
+    out
+}
+
+/// Parse a request-trace CSV (inverse of [`to_csv`]). Arrival times are
+/// recomputed as `sent_at + comm_latency`; output is sorted by arrival.
+pub fn from_csv(text: &str) -> Result<Vec<Request>, String> {
+    let mut out = Vec::new();
+    for (lineno, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || (lineno == 0 && line.starts_with("id,")) {
+            continue;
+        }
+        let fields: Vec<&str> = line.split(',').map(str::trim).collect();
+        if fields.len() != 5 {
+            return Err(format!(
+                "line {}: expected 5 fields, got {}",
+                lineno + 1,
+                fields.len()
+            ));
+        }
+        let parse = |i: usize, what: &str| -> Result<f64, String> {
+            fields[i]
+                .parse::<f64>()
+                .map_err(|e| format!("line {}: bad {what}: {e}", lineno + 1))
+        };
+        let id = fields[0]
+            .parse::<u64>()
+            .map_err(|e| format!("line {}: bad id: {e}", lineno + 1))?;
+        let sent_at_ms = parse(1, "sent_at_ms")?;
+        let comm_latency_ms = parse(2, "comm_latency_ms")?;
+        let slo_ms = parse(3, "slo_ms")?;
+        let payload_bytes = parse(4, "payload_bytes")?;
+        if slo_ms <= 0.0 || comm_latency_ms < 0.0 || sent_at_ms < 0.0 {
+            return Err(format!("line {}: non-physical values", lineno + 1));
+        }
+        out.push(Request {
+            id,
+            sent_at_ms,
+            comm_latency_ms,
+            arrived_at_ms: sent_at_ms + comm_latency_ms,
+            slo_ms,
+            payload_bytes,
+        });
+    }
+    if out.is_empty() {
+        return Err("empty request trace".into());
+    }
+    out.sort_by(|a, b| a.arrived_at_ms.total_cmp(&b.arrived_at_ms));
+    Ok(out)
+}
+
+/// A pre-recorded workload that can stand in for a generator in the
+/// simulator (same output contract as `WorkloadGen::generate`).
+#[derive(Debug, Clone)]
+pub struct ReplayWorkload {
+    requests: Vec<Request>,
+}
+
+impl ReplayWorkload {
+    pub fn new(mut requests: Vec<Request>) -> Result<ReplayWorkload, String> {
+        if requests.is_empty() {
+            return Err("empty replay workload".into());
+        }
+        requests.sort_by(|a, b| a.arrived_at_ms.total_cmp(&b.arrived_at_ms));
+        Ok(ReplayWorkload { requests })
+    }
+
+    pub fn from_csv(text: &str) -> Result<ReplayWorkload, String> {
+        Ok(ReplayWorkload { requests: from_csv(text)? })
+    }
+
+    /// Requests sent before `horizon_ms`, sorted by arrival.
+    pub fn take(&self, horizon_ms: Ms) -> Vec<Request> {
+        self.requests
+            .iter()
+            .filter(|r| r.sent_at_ms < horizon_ms)
+            .cloned()
+            .collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.requests.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.requests.is_empty()
+    }
+
+    /// Mean arrival rate over the trace span (requests/second).
+    pub fn mean_rate_rps(&self) -> f64 {
+        let span = self.requests.last().unwrap().sent_at_ms
+            - self.requests.first().unwrap().sent_at_ms;
+        if span <= 0.0 {
+            return self.requests.len() as f64;
+        }
+        (self.requests.len() - 1) as f64 / (span / 1_000.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::network::{BandwidthTrace, NetworkModel};
+    use crate::workload::WorkloadGen;
+
+    fn sample_requests() -> Vec<Request> {
+        let net = NetworkModel::new(
+            BandwidthTrace::from_samples(1_000.0, vec![2.0e6; 10]).unwrap(),
+        );
+        WorkloadGen::paper_default().generate(5_000.0, &net)
+    }
+
+    #[test]
+    fn csv_roundtrip_exact() {
+        let reqs = sample_requests();
+        let csv = to_csv(&reqs);
+        let back = from_csv(&csv).unwrap();
+        assert_eq!(back.len(), reqs.len());
+        for (a, b) in reqs.iter().zip(&back) {
+            assert_eq!(a.id, b.id);
+            assert!((a.sent_at_ms - b.sent_at_ms).abs() < 1e-3);
+            assert!((a.comm_latency_ms - b.comm_latency_ms).abs() < 1e-3);
+            assert_eq!(a.slo_ms, b.slo_ms);
+            assert_eq!(a.payload_bytes, b.payload_bytes);
+        }
+    }
+
+    #[test]
+    fn rejects_malformed_lines() {
+        assert!(from_csv("id,sent_at_ms\n1,2\n").is_err());
+        assert!(from_csv("0,1,2,3,not_a_number\n").is_err());
+        assert!(from_csv("0,1,2,-5,100\n").is_err()); // negative SLO
+        assert!(from_csv("").is_err());
+    }
+
+    #[test]
+    fn replay_take_respects_horizon() {
+        let w = ReplayWorkload::new(sample_requests()).unwrap();
+        let first_half = w.take(2_500.0);
+        assert!(first_half.len() < w.len());
+        assert!(first_half.iter().all(|r| r.sent_at_ms < 2_500.0));
+        assert_eq!(w.take(f64::INFINITY).len(), w.len());
+    }
+
+    #[test]
+    fn replay_mean_rate() {
+        let w = ReplayWorkload::new(sample_requests()).unwrap();
+        // paper_default is 20 RPS fixed.
+        assert!((w.mean_rate_rps() - 20.0).abs() < 0.5, "{}", w.mean_rate_rps());
+    }
+
+    #[test]
+    fn replay_sorts_by_arrival() {
+        let mut reqs = sample_requests();
+        reqs.reverse();
+        let w = ReplayWorkload::new(reqs).unwrap();
+        let taken = w.take(f64::INFINITY);
+        assert!(taken.windows(2).all(|p| p[0].arrived_at_ms <= p[1].arrived_at_ms));
+    }
+}

@@ -1,0 +1,153 @@
+//! CLI integration tests: drive the compiled `sponge` binary end-to-end
+//! through std::process (no artifacts required for these subcommands).
+
+use std::process::Command;
+
+fn bin() -> Command {
+    Command::new(env!("CARGO_BIN_EXE_sponge"))
+}
+
+fn run(args: &[&str]) -> (bool, String, String) {
+    let out = bin().args(args).output().expect("spawn sponge");
+    (
+        out.status.success(),
+        String::from_utf8_lossy(&out.stdout).to_string(),
+        String::from_utf8_lossy(&out.stderr).to_string(),
+    )
+}
+
+#[test]
+fn no_args_prints_usage() {
+    let (ok, stdout, _) = run(&[]);
+    assert!(ok);
+    assert!(stdout.contains("USAGE"));
+    assert!(stdout.contains("simulate"));
+}
+
+#[test]
+fn simulate_prints_summary() {
+    let (ok, stdout, stderr) = run(&[
+        "simulate", "--policy", "sponge", "--horizon-s", "30", "--seed", "5",
+    ]);
+    assert!(ok, "{stderr}");
+    assert!(stdout.contains("policy            : sponge"), "{stdout}");
+    assert!(stdout.contains("requests          : 600"));
+    assert!(stdout.contains("violations"));
+    assert!(stdout.contains("scaler decide"));
+}
+
+#[test]
+fn simulate_is_deterministic() {
+    // The "scaler decide µs" line is wall-clock (non-deterministic);
+    // everything else must be bit-identical across runs of the same seed.
+    let strip = |s: &str| -> String {
+        s.lines()
+            .filter(|l| !l.contains("scaler decide"))
+            .collect::<Vec<_>>()
+            .join("\n")
+    };
+    let a = run(&["simulate", "--horizon-s", "20", "--seed", "9"]);
+    let b = run(&["simulate", "--horizon-s", "20", "--seed", "9"]);
+    assert_eq!(strip(&a.1), strip(&b.1));
+    let c = run(&["simulate", "--horizon-s", "20", "--seed", "10"]);
+    assert_ne!(strip(&a.1), strip(&c.1), "different seeds must differ");
+}
+
+#[test]
+fn simulate_all_policies_parse() {
+    for policy in [
+        "sponge", "sponge-verbatim", "sponge-nomargin", "fa2", "static8",
+        "static16", "vpa", "hybrid",
+    ] {
+        let (ok, stdout, stderr) =
+            run(&["simulate", "--policy", policy, "--horizon-s", "10"]);
+        assert!(ok, "{policy}: {stderr}");
+        assert!(stdout.contains("violations"), "{policy}: {stdout}");
+    }
+}
+
+#[test]
+fn simulate_rejects_unknown_policy() {
+    let (ok, _, stderr) = run(&["simulate", "--policy", "zeus"]);
+    assert!(!ok);
+    assert!(stderr.contains("unknown policy"), "{stderr}");
+}
+
+#[test]
+fn trace_gen_emits_csv() {
+    let (ok, stdout, _) = run(&["trace-gen", "--seconds", "30", "--seed", "3"]);
+    assert!(ok);
+    assert!(stdout.starts_with("time_s,bytes_per_s"));
+    assert_eq!(stdout.lines().count(), 31); // header + 30 samples
+    // round-trips through the library parser
+    sponge::network::BandwidthTrace::from_csv(&stdout).unwrap();
+}
+
+#[test]
+fn workload_gen_emits_request_trace() {
+    let (ok, stdout, _) = run(&[
+        "workload-gen", "--rate", "10", "--horizon-s", "5", "--seed", "2",
+    ]);
+    assert!(ok);
+    assert!(stdout.starts_with("id,sent_at_ms"));
+    let reqs = sponge::workload::requests_from_csv(&stdout).unwrap();
+    assert_eq!(reqs.len(), 50); // 10 rps * 5 s
+}
+
+#[test]
+fn solve_prints_decision() {
+    let (ok, stdout, _) = run(&[
+        "solve", "--budget", "400", "--n", "20", "--lambda", "100",
+    ]);
+    assert!(ok);
+    assert!(stdout.contains("c=") && stdout.contains("b="), "{stdout}");
+}
+
+#[test]
+fn solve_reports_infeasible() {
+    let (ok, stdout, _) = run(&["solve", "--budget", "1", "--n", "5", "--lambda", "10"]);
+    assert!(ok);
+    assert!(stdout.contains("infeasible"), "{stdout}");
+}
+
+#[test]
+fn profile_and_fit_roundtrip() {
+    let (ok, profile_csv, stderr) = run(&["profile", "--engine", "sim", "--reps", "5"]);
+    assert!(ok, "{stderr}");
+    assert!(profile_csv.starts_with("batch,cores,latency_ms"));
+
+    let dir = std::env::temp_dir().join("sponge_cli_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("profile.csv");
+    std::fs::write(&path, &profile_csv).unwrap();
+    let (ok, fit_out, stderr) = run(&["fit", "--input", path.to_str().unwrap()]);
+    assert!(ok, "{stderr}");
+    assert!(fit_out.contains("l(b,c) ="), "{fit_out}");
+    assert!(fit_out.contains("MAPE"));
+    // The sim profile comes from the resnet model: the fit's gamma should
+    // land near 40 (ransac on noisy P99 data — generous bounds).
+    let gamma: f64 = fit_out
+        .split("l(b,c) = ")
+        .nth(1)
+        .and_then(|s| s.split('*').next())
+        .and_then(|s| s.trim().parse().ok())
+        .expect("parse gamma");
+    assert!((20.0..70.0).contains(&gamma), "gamma={gamma}");
+}
+
+#[test]
+fn simulate_accepts_config_file() {
+    let dir = std::env::temp_dir().join("sponge_cli_cfg");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("exp.toml");
+    std::fs::write(
+        &path,
+        "[experiment]\nhorizon_s = 15\npolicy = \"static8\"\n[workload]\nrate_rps = 10\n",
+    )
+    .unwrap();
+    let (ok, stdout, stderr) =
+        run(&["simulate", "--config", path.to_str().unwrap()]);
+    assert!(ok, "{stderr}");
+    assert!(stdout.contains("requests          : 150"), "{stdout}");
+    assert!(stdout.contains("static"), "{stdout}");
+}

@@ -1,0 +1,162 @@
+//! Live coordinator pipeline under load (MockExecutor — no artifacts
+//! needed; the PJRT variant is exercised by examples/dynamic_slo_serving).
+
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
+
+use sponge::coordinator::{
+    BatchExecutor, Coordinator, CoordinatorCfg, LiveRequest, MockExecutor,
+};
+use sponge::perfmodel::LatencyModel;
+use sponge::solver::SolverLimits;
+
+fn start(base_ms: f64, per_item_ms: f64) -> Coordinator {
+    Coordinator::start(
+        CoordinatorCfg {
+            limits: SolverLimits::default(),
+            adaptation_interval_ms: 200.0,
+            model: LatencyModel::resnet_human_detector(),
+            drop_expired: true,
+            online_calibration: true,
+        },
+        Arc::new(MockExecutor { image_len: 4, num_classes: 2, base_ms, per_item_ms }),
+    )
+}
+
+fn submit(c: &Coordinator, slo_ms: f64, comm_ms: f64) -> mpsc::Receiver<sponge::coordinator::LiveResponse> {
+    let (tx, rx) = mpsc::channel();
+    c.submit(LiveRequest {
+        id: 0,
+        image: vec![0.5; 4],
+        slo_ms,
+        comm_latency_ms: comm_ms,
+        reply: tx,
+    });
+    rx
+}
+
+#[test]
+fn sustained_load_all_served() {
+    let c = start(1.0, 0.2);
+    let t0 = Instant::now();
+    let mut rxs = Vec::new();
+    // ~200 requests over ~1 s.
+    for i in 0..200 {
+        rxs.push(submit(&c, 2_000.0, 10.0));
+        if i % 10 == 0 {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+    }
+    let mut served = 0;
+    let mut violated = 0;
+    for rx in rxs {
+        let r = rx.recv_timeout(Duration::from_secs(20)).unwrap();
+        served += 1;
+        if r.violated || r.dropped {
+            violated += 1;
+        }
+    }
+    assert_eq!(served, 200);
+    assert!(
+        violated <= 4,
+        "violations under light load: {violated} (elapsed {:?})",
+        t0.elapsed()
+    );
+    c.shutdown();
+}
+
+#[test]
+fn edf_prioritizes_urgent_requests() {
+    // Slow executor so a queue builds; the urgent request must complete
+    // before most relaxed ones despite arriving last.
+    let c = start(30.0, 0.0);
+    let mut relaxed = Vec::new();
+    for _ in 0..10 {
+        relaxed.push(submit(&c, 10_000.0, 0.0));
+    }
+    std::thread::sleep(Duration::from_millis(5));
+    let urgent = submit(&c, 300.0, 0.0);
+    let urgent_resp = urgent.recv_timeout(Duration::from_secs(10)).unwrap();
+    assert!(!urgent_resp.dropped);
+    // The urgent one completed within its small budget.
+    assert!(
+        urgent_resp.server_ms < 300.0,
+        "urgent took {} ms",
+        urgent_resp.server_ms
+    );
+    for rx in relaxed {
+        let _ = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+    }
+    c.shutdown();
+}
+
+#[test]
+fn scaler_publishes_decisions() {
+    let c = start(1.0, 0.2);
+    for _ in 0..50 {
+        let _ = submit(&c, 1_000.0, 0.0);
+    }
+    std::thread::sleep(Duration::from_millis(600)); // > 2 adaptation intervals
+    let (cores, batch) = c.decision();
+    assert!(cores >= 1 && batch >= 1);
+    let metrics = c.metrics.expose();
+    assert!(metrics.contains("sponge_cores"), "{metrics}");
+    assert!(metrics.contains("sponge_lambda_rps"));
+    c.shutdown();
+}
+
+#[test]
+fn expired_requests_get_drop_responses() {
+    let c = start(50.0, 0.0);
+    // Fill the pipe so later requests queue behind slow batches.
+    let mut all = Vec::new();
+    for _ in 0..5 {
+        all.push(submit(&c, 10_000.0, 0.0));
+    }
+    // This one's budget is already consumed by comm latency.
+    let doomed = submit(&c, 100.0, 99.9);
+    let resp = doomed.recv_timeout(Duration::from_secs(10)).unwrap();
+    assert!(resp.dropped || resp.violated, "{resp:?}");
+    for rx in all {
+        let _ = rx.recv_timeout(Duration::from_secs(10));
+    }
+    c.shutdown();
+}
+
+#[test]
+fn responses_route_to_correct_requesters() {
+    struct EchoExecutor;
+    impl BatchExecutor for EchoExecutor {
+        fn image_len(&self) -> usize {
+            1
+        }
+        fn num_classes(&self) -> usize {
+            1
+        }
+        fn infer(&self, images: &[f32], n: usize) -> anyhow::Result<Vec<f32>> {
+            // logits = input value, so each requester can verify identity.
+            Ok(images[..n].to_vec())
+        }
+        fn supported_batches(&self) -> Vec<u32> {
+            vec![1, 2, 4, 8, 16]
+        }
+    }
+    let c = Coordinator::start(CoordinatorCfg::default(), Arc::new(EchoExecutor));
+    let mut expected = Vec::new();
+    for i in 0..64 {
+        let (tx, rx) = mpsc::channel();
+        c.submit(LiveRequest {
+            id: 0,
+            image: vec![i as f32],
+            slo_ms: 5_000.0,
+            comm_latency_ms: 0.0,
+            reply: tx,
+        });
+        expected.push((i as f32, rx));
+    }
+    for (want, rx) in expected {
+        let resp = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        assert_eq!(resp.logits, vec![want], "response misrouted");
+    }
+    c.shutdown();
+}

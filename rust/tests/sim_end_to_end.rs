@@ -1,0 +1,169 @@
+//! End-to-end simulator tests: the Fig. 4 qualitative claims must hold on
+//! short runs (full-length runs live in `cargo bench --bench bench_fig4`).
+
+use sponge::cluster::ClusterCfg;
+use sponge::config::Policy;
+use sponge::network::{BandwidthTrace, NetworkModel};
+use sponge::perfmodel::LatencyModel;
+use sponge::sim::{run, SimConfig, SimResult};
+use sponge::solver::SolverLimits;
+use sponge::workload::WorkloadGen;
+
+fn paper_cfg(horizon_s: usize, seed: u64) -> SimConfig {
+    SimConfig {
+        horizon_ms: horizon_s as f64 * 1_000.0,
+        adaptation_interval_ms: 1_000.0,
+        workload: WorkloadGen::paper_default(),
+        model: LatencyModel::yolov5s(),
+        cluster: ClusterCfg::default(),
+        latency_noise_cv: 0.05,
+        seed,
+        admission_control: false,
+    }
+}
+
+fn run_policy(policy: Policy, horizon_s: usize, seed: u64) -> SimResult {
+    let cfg = paper_cfg(horizon_s, seed);
+    let net = NetworkModel::new(BandwidthTrace::synthetic_4g(horizon_s, 1_000.0, seed ^ 0x7ace));
+    run(&cfg, &net, policy.build(SolverLimits::default()))
+}
+
+#[test]
+fn all_policies_conserve_requests() {
+    for policy in Policy::all() {
+        let r = run_policy(policy, 60, 11);
+        assert_eq!(
+            r.tracker.total(),
+            r.generated,
+            "{}: {} accounted of {} generated",
+            r.policy,
+            r.tracker.total(),
+            r.generated
+        );
+    }
+}
+
+#[test]
+fn sponge_beats_fa2_on_violations() {
+    // The headline claim (>15x on the full run; require a clear win on
+    // this short run).
+    let sponge = run_policy(Policy::Sponge, 180, 21);
+    let fa2 = run_policy(Policy::Fa2, 180, 21);
+    assert!(
+        sponge.tracker.violations() * 5 <= fa2.tracker.violations().max(5),
+        "sponge {} vs fa2 {} violations",
+        sponge.tracker.violations(),
+        fa2.tracker.violations()
+    );
+}
+
+#[test]
+fn sponge_uses_fewer_cores_than_static16() {
+    let sponge = run_policy(Policy::Sponge, 180, 22);
+    let s16 = run_policy(Policy::Static16, 180, 22);
+    // Paper: >20 % fewer allocated cores than static-16 (the full 600 s
+    // run in bench_fig4 checks the 20 % headline; this short-run test
+    // requires a clear saving without depending on one seed's margin).
+    assert!(
+        sponge.core_ms < 0.85 * s16.core_ms,
+        "sponge {} vs static16 {} core-ms",
+        sponge.core_ms,
+        s16.core_ms
+    );
+    // ...with comparable violation behaviour (low single digits on this
+    // short run; the 600 s bench_fig4 run checks the <0.3 % headline).
+    assert!(
+        sponge.tracker.violation_rate_pct() < 2.0 + s16.tracker.violation_rate_pct(),
+        "sponge {}% vs static16 {}%",
+        sponge.tracker.violation_rate_pct(),
+        s16.tracker.violation_rate_pct()
+    );
+}
+
+#[test]
+fn static8_saturates_under_paper_workload() {
+    // Fig. 4: the 8-core static instance runs out of capacity.
+    let s8 = run_policy(Policy::Static8, 180, 23);
+    let s16 = run_policy(Policy::Static16, 180, 23);
+    assert!(
+        s8.tracker.violations() > s16.tracker.violations(),
+        "static8 {} vs static16 {}",
+        s8.tracker.violations(),
+        s16.tracker.violations()
+    );
+}
+
+#[test]
+fn sponge_tracks_bandwidth_with_core_changes() {
+    // Sponge must actually exercise vertical scaling: the cores series
+    // should not be constant on a variable network.
+    let r = run_policy(Policy::Sponge, 120, 24);
+    let distinct: std::collections::BTreeSet<u32> =
+        r.cores_series.iter().map(|&(_, c)| c).collect();
+    assert!(
+        distinct.len() >= 3,
+        "expected vertical scaling activity, got cores {distinct:?}"
+    );
+}
+
+#[test]
+fn verbatim_and_per_request_sponge_both_work() {
+    let a = run_policy(Policy::Sponge, 90, 25);
+    let b = run_policy(Policy::SpongeVerbatim, 90, 25);
+    for r in [&a, &b] {
+        assert!(
+            r.tracker.violation_rate_pct() < 5.0,
+            "{}: {}%",
+            r.policy,
+            r.tracker.violation_rate_pct()
+        );
+    }
+}
+
+#[test]
+fn deep_fade_hurts_fa2_specifically() {
+    // Construct a trace with a catastrophic 15 s fade in the middle. FA2's
+    // cold start forces violations; Sponge resizes through it.
+    let mut samples = vec![5.0e6; 120];
+    for s in samples.iter_mut().take(75).skip(60) {
+        *s = 0.45e6;
+    }
+    let trace = BandwidthTrace::from_samples(1_000.0, samples).unwrap();
+    let cfg = paper_cfg(120, 31);
+    let sponge = run(
+        &cfg,
+        &NetworkModel::new(trace.clone()),
+        Policy::Sponge.build(SolverLimits::default()),
+    );
+    let fa2 = run(
+        &cfg,
+        &NetworkModel::new(trace),
+        Policy::Fa2.build(SolverLimits::default()),
+    );
+    assert!(
+        fa2.tracker.violations() > sponge.tracker.violations(),
+        "fade: fa2 {} vs sponge {}",
+        fa2.tracker.violations(),
+        sponge.tracker.violations()
+    );
+    assert!(
+        sponge.tracker.violation_rate_pct() < 3.0,
+        "sponge should ride through the fade: {}%",
+        sponge.tracker.violation_rate_pct()
+    );
+}
+
+#[test]
+fn higher_rate_needs_more_cores() {
+    let mut cfg = paper_cfg(90, 41);
+    let net = NetworkModel::new(BandwidthTrace::synthetic_4g(90, 1_000.0, 41));
+    let lo = run(&cfg, &net, Policy::Sponge.build(SolverLimits::default()));
+    cfg.workload.rate_rps = 60.0;
+    let hi = run(&cfg, &net, Policy::Sponge.build(SolverLimits::default()));
+    assert!(
+        hi.mean_cores > lo.mean_cores,
+        "60 rps {} cores vs 20 rps {} cores",
+        hi.mean_cores,
+        lo.mean_cores
+    );
+}

@@ -1,0 +1,174 @@
+//! Property-based integration tests for the solver: Algorithm 1 semantics,
+//! optimality, and brute-force ≡ incremental equivalence over randomized
+//! inputs.
+
+use sponge::perfmodel::LatencyModel;
+use sponge::prop_assert;
+use sponge::solver::{
+    drain_feasible, throughput_ok, BruteForceSolver, IncrementalSolver, IpSolver, SolverInput,
+    SolverLimits,
+};
+use sponge::util::proptest::{run_prop, Gen};
+
+fn random_model(g: &mut Gen) -> LatencyModel {
+    LatencyModel::new(
+        g.f64(5.0, 80.0),
+        g.f64(0.0, 30.0),
+        g.f64(0.0, 6.0),
+        g.f64(0.0, 4.0),
+    )
+}
+
+fn random_input(g: &mut Gen) -> SolverInput {
+    if g.bool() {
+        let n = g.usize(0, 64);
+        let slo = g.f64(200.0, 2_000.0);
+        let cl_max = g.f64(0.0, slo * 0.95);
+        SolverInput::uniform(n.max(1), slo, cl_max, g.f64(1.0, 150.0))
+    } else {
+        let n = g.usize(0, 64);
+        let mut budgets = g.vec(n, |g| g.f64(5.0, 1_500.0));
+        budgets.sort_by(f64::total_cmp);
+        SolverInput::per_request(budgets, g.f64(1.0, 150.0))
+    }
+}
+
+#[test]
+fn prop_incremental_equals_brute_force() {
+    run_prop("incremental-eq-brute", 300, |g| {
+        let model = random_model(g);
+        let input = random_input(g);
+        let limits = SolverLimits {
+            c_max: g.u32(1, 24),
+            b_max: g.u32(1, 24),
+            delta: 1e-3,
+        };
+        let a = BruteForceSolver.solve(&model, &input, limits);
+        let b = IncrementalSolver.solve(&model, &input, limits);
+        prop_assert!(a == b, "brute={a:?} incremental={b:?} model={model:?}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_solution_is_feasible_and_optimal() {
+    run_prop("solution-feasible-optimal", 200, |g| {
+        let model = random_model(g);
+        let input = random_input(g);
+        let limits = SolverLimits::default();
+        if let Some(sol) = BruteForceSolver.solve(&model, &input, limits) {
+            prop_assert!(
+                drain_feasible(&model, &input, sol.batch, sol.cores),
+                "returned infeasible drain: {sol:?}"
+            );
+            prop_assert!(
+                throughput_ok(&model, &input, sol.batch, sol.cores),
+                "returned infeasible throughput: {sol:?}"
+            );
+            // No feasible configuration has a strictly smaller objective.
+            for c in 1..=limits.c_max {
+                for b in 1..=limits.b_max {
+                    let obj = c as f64 + limits.delta * b as f64;
+                    if obj < sol.objective - 1e-12
+                        && throughput_ok(&model, &input, b, c)
+                        && drain_feasible(&model, &input, b, c)
+                    {
+                        return Err(format!(
+                            "({c},{b}) obj={obj} beats {sol:?}"
+                        ));
+                    }
+                }
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_feasibility_monotone_in_cores() {
+    run_prop("feasibility-monotone-cores", 200, |g| {
+        let model = random_model(g);
+        let input = random_input(g);
+        let b = g.u32(1, 16);
+        for c in 1..16u32 {
+            let now = throughput_ok(&model, &input, b, c) && drain_feasible(&model, &input, b, c);
+            let next =
+                throughput_ok(&model, &input, b, c + 1) && drain_feasible(&model, &input, b, c + 1);
+            prop_assert!(
+                !now || next,
+                "feasible at c={c} but not c={} (b={b})",
+                c + 1
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_more_budget_never_hurts() {
+    run_prop("budget-monotonicity", 150, |g| {
+        let model = random_model(g);
+        let n = g.usize(1, 40);
+        let mut budgets = g.vec(n, |g| g.f64(5.0, 1_000.0));
+        budgets.sort_by(f64::total_cmp);
+        let lambda = g.f64(1.0, 100.0);
+        let tight = SolverInput::per_request(budgets.clone(), lambda);
+        let mut more: Vec<f64> = budgets.iter().map(|b| b + g.f64(0.0, 500.0)).collect();
+        more.sort_by(f64::total_cmp); // per_request requires EDF order
+        let relaxed = SolverInput::per_request(more, lambda);
+        let limits = SolverLimits::default();
+        match (
+            BruteForceSolver.solve(&model, &tight, limits),
+            BruteForceSolver.solve(&model, &relaxed, limits),
+        ) {
+            (Some(t), Some(r)) => {
+                prop_assert!(
+                    r.objective <= t.objective + 1e-12,
+                    "relaxed budget got worse: {t:?} -> {r:?}"
+                );
+            }
+            (Some(t), None) => {
+                return Err(format!("relaxed infeasible but tight solvable: {t:?}"));
+            }
+            _ => {}
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_uniform_matches_per_request_when_budgets_equal() {
+    run_prop("uniform-eq-per-request", 150, |g| {
+        let model = random_model(g);
+        let n = g.usize(1, 50);
+        let slo = g.f64(300.0, 2_000.0);
+        let cl = g.f64(0.0, slo * 0.9);
+        let lambda = g.f64(1.0, 100.0);
+        let uniform = SolverInput::uniform(n, slo, cl, lambda);
+        let per_req = SolverInput::per_request(vec![slo - cl; n], lambda);
+        let limits = SolverLimits::default();
+        let a = BruteForceSolver.solve(&model, &uniform, limits);
+        let b = BruteForceSolver.solve(&model, &per_req, limits);
+        prop_assert!(a == b, "uniform={a:?} per_request={b:?}");
+        Ok(())
+    });
+}
+
+#[test]
+fn algorithm1_walkthrough_paper_example() {
+    // Concrete hand-check of Algorithm 1 semantics on the Table 1 model:
+    // 8 requests, uniform budget 150 ms, λ = 50 rps.
+    let model = LatencyModel::resnet_human_detector();
+    let input = SolverInput::uniform(8, 1_000.0, 850.0, 50.0);
+    let sol = BruteForceSolver.solve(&model, &input, SolverLimits::default()).unwrap();
+    // By hand: c must satisfy (ceil(8/b) batches * l) <= 150 and h >= 50.
+    // The solver returns the lexicographically smallest feasible (c, b).
+    for c in 1..sol.cores {
+        for b in 1..=16u32 {
+            assert!(
+                !(throughput_ok(&model, &input, b, c) && drain_feasible(&model, &input, b, c)),
+                "({c},{b}) should be infeasible if {sol:?} is optimal"
+            );
+        }
+    }
+}
