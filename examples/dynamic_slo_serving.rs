@@ -1,13 +1,18 @@
 //! End-to-end live serving driver (the repo's "prove all layers compose"
 //! example): the real AOT model (L1 Pallas kernels inside an L2 JAX
 //! network, compiled to HLO and executed via PJRT) served by the L3
-//! coordinator over real threads and a real HTTP server, with a workload
-//! generator replaying a synthetic 4G bandwidth trace as per-request
-//! dynamic SLOs.
+//! coordinator over real threads and the versioned `/v1` HTTP surface
+//! ([`sponge::server::Gateway`]), with a workload generator replaying a
+//! synthetic 4G bandwidth trace as per-request dynamic SLOs.
+//!
+//! This example drives the *single-model, low-level* path (explicit
+//! `Coordinator` + `Gateway::single`); see `examples/multi_model_engine.rs`
+//! for the engine/registry API (`ServingEngine` + `ModelRegistry`) that
+//! runs the same scenario on the simulator or live, and multi-model.
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example dynamic_slo_serving \
-//!     [--duration-s 30] [--rate 20] [--slo-ms 1000]
+//! make artifacts && cargo run --release --features pjrt \
+//!     --example dynamic_slo_serving [--duration-s 30] [--rate 20] [--slo-ms 1000]
 //! ```
 //!
 //! Reports served/violated/dropped counts, the latency distribution, and
@@ -21,7 +26,7 @@ use sponge::network::{BandwidthTrace, NetworkModel};
 use sponge::perfmodel::LatencyModel;
 use sponge::profiler::{calibrate_from_single_core, PAPER_PARALLEL_FRACTION};
 use sponge::runtime::{InferenceEngine, PjrtEngine, PjrtProxy};
-use sponge::server::{client, serve};
+use sponge::server::{client, serve, Gateway};
 use sponge::solver::SolverLimits;
 use sponge::util::cli::Args;
 use sponge::util::json::Json;
@@ -73,7 +78,8 @@ fn main() -> anyhow::Result<()> {
         },
         Arc::new(engine),
     ));
-    let http = serve("127.0.0.1:0", Arc::clone(&coordinator))?;
+    let gateway = Arc::new(Gateway::single(Arc::clone(&coordinator)));
+    let http = serve("127.0.0.1:0", gateway)?;
     println!("    http on {}", http.addr());
 
     // --- 3. Replay a 4G trace as per-request dynamic SLOs. ---
@@ -173,10 +179,7 @@ fn main() -> anyhow::Result<()> {
     println!("http /infer        : 200 OK");
 
     http.stop();
-    match Arc::try_unwrap(coordinator) {
-        Ok(c) => c.shutdown(),
-        Err(_) => {}
-    }
+    coordinator.shutdown();
     println!("dynamic_slo_serving OK");
     Ok(())
 }

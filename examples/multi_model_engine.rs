@@ -1,0 +1,143 @@
+//! The unified serving API, end to end: one two-model dynamic-SLO
+//! scenario, three executions —
+//!
+//! 1. through [`SimEngine`] (virtual clock: 60 s of workload settle in
+//!    milliseconds),
+//! 2. through [`LiveEngine`] + `MockExecutor` (wall clock, real threads,
+//!    compressed pacing),
+//! 3. over the versioned `/v1` HTTP surface backed by the same live
+//!    registry (list models, infer on both variants, read per-model
+//!    stats, hit the legacy `/infer` alias).
+//!
+//! Runs fully offline — no artifacts, no PJRT feature:
+//!
+//! ```bash
+//! cargo run --release --example multi_model_engine [--horizon-s 60]
+//! ```
+
+use std::sync::Arc;
+
+use sponge::config::Policy;
+use sponge::engine::{
+    run_scenario, LiveEngine, LiveEngineCfg, ModelRegistry, ModelSpec, Scenario,
+    ScenarioReport, SimEngine, SimEngineCfg,
+};
+use sponge::network::{BandwidthTrace, NetworkModel};
+use sponge::server::{client, serve, Gateway};
+use sponge::util::cli::Args;
+use sponge::util::json::Json;
+use sponge::workload::WorkloadGen;
+
+fn print_report(report: &ScenarioReport) {
+    println!("== {} engine ==", report.engine);
+    for (model, s) in &report.per_model {
+        println!(
+            "  {model:<10} submitted {:>4}  completed {:>4}  dropped {:>3}  \
+             violations {:>3}  cores {:>2}  batch {:>2}",
+            s.submitted, s.completed, s.dropped, s.violations, s.cores, s.batch
+        );
+    }
+    println!(
+        "  drain: {} ticks, conserved: {}",
+        report.drain.ticks,
+        report.conserved()
+    );
+}
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env(&[], false).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let horizon_s = args.u64_or("horizon-s", 60)? as usize;
+
+    // --- One registry: two named variants, different scaling policies. ---
+    let mut registry = ModelRegistry::new();
+    let spec = |name: &str| ModelSpec::named(name).map_err(|e| anyhow::anyhow!(e));
+    registry
+        .register(spec("resnet")?.with_slo(1_000.0))
+        .map_err(|e| anyhow::anyhow!(e))?;
+    registry
+        .register(spec("yolov5s")?.with_policy(Policy::Static8).with_slo(800.0))
+        .map_err(|e| anyhow::anyhow!(e))?;
+
+    // --- One scenario: per-model workloads over a shared 4G trace. ---
+    let scenario = Scenario::new(horizon_s as f64 * 1_000.0)
+        .with_model(
+            "resnet",
+            WorkloadGen { rate_rps: 20.0, ..WorkloadGen::paper_default() },
+        )
+        .with_model(
+            "yolov5s",
+            WorkloadGen {
+                rate_rps: 10.0,
+                slo_ms: 800.0,
+                seed: 0xbeef,
+                ..WorkloadGen::paper_default()
+            },
+        )
+        .with_time_scale(0.01); // live replay: 60 s of arrivals in 600 ms
+    let net =
+        NetworkModel::new(BandwidthTrace::synthetic_4g(horizon_s + 1, 1_000.0, 9));
+
+    // --- 1. Virtual time. ---
+    let mut sim = SimEngine::new(&registry, SimEngineCfg::default())
+        .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let sim_report =
+        run_scenario(&mut sim, &scenario, &net).map_err(|e| anyhow::anyhow!("{e}"))?;
+    print_report(&sim_report);
+
+    // --- 2. Wall time, same scenario, unchanged driver code. ---
+    let mut live = LiveEngine::start_mock(
+        &registry,
+        LiveEngineCfg { adaptation_interval_ms: 100.0, ..Default::default() },
+    )
+    .map_err(|e| anyhow::anyhow!("{e}"))?;
+    let live_report =
+        run_scenario(&mut live, &scenario, &net).map_err(|e| anyhow::anyhow!("{e}"))?;
+    print_report(&live_report);
+    for (model, s) in &sim_report.per_model {
+        let l = live_report.snapshot(model).expect("same registry");
+        anyhow::ensure!(
+            s.submitted == l.submitted && l.in_flight() == 0,
+            "accounting diverged for {model}"
+        );
+    }
+
+    // --- 3. The same registry over HTTP (/v1). ---
+    let gateway = Arc::new(Gateway::from_parts(live.coordinators())?);
+    let http = serve("127.0.0.1:0", gateway)?;
+    println!("== /v1 surface on {} ==", http.addr());
+
+    let (code, body) = client::get(&http.addr(), "/v1/models")?;
+    anyhow::ensure!(code == 200, "GET /v1/models: {code}");
+    println!("  GET /v1/models          -> {body}");
+
+    let infer = Json::obj(vec![
+        ("slo_ms", Json::num(2_000.0)),
+        ("comm_ms", Json::num(15.0)),
+        ("image", Json::arr((0..4).map(|_| Json::num(0.5)))),
+    ])
+    .to_string();
+    for model in ["resnet", "yolov5s"] {
+        let (code, body) =
+            client::post_json(&http.addr(), &format!("/v1/models/{model}/infer"), &infer)?;
+        anyhow::ensure!(code == 200, "{model}: {body}");
+        println!("  POST .../{model}/infer -> 200");
+    }
+    let (code, body) = client::post_json(&http.addr(), "/infer", &infer)?;
+    anyhow::ensure!(code == 200, "legacy /infer: {body}");
+    let served_by = Json::parse(&body)
+        .map_err(|e| anyhow::anyhow!("{e}"))?
+        .get("model")
+        .as_str()
+        .unwrap_or("?")
+        .to_string();
+    println!("  POST /infer (legacy)    -> 200, served by default model '{served_by}'");
+
+    let (code, body) = client::get(&http.addr(), "/v1/models/yolov5s/stats")?;
+    anyhow::ensure!(code == 200, "stats: {body}");
+    println!("  GET .../yolov5s/stats   -> {body}");
+
+    http.stop();
+    live.shutdown();
+    println!("multi_model_engine OK");
+    Ok(())
+}

@@ -1,8 +1,12 @@
 //! Quickstart: load the AOT-compiled model and serve one request through
-//! the public API.
+//! the *low-level* public API (explicit `Coordinator` + `PjrtProxy` —
+//! the building blocks `engine::LiveEngine` composes per registered
+//! model). Start with `examples/multi_model_engine.rs` for the unified
+//! `ServingEngine` / `ModelRegistry` API; use this path when you need
+//! per-request logits on a channel.
 //!
 //! ```bash
-//! make artifacts && cargo run --release --example quickstart
+//! make artifacts && cargo run --release --features pjrt --example quickstart
 //! ```
 
 use std::sync::{mpsc, Arc};

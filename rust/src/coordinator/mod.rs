@@ -184,6 +184,44 @@ struct Shared {
     arrivals_window: Mutex<Vec<Instant>>,
     calibrator: Mutex<OnlineCalibrator>,
     calibrate: bool,
+    // Request-accounting counters (the live side of the `ServingEngine`
+    // conservation contract: received == completed + dropped + in flight).
+    received: AtomicU64,
+    completed: AtomicU64,
+    dropped: AtomicU64,
+    violated: AtomicU64,
+}
+
+/// Point-in-time request accounting + decision snapshot, served by
+/// `GET /v1/models/{name}/stats` and [`crate::engine::LiveEngine`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CoordinatorStats {
+    /// Requests accepted by [`Coordinator::submit`].
+    pub received: u64,
+    /// Requests that got a non-dropped response (SLO met or not).
+    pub completed: u64,
+    /// Requests answered as dropped (deadline expired or shutdown flush).
+    pub dropped: u64,
+    /// Completed requests that missed their deadline.
+    pub violated: u64,
+    pub queue_len: usize,
+    pub cores: Cores,
+    pub batch: BatchSize,
+    pub model_refits: u64,
+}
+
+impl CoordinatorStats {
+    /// Requests with a terminal outcome.
+    pub fn resolved(&self) -> u64 {
+        self.completed + self.dropped
+    }
+
+    /// Requests still queued or being processed. Saturating: the counters
+    /// are read as separate relaxed loads, so a request can resolve
+    /// between them and make `resolved` momentarily exceed `received`.
+    pub fn in_flight(&self) -> u64 {
+        self.received.saturating_sub(self.resolved())
+    }
 }
 
 /// The live serving coordinator. Spawns processor + scaler threads on
@@ -192,11 +230,13 @@ pub struct Coordinator {
     cfg: CoordinatorCfg,
     shared: Arc<Shared>,
     pub metrics: Arc<MetricRegistry>,
-    threads: Vec<std::thread::JoinHandle<()>>,
+    threads: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    image_len: usize,
 }
 
 impl Coordinator {
     pub fn start(cfg: CoordinatorCfg, executor: Arc<dyn BatchExecutor>) -> Coordinator {
+        let image_len = executor.image_len();
         let shared = Arc::new(Shared {
             queue: Mutex::new(BinaryHeap::new()),
             notify: Condvar::new(),
@@ -207,6 +247,10 @@ impl Coordinator {
             arrivals_window: Mutex::new(Vec::new()),
             calibrator: Mutex::new(OnlineCalibrator::new(cfg.model)),
             calibrate: cfg.online_calibration,
+            received: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+            violated: AtomicU64::new(0),
         });
         let metrics = Arc::new(MetricRegistry::new());
 
@@ -227,7 +271,7 @@ impl Coordinator {
             let cfg = cfg.clone();
             threads.push(std::thread::spawn(move || scaler_loop(shared, metrics, cfg)));
         }
-        Coordinator { cfg, shared, metrics, threads }
+        Coordinator { cfg, shared, metrics, threads: Mutex::new(threads), image_len }
     }
 
     /// Enqueue a request. The response arrives on `req.reply`.
@@ -237,6 +281,7 @@ impl Coordinator {
         let now = Instant::now();
         let remaining = (req.slo_ms - req.comm_latency_ms).max(0.0);
         let deadline = now + Duration::from_secs_f64(remaining / 1_000.0);
+        self.shared.received.fetch_add(1, Ordering::Relaxed);
         self.metrics.counter_add("sponge_requests_total", "requests received", 1.0);
         self.shared.arrivals_window.lock().unwrap().push(now);
         {
@@ -269,16 +314,39 @@ impl Coordinator {
         *self.shared.calibrator.lock().unwrap().model()
     }
 
-    /// Stop threads and join. Queued requests get dropped responses.
-    pub fn shutdown(mut self) {
+    /// Request accounting + current decision, in one consistent-enough
+    /// snapshot (counters are monotone; the queue length is sampled last).
+    pub fn stats(&self) -> CoordinatorStats {
+        CoordinatorStats {
+            received: self.shared.received.load(Ordering::Relaxed),
+            completed: self.shared.completed.load(Ordering::Relaxed),
+            dropped: self.shared.dropped.load(Ordering::Relaxed),
+            violated: self.shared.violated.load(Ordering::Relaxed),
+            queue_len: self.queue_len(),
+            cores: self.shared.cores.load(Ordering::Relaxed),
+            batch: self.shared.batch.load(Ordering::Relaxed),
+            model_refits: self.model_refits(),
+        }
+    }
+
+    /// Expected `LiveRequest::image` length (floats), from the executor.
+    pub fn image_len(&self) -> usize {
+        self.image_len
+    }
+
+    /// Stop threads and join; queued requests get dropped responses.
+    /// Takes `&self` so shared handles (e.g. an HTTP gateway holding the
+    /// same `Arc`) can shut the pipeline down; idempotent.
+    pub fn shutdown(&self) {
         self.shared.running.store(false, Ordering::SeqCst);
         self.shared.notify.notify_all();
-        for t in self.threads.drain(..) {
+        for t in self.threads.lock().unwrap().drain(..) {
             let _ = t.join();
         }
         // Flush the queue with dropped responses.
         let mut q = self.shared.queue.lock().unwrap();
         while let Some(item) = q.pop() {
+            self.shared.dropped.fetch_add(1, Ordering::Relaxed);
             let _ = item.req.reply.send(LiveResponse {
                 id: item.req.id,
                 logits: Vec::new(),
@@ -339,6 +407,7 @@ fn processor_loop(
             (batch, Vec::new())
         };
         for item in expired {
+            shared.dropped.fetch_add(1, Ordering::Relaxed);
             metrics.counter_add("sponge_dropped_total", "requests dropped expired", 1.0);
             let waited = item.enqueued_at.elapsed().as_secs_f64() * 1e3;
             let _ = item.req.reply.send(LiveResponse {
@@ -390,8 +459,10 @@ fn processor_loop(
                 (t0 - item.enqueued_at).as_secs_f64() * 1e3;
             let server_ms = queue_ms + processing_ms;
             let violated = Instant::now() > item.deadline;
+            shared.completed.fetch_add(1, Ordering::Relaxed);
             metrics.histogram_observe("sponge_server_ms", "server-side latency", server_ms);
             if violated {
+                shared.violated.fetch_add(1, Ordering::Relaxed);
                 metrics.counter_add("sponge_violations_total", "SLO violations", 1.0);
             }
             let row = match &logits {

@@ -1,0 +1,351 @@
+//! [`LiveEngine`]: the wall-clock implementation of [`ServingEngine`].
+//!
+//! One [`Coordinator`] per registered model — each with its own EDF queue,
+//! online-calibrated latency model, and solver loop on real threads — plus
+//! engine-side response accounting so the [`ServingEngine`] conservation
+//! contract (`submitted == completed + dropped` after `drain`) holds
+//! exactly as it does for the simulator.
+//!
+//! Executors are pluggable ([`BatchExecutor`]): tests and the conformance
+//! suite use [`MockExecutor`]; production uses
+//! [`crate::runtime::PjrtProxy`] (one per variant, `--features pjrt`).
+
+use std::collections::VecDeque;
+use std::sync::{mpsc, Arc};
+use std::time::Duration;
+
+use crate::coordinator::{BatchExecutor, Coordinator, CoordinatorCfg, LiveRequest, LiveResponse, MockExecutor};
+use crate::Ms;
+
+use super::registry::{ModelRegistry, ModelSpec};
+use super::{
+    Clock, DrainReport, EngineError, EngineRequest, ModelSnapshot, ServingEngine, WallClock,
+};
+
+/// Live-engine knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct LiveEngineCfg {
+    /// Coordinator adaptation interval (wall ms).
+    pub adaptation_interval_ms: Ms,
+    /// Drop requests whose deadline passed while queued.
+    pub drop_expired: bool,
+    /// Enable online latency-model recalibration.
+    pub online_calibration: bool,
+    /// Per-request wait bound during [`ServingEngine::drain`]; responses
+    /// slower than this are accounted as drops so drain always returns.
+    pub drain_timeout_ms: Ms,
+}
+
+impl Default for LiveEngineCfg {
+    fn default() -> Self {
+        LiveEngineCfg {
+            adaptation_interval_ms: 1_000.0,
+            drop_expired: true,
+            online_calibration: true,
+            drain_timeout_ms: 30_000.0,
+        }
+    }
+}
+
+struct LiveModel {
+    spec: ModelSpec,
+    coordinator: Arc<Coordinator>,
+    image_len: usize,
+    /// Outstanding responses, submission order.
+    pending: VecDeque<(u64, mpsc::Receiver<LiveResponse>)>,
+    submitted: u64,
+    completed: u64,
+    dropped: u64,
+    violations: u64,
+}
+
+impl LiveModel {
+    fn account(&mut self, resp: &LiveResponse) {
+        if resp.dropped {
+            self.dropped += 1;
+            self.violations += 1;
+        } else {
+            self.completed += 1;
+            if resp.violated {
+                self.violations += 1;
+            }
+        }
+    }
+}
+
+/// Multi-model live serving engine (wall clock, real threads).
+pub struct LiveEngine {
+    cfg: LiveEngineCfg,
+    clock: WallClock,
+    models: Vec<LiveModel>,
+    next_id: u64,
+}
+
+impl LiveEngine {
+    /// Start one coordinator per registered model, executors built by
+    /// `make_executor` (called once per spec).
+    pub fn start_with<F>(
+        registry: &ModelRegistry,
+        cfg: LiveEngineCfg,
+        mut make_executor: F,
+    ) -> Result<LiveEngine, EngineError>
+    where
+        F: FnMut(&ModelSpec) -> Result<Arc<dyn BatchExecutor>, EngineError>,
+    {
+        if registry.is_empty() {
+            return Err(EngineError::Rejected("empty model registry".into()));
+        }
+        let mut models = Vec::new();
+        for spec in registry.iter() {
+            let executor = make_executor(spec)?;
+            let image_len = executor.image_len();
+            let coordinator = Arc::new(Coordinator::start(
+                CoordinatorCfg {
+                    limits: spec.limits,
+                    adaptation_interval_ms: cfg.adaptation_interval_ms,
+                    model: spec.latency,
+                    drop_expired: cfg.drop_expired,
+                    online_calibration: cfg.online_calibration,
+                },
+                executor,
+            ));
+            models.push(LiveModel {
+                spec: spec.clone(),
+                coordinator,
+                image_len,
+                pending: VecDeque::new(),
+                submitted: 0,
+                completed: 0,
+                dropped: 0,
+                violations: 0,
+            });
+        }
+        Ok(LiveEngine { cfg, clock: WallClock::new(), models, next_id: 0 })
+    }
+
+    /// Start with deterministic [`MockExecutor`]s — the conformance-suite
+    /// and development configuration (no artifacts, no PJRT).
+    pub fn start_mock(
+        registry: &ModelRegistry,
+        cfg: LiveEngineCfg,
+    ) -> Result<LiveEngine, EngineError> {
+        Self::start_with(registry, cfg, |_| Ok(Arc::new(MockExecutor::default())))
+    }
+
+    /// The coordinator serving `model` (the HTTP gateway shares these).
+    pub fn coordinator(&self, model: &str) -> Option<Arc<Coordinator>> {
+        self.model_idx(model)
+            .map(|i| Arc::clone(&self.models[i].coordinator))
+    }
+
+    /// (name, coordinator) pairs in registration order — the input to
+    /// [`crate::server::Gateway::from_parts`].
+    pub fn coordinators(&self) -> Vec<(String, Arc<Coordinator>)> {
+        self.models
+            .iter()
+            .map(|m| (m.spec.name.clone(), Arc::clone(&m.coordinator)))
+            .collect()
+    }
+
+    /// Stop every coordinator (flushes queued requests as drops) after
+    /// settling outstanding responses. Works through the shared handles,
+    /// so gateways still holding the same `Arc`s are drained too.
+    pub fn shutdown(mut self) {
+        self.drain();
+        for m in self.models.drain(..) {
+            m.coordinator.shutdown();
+        }
+    }
+
+    fn model_idx(&self, name: &str) -> Option<usize> {
+        self.models.iter().position(|m| m.spec.name == name)
+    }
+
+    fn unknown(&self, name: &str) -> EngineError {
+        EngineError::UnknownModel {
+            name: name.to_string(),
+            known: self.models.iter().map(|m| m.spec.name.clone()).collect(),
+        }
+    }
+
+    /// Collect every already-arrived response without blocking.
+    fn poll_responses(&mut self) {
+        for m in &mut self.models {
+            loop {
+                let Some((id, rx)) = m.pending.front() else { break };
+                let _ = id;
+                match rx.try_recv() {
+                    Ok(resp) => {
+                        m.account(&resp);
+                        m.pending.pop_front();
+                    }
+                    Err(mpsc::TryRecvError::Empty) => break,
+                    Err(mpsc::TryRecvError::Disconnected) => {
+                        // Coordinator gone without a response: a drop.
+                        m.dropped += 1;
+                        m.violations += 1;
+                        m.pending.pop_front();
+                    }
+                }
+            }
+        }
+    }
+}
+
+impl ServingEngine for LiveEngine {
+    fn kind(&self) -> &'static str {
+        "live"
+    }
+
+    fn clock(&self) -> &dyn Clock {
+        &self.clock
+    }
+
+    fn models(&self) -> Vec<String> {
+        self.models.iter().map(|m| m.spec.name.clone()).collect()
+    }
+
+    fn submit(&mut self, model: &str, req: EngineRequest) -> Result<u64, EngineError> {
+        let idx = self.model_idx(model).ok_or_else(|| self.unknown(model))?;
+        if req.slo_ms <= 0.0 {
+            return Err(EngineError::Rejected(format!(
+                "slo_ms must be positive (got {})",
+                req.slo_ms
+            )));
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        let m = &mut self.models[idx];
+        // Wall engines cannot submit into the past/future: `at_ms` is the
+        // scenario driver's pacing concern (it sleeps, then submits).
+        let mut image = req.payload;
+        image.resize(m.image_len, 0.0);
+        let (tx, rx) = mpsc::channel();
+        m.coordinator.submit(LiveRequest {
+            id: 0, // coordinator assigns its own internal id
+            image,
+            slo_ms: req.slo_ms,
+            comm_latency_ms: req.comm_ms,
+            reply: tx,
+        });
+        m.pending.push_back((id, rx));
+        m.submitted += 1;
+        Ok(id)
+    }
+
+    /// Poll: account every response that has already arrived. The
+    /// coordinators' own threads advance scaling on wall time.
+    fn tick(&mut self) {
+        self.poll_responses();
+    }
+
+    fn drain(&mut self) -> DrainReport {
+        let timeout = Duration::from_secs_f64(self.cfg.drain_timeout_ms / 1_000.0);
+        let mut ticks = 0u64;
+        for i in 0..self.models.len() {
+            loop {
+                let m = &mut self.models[i];
+                let Some((_, rx)) = m.pending.front() else { break };
+                ticks += 1;
+                match rx.recv_timeout(timeout) {
+                    Ok(resp) => {
+                        m.account(&resp);
+                        m.pending.pop_front();
+                    }
+                    Err(_) => {
+                        // Timed out or disconnected: account as a drop so
+                        // drain always settles.
+                        m.dropped += 1;
+                        m.violations += 1;
+                        m.pending.pop_front();
+                    }
+                }
+            }
+        }
+        let submitted = self.models.iter().map(|m| m.submitted).sum();
+        let resolved = self
+            .models
+            .iter()
+            .map(|m| m.completed + m.dropped)
+            .sum();
+        DrainReport { submitted, resolved, ticks }
+    }
+
+    fn snapshot(&self, model: &str) -> Result<ModelSnapshot, EngineError> {
+        let idx = self.model_idx(model).ok_or_else(|| self.unknown(model))?;
+        let m = &self.models[idx];
+        let stats = m.coordinator.stats();
+        Ok(ModelSnapshot {
+            submitted: m.submitted,
+            completed: m.completed,
+            dropped: m.dropped,
+            violations: m.violations,
+            queue_len: stats.queue_len,
+            cores: stats.cores,
+            batch: stats.batch,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn two_model_engine() -> LiveEngine {
+        let mut reg = ModelRegistry::new();
+        reg.register(ModelSpec::named("resnet").unwrap()).unwrap();
+        reg.register(ModelSpec::named("yolov5s").unwrap()).unwrap();
+        LiveEngine::start_mock(
+            &reg,
+            LiveEngineCfg { adaptation_interval_ms: 100.0, ..Default::default() },
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn serves_and_conserves_two_models() {
+        let mut e = two_model_engine();
+        for _ in 0..20 {
+            e.submit("resnet", EngineRequest::new(5_000.0, 0.0)).unwrap();
+        }
+        for _ in 0..10 {
+            e.submit("yolov5s", EngineRequest::new(5_000.0, 0.0)).unwrap();
+        }
+        let report = e.drain();
+        assert!(report.settled(), "{report:?}");
+        assert_eq!(report.submitted, 30);
+        let a = e.snapshot("resnet").unwrap();
+        let b = e.snapshot("yolov5s").unwrap();
+        assert_eq!(a.submitted, 20);
+        assert_eq!(b.submitted, 10);
+        assert_eq!(a.resolved(), 20);
+        assert_eq!(b.resolved(), 10);
+        assert!(a.completed > 0);
+        e.shutdown();
+    }
+
+    #[test]
+    fn unknown_model_rejected() {
+        let mut e = two_model_engine();
+        assert!(matches!(
+            e.submit("nope", EngineRequest::new(1_000.0, 0.0)),
+            Err(EngineError::UnknownModel { .. })
+        ));
+        e.shutdown();
+    }
+
+    #[test]
+    fn payload_resized_to_executor_shape() {
+        let mut e = two_model_engine();
+        // Payload longer than the mock's image_len (4): truncated, served.
+        e.submit(
+            "resnet",
+            EngineRequest::new(5_000.0, 0.0).with_payload(vec![0.5; 64]),
+        )
+        .unwrap();
+        let report = e.drain();
+        assert!(report.settled());
+        assert_eq!(e.snapshot("resnet").unwrap().completed, 1);
+        e.shutdown();
+    }
+}

@@ -1,0 +1,332 @@
+//! The unified serving API: one [`ServingEngine`] abstraction over the
+//! discrete-event simulator and the live coordinator, with a multi-model
+//! [`ModelRegistry`] on top.
+//!
+//! The paper's contribution (EDF reordering + dynamic batching + in-place
+//! vertical scaling) used to be reachable through two disjoint code paths
+//! — `sim::run` for virtual-time experiments and `coordinator::Coordinator`
+//! for live serving — so every scenario had to be built twice. This module
+//! closes that gap:
+//!
+//! * [`ServingEngine`] — submit / tick / drain / snapshot, the contract
+//!   both paths satisfy. Scenarios, benches, and examples written against
+//!   the trait run unchanged on either implementation.
+//! * [`SimEngine`] — wraps the discrete-event machinery (EDF queues,
+//!   shared-budget clusters, per-model autoscalers) under a virtual
+//!   [`Clock`]; a 10-minute experiment settles in milliseconds.
+//! * [`LiveEngine`] — wraps one [`crate::coordinator::Coordinator`] per
+//!   registered model (real threads, wall [`Clock`], pluggable
+//!   [`crate::coordinator::BatchExecutor`]).
+//! * [`ModelRegistry`] / [`ModelSpec`] — named model variants served from
+//!   one process, each with its own EDF queue, fitted latency model, and
+//!   autoscaler, contending for a shared core budget.
+//! * [`scenario`] — a clock-agnostic scenario driver: the same two-model
+//!   dynamic-SLO workload replays through either engine.
+//!
+//! The versioned HTTP surface (`/v1/models/...`, [`crate::server`]) is the
+//! network face of the same registry.
+
+pub mod live;
+pub mod registry;
+pub mod scenario;
+pub mod sim;
+
+pub use live::{LiveEngine, LiveEngineCfg};
+pub use registry::{builtin_latency_model, ModelRegistry, ModelSpec};
+pub use scenario::{run_scenario, Scenario, ScenarioModel, ScenarioReport};
+pub use sim::{SimEngine, SimEngineCfg};
+
+use std::cell::Cell;
+use std::fmt;
+use std::time::Instant;
+
+use crate::{BatchSize, Cores, Ms};
+
+// ------------------------------------------------------------------ clock --
+
+/// The engine's notion of time, in ms since engine start. Virtual for
+/// [`SimEngine`], wall for [`LiveEngine`]; scenario drivers use it to pace
+/// arrivals without knowing which engine they are driving.
+pub trait Clock {
+    /// Current time (ms since the engine started).
+    fn now_ms(&self) -> Ms;
+
+    /// Block until `at_ms`; a no-op on virtual clocks (virtual time is
+    /// advanced by the event loop, not by waiting).
+    fn sleep_until_ms(&self, at_ms: Ms);
+
+    /// True when time is simulated (drivers may then skip pacing).
+    fn is_virtual(&self) -> bool;
+}
+
+/// Wall-clock time since construction.
+pub struct WallClock {
+    started: Instant,
+}
+
+impl WallClock {
+    pub fn new() -> WallClock {
+        WallClock { started: Instant::now() }
+    }
+}
+
+impl Default for WallClock {
+    fn default() -> Self {
+        WallClock::new()
+    }
+}
+
+impl Clock for WallClock {
+    fn now_ms(&self) -> Ms {
+        self.started.elapsed().as_secs_f64() * 1_000.0
+    }
+
+    fn sleep_until_ms(&self, at_ms: Ms) {
+        let now = self.now_ms();
+        if at_ms > now {
+            std::thread::sleep(std::time::Duration::from_secs_f64(
+                (at_ms - now) / 1_000.0,
+            ));
+        }
+    }
+
+    fn is_virtual(&self) -> bool {
+        false
+    }
+}
+
+/// Virtual time owned by a discrete-event loop.
+pub struct VirtualClock {
+    now: Cell<Ms>,
+}
+
+impl VirtualClock {
+    pub fn new() -> VirtualClock {
+        VirtualClock { now: Cell::new(0.0) }
+    }
+
+    /// Advance monotonically (the event loop calls this; going backwards
+    /// is a bug and is clamped).
+    pub fn advance_to(&self, t: Ms) {
+        if t > self.now.get() {
+            self.now.set(t);
+        }
+    }
+}
+
+impl Default for VirtualClock {
+    fn default() -> Self {
+        VirtualClock::new()
+    }
+}
+
+impl Clock for VirtualClock {
+    fn now_ms(&self) -> Ms {
+        self.now.get()
+    }
+
+    fn sleep_until_ms(&self, _at_ms: Ms) {}
+
+    fn is_virtual(&self) -> bool {
+        true
+    }
+}
+
+// ------------------------------------------------------------------ types --
+
+/// A request submitted through the unified API.
+#[derive(Debug, Clone, Default)]
+pub struct EngineRequest {
+    /// Virtual send time (ms on the engine clock). `None` = "now".
+    /// Wall-clock engines ignore explicit timestamps in the past.
+    pub at_ms: Option<Ms>,
+    /// End-to-end SLO in ms.
+    pub slo_ms: Ms,
+    /// Communication latency already consumed on the access network.
+    pub comm_ms: Ms,
+    /// Input payload (flat f32 image). Live engines zero-pad / truncate to
+    /// the executor's expected length; the simulator only uses its size.
+    pub payload: Vec<f32>,
+}
+
+impl EngineRequest {
+    pub fn new(slo_ms: Ms, comm_ms: Ms) -> EngineRequest {
+        EngineRequest { at_ms: None, slo_ms, comm_ms, payload: Vec::new() }
+    }
+
+    /// Set the virtual send time (simulation pacing).
+    pub fn at(mut self, at_ms: Ms) -> EngineRequest {
+        self.at_ms = Some(at_ms);
+        self
+    }
+
+    pub fn with_payload(mut self, payload: Vec<f32>) -> EngineRequest {
+        self.payload = payload;
+        self
+    }
+}
+
+/// Errors from the unified serving API.
+#[derive(Debug, Clone, PartialEq)]
+pub enum EngineError {
+    /// The named model is not in the registry.
+    UnknownModel { name: String, known: Vec<String> },
+    /// The engine rejected the submission (shutting down, invalid input).
+    Rejected(String),
+}
+
+impl fmt::Display for EngineError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            EngineError::UnknownModel { name, known } => {
+                write!(f, "unknown model '{name}' (registered: {})", known.join(", "))
+            }
+            EngineError::Rejected(why) => write!(f, "submission rejected: {why}"),
+        }
+    }
+}
+
+impl std::error::Error for EngineError {}
+
+/// Per-model request accounting + current scaling decision.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct ModelSnapshot {
+    /// Requests accepted by `submit`.
+    pub submitted: u64,
+    /// Requests that finished processing (SLO met or violated).
+    pub completed: u64,
+    /// Requests dropped (deadline expired before processing, or flushed).
+    pub dropped: u64,
+    /// SLO violations among completed + dropped (drops count, as in the
+    /// paper's Fig. 4 accounting).
+    pub violations: u64,
+    /// Requests currently queued.
+    pub queue_len: usize,
+    /// Cores currently allocated to this model's instances.
+    pub cores: Cores,
+    /// Current dynamic batch size decision.
+    pub batch: BatchSize,
+}
+
+impl ModelSnapshot {
+    /// Requests with a terminal outcome.
+    pub fn resolved(&self) -> u64 {
+        self.completed + self.dropped
+    }
+
+    /// Requests submitted but not yet resolved (saturating, since live
+    /// snapshots read counters that move between loads).
+    pub fn in_flight(&self) -> u64 {
+        self.submitted.saturating_sub(self.resolved())
+    }
+}
+
+/// What [`ServingEngine::drain`] settled.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct DrainReport {
+    /// Total requests submitted over the engine's lifetime.
+    pub submitted: u64,
+    /// Total requests resolved (completed + dropped) after draining.
+    pub resolved: u64,
+    /// Ticks (adaptation intervals / poll rounds) the drain consumed.
+    pub ticks: u64,
+}
+
+impl DrainReport {
+    /// True when every submitted request has a terminal outcome.
+    pub fn settled(&self) -> bool {
+        self.resolved == self.submitted
+    }
+}
+
+// ------------------------------------------------------------------ trait --
+
+/// The unified serving abstraction: one scenario, two clocks.
+///
+/// Implementations: [`SimEngine`] (virtual time) and [`LiveEngine`] (wall
+/// time). The contract both satisfy:
+///
+/// * **Conservation** — after [`drain`](ServingEngine::drain), every
+///   submitted request has exactly one terminal outcome:
+///   `submitted == completed + dropped` per model.
+/// * **EDF order** — queued requests are processed earliest-deadline
+///   first, in batches of the autoscaler's chosen size.
+/// * **Isolation** — each registered model has its own queue, latency
+///   model, and autoscaler; models contend only through the shared core
+///   budget.
+pub trait ServingEngine {
+    /// `"sim"` or `"live"`.
+    fn kind(&self) -> &'static str;
+
+    /// The engine's clock (virtual or wall).
+    fn clock(&self) -> &dyn Clock;
+
+    /// Registered model names, registration order (index 0 = default).
+    fn models(&self) -> Vec<String>;
+
+    /// Enqueue a request for `model`; returns the engine-assigned id.
+    fn submit(&mut self, model: &str, req: EngineRequest) -> Result<u64, EngineError>;
+
+    /// Advance one adaptation interval: process due work, run each
+    /// model's autoscaler, publish new (cores, batch) decisions.
+    fn tick(&mut self);
+
+    /// Settle all in-flight work (bounded internally) and report totals.
+    fn drain(&mut self) -> DrainReport;
+
+    /// Per-model accounting + decision snapshot.
+    fn snapshot(&self, model: &str) -> Result<ModelSnapshot, EngineError>;
+
+    /// Current engine time (ms since start).
+    fn now_ms(&self) -> Ms {
+        self.clock().now_ms()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn virtual_clock_monotone() {
+        let c = VirtualClock::new();
+        assert_eq!(c.now_ms(), 0.0);
+        c.advance_to(50.0);
+        c.advance_to(20.0); // backwards: clamped
+        assert_eq!(c.now_ms(), 50.0);
+        assert!(c.is_virtual());
+        c.sleep_until_ms(10_000.0); // no-op, returns immediately
+        assert_eq!(c.now_ms(), 50.0);
+    }
+
+    #[test]
+    fn wall_clock_advances() {
+        let c = WallClock::new();
+        let a = c.now_ms();
+        c.sleep_until_ms(a + 5.0);
+        assert!(c.now_ms() >= a + 4.0);
+        assert!(!c.is_virtual());
+    }
+
+    #[test]
+    fn snapshot_arithmetic() {
+        let s = ModelSnapshot {
+            submitted: 10,
+            completed: 6,
+            dropped: 2,
+            ..Default::default()
+        };
+        assert_eq!(s.resolved(), 8);
+        assert_eq!(s.in_flight(), 2);
+    }
+
+    #[test]
+    fn engine_error_display_lists_known_models() {
+        let e = EngineError::UnknownModel {
+            name: "gpt5".into(),
+            known: vec!["resnet".into(), "yolov5s".into()],
+        };
+        let msg = e.to_string();
+        assert!(msg.contains("gpt5") && msg.contains("resnet, yolov5s"), "{msg}");
+    }
+}

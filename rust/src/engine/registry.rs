@@ -1,0 +1,182 @@
+//! Multi-model registry: named model variants served from one process.
+//!
+//! A [`ModelSpec`] bundles everything the serving layer needs to run one
+//! variant — its fitted latency model, scaling policy, solver limits, and
+//! nominal SLO. The [`ModelRegistry`] is an ordered collection of specs
+//! (registration order is stable; the first entry is the default model for
+//! the legacy `POST /infer` alias). Both [`crate::engine::SimEngine`] and
+//! [`crate::engine::LiveEngine`] are constructed from a registry, as is
+//! the `/v1` HTTP gateway.
+
+use crate::config::Policy;
+use crate::perfmodel::LatencyModel;
+use crate::solver::SolverLimits;
+use crate::Ms;
+
+/// Look up a built-in fitted latency model by variant name. Accepts both
+/// the perf-model names (`resnet`, `yolov5n`, `yolov5s`) and the AOT
+/// artifact variant names (`resnet18lite`, `yolov5nlite`).
+pub fn builtin_latency_model(name: &str) -> Option<LatencyModel> {
+    match name {
+        "resnet" | "resnet18lite" => Some(LatencyModel::resnet_human_detector()),
+        "yolov5n" | "yolov5nlite" => Some(LatencyModel::yolov5n()),
+        "yolov5s" => Some(LatencyModel::yolov5s()),
+        _ => None,
+    }
+}
+
+/// Everything needed to serve one named model variant.
+#[derive(Debug, Clone)]
+pub struct ModelSpec {
+    pub name: String,
+    /// Offline-fitted latency model the scaler plans with.
+    pub latency: LatencyModel,
+    /// Autoscaling policy for this variant.
+    pub policy: Policy,
+    pub limits: SolverLimits,
+    /// Nominal end-to-end SLO advertised for this variant (requests may
+    /// still carry their own).
+    pub slo_ms: Ms,
+}
+
+impl ModelSpec {
+    /// A spec with the default Sponge policy and paper limits.
+    pub fn new(name: &str, latency: LatencyModel) -> ModelSpec {
+        ModelSpec {
+            name: name.to_string(),
+            latency,
+            policy: Policy::Sponge,
+            limits: SolverLimits::default(),
+            slo_ms: 1_000.0,
+        }
+    }
+
+    /// A spec for a built-in variant name (see [`builtin_latency_model`]).
+    pub fn named(name: &str) -> Result<ModelSpec, String> {
+        let latency = builtin_latency_model(name).ok_or_else(|| {
+            format!(
+                "unknown model variant '{name}' \
+                 (known: resnet, resnet18lite, yolov5n, yolov5nlite, yolov5s)"
+            )
+        })?;
+        Ok(ModelSpec::new(name, latency))
+    }
+
+    pub fn with_policy(mut self, policy: Policy) -> ModelSpec {
+        self.policy = policy;
+        self
+    }
+
+    pub fn with_limits(mut self, limits: SolverLimits) -> ModelSpec {
+        self.limits = limits;
+        self
+    }
+
+    pub fn with_slo(mut self, slo_ms: Ms) -> ModelSpec {
+        self.slo_ms = slo_ms;
+        self
+    }
+
+    /// Instantiate this spec's autoscaler.
+    pub fn build_scaler(&self) -> Box<dyn crate::scaler::Autoscaler> {
+        self.policy.build(self.limits)
+    }
+}
+
+/// Ordered collection of model specs; index 0 is the default model.
+#[derive(Debug, Clone, Default)]
+pub struct ModelRegistry {
+    specs: Vec<ModelSpec>,
+}
+
+impl ModelRegistry {
+    pub fn new() -> ModelRegistry {
+        ModelRegistry { specs: Vec::new() }
+    }
+
+    /// Build a registry from a comma-separated variant list (the CLI's
+    /// `serve --models a,b` input).
+    pub fn from_names(csv: &str) -> Result<ModelRegistry, String> {
+        let mut reg = ModelRegistry::new();
+        for name in csv.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            reg.register(ModelSpec::named(name)?)?;
+        }
+        if reg.is_empty() {
+            return Err("no model names given".into());
+        }
+        Ok(reg)
+    }
+
+    /// Add a spec; duplicate names are rejected.
+    pub fn register(&mut self, spec: ModelSpec) -> Result<(), String> {
+        if self.get(&spec.name).is_some() {
+            return Err(format!("model '{}' already registered", spec.name));
+        }
+        self.specs.push(spec);
+        Ok(())
+    }
+
+    pub fn get(&self, name: &str) -> Option<&ModelSpec> {
+        self.specs.iter().find(|s| s.name == name)
+    }
+
+    /// The default model (first registered), if any.
+    pub fn default_spec(&self) -> Option<&ModelSpec> {
+        self.specs.first()
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        self.specs.iter().map(|s| s.name.clone()).collect()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &ModelSpec> {
+        self.specs.iter()
+    }
+
+    pub fn len(&self) -> usize {
+        self.specs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.specs.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_lookup_covers_both_naming_schemes() {
+        assert!(builtin_latency_model("resnet").is_some());
+        assert!(builtin_latency_model("resnet18lite").is_some());
+        assert!(builtin_latency_model("yolov5nlite").is_some());
+        assert!(builtin_latency_model("gpt5").is_none());
+    }
+
+    #[test]
+    fn from_names_preserves_order_and_default() {
+        let reg = ModelRegistry::from_names("resnet, yolov5s").unwrap();
+        assert_eq!(reg.names(), vec!["resnet", "yolov5s"]);
+        assert_eq!(reg.default_spec().unwrap().name, "resnet");
+        assert_eq!(reg.len(), 2);
+    }
+
+    #[test]
+    fn duplicate_and_unknown_rejected() {
+        assert!(ModelRegistry::from_names("resnet,resnet").is_err());
+        assert!(ModelRegistry::from_names("resnet,zeus").is_err());
+        assert!(ModelRegistry::from_names(" , ").is_err());
+    }
+
+    #[test]
+    fn spec_builders_compose() {
+        let spec = ModelSpec::named("yolov5s")
+            .unwrap()
+            .with_policy(Policy::Static8)
+            .with_slo(750.0);
+        assert_eq!(spec.policy, Policy::Static8);
+        assert_eq!(spec.slo_ms, 750.0);
+        assert_eq!(spec.build_scaler().name(), "static");
+    }
+}

@@ -1,0 +1,169 @@
+//! Clock-agnostic scenario driver: replay a multi-model workload through
+//! *any* [`ServingEngine`].
+//!
+//! A [`Scenario`] pairs each registered model with a workload generator
+//! (arrival process + SLO + payload mix) and a horizon. [`run_scenario`]
+//! generates the request timelines, merges them in send order, and
+//! submits them through the trait:
+//!
+//! * on a **virtual** clock ([`super::SimEngine`]) timestamps ride along
+//!   via [`EngineRequest::at`] and the event loop does the pacing —
+//!   minutes of workload settle in milliseconds;
+//! * on a **wall** clock ([`super::LiveEngine`]) the driver sleeps until
+//!   each send time (compressed by [`Scenario::time_scale`]) so the same
+//!   arrival pattern hits the live threads.
+//!
+//! The conformance suite drives the identical two-model scenario through
+//! both engines and asserts matching request accounting.
+
+use crate::network::NetworkModel;
+use crate::workload::WorkloadGen;
+use crate::Ms;
+
+use super::{DrainReport, EngineRequest, ModelSnapshot, ServingEngine};
+
+/// One model's share of a scenario.
+#[derive(Debug, Clone)]
+pub struct ScenarioModel {
+    /// Registered model name the requests target.
+    pub model: String,
+    pub workload: WorkloadGen,
+}
+
+/// A multi-model workload replay.
+#[derive(Debug, Clone)]
+pub struct Scenario {
+    pub horizon_ms: Ms,
+    pub models: Vec<ScenarioModel>,
+    /// Wall-pacing compression for live engines: send times are multiplied
+    /// by this factor (e.g. `0.01` replays a 10 s scenario in 100 ms).
+    /// Ignored on virtual clocks. SLOs are *not* scaled.
+    pub time_scale: f64,
+}
+
+impl Scenario {
+    pub fn new(horizon_ms: Ms) -> Scenario {
+        Scenario { horizon_ms, models: Vec::new(), time_scale: 1.0 }
+    }
+
+    pub fn with_model(mut self, model: &str, workload: WorkloadGen) -> Scenario {
+        self.models.push(ScenarioModel { model: model.to_string(), workload });
+        self
+    }
+
+    pub fn with_time_scale(mut self, scale: f64) -> Scenario {
+        assert!(scale > 0.0);
+        self.time_scale = scale;
+        self
+    }
+}
+
+/// Outcome of one scenario run: per-model snapshots + the drain report.
+#[derive(Debug, Clone)]
+pub struct ScenarioReport {
+    pub engine: &'static str,
+    pub drain: DrainReport,
+    /// (model name, snapshot) in scenario order.
+    pub per_model: Vec<(String, ModelSnapshot)>,
+}
+
+impl ScenarioReport {
+    pub fn snapshot(&self, model: &str) -> Option<&ModelSnapshot> {
+        self.per_model
+            .iter()
+            .find(|(name, _)| name == model)
+            .map(|(_, s)| s)
+    }
+
+    /// True when every model conserved requests
+    /// (`submitted == completed + dropped`).
+    pub fn conserved(&self) -> bool {
+        self.per_model.iter().all(|(_, s)| s.in_flight() == 0)
+    }
+}
+
+/// Replay `scenario` through `engine`: generate per-model request
+/// timelines, submit them in send order (paced on wall clocks), then
+/// drain and snapshot.
+pub fn run_scenario(
+    engine: &mut dyn ServingEngine,
+    scenario: &Scenario,
+    net: &NetworkModel,
+) -> Result<ScenarioReport, super::EngineError> {
+    // Generate and merge the timelines in send order.
+    let mut timeline: Vec<(Ms, usize, crate::workload::Request)> = Vec::new();
+    for (idx, sm) in scenario.models.iter().enumerate() {
+        for req in sm.workload.generate(scenario.horizon_ms, net) {
+            timeline.push((req.sent_at_ms, idx, req));
+        }
+    }
+    timeline.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+
+    let virtual_time = engine.clock().is_virtual();
+    for (sent_at, idx, req) in timeline {
+        let model = &scenario.models[idx].model;
+        let mut er = EngineRequest::new(req.slo_ms, req.comm_latency_ms);
+        if virtual_time {
+            er = er.at(sent_at);
+        } else {
+            engine.clock().sleep_until_ms(sent_at * scenario.time_scale);
+            engine.tick(); // absorb responses while pacing
+        }
+        engine.submit(model, er)?;
+    }
+    let drain = engine.drain();
+    let mut per_model = Vec::new();
+    for sm in &scenario.models {
+        per_model.push((sm.model.clone(), engine.snapshot(&sm.model)?));
+    }
+    Ok(ScenarioReport { engine: engine.kind(), drain, per_model })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{ModelRegistry, ModelSpec, SimEngine, SimEngineCfg};
+    use crate::network::BandwidthTrace;
+
+    fn scenario(horizon_s: usize) -> (Scenario, NetworkModel) {
+        let wl_a = WorkloadGen { rate_rps: 20.0, ..WorkloadGen::paper_default() };
+        let wl_b = WorkloadGen {
+            rate_rps: 10.0,
+            seed: 0xbeef,
+            ..WorkloadGen::paper_default()
+        };
+        let s = Scenario::new(horizon_s as f64 * 1_000.0)
+            .with_model("resnet", wl_a)
+            .with_model("yolov5s", wl_b);
+        let net = NetworkModel::new(BandwidthTrace::synthetic_4g(
+            horizon_s + 1,
+            1_000.0,
+            9,
+        ));
+        (s, net)
+    }
+
+    #[test]
+    fn sim_scenario_conserves_and_counts() {
+        let mut reg = ModelRegistry::new();
+        reg.register(ModelSpec::named("resnet").unwrap()).unwrap();
+        reg.register(ModelSpec::named("yolov5s").unwrap()).unwrap();
+        let mut engine = SimEngine::new(&reg, SimEngineCfg::default()).unwrap();
+        let (s, net) = scenario(10);
+        let report = run_scenario(&mut engine, &s, &net).unwrap();
+        assert_eq!(report.engine, "sim");
+        assert!(report.conserved(), "{report:?}");
+        assert_eq!(report.snapshot("resnet").unwrap().submitted, 200);
+        assert_eq!(report.snapshot("yolov5s").unwrap().submitted, 100);
+    }
+
+    #[test]
+    fn unknown_scenario_model_is_an_error() {
+        let mut reg = ModelRegistry::new();
+        reg.register(ModelSpec::named("resnet").unwrap()).unwrap();
+        let mut engine = SimEngine::new(&reg, SimEngineCfg::default()).unwrap();
+        let (mut s, net) = scenario(2);
+        s.models[1].model = "ghost".into();
+        assert!(run_scenario(&mut engine, &s, &net).is_err());
+    }
+}

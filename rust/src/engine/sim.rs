@@ -1,0 +1,601 @@
+//! [`SimEngine`]: the discrete-event implementation of [`ServingEngine`].
+//!
+//! Wraps the same components the single-model `sim::run` loop wires
+//! together — EDF queues, per-model autoscalers, latency models, lognormal
+//! engine noise — but serves *multiple registered models from one virtual
+//! process*: each model owns its own queue, scaler, and instance fleet,
+//! and the fleets contend for a shared node core budget the engine
+//! enforces on every launch/resize (the `ModelRegistry` contract).
+//!
+//! Time is virtual ([`VirtualClock`]): a 10-minute two-model experiment
+//! settles in milliseconds of wall time, deterministically per seed.
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
+
+use crate::cluster::Cluster;
+use crate::monitoring::{Outcome, RateEstimator, SloTracker};
+use crate::queue::EdfQueue;
+use crate::scaler::{Action, Autoscaler, ScalerObs};
+use crate::util::rng::Pcg32;
+use crate::workload::Request;
+use crate::{BatchSize, Cores, Ms};
+
+use super::registry::{ModelRegistry, ModelSpec};
+use super::{
+    Clock, DrainReport, EngineError, EngineRequest, ModelSnapshot, ServingEngine, VirtualClock,
+};
+
+/// Simulation-engine knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct SimEngineCfg {
+    /// Scaler adaptation interval (paper: 1 s).
+    pub adaptation_interval_ms: Ms,
+    /// Per-model cluster timing (cold start, resize actuation).
+    pub cluster: crate::cluster::ClusterCfg,
+    /// Node core budget shared by *all* registered models.
+    pub shared_cores: Cores,
+    /// Lognormal latency-noise coefficient of variation (0 = exact model).
+    pub latency_noise_cv: f64,
+    pub seed: u64,
+    /// Consecutive no-progress ticks before `drain` force-drops whatever
+    /// is left (guards against zero-capacity stalls).
+    pub drain_stall_ticks: u64,
+}
+
+impl Default for SimEngineCfg {
+    fn default() -> Self {
+        let cluster = crate::cluster::ClusterCfg::default();
+        SimEngineCfg {
+            adaptation_interval_ms: 1_000.0,
+            cluster,
+            shared_cores: cluster.node_cores,
+            latency_noise_cv: 0.0,
+            seed: 0x5f0_46e,
+            drain_stall_ticks: 64,
+        }
+    }
+}
+
+/// Per-model serving state: own queue, scaler, fleet, accounting.
+struct SimModel {
+    spec: ModelSpec,
+    queue: EdfQueue,
+    scaler: Box<dyn Autoscaler>,
+    tracker: SloTracker,
+    rate: RateEstimator,
+    cluster: Cluster,
+    busy: HashMap<u32, bool>,
+    batch: BatchSize,
+    /// Model the virtual engine executes (switched by
+    /// [`Action::SwitchModel`]; plain policies never touch it).
+    exec_model: crate::perfmodel::LatencyModel,
+    cl_max_window: Ms,
+    submitted: u64,
+}
+
+#[derive(Debug)]
+enum EventKind {
+    Arrival { model: usize, req: Request },
+    Done { model: usize, instance: u32, requests: Vec<Request>, started_ms: Ms },
+}
+
+struct Event {
+    t: Ms,
+    seq: u64,
+    kind: EventKind,
+}
+
+impl PartialEq for Event {
+    fn eq(&self, other: &Self) -> bool {
+        self.t == other.t && self.seq == other.seq
+    }
+}
+
+impl Eq for Event {}
+
+impl PartialOrd for Event {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Event {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.t.total_cmp(&other.t).then_with(|| self.seq.cmp(&other.seq))
+    }
+}
+
+/// Multi-model discrete-event serving engine (virtual clock).
+pub struct SimEngine {
+    cfg: SimEngineCfg,
+    clock: VirtualClock,
+    models: Vec<SimModel>,
+    heap: BinaryHeap<Reverse<Event>>,
+    seq: u64,
+    next_id: u64,
+    next_tick_ms: Ms,
+    sigma: f64,
+    noise: Pcg32,
+}
+
+impl SimEngine {
+    /// Build from a registry: every model gets its own pre-warmed fleet
+    /// (instances launched in the virtual past so they are Ready at t=0,
+    /// as in the paper's experiments that start from a stable system).
+    pub fn new(registry: &ModelRegistry, cfg: SimEngineCfg) -> Result<SimEngine, EngineError> {
+        if registry.is_empty() {
+            return Err(EngineError::Rejected("empty model registry".into()));
+        }
+        let sigma = if cfg.latency_noise_cv > 0.0 {
+            (cfg.latency_noise_cv.powi(2) + 1.0).ln().sqrt()
+        } else {
+            0.0
+        };
+        let mut models = Vec::new();
+        let mut allocated_total: Cores = 0;
+        for spec in registry.iter() {
+            let scaler = spec.build_scaler();
+            let mut cluster = Cluster::new(cfg.cluster);
+            for cores in scaler.initial_cores() {
+                // Shared budget: grant what fits, never below one core.
+                let headroom = cfg.shared_cores.saturating_sub(allocated_total);
+                let granted = cores.min(headroom);
+                if granted >= 1
+                    && cluster.launch(granted, -cfg.cluster.cold_start_ms).is_ok()
+                {
+                    allocated_total += granted;
+                }
+            }
+            cluster.tick(0.0); // cold starts elapse pre-experiment
+            models.push(SimModel {
+                exec_model: spec.latency,
+                spec: spec.clone(),
+                queue: EdfQueue::new(),
+                scaler,
+                tracker: SloTracker::new(cfg.adaptation_interval_ms),
+                rate: RateEstimator::new(5_000.0),
+                cluster,
+                busy: HashMap::new(),
+                batch: 1,
+                cl_max_window: 0.0,
+                submitted: 0,
+            });
+        }
+        Ok(SimEngine {
+            next_tick_ms: cfg.adaptation_interval_ms,
+            cfg,
+            clock: VirtualClock::new(),
+            models,
+            heap: BinaryHeap::new(),
+            seq: 0,
+            next_id: 0,
+            sigma,
+            noise: Pcg32::seeded(cfg.seed),
+        })
+    }
+
+    /// The per-model SLO tracker (timeline, latency stats) — richer than
+    /// the portable [`ModelSnapshot`].
+    pub fn tracker(&self, model: &str) -> Option<&SloTracker> {
+        self.model_idx(model).map(|i| &self.models[i].tracker)
+    }
+
+    /// Allocated core-ms integral for one model (resource-usage metric).
+    pub fn core_ms(&self, model: &str) -> Option<f64> {
+        self.model_idx(model).map(|i| self.models[i].cluster.core_ms_integral())
+    }
+
+    fn model_idx(&self, name: &str) -> Option<usize> {
+        self.models.iter().position(|m| m.spec.name == name)
+    }
+
+    fn unknown(&self, name: &str) -> EngineError {
+        EngineError::UnknownModel {
+            name: name.to_string(),
+            known: self.models.iter().map(|m| m.spec.name.clone()).collect(),
+        }
+    }
+
+    fn total_submitted(&self) -> u64 {
+        self.models.iter().map(|m| m.submitted).sum()
+    }
+
+    fn total_resolved(&self) -> u64 {
+        self.models.iter().map(|m| m.tracker.total()).sum()
+    }
+
+    fn allocated_except(&self, idx: usize) -> Cores {
+        self.models
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| *i != idx)
+            .map(|(_, m)| m.cluster.allocated_cores())
+            .sum()
+    }
+
+    fn push_event(&mut self, t: Ms, kind: EventKind) {
+        self.seq += 1;
+        self.heap.push(Reverse(Event { t, seq: self.seq, kind }));
+    }
+
+    /// Process every due event up to and including `t_end`.
+    fn process_until(&mut self, t_end: Ms) {
+        while self
+            .heap
+            .peek()
+            .map_or(false, |Reverse(e)| e.t <= t_end)
+        {
+            let Reverse(ev) = self.heap.pop().unwrap();
+            self.clock.advance_to(ev.t);
+            match ev.kind {
+                EventKind::Arrival { model, req } => {
+                    let m = &mut self.models[model];
+                    m.rate.on_arrival(ev.t);
+                    m.cl_max_window = m.cl_max_window.max(req.comm_latency_ms);
+                    m.queue.push(req);
+                    self.dispatch(model, ev.t);
+                }
+                EventKind::Done { model, instance, requests, started_ms } => {
+                    let m = &mut self.models[model];
+                    m.busy.insert(instance, false);
+                    for r in &requests {
+                        let e2e = ev.t - r.sent_at_ms;
+                        m.tracker.record(
+                            ev.t,
+                            &Outcome {
+                                request_id: r.id,
+                                e2e_ms: e2e,
+                                queue_ms: started_ms - r.arrived_at_ms,
+                                processing_ms: ev.t - started_ms,
+                                violated: e2e > r.slo_ms + 1e-9,
+                                dropped: false,
+                            },
+                        );
+                    }
+                    self.dispatch(model, ev.t);
+                }
+            }
+        }
+        self.clock.advance_to(t_end);
+    }
+
+    /// Work-conserving dispatch for one model: every ready idle instance
+    /// of its fleet takes the next EDF batch.
+    fn dispatch(&mut self, idx: usize, now: Ms) {
+        let m = &mut self.models[idx];
+        if m.queue.is_empty() {
+            m.cluster.tick(now);
+            return;
+        }
+        drop_expired(now, &mut m.queue, &mut m.tracker);
+        m.cluster.tick(now);
+        let ready: Vec<(u32, Cores)> = m
+            .cluster
+            .ready_instances(now)
+            .iter()
+            .map(|i| (i.id, i.cores()))
+            .collect();
+        for (id, cores) in ready {
+            if *m.busy.get(&id).unwrap_or(&false) {
+                continue;
+            }
+            let Some(batch) = m.queue.take_batch(m.batch) else {
+                break;
+            };
+            let mut latency = m.exec_model.latency_ms(batch.len() as BatchSize, cores);
+            if self.sigma > 0.0 {
+                latency *= self
+                    .noise
+                    .lognormal(-self.sigma * self.sigma / 2.0, self.sigma);
+            }
+            m.busy.insert(id, true);
+            self.seq += 1;
+            self.heap.push(Reverse(Event {
+                t: now + latency,
+                seq: self.seq,
+                kind: EventKind::Done {
+                    model: idx,
+                    instance: id,
+                    requests: batch.requests,
+                    started_ms: now,
+                },
+            }));
+        }
+    }
+
+    /// Apply one scaler action under the shared core budget: grants are
+    /// clamped to the headroom left by the *other* models' fleets, so
+    /// co-registered models genuinely contend (capacity misses surface as
+    /// no-ops the scaler retries next tick, matching K8s semantics).
+    fn apply_action(&mut self, idx: usize, action: Action, now: Ms) {
+        let others = self.allocated_except(idx);
+        let budget = self.cfg.shared_cores;
+        let m = &mut self.models[idx];
+        match action {
+            Action::Resize { id, cores } => {
+                let current = m
+                    .cluster
+                    .get(id)
+                    .map(|i| i.cores().max(i.target_cores()))
+                    .unwrap_or(0);
+                let headroom = budget
+                    .saturating_sub(others + m.cluster.allocated_cores() - current);
+                let granted = cores.min(headroom);
+                if granted >= 1 {
+                    let _ = m.cluster.resize(id, granted, now);
+                }
+            }
+            Action::Launch { cores } => {
+                let headroom =
+                    budget.saturating_sub(others + m.cluster.allocated_cores());
+                let granted = cores.min(headroom);
+                if granted >= 1 {
+                    let _ = m.cluster.launch(granted, now);
+                }
+            }
+            Action::Terminate { id } => {
+                let _ = m.cluster.terminate(id, now);
+                m.busy.remove(&id);
+            }
+            Action::SetBatch { batch } => {
+                m.batch = batch.max(1);
+            }
+            Action::SwitchModel { model } => {
+                m.exec_model = model;
+            }
+        }
+    }
+}
+
+fn drop_expired(now: Ms, queue: &mut EdfQueue, tracker: &mut SloTracker) {
+    for r in queue.drop_expired(now) {
+        tracker.record(
+            now,
+            &Outcome {
+                request_id: r.id,
+                e2e_ms: now - r.sent_at_ms,
+                queue_ms: now - r.arrived_at_ms,
+                processing_ms: 0.0,
+                violated: true,
+                dropped: true,
+            },
+        );
+    }
+}
+
+impl ServingEngine for SimEngine {
+    fn kind(&self) -> &'static str {
+        "sim"
+    }
+
+    fn clock(&self) -> &dyn Clock {
+        &self.clock
+    }
+
+    fn models(&self) -> Vec<String> {
+        self.models.iter().map(|m| m.spec.name.clone()).collect()
+    }
+
+    fn submit(&mut self, model: &str, req: EngineRequest) -> Result<u64, EngineError> {
+        let idx = self.model_idx(model).ok_or_else(|| self.unknown(model))?;
+        if req.slo_ms <= 0.0 {
+            return Err(EngineError::Rejected(format!(
+                "slo_ms must be positive (got {})",
+                req.slo_ms
+            )));
+        }
+        let now = self.clock.now_ms();
+        let sent = req.at_ms.unwrap_or(now);
+        let arrived = (sent + req.comm_ms).max(now);
+        let id = self.next_id;
+        self.next_id += 1;
+        let request = Request {
+            id,
+            sent_at_ms: sent,
+            comm_latency_ms: req.comm_ms,
+            arrived_at_ms: arrived,
+            slo_ms: req.slo_ms,
+            payload_bytes: req.payload.len() as f64 * 4.0,
+        };
+        self.models[idx].submitted += 1;
+        self.push_event(arrived, EventKind::Arrival { model: idx, req: request });
+        Ok(id)
+    }
+
+    fn tick(&mut self) {
+        let t_end = self.next_tick_ms;
+        self.process_until(t_end);
+        for idx in 0..self.models.len() {
+            let actions = {
+                let m = &mut self.models[idx];
+                m.cluster.tick(t_end);
+                drop_expired(t_end, &mut m.queue, &mut m.tracker);
+                let budgets = m.queue.remaining_budgets(t_end);
+                let lambda = m.rate.rate_rps(t_end);
+                let obs = ScalerObs {
+                    now_ms: t_end,
+                    lambda_rps: lambda,
+                    budgets_ms: &budgets,
+                    cl_max_ms: m.cl_max_window,
+                    slo_ms: m.spec.slo_ms,
+                };
+                let actions = m.scaler.decide(&obs, &m.cluster, &m.exec_model);
+                m.cl_max_window = 0.0;
+                actions
+            };
+            for action in actions {
+                self.apply_action(idx, action, t_end);
+            }
+            self.dispatch(idx, t_end);
+        }
+        self.next_tick_ms = t_end + self.cfg.adaptation_interval_ms;
+    }
+
+    fn drain(&mut self) -> DrainReport {
+        let mut ticks = 0u64;
+        let mut stall = 0u64;
+        while self.total_resolved() < self.total_submitted() {
+            let before = self.total_resolved();
+            self.tick();
+            ticks += 1;
+            stall = if self.total_resolved() == before { stall + 1 } else { 0 };
+            if stall >= self.cfg.drain_stall_ticks && self.heap.is_empty() {
+                // Zero serving capacity and nothing in flight: account the
+                // remainder as drops so conservation holds.
+                let now = self.clock.now_ms();
+                for m in &mut self.models {
+                    while let Some(r) = m.queue.pop() {
+                        m.tracker.record(
+                            now,
+                            &Outcome {
+                                request_id: r.id,
+                                e2e_ms: now - r.sent_at_ms,
+                                queue_ms: now - r.arrived_at_ms,
+                                processing_ms: 0.0,
+                                violated: true,
+                                dropped: true,
+                            },
+                        );
+                    }
+                }
+                break;
+            }
+        }
+        DrainReport {
+            submitted: self.total_submitted(),
+            resolved: self.total_resolved(),
+            ticks,
+        }
+    }
+
+    fn snapshot(&self, model: &str) -> Result<ModelSnapshot, EngineError> {
+        let idx = self.model_idx(model).ok_or_else(|| self.unknown(model))?;
+        let m = &self.models[idx];
+        Ok(ModelSnapshot {
+            submitted: m.submitted,
+            completed: m.tracker.completed(),
+            dropped: m.tracker.dropped(),
+            violations: m.tracker.violations(),
+            queue_len: m.queue.len(),
+            cores: m.cluster.allocated_cores(),
+            batch: m.batch,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Policy;
+
+    fn two_model_engine(noise: f64) -> SimEngine {
+        let mut reg = ModelRegistry::new();
+        reg.register(ModelSpec::named("resnet").unwrap()).unwrap();
+        reg.register(
+            ModelSpec::named("yolov5s").unwrap().with_policy(Policy::Static8),
+        )
+        .unwrap();
+        SimEngine::new(
+            &reg,
+            SimEngineCfg { latency_noise_cv: noise, ..Default::default() },
+        )
+        .unwrap()
+    }
+
+    fn load(engine: &mut SimEngine, model: &str, n: usize, gap_ms: f64, slo: f64) {
+        for i in 0..n {
+            engine
+                .submit(
+                    model,
+                    EngineRequest::new(slo, 20.0).at(i as f64 * gap_ms),
+                )
+                .unwrap();
+        }
+    }
+
+    #[test]
+    fn conserves_requests_across_two_models() {
+        let mut e = two_model_engine(0.0);
+        load(&mut e, "resnet", 200, 50.0, 1_000.0);
+        load(&mut e, "yolov5s", 100, 100.0, 1_000.0);
+        let report = e.drain();
+        assert!(report.settled(), "{report:?}");
+        assert_eq!(report.submitted, 300);
+        let a = e.snapshot("resnet").unwrap();
+        let b = e.snapshot("yolov5s").unwrap();
+        assert_eq!(a.submitted, 200);
+        assert_eq!(b.submitted, 100);
+        assert_eq!(a.resolved(), 200);
+        assert_eq!(b.resolved(), 100);
+        assert!(a.completed > 0, "{a:?}");
+        assert!(b.completed > 0, "{b:?}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let run = || {
+            let mut e = two_model_engine(0.05);
+            load(&mut e, "resnet", 300, 20.0, 800.0);
+            load(&mut e, "yolov5s", 150, 40.0, 800.0);
+            e.drain();
+            (
+                e.snapshot("resnet").unwrap(),
+                e.snapshot("yolov5s").unwrap(),
+                e.core_ms("resnet").unwrap(),
+            )
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn unknown_model_and_bad_slo_rejected() {
+        let mut e = two_model_engine(0.0);
+        let err = e.submit("nope", EngineRequest::new(1_000.0, 0.0)).unwrap_err();
+        assert!(matches!(err, EngineError::UnknownModel { .. }));
+        let err = e.submit("resnet", EngineRequest::new(0.0, 0.0)).unwrap_err();
+        assert!(matches!(err, EngineError::Rejected(_)));
+    }
+
+    #[test]
+    fn hopeless_requests_become_drops_not_hangs() {
+        let mut e = two_model_engine(0.0);
+        // 1 ms SLO with 20 ms comm: already expired on arrival.
+        load(&mut e, "resnet", 10, 10.0, 1.0);
+        let report = e.drain();
+        assert!(report.settled(), "{report:?}");
+        let s = e.snapshot("resnet").unwrap();
+        assert_eq!(s.dropped, 10);
+        assert_eq!(s.violations, 10);
+    }
+
+    #[test]
+    fn shared_budget_caps_total_allocation() {
+        let mut reg = ModelRegistry::new();
+        reg.register(ModelSpec::named("resnet").unwrap()).unwrap();
+        reg.register(ModelSpec::named("yolov5s").unwrap()).unwrap();
+        let cfg = SimEngineCfg { shared_cores: 8, ..Default::default() };
+        let mut e = SimEngine::new(&reg, cfg).unwrap();
+        // Heavy load on both: scalers want far more than 8 cores total.
+        load(&mut e, "resnet", 500, 10.0, 400.0);
+        load(&mut e, "yolov5s", 500, 10.0, 400.0);
+        for _ in 0..20 {
+            e.tick();
+            let total = e.snapshot("resnet").unwrap().cores
+                + e.snapshot("yolov5s").unwrap().cores;
+            assert!(total <= 8, "budget violated: {total}");
+        }
+        let report = e.drain();
+        assert!(report.settled(), "{report:?}");
+    }
+
+    #[test]
+    fn virtual_time_advances_only_via_ticks() {
+        let mut e = two_model_engine(0.0);
+        assert_eq!(e.now_ms(), 0.0);
+        e.tick();
+        assert_eq!(e.now_ms(), 1_000.0);
+        e.tick();
+        assert_eq!(e.now_ms(), 2_000.0);
+    }
+}

@@ -3,35 +3,64 @@
 //! A from-scratch reproduction of *Sponge: Inference Serving with Dynamic
 //! SLOs Using In-Place Vertical Scaling* (Razavi et al., EuroMLSys '24) as a
 //! three-layer Rust + JAX + Pallas stack. This crate is Layer 3: the serving
-//! coordinator carrying the paper's contribution — EDF request reordering,
+//! system carrying the paper's contribution — EDF request reordering,
 //! dynamic batching, and an Integer-Programming scaler that resizes the model
 //! instance's CPU allocation in place — plus every substrate the paper's
-//! evaluation depends on (4G network model, workload generators, performance
-//! model fitting, cluster with cold-start semantics, baseline autoscalers,
-//! a discrete-event simulator, metrics, and a PJRT runtime executing the
-//! AOT-compiled JAX/Pallas model with Python never on the request path).
+//! evaluation depends on.
 //!
-//! ## Layout
+//! ## The unified serving API
 //!
-//! * [`util`] — hand-rolled substrates (PRNG, stats, JSON, CLI, prop-tests)
-//! * [`config`] — typed configuration + TOML-subset parser
-//! * [`network`] — 4G/LTE bandwidth traces and communication latency
-//! * [`workload`] — request types and arrival-process generators
+//! Everything meets in [`engine`]: the [`engine::ServingEngine`] trait
+//! (submit / tick / drain / snapshot) runs one scenario against either
+//! implementation —
+//!
+//! * [`engine::SimEngine`] — the discrete-event simulator on a virtual
+//!   [`engine::Clock`] (minutes of workload settle in milliseconds), and
+//! * [`engine::LiveEngine`] — real threads over the coordinator on a wall
+//!   clock, with pluggable batch executors (mock or PJRT);
+//!
+//! both serving a multi-model [`engine::ModelRegistry`] in which every
+//! named variant has its own EDF queue, fitted latency model, and
+//! autoscaler, contending for a shared core budget. The [`server`] module
+//! exposes the same registry over a versioned HTTP surface
+//! (`GET /v1/models`, `POST /v1/models/{name}/infer`,
+//! `GET /v1/models/{name}/stats`, with legacy `POST /infer` aliasing the
+//! default model).
+//!
+//! ## Module map
+//!
+//! **Serving API (top layer)**
+//! * [`engine`] — `ServingEngine` trait, `Clock`, `ModelRegistry`,
+//!   `SimEngine` / `LiveEngine`, scenario driver
+//! * [`server`] — versioned `/v1` HTTP surface over the registry
+//!   (hand-rolled HTTP/1.0; endpoint reference in the module docs)
+//! * [`coordinator`] — live pipeline: EDF queue + batcher + processor +
+//!   scaler threads (what `LiveEngine` wraps, one per model)
+//! * [`sim`] — the original single-model discrete-event loop
+//!   (`sim::run`), kept for the Fig. 4 benches and ablations
+//!
+//! **The paper's mechanisms**
+//! * [`queue`] — EDF priority queue and dynamic batch extraction
+//! * [`solver`] — Algorithm 1 (brute force) + optimized incremental IP
+//! * [`scaler`] — Sponge scaler and the FA2 / static / VPA baselines
 //! * [`perfmodel`] — the paper's Eq. 1/2 latency model + robust fitting
 //! * [`profiler`] — (b, c) profiling sweeps feeding the fit
-//! * [`queue`] — EDF queue and dynamic batcher
-//! * [`solver`] — Algorithm 1 (brute force) + optimized incremental solver
-//! * [`scaler`] — Sponge scaler and the FA2 / static / VPA baselines
-//! * [`cluster`] — instances with in-place resize vs. cold-start scale-out
-//! * [`monitoring`] — metrics registry, SLO tracking, Prometheus exposition
-//! * [`sim`] — discrete-event serving simulator (virtual time)
+//! * [`cluster`] — instances, in-place resize vs. cold-start scale-out
+//!
+//! **Substrates**
+//! * [`workload`] — request types and arrival-process generators
+//! * [`network`] — 4G/LTE bandwidth traces and communication latency
+//! * [`monitoring`] — metrics registry, SLO tracking, Prometheus text
 //! * [`runtime`] — PJRT engine executing `artifacts/*.hlo.txt`
-//! * [`coordinator`] — live serving pipeline (threads + channels)
-//! * [`server`] — minimal HTTP/1.0 ingest + metrics endpoint
+//!   (`--features pjrt`; API-compatible stub otherwise)
+//! * [`config`] — typed configuration + TOML-subset parser
+//! * [`util`] — hand-rolled substrates (PRNG, stats, JSON, CLI,
+//!   prop-tests, bench harness)
 
 pub mod cluster;
 pub mod config;
 pub mod coordinator;
+pub mod engine;
 pub mod monitoring;
 pub mod network;
 pub mod perfmodel;

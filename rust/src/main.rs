@@ -1,8 +1,9 @@
 //! `sponge` CLI — the Layer-3 leader entrypoint.
 //!
 //! Subcommands:
-//! * `serve`     — start the live coordinator + HTTP server on the AOT
-//!   artifacts (real PJRT inference; Python not involved).
+//! * `serve`     — start the multi-model live engine + versioned `/v1`
+//!   HTTP server (PJRT executors with `--features pjrt`, or `--executor
+//!   mock` for a model-free smoke stack).
 //! * `simulate`  — run a Fig. 4-style experiment in the discrete-event
 //!   simulator and print the result summary.
 //! * `profile`   — run a (batch, cores) profiling sweep on the sim or
@@ -10,17 +11,23 @@
 //! * `fit`       — fit the Eq. 2 model on a profile CSV.
 //! * `solve`     — one-shot solver invocation (debugging aid).
 //! * `trace-gen` — emit a synthetic 4G bandwidth trace as CSV.
+//! * `workload-gen` — emit a request-trace CSV.
+//!
+//! `sponge <command> --help` prints per-command usage; an unknown
+//! subcommand prints the synopsis and exits with code 2.
 
 use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
 use sponge::config::{ExperimentCfg, Policy};
-use sponge::coordinator::{Coordinator, CoordinatorCfg};
+use sponge::coordinator::BatchExecutor;
+use sponge::engine::{LiveEngine, LiveEngineCfg, ModelRegistry};
 use sponge::network::{BandwidthTrace, NetworkModel};
 use sponge::perfmodel::{fit_ransac, LatencyModel, ProfilePoint, RansacCfg};
 use sponge::profiler::{profile, ProfileCfg, ProfileStat};
 use sponge::runtime::{PjrtEngine, SimEngine};
+use sponge::server::Gateway;
 use sponge::sim;
 use sponge::solver::{BruteForceSolver, IpSolver, SolverInput, SolverLimits};
 use sponge::util::cli::Args;
@@ -31,21 +38,94 @@ sponge — inference serving with dynamic SLOs (EuroMLSys'24 reproduction)
 USAGE: sponge <COMMAND> [OPTIONS]
 
 COMMANDS:
-  serve      --artifacts DIR --variant NAME --bind ADDR   live serving
-  simulate   --policy P --horizon-s N --rate RPS --seed S  run experiment
-  profile    --engine sim|pjrt --artifacts DIR --variant V  profiling sweep
-  fit        --input profile.csv                            fit Eq. 2 model
-  solve      --budget MS --n N --lambda RPS                 one-shot solve
-  trace-gen  --seconds N --seed S                           synthetic 4G CSV
-  workload-gen --rate RPS --horizon-s N --seed S            request-trace CSV
+  serve         multi-model live serving behind the versioned /v1 HTTP API
+  simulate      run a policy-vs-workload experiment in the simulator
+  profile       (batch, cores) profiling sweep as CSV
+  fit           fit the Eq. 2 latency model on a profile CSV
+  solve         one-shot IP-solver invocation
+  trace-gen     synthetic 4G bandwidth trace as CSV
+  workload-gen  request-trace CSV
+
+Run `sponge <COMMAND> --help` for per-command options.
 ";
+
+/// Per-subcommand usage, printed by `sponge <cmd> --help`.
+fn command_help(cmd: &str) -> Option<&'static str> {
+    Some(match cmd {
+        "serve" => {
+            "USAGE: sponge serve [OPTIONS]
+
+  --models a,b       comma-separated model variants to register
+                     (resnet, resnet18lite, yolov5n, yolov5nlite, yolov5s);
+                     the first is the default model   [default: resnet18lite]
+  --executor KIND    mock | pjrt   [default: pjrt]
+                     pjrt executes AOT artifacts (needs --features pjrt +
+                     `make artifacts`); mock serves deterministic zeros
+  --artifacts DIR    artifact directory for pjrt   [default: artifacts]
+  --bind ADDR        listen address   [default: 127.0.0.1:8080]
+
+Routes: GET /v1/models | POST /v1/models/{name}/infer |
+        GET /v1/models/{name}/stats | POST /infer (default model) |
+        GET /metrics | GET /healthz
+"
+        }
+        "simulate" => {
+            "USAGE: sponge simulate [OPTIONS]
+
+  --config FILE     TOML experiment config (keys as ExperimentCfg)
+  --policy P        sponge | sponge-verbatim | sponge-nomargin | fa2 |
+                    static8 | static16 | vpa | hybrid
+  --horizon-s N     experiment horizon in seconds   [default: 600]
+  --rate RPS        arrival rate   [default: 20]
+  --seed S          PRNG seed   [default: 42]
+"
+        }
+        "profile" => {
+            "USAGE: sponge profile [OPTIONS]
+
+  --engine KIND     sim | pjrt   [default: sim]
+  --artifacts DIR   artifact directory (pjrt)   [default: artifacts]
+  --variant NAME    model variant (pjrt)   [default: resnet18lite]
+  --reps N          repetitions per (batch, cores) point   [default: 20]
+"
+        }
+        "fit" => {
+            "USAGE: sponge fit --input profile.csv
+
+  --input FILE      profile CSV (batch,cores,latency_ms) from `profile`
+"
+        }
+        "solve" => {
+            "USAGE: sponge solve [OPTIONS]
+
+  --budget MS       per-request remaining budget   [default: 400]
+  --n N             queued request count   [default: 20]
+  --lambda RPS      arrival rate   [default: 20]
+"
+        }
+        "trace-gen" => {
+            "USAGE: sponge trace-gen [OPTIONS]
+
+  --seconds N       trace length   [default: 600]
+  --seed S          PRNG seed
+"
+        }
+        "workload-gen" => {
+            "USAGE: sponge workload-gen [OPTIONS]
+
+  --rate RPS        arrival rate   [default: 20]
+  --horizon-s N     horizon in seconds   [default: 60]
+  --slo-ms MS       per-request SLO   [default: 1000]
+  --seed S          PRNG seed
+"
+        }
+        _ => return None,
+    })
+}
 
 fn main() {
     env_logger_lite();
-    if let Err(e) = run() {
-        eprintln!("error: {e:#}");
-        std::process::exit(1);
-    }
+    std::process::exit(run());
 }
 
 fn env_logger_lite() {
@@ -66,41 +146,100 @@ fn env_logger_lite() {
     log::set_max_level(log::LevelFilter::Info);
 }
 
-fn run() -> Result<()> {
-    let args = Args::from_env(&["verbose", "paper-verbatim"], true)
-        .map_err(|e| anyhow::anyhow!("{e}\n{USAGE}"))?;
-    match args.command.as_deref() {
-        Some("serve") => cmd_serve(&args),
-        Some("simulate") => cmd_simulate(&args),
-        Some("profile") => cmd_profile(&args),
-        Some("fit") => cmd_fit(&args),
-        Some("solve") => cmd_solve(&args),
-        Some("trace-gen") => cmd_trace_gen(&args),
-        Some("workload-gen") => cmd_workload_gen(&args),
-        _ => {
-            print!("{USAGE}");
-            Ok(())
+/// Parse + dispatch; the return value is the process exit code.
+fn run() -> i32 {
+    let args = match Args::from_env(&["verbose", "paper-verbatim", "help"], true) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("error: {e}\n{USAGE}");
+            return 2;
+        }
+    };
+    let Some(cmd) = args.command.as_deref() else {
+        // Bare `sponge` or `sponge --help`: the synopsis, success.
+        print!("{USAGE}");
+        return 0;
+    };
+    if cmd == "help" {
+        print!("{USAGE}");
+        return 0;
+    }
+    if let Some(help) = command_help(cmd) {
+        if args.has("help") {
+            print!("{help}");
+            return 0;
+        }
+    } else {
+        // Unknown subcommand: synopsis on stderr, exit code 2.
+        eprintln!("error: unknown command '{cmd}'\n{USAGE}");
+        return 2;
+    }
+    let result = match cmd {
+        "serve" => cmd_serve(&args),
+        "simulate" => cmd_simulate(&args),
+        "profile" => cmd_profile(&args),
+        "fit" => cmd_fit(&args),
+        "solve" => cmd_solve(&args),
+        "trace-gen" => cmd_trace_gen(&args),
+        "workload-gen" => cmd_workload_gen(&args),
+        _ => unreachable!("command_help covers every dispatched command"),
+    };
+    match result {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
         }
     }
 }
 
 fn cmd_serve(args: &Args) -> Result<()> {
     let dir = args.str_or("artifacts", "artifacts");
-    let variant = args.str_or("variant", "resnet18lite");
     let bind = args.str_or("bind", "127.0.0.1:8080");
-    let engine = sponge::runtime::PjrtProxy::spawn(&dir, &variant)?;
-    println!(
-        "loaded {variant} on {} ({} batch executables)",
-        engine.platform(),
-        engine.supported_batches().len()
+    let executor = args.str_or("executor", "pjrt");
+    // Back-compat: `--variant X` acts as `--models X`.
+    let models = match args.get("models") {
+        Some(csv) => csv.to_string(),
+        None => args.str_or("variant", "resnet18lite"),
+    };
+    let registry = ModelRegistry::from_names(&models).map_err(|e| anyhow::anyhow!(e))?;
+
+    let engine = match executor.as_str() {
+        "mock" => LiveEngine::start_mock(&registry, LiveEngineCfg::default()),
+        "pjrt" => LiveEngine::start_with(&registry, LiveEngineCfg::default(), |spec| {
+            let proxy = sponge::runtime::PjrtProxy::spawn(&dir, &spec.name).map_err(|e| {
+                sponge::engine::EngineError::Rejected(format!(
+                    "loading '{}': {e:#}",
+                    spec.name
+                ))
+            })?;
+            println!(
+                "loaded {} on {} ({} batch executables)",
+                spec.name,
+                proxy.platform(),
+                proxy.supported_batches().len()
+            );
+            Ok(Arc::new(proxy) as Arc<dyn BatchExecutor>)
+        }),
+        other => bail!("unknown executor '{other}' (mock|pjrt)"),
+    }
+    .map_err(|e| anyhow::anyhow!("{e}"))?;
+
+    let gateway = Arc::new(
+        Gateway::from_parts(engine.coordinators()).context("building gateway")?,
     );
-    let coordinator = Arc::new(Coordinator::start(
-        CoordinatorCfg::default(),
-        Arc::new(engine),
-    ));
-    let handle = sponge::server::serve(&bind, Arc::clone(&coordinator))?;
-    println!("serving on http://{}  (POST /infer, GET /metrics)", handle.addr());
-    // Run until killed.
+    let handle = sponge::server::serve(&bind, Arc::clone(&gateway))?;
+    println!(
+        "serving {} model(s) [{}] on http://{}",
+        registry.len(),
+        registry.names().join(", "),
+        handle.addr()
+    );
+    println!(
+        "routes: GET /v1/models | POST /v1/models/{{name}}/infer | \
+         GET /v1/models/{{name}}/stats | POST /infer | GET /metrics"
+    );
+    // Run until killed; `engine` stays alive so the coordinators do too.
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
     }

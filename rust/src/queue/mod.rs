@@ -82,6 +82,25 @@ impl Batch {
     pub fn min_remaining_ms(&self, now: Ms) -> Ms {
         self.min_deadline_ms() - now
     }
+
+    /// Latest absolute deadline in the batch (`-inf` when empty) — with
+    /// [`Batch::min_deadline_ms`], the batch's deadline envelope.
+    pub fn max_deadline_ms(&self) -> Ms {
+        self.requests
+            .iter()
+            .map(|r| r.deadline_ms())
+            .fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    /// Deadline spread (max − min): how much slack EDF batching mixed
+    /// into one batch. 0 for single-request and deadline-tied batches.
+    pub fn deadline_spread_ms(&self) -> Ms {
+        if self.requests.is_empty() {
+            0.0
+        } else {
+            self.max_deadline_ms() - self.min_deadline_ms()
+        }
+    }
 }
 
 impl EdfQueue {

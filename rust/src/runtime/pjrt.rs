@@ -1,0 +1,273 @@
+//! Real PJRT execution (`--features pjrt`): compile the AOT HLO text with
+//! the `xla` crate's PJRT CPU client and run batches on the request path.
+//!
+//! Only compiled with the `pjrt` cargo feature, which expects a vendored
+//! `xla` crate; the default build uses the stub in `pjrt_stub.rs`.
+
+use std::collections::BTreeMap;
+use std::time::Instant;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use super::{read_f32_le, ArtifactEntry, InferenceEngine, Manifest};
+use crate::{BatchSize, Cores, Ms};
+
+/// The real engine: PJRT CPU client executing the AOT artifacts.
+pub struct PjrtEngine {
+    client: xla::PjRtClient,
+    variant: String,
+    execs: BTreeMap<BatchSize, xla::PjRtLoadedExecutable>,
+    entries: BTreeMap<BatchSize, ArtifactEntry>,
+    input_hw: usize,
+    input_c: usize,
+    num_classes: usize,
+    probe: Vec<f32>,
+}
+
+impl PjrtEngine {
+    /// Load and compile every batch-size executable of `variant` from the
+    /// artifact directory (written by `make artifacts`).
+    pub fn load(dir: &str, variant: &str) -> Result<PjrtEngine> {
+        let manifest = Manifest::load(dir)
+            .with_context(|| format!("loading manifest from {dir} (run `make artifacts`)"))?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        let mut execs = BTreeMap::new();
+        let mut entries = BTreeMap::new();
+        for entry in manifest.artifacts.iter().filter(|e| e.variant == variant) {
+            let path = format!("{dir}/{}", entry.file);
+            let proto = xla::HloModuleProto::from_text_file(&path)
+                .map_err(|e| anyhow!("parsing {path}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {path}: {e:?}"))?;
+            execs.insert(entry.batch, exe);
+            entries.insert(entry.batch, entry.clone());
+        }
+        if execs.is_empty() {
+            bail!("no artifacts for variant {variant} in {dir}");
+        }
+        // Load the largest probe input once; sliced per batch for execute().
+        let max_batch = *entries.keys().max().unwrap();
+        let probe_path = format!("{dir}/{}", entries[&max_batch].probe_file);
+        let probe = read_f32_le(&probe_path)?;
+        Ok(PjrtEngine {
+            client,
+            variant: variant.to_string(),
+            execs,
+            entries,
+            input_hw: manifest.input_hw,
+            input_c: manifest.input_c,
+            num_classes: manifest.num_classes,
+            probe,
+        })
+    }
+
+    pub fn variant(&self) -> &str {
+        &self.variant
+    }
+
+    pub fn num_classes(&self) -> usize {
+        self.num_classes
+    }
+
+    /// Elements per image.
+    pub fn image_len(&self) -> usize {
+        self.input_hw * self.input_hw * self.input_c
+    }
+
+    pub fn entry(&self, batch: BatchSize) -> Option<&ArtifactEntry> {
+        self.entries.get(&batch)
+    }
+
+    /// Smallest compiled batch size >= n (the batcher rounds partial
+    /// batches up and pads with zero images).
+    pub fn batch_for(&self, n: usize) -> Result<BatchSize> {
+        self.execs
+            .keys()
+            .copied()
+            .find(|&b| b as usize >= n)
+            .ok_or_else(|| {
+                anyhow!("no executable can hold a batch of {n} (max {:?})", self.execs.keys().max())
+            })
+    }
+
+    /// Run `n` images (flat NHWC f32, length `n * image_len()`) through
+    /// the smallest suitable executable, returning `n * num_classes`
+    /// logits.
+    pub fn infer(&self, images: &[f32], n: usize) -> Result<Vec<f32>> {
+        anyhow::ensure!(n > 0, "empty batch");
+        anyhow::ensure!(
+            images.len() == n * self.image_len(),
+            "expected {} floats for {n} images, got {}",
+            n * self.image_len(),
+            images.len()
+        );
+        let b = self.batch_for(n)?;
+        let mut padded;
+        let input = if b as usize == n {
+            images
+        } else {
+            padded = images.to_vec();
+            padded.resize(b as usize * self.image_len(), 0.0);
+            &padded[..]
+        };
+        let logits = self.run_raw(b, input)?;
+        Ok(logits[..n * self.num_classes].to_vec())
+    }
+
+    /// Execute the exact-batch executable on a raw input buffer.
+    fn run_raw(&self, b: BatchSize, input: &[f32]) -> Result<Vec<f32>> {
+        let exe = self
+            .execs
+            .get(&b)
+            .ok_or_else(|| anyhow!("no executable for batch {b}"))?;
+        let lit = xla::Literal::vec1(input)
+            .reshape(&[b as i64, self.input_hw as i64, self.input_hw as i64, self.input_c as i64])
+            .map_err(|e| anyhow!("reshape: {e:?}"))?;
+        let result = exe
+            .execute::<xla::Literal>(&[lit])
+            .map_err(|e| anyhow!("execute: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("to_literal: {e:?}"))?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        let out = result.to_tuple1().map_err(|e| anyhow!("to_tuple1: {e:?}"))?;
+        out.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))
+    }
+
+    /// Run the probe input for `b` and return logits — the cross-language
+    /// numerics check against the manifest's `probe_logits`.
+    pub fn run_probe(&self, b: BatchSize) -> Result<Vec<f32>> {
+        let need = b as usize * self.image_len();
+        anyhow::ensure!(self.probe.len() >= need, "probe file too small");
+        self.run_raw(b, &self.probe[..need])
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}
+
+impl InferenceEngine for PjrtEngine {
+    fn execute(&mut self, batch: BatchSize, _cores: Cores) -> Result<Ms> {
+        // Physical cores cannot be varied in the sandbox (1 vCPU); the
+        // measured time is the c=1 line that calibrates the batch axis of
+        // the model (profiler::calibrate_from_single_core).
+        let b = self.batch_for(batch as usize)?;
+        let need = b as usize * self.image_len();
+        anyhow::ensure!(self.probe.len() >= need, "probe too small for batch {b}");
+        let input = &self.probe[..need];
+        let t0 = Instant::now();
+        let out = self.run_raw(b, input)?;
+        let dt = t0.elapsed().as_secs_f64() * 1_000.0;
+        anyhow::ensure!(out.len() == b as usize * self.num_classes, "bad output size");
+        Ok(dt)
+    }
+
+    fn supported_batches(&self) -> Vec<BatchSize> {
+        self.execs.keys().copied().collect()
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}
+
+/// Thread-safe proxy to a [`PjrtEngine`] living on its own owner thread
+/// (the xla handles are `Rc`-based and cannot cross threads). The live
+/// coordinator and HTTP server share this handle.
+pub struct PjrtProxy {
+    tx: std::sync::Mutex<std::sync::mpsc::Sender<ProxyMsg>>,
+    image_len: usize,
+    num_classes: usize,
+    batches: Vec<BatchSize>,
+    platform: String,
+}
+
+enum ProxyMsg {
+    Infer {
+        images: Vec<f32>,
+        n: usize,
+        reply: std::sync::mpsc::Sender<Result<Vec<f32>>>,
+    },
+    Shutdown,
+}
+
+impl PjrtProxy {
+    /// Load `variant` from `dir` on a fresh owner thread.
+    pub fn spawn(dir: &str, variant: &str) -> Result<PjrtProxy> {
+        let (tx, rx) = std::sync::mpsc::channel::<ProxyMsg>();
+        let (meta_tx, meta_rx) =
+            std::sync::mpsc::channel::<Result<(usize, usize, Vec<BatchSize>, String)>>();
+        let dir = dir.to_string();
+        let variant = variant.to_string();
+        std::thread::spawn(move || {
+            let engine = match PjrtEngine::load(&dir, &variant) {
+                Ok(e) => {
+                    let _ = meta_tx.send(Ok((
+                        e.image_len(),
+                        e.num_classes(),
+                        e.supported_batches(),
+                        e.platform(),
+                    )));
+                    e
+                }
+                Err(e) => {
+                    let _ = meta_tx.send(Err(e));
+                    return;
+                }
+            };
+            while let Ok(msg) = rx.recv() {
+                match msg {
+                    ProxyMsg::Infer { images, n, reply } => {
+                        let _ = reply.send(engine.infer(&images, n));
+                    }
+                    ProxyMsg::Shutdown => break,
+                }
+            }
+        });
+        let (image_len, num_classes, batches, platform) = meta_rx
+            .recv()
+            .map_err(|_| anyhow!("pjrt owner thread died during load"))??;
+        Ok(PjrtProxy {
+            tx: std::sync::Mutex::new(tx),
+            image_len,
+            num_classes,
+            batches,
+            platform,
+        })
+    }
+
+    pub fn image_len(&self) -> usize {
+        self.image_len
+    }
+
+    pub fn num_classes(&self) -> usize {
+        self.num_classes
+    }
+
+    pub fn supported_batches(&self) -> Vec<BatchSize> {
+        self.batches.clone()
+    }
+
+    pub fn platform(&self) -> &str {
+        &self.platform
+    }
+
+    /// Run `n` images through the owner thread.
+    pub fn infer(&self, images: &[f32], n: usize) -> Result<Vec<f32>> {
+        let (reply, rx) = std::sync::mpsc::channel();
+        self.tx
+            .lock()
+            .unwrap()
+            .send(ProxyMsg::Infer { images: images.to_vec(), n, reply })
+            .map_err(|_| anyhow!("pjrt owner thread gone"))?;
+        rx.recv().map_err(|_| anyhow!("pjrt owner thread dropped reply"))?
+    }
+}
+
+impl Drop for PjrtProxy {
+    fn drop(&mut self) {
+        let _ = self.tx.lock().unwrap().send(ProxyMsg::Shutdown);
+    }
+}

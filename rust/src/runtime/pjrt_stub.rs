@@ -1,0 +1,111 @@
+//! API-compatible stubs for [`PjrtEngine`] / [`PjrtProxy`] used when the
+//! crate is built without the `pjrt` feature (the default in the offline
+//! sandbox, where the `xla` PJRT bindings are not vendored).
+//!
+//! Both types are uninhabited — `load`/`spawn` always return an error
+//! explaining how to enable the real path — so every downstream consumer
+//! (CLI `serve --executor pjrt`, benches, the artifact integration tests)
+//! compiles unchanged and degrades to a clear runtime message.
+
+use anyhow::{bail, Result};
+
+use super::{ArtifactEntry, InferenceEngine};
+use crate::{BatchSize, Cores, Ms};
+
+/// Proof that a stub value can never exist.
+enum Never {}
+
+const UNAVAILABLE: &str =
+    "PJRT execution is unavailable: this binary was built without the `pjrt` \
+     cargo feature (which requires the vendored `xla` crate). Rebuild with \
+     `cargo build --features pjrt`, or use the mock/sim execution paths.";
+
+/// Stub for the real PJRT engine; see the module docs.
+pub struct PjrtEngine {
+    never: Never,
+}
+
+impl PjrtEngine {
+    /// Always fails: the `pjrt` feature is disabled.
+    pub fn load(_dir: &str, _variant: &str) -> Result<PjrtEngine> {
+        bail!("{UNAVAILABLE}");
+    }
+
+    pub fn variant(&self) -> &str {
+        match self.never {}
+    }
+
+    pub fn num_classes(&self) -> usize {
+        match self.never {}
+    }
+
+    pub fn image_len(&self) -> usize {
+        match self.never {}
+    }
+
+    pub fn entry(&self, _batch: BatchSize) -> Option<&ArtifactEntry> {
+        match self.never {}
+    }
+
+    pub fn batch_for(&self, _n: usize) -> Result<BatchSize> {
+        match self.never {}
+    }
+
+    pub fn infer(&self, _images: &[f32], _n: usize) -> Result<Vec<f32>> {
+        match self.never {}
+    }
+
+    pub fn run_probe(&self, _b: BatchSize) -> Result<Vec<f32>> {
+        match self.never {}
+    }
+
+    pub fn platform(&self) -> String {
+        match self.never {}
+    }
+}
+
+impl InferenceEngine for PjrtEngine {
+    fn execute(&mut self, _batch: BatchSize, _cores: Cores) -> Result<Ms> {
+        match self.never {}
+    }
+
+    fn supported_batches(&self) -> Vec<BatchSize> {
+        match self.never {}
+    }
+
+    fn name(&self) -> &'static str {
+        match self.never {}
+    }
+}
+
+/// Stub for the thread-safe PJRT proxy; see the module docs.
+pub struct PjrtProxy {
+    never: Never,
+}
+
+impl PjrtProxy {
+    /// Always fails: the `pjrt` feature is disabled.
+    pub fn spawn(_dir: &str, _variant: &str) -> Result<PjrtProxy> {
+        bail!("{UNAVAILABLE}");
+    }
+
+    pub fn image_len(&self) -> usize {
+        match self.never {}
+    }
+
+    pub fn num_classes(&self) -> usize {
+        match self.never {}
+    }
+
+    pub fn supported_batches(&self) -> Vec<BatchSize> {
+        match self.never {}
+    }
+
+    pub fn platform(&self) -> &str {
+        match self.never {}
+    }
+
+    pub fn infer(&self, _images: &[f32], _n: usize) -> Result<Vec<f32>> {
+        match self.never {}
+    }
+}

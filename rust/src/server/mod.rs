@@ -1,16 +1,35 @@
-//! Minimal HTTP/1.0 server: request ingest + Prometheus metrics endpoint.
+//! Versioned HTTP surface over the multi-model registry (hand-rolled
+//! HTTP/1.0 — no HTTP crate offline; one thread per connection, fine at
+//! the paper's request rates since the inference hot path lives in the
+//! coordinator).
 //!
-//! Routes:
-//! * `POST /infer`   — JSON `{"slo_ms": float, "comm_ms": float,
-//!   "image": [f32; image_len]}` → JSON response with logits and timing.
-//! * `GET /metrics`  — Prometheus text exposition.
-//! * `GET /healthz`  — liveness probe.
+//! # `/v1` endpoint reference
 //!
-//! Hand-rolled (no HTTP crate offline): enough of HTTP/1.0 for our own
-//! client, curl, and Prometheus scrapers. One thread per connection —
-//! fine at the paper's 20 RPS; the inference hot path is inside the
-//! coordinator, not here.
+//! | Route | Method | Body | Success | Errors |
+//! |---|---|---|---|---|
+//! | `/v1/models` | GET | — | `200` `{"default": name, "models": [{"name", "queue_len", "cores", "batch"}]}` | — |
+//! | `/v1/models/{name}/infer` | POST | infer JSON (below) | `200` infer response | `400` bad JSON/body, `404` unknown model, `504` timeout |
+//! | `/v1/models/{name}/stats` | GET | — | `200` `{"received", "completed", "dropped", "violated", "queue_len", "cores", "batch", "model_refits"}` | `404` unknown model |
+//! | `/infer` | POST | infer JSON | `200` — legacy alias for the **default** model | as above |
+//! | `/metrics` | GET | — | `200` Prometheus text (default model's registry) | — |
+//! | `/healthz` | GET | — | `200` `ok` | — |
+//!
+//! **Infer request body** (`application/json`):
+//! `{"slo_ms": float, "comm_ms": float, "image": [float; image_len]}` —
+//! `slo_ms` defaults to 1000, `comm_ms` to 0; `image` is required, must be
+//! exactly the model's input length, and every entry must be a number
+//! (wrong length / non-numeric entries are `400`).
+//!
+//! **Infer response body**: `{"id", "model", "logits": [...], "queue_ms",
+//! "processing_ms", "server_ms", "violated": bool, "dropped": bool}`.
+//!
+//! **Error contract**: every error is `application/json` of the shape
+//! `{"error": "..."}`; `404`s for unknown routes additionally carry
+//! `"routes": [...]` (the valid route list) and unknown models carry
+//! `"models": [...]` (the registered names). Malformed JSON bodies are
+//! `400`, never a dropped connection.
 
+use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -21,6 +40,63 @@ use anyhow::{Context, Result};
 
 use crate::coordinator::{Coordinator, LiveRequest};
 use crate::util::json::Json;
+
+/// The route list served with unknown-route 404s.
+const ROUTES: &[&str] = &[
+    "GET /healthz",
+    "GET /metrics",
+    "GET /v1/models",
+    "POST /v1/models/{name}/infer",
+    "GET /v1/models/{name}/stats",
+    "POST /infer (legacy alias for the default model)",
+];
+
+/// Named coordinators behind the HTTP surface; the first registered name
+/// is the default model (legacy `POST /infer` target).
+pub struct Gateway {
+    models: Vec<(String, Arc<Coordinator>)>,
+    by_name: BTreeMap<String, usize>,
+}
+
+impl Gateway {
+    /// Build from (name, coordinator) pairs in priority order; the first
+    /// pair is the default model. Duplicate names are rejected.
+    pub fn from_parts(parts: Vec<(String, Arc<Coordinator>)>) -> Result<Gateway> {
+        anyhow::ensure!(!parts.is_empty(), "gateway needs at least one model");
+        let mut by_name = BTreeMap::new();
+        for (i, (name, _)) in parts.iter().enumerate() {
+            anyhow::ensure!(
+                by_name.insert(name.clone(), i).is_none(),
+                "duplicate model name '{name}'"
+            );
+        }
+        Ok(Gateway { models: parts, by_name })
+    }
+
+    /// A single anonymous model (`"default"`) — the pre-`/v1` shape.
+    pub fn single(coordinator: Arc<Coordinator>) -> Gateway {
+        Gateway::from_parts(vec![("default".to_string(), coordinator)])
+            .expect("single entry cannot collide")
+    }
+
+    pub fn get(&self, name: &str) -> Option<&Arc<Coordinator>> {
+        self.by_name.get(name).map(|&i| &self.models[i].1)
+    }
+
+    /// The default (first-registered) model.
+    pub fn default_entry(&self) -> (&str, &Arc<Coordinator>) {
+        let (name, c) = &self.models[0];
+        (name.as_str(), c)
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        self.models.iter().map(|(n, _)| n.clone()).collect()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = (&str, &Arc<Coordinator>)> {
+        self.models.iter().map(|(n, c)| (n.as_str(), c))
+    }
+}
 
 /// A running HTTP server; dropping the handle does not stop it — call
 /// [`ServerHandle::stop`].
@@ -45,8 +121,8 @@ impl ServerHandle {
     }
 }
 
-/// Start serving `coordinator` on `bind` (e.g. "127.0.0.1:0").
-pub fn serve(bind: &str, coordinator: Arc<Coordinator>) -> Result<ServerHandle> {
+/// Start serving `gateway` on `bind` (e.g. "127.0.0.1:0").
+pub fn serve(bind: &str, gateway: Arc<Gateway>) -> Result<ServerHandle> {
     let listener = TcpListener::bind(bind).with_context(|| format!("binding {bind}"))?;
     let addr = listener.local_addr()?;
     let stop = Arc::new(AtomicBool::new(false));
@@ -57,16 +133,16 @@ pub fn serve(bind: &str, coordinator: Arc<Coordinator>) -> Result<ServerHandle> 
                 break;
             }
             let Ok(stream) = conn else { continue };
-            let coordinator = Arc::clone(&coordinator);
+            let gateway = Arc::clone(&gateway);
             std::thread::spawn(move || {
-                let _ = handle_conn(stream, &coordinator);
+                let _ = handle_conn(stream, &gateway);
             });
         }
     });
     Ok(ServerHandle { addr, stop, thread: Some(thread) })
 }
 
-fn handle_conn(stream: TcpStream, coordinator: &Coordinator) -> Result<()> {
+fn handle_conn(stream: TcpStream, gateway: &Gateway) -> Result<()> {
     stream.set_read_timeout(Some(Duration::from_secs(10)))?;
     let mut reader = BufReader::new(stream.try_clone()?);
     let mut request_line = String::new();
@@ -98,40 +174,133 @@ fn handle_conn(stream: TcpStream, coordinator: &Coordinator) -> Result<()> {
         reader.read_exact(&mut body)?;
     }
     let mut stream = reader.into_inner();
-    match (method.as_str(), path.as_str()) {
-        ("GET", "/healthz") => respond(&mut stream, 200, "text/plain", "ok"),
+    let (code, ctype, payload) = route(&method, &path, &body, gateway);
+    respond(&mut stream, code, &ctype, &payload)
+}
+
+/// Dispatch one request to (status, content type, body).
+fn route(method: &str, path: &str, body: &[u8], gateway: &Gateway) -> (u16, String, String) {
+    let json = |code: u16, doc: Json| (code, "application/json".to_string(), doc.to_string());
+    match (method, path) {
+        ("GET", "/healthz") => (200, "text/plain".into(), "ok".into()),
         ("GET", "/metrics") => {
-            let body = coordinator.metrics.expose();
-            respond(&mut stream, 200, "text/plain; version=0.0.4", &body)
+            // Prometheus text for the default model (per-model numbers are
+            // on /v1/models/{name}/stats).
+            let (_, c) = gateway.default_entry();
+            (200, "text/plain; version=0.0.4".into(), c.metrics.expose())
         }
+        ("GET", "/v1/models") => json(200, models_doc(gateway)),
         ("POST", "/infer") => {
-            let text = String::from_utf8_lossy(&body);
-            match handle_infer(&text, coordinator) {
-                Ok(json) => respond(&mut stream, 200, "application/json", &json.to_string()),
-                Err(e) => respond(
-                    &mut stream,
-                    400,
-                    "application/json",
-                    &Json::obj(vec![("error", Json::str(&e.to_string()))]).to_string(),
-                ),
-            }
+            let (name, c) = gateway.default_entry();
+            infer_response(name, c, body)
         }
-        _ => respond(&mut stream, 404, "text/plain", "not found"),
+        _ => {
+            // /v1/models/{name}/infer | /v1/models/{name}/stats
+            if let Some(rest) = path.strip_prefix("/v1/models/") {
+                if let Some((name, action)) = rest.split_once('/') {
+                    let Some(c) = gateway.get(name) else {
+                        return json(
+                            404,
+                            Json::obj(vec![
+                                ("error", Json::str(&format!("unknown model '{name}'"))),
+                                (
+                                    "models",
+                                    Json::arr(
+                                        gateway.names().iter().map(|n| Json::str(n)),
+                                    ),
+                                ),
+                            ]),
+                        );
+                    };
+                    match (method, action) {
+                        ("POST", "infer") => return infer_response(name, c, body),
+                        ("GET", "stats") => return json(200, stats_doc(c)),
+                        _ => {}
+                    }
+                }
+            }
+            json(
+                404,
+                Json::obj(vec![
+                    ("error", Json::str(&format!("no route for {method} {path}"))),
+                    ("routes", Json::arr(ROUTES.iter().map(|r| Json::str(r)))),
+                ]),
+            )
+        }
     }
 }
 
-fn handle_infer(body: &str, coordinator: &Coordinator) -> Result<Json> {
+/// `GET /v1/models` payload.
+fn models_doc(gateway: &Gateway) -> Json {
+    let (default_name, _) = gateway.default_entry();
+    Json::obj(vec![
+        ("default", Json::str(default_name)),
+        (
+            "models",
+            Json::arr(gateway.iter().map(|(name, c)| {
+                let s = c.stats();
+                Json::obj(vec![
+                    ("name", Json::str(name)),
+                    ("queue_len", Json::num(s.queue_len as f64)),
+                    ("cores", Json::num(s.cores as f64)),
+                    ("batch", Json::num(s.batch as f64)),
+                ])
+            })),
+        ),
+    ])
+}
+
+/// `GET /v1/models/{name}/stats` payload.
+fn stats_doc(c: &Coordinator) -> Json {
+    let s = c.stats();
+    Json::obj(vec![
+        ("received", Json::num(s.received as f64)),
+        ("completed", Json::num(s.completed as f64)),
+        ("dropped", Json::num(s.dropped as f64)),
+        ("violated", Json::num(s.violated as f64)),
+        ("queue_len", Json::num(s.queue_len as f64)),
+        ("cores", Json::num(s.cores as f64)),
+        ("batch", Json::num(s.batch as f64)),
+        ("model_refits", Json::num(s.model_refits as f64)),
+    ])
+}
+
+/// POST infer → (status, content type, body). Malformed input is `400`
+/// with a JSON error body; slow inference is `504`.
+fn infer_response(model: &str, c: &Coordinator, body: &[u8]) -> (u16, String, String) {
+    let text = String::from_utf8_lossy(body);
+    match handle_infer(model, &text, c) {
+        Ok(json) => (200, "application/json".into(), json.to_string()),
+        Err(e) => {
+            let code = if e.to_string().contains("timed out") { 504 } else { 400 };
+            (
+                code,
+                "application/json".into(),
+                Json::obj(vec![("error", Json::str(&format!("{e:#}")))]).to_string(),
+            )
+        }
+    }
+}
+
+fn handle_infer(model: &str, body: &str, coordinator: &Coordinator) -> Result<Json> {
     let doc = Json::parse(body).map_err(|e| anyhow::anyhow!("bad json: {e}"))?;
     let slo_ms = doc.get("slo_ms").as_f64().unwrap_or(1_000.0);
     let comm_ms = doc.get("comm_ms").as_f64().unwrap_or(0.0);
-    let image: Vec<f32> = doc
-        .get("image")
-        .as_arr()
-        .context("missing 'image' array")?
-        .iter()
-        .filter_map(|v| v.as_f64())
-        .map(|v| v as f32)
-        .collect();
+    anyhow::ensure!(slo_ms > 0.0, "slo_ms must be positive (got {slo_ms})");
+    let arr = doc.get("image").as_arr().context("missing 'image' array")?;
+    anyhow::ensure!(
+        arr.len() == coordinator.image_len(),
+        "'image' must have exactly {} floats (got {})",
+        coordinator.image_len(),
+        arr.len()
+    );
+    let mut image = Vec::with_capacity(arr.len());
+    for (i, v) in arr.iter().enumerate() {
+        let x = v
+            .as_f64()
+            .with_context(|| format!("'image'[{i}] is not a number"))?;
+        image.push(x as f32);
+    }
     let (tx, rx) = mpsc::channel();
     coordinator.submit(LiveRequest { id: 0, image, slo_ms, comm_latency_ms: comm_ms, reply: tx });
     let resp = rx
@@ -139,6 +308,7 @@ fn handle_infer(body: &str, coordinator: &Coordinator) -> Result<Json> {
         .map_err(|_| anyhow::anyhow!("inference timed out"))?;
     Ok(Json::obj(vec![
         ("id", Json::num(resp.id as f64)),
+        ("model", Json::str(model)),
         ("logits", Json::arr(resp.logits.iter().map(|&v| Json::num(v as f64)))),
         ("queue_ms", Json::num(resp.queue_ms)),
         ("processing_ms", Json::num(resp.processing_ms)),
@@ -153,6 +323,7 @@ fn respond(stream: &mut TcpStream, code: u16, ctype: &str, body: &str) -> Result
         200 => "OK",
         400 => "Bad Request",
         404 => "Not Found",
+        504 => "Gateway Timeout",
         _ => "Internal Server Error",
     };
     write!(

@@ -16,12 +16,64 @@ fn run(args: &[&str]) -> (bool, String, String) {
     )
 }
 
+/// Like `run`, but returns the raw exit code.
+fn run_code(args: &[&str]) -> (Option<i32>, String, String) {
+    let out = bin().args(args).output().expect("spawn sponge");
+    (
+        out.status.code(),
+        String::from_utf8_lossy(&out.stdout).to_string(),
+        String::from_utf8_lossy(&out.stderr).to_string(),
+    )
+}
+
 #[test]
 fn no_args_prints_usage() {
     let (ok, stdout, _) = run(&[]);
     assert!(ok);
     assert!(stdout.contains("USAGE"));
     assert!(stdout.contains("simulate"));
+}
+
+#[test]
+fn unknown_subcommand_prints_synopsis_and_exits_2() {
+    let (code, _, stderr) = run_code(&["frobnicate"]);
+    assert_eq!(code, Some(2), "{stderr}");
+    assert!(stderr.contains("unknown command 'frobnicate'"), "{stderr}");
+    // The synopsis lists every subcommand.
+    for cmd in ["serve", "simulate", "profile", "fit", "solve", "trace-gen", "workload-gen"] {
+        assert!(stderr.contains(cmd), "synopsis missing {cmd}: {stderr}");
+    }
+}
+
+#[test]
+fn help_works_for_every_subcommand() {
+    for cmd in ["serve", "simulate", "profile", "fit", "solve", "trace-gen", "workload-gen"] {
+        let (code, stdout, stderr) = run_code(&[cmd, "--help"]);
+        assert_eq!(code, Some(0), "{cmd}: {stderr}");
+        assert!(
+            stdout.contains(&format!("USAGE: sponge {cmd}")),
+            "{cmd}: {stdout}"
+        );
+    }
+    // Top-level --help prints the synopsis and succeeds.
+    let (code, stdout, _) = run_code(&["--help"]);
+    assert_eq!(code, Some(0));
+    assert!(stdout.contains("COMMANDS"));
+}
+
+#[test]
+fn serve_rejects_unknown_model_variant() {
+    let (code, _, stderr) = run_code(&["serve", "--models", "resnet,zeus", "--executor", "mock"]);
+    assert_eq!(code, Some(1), "{stderr}");
+    assert!(stderr.contains("unknown model variant 'zeus'"), "{stderr}");
+}
+
+#[test]
+fn serve_rejects_unknown_executor() {
+    let (code, _, stderr) =
+        run_code(&["serve", "--models", "resnet", "--executor", "warp"]);
+    assert_eq!(code, Some(1), "{stderr}");
+    assert!(stderr.contains("unknown executor"), "{stderr}");
 }
 
 #[test]

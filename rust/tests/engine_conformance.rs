@@ -1,0 +1,192 @@
+//! `ServingEngine` conformance suite: the identical two-model dynamic-SLO
+//! scenario driven through `SimEngine` (virtual clock) and `LiveEngine` +
+//! `MockExecutor` (wall clock) via the shared trait, asserting matching
+//! request accounting — plus EDF tie-breaking checks on the queue/batch
+//! deadline accessors both engines rely on.
+
+use sponge::config::Policy;
+use sponge::engine::{
+    run_scenario, EngineRequest, LiveEngine, LiveEngineCfg, ModelRegistry, ModelSpec,
+    Scenario, ServingEngine, SimEngine, SimEngineCfg,
+};
+use sponge::network::{BandwidthTrace, NetworkModel};
+use sponge::queue::{Batch, EdfQueue};
+use sponge::workload::{Request, WorkloadGen};
+
+/// The shared two-model registry: a Sponge-scaled detector plus a
+/// statically provisioned second variant.
+fn registry() -> ModelRegistry {
+    let mut reg = ModelRegistry::new();
+    reg.register(ModelSpec::named("resnet").unwrap()).unwrap();
+    reg.register(
+        ModelSpec::named("yolov5s").unwrap().with_policy(Policy::Static8),
+    )
+    .unwrap();
+    reg
+}
+
+/// The shared scenario: two models, different rates/seeds, dynamic SLOs
+/// shaped by a synthetic 4G trace. `time_scale` compresses wall pacing so
+/// the live replay stays fast.
+fn scenario(horizon_s: usize) -> (Scenario, NetworkModel) {
+    let a = WorkloadGen { rate_rps: 20.0, ..WorkloadGen::paper_default() };
+    let b = WorkloadGen {
+        rate_rps: 10.0,
+        slo_ms: 800.0,
+        seed: 0xbeef,
+        ..WorkloadGen::paper_default()
+    };
+    let s = Scenario::new(horizon_s as f64 * 1_000.0)
+        .with_model("resnet", a)
+        .with_model("yolov5s", b)
+        .with_time_scale(0.02);
+    let net = NetworkModel::new(BandwidthTrace::synthetic_4g(horizon_s + 1, 1_000.0, 9));
+    (s, net)
+}
+
+#[test]
+fn same_scenario_matches_across_sim_and_live() {
+    let reg = registry();
+    let (scn, net) = scenario(5);
+
+    let mut sim = SimEngine::new(&reg, SimEngineCfg::default()).unwrap();
+    let sim_report = run_scenario(&mut sim, &scn, &net).unwrap();
+
+    let mut live = LiveEngine::start_mock(
+        &reg,
+        LiveEngineCfg { adaptation_interval_ms: 100.0, ..Default::default() },
+    )
+    .unwrap();
+    let live_report = run_scenario(&mut live, &scn, &net).unwrap();
+    live.shutdown();
+
+    assert_eq!(sim_report.engine, "sim");
+    assert_eq!(live_report.engine, "live");
+
+    // Matching request accounting: both engines saw the same workload and
+    // both conserved it (submitted == completed + dropped, per model).
+    for model in ["resnet", "yolov5s"] {
+        let s = sim_report.snapshot(model).unwrap();
+        let l = live_report.snapshot(model).unwrap();
+        assert_eq!(s.submitted, l.submitted, "{model}: submitted diverged");
+        assert_eq!(s.in_flight(), 0, "{model}: sim left work in flight");
+        assert_eq!(l.in_flight(), 0, "{model}: live left work in flight");
+        assert_eq!(s.resolved(), l.resolved(), "{model}: resolution diverged");
+        assert!(s.completed > 0, "{model}: sim completed nothing: {s:?}");
+        assert!(l.completed > 0, "{model}: live completed nothing: {l:?}");
+    }
+    assert_eq!(sim_report.drain.submitted, 150); // 20*5 + 10*5
+    assert!(sim_report.conserved() && live_report.conserved());
+}
+
+#[test]
+fn both_engines_expose_the_same_registry_surface() {
+    let reg = registry();
+    let sim = SimEngine::new(&reg, SimEngineCfg::default()).unwrap();
+    let live = LiveEngine::start_mock(&reg, LiveEngineCfg::default()).unwrap();
+    assert_eq!(sim.models(), vec!["resnet", "yolov5s"]);
+    assert_eq!(sim.models(), live.models());
+    assert!(sim.snapshot("ghost").is_err());
+    assert!(live.snapshot("ghost").is_err());
+    live.shutdown();
+}
+
+#[test]
+fn trait_objects_are_interchangeable() {
+    // The point of the redesign: scenario code written once against
+    // `&mut dyn ServingEngine` runs on either implementation.
+    let reg = registry();
+    let mut engines: Vec<Box<dyn ServingEngine>> = vec![
+        Box::new(SimEngine::new(&reg, SimEngineCfg::default()).unwrap()),
+        Box::new(
+            LiveEngine::start_mock(
+                &reg,
+                LiveEngineCfg { adaptation_interval_ms: 100.0, ..Default::default() },
+            )
+            .unwrap(),
+        ),
+    ];
+    for engine in &mut engines {
+        for i in 0..10 {
+            let req = if engine.clock().is_virtual() {
+                EngineRequest::new(2_000.0, 5.0).at(i as f64 * 10.0)
+            } else {
+                EngineRequest::new(2_000.0, 5.0)
+            };
+            engine.submit("resnet", req).unwrap();
+        }
+        let report = engine.drain();
+        assert!(report.settled(), "{}: {report:?}", engine.kind());
+        assert_eq!(report.submitted, 10);
+    }
+}
+
+// ---------------------------------------------------------- EDF tie-breaks --
+
+fn req(id: u64, sent: f64, slo: f64) -> Request {
+    Request {
+        id,
+        sent_at_ms: sent,
+        comm_latency_ms: 0.0,
+        arrived_at_ms: sent,
+        slo_ms: slo,
+        payload_bytes: 0.0,
+    }
+}
+
+#[test]
+fn edf_ties_break_by_id_within_batches() {
+    let mut q = EdfQueue::new();
+    // Three requests with the *same* absolute deadline (600), interleaved
+    // with an earlier and a later one.
+    q.push(req(9, 100.0, 500.0)); // deadline 600
+    q.push(req(2, 0.0, 600.0)); // deadline 600
+    q.push(req(5, 200.0, 400.0)); // deadline 600
+    q.push(req(7, 0.0, 100.0)); // deadline 100 — most urgent
+    q.push(req(1, 0.0, 900.0)); // deadline 900 — least urgent
+    let b = q.take_batch(4).unwrap();
+    let ids: Vec<u64> = b.requests.iter().map(|r| r.id).collect();
+    // Deadline order first, then id order within the deadline tie.
+    assert_eq!(ids, vec![7, 2, 5, 9]);
+    assert_eq!(q.pop().unwrap().id, 1);
+}
+
+#[test]
+fn batch_deadline_accessors_on_ties() {
+    let b = Batch {
+        requests: vec![req(3, 0.0, 500.0), req(1, 100.0, 400.0), req(2, 0.0, 500.0)],
+    };
+    // All three share deadline 500: the batch deadline is that tie value.
+    assert_eq!(b.min_deadline_ms(), 500.0);
+    assert_eq!(b.min_remaining_ms(150.0), 350.0);
+    assert_eq!(b.max_deadline_ms(), 500.0);
+    assert!(!b.is_empty());
+    assert_eq!(b.len(), 3);
+
+    let mixed = Batch {
+        requests: vec![req(1, 0.0, 800.0), req(2, 50.0, 300.0)],
+    };
+    assert_eq!(mixed.min_deadline_ms(), 350.0);
+    assert_eq!(mixed.max_deadline_ms(), 800.0);
+    assert_eq!(mixed.deadline_spread_ms(), 450.0);
+}
+
+#[test]
+fn empty_batch_deadline_accessors_are_defined() {
+    let b = Batch { requests: Vec::new() };
+    assert!(b.is_empty());
+    assert_eq!(b.min_deadline_ms(), f64::INFINITY);
+    assert_eq!(b.max_deadline_ms(), f64::NEG_INFINITY);
+}
+
+#[test]
+fn drop_expired_respects_exact_tie_on_now() {
+    let mut q = EdfQueue::new();
+    q.push(req(1, 0.0, 100.0)); // deadline exactly at now
+    q.push(req(2, 0.0, 100.1));
+    let dropped = q.drop_expired(100.0);
+    // `deadline <= now` drops the exact tie, keeps the strictly later one.
+    assert_eq!(dropped.len(), 1);
+    assert_eq!(dropped[0].id, 1);
+    assert_eq!(q.len(), 1);
+}

@@ -1,24 +1,48 @@
 //! HTTP server protocol tests (MockExecutor; real-model serving is
-//! exercised by examples/dynamic_slo_serving).
+//! exercised by examples/dynamic_slo_serving): the versioned `/v1`
+//! surface, the legacy `/infer` alias, and the robustness contract
+//! (400 JSON errors, 404s listing valid routes/models).
 
 use std::sync::Arc;
 
 use sponge::coordinator::{Coordinator, CoordinatorCfg, MockExecutor};
-use sponge::server::{client, serve};
+use sponge::engine::{LiveEngine, LiveEngineCfg, ModelRegistry, ModelSpec};
+use sponge::server::{client, serve, Gateway};
 use sponge::util::json::Json;
 
-fn start() -> (sponge::server::ServerHandle, Arc<Coordinator>) {
+/// Single-model gateway (the legacy shape).
+fn start_single() -> sponge::server::ServerHandle {
     let coordinator = Arc::new(Coordinator::start(
         CoordinatorCfg::default(),
         Arc::new(MockExecutor::default()),
     ));
-    let handle = serve("127.0.0.1:0", Arc::clone(&coordinator)).unwrap();
-    (handle, coordinator)
+    let gateway = Arc::new(Gateway::single(coordinator));
+    serve("127.0.0.1:0", gateway).unwrap()
+}
+
+/// Two registered variants served from one process, via the live engine.
+fn start_two_model() -> (sponge::server::ServerHandle, LiveEngine) {
+    let mut reg = ModelRegistry::new();
+    reg.register(ModelSpec::named("resnet").unwrap()).unwrap();
+    reg.register(ModelSpec::named("yolov5s").unwrap()).unwrap();
+    let engine = LiveEngine::start_mock(&reg, LiveEngineCfg::default()).unwrap();
+    let gateway = Arc::new(Gateway::from_parts(engine.coordinators()).unwrap());
+    let handle = serve("127.0.0.1:0", gateway).unwrap();
+    (handle, engine)
+}
+
+fn infer_body(image_len: usize) -> String {
+    Json::obj(vec![
+        ("slo_ms", Json::num(2_000.0)),
+        ("comm_ms", Json::num(10.0)),
+        ("image", Json::arr((0..image_len).map(|i| Json::num(i as f64)))),
+    ])
+    .to_string()
 }
 
 #[test]
 fn healthz() {
-    let (handle, _c) = start();
+    let handle = start_single();
     let (code, body) = client::get(&handle.addr(), "/healthz").unwrap();
     assert_eq!(code, 200);
     assert_eq!(body, "ok");
@@ -26,53 +50,183 @@ fn healthz() {
 }
 
 #[test]
-fn unknown_route_404() {
-    let (handle, _c) = start();
-    let (code, _) = client::get(&handle.addr(), "/nope").unwrap();
+fn unknown_route_404_lists_valid_routes() {
+    let handle = start_single();
+    let (code, body) = client::get(&handle.addr(), "/nope").unwrap();
     assert_eq!(code, 404);
+    let doc = Json::parse(&body).unwrap();
+    assert!(doc.get("error").as_str().unwrap().contains("/nope"), "{body}");
+    let routes = doc.get("routes").as_arr().unwrap();
+    assert!(
+        routes.iter().any(|r| r.as_str().unwrap().contains("/v1/models")),
+        "{body}"
+    );
+    // Wrong method on a known path is a 404 with routes too.
+    let (code, body) = client::post_json(&handle.addr(), "/healthz", "{}").unwrap();
+    assert_eq!(code, 404, "{body}");
     handle.stop();
 }
 
 #[test]
-fn infer_roundtrip() {
-    let (handle, _c) = start();
-    let req = Json::obj(vec![
-        ("slo_ms", Json::num(2_000.0)),
-        ("comm_ms", Json::num(10.0)),
-        ("image", Json::arr((0..4).map(|i| Json::num(i as f64)))),
-    ]);
-    let (code, body) = client::post_json(&handle.addr(), "/infer", &req.to_string()).unwrap();
+fn legacy_infer_roundtrip_on_default_model() {
+    let handle = start_single();
+    let (code, body) =
+        client::post_json(&handle.addr(), "/infer", &infer_body(4)).unwrap();
     assert_eq!(code, 200, "{body}");
     let doc = Json::parse(&body).unwrap();
     assert_eq!(doc.get("dropped").as_bool(), Some(false));
+    assert_eq!(doc.get("model").as_str(), Some("default"));
     assert_eq!(doc.get("logits").as_arr().unwrap().len(), 2);
     assert!(doc.get("server_ms").as_f64().unwrap() >= 0.0);
     handle.stop();
 }
 
 #[test]
-fn infer_rejects_garbage() {
-    let (handle, _c) = start();
-    let (code, body) = client::post_json(&handle.addr(), "/infer", "{not json").unwrap();
-    assert_eq!(code, 400);
-    assert!(body.contains("error"));
+fn infer_rejects_garbage_with_json_400() {
+    let handle = start_single();
+    for path in ["/infer", "/v1/models/default/infer"] {
+        // Malformed JSON: 400 + JSON error body, not a dropped connection.
+        let (code, body) = client::post_json(&handle.addr(), path, "{not json").unwrap();
+        assert_eq!(code, 400, "{path}: {body}");
+        let doc = Json::parse(&body).unwrap();
+        assert!(doc.get("error").as_str().unwrap().contains("bad json"), "{body}");
+        // Valid JSON missing the image array: also 400 + JSON error.
+        let (code, body) =
+            client::post_json(&handle.addr(), path, r#"{"slo_ms": 100}"#).unwrap();
+        assert_eq!(code, 400, "{path}: {body}");
+        let doc = Json::parse(&body).unwrap();
+        assert!(doc.get("error").as_str().unwrap().contains("image"), "{body}");
+        // Non-positive SLO: 400.
+        let (code, _) = client::post_json(
+            &handle.addr(),
+            path,
+            r#"{"slo_ms": -5, "image": [0, 0, 0, 0]}"#,
+        )
+        .unwrap();
+        assert_eq!(code, 400, "{path}");
+        // Wrong image length for the executor: 400, not a poisoned pipeline.
+        let (code, body) =
+            client::post_json(&handle.addr(), path, r#"{"image": [0.5]}"#).unwrap();
+        assert_eq!(code, 400, "{path}: {body}");
+        assert!(body.contains("exactly"), "{body}");
+        // Non-numeric image entries: 400 with the offending index.
+        let (code, body) = client::post_json(
+            &handle.addr(),
+            path,
+            r#"{"image": [0, "x", 0, 0]}"#,
+        )
+        .unwrap();
+        assert_eq!(code, 400, "{path}: {body}");
+        assert!(body.contains("not a number"), "{body}");
+    }
+    // The pipeline still serves good requests after all that garbage.
     let (code, _) =
-        client::post_json(&handle.addr(), "/infer", r#"{"slo_ms": 100}"#).unwrap();
-    assert_eq!(code, 400); // missing image
+        client::post_json(&handle.addr(), "/infer", &infer_body(4)).unwrap();
+    assert_eq!(code, 200);
     handle.stop();
 }
 
 #[test]
+fn v1_models_lists_both_variants_with_default() {
+    let (handle, engine) = start_two_model();
+    let (code, body) = client::get(&handle.addr(), "/v1/models").unwrap();
+    assert_eq!(code, 200, "{body}");
+    let doc = Json::parse(&body).unwrap();
+    assert_eq!(doc.get("default").as_str(), Some("resnet"));
+    let models = doc.get("models").as_arr().unwrap();
+    let names: Vec<&str> = models
+        .iter()
+        .map(|m| m.get("name").as_str().unwrap())
+        .collect();
+    assert_eq!(names, vec!["resnet", "yolov5s"]);
+    handle.stop();
+    engine.shutdown();
+}
+
+#[test]
+fn v1_infer_roundtrips_for_two_variants_in_one_process() {
+    let (handle, engine) = start_two_model();
+    for model in ["resnet", "yolov5s"] {
+        let (code, body) = client::post_json(
+            &handle.addr(),
+            &format!("/v1/models/{model}/infer"),
+            &infer_body(4),
+        )
+        .unwrap();
+        assert_eq!(code, 200, "{model}: {body}");
+        let doc = Json::parse(&body).unwrap();
+        assert_eq!(doc.get("model").as_str(), Some(model));
+        assert_eq!(doc.get("dropped").as_bool(), Some(false));
+        assert_eq!(doc.get("logits").as_arr().unwrap().len(), 2);
+    }
+    // ...while the legacy alias still serves the default model.
+    let (code, body) =
+        client::post_json(&handle.addr(), "/infer", &infer_body(4)).unwrap();
+    assert_eq!(code, 200, "{body}");
+    assert_eq!(
+        Json::parse(&body).unwrap().get("model").as_str(),
+        Some("resnet")
+    );
+    handle.stop();
+    engine.shutdown();
+}
+
+#[test]
+fn v1_unknown_model_404_lists_registered() {
+    let (handle, engine) = start_two_model();
+    let (code, body) = client::post_json(
+        &handle.addr(),
+        "/v1/models/ghost/infer",
+        &infer_body(4),
+    )
+    .unwrap();
+    assert_eq!(code, 404, "{body}");
+    let doc = Json::parse(&body).unwrap();
+    assert!(doc.get("error").as_str().unwrap().contains("ghost"));
+    let known: Vec<&str> = doc
+        .get("models")
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|m| m.as_str().unwrap())
+        .collect();
+    assert_eq!(known, vec!["resnet", "yolov5s"]);
+    handle.stop();
+    engine.shutdown();
+}
+
+#[test]
+fn v1_stats_tracks_per_model_traffic() {
+    let (handle, engine) = start_two_model();
+    for _ in 0..3 {
+        let (code, _) = client::post_json(
+            &handle.addr(),
+            "/v1/models/yolov5s/infer",
+            &infer_body(4),
+        )
+        .unwrap();
+        assert_eq!(code, 200);
+    }
+    let (code, body) =
+        client::get(&handle.addr(), "/v1/models/yolov5s/stats").unwrap();
+    assert_eq!(code, 200, "{body}");
+    let doc = Json::parse(&body).unwrap();
+    assert_eq!(doc.get("received").as_u64(), Some(3), "{body}");
+    assert_eq!(doc.get("completed").as_u64(), Some(3), "{body}");
+    assert_eq!(doc.get("dropped").as_u64(), Some(0));
+    // The other model saw nothing.
+    let (_, body) = client::get(&handle.addr(), "/v1/models/resnet/stats").unwrap();
+    assert_eq!(Json::parse(&body).unwrap().get("received").as_u64(), Some(0));
+    handle.stop();
+    engine.shutdown();
+}
+
+#[test]
 fn metrics_exposed_after_traffic() {
-    let (handle, _c) = start();
-    let req = Json::obj(vec![
-        ("slo_ms", Json::num(2_000.0)),
-        ("comm_ms", Json::num(0.0)),
-        ("image", Json::arr((0..4).map(|_| Json::num(0.0)))),
-    ]);
+    let handle = start_single();
     for _ in 0..3 {
         let (code, _) =
-            client::post_json(&handle.addr(), "/infer", &req.to_string()).unwrap();
+            client::post_json(&handle.addr(), "/infer", &infer_body(4)).unwrap();
         assert_eq!(code, 200);
     }
     let (code, body) = client::get(&handle.addr(), "/metrics").unwrap();
@@ -83,24 +237,26 @@ fn metrics_exposed_after_traffic() {
 }
 
 #[test]
-fn concurrent_clients() {
-    let (handle, _c) = start();
+fn concurrent_clients_across_models() {
+    let (handle, engine) = start_two_model();
     let addr = handle.addr();
     let threads: Vec<_> = (0..8)
         .map(|i| {
             std::thread::spawn(move || {
-                let req = Json::obj(vec![
-                    ("slo_ms", Json::num(5_000.0)),
-                    ("comm_ms", Json::num(0.0)),
-                    ("image", Json::arr((0..4).map(|_| Json::num(i as f64)))),
-                ]);
-                client::post_json(&addr, "/infer", &req.to_string()).unwrap()
+                let model = if i % 2 == 0 { "resnet" } else { "yolov5s" };
+                client::post_json(
+                    &addr,
+                    &format!("/v1/models/{model}/infer"),
+                    &infer_body(4),
+                )
+                .unwrap()
             })
         })
         .collect();
     for t in threads {
-        let (code, _) = t.join().unwrap();
-        assert_eq!(code, 200);
+        let (code, body) = t.join().unwrap();
+        assert_eq!(code, 200, "{body}");
     }
     handle.stop();
+    engine.shutdown();
 }

@@ -1,0 +1,206 @@
+//! Offline stand-in for the `anyhow` crate: the API subset this repository
+//! uses (`Error`, `Result`, `Context`, `anyhow!`, `bail!`, `ensure!`),
+//! implemented over a plain context chain of strings.
+//!
+//! The sandbox has no crates.io access, so this vendored crate keeps the
+//! sources identical to what they would be against the real `anyhow`;
+//! swapping the `[dependencies]` entry for `anyhow = "1"` is a no-op for
+//! the rest of the codebase.
+
+use std::fmt;
+
+/// An error with a chain of context messages. `chain[0]` is the outermost
+/// (most recently attached) context; the last element is the root cause.
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Construct from any displayable message (the `anyhow!` macro's
+    /// backend).
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Attach an outer context message (used by [`Context`]).
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The context chain, outermost first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(|s| s.as_str())
+    }
+
+    /// The innermost (root cause) message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(|s| s.as_str()).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}` — the whole chain, outermost to root cause.
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain.first().map(|s| s.as_str()).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.first().map(|s| s.as_str()).unwrap_or(""))?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+// Like the real anyhow: `Error` deliberately does NOT implement
+// `std::error::Error`, so this blanket conversion (what makes `?` work on
+// io/parse/... errors) does not overlap the reflexive `From<Error>`.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        let mut chain = vec![e.to_string()];
+        let mut source = e.source();
+        while let Some(s) = source {
+            chain.push(s.to_string());
+            source = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// `anyhow::Result<T>` — `Result` with a defaulted error type.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Extension trait attaching context to `Result` and `Option`.
+pub trait Context<T> {
+    /// Wrap the error with a context message.
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T>;
+
+    /// Wrap the error with a lazily evaluated context message.
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: Into<Error>> Context<T> for Result<T, E> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T> {
+        self.map_err(|e| e.into().context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.into().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display + Send + Sync + 'static>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string, a displayable value, or
+/// format arguments (the real crate's three arms).
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built like [`anyhow!`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)+) => {
+        return Err($crate::anyhow!($($arg)+))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::anyhow!("condition failed: {}", stringify!($cond)));
+        }
+    };
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        std::fs::read("/definitely/not/a/path/xyz").context("reading config")?;
+        Ok(())
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let e = io_fail().unwrap_err();
+        assert_eq!(e.chain().next().unwrap(), "reading config");
+        assert!(format!("{e:#}").starts_with("reading config: "));
+    }
+
+    #[test]
+    fn display_shows_outermost_only() {
+        let e = anyhow!("root").context("middle").context("outer");
+        assert_eq!(e.to_string(), "outer");
+        assert_eq!(format!("{e:#}"), "outer: middle: root");
+        assert_eq!(e.root_cause(), "root");
+    }
+
+    #[test]
+    fn option_context() {
+        let v: Option<u32> = None;
+        let e = v.context("missing value").unwrap_err();
+        assert_eq!(e.to_string(), "missing value");
+    }
+
+    #[test]
+    fn ensure_and_bail() {
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 7 {
+                bail!("unlucky");
+            }
+            Ok(x)
+        }
+        assert_eq!(f(3).unwrap(), 3);
+        assert_eq!(f(12).unwrap_err().to_string(), "x too big: 12");
+        assert_eq!(f(7).unwrap_err().to_string(), "unlucky");
+    }
+}

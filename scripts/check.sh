@@ -1,0 +1,37 @@
+#!/usr/bin/env bash
+# Repository check gate: build, tests, formatting, lints.
+#
+#   ./scripts/check.sh           run everything
+#   SKIP_CLIPPY=1 ./scripts/check.sh   skip the clippy step (e.g. toolchain
+#                                      without the clippy component)
+#
+# This is what .github/workflows/ci.yml runs; keep the two in sync.
+
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+step() {
+    echo
+    echo "==> $*"
+    "$@"
+}
+
+step cargo build --release
+step cargo test -q
+
+if cargo fmt --version >/dev/null 2>&1; then
+    step cargo fmt --check
+else
+    echo "==> cargo fmt unavailable; skipping format check"
+fi
+
+if [ "${SKIP_CLIPPY:-0}" = "1" ]; then
+    echo "==> SKIP_CLIPPY=1; skipping clippy"
+elif cargo clippy --version >/dev/null 2>&1; then
+    step cargo clippy -- -D warnings
+else
+    echo "==> cargo clippy unavailable; skipping lints"
+fi
+
+echo
+echo "all checks passed"
