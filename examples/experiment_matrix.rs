@@ -1,0 +1,83 @@
+//! spongebench demo: the paper's headline claim as an experiment matrix.
+//!
+//! Runs Sponge and the static-allocation baseline (plus FA2) through the
+//! embedded 4G bandwidth trace with the bursty workload that exposes a
+//! static core allocation's throughput ceiling, and prints the per-cell
+//! table. Expected outcome (the paper's Fig. 4 story): Sponge holds SLO
+//! violations near zero across bandwidth drops and bursts while the
+//! static baseline accumulates violations — at a fraction of the static
+//! configuration's mean cores.
+//!
+//! ```bash
+//! cargo run --release --example experiment_matrix [--horizon-s N]
+//! ```
+//!
+//! Exits nonzero if Sponge does *not* beat the static baseline on SLO
+//! violation rate, so the claim stays checkable.
+
+use sponge::config::Policy;
+use sponge::experiment::{
+    run_matrix, EngineKind, ExperimentSpec, TraceSource, WorkloadSource,
+};
+use sponge::queue::QueueDiscipline;
+use sponge::solver::SolverChoice;
+use sponge::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env(&[], false).map_err(|e| anyhow::anyhow!("{e}"))?;
+    let horizon_s = args.u64_or("horizon-s", 600)?;
+
+    let spec = ExperimentSpec {
+        name: "headline".into(),
+        workloads: vec![
+            WorkloadSource::paper_default(),
+            WorkloadSource::bursty(20.0, 8.0),
+        ],
+        traces: vec![TraceSource::Embedded4g],
+        engines: vec![EngineKind::Sim],
+        policies: vec![Policy::Sponge, Policy::Static8, Policy::Fa2],
+        disciplines: vec![QueueDiscipline::Edf],
+        solvers: vec![SolverChoice::Incremental],
+        budgets: vec![48],
+        horizon_ms: horizon_s as f64 * 1_000.0,
+        model: "yolov5s".into(),
+        seed: 42,
+        noise_cv: 0.05,
+        quick: false,
+    };
+
+    let report = run_matrix(&spec).map_err(|e| anyhow::anyhow!(e))?;
+    print!("{}", report.markdown());
+
+    // The headline comparison rides on the bursty workload, where the
+    // static allocation's throughput ceiling binds.
+    let rate_of = |needle: &str| {
+        report
+            .cells
+            .iter()
+            .find(|c| c.id.starts_with("bursty") && c.id.contains(needle))
+            .map(|c| (c.metrics.violation_rate_pct, c.metrics.mean_cores))
+    };
+    let (Some((sponge, sponge_cores)), Some((stat, static_cores))) =
+        (rate_of("/sponge+"), rate_of("/static8+"))
+    else {
+        anyhow::bail!("expected sponge and static8 bursty cells in the report");
+    };
+
+    println!(
+        "\nbursty workload, embedded 4G trace ({horizon_s} s):\n\
+           sponge   : {sponge:.2}% SLO violations at {sponge_cores:.2} mean cores\n\
+           static-8 : {stat:.2}% SLO violations at {static_cores:.2} mean cores"
+    );
+    if sponge < stat {
+        println!(
+            "✓ Sponge beats the static allocation on SLO violation rate \
+             ({sponge:.2}% < {stat:.2}%)"
+        );
+        Ok(())
+    } else {
+        anyhow::bail!(
+            "✗ Sponge did not beat the static baseline ({sponge:.2}% >= {stat:.2}%)"
+        );
+    }
+}

@@ -8,7 +8,7 @@ pub use toml_lite::{parse_toml, TomlDoc, TomlError};
 
 use crate::cluster::ClusterCfg;
 use crate::perfmodel::LatencyModel;
-use crate::solver::SolverLimits;
+use crate::solver::{SolverChoice, SolverLimits};
 use crate::workload::{ArrivalProcess, PayloadMix, WorkloadGen};
 use crate::Ms;
 
@@ -85,18 +85,34 @@ impl Policy {
         }
     }
 
-    /// Instantiate the autoscaler for this policy.
+    /// Instantiate the autoscaler for this policy (incremental IP solver).
     pub fn build(&self, limits: SolverLimits) -> Box<dyn crate::scaler::Autoscaler> {
+        self.build_with(limits, SolverChoice::Incremental)
+    }
+
+    /// Instantiate with an explicit IP-solver implementation — the
+    /// experiment matrix's solver axis for the policies that solve the IP
+    /// (the Sponge family and Hybrid). Policies that never solve it
+    /// (FA2, static, VPA) ignore the choice.
+    pub fn build_with(
+        &self,
+        limits: SolverLimits,
+        solver: SolverChoice,
+    ) -> Box<dyn crate::scaler::Autoscaler> {
         use crate::scaler::*;
         match self {
-            Policy::Sponge => Box::new(SpongeScaler::new(limits)),
-            Policy::SpongeVerbatim => Box::new(SpongeScaler::paper_verbatim(limits)),
-            Policy::SpongeNoMargin => Box::new(SpongeScaler::new(limits).without_margins()),
+            Policy::Sponge => Box::new(SpongeScaler::new(limits).with_solver(solver)),
+            Policy::SpongeVerbatim => {
+                Box::new(SpongeScaler::paper_verbatim(limits).with_solver(solver))
+            }
+            Policy::SpongeNoMargin => {
+                Box::new(SpongeScaler::new(limits).without_margins().with_solver(solver))
+            }
             Policy::Fa2 => Box::new(Fa2Scaler::new(limits.b_max)),
             Policy::Static8 => Box::new(StaticScaler::new(8, limits.b_max)),
             Policy::Static16 => Box::new(StaticScaler::new(16, limits.b_max)),
             Policy::Vpa => Box::new(VpaScaler::new(limits.c_max)),
-            Policy::Hybrid => Box::new(HybridScaler::new(limits, 4)),
+            Policy::Hybrid => Box::new(HybridScaler::new(limits, 4).with_solver(solver)),
         }
     }
 }

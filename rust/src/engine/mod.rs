@@ -33,7 +33,7 @@ pub mod sim;
 
 pub use live::{LiveEngine, LiveEngineCfg};
 pub use registry::{builtin_latency_model, ModelRegistry, ModelSpec};
-pub use scenario::{run_scenario, Scenario, ScenarioModel, ScenarioReport};
+pub use scenario::{drive_timeline, run_scenario, Scenario, ScenarioModel, ScenarioReport};
 pub use sim::{SimEngine, SimEngineCfg};
 
 use std::cell::Cell;

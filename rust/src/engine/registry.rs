@@ -10,7 +10,8 @@
 
 use crate::config::Policy;
 use crate::perfmodel::LatencyModel;
-use crate::solver::SolverLimits;
+use crate::queue::QueueDiscipline;
+use crate::solver::{SolverChoice, SolverLimits};
 use crate::Ms;
 
 /// Look up a built-in fitted latency model by variant name. Accepts both
@@ -37,6 +38,12 @@ pub struct ModelSpec {
     /// Nominal end-to-end SLO advertised for this variant (requests may
     /// still carry their own).
     pub slo_ms: Ms,
+    /// Queue service discipline (EDF reordering, or the FIFO ablation).
+    /// Honoured by [`crate::engine::SimEngine`]; the live coordinator
+    /// currently always serves EDF.
+    pub discipline: QueueDiscipline,
+    /// IP-solver implementation for Sponge-family policies.
+    pub solver: SolverChoice,
 }
 
 impl ModelSpec {
@@ -48,6 +55,8 @@ impl ModelSpec {
             policy: Policy::Sponge,
             limits: SolverLimits::default(),
             slo_ms: 1_000.0,
+            discipline: QueueDiscipline::Edf,
+            solver: SolverChoice::Incremental,
         }
     }
 
@@ -77,9 +86,19 @@ impl ModelSpec {
         self
     }
 
+    pub fn with_discipline(mut self, discipline: QueueDiscipline) -> ModelSpec {
+        self.discipline = discipline;
+        self
+    }
+
+    pub fn with_solver(mut self, solver: SolverChoice) -> ModelSpec {
+        self.solver = solver;
+        self
+    }
+
     /// Instantiate this spec's autoscaler.
     pub fn build_scaler(&self) -> Box<dyn crate::scaler::Autoscaler> {
-        self.policy.build(self.limits)
+        self.policy.build_with(self.limits, self.solver)
     }
 }
 

@@ -82,6 +82,32 @@ impl ScenarioReport {
     }
 }
 
+/// Submit a pre-materialized `(model, request)` timeline (already in send
+/// order) through any engine and drain it. On a virtual clock the send
+/// times ride along via [`EngineRequest::at`]; on a wall clock the driver
+/// sleeps until each send time (compressed by `time_scale`) and ticks to
+/// absorb responses while pacing. The single implementation of this loop —
+/// [`run_scenario`] and the spongebench runner both delegate here so
+/// pacing/drain semantics cannot diverge.
+pub fn drive_timeline(
+    engine: &mut dyn ServingEngine,
+    timeline: &[(&str, &crate::workload::Request)],
+    time_scale: f64,
+) -> Result<DrainReport, super::EngineError> {
+    let virtual_time = engine.clock().is_virtual();
+    for (model, req) in timeline {
+        let er = EngineRequest::new(req.slo_ms, req.comm_latency_ms);
+        if virtual_time {
+            engine.submit(model, er.at(req.sent_at_ms))?;
+        } else {
+            engine.clock().sleep_until_ms(req.sent_at_ms * time_scale);
+            engine.tick(); // absorb responses while pacing
+            engine.submit(model, er)?;
+        }
+    }
+    Ok(engine.drain())
+}
+
 /// Replay `scenario` through `engine`: generate per-model request
 /// timelines, submit them in send order (paced on wall clocks), then
 /// drain and snapshot.
@@ -91,27 +117,19 @@ pub fn run_scenario(
     net: &NetworkModel,
 ) -> Result<ScenarioReport, super::EngineError> {
     // Generate and merge the timelines in send order.
-    let mut timeline: Vec<(Ms, usize, crate::workload::Request)> = Vec::new();
+    let mut merged: Vec<(Ms, usize, crate::workload::Request)> = Vec::new();
     for (idx, sm) in scenario.models.iter().enumerate() {
         for req in sm.workload.generate(scenario.horizon_ms, net) {
-            timeline.push((req.sent_at_ms, idx, req));
+            merged.push((req.sent_at_ms, idx, req));
         }
     }
-    timeline.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+    merged.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+    let timeline: Vec<(&str, &crate::workload::Request)> = merged
+        .iter()
+        .map(|(_, idx, req)| (scenario.models[*idx].model.as_str(), req))
+        .collect();
 
-    let virtual_time = engine.clock().is_virtual();
-    for (sent_at, idx, req) in timeline {
-        let model = &scenario.models[idx].model;
-        let mut er = EngineRequest::new(req.slo_ms, req.comm_latency_ms);
-        if virtual_time {
-            er = er.at(sent_at);
-        } else {
-            engine.clock().sleep_until_ms(sent_at * scenario.time_scale);
-            engine.tick(); // absorb responses while pacing
-        }
-        engine.submit(model, er)?;
-    }
-    let drain = engine.drain();
+    let drain = drive_timeline(engine, &timeline, scenario.time_scale)?;
     let mut per_model = Vec::new();
     for sm in &scenario.models {
         per_model.push((sm.model.clone(), engine.snapshot(&sm.model)?));

@@ -12,6 +12,7 @@
 
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashMap};
+use std::time::Instant;
 
 use crate::cluster::Cluster;
 use crate::monitoring::{Outcome, RateEstimator, SloTracker};
@@ -72,6 +73,13 @@ struct SimModel {
     exec_model: crate::perfmodel::LatencyModel,
     cl_max_window: Ms,
     submitted: u64,
+    /// Largest core allocation observed at any adaptation tick.
+    peak_cores: Cores,
+    /// Scaler-cost instrumentation: `decide` invocations and the wall
+    /// nanoseconds they consumed (the solver dominates for Sponge). Wall
+    /// time never feeds back into virtual time, so determinism holds.
+    scaler_calls: u64,
+    scaler_ns: u64,
 }
 
 #[derive(Debug)]
@@ -148,10 +156,11 @@ impl SimEngine {
                 }
             }
             cluster.tick(0.0); // cold starts elapse pre-experiment
+            let initial_cores = cluster.allocated_cores();
             models.push(SimModel {
                 exec_model: spec.latency,
+                queue: EdfQueue::with_discipline(spec.discipline),
                 spec: spec.clone(),
-                queue: EdfQueue::new(),
                 scaler,
                 tracker: SloTracker::new(cfg.adaptation_interval_ms),
                 rate: RateEstimator::new(5_000.0),
@@ -160,6 +169,9 @@ impl SimEngine {
                 batch: 1,
                 cl_max_window: 0.0,
                 submitted: 0,
+                peak_cores: initial_cores,
+                scaler_calls: 0,
+                scaler_ns: 0,
             });
         }
         Ok(SimEngine {
@@ -184,6 +196,20 @@ impl SimEngine {
     /// Allocated core-ms integral for one model (resource-usage metric).
     pub fn core_ms(&self, model: &str) -> Option<f64> {
         self.model_idx(model).map(|i| self.models[i].cluster.core_ms_integral())
+    }
+
+    /// Largest core allocation observed for one model at any adaptation
+    /// tick (the resource ceiling the policy actually reached).
+    pub fn peak_cores(&self, model: &str) -> Option<Cores> {
+        self.model_idx(model).map(|i| self.models[i].peak_cores)
+    }
+
+    /// Scaler-cost counters for one model: (`decide` invocations, total
+    /// wall nanoseconds spent inside them). Counts are deterministic;
+    /// nanoseconds are wall-clock measurements.
+    pub fn scaler_cost(&self, model: &str) -> Option<(u64, u64)> {
+        self.model_idx(model)
+            .map(|i| (self.models[i].scaler_calls, self.models[i].scaler_ns))
     }
 
     fn model_idx(&self, name: &str) -> Option<usize> {
@@ -411,7 +437,14 @@ impl ServingEngine for SimEngine {
                 let m = &mut self.models[idx];
                 m.cluster.tick(t_end);
                 drop_expired(t_end, &mut m.queue, &mut m.tracker);
-                let budgets = m.queue.remaining_budgets(t_end);
+                let mut budgets = m.queue.remaining_budgets(t_end);
+                // Under FIFO, expired requests buried behind a live head
+                // survive drop_expired; their negative budgets would make
+                // every (b, c) drain-infeasible and pin Sponge to its
+                // best-effort fallback. No allocation can save a doomed
+                // request, so the solver never plans for them. (Under EDF
+                // the expiry sweep is exhaustive and this is a no-op.)
+                budgets.retain(|b| *b > 0.0);
                 let lambda = m.rate.rate_rps(t_end);
                 let obs = ScalerObs {
                     now_ms: t_end,
@@ -420,7 +453,12 @@ impl ServingEngine for SimEngine {
                     cl_max_ms: m.cl_max_window,
                     slo_ms: m.spec.slo_ms,
                 };
+                let t_decide = Instant::now();
                 let actions = m.scaler.decide(&obs, &m.cluster, &m.exec_model);
+                m.scaler_ns = m
+                    .scaler_ns
+                    .saturating_add(t_decide.elapsed().as_nanos() as u64);
+                m.scaler_calls += 1;
                 m.cl_max_window = 0.0;
                 actions
             };
@@ -428,6 +466,11 @@ impl ServingEngine for SimEngine {
                 self.apply_action(idx, action, t_end);
             }
             self.dispatch(idx, t_end);
+            let allocated = self.models[idx].cluster.allocated_cores();
+            let m = &mut self.models[idx];
+            if allocated > m.peak_cores {
+                m.peak_cores = allocated;
+            }
         }
         self.next_tick_ms = t_end + self.cfg.adaptation_interval_ms;
     }

@@ -1,0 +1,159 @@
+//! spongebench — the trace-driven experiment-matrix subsystem.
+//!
+//! The paper's evaluation (§4) is a scenario matrix: a real 4G bandwidth
+//! trace drives per-request dynamic SLOs while policies compete on SLO
+//! violations and cores consumed. This module composes the repo's
+//! ingredients — [`crate::network::BandwidthTrace`], the
+//! [`crate::workload`] generators/replays, both
+//! [`crate::engine::ServingEngine`] implementations, the two IP solvers,
+//! and [`crate::util::bench`] — into reproducible experiments:
+//!
+//! * [`ExperimentSpec`] — a declarative matrix (workload trace × bandwidth
+//!   trace × engine × policy × queue discipline × solver × core budget),
+//!   expanded by [`ExperimentSpec::expand`] into [`CellSpec`]s.
+//! * [`run_cell`] / [`run_matrix`] — deterministic execution through the
+//!   `ServingEngine` trait; simulator cells are virtual-time, so metrics
+//!   are bit-identical across runs and machines.
+//! * [`MatrixReport`] — JSON (`spongebench/v1`) + markdown reduction, and
+//!   [`regression_gate`] comparing a fresh report against a committed
+//!   baseline (`benches/baseline.json`) — the CI perf gate.
+//!
+//! The `sponge bench` CLI subcommand is the front door:
+//!
+//! ```bash
+//! sponge bench --matrix default --quick --out BENCH_$(date +%F).json \
+//!              --baseline benches/baseline.json
+//! ```
+
+pub mod report;
+pub mod runner;
+pub mod spec;
+
+pub use report::{regression_gate, utc_today, GateOutcome, MatrixReport, SCHEMA};
+pub use runner::{run_cell, CellMetrics, CellResult, CellWall};
+pub use spec::{
+    CellSpec, EngineKind, ExperimentSpec, PolicyKnobs, TraceSource, WorkloadSource,
+};
+
+use crate::perfmodel::LatencyModel;
+use crate::solver::{SolverChoice, SolverInput, SolverLimits};
+use crate::util::bench::{bench_with, keep, BenchResult};
+
+/// Expand and execute a whole matrix. Cells run sequentially (each cell is
+/// itself a full discrete-event simulation); the first failing cell aborts
+/// with its error.
+pub fn run_matrix(spec: &ExperimentSpec) -> Result<MatrixReport, String> {
+    let mut cells = Vec::new();
+    for cell in spec.expand() {
+        cells.push(run_cell(&cell).map_err(|e| format!("cell {}: {e}", cell.id()))?);
+    }
+    Ok(MatrixReport {
+        matrix: spec.name.clone(),
+        quick: spec.quick,
+        horizon_s: spec.horizon_ms / 1_000.0,
+        cells,
+        microbench: Vec::new(),
+    })
+}
+
+/// Microbenchmark both IP-solver implementations on a representative
+/// mid-pressure input (64 queued requests, tight-but-feasible budgets) via
+/// the [`crate::util::bench`] harness. Wall-clock numbers — report-only,
+/// never part of determinism comparisons.
+pub fn solver_microbench() -> Vec<BenchResult> {
+    let model = LatencyModel::yolov5s();
+    let limits = SolverLimits::default();
+    let budgets: Vec<f64> = (0..64).map(|i| 120.0 + i as f64 * 12.0).collect();
+    let input = SolverInput::per_request(budgets, 60.0);
+    [SolverChoice::BruteForce, SolverChoice::Incremental]
+        .iter()
+        .map(|choice| {
+            bench_with(
+                &format!("solver/{}", choice.name()),
+                std::time::Duration::from_millis(50),
+                10,
+                &mut || {
+                    keep(choice.solve(&model, &input, limits));
+                },
+            )
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Policy;
+    use crate::queue::QueueDiscipline;
+
+    /// A 2-cell matrix small enough for unit tests.
+    fn tiny_matrix() -> ExperimentSpec {
+        ExperimentSpec {
+            name: "tiny".into(),
+            workloads: vec![WorkloadSource::paper_default()],
+            traces: vec![TraceSource::Synthetic { seed: 5 }],
+            engines: vec![EngineKind::Sim],
+            policies: vec![Policy::Sponge, Policy::Static8],
+            disciplines: vec![QueueDiscipline::Edf],
+            solvers: vec![SolverChoice::Incremental],
+            budgets: vec![48],
+            horizon_ms: 15_000.0,
+            model: "yolov5s".into(),
+            seed: 42,
+            noise_cv: 0.05,
+            quick: false,
+        }
+    }
+
+    #[test]
+    fn run_matrix_executes_every_cell() {
+        let report = run_matrix(&tiny_matrix()).unwrap();
+        assert_eq!(report.cells.len(), 2);
+        assert!(!report.quick, "quick records the flag, not the horizon");
+        for cell in &report.cells {
+            assert_eq!(
+                cell.metrics.submitted,
+                cell.metrics.completed + cell.metrics.dropped,
+                "{} broke conservation",
+                cell.id
+            );
+        }
+    }
+
+    #[test]
+    fn stable_json_is_reproducible() {
+        let a = run_matrix(&tiny_matrix()).unwrap().to_json(true).pretty();
+        let b = run_matrix(&tiny_matrix()).unwrap().to_json(true).pretty();
+        assert_eq!(a, b, "stable reports must be byte-identical");
+        assert!(!a.contains("wall"), "stable report must omit wall timings");
+        assert!(!a.contains("generated_at"));
+    }
+
+    #[test]
+    fn markdown_has_a_row_per_cell() {
+        let report = run_matrix(&tiny_matrix()).unwrap();
+        let md = report.markdown();
+        for cell in &report.cells {
+            assert!(md.contains(&cell.id), "missing row for {}", cell.id);
+        }
+    }
+
+    #[test]
+    fn fresh_report_passes_its_own_gate() {
+        let report = run_matrix(&tiny_matrix()).unwrap();
+        let json = report.to_json(true);
+        assert_eq!(
+            regression_gate(&json, &json, 0.25),
+            GateOutcome::Pass { compared: report.cells.len() }
+        );
+    }
+
+    #[test]
+    fn solver_microbench_measures_both() {
+        let results = solver_microbench();
+        assert_eq!(results.len(), 2);
+        assert!(results.iter().all(|r| r.summary.mean > 0.0));
+        assert!(results[0].name.contains("brute-force"));
+        assert!(results[1].name.contains("incremental"));
+    }
+}

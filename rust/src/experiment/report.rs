@@ -1,0 +1,399 @@
+//! Matrix reports: the machine-readable JSON schema (`spongebench/v1`),
+//! a markdown table for humans, and the baseline regression gate CI runs.
+//!
+//! Report layout:
+//!
+//! ```json
+//! {
+//!   "schema": "spongebench/v1",
+//!   "matrix": "default",
+//!   "quick": true,
+//!   "horizon_s": 120,
+//!   "generated_at": "2026-07-31",        // omitted in stable mode
+//!   "cells": [
+//!     {
+//!       "id": "paper-20rps/embedded-4g/sim/sponge+edf+incremental@48c",
+//!       "workload": "paper-20rps", "trace": "embedded-4g",
+//!       "engine": "sim", "policy": "sponge", "discipline": "edf",
+//!       "solver": "incremental", "shared_cores": 48,
+//!       "metrics": { "submitted": ..., "violation_rate_pct": ..., ... },
+//!       "wall": { "run_ms": ..., "scaler_ns_total": ... }  // omitted in stable mode
+//!     }
+//!   ],
+//!   "microbench": [ ... util::bench results ... ]  // omitted in stable mode
+//! }
+//! ```
+//!
+//! Simulator metrics are virtual-time quantities, so two invocations (or
+//! two machines) produce identical `metrics` — the `wall` section is the
+//! only nondeterminism, which is why the regression gate keys on
+//! `metrics.mean_e2e_ms` and stays reproducible in CI.
+
+use crate::util::bench::BenchResult;
+use crate::util::json::Json;
+
+use super::runner::CellResult;
+
+/// Report schema identifier.
+pub const SCHEMA: &str = "spongebench/v1";
+
+/// An executed matrix plus optional solver microbenchmarks.
+#[derive(Debug, Clone)]
+pub struct MatrixReport {
+    pub matrix: String,
+    pub quick: bool,
+    pub horizon_s: f64,
+    pub cells: Vec<CellResult>,
+    pub microbench: Vec<BenchResult>,
+}
+
+impl MatrixReport {
+    /// Serialize. `stable` omits every wall-clock quantity (and the date)
+    /// so the output is byte-reproducible — two runs of the same matrix
+    /// must produce identical stable JSON.
+    pub fn to_json(&self, stable: bool) -> Json {
+        let cells = self
+            .cells
+            .iter()
+            .map(|c| {
+                let m = &c.metrics;
+                let mut fields = vec![
+                    ("id", Json::str(&c.id)),
+                    ("workload", Json::str(c.spec.workload.name())),
+                    // Axis labels mirror the cell id: inert coordinates
+                    // print `-`, never a value that had no effect.
+                    ("trace", Json::str(&c.spec.trace_label())),
+                    ("engine", Json::str(c.spec.engine.name())),
+                    ("policy", Json::str(c.spec.knobs.policy.name())),
+                    ("discipline", Json::str(c.spec.knobs.discipline.name())),
+                    ("solver", Json::str(c.spec.solver_label())),
+                    (
+                        "shared_cores",
+                        Json::num(c.spec.knobs.shared_cores as f64),
+                    ),
+                    (
+                        "metrics",
+                        Json::obj(vec![
+                            ("submitted", Json::num(m.submitted as f64)),
+                            ("completed", Json::num(m.completed as f64)),
+                            ("dropped", Json::num(m.dropped as f64)),
+                            ("violations", Json::num(m.violations as f64)),
+                            (
+                                "violation_rate_pct",
+                                Json::num(round3(m.violation_rate_pct)),
+                            ),
+                            ("mean_e2e_ms", Json::num(round3(m.mean_e2e_ms))),
+                            ("e2e_p50_ms", Json::num(round3(m.e2e_p50_ms))),
+                            ("e2e_p99_ms", Json::num(round3(m.e2e_p99_ms))),
+                            ("mean_queue_ms", Json::num(round3(m.mean_queue_ms))),
+                            ("mean_cores", Json::num(round3(m.mean_cores))),
+                            ("peak_cores", Json::num(m.peak_cores as f64)),
+                            ("core_seconds", Json::num(round3(m.core_seconds))),
+                            ("scaler_calls", Json::num(m.scaler_calls as f64)),
+                        ]),
+                    ),
+                ];
+                if !stable {
+                    fields.push((
+                        "wall",
+                        Json::obj(vec![
+                            ("run_ms", Json::num(round3(c.wall.run_ms))),
+                            (
+                                "scaler_ns_total",
+                                Json::num(c.wall.scaler_ns_total as f64),
+                            ),
+                        ]),
+                    ));
+                }
+                Json::obj(fields)
+            })
+            .collect::<Vec<_>>();
+
+        let mut doc = vec![
+            ("schema", Json::str(SCHEMA)),
+            ("matrix", Json::str(&self.matrix)),
+            ("quick", Json::Bool(self.quick)),
+            ("horizon_s", Json::num(self.horizon_s)),
+            ("cells", Json::Arr(cells)),
+        ];
+        if !stable {
+            doc.push(("generated_at", Json::str(&utc_today())));
+            doc.push((
+                "microbench",
+                Json::arr(self.microbench.iter().map(|b| b.to_json())),
+            ));
+        }
+        Json::obj(doc)
+    }
+
+    /// Human-readable markdown table (one row per cell).
+    pub fn markdown(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "### spongebench `{}` matrix ({} cells, horizon {} s{})\n\n",
+            self.matrix,
+            self.cells.len(),
+            self.horizon_s,
+            if self.quick { ", quick" } else { "" },
+        ));
+        out.push_str(
+            "| cell | submitted | viol % | p50 ms | p99 ms | mean cores | peak | scaler calls |\n",
+        );
+        out.push_str("|---|---:|---:|---:|---:|---:|---:|---:|\n");
+        for c in &self.cells {
+            let m = &c.metrics;
+            out.push_str(&format!(
+                "| {} | {} | {:.2} | {:.1} | {:.1} | {:.2} | {} | {} |\n",
+                c.id,
+                m.submitted,
+                m.violation_rate_pct,
+                m.e2e_p50_ms,
+                m.e2e_p99_ms,
+                m.mean_cores,
+                m.peak_cores,
+                m.scaler_calls,
+            ));
+        }
+        out
+    }
+}
+
+fn round3(x: f64) -> f64 {
+    if x.is_finite() { (x * 1_000.0).round() / 1_000.0 } else { 0.0 }
+}
+
+/// Outcome of comparing a fresh report against a committed baseline.
+#[derive(Debug, Clone, PartialEq)]
+pub enum GateOutcome {
+    /// The baseline is a bootstrap placeholder (or carries no cells):
+    /// nothing to compare yet, gate passes with a notice.
+    Bootstrap,
+    /// Report and baseline were produced under different conditions
+    /// (matrix or horizon mismatch) — cell ids collide but the latencies
+    /// are structurally incomparable, so no verdict is possible.
+    Incomparable { reason: String },
+    /// Every comparable cell is within the threshold.
+    Pass { compared: usize },
+    /// One or more cells regressed; each string names the cell and the
+    /// observed vs allowed latency.
+    Regressions(Vec<String>),
+}
+
+/// Compare `report` against `baseline` (both `spongebench/v1` documents).
+/// A cell regresses when its `metrics.mean_e2e_ms` exceeds the baseline
+/// cell's by more than `threshold_frac` (0.25 = the CI gate's 25 %).
+/// Cells absent from the baseline are skipped — new cells are additions,
+/// not regressions. Mean latency is a virtual-time quantity, so this
+/// comparison is machine-independent.
+pub fn regression_gate(report: &Json, baseline: &Json, threshold_frac: f64) -> GateOutcome {
+    if baseline.get("bootstrap").as_bool() == Some(true) {
+        return GateOutcome::Bootstrap;
+    }
+    let base_cells = match baseline.get("cells").as_arr() {
+        Some(cells) if !cells.is_empty() => cells,
+        _ => return GateOutcome::Bootstrap,
+    };
+    // A 600 s cell and a 120 s cell share an id but not a distribution:
+    // refuse to compare across horizon (or matrix) mismatches instead of
+    // reporting spurious regressions.
+    for key in ["matrix", "horizon_s"] {
+        let (a, b) = (report.get(key), baseline.get(key));
+        if *a != Json::Null && *b != Json::Null && a != b {
+            return GateOutcome::Incomparable {
+                reason: format!("{key} mismatch: report {a} vs baseline {b}"),
+            };
+        }
+    }
+    let baseline_of = |id: &str| -> Option<f64> {
+        base_cells
+            .iter()
+            .find(|c| c.get("id").as_str() == Some(id))
+            .and_then(|c| c.get("metrics").get("mean_e2e_ms").as_f64())
+    };
+    let mut compared = 0usize;
+    let mut regressions = Vec::new();
+    if let Some(cells) = report.get("cells").as_arr() {
+        for cell in cells {
+            let (Some(id), Some(current)) = (
+                cell.get("id").as_str(),
+                cell.get("metrics").get("mean_e2e_ms").as_f64(),
+            ) else {
+                continue;
+            };
+            let Some(base) = baseline_of(id) else { continue };
+            if base <= 0.0 {
+                continue; // nothing completed in the baseline cell
+            }
+            compared += 1;
+            let allowed = base * (1.0 + threshold_frac);
+            if current > allowed + 1e-9 {
+                regressions.push(format!(
+                    "{id}: mean_e2e_ms {current:.3} > allowed {allowed:.3} \
+                     (baseline {base:.3}, threshold {:.0}%)",
+                    threshold_frac * 100.0
+                ));
+            }
+        }
+    }
+    if !regressions.is_empty() {
+        return GateOutcome::Regressions(regressions);
+    }
+    if compared == 0 {
+        // An armed baseline that matches no current cell id means the id
+        // scheme drifted — a silent Pass here would leave CI gating
+        // nothing, forever.
+        return GateOutcome::Incomparable {
+            reason: "no cell ids in common with the baseline (cell-id scheme \
+                     changed? regenerate the baseline)"
+                .into(),
+        };
+    }
+    GateOutcome::Pass { compared }
+}
+
+/// UTC date (`YYYY-MM-DD`) from the system clock — no chrono offline.
+/// Civil-from-days conversion (Howard Hinnant's algorithm).
+pub fn utc_today() -> String {
+    let secs = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let days = (secs / 86_400) as i64;
+    let z = days + 719_468;
+    let era = z.div_euclid(146_097);
+    let doe = z.rem_euclid(146_097);
+    let yoe = (doe - doe / 1_460 + doe / 36_524 - doe / 146_096) / 365;
+    let y = yoe + era * 400;
+    let doy = doe - (365 * yoe + yoe / 4 - yoe / 100);
+    let mp = (5 * doy + 2) / 153;
+    let d = doy - (153 * mp + 2) / 5 + 1;
+    let m = if mp < 10 { mp + 3 } else { mp - 9 };
+    let y = if m <= 2 { y + 1 } else { y };
+    format!("{y:04}-{m:02}-{d:02}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn doc(cells: &[(&str, f64)]) -> Json {
+        Json::obj(vec![
+            ("schema", Json::str(SCHEMA)),
+            (
+                "cells",
+                Json::Arr(
+                    cells
+                        .iter()
+                        .map(|(id, mean)| {
+                            Json::obj(vec![
+                                ("id", Json::str(id)),
+                                (
+                                    "metrics",
+                                    Json::obj(vec![("mean_e2e_ms", Json::num(*mean))]),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    #[test]
+    fn gate_passes_within_threshold() {
+        let base = doc(&[("a", 100.0), ("b", 200.0)]);
+        let now = doc(&[("a", 120.0), ("b", 210.0)]);
+        assert_eq!(
+            regression_gate(&now, &base, 0.25),
+            GateOutcome::Pass { compared: 2 }
+        );
+    }
+
+    #[test]
+    fn gate_catches_regression() {
+        let base = doc(&[("a", 100.0)]);
+        let now = doc(&[("a", 130.0)]);
+        match regression_gate(&now, &base, 0.25) {
+            GateOutcome::Regressions(rs) => {
+                assert_eq!(rs.len(), 1);
+                assert!(rs[0].contains("a:"), "{rs:?}");
+            }
+            other => panic!("expected regression, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn gate_refuses_vacuous_comparison() {
+        // Armed baseline, but no cell id overlaps: must not silently pass.
+        let base = doc(&[("old-id", 100.0)]);
+        let now = doc(&[("renamed-id", 100.0)]);
+        assert!(matches!(
+            regression_gate(&now, &base, 0.25),
+            GateOutcome::Incomparable { .. }
+        ));
+    }
+
+    #[test]
+    fn gate_skips_new_cells_and_zero_baselines() {
+        let base = doc(&[("a", 100.0), ("zero", 0.0)]);
+        let now = doc(&[("a", 100.0), ("zero", 999.0), ("new-cell", 50.0)]);
+        assert_eq!(
+            regression_gate(&now, &base, 0.25),
+            GateOutcome::Pass { compared: 1 }
+        );
+    }
+
+    #[test]
+    fn gate_refuses_horizon_or_matrix_mismatch() {
+        let with_meta = |mean: f64, horizon: f64, matrix: &str| -> Json {
+            let mut d = doc(&[("a", mean)]);
+            if let Json::Obj(m) = &mut d {
+                m.insert("horizon_s".into(), Json::num(horizon));
+                m.insert("matrix".into(), Json::str(matrix));
+            }
+            d
+        };
+        let base = with_meta(100.0, 120.0, "default");
+        let longer = with_meta(400.0, 600.0, "default");
+        assert!(matches!(
+            regression_gate(&longer, &base, 0.25),
+            GateOutcome::Incomparable { .. }
+        ));
+        let other_matrix = with_meta(100.0, 120.0, "paper");
+        assert!(matches!(
+            regression_gate(&other_matrix, &base, 0.25),
+            GateOutcome::Incomparable { .. }
+        ));
+        // Same conditions: compared normally.
+        assert_eq!(
+            regression_gate(&with_meta(110.0, 120.0, "default"), &base, 0.25),
+            GateOutcome::Pass { compared: 1 }
+        );
+    }
+
+    #[test]
+    fn gate_bootstrap_modes() {
+        let now = doc(&[("a", 100.0)]);
+        let marked = Json::obj(vec![("bootstrap", Json::Bool(true))]);
+        assert_eq!(regression_gate(&now, &marked, 0.25), GateOutcome::Bootstrap);
+        let empty = doc(&[]);
+        assert_eq!(regression_gate(&now, &empty, 0.25), GateOutcome::Bootstrap);
+    }
+
+    #[test]
+    fn utc_today_shape() {
+        let d = utc_today();
+        assert_eq!(d.len(), 10, "{d}");
+        assert_eq!(&d[4..5], "-");
+        assert_eq!(&d[7..8], "-");
+        let year: i32 = d[..4].parse().unwrap();
+        assert!(year >= 2024, "{d}");
+    }
+
+    #[test]
+    fn round3_rounds_and_sanitizes() {
+        assert_eq!(round3(1.23456), 1.235);
+        assert_eq!(round3(f64::NAN), 0.0);
+        assert_eq!(round3(f64::INFINITY), 0.0);
+    }
+}

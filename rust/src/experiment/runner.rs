@@ -1,0 +1,309 @@
+//! Cell execution: one [`CellSpec`] in, one [`CellResult`] out, via the
+//! unified [`ServingEngine`] trait.
+//!
+//! The submit/drain loop is written once against `&mut dyn ServingEngine`;
+//! only metric extraction is engine-specific. Simulator cells report the
+//! full metric set in virtual time — bit-identical across runs and across
+//! machines. Live cells (real threads, wall clock) report request
+//! accounting only.
+
+use std::time::Instant;
+
+use crate::engine::{
+    drive_timeline, LiveEngine, LiveEngineCfg, ModelRegistry, ModelSpec, ServingEngine,
+    SimEngine, SimEngineCfg,
+};
+use crate::network::NetworkModel;
+use crate::workload::Request;
+use crate::{Cores, Ms};
+
+use super::spec::{CellSpec, EngineKind, WorkloadSource};
+
+/// Deterministic per-cell metrics. Everything here is derived from virtual
+/// time and seeded randomness for simulator cells, so two runs of the same
+/// cell produce identical values (the property the CI gate leans on).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CellMetrics {
+    pub submitted: u64,
+    pub completed: u64,
+    pub dropped: u64,
+    pub violations: u64,
+    pub violation_rate_pct: f64,
+    pub mean_e2e_ms: Ms,
+    pub e2e_p50_ms: Ms,
+    pub e2e_p99_ms: Ms,
+    pub mean_queue_ms: Ms,
+    pub mean_cores: f64,
+    pub peak_cores: Cores,
+    pub core_seconds: f64,
+    /// Scaler `decide` invocations (solver invocations, for Sponge).
+    pub scaler_calls: u64,
+}
+
+/// Wall-clock cost of running the cell — excluded from determinism
+/// comparisons and from `--stable` reports.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CellWall {
+    pub run_ms: f64,
+    /// Total wall nanoseconds spent inside scaler `decide` (≈ solver cost).
+    pub scaler_ns_total: u64,
+}
+
+/// One executed cell.
+#[derive(Debug, Clone)]
+pub struct CellResult {
+    pub id: String,
+    pub spec: CellSpec,
+    pub metrics: CellMetrics,
+    pub wall: CellWall,
+}
+
+/// Execute one cell.
+pub fn run_cell(spec: &CellSpec) -> Result<CellResult, String> {
+    // The live coordinator always serves EDF; running a FIFO cell there
+    // would measure EDF under a "fifo" label. Reject rather than mislabel.
+    if spec.engine == EngineKind::Live
+        && spec.knobs.discipline != crate::queue::QueueDiscipline::Edf
+    {
+        // run_matrix prefixes the cell id; don't repeat it here.
+        return Err(
+            "the live engine serves EDF only — FIFO cells must use the sim \
+             engine"
+                .into(),
+        );
+    }
+    let started = Instant::now();
+    let horizon_s = (spec.horizon_ms / 1_000.0).ceil() as usize;
+    let net = NetworkModel::new(spec.trace.build(horizon_s));
+    let mut requests: Vec<Request> = match &spec.workload {
+        WorkloadSource::Generated { gen, .. } => gen.generate(spec.horizon_ms, &net),
+        WorkloadSource::Replay { workload, .. } => workload.take(spec.horizon_ms),
+    };
+    // Submit in send order (ids break exact ties deterministically).
+    requests.sort_by(|a, b| {
+        a.sent_at_ms.total_cmp(&b.sent_at_ms).then_with(|| a.id.cmp(&b.id))
+    });
+
+    let mut reg = ModelRegistry::new();
+    reg.register(
+        ModelSpec::named(&spec.model)?
+            .with_policy(spec.knobs.policy)
+            .with_discipline(spec.knobs.discipline)
+            .with_solver(spec.knobs.solver),
+    )?;
+
+    match spec.engine {
+        EngineKind::Sim => run_sim_cell(spec, &reg, &requests, started),
+        EngineKind::Live => run_live_cell(spec, &reg, &requests, started),
+    }
+}
+
+/// Submit the timeline through the shared [`drive_timeline`] driver (the
+/// same loop the conformance scenario uses), then check every request
+/// settled.
+fn drive(
+    engine: &mut dyn ServingEngine,
+    model: &str,
+    requests: &[Request],
+    time_scale: f64,
+) -> Result<(), String> {
+    let timeline: Vec<(&str, &Request)> =
+        requests.iter().map(|r| (model, r)).collect();
+    let drain =
+        drive_timeline(engine, &timeline, time_scale).map_err(|e| e.to_string())?;
+    if !drain.settled() {
+        return Err(format!(
+            "engine failed to settle: {} of {} resolved",
+            drain.resolved, drain.submitted
+        ));
+    }
+    Ok(())
+}
+
+fn run_sim_cell(
+    spec: &CellSpec,
+    reg: &ModelRegistry,
+    requests: &[Request],
+    started: Instant,
+) -> Result<CellResult, String> {
+    let cfg = SimEngineCfg {
+        shared_cores: spec.knobs.shared_cores,
+        latency_noise_cv: spec.noise_cv,
+        seed: spec.seed,
+        ..Default::default()
+    };
+    let mut engine = SimEngine::new(reg, cfg).map_err(|e| e.to_string())?;
+    drive(&mut engine, &spec.model, requests, spec.time_scale)?;
+
+    let snap = engine.snapshot(&spec.model).map_err(|e| e.to_string())?;
+    let tracker = engine
+        .tracker(&spec.model)
+        .ok_or_else(|| format!("no tracker for '{}'", spec.model))?;
+    let core_ms = engine.core_ms(&spec.model).unwrap_or(0.0);
+    let span_ms = engine.now_ms().max(1.0);
+    let (scaler_calls, scaler_ns) = engine.scaler_cost(&spec.model).unwrap_or((0, 0));
+    let metrics = CellMetrics {
+        submitted: snap.submitted,
+        completed: snap.completed,
+        dropped: snap.dropped,
+        violations: snap.violations,
+        violation_rate_pct: tracker.violation_rate_pct(),
+        mean_e2e_ms: tracker.mean_e2e_ms(),
+        e2e_p50_ms: tracker.e2e_percentile(50.0).unwrap_or(0.0),
+        e2e_p99_ms: tracker.e2e_percentile(99.0).unwrap_or(0.0),
+        mean_queue_ms: tracker.mean_queue_ms(),
+        mean_cores: core_ms / span_ms,
+        peak_cores: engine.peak_cores(&spec.model).unwrap_or(0),
+        core_seconds: core_ms / 1_000.0,
+        scaler_calls,
+    };
+    Ok(CellResult {
+        id: spec.id(),
+        spec: spec.clone(),
+        metrics,
+        wall: CellWall {
+            run_ms: started.elapsed().as_secs_f64() * 1_000.0,
+            scaler_ns_total: scaler_ns,
+        },
+    })
+}
+
+fn run_live_cell(
+    spec: &CellSpec,
+    reg: &ModelRegistry,
+    requests: &[Request],
+    started: Instant,
+) -> Result<CellResult, String> {
+    let mut engine = LiveEngine::start_mock(
+        reg,
+        LiveEngineCfg { adaptation_interval_ms: 100.0, ..Default::default() },
+    )
+    .map_err(|e| e.to_string())?;
+    let driven = drive(&mut engine, &spec.model, requests, spec.time_scale);
+    let snap = engine.snapshot(&spec.model).map_err(|e| e.to_string());
+    engine.shutdown();
+    driven?;
+    let snap = snap?;
+    // Wall-clock engines report accounting only: latency/core metrics are
+    // not comparable across machines and are left at zero. That includes
+    // peak_cores — the post-drain snapshot allocation is not a peak — and
+    // note the live coordinator has no shared-core budget, so the cell
+    // id's `@Nc` coordinate is nominal for live cells.
+    let metrics = CellMetrics {
+        submitted: snap.submitted,
+        completed: snap.completed,
+        dropped: snap.dropped,
+        violations: snap.violations,
+        violation_rate_pct: if snap.resolved() == 0 {
+            0.0
+        } else {
+            snap.violations as f64 / snap.resolved() as f64 * 100.0
+        },
+        mean_e2e_ms: 0.0,
+        e2e_p50_ms: 0.0,
+        e2e_p99_ms: 0.0,
+        mean_queue_ms: 0.0,
+        mean_cores: 0.0,
+        peak_cores: 0,
+        core_seconds: 0.0,
+        scaler_calls: 0,
+    };
+    Ok(CellResult {
+        id: spec.id(),
+        spec: spec.clone(),
+        metrics,
+        wall: CellWall {
+            run_ms: started.elapsed().as_secs_f64() * 1_000.0,
+            scaler_ns_total: 0,
+        },
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::Policy;
+    use crate::experiment::spec::{PolicyKnobs, TraceSource};
+    use crate::queue::QueueDiscipline;
+    use crate::solver::SolverChoice;
+
+    fn tiny_cell(policy: Policy, discipline: QueueDiscipline) -> CellSpec {
+        CellSpec {
+            workload: WorkloadSource::paper_default(),
+            trace: TraceSource::Synthetic { seed: 11 },
+            engine: EngineKind::Sim,
+            knobs: PolicyKnobs {
+                policy,
+                discipline,
+                solver: SolverChoice::Incremental,
+                shared_cores: 48,
+            },
+            horizon_ms: 20_000.0,
+            model: "yolov5s".into(),
+            seed: 42,
+            noise_cv: 0.05,
+            time_scale: 0.02,
+        }
+    }
+
+    #[test]
+    fn sim_cell_conserves_and_reports() {
+        let r = run_cell(&tiny_cell(Policy::Sponge, QueueDiscipline::Edf)).unwrap();
+        assert_eq!(r.metrics.submitted, 400); // 20 rps × 20 s
+        assert_eq!(
+            r.metrics.submitted,
+            r.metrics.completed + r.metrics.dropped
+        );
+        assert!(r.metrics.completed > 0);
+        assert!(r.metrics.mean_cores > 0.0);
+        assert!(r.metrics.peak_cores >= 1);
+        assert!(r.metrics.scaler_calls > 0);
+        assert!(r.metrics.e2e_p99_ms >= r.metrics.e2e_p50_ms);
+        assert!(r.wall.run_ms >= 0.0);
+    }
+
+    #[test]
+    fn sim_cell_deterministic_across_runs() {
+        let cell = tiny_cell(Policy::Sponge, QueueDiscipline::Edf);
+        let a = run_cell(&cell).unwrap();
+        let b = run_cell(&cell).unwrap();
+        assert_eq!(a.metrics, b.metrics);
+        assert_eq!(a.id, b.id);
+    }
+
+    #[test]
+    fn fifo_cell_runs_and_differs_in_id() {
+        let edf = run_cell(&tiny_cell(Policy::Sponge, QueueDiscipline::Edf)).unwrap();
+        let fifo = run_cell(&tiny_cell(Policy::Sponge, QueueDiscipline::Fifo)).unwrap();
+        assert_ne!(edf.id, fifo.id);
+        assert_eq!(fifo.metrics.submitted, 400);
+    }
+
+    #[test]
+    fn unknown_model_is_an_error() {
+        let mut cell = tiny_cell(Policy::Sponge, QueueDiscipline::Edf);
+        cell.model = "gpt5".into();
+        assert!(run_cell(&cell).is_err());
+    }
+
+    #[test]
+    fn live_fifo_cell_rejected_not_mislabeled() {
+        let mut cell = tiny_cell(Policy::Sponge, QueueDiscipline::Fifo);
+        cell.engine = EngineKind::Live;
+        let err = run_cell(&cell).unwrap_err();
+        assert!(err.contains("EDF only"), "{err}");
+    }
+
+    #[test]
+    fn live_cell_reports_accounting() {
+        let mut cell = tiny_cell(Policy::Sponge, QueueDiscipline::Edf);
+        cell.engine = EngineKind::Live;
+        cell.horizon_ms = 2_000.0; // 40 requests, ~40 ms of paced wall time
+        let r = run_cell(&cell).unwrap();
+        assert_eq!(r.metrics.submitted, 40);
+        assert_eq!(
+            r.metrics.submitted,
+            r.metrics.completed + r.metrics.dropped
+        );
+    }
+}

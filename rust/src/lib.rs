@@ -32,6 +32,9 @@
 //! **Serving API (top layer)**
 //! * [`engine`] — `ServingEngine` trait, `Clock`, `ModelRegistry`,
 //!   `SimEngine` / `LiveEngine`, scenario driver
+//! * [`experiment`] — spongebench: declarative experiment matrices over
+//!   the engine (workload × trace × policy knobs), deterministic JSON
+//!   reports, and the CI perf-regression gate
 //! * [`server`] — versioned `/v1` HTTP surface over the registry
 //!   (hand-rolled HTTP/1.0; endpoint reference in the module docs)
 //! * [`coordinator`] — live pipeline: EDF queue + batcher + processor +
@@ -61,6 +64,7 @@ pub mod cluster;
 pub mod config;
 pub mod coordinator;
 pub mod engine;
+pub mod experiment;
 pub mod monitoring;
 pub mod network;
 pub mod perfmodel;

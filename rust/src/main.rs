@@ -4,6 +4,8 @@
 //! * `serve`     — start the multi-model live engine + versioned `/v1`
 //!   HTTP server (PJRT executors with `--features pjrt`, or `--executor
 //!   mock` for a model-free smoke stack).
+//! * `bench`     — run a spongebench experiment matrix, emit the JSON
+//!   report (+ markdown table), and optionally gate against a baseline.
 //! * `simulate`  — run a Fig. 4-style experiment in the discrete-event
 //!   simulator and print the result summary.
 //! * `profile`   — run a (batch, cores) profiling sweep on the sim or
@@ -39,6 +41,7 @@ USAGE: sponge <COMMAND> [OPTIONS]
 
 COMMANDS:
   serve         multi-model live serving behind the versioned /v1 HTTP API
+  bench         run a spongebench experiment matrix, emit the JSON report
   simulate      run a policy-vs-workload experiment in the simulator
   profile       (batch, cores) profiling sweep as CSV
   fit           fit the Eq. 2 latency model on a profile CSV
@@ -67,6 +70,25 @@ fn command_help(cmd: &str) -> Option<&'static str> {
 Routes: GET /v1/models | POST /v1/models/{name}/infer |
         GET /v1/models/{name}/stats | POST /infer (default model) |
         GET /metrics | GET /healthz
+"
+        }
+        "bench" => {
+            "USAGE: sponge bench [OPTIONS]
+
+  --matrix NAME     experiment matrix: default | paper   [default: default]
+  --quick           cap the horizon at 120 s (CI smoke mode)
+  --out FILE        JSON report path   [default: BENCH_<utc-date>.json]
+  --no-write        print only, write no report file
+  --stable          omit wall timings + date: two runs of the same matrix
+                    produce byte-identical output (determinism check)
+  --baseline FILE   compare against a baseline report (benches/baseline.json);
+                    exits nonzero when any cell's mean e2e latency regresses
+                    beyond the threshold. Bootstrap baselines pass with a
+                    notice. Latencies are virtual-time: machine-independent.
+  --threshold PCT   regression threshold in percent   [default: 25]
+
+The report schema (spongebench/v1) is documented in README.md and
+rust/src/experiment/report.rs.
 "
         }
         "simulate" => {
@@ -148,7 +170,10 @@ fn env_logger_lite() {
 
 /// Parse + dispatch; the return value is the process exit code.
 fn run() -> i32 {
-    let args = match Args::from_env(&["verbose", "paper-verbatim", "help"], true) {
+    let args = match Args::from_env(
+        &["verbose", "paper-verbatim", "help", "quick", "stable", "no-write"],
+        true,
+    ) {
         Ok(a) => a,
         Err(e) => {
             eprintln!("error: {e}\n{USAGE}");
@@ -176,6 +201,7 @@ fn run() -> i32 {
     }
     let result = match cmd {
         "serve" => cmd_serve(&args),
+        "bench" => cmd_bench(&args),
         "simulate" => cmd_simulate(&args),
         "profile" => cmd_profile(&args),
         "fit" => cmd_fit(&args),
@@ -243,6 +269,89 @@ fn cmd_serve(args: &Args) -> Result<()> {
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
     }
+}
+
+fn cmd_bench(args: &Args) -> Result<()> {
+    use sponge::experiment::{
+        regression_gate, run_matrix, solver_microbench, utc_today, ExperimentSpec,
+        GateOutcome,
+    };
+    use sponge::util::json::Json;
+
+    let name = args.str_or("matrix", "default");
+    let mut spec = ExperimentSpec::named(&name)
+        .ok_or_else(|| anyhow::anyhow!("unknown matrix '{name}' (default|paper)"))?;
+    if args.has("quick") {
+        spec = spec.quick();
+    }
+    let stable = args.has("stable");
+
+    let started = std::time::Instant::now();
+    let mut report = run_matrix(&spec).map_err(|e| anyhow::anyhow!(e))?;
+    if !stable {
+        report.microbench = solver_microbench();
+    }
+    print!("{}", report.markdown());
+    if !stable {
+        for b in &report.microbench {
+            println!(
+                "  {:<28} {:>12.1} ns/iter (p50 {:.1}, p99 {:.1})",
+                b.name, b.summary.mean, b.summary.p50, b.summary.p99
+            );
+        }
+        println!(
+            "\nmatrix wall time: {:.1} s ({} cells)",
+            started.elapsed().as_secs_f64(),
+            report.cells.len()
+        );
+    }
+
+    let json = report.to_json(stable);
+    if !args.has("no-write") {
+        let out = args.str_or("out", &format!("BENCH_{}.json", utc_today()));
+        std::fs::write(&out, json.pretty() + "\n")
+            .with_context(|| format!("writing {out}"))?;
+        println!("report -> {out}");
+    }
+
+    if let Some(basepath) = args.get("baseline") {
+        let text = std::fs::read_to_string(basepath)
+            .with_context(|| format!("reading baseline {basepath}"))?;
+        let baseline =
+            Json::parse(&text).map_err(|e| anyhow::anyhow!("{basepath}: {e}"))?;
+        let threshold = args.f64_or("threshold", 25.0)? / 100.0;
+        match regression_gate(&json, &baseline, threshold) {
+            GateOutcome::Bootstrap => {
+                // The arming command must reproduce *this* run's horizon,
+                // or every later gated run would be Incomparable.
+                let quick_flag = if args.has("quick") { " --quick" } else { "" };
+                println!(
+                    "baseline {basepath} is a bootstrap placeholder; perf gate \
+                     skipped.\nArm it with: sponge bench --matrix {name}\
+                     {quick_flag} --stable --out {basepath}"
+                );
+            }
+            GateOutcome::Incomparable { reason } => bail!(
+                "cannot compare against {basepath}: {reason} \
+                 (rerun with the baseline's matrix/--quick flags)"
+            ),
+            GateOutcome::Pass { compared } => println!(
+                "perf gate OK: {compared} cell(s) within {:.0}% of {basepath}",
+                threshold * 100.0
+            ),
+            GateOutcome::Regressions(rs) => {
+                for r in &rs {
+                    eprintln!("REGRESSION: {r}");
+                }
+                bail!(
+                    "{} cell(s) regressed beyond {:.0}% vs {basepath}",
+                    rs.len(),
+                    threshold * 100.0
+                );
+            }
+        }
+    }
+    Ok(())
 }
 
 fn cmd_simulate(args: &Args) -> Result<()> {

@@ -33,6 +33,10 @@ pub struct SloTracker {
     e2e: Welford,
     queue: Welford,
     processing: Welford,
+    /// Every completed request's end-to-end latency (record order) — kept
+    /// so exact percentiles (p50/p99, the paper's Table 1 metrics) can be
+    /// reported per run, not just streaming means.
+    e2e_samples: Vec<Ms>,
     /// Per-interval violation counts: (interval_start_ms, violations, total).
     timeline: Vec<(Ms, u64, u64)>,
     interval_ms: Ms,
@@ -59,6 +63,7 @@ impl SloTracker {
         }
         self.completed += 1;
         self.e2e.push(outcome.e2e_ms);
+        self.e2e_samples.push(outcome.e2e_ms);
         self.queue.push(outcome.queue_ms);
         self.processing.push(outcome.processing_ms);
         if outcome.violated {
@@ -103,6 +108,18 @@ impl SloTracker {
 
     pub fn mean_processing_ms(&self) -> Ms {
         self.processing.mean()
+    }
+
+    /// Exact percentile (`p` in [0, 100]) of completed end-to-end latency;
+    /// `None` when nothing completed. Sorts a copy — a per-report cost,
+    /// not a hot-path one.
+    pub fn e2e_percentile(&self, p: f64) -> Option<Ms> {
+        if self.e2e_samples.is_empty() {
+            return None;
+        }
+        let mut v = self.e2e_samples.clone();
+        v.sort_by(f64::total_cmp);
+        Some(crate::util::stats::percentile(&v, p))
     }
 
     /// Per-interval (start_ms, violations, total) series — Fig. 4 top.
@@ -198,6 +215,21 @@ mod tests {
     fn empty_tracker_zero_rate() {
         let t = SloTracker::new(1_000.0);
         assert_eq!(t.violation_rate_pct(), 0.0);
+        assert_eq!(t.e2e_percentile(99.0), None);
+    }
+
+    #[test]
+    fn e2e_percentiles_exact() {
+        let mut t = SloTracker::new(1_000.0);
+        for i in 1..=100 {
+            t.record(i as f64, &Outcome { e2e_ms: i as f64, ..ok(i) });
+        }
+        // Drops contribute no latency sample.
+        t.record(200.0, &Outcome { dropped: true, ..ok(101) });
+        assert!((t.e2e_percentile(0.0).unwrap() - 1.0).abs() < 1e-9);
+        assert!((t.e2e_percentile(100.0).unwrap() - 100.0).abs() < 1e-9);
+        let p50 = t.e2e_percentile(50.0).unwrap();
+        assert!((p50 - 50.5).abs() < 1e-9, "p50={p50}");
     }
 
     #[test]

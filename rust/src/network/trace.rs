@@ -25,8 +25,9 @@ pub struct TraceStats {
 impl BandwidthTrace {
     /// Build from raw samples (bytes/s) on a fixed interval.
     pub fn from_samples(interval_ms: Ms, samples: Vec<f64>) -> Result<Self, String> {
-        if interval_ms <= 0.0 {
-            return Err(format!("interval must be positive, got {interval_ms}"));
+        // `!(.. > 0.0)` also catches NaN, which `<= 0.0` would let through.
+        if !(interval_ms > 0.0) || !interval_ms.is_finite() {
+            return Err(format!("interval must be positive and finite, got {interval_ms}"));
         }
         if samples.is_empty() {
             return Err("empty trace".into());
@@ -165,7 +166,34 @@ impl BandwidthTrace {
         if samples.len() < 2 {
             return Err("trace needs >= 2 samples".into());
         }
-        let interval_ms = (times[1] - times[0]) * 1_000.0;
+        if let Some(i) = times.iter().position(|t| !t.is_finite()) {
+            return Err(format!("non-finite time at sample {i}"));
+        }
+        if let Some(i) = times.windows(2).position(|w| w[1] <= w[0]) {
+            return Err(format!(
+                "times must be strictly increasing (sample {} -> {})",
+                i,
+                i + 1
+            ));
+        }
+        // The format is a fixed-interval series; a gap (dropped logger
+        // sample) would otherwise be silently compressed, shifting every
+        // later sample in experiment time. Compare against the cumulative
+        // expected time with a magnitude-scaled tolerance so large
+        // absolute timestamps (epoch seconds) with sub-second intervals
+        // don't trip on f64 representation error; a real gap is ≥ one
+        // whole interval and is always caught.
+        let dt = times[1] - times[0];
+        for (i, &t) in times.iter().enumerate() {
+            let expected = times[0] + i as f64 * dt;
+            if (t - expected).abs() > dt * 0.01 + t.abs() * 1e-9 {
+                return Err(format!(
+                    "non-uniform sample spacing at sample {i} \
+                     (expected t={expected} s, got {t} s); fill gaps before import"
+                ));
+            }
+        }
+        let interval_ms = dt * 1_000.0;
         BandwidthTrace::from_samples(interval_ms, samples)
     }
 }

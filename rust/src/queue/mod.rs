@@ -6,6 +6,11 @@
 //! The batch inherits the *minimum* remaining budget among its members
 //! (paper §3.3: "we use the smallest SLO in the current batch ... because we
 //! do not intend to violate any remaining SLO requests").
+//!
+//! The queue also supports plain FIFO service ([`QueueDiscipline::Fifo`])
+//! as the deadline-oblivious ablation the experiment matrix compares EDF
+//! against — same batching, same drop accounting, arrival order instead of
+//! deadline order.
 
 mod admission;
 
@@ -16,39 +21,72 @@ use std::collections::BinaryHeap;
 use crate::workload::Request;
 use crate::{BatchSize, Ms};
 
-/// Heap entry ordered by earliest absolute deadline, ties broken by id for
-/// determinism (BinaryHeap is a max-heap, so orderings are reversed).
-#[derive(Debug, Clone)]
-struct EdfEntry(Request);
+/// Service discipline: the paper's EDF reordering, or arrival-order FIFO
+/// (the ablation showing what deadline awareness buys under overload).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum QueueDiscipline {
+    #[default]
+    Edf,
+    Fifo,
+}
 
-impl PartialEq for EdfEntry {
-    fn eq(&self, other: &Self) -> bool {
-        self.0.id == other.0.id
+impl QueueDiscipline {
+    pub fn name(&self) -> &'static str {
+        match self {
+            QueueDiscipline::Edf => "edf",
+            QueueDiscipline::Fifo => "fifo",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<QueueDiscipline, String> {
+        match s {
+            "edf" => Ok(QueueDiscipline::Edf),
+            "fifo" => Ok(QueueDiscipline::Fifo),
+            other => Err(format!("unknown queue discipline '{other}' (edf|fifo)")),
+        }
     }
 }
 
-impl Eq for EdfEntry {}
+/// Heap entry ordered by a precomputed priority key — absolute deadline
+/// under EDF, arrival sequence under FIFO — ties broken by id for
+/// determinism (BinaryHeap is a max-heap, so orderings are reversed).
+#[derive(Debug, Clone)]
+struct QueueEntry {
+    key: f64,
+    req: Request,
+}
 
-impl PartialOrd for EdfEntry {
+impl PartialEq for QueueEntry {
+    fn eq(&self, other: &Self) -> bool {
+        self.req.id == other.req.id
+    }
+}
+
+impl Eq for QueueEntry {}
+
+impl PartialOrd for QueueEntry {
     fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
         Some(self.cmp(other))
     }
 }
 
-impl Ord for EdfEntry {
+impl Ord for QueueEntry {
     fn cmp(&self, other: &Self) -> std::cmp::Ordering {
         other
-            .0
-            .deadline_ms()
-            .total_cmp(&self.0.deadline_ms())
-            .then_with(|| other.0.id.cmp(&self.0.id))
+            .key
+            .total_cmp(&self.key)
+            .then_with(|| other.req.id.cmp(&self.req.id))
     }
 }
 
-/// EDF priority queue with batch extraction and drop accounting.
+/// EDF (or FIFO-ablation) priority queue with batch extraction and drop
+/// accounting.
 #[derive(Debug, Default)]
 pub struct EdfQueue {
-    heap: BinaryHeap<EdfEntry>,
+    heap: BinaryHeap<QueueEntry>,
+    discipline: QueueDiscipline,
+    /// Arrival sequence counter — the FIFO priority key.
+    seq: u64,
     enqueued: u64,
     dequeued: u64,
     dropped: u64,
@@ -108,9 +146,25 @@ impl EdfQueue {
         EdfQueue::default()
     }
 
+    /// A queue serving in the given discipline (EDF is the default).
+    pub fn with_discipline(discipline: QueueDiscipline) -> EdfQueue {
+        EdfQueue { discipline, ..EdfQueue::default() }
+    }
+
+    pub fn discipline(&self) -> QueueDiscipline {
+        self.discipline
+    }
+
     pub fn push(&mut self, r: Request) {
         self.enqueued += 1;
-        self.heap.push(EdfEntry(r));
+        let key = match self.discipline {
+            QueueDiscipline::Edf => r.deadline_ms(),
+            QueueDiscipline::Fifo => {
+                self.seq += 1;
+                self.seq as f64
+            }
+        };
+        self.heap.push(QueueEntry { key, req: r });
     }
 
     pub fn len(&self) -> usize {
@@ -121,14 +175,15 @@ impl EdfQueue {
         self.heap.is_empty()
     }
 
-    /// Peek at the most urgent request.
+    /// Peek at the highest-priority request (most urgent under EDF,
+    /// oldest under FIFO).
     pub fn peek(&self) -> Option<&Request> {
-        self.heap.peek().map(|e| &e.0)
+        self.heap.peek().map(|e| &e.req)
     }
 
-    /// Pop the most urgent request.
+    /// Pop the highest-priority request.
     pub fn pop(&mut self) -> Option<Request> {
-        let r = self.heap.pop().map(|e| e.0);
+        let r = self.heap.pop().map(|e| e.req);
         if r.is_some() {
             self.dequeued += 1;
         }
@@ -154,15 +209,18 @@ impl EdfQueue {
         Some(Batch { requests })
     }
 
-    /// Drop every request whose deadline already passed at `now`, returning
-    /// them (the caller records the violations). Requests that cannot
-    /// possibly finish are not worth server time — matches FA2's and
-    /// Sponge's drop accounting.
+    /// Drop every expired request reachable from the queue head at `now`,
+    /// returning them (the caller records the violations). Requests that
+    /// cannot possibly finish are not worth server time — matches FA2's and
+    /// Sponge's drop accounting. Under EDF the head scan is exhaustive
+    /// (expired requests sort first); under FIFO only expired requests at
+    /// the head are dropped — a deadline-oblivious server notices staleness
+    /// only at service time, which is exactly the ablation's point.
     pub fn drop_expired(&mut self, now: Ms) -> Vec<Request> {
         let mut dropped = Vec::new();
         while let Some(head) = self.heap.peek() {
-            if head.0.deadline_ms() <= now {
-                dropped.push(self.heap.pop().unwrap().0);
+            if head.req.deadline_ms() <= now {
+                dropped.push(self.heap.pop().unwrap().req);
             } else {
                 break;
             }
@@ -175,7 +233,7 @@ impl EdfQueue {
     /// order — the solver's per-request constraint inputs.
     pub fn remaining_budgets(&self, now: Ms) -> Vec<Ms> {
         let mut deadlines: Vec<Ms> =
-            self.heap.iter().map(|e| e.0.deadline_ms() - now).collect();
+            self.heap.iter().map(|e| e.req.deadline_ms() - now).collect();
         // Stable sort deliberately: the heap's backing array is already
         // partially ordered, which timsort exploits — measured ~25 %
         // faster than sort_unstable's pdqsort at 50 k entries (§Perf
@@ -275,6 +333,38 @@ mod tests {
         q.push(req(1, 0.0, 300.0));
         q.push(req(2, 0.0, 600.0));
         assert_eq!(q.remaining_budgets(100.0), vec![200.0, 500.0, 800.0]);
+    }
+
+    #[test]
+    fn fifo_discipline_pops_in_arrival_order() {
+        let mut q = EdfQueue::with_discipline(QueueDiscipline::Fifo);
+        assert_eq!(q.discipline(), QueueDiscipline::Fifo);
+        q.push(req(1, 0.0, 900.0)); // relaxed deadline, arrived first
+        q.push(req(2, 100.0, 300.0)); // most urgent, arrived second
+        q.push(req(3, 0.0, 600.0));
+        assert_eq!(q.pop().unwrap().id, 1);
+        assert_eq!(q.pop().unwrap().id, 2);
+        assert_eq!(q.pop().unwrap().id, 3);
+    }
+
+    #[test]
+    fn fifo_drop_expired_only_from_head() {
+        let mut q = EdfQueue::with_discipline(QueueDiscipline::Fifo);
+        q.push(req(0, 0.0, 100.0)); // head, expired at 250
+        q.push(req(1, 0.0, 500.0)); // second, alive — blocks the scan
+        q.push(req(2, 0.0, 200.0)); // expired but behind a live request
+        let dropped = q.drop_expired(250.0);
+        assert_eq!(dropped.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0]);
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn discipline_default_and_parse() {
+        assert_eq!(QueueDiscipline::default(), QueueDiscipline::Edf);
+        assert_eq!(QueueDiscipline::parse("edf").unwrap(), QueueDiscipline::Edf);
+        assert_eq!(QueueDiscipline::parse("fifo").unwrap(), QueueDiscipline::Fifo);
+        assert!(QueueDiscipline::parse("lifo").is_err());
+        assert_eq!(QueueDiscipline::Fifo.name(), "fifo");
     }
 
     #[test]

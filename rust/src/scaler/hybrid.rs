@@ -16,7 +16,7 @@
 use super::{Action, Autoscaler, ScalerObs};
 use crate::cluster::Cluster;
 use crate::perfmodel::LatencyModel;
-use crate::solver::{IncrementalSolver, IpSolver, SolverInput, SolverLimits};
+use crate::solver::{SolverChoice, SolverInput, SolverLimits};
 use crate::{BatchSize, Cores, Ms};
 
 /// Vertical-first, horizontal-when-saturated autoscaler.
@@ -25,7 +25,7 @@ pub struct HybridScaler {
     pub max_instances: u32,
     pub lambda_headroom: f64,
     pub latency_margin: f64,
-    solver: IncrementalSolver,
+    solver: SolverChoice,
 }
 
 impl HybridScaler {
@@ -36,8 +36,15 @@ impl HybridScaler {
             max_instances,
             lambda_headroom: 1.15,
             latency_margin: 1.1,
-            solver: IncrementalSolver,
+            solver: SolverChoice::Incremental,
         }
+    }
+
+    /// Select the IP-solver implementation (the experiment matrix's solver
+    /// axis — Hybrid solves the IP once per candidate fleet size).
+    pub fn with_solver(mut self, solver: SolverChoice) -> HybridScaler {
+        self.solver = solver;
+        self
     }
 
     /// Find the smallest fleet (k, c, b) satisfying all constraints.

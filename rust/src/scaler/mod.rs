@@ -20,7 +20,7 @@ pub use variant::{Variant, VariantScaler};
 
 use crate::cluster::Cluster;
 use crate::perfmodel::LatencyModel;
-use crate::solver::{drain_feasible, throughput_ok, IncrementalSolver, IpSolver, SolverInput, SolverLimits};
+use crate::solver::{drain_feasible, throughput_ok, SolverChoice, SolverInput, SolverLimits};
 use crate::{BatchSize, Cores, Ms};
 
 /// Scaler observation at an adaptation tick.
@@ -77,7 +77,7 @@ pub trait Autoscaler: Send {
 /// The paper's scaler: solve the IP each interval, resize in place.
 pub struct SpongeScaler {
     pub limits: SolverLimits,
-    solver: IncrementalSolver,
+    solver: SolverChoice,
     /// Use Algorithm 1's uniform `SLO − cl_max` budget instead of
     /// per-request budgets (paper-verbatim mode; default off).
     pub uniform_budget: bool,
@@ -96,7 +96,7 @@ impl SpongeScaler {
     pub fn new(limits: SolverLimits) -> SpongeScaler {
         SpongeScaler {
             limits,
-            solver: IncrementalSolver,
+            solver: SolverChoice::Incremental,
             uniform_budget: false,
             lambda_headroom: 1.15,
             latency_margin: 1.1,
@@ -112,6 +112,13 @@ impl SpongeScaler {
     pub fn without_margins(mut self) -> SpongeScaler {
         self.lambda_headroom = 1.0;
         self.latency_margin = 1.0;
+        self
+    }
+
+    /// Select the IP-solver implementation (the experiment matrix's solver
+    /// axis; answers are identical, cost is not).
+    pub fn with_solver(mut self, solver: SolverChoice) -> SpongeScaler {
+        self.solver = solver;
         self
     }
 

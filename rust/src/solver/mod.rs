@@ -174,6 +174,49 @@ fn solution(
     }
 }
 
+/// Value-level selection between the two solver implementations — the
+/// experiment matrix's solver axis. Both return identical solutions
+/// (property-tested); they differ only in cost, which is what the axis
+/// measures.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SolverChoice {
+    BruteForce,
+    #[default]
+    Incremental,
+}
+
+impl SolverChoice {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SolverChoice::BruteForce => "brute-force",
+            SolverChoice::Incremental => "incremental",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<SolverChoice, String> {
+        match s {
+            "brute-force" | "brute" => Ok(SolverChoice::BruteForce),
+            "incremental" => Ok(SolverChoice::Incremental),
+            other => Err(format!(
+                "unknown solver '{other}' (brute-force|incremental)"
+            )),
+        }
+    }
+
+    /// Dispatch to the chosen implementation.
+    pub fn solve(
+        &self,
+        model: &LatencyModel,
+        input: &SolverInput,
+        limits: SolverLimits,
+    ) -> Option<Solution> {
+        match self {
+            SolverChoice::BruteForce => BruteForceSolver.solve(model, input, limits),
+            SolverChoice::Incremental => IncrementalSolver.solve(model, input, limits),
+        }
+    }
+}
+
 /// Algorithm 1, verbatim loop structure.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct BruteForceSolver;

@@ -24,7 +24,8 @@ impl BenchResult {
         self.summary.mean
     }
 
-    fn to_json(&self) -> Json {
+    /// JSON form (used by [`Reporter`] and the spongebench report).
+    pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("name", Json::str(&self.name)),
             ("iters", Json::num(self.iters as f64)),

@@ -53,7 +53,15 @@ pub fn from_csv(text: &str) -> Result<Vec<Request>, String> {
         let comm_latency_ms = parse(2, "comm_latency_ms")?;
         let slo_ms = parse(3, "slo_ms")?;
         let payload_bytes = parse(4, "payload_bytes")?;
-        if slo_ms <= 0.0 || comm_latency_ms < 0.0 || sent_at_ms < 0.0 {
+        // f64::parse accepts "NaN"/"inf", and NaN slips through `<=`
+        // comparisons, so finiteness is checked explicitly.
+        if [sent_at_ms, comm_latency_ms, slo_ms, payload_bytes]
+            .iter()
+            .any(|v| !v.is_finite())
+        {
+            return Err(format!("line {}: non-finite values", lineno + 1));
+        }
+        if slo_ms <= 0.0 || comm_latency_ms < 0.0 || sent_at_ms < 0.0 || payload_bytes < 0.0 {
             return Err(format!("line {}: non-physical values", lineno + 1));
         }
         out.push(Request {

@@ -47,7 +47,7 @@ fn unknown_subcommand_prints_synopsis_and_exits_2() {
 
 #[test]
 fn help_works_for_every_subcommand() {
-    for cmd in ["serve", "simulate", "profile", "fit", "solve", "trace-gen", "workload-gen"] {
+    for cmd in ["serve", "bench", "simulate", "profile", "fit", "solve", "trace-gen", "workload-gen"] {
         let (code, stdout, stderr) = run_code(&[cmd, "--help"]);
         assert_eq!(code, Some(0), "{cmd}: {stderr}");
         assert!(
@@ -123,6 +123,43 @@ fn simulate_rejects_unknown_policy() {
     let (ok, _, stderr) = run(&["simulate", "--policy", "zeus"]);
     assert!(!ok);
     assert!(stderr.contains("unknown policy"), "{stderr}");
+}
+
+#[test]
+fn bench_rejects_unknown_matrix() {
+    let (code, _, stderr) = run_code(&["bench", "--matrix", "zeus", "--no-write"]);
+    assert_eq!(code, Some(1), "{stderr}");
+    assert!(stderr.contains("unknown matrix 'zeus'"), "{stderr}");
+}
+
+#[test]
+fn bench_quick_stable_emits_report_and_gates_bootstrap_baseline() {
+    let dir = std::env::temp_dir().join(format!("sponge_cli_bench_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let out = dir.join("report.json");
+    let baseline = dir.join("baseline.json");
+    std::fs::write(&baseline, "{\"schema\":\"spongebench/v1\",\"bootstrap\":true}")
+        .unwrap();
+    let (ok, stdout, stderr) = run(&[
+        "bench",
+        "--matrix",
+        "default",
+        "--quick",
+        "--stable",
+        "--out",
+        out.to_str().unwrap(),
+        "--baseline",
+        baseline.to_str().unwrap(),
+    ]);
+    assert!(ok, "{stderr}");
+    assert!(stdout.contains("spongebench `default` matrix"), "{stdout}");
+    assert!(stdout.contains("perf gate skipped"), "{stdout}");
+    let text = std::fs::read_to_string(&out).unwrap();
+    let doc = sponge::util::json::Json::parse(&text).unwrap();
+    assert_eq!(doc.get("schema").as_str(), Some("spongebench/v1"));
+    assert_eq!(doc.get("cells").as_arr().map(|c| c.len()), Some(16));
+    // Stable mode: no wall-clock sections.
+    assert!(!text.contains("\"wall\""), "stable report leaked timings");
 }
 
 #[test]

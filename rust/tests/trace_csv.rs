@@ -1,0 +1,210 @@
+//! CSV edge cases for the two trace parsers — `workload::replay::from_csv`
+//! (request traces) and `network::trace::BandwidthTrace::from_csv`
+//! (bandwidth traces) — plus replay→record round-trip property tests.
+//!
+//! Rust's `f64::parse` happily accepts "NaN"/"inf", and NaN defeats `<=`
+//! validation, so non-finite rejection is load-bearing for everything
+//! downstream (deadlines, solver budgets, virtual-time event ordering).
+
+use sponge::network::{BandwidthTrace, NetworkModel};
+use sponge::prop_assert;
+use sponge::util::proptest::run_prop;
+use sponge::workload::{
+    requests_from_csv, requests_to_csv, ReplayWorkload, WorkloadGen,
+};
+
+// ------------------------------------------------------ request traces --
+
+const REQ_HEADER: &str = "id,sent_at_ms,comm_latency_ms,slo_ms,payload_bytes\n";
+
+#[test]
+fn request_csv_trailing_newlines_and_blank_lines_ok() {
+    let text = format!("{REQ_HEADER}0,0.0,10.0,1000,200000\n\n1,50.0,12.0,1000,200000\n\n\n");
+    let reqs = requests_from_csv(&text).unwrap();
+    assert_eq!(reqs.len(), 2);
+    assert_eq!(reqs[0].id, 0);
+    assert_eq!(reqs[1].arrived_at_ms, 62.0);
+}
+
+#[test]
+fn request_csv_header_only_is_empty_error() {
+    assert!(requests_from_csv(REQ_HEADER).is_err());
+    assert!(requests_from_csv("").is_err());
+    assert!(requests_from_csv("\n\n").is_err());
+}
+
+#[test]
+fn request_csv_rejects_non_finite_values() {
+    for bad in [
+        "0,NaN,10,1000,200000\n",
+        "0,0,inf,1000,200000\n",
+        "0,0,10,nan,200000\n",
+        "0,0,10,1000,-inf\n",
+        "0,0,10,Infinity,200000\n",
+    ] {
+        let text = format!("{REQ_HEADER}{bad}");
+        assert!(requests_from_csv(&text).is_err(), "accepted: {bad:?}");
+    }
+}
+
+#[test]
+fn request_csv_rejects_mismatched_field_counts() {
+    for bad in ["0,1,2,3\n", "0,1,2,3,4,5\n", "0\n", "0,1,2,3,4,extra,more\n"] {
+        let text = format!("{REQ_HEADER}{bad}");
+        assert!(requests_from_csv(&text).is_err(), "accepted: {bad:?}");
+    }
+}
+
+#[test]
+fn request_csv_rejects_non_physical_values() {
+    for bad in [
+        "0,-1,10,1000,200000\n",  // negative send time
+        "0,0,-10,1000,200000\n",  // negative comm latency
+        "0,0,10,0,200000\n",      // zero SLO
+        "0,0,10,1000,-5\n",       // negative payload
+        "x,0,10,1000,200000\n",   // non-integer id
+    ] {
+        let text = format!("{REQ_HEADER}{bad}");
+        assert!(requests_from_csv(&text).is_err(), "accepted: {bad:?}");
+    }
+}
+
+#[test]
+fn prop_request_roundtrip_record_then_replay() {
+    run_prop("request-csv-roundtrip", 25, |g| {
+        let gen = WorkloadGen {
+            rate_rps: g.f64(5.0, 60.0),
+            slo_ms: g.f64(200.0, 2_000.0),
+            seed: g.rng.next_u64(),
+            ..WorkloadGen::paper_default()
+        };
+        let net = NetworkModel::new(
+            BandwidthTrace::from_samples(1_000.0, vec![g.f64(0.5e6, 7.0e6); 8])
+                .map_err(|e| e.to_string())?,
+        );
+        let original = gen.generate(g.f64(2_000.0, 8_000.0), &net);
+        let csv = requests_to_csv(&original);
+        let back = requests_from_csv(&csv).map_err(|e| e.to_string())?;
+        prop_assert!(
+            back.len() == original.len(),
+            "lost requests: {} -> {}",
+            original.len(),
+            back.len()
+        );
+        for (a, b) in original.iter().zip(&back) {
+            prop_assert!(a.id == b.id, "id changed: {} -> {}", a.id, b.id);
+            // to_csv rounds to 3 decimals (ms precision: 1 µs).
+            prop_assert!(
+                (a.sent_at_ms - b.sent_at_ms).abs() < 1e-3,
+                "sent_at drifted: {} -> {}",
+                a.sent_at_ms,
+                b.sent_at_ms
+            );
+            prop_assert!(
+                (a.comm_latency_ms - b.comm_latency_ms).abs() < 1e-3,
+                "comm drifted"
+            );
+            prop_assert!((a.slo_ms - b.slo_ms).abs() < 1e-3, "slo drifted");
+            prop_assert!(
+                (a.arrived_at_ms - b.arrived_at_ms).abs() < 2e-3,
+                "arrival inconsistent with sent+comm"
+            );
+        }
+        // A second round trip is exact (the format is a fixed point).
+        let csv2 = requests_to_csv(&back);
+        prop_assert!(csv == csv2, "second roundtrip not a fixed point");
+        Ok(())
+    });
+}
+
+#[test]
+fn replay_workload_from_csv_matches_free_function() {
+    let net = NetworkModel::new(
+        BandwidthTrace::from_samples(1_000.0, vec![2.0e6; 4]).unwrap(),
+    );
+    let reqs = WorkloadGen::paper_default().generate(3_000.0, &net);
+    let csv = requests_to_csv(&reqs);
+    let replay = ReplayWorkload::from_csv(&csv).unwrap();
+    assert_eq!(replay.len(), reqs.len());
+    assert_eq!(replay.take(f64::INFINITY).len(), requests_from_csv(&csv).unwrap().len());
+}
+
+// ---------------------------------------------------- bandwidth traces --
+
+const BW_HEADER: &str = "time_s,bytes_per_s\n";
+
+#[test]
+fn bandwidth_csv_trailing_newline_ok() {
+    let text = format!("{BW_HEADER}0,1000000\n1,2000000\n2,1500000\n\n");
+    let t = BandwidthTrace::from_csv(&text).unwrap();
+    assert_eq!(t.samples().len(), 3);
+    assert_eq!(t.interval_ms(), 1_000.0);
+}
+
+#[test]
+fn bandwidth_csv_header_only_rejected() {
+    assert!(BandwidthTrace::from_csv(BW_HEADER).is_err());
+    assert!(BandwidthTrace::from_csv("").is_err());
+    // One sample is not enough to derive an interval either.
+    assert!(BandwidthTrace::from_csv(&format!("{BW_HEADER}0,1000000\n")).is_err());
+}
+
+#[test]
+fn bandwidth_csv_rejects_non_finite_samples() {
+    for bad in [
+        "0,NaN\n1,2000000\n",
+        "0,1000000\n1,inf\n",
+        "NaN,1000000\n1,2000000\n",  // non-finite *time* would poison the interval
+        "0,1000000\ninf,2000000\n",
+    ] {
+        let text = format!("{BW_HEADER}{bad}");
+        assert!(BandwidthTrace::from_csv(&text).is_err(), "accepted: {bad:?}");
+    }
+}
+
+#[test]
+fn bandwidth_csv_rejects_non_positive_samples_and_bad_times() {
+    for bad in [
+        "0,0\n1,2000000\n",          // zero bandwidth
+        "0,-5\n1,2000000\n",         // negative bandwidth
+        "1,1000000\n1,2000000\n",    // non-increasing times
+        "2,1000000\n1,2000000\n",    // decreasing times
+        "0,1000000\n1,2000000\n5,1500000\n", // gap: non-uniform spacing
+    ] {
+        let text = format!("{BW_HEADER}{bad}");
+        assert!(BandwidthTrace::from_csv(&text).is_err(), "accepted: {bad:?}");
+    }
+}
+
+#[test]
+fn bandwidth_csv_rejects_mismatched_field_counts() {
+    for bad in ["0\n1\n", "0,1000000,extra\n1,2000000,extra\n"] {
+        let text = format!("{BW_HEADER}{bad}");
+        assert!(BandwidthTrace::from_csv(&text).is_err(), "accepted: {bad:?}");
+    }
+}
+
+#[test]
+fn prop_bandwidth_roundtrip() {
+    run_prop("bandwidth-csv-roundtrip", 25, |g| {
+        let seconds = g.usize(2, 120);
+        let t = BandwidthTrace::synthetic_4g(seconds, 1_000.0, g.rng.next_u64());
+        let back = BandwidthTrace::from_csv(&t.to_csv()).map_err(|e| e.to_string())?;
+        prop_assert!(
+            back.samples().len() == seconds,
+            "length changed: {} -> {}",
+            seconds,
+            back.samples().len()
+        );
+        prop_assert!(
+            (back.interval_ms() - 1_000.0).abs() < 1e-9,
+            "interval drifted: {}",
+            back.interval_ms()
+        );
+        for (a, b) in t.samples().iter().zip(back.samples()) {
+            // to_csv rounds to whole bytes/s.
+            prop_assert!((a - b).abs() <= 0.5 + 1e-9, "sample drifted: {a} vs {b}");
+        }
+        Ok(())
+    });
+}

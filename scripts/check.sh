@@ -17,6 +17,8 @@ step() {
 }
 
 step cargo build --release
+step cargo build --release --examples
+step cargo check --no-default-features
 step cargo test -q
 
 if cargo fmt --version >/dev/null 2>&1; then
