@@ -39,6 +39,7 @@ fn main() -> anyhow::Result<()> {
         disciplines: vec![QueueDiscipline::Edf],
         solvers: vec![SolverChoice::Incremental],
         budgets: vec![48],
+        replica_budgets: vec![1],
         horizon_ms: horizon_s as f64 * 1_000.0,
         model: "yolov5s".into(),
         seed: 42,

@@ -224,6 +224,19 @@ impl CoordinatorStats {
     }
 }
 
+/// Least-loaded replica of a coordinator fleet (queue depth first — the
+/// signal a violation actually hinges on — then replica order as a
+/// stable tie-break). The one dispatch rule shared by
+/// [`crate::engine::LiveEngine`] and the HTTP gateway
+/// ([`crate::server::Gateway`]), so the two paths cannot diverge.
+pub fn least_loaded(replicas: &[Arc<Coordinator>]) -> Option<&Arc<Coordinator>> {
+    replicas
+        .iter()
+        .enumerate()
+        .min_by_key(|(i, c)| (c.stats().queue_len, *i))
+        .map(|(_, c)| c)
+}
+
 /// The live serving coordinator. Spawns processor + scaler threads on
 /// [`Coordinator::start`]; submit requests with [`Coordinator::submit`].
 pub struct Coordinator {

@@ -49,7 +49,9 @@ impl Default for LiveEngineCfg {
 
 struct LiveModel {
     spec: ModelSpec,
-    coordinator: Arc<Coordinator>,
+    /// One coordinator per replica (`spec.replicas`); the dispatcher
+    /// routes each request to the least-loaded one.
+    replicas: Vec<Arc<Coordinator>>,
     image_len: usize,
     /// Outstanding responses, submission order.
     pending: VecDeque<(u64, mpsc::Receiver<LiveResponse>)>,
@@ -97,21 +99,28 @@ impl LiveEngine {
         }
         let mut models = Vec::new();
         for spec in registry.iter() {
-            let executor = make_executor(spec)?;
-            let image_len = executor.image_len();
-            let coordinator = Arc::new(Coordinator::start(
-                CoordinatorCfg {
-                    limits: spec.limits,
-                    adaptation_interval_ms: cfg.adaptation_interval_ms,
-                    model: spec.latency,
-                    drop_expired: cfg.drop_expired,
-                    online_calibration: cfg.online_calibration,
-                },
-                executor,
-            ));
+            // One coordinator (EDF queue + batcher + scaler threads +
+            // executor) per replica; the executor factory runs once per
+            // replica, since executors are single-pipeline resources.
+            let mut replicas = Vec::new();
+            let mut image_len = 0;
+            for _ in 0..spec.replicas.max(1) {
+                let executor = make_executor(spec)?;
+                image_len = executor.image_len();
+                replicas.push(Arc::new(Coordinator::start(
+                    CoordinatorCfg {
+                        limits: spec.limits,
+                        adaptation_interval_ms: cfg.adaptation_interval_ms,
+                        model: spec.latency,
+                        drop_expired: cfg.drop_expired,
+                        online_calibration: cfg.online_calibration,
+                    },
+                    executor,
+                )));
+            }
             models.push(LiveModel {
                 spec: spec.clone(),
-                coordinator,
+                replicas,
                 image_len,
                 pending: VecDeque::new(),
                 submitted: 0,
@@ -132,18 +141,18 @@ impl LiveEngine {
         Self::start_with(registry, cfg, |_| Ok(Arc::new(MockExecutor::default())))
     }
 
-    /// The coordinator serving `model` (the HTTP gateway shares these).
+    /// The first (or only) coordinator serving `model`.
     pub fn coordinator(&self, model: &str) -> Option<Arc<Coordinator>> {
         self.model_idx(model)
-            .map(|i| Arc::clone(&self.models[i].coordinator))
+            .and_then(|i| self.models[i].replicas.first().map(Arc::clone))
     }
 
-    /// (name, coordinator) pairs in registration order — the input to
-    /// [`crate::server::Gateway::from_parts`].
-    pub fn coordinators(&self) -> Vec<(String, Arc<Coordinator>)> {
+    /// (name, replica coordinators) pairs in registration order — the
+    /// input to [`crate::server::Gateway::from_parts`].
+    pub fn coordinators(&self) -> Vec<(String, Vec<Arc<Coordinator>>)> {
         self.models
             .iter()
-            .map(|m| (m.spec.name.clone(), Arc::clone(&m.coordinator)))
+            .map(|m| (m.spec.name.clone(), m.replicas.clone()))
             .collect()
     }
 
@@ -153,7 +162,9 @@ impl LiveEngine {
     pub fn shutdown(mut self) {
         self.drain();
         for m in self.models.drain(..) {
-            m.coordinator.shutdown();
+            for c in m.replicas {
+                c.shutdown();
+            }
         }
     }
 
@@ -221,7 +232,9 @@ impl ServingEngine for LiveEngine {
         let mut image = req.payload;
         image.resize(m.image_len, 0.0);
         let (tx, rx) = mpsc::channel();
-        m.coordinator.submit(LiveRequest {
+        let replica = crate::coordinator::least_loaded(&m.replicas)
+            .expect("every model has >= 1 replica");
+        replica.submit(LiveRequest {
             id: 0, // coordinator assigns its own internal id
             image,
             slo_ms: req.slo_ms,
@@ -274,15 +287,25 @@ impl ServingEngine for LiveEngine {
     fn snapshot(&self, model: &str) -> Result<ModelSnapshot, EngineError> {
         let idx = self.model_idx(model).ok_or_else(|| self.unknown(model))?;
         let m = &self.models[idx];
-        let stats = m.coordinator.stats();
+        // Aggregate the replica fleet: queue and cores sum, batch is the
+        // largest decision in force.
+        let mut queue_len = 0;
+        let mut cores = 0;
+        let mut batch = 0;
+        for c in &m.replicas {
+            let stats = c.stats();
+            queue_len += stats.queue_len;
+            cores += stats.cores;
+            batch = batch.max(stats.batch);
+        }
         Ok(ModelSnapshot {
             submitted: m.submitted,
             completed: m.completed,
             dropped: m.dropped,
             violations: m.violations,
-            queue_len: stats.queue_len,
-            cores: stats.cores,
-            batch: stats.batch,
+            queue_len,
+            cores,
+            batch,
         })
     }
 }
@@ -331,6 +354,33 @@ mod tests {
             e.submit("nope", EngineRequest::new(1_000.0, 0.0)),
             Err(EngineError::UnknownModel { .. })
         ));
+        e.shutdown();
+    }
+
+    #[test]
+    fn replicated_model_serves_and_conserves() {
+        let mut reg = ModelRegistry::new();
+        reg.register(ModelSpec::named("resnet").unwrap().with_replicas(3)).unwrap();
+        let e_cfg =
+            LiveEngineCfg { adaptation_interval_ms: 100.0, ..Default::default() };
+        let mut e = LiveEngine::start_mock(&reg, e_cfg).unwrap();
+        assert_eq!(e.coordinators()[0].1.len(), 3);
+        for _ in 0..30 {
+            e.submit("resnet", EngineRequest::new(5_000.0, 0.0)).unwrap();
+        }
+        let report = e.drain();
+        assert!(report.settled(), "{report:?}");
+        let s = e.snapshot("resnet").unwrap();
+        assert_eq!(s.submitted, 30);
+        assert_eq!(s.resolved(), 30);
+        // Every replica saw some of the traffic (the mock executor is
+        // slow enough that queues form and the dispatcher spreads).
+        let received: Vec<u64> = e.coordinators()[0]
+            .1
+            .iter()
+            .map(|c| c.stats().received)
+            .collect();
+        assert_eq!(received.iter().sum::<u64>(), 30, "{received:?}");
         e.shutdown();
     }
 

@@ -20,6 +20,10 @@
 //! * [`ModelRegistry`] / [`ModelSpec`] — named model variants served from
 //!   one process, each with its own EDF queue, fitted latency model, and
 //!   autoscaler, contending for a shared core budget.
+//! * [`ReplicaSetEngine`] — per-model fleets of [`SimEngine`] replicas
+//!   behind a deterministic least-loaded/EDF-aware dispatcher with a
+//!   two-level (vertical-within-replica, horizontal-across-replicas)
+//!   scaling reconciler ([`replicaset`]).
 //! * [`scenario`] — a clock-agnostic scenario driver: the same two-model
 //!   dynamic-SLO workload replays through either engine.
 //!
@@ -28,11 +32,13 @@
 
 pub mod live;
 pub mod registry;
+pub mod replicaset;
 pub mod scenario;
 pub mod sim;
 
 pub use live::{LiveEngine, LiveEngineCfg};
 pub use registry::{builtin_latency_model, ModelRegistry, ModelSpec};
+pub use replicaset::{ReplicaSet, ReplicaSetCfg, ReplicaSetEngine, ReplicaStats};
 pub use scenario::{drive_timeline, run_scenario, Scenario, ScenarioModel, ScenarioReport};
 pub use sim::{SimEngine, SimEngineCfg};
 

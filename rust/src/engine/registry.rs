@@ -44,6 +44,13 @@ pub struct ModelSpec {
     pub discipline: QueueDiscipline,
     /// IP-solver implementation for Sponge-family policies.
     pub solver: SolverChoice,
+    /// Serving replicas for this variant (≥ 1). The live engine starts
+    /// this many coordinators behind a least-loaded dispatcher; the
+    /// replica-set sim engine treats it as the initial replica count and
+    /// its reconciler's horizontal ceiling
+    /// ([`crate::engine::replicaset`]). 1 = the paper's single-replica
+    /// vertical-scaling regime.
+    pub replicas: u32,
 }
 
 impl ModelSpec {
@@ -57,6 +64,7 @@ impl ModelSpec {
             slo_ms: 1_000.0,
             discipline: QueueDiscipline::Edf,
             solver: SolverChoice::Incremental,
+            replicas: 1,
         }
     }
 
@@ -93,6 +101,12 @@ impl ModelSpec {
 
     pub fn with_solver(mut self, solver: SolverChoice) -> ModelSpec {
         self.solver = solver;
+        self
+    }
+
+    /// Set the replica count (clamped to ≥ 1).
+    pub fn with_replicas(mut self, replicas: u32) -> ModelSpec {
+        self.replicas = replicas.max(1);
         self
     }
 
@@ -197,5 +211,13 @@ mod tests {
         assert_eq!(spec.policy, Policy::Static8);
         assert_eq!(spec.slo_ms, 750.0);
         assert_eq!(spec.build_scaler().name(), "static");
+    }
+
+    #[test]
+    fn replicas_default_one_and_clamp() {
+        let spec = ModelSpec::named("resnet").unwrap();
+        assert_eq!(spec.replicas, 1);
+        assert_eq!(spec.clone().with_replicas(3).replicas, 3);
+        assert_eq!(spec.with_replicas(0).replicas, 1, "clamped to >= 1");
     }
 }

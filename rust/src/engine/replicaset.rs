@@ -1,0 +1,953 @@
+//! Replica-set serving: N [`SimEngine`] replicas per model behind a
+//! deterministic least-loaded/EDF-aware dispatcher, with a two-level
+//! scaling reconciler.
+//!
+//! Sponge's in-place vertical scaling caps out at the solver's `c_max`
+//! (the paper fixes 16 cores — "no significant gain afterward"); past it
+//! the successor work (*A Tale of Two Scales*, arXiv:2407.14843) is
+//! explicit that horizontal scaling must take over. This module is that
+//! reconciliation, grown onto the unified serving API:
+//!
+//! * [`ReplicaSet`] — one model's fleet of independent serving replicas.
+//!   Each replica is a full [`SimEngine`] (own EDF queue, own autoscaler,
+//!   own single-node core budget), so *within* a replica the paper's IP
+//!   solver keeps doing in-place vertical scaling exactly as before.
+//! * **Dispatcher** — submissions are buffered on a virtual-time pending
+//!   timeline and routed at *arrival* time, one adaptation interval at a
+//!   time, so routing always sees the fleet as it exists when the request
+//!   actually shows up (a replica added at t = 30 s receives traffic from
+//!   t = 30 s on, a cold replica receives none until it is Ready).
+//!   Routing is deterministic: ready replicas only (unless none are),
+//!   least in-flight work first, queue depth second, replica order third.
+//!   Requests whose remaining slack is already thin take the *EDF-aware*
+//!   path — the emptiest queue wins outright, because an urgent request
+//!   parked behind a deep queue is a violation in the making regardless
+//!   of aggregate load.
+//! * **Reconciler** — the horizontal control loop. Each adaptation tick
+//!   it re-plans the whole model with [`crate::solver::plan_replicas`]
+//!   (the same two-level IP the [`crate::scaler::HybridScaler`] uses) on
+//!   the merged EDF budget list and the aggregate arrival rate. A target
+//!   above the live fleet means the vertical dimension is saturated —
+//!   after a hysteresis window that amortizes the ~10 s replica cold
+//!   start (paid in full by the new replica's engine: `warm_start:
+//!   false`), one replica is added. A target below the fleet drains one
+//!   replica at a time — immediately when the plan's per-replica cores
+//!   fall under [`ReplicaSetCfg::core_floor`] (sliver fleets are pure
+//!   waste), after [`ReplicaSetCfg::idle_ticks`] otherwise. A draining
+//!   replica stops receiving new work, finishes what it has, and only
+//!   then retires (its metrics fold into the retired totals so
+//!   conservation holds across scale-in).
+//! * [`ReplicaSetEngine`] — the multi-model [`ServingEngine`] face: one
+//!   [`ReplicaSet`] per registry entry, so the spongebench runner, the
+//!   scenario driver, and the conformance contract all work unchanged.
+//!
+//! Determinism: the pending timeline orders on (arrival, submission
+//! sequence), dispatch keys derive from engine snapshots (virtual time),
+//! replica seeds from the base seed and a monotone replica ordinal, and
+//! the reconciler only looks at virtual-time state — two runs of the same
+//! workload produce byte-identical metrics, which is what keeps
+//! `sponge bench --stable` reproducible with a replica budget > 1.
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::monitoring::SloTracker;
+use crate::solver::{plan_replicas, SolverInput, SolverLimits};
+use crate::{Cores, Ms};
+
+use super::registry::{ModelRegistry, ModelSpec};
+use super::sim::{SimEngine, SimEngineCfg};
+use super::{
+    Clock, DrainReport, EngineError, EngineRequest, ModelSnapshot, ServingEngine, VirtualClock,
+};
+
+/// Replica-set knobs (per model).
+#[derive(Debug, Clone, Copy)]
+pub struct ReplicaSetCfg {
+    /// Horizontal ceiling — the spongebench replica-budget axis. 1
+    /// disables the reconciler (pure vertical scaling, the paper's
+    /// regime).
+    pub max_replicas: u32,
+    /// Fleet floor (≥ 1); the drain path never goes below it.
+    pub min_replicas: u32,
+    /// Per-replica core floor: when the two-level plan would leave each
+    /// replica below this, the fleet is consolidated without waiting out
+    /// the idle hysteresis (fewer, bigger replicas — in-place resize is
+    /// the cheap move).
+    pub core_floor: Cores,
+    /// Consecutive saturated ticks before a scale-out. Amortizes the
+    /// replica cold start: a one-tick blip never pays ~10 s of spin-up.
+    pub saturated_ticks: u32,
+    /// Consecutive over-provisioned ticks before a drain (scale-in is
+    /// sticky, one replica per window, to avoid oscillation).
+    pub idle_ticks: u32,
+    /// Headroom multiplier on the measured aggregate arrival rate fed to
+    /// the planner (mirrors `SpongeScaler::lambda_headroom`).
+    pub lambda_headroom: f64,
+    /// Requests with remaining slack below this many adaptation intervals
+    /// take the EDF-aware dispatch path (emptiest queue first).
+    pub urgent_intervals: f64,
+    /// Per-replica engine config. `shared_cores` is each replica's *own*
+    /// node budget — replicas model the multi-node regime, they do not
+    /// share a node.
+    pub engine: SimEngineCfg,
+}
+
+impl Default for ReplicaSetCfg {
+    fn default() -> Self {
+        ReplicaSetCfg {
+            max_replicas: 1,
+            min_replicas: 1,
+            core_floor: 2,
+            saturated_ticks: 3,
+            idle_ticks: 10,
+            lambda_headroom: 1.15,
+            urgent_intervals: 2.0,
+            engine: SimEngineCfg::default(),
+        }
+    }
+}
+
+/// Accounting carried over from drained replicas so aggregate snapshots
+/// conserve requests across scale-in.
+#[derive(Debug, Default, Clone)]
+struct RetiredTotals {
+    completed: u64,
+    dropped: u64,
+    violations: u64,
+    core_ms: f64,
+    scaler_calls: u64,
+    scaler_ns: u64,
+    tracker: SloTracker,
+}
+
+/// One live replica: a full single-model [`SimEngine`] plus dispatch
+/// bookkeeping.
+struct Replica {
+    /// Monotone ordinal (never reused) — seed derivation + tie-breaks.
+    ord: u64,
+    engine: SimEngine,
+    /// Draining replicas receive no new work and retire once empty.
+    draining: bool,
+    submitted: u64,
+}
+
+impl Replica {
+    fn snapshot(&self, name: &str) -> ModelSnapshot {
+        self.engine.snapshot(name).unwrap_or_default()
+    }
+}
+
+/// Point-in-time view of one replica, served by
+/// `GET /v1/models/{name}/stats` (live side) and the spongebench report.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ReplicaStats {
+    pub ord: u64,
+    pub cores: Cores,
+    /// Cores able to serve right now (0 while cold-starting).
+    pub ready_cores: Cores,
+    pub queue_len: usize,
+    pub in_flight: u64,
+    pub submitted: u64,
+    pub draining: bool,
+}
+
+/// A buffered submission awaiting its virtual arrival interval.
+struct Pending {
+    at_ms: Ms,
+    seq: u64,
+    req: EngineRequest,
+}
+
+impl PartialEq for Pending {
+    fn eq(&self, other: &Self) -> bool {
+        self.seq == other.seq
+    }
+}
+
+impl Eq for Pending {}
+
+impl PartialOrd for Pending {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Pending {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.at_ms
+            .total_cmp(&other.at_ms)
+            .then_with(|| self.seq.cmp(&other.seq))
+    }
+}
+
+/// One model's replica fleet (see the module docs).
+pub struct ReplicaSet {
+    spec: ModelSpec,
+    cfg: ReplicaSetCfg,
+    replicas: Vec<Replica>,
+    retired: RetiredTotals,
+    /// Submissions not yet routed (virtual send times ahead of the
+    /// fleet's clock).
+    pending: BinaryHeap<Reverse<Pending>>,
+    pending_seq: u64,
+    /// Total submissions accepted (routed + still pending).
+    accepted: u64,
+    /// Group clock: mirrors the replicas' (lock-stepped) virtual time.
+    clock: VirtualClock,
+    next_ord: u64,
+    /// Arrivals routed in the current interval, for the reconciler's λ̂.
+    routed_this_interval: u64,
+    lambda_rps: f64,
+    saturated_for: u32,
+    idle_for: u32,
+    /// Largest concurrent whole-fleet core allocation seen at a tick.
+    peak_cores: Cores,
+    /// Reconciler action counters (reported, and pinned by tests).
+    scale_outs: u64,
+    drains: u64,
+}
+
+impl ReplicaSet {
+    /// Build a fleet of `spec.replicas` (clamped to the cfg bounds)
+    /// pre-warmed replicas — the experiment starts from a stable system,
+    /// as in the paper; replicas added *later* by the reconciler pay the
+    /// cold start.
+    pub fn new(spec: &ModelSpec, cfg: ReplicaSetCfg) -> Result<ReplicaSet, EngineError> {
+        if cfg.min_replicas < 1 || cfg.max_replicas < cfg.min_replicas {
+            return Err(EngineError::Rejected(format!(
+                "bad replica bounds: min {} max {}",
+                cfg.min_replicas, cfg.max_replicas
+            )));
+        }
+        let initial = spec.replicas.clamp(cfg.min_replicas, cfg.max_replicas);
+        let mut set = ReplicaSet {
+            spec: spec.clone(),
+            cfg,
+            replicas: Vec::new(),
+            retired: RetiredTotals {
+                tracker: SloTracker::new(cfg.engine.adaptation_interval_ms),
+                ..Default::default()
+            },
+            pending: BinaryHeap::new(),
+            pending_seq: 0,
+            accepted: 0,
+            clock: VirtualClock::new(),
+            next_ord: 0,
+            routed_this_interval: 0,
+            lambda_rps: 0.0,
+            saturated_for: 0,
+            idle_for: 0,
+            peak_cores: 0,
+            scale_outs: 0,
+            drains: 0,
+        };
+        for _ in 0..initial {
+            set.add_replica(true)?;
+        }
+        set.peak_cores = set.total_cores();
+        Ok(set)
+    }
+
+    pub fn name(&self) -> &str {
+        &self.spec.name
+    }
+
+    /// Live replica count (including draining replicas still finishing).
+    pub fn replica_count(&self) -> usize {
+        self.replicas.len()
+    }
+
+    /// (scale-outs, drains) the reconciler has performed.
+    pub fn reconciler_actions(&self) -> (u64, u64) {
+        (self.scale_outs, self.drains)
+    }
+
+    /// Largest whole-fleet core allocation observed at any tick.
+    pub fn peak_cores(&self) -> Cores {
+        self.peak_cores
+    }
+
+    /// Per-replica stats in replica order.
+    pub fn replica_stats(&self) -> Vec<ReplicaStats> {
+        let name = &self.spec.name;
+        self.replicas
+            .iter()
+            .map(|r| {
+                let snap = r.snapshot(name);
+                ReplicaStats {
+                    ord: r.ord,
+                    cores: snap.cores,
+                    ready_cores: r.engine.ready_cores(name).unwrap_or(0),
+                    queue_len: snap.queue_len,
+                    in_flight: snap.in_flight(),
+                    submitted: r.submitted,
+                    draining: r.draining,
+                }
+            })
+            .collect()
+    }
+
+    /// Merged SLO tracker across live and retired replicas (exact counts
+    /// and percentiles).
+    pub fn merged_tracker(&self) -> SloTracker {
+        let mut out = self.retired.tracker.clone();
+        for r in &self.replicas {
+            if let Some(t) = r.engine.tracker(&self.spec.name) {
+                out.merge(t);
+            }
+        }
+        out
+    }
+
+    /// Whole-fleet allocated core-ms integral (live + retired).
+    pub fn core_ms(&self) -> f64 {
+        self.retired.core_ms
+            + self
+                .replicas
+                .iter()
+                .map(|r| r.engine.core_ms(&self.spec.name).unwrap_or(0.0))
+                .sum::<f64>()
+    }
+
+    /// Whole-fleet scaler cost: (decide calls, wall nanoseconds).
+    pub fn scaler_cost(&self) -> (u64, u64) {
+        let mut calls = self.retired.scaler_calls;
+        let mut ns = self.retired.scaler_ns;
+        for r in &self.replicas {
+            let (c, n) = r.engine.scaler_cost(&self.spec.name).unwrap_or((0, 0));
+            calls += c;
+            ns += n;
+        }
+        (calls, ns)
+    }
+
+    fn total_cores(&self) -> Cores {
+        self.replicas
+            .iter()
+            .map(|r| r.snapshot(&self.spec.name).cores)
+            .sum()
+    }
+
+    /// The vertical ceiling a single replica can actually reach.
+    fn c_eff(&self) -> Cores {
+        self.spec.limits.c_max.min(self.cfg.engine.shared_cores)
+    }
+
+    fn add_replica(&mut self, warm: bool) -> Result<(), EngineError> {
+        let ord = self.next_ord;
+        self.next_ord += 1;
+        let mut reg = ModelRegistry::new();
+        reg.register(self.spec.clone())
+            .map_err(EngineError::Rejected)?;
+        let cfg = SimEngineCfg {
+            // Distinct deterministic noise stream per replica ordinal.
+            seed: self.cfg.engine.seed ^ ord.wrapping_mul(0x9e37_79b9_7f4a_7c15),
+            start_ms: self.clock.now_ms(),
+            warm_start: warm,
+            ..self.cfg.engine
+        };
+        let engine = SimEngine::new(&reg, cfg)?;
+        self.replicas.push(Replica { ord, engine, draining: false, submitted: 0 });
+        Ok(())
+    }
+
+    /// Deterministic dispatch: the replica index for a request with
+    /// `slack_ms` of remaining end-to-end budget. Ready replicas are
+    /// preferred (a cold-starting replica takes no traffic); if none are
+    /// ready, any non-draining replica queues the work.
+    fn pick_replica(&self, slack_ms: Ms) -> Option<usize> {
+        let urgent =
+            slack_ms < self.cfg.urgent_intervals * self.cfg.engine.adaptation_interval_ms;
+        let name = &self.spec.name;
+        let key = |r: &Replica| {
+            let snap = r.snapshot(name);
+            let in_flight = r.submitted.saturating_sub(snap.completed + snap.dropped);
+            if urgent {
+                // EDF-aware path: emptiest queue first — the replica most
+                // likely to serve the urgent request immediately.
+                (snap.queue_len as u64, in_flight, r.ord)
+            } else {
+                (in_flight, snap.queue_len as u64, r.ord)
+            }
+        };
+        let ready = |r: &Replica| r.engine.ready_cores(name).unwrap_or(0) > 0;
+        self.replicas
+            .iter()
+            .enumerate()
+            .filter(|(_, r)| !r.draining && ready(r))
+            .min_by_key(|(_, r)| key(r))
+            .or_else(|| {
+                self.replicas
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, r)| !r.draining)
+                    .min_by_key(|(_, r)| key(r))
+            })
+            .map(|(i, _)| i)
+    }
+
+    /// Accept one request onto the pending timeline. Requests are routed
+    /// to a replica when the fleet's clock reaches their send time.
+    pub fn submit(&mut self, req: EngineRequest) -> Result<u64, EngineError> {
+        if req.slo_ms <= 0.0 {
+            return Err(EngineError::Rejected(format!(
+                "slo_ms must be positive (got {})",
+                req.slo_ms
+            )));
+        }
+        let at_ms = req.at_ms.unwrap_or(self.clock.now_ms()).max(self.clock.now_ms());
+        let seq = self.pending_seq;
+        self.pending_seq += 1;
+        self.accepted += 1;
+        self.pending.push(Reverse(Pending { at_ms, seq, req }));
+        Ok(seq)
+    }
+
+    /// Route every pending request due by `horizon_ms` to a replica.
+    fn flush_due(&mut self, horizon_ms: Ms) {
+        while self
+            .pending
+            .peek()
+            .is_some_and(|Reverse(p)| p.at_ms <= horizon_ms)
+        {
+            let Reverse(p) = self.pending.pop().expect("peeked");
+            let Some(idx) = self.pick_replica(p.slack_ms()) else {
+                // No dispatchable replica (all draining) — cannot happen
+                // while min_replicas >= 1, but never lose the request.
+                self.pending.push(Reverse(p));
+                return;
+            };
+            self.routed_this_interval += 1;
+            let r = &mut self.replicas[idx];
+            r.submitted += 1;
+            // Engine submit cannot fail here: the model is registered and
+            // the SLO was validated at accept time.
+            let _ = r.engine.submit(&self.spec.name, p.req.at(p.at_ms));
+        }
+    }
+
+    /// Advance the fleet one adaptation interval: route the interval's
+    /// arrivals, tick every replica, then reconcile the fleet size.
+    pub fn tick(&mut self) {
+        let horizon = self.clock.now_ms() + self.cfg.engine.adaptation_interval_ms;
+        self.flush_due(horizon);
+        for r in &mut self.replicas {
+            r.engine.tick();
+        }
+        let now = self
+            .replicas
+            .iter()
+            .map(|r| r.engine.now_ms())
+            .fold(horizon, f64::max);
+        self.clock.advance_to(now);
+        // λ̂ from this interval's routed arrivals (EWMA over two intervals
+        // smooths single-tick spikes without lagging bursts).
+        let interval_s = self.cfg.engine.adaptation_interval_ms / 1_000.0;
+        let instant = self.routed_this_interval as f64 / interval_s;
+        self.lambda_rps = if self.lambda_rps == 0.0 {
+            instant
+        } else {
+            0.5 * self.lambda_rps + 0.5 * instant
+        };
+        self.routed_this_interval = 0;
+        self.reconcile();
+        self.peak_cores = self.peak_cores.max(self.total_cores());
+    }
+
+    /// The horizontal control loop (see module docs).
+    fn reconcile(&mut self) {
+        self.retire_empty_drained();
+        if self.cfg.max_replicas <= 1 {
+            return;
+        }
+        // Merged EDF budget list across the fleet + aggregate λ̂.
+        let mut budgets: Vec<Ms> = Vec::new();
+        for r in &self.replicas {
+            if let Some(b) = r.engine.queued_budgets(&self.spec.name) {
+                budgets.extend(b);
+            }
+        }
+        budgets.retain(|b| *b > 0.0);
+        budgets.sort_by(f64::total_cmp);
+        let input =
+            SolverInput::per_request(budgets, self.lambda_rps * self.cfg.lambda_headroom);
+        let limits = SolverLimits { c_max: self.c_eff(), ..self.spec.limits };
+        let plan = plan_replicas(
+            self.spec.solver,
+            &self.spec.latency,
+            &input,
+            limits,
+            self.cfg.max_replicas,
+        );
+        let live = self.replicas.iter().filter(|r| !r.draining).count() as u32;
+        // Globally infeasible even at the max fleet: scale out to the
+        // ceiling — best effort, same spirit as Sponge's infeasible
+        // fallback.
+        let target = plan.map_or(self.cfg.max_replicas, |p| p.replicas);
+        if target > live {
+            self.idle_for = 0;
+            // A replica still mid-drain is warm capacity: cancel its
+            // drain instead of retiring it and later paying a cold start
+            // for its replacement.
+            if let Some(r) = self.replicas.iter_mut().rev().find(|r| r.draining) {
+                r.draining = false;
+                self.saturated_for = 0;
+            } else {
+                self.saturated_for += 1;
+                if self.saturated_for >= self.cfg.saturated_ticks
+                    && (self.replicas.len() as u32) < self.cfg.max_replicas
+                {
+                    // One replica per window; it pays its cold start.
+                    if self.add_replica(false).is_ok() {
+                        self.scale_outs += 1;
+                    }
+                    self.saturated_for = 0;
+                }
+            }
+        } else if target < live && live > self.cfg.min_replicas {
+            self.saturated_for = 0;
+            self.idle_for += 1;
+            // Sliver fleets (per-replica cores under the floor) are
+            // consolidated without waiting out the idle hysteresis.
+            let sliver = plan.is_some_and(|p| p.cores < self.cfg.core_floor);
+            if sliver || self.idle_for >= self.cfg.idle_ticks {
+                // Drain the newest non-draining replica (LIFO keeps the
+                // longest-lived, best-amortized replicas serving).
+                if let Some(r) = self.replicas.iter_mut().rev().find(|r| !r.draining) {
+                    r.draining = true;
+                    self.drains += 1;
+                }
+                self.idle_for = 0;
+            }
+        } else {
+            self.saturated_for = 0;
+            self.idle_for = 0;
+        }
+    }
+
+    /// Retire drained replicas that have settled all their work.
+    fn retire_empty_drained(&mut self) {
+        let name = self.spec.name.clone();
+        let mut i = 0;
+        while i < self.replicas.len() {
+            let r = &self.replicas[i];
+            let settled = r.draining && r.snapshot(&name).in_flight() == 0;
+            if !settled {
+                i += 1;
+                continue;
+            }
+            let r = self.replicas.remove(i);
+            let snap = r.snapshot(&name);
+            self.retired.completed += snap.completed;
+            self.retired.dropped += snap.dropped;
+            self.retired.violations += snap.violations;
+            self.retired.core_ms += r.engine.core_ms(&name).unwrap_or(0.0);
+            let (calls, ns) = r.engine.scaler_cost(&name).unwrap_or((0, 0));
+            self.retired.scaler_calls += calls;
+            self.retired.scaler_ns += ns;
+            if let Some(t) = r.engine.tracker(&name) {
+                self.retired.tracker.merge(t);
+            }
+        }
+    }
+
+    /// Aggregate accounting across pending, live, and retired replicas.
+    /// `submitted` counts every accepted request (including ones still on
+    /// the pending timeline); `queue_len` counts them as queued, since
+    /// from the caller's perspective they are waiting either way.
+    pub fn snapshot(&self) -> ModelSnapshot {
+        let mut out = ModelSnapshot {
+            submitted: self.accepted,
+            completed: self.retired.completed,
+            dropped: self.retired.dropped,
+            violations: self.retired.violations,
+            queue_len: self.pending.len(),
+            cores: 0,
+            batch: 0,
+        };
+        for r in &self.replicas {
+            let s = r.snapshot(&self.spec.name);
+            out.completed += s.completed;
+            out.dropped += s.dropped;
+            out.violations += s.violations;
+            out.queue_len += s.queue_len;
+            out.cores += s.cores;
+            out.batch = out.batch.max(s.batch);
+        }
+        out
+    }
+
+    fn resolved(&self) -> u64 {
+        let s = self.snapshot();
+        s.completed + s.dropped
+    }
+
+    /// Drain the fleet: keep ticking (which routes pending arrivals,
+    /// advances every replica, and lets the reconciler act on the tail)
+    /// until every accepted request has a terminal outcome.
+    fn drain(&mut self) -> (u64, u64, u64) {
+        let mut ticks = 0u64;
+        let mut stall = 0u64;
+        while self.resolved() < self.accepted {
+            let before = self.resolved();
+            self.tick();
+            ticks += 1;
+            stall = if self.resolved() == before { stall + 1 } else { 0 };
+            // Quiet gaps in the timeline are not stalls: progress resumes
+            // once the clock reaches the next pending arrival.
+            if stall >= self.cfg.engine.drain_stall_ticks && self.pending.is_empty() {
+                // Zero serving capacity: delegate the bounded force-drop
+                // to every replica's own drain, then stop.
+                for r in &mut self.replicas {
+                    r.engine.drain();
+                }
+                break;
+            }
+        }
+        (self.accepted, self.resolved(), ticks)
+    }
+}
+
+impl Pending {
+    /// Server-side slack this request will have at arrival.
+    fn slack_ms(&self) -> Ms {
+        self.req.slo_ms - self.req.comm_ms
+    }
+}
+
+// ------------------------------------------------------------- the engine --
+
+/// Multi-model [`ServingEngine`] over per-model [`ReplicaSet`]s.
+pub struct ReplicaSetEngine {
+    sets: Vec<ReplicaSet>,
+    clock: VirtualClock,
+}
+
+impl ReplicaSetEngine {
+    /// One replica set per registry entry. `cfg.max_replicas` is the
+    /// per-model horizontal ceiling; each model's `spec.replicas` sets
+    /// its initial (pre-warmed) fleet.
+    pub fn new(
+        registry: &ModelRegistry,
+        cfg: ReplicaSetCfg,
+    ) -> Result<ReplicaSetEngine, EngineError> {
+        if registry.is_empty() {
+            return Err(EngineError::Rejected("empty model registry".into()));
+        }
+        let mut sets = Vec::new();
+        for spec in registry.iter() {
+            sets.push(ReplicaSet::new(spec, cfg)?);
+        }
+        Ok(ReplicaSetEngine { sets, clock: VirtualClock::new() })
+    }
+
+    /// The replica set serving `model`.
+    pub fn set(&self, model: &str) -> Option<&ReplicaSet> {
+        self.sets.iter().find(|s| s.name() == model)
+    }
+
+    fn set_idx(&self, model: &str) -> Option<usize> {
+        self.sets.iter().position(|s| s.name() == model)
+    }
+
+    fn unknown(&self, name: &str) -> EngineError {
+        EngineError::UnknownModel {
+            name: name.to_string(),
+            known: self.sets.iter().map(|s| s.name().to_string()).collect(),
+        }
+    }
+
+    fn sync_clock(&self) {
+        let now = self
+            .sets
+            .iter()
+            .map(|s| s.clock.now_ms())
+            .fold(self.clock.now_ms(), f64::max);
+        self.clock.advance_to(now);
+    }
+}
+
+impl ServingEngine for ReplicaSetEngine {
+    fn kind(&self) -> &'static str {
+        "replicaset"
+    }
+
+    fn clock(&self) -> &dyn Clock {
+        &self.clock
+    }
+
+    fn models(&self) -> Vec<String> {
+        self.sets.iter().map(|s| s.name().to_string()).collect()
+    }
+
+    fn submit(&mut self, model: &str, req: EngineRequest) -> Result<u64, EngineError> {
+        let idx = self.set_idx(model).ok_or_else(|| self.unknown(model))?;
+        self.sets[idx].submit(req)
+    }
+
+    fn tick(&mut self) {
+        for set in &mut self.sets {
+            set.tick();
+        }
+        self.sync_clock();
+    }
+
+    fn drain(&mut self) -> DrainReport {
+        let mut report = DrainReport::default();
+        for set in &mut self.sets {
+            let (submitted, resolved, ticks) = set.drain();
+            report.submitted += submitted;
+            report.resolved += resolved;
+            report.ticks = report.ticks.max(ticks);
+        }
+        self.sync_clock();
+        report
+    }
+
+    fn snapshot(&self, model: &str) -> Result<ModelSnapshot, EngineError> {
+        let idx = self.set_idx(model).ok_or_else(|| self.unknown(model))?;
+        Ok(self.sets[idx].snapshot())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::ModelSpec;
+
+    fn spec(replicas: u32) -> ModelSpec {
+        ModelSpec::named("yolov5s").unwrap().with_replicas(replicas)
+    }
+
+    fn cfg(max: u32) -> ReplicaSetCfg {
+        ReplicaSetCfg { max_replicas: max, ..Default::default() }
+    }
+
+    fn load(e: &mut ReplicaSetEngine, n: usize, gap_ms: f64, slo: f64) {
+        for i in 0..n {
+            e.submit("yolov5s", EngineRequest::new(slo, 20.0).at(i as f64 * gap_ms))
+                .unwrap();
+        }
+    }
+
+    #[test]
+    fn rejects_bad_replica_bounds_and_bad_slo() {
+        let err = ReplicaSet::new(
+            &spec(1),
+            ReplicaSetCfg { min_replicas: 3, max_replicas: 2, ..Default::default() },
+        )
+        .unwrap_err();
+        assert!(matches!(err, EngineError::Rejected(_)));
+        let mut set = ReplicaSet::new(&spec(1), cfg(1)).unwrap();
+        assert!(set.submit(EngineRequest::new(0.0, 0.0)).is_err());
+    }
+
+    #[test]
+    fn single_replica_set_conserves() {
+        let mut reg = ModelRegistry::new();
+        reg.register(spec(1)).unwrap();
+        let mut e = ReplicaSetEngine::new(&reg, cfg(1)).unwrap();
+        load(&mut e, 100, 50.0, 1_000.0);
+        let report = e.drain();
+        assert!(report.settled(), "{report:?}");
+        let s = e.snapshot("yolov5s").unwrap();
+        assert_eq!(s.submitted, 100);
+        assert_eq!(s.resolved(), 100);
+        assert!(s.completed > 0);
+        assert_eq!(e.set("yolov5s").unwrap().replica_count(), 1);
+    }
+
+    #[test]
+    fn dispatcher_spreads_load_across_replicas() {
+        let mut reg = ModelRegistry::new();
+        reg.register(spec(2)).unwrap();
+        let mut e = ReplicaSetEngine::new(&reg, cfg(2)).unwrap();
+        load(&mut e, 200, 25.0, 1_000.0); // 40 rps for 5 s
+        let report = e.drain();
+        assert!(report.settled(), "{report:?}");
+        let stats = e.set("yolov5s").unwrap().replica_stats();
+        assert_eq!(stats.len(), 2);
+        assert!(
+            stats.iter().all(|r| r.submitted > 50),
+            "lopsided dispatch: {stats:?}"
+        );
+    }
+
+    #[test]
+    fn reconciler_scales_out_when_vertical_saturates() {
+        // 40 rps of yolov5s: a single replica tops out near 31 rps even
+        // at c_max = 16, so the two-level plan demands a second replica.
+        let mut reg = ModelRegistry::new();
+        reg.register(spec(1)).unwrap();
+        let mut e = ReplicaSetEngine::new(&reg, cfg(4)).unwrap();
+        load(&mut e, 40 * 60, 25.0, 1_000.0); // 60 s at 40 rps
+        let report = e.drain();
+        assert!(report.settled(), "{report:?}");
+        let set = e.set("yolov5s").unwrap();
+        let (outs, _) = set.reconciler_actions();
+        assert!(outs >= 1, "reconciler never scaled out");
+        assert!(set.replica_count() >= 2, "{:?}", set.replica_stats());
+        // The fleet's peak allocation exceeds one replica's c_max ceiling
+        // — the exact thing vertical scaling alone cannot do.
+        assert!(set.peak_cores() > 16, "peak {}", set.peak_cores());
+    }
+
+    #[test]
+    fn reconciler_drains_when_load_subsides() {
+        let mut reg = ModelRegistry::new();
+        reg.register(spec(3)).unwrap(); // over-provisioned start
+        let mut e = ReplicaSetEngine::new(
+            &reg,
+            ReplicaSetCfg { max_replicas: 3, idle_ticks: 3, ..Default::default() },
+        )
+        .unwrap();
+        // Trickle: 2 rps, trivially single-replica work.
+        load(&mut e, 120, 500.0, 1_000.0);
+        let report = e.drain();
+        assert!(report.settled(), "{report:?}");
+        let set = e.set("yolov5s").unwrap();
+        let (_, drains) = set.reconciler_actions();
+        assert!(drains >= 1, "reconciler never drained");
+        assert!(set.replica_count() < 3, "{:?}", set.replica_stats());
+        // Conservation held across retirement.
+        let s = e.snapshot("yolov5s").unwrap();
+        assert_eq!(s.submitted, 120);
+        assert_eq!(s.resolved(), 120);
+    }
+
+    #[test]
+    fn replicated_beats_single_under_overload() {
+        // The headline property the spongebench paper matrix re-measures:
+        // at 2x the paper's traffic, a replica budget of 2 strictly
+        // reduces the violation rate vs. the single-replica ceiling.
+        let run = |max_replicas: u32| {
+            let mut reg = ModelRegistry::new();
+            reg.register(spec(1)).unwrap();
+            let mut e = ReplicaSetEngine::new(&reg, cfg(max_replicas)).unwrap();
+            load(&mut e, 40 * 45, 25.0, 1_000.0); // 45 s at 40 rps
+            let report = e.drain();
+            assert!(report.settled(), "{report:?}");
+            e.set("yolov5s").unwrap().merged_tracker().violation_rate_pct()
+        };
+        let single = run(1);
+        let replicated = run(2);
+        assert!(
+            replicated < single,
+            "replicated {replicated:.1}% !< single {single:.1}%"
+        );
+    }
+
+    #[test]
+    fn scaled_out_replica_pays_cold_start_before_taking_traffic() {
+        let mut reg = ModelRegistry::new();
+        reg.register(spec(1)).unwrap();
+        let mut e = ReplicaSetEngine::new(&reg, cfg(2)).unwrap();
+        // Saturating load, submitted incrementally so we can observe the
+        // fleet mid-flight.
+        for i in 0..(40 * 20) {
+            e.submit("yolov5s", EngineRequest::new(1_000.0, 20.0).at(i as f64 * 25.0))
+                .unwrap();
+        }
+        let mut saw_cold = false;
+        for _ in 0..20 {
+            e.tick();
+            let stats = e.set("yolov5s").unwrap().replica_stats();
+            if let Some(fresh) = stats.iter().find(|r| r.ord > 0) {
+                // The scaled-out replica: while cold (no ready cores) the
+                // dispatcher must not have routed anything to it.
+                if fresh.ready_cores == 0 {
+                    saw_cold = true;
+                    assert_eq!(
+                        fresh.submitted, 0,
+                        "cold replica received traffic: {stats:?}"
+                    );
+                }
+            }
+        }
+        assert!(saw_cold, "never observed the cold-start window");
+        e.drain();
+    }
+
+    #[test]
+    fn spike_during_drain_cancels_the_drain() {
+        // A replica still mid-drain is warm capacity: when load comes
+        // back before it has retired, the reconciler must un-drain it
+        // rather than let it retire and later pay a cold start.
+        let mut set = ReplicaSet::new(&spec(2), cfg(2)).unwrap();
+        set.replicas[1].draining = true;
+        // In-flight work keeps the draining replica from retiring.
+        set.replicas[1]
+            .engine
+            .submit("yolov5s", EngineRequest::new(10_000.0, 0.0))
+            .unwrap();
+        set.lambda_rps = 40.0; // past one replica's ceiling
+        set.reconcile();
+        assert!(!set.replicas[1].draining, "drain not cancelled");
+        assert_eq!(set.replica_count(), 2);
+        let (outs, _) = set.reconciler_actions();
+        assert_eq!(outs, 0, "reused the warm replica, no cold scale-out");
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let run = || {
+            let mut reg = ModelRegistry::new();
+            reg.register(spec(1)).unwrap();
+            let mut e = ReplicaSetEngine::new(
+                &reg,
+                ReplicaSetCfg {
+                    max_replicas: 3,
+                    engine: SimEngineCfg { latency_noise_cv: 0.05, ..Default::default() },
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+            load(&mut e, 1_200, 25.0, 900.0);
+            e.drain();
+            let set = e.set("yolov5s").unwrap();
+            (
+                e.snapshot("yolov5s").unwrap(),
+                set.replica_count(),
+                set.reconciler_actions(),
+                set.core_ms(),
+                set.peak_cores(),
+            )
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn unknown_model_rejected() {
+        let mut reg = ModelRegistry::new();
+        reg.register(spec(1)).unwrap();
+        let mut e = ReplicaSetEngine::new(&reg, cfg(2)).unwrap();
+        assert!(matches!(
+            e.submit("nope", EngineRequest::new(1_000.0, 0.0)),
+            Err(EngineError::UnknownModel { .. })
+        ));
+        assert!(e.snapshot("nope").is_err());
+    }
+
+    #[test]
+    fn urgent_requests_prefer_empty_queues() {
+        let mut reg = ModelRegistry::new();
+        reg.register(spec(2)).unwrap();
+        let mut e = ReplicaSetEngine::new(&reg, cfg(2)).unwrap();
+        // Three relaxed requests in the first interval: dispatch
+        // alternates on in-flight (r0, r1, r0 — ord breaks the tie).
+        for _ in 0..3 {
+            e.submit("yolov5s", EngineRequest::new(60_000.0, 0.0).at(0.0)).unwrap();
+        }
+        // One urgent request in the same interval: slack 100 ms < 2
+        // adaptation intervals, so the EDF-aware path applies.
+        e.submit("yolov5s", EngineRequest::new(100.0, 0.0).at(1.0)).unwrap();
+        e.tick(); // routes all four
+        let stats = e.set("yolov5s").unwrap().replica_stats();
+        // Replica 0 carries two relaxed requests; the urgent one must
+        // have gone to the less-loaded replica 1 (2 + 2, not 3 + 1).
+        let routed: Vec<u64> = stats.iter().map(|r| r.submitted).collect();
+        assert_eq!(routed, vec![2, 2], "{stats:?}");
+        e.drain();
+    }
+}

@@ -42,6 +42,15 @@ pub struct SimEngineCfg {
     /// Consecutive no-progress ticks before `drain` force-drops whatever
     /// is left (guards against zero-capacity stalls).
     pub drain_stall_ticks: u64,
+    /// Virtual time the engine starts at (clock origin, first tick at
+    /// `start_ms + adaptation_interval_ms`). Non-zero when a replica joins
+    /// a running [`crate::engine::replicaset::ReplicaSet`] mid-experiment.
+    pub start_ms: Ms,
+    /// Pre-warm the initial fleet (instances launched in the virtual past,
+    /// Ready at `start_ms` — the paper's stable-system start). `false`
+    /// launches at `start_ms` and pays the full cold start, which is how a
+    /// scaled-out replica's spin-up cost enters the metrics.
+    pub warm_start: bool,
 }
 
 impl Default for SimEngineCfg {
@@ -54,6 +63,8 @@ impl Default for SimEngineCfg {
             latency_noise_cv: 0.0,
             seed: 0x5f0_46e,
             drain_stall_ticks: 64,
+            start_ms: 0.0,
+            warm_start: true,
         }
     }
 }
@@ -140,6 +151,12 @@ impl SimEngine {
         } else {
             0.0
         };
+        let launch_at = if cfg.warm_start {
+            // Launched in the virtual past so the fleet is Ready at start.
+            cfg.start_ms - cfg.cluster.cold_start_ms
+        } else {
+            cfg.start_ms
+        };
         let mut models = Vec::new();
         let mut allocated_total: Cores = 0;
         for spec in registry.iter() {
@@ -149,13 +166,11 @@ impl SimEngine {
                 // Shared budget: grant what fits, never below one core.
                 let headroom = cfg.shared_cores.saturating_sub(allocated_total);
                 let granted = cores.min(headroom);
-                if granted >= 1
-                    && cluster.launch(granted, -cfg.cluster.cold_start_ms).is_ok()
-                {
+                if granted >= 1 && cluster.launch(granted, launch_at).is_ok() {
                     allocated_total += granted;
                 }
             }
-            cluster.tick(0.0); // cold starts elapse pre-experiment
+            cluster.tick(cfg.start_ms);
             let initial_cores = cluster.allocated_cores();
             models.push(SimModel {
                 exec_model: spec.latency,
@@ -174,10 +189,12 @@ impl SimEngine {
                 scaler_ns: 0,
             });
         }
+        let clock = VirtualClock::new();
+        clock.advance_to(cfg.start_ms);
         Ok(SimEngine {
-            next_tick_ms: cfg.adaptation_interval_ms,
+            next_tick_ms: cfg.start_ms + cfg.adaptation_interval_ms,
             cfg,
-            clock: VirtualClock::new(),
+            clock,
             models,
             heap: BinaryHeap::new(),
             seq: 0,
@@ -210,6 +227,22 @@ impl SimEngine {
     pub fn scaler_cost(&self, model: &str) -> Option<(u64, u64)> {
         self.model_idx(model)
             .map(|i| (self.models[i].scaler_calls, self.models[i].scaler_ns))
+    }
+
+    /// EDF-sorted remaining budgets of one model's queued requests at the
+    /// current virtual time — the replica-set reconciler's per-replica
+    /// solver input.
+    pub fn queued_budgets(&self, model: &str) -> Option<Vec<Ms>> {
+        self.model_idx(model)
+            .map(|i| self.models[i].queue.remaining_budgets(self.clock.now_ms()))
+    }
+
+    /// Cores of one model's instances able to serve right now (0 while a
+    /// cold-started fleet is still spinning up) — the replica-set
+    /// dispatcher's readiness signal.
+    pub fn ready_cores(&self, model: &str) -> Option<Cores> {
+        self.model_idx(model)
+            .map(|i| self.models[i].cluster.ready_cores(self.clock.now_ms()))
     }
 
     fn model_idx(&self, name: &str) -> Option<usize> {
@@ -250,7 +283,7 @@ impl SimEngine {
         while self
             .heap
             .peek()
-            .map_or(false, |Reverse(e)| e.t <= t_end)
+            .is_some_and(|Reverse(e)| e.t <= t_end)
         {
             let Reverse(ev) = self.heap.pop().unwrap();
             self.clock.advance_to(ev.t);
@@ -630,6 +663,47 @@ mod tests {
         }
         let report = e.drain();
         assert!(report.settled(), "{report:?}");
+    }
+
+    #[test]
+    fn cold_start_engine_pays_spin_up_before_serving() {
+        // A replica joining at t = 300 s with warm_start off: clock starts
+        // at 300 s, the fleet is cold for cold_start_ms, and requests that
+        // expire inside the spin-up window become drops.
+        let mut reg = ModelRegistry::new();
+        reg.register(ModelSpec::named("resnet").unwrap()).unwrap();
+        let cfg = SimEngineCfg {
+            start_ms: 300_000.0,
+            warm_start: false,
+            ..Default::default()
+        };
+        let mut e = SimEngine::new(&reg, cfg).unwrap();
+        assert_eq!(e.now_ms(), 300_000.0);
+        // SLO 2 s < 10 s cold start: doomed while the replica spins up.
+        e.submit("resnet", EngineRequest::new(2_000.0, 0.0).at(300_100.0)).unwrap();
+        // SLO 30 s: survives the spin-up and completes.
+        e.submit("resnet", EngineRequest::new(30_000.0, 0.0).at(300_100.0)).unwrap();
+        let report = e.drain();
+        assert!(report.settled(), "{report:?}");
+        let s = e.snapshot("resnet").unwrap();
+        assert_eq!(s.dropped, 1, "{s:?}");
+        assert_eq!(s.completed, 1, "{s:?}");
+        // First tick lands one adaptation interval after the start time.
+        assert!(e.now_ms() > 300_000.0);
+    }
+
+    #[test]
+    fn queued_budgets_accessor_reports_edf_order() {
+        let mut e = two_model_engine(0.0);
+        e.submit("resnet", EngineRequest::new(900.0, 0.0).at(0.0)).unwrap();
+        e.submit("resnet", EngineRequest::new(300.0, 0.0).at(0.0)).unwrap();
+        e.tick(); // arrivals processed at t <= 1000
+        let budgets = e.queued_budgets("resnet").unwrap();
+        assert!(
+            budgets.windows(2).all(|w| w[0] <= w[1]),
+            "not EDF-sorted: {budgets:?}"
+        );
+        assert!(e.queued_budgets("nope").is_none());
     }
 
     #[test]

@@ -97,6 +97,7 @@ mod tests {
             disciplines: vec![QueueDiscipline::Edf],
             solvers: vec![SolverChoice::Incremental],
             budgets: vec![48],
+            replica_budgets: vec![1],
             horizon_ms: 15_000.0,
             model: "yolov5s".into(),
             seed: 42,

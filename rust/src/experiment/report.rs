@@ -15,7 +15,7 @@
 //!       "id": "paper-20rps/embedded-4g/sim/sponge+edf+incremental@48c",
 //!       "workload": "paper-20rps", "trace": "embedded-4g",
 //!       "engine": "sim", "policy": "sponge", "discipline": "edf",
-//!       "solver": "incremental", "shared_cores": 48,
+//!       "solver": "incremental", "shared_cores": 48, "replicas": 1,
 //!       "metrics": { "submitted": ..., "violation_rate_pct": ..., ... },
 //!       "wall": { "run_ms": ..., "scaler_ns_total": ... }  // omitted in stable mode
 //!     }
@@ -71,6 +71,7 @@ impl MatrixReport {
                         "shared_cores",
                         Json::num(c.spec.knobs.shared_cores as f64),
                     ),
+                    ("replicas", Json::num(c.spec.knobs.replicas as f64)),
                     (
                         "metrics",
                         Json::obj(vec![

@@ -10,8 +10,8 @@
 use std::time::Instant;
 
 use crate::engine::{
-    drive_timeline, LiveEngine, LiveEngineCfg, ModelRegistry, ModelSpec, ServingEngine,
-    SimEngine, SimEngineCfg,
+    drive_timeline, LiveEngine, LiveEngineCfg, ModelRegistry, ModelSpec,
+    ReplicaSetCfg, ReplicaSetEngine, ServingEngine, SimEngine, SimEngineCfg,
 };
 use crate::network::NetworkModel;
 use crate::workload::Request;
@@ -93,6 +93,9 @@ pub fn run_cell(spec: &CellSpec) -> Result<CellResult, String> {
     )?;
 
     match spec.engine {
+        EngineKind::Sim if spec.knobs.replicas > 1 => {
+            run_replica_cell(spec, &reg, &requests, started)
+        }
         EngineKind::Sim => run_sim_cell(spec, &reg, &requests, started),
         EngineKind::Live => run_live_cell(spec, &reg, &requests, started),
     }
@@ -154,6 +157,64 @@ fn run_sim_cell(
         mean_queue_ms: tracker.mean_queue_ms(),
         mean_cores: core_ms / span_ms,
         peak_cores: engine.peak_cores(&spec.model).unwrap_or(0),
+        core_seconds: core_ms / 1_000.0,
+        scaler_calls,
+    };
+    Ok(CellResult {
+        id: spec.id(),
+        spec: spec.clone(),
+        metrics,
+        wall: CellWall {
+            run_ms: started.elapsed().as_secs_f64() * 1_000.0,
+            scaler_ns_total: scaler_ns,
+        },
+    })
+}
+
+/// A cell with a replica budget > 1: same timeline, driven through the
+/// [`ReplicaSetEngine`] (per-model fleets of `SimEngine` replicas with
+/// the two-level scaling reconciler). Metrics aggregate across the fleet
+/// — counts and percentiles exactly (merged trackers), cores as the
+/// whole-fleet integral/peak — and stay virtual-time deterministic.
+fn run_replica_cell(
+    spec: &CellSpec,
+    reg: &ModelRegistry,
+    requests: &[Request],
+    started: Instant,
+) -> Result<CellResult, String> {
+    let cfg = ReplicaSetCfg {
+        max_replicas: spec.knobs.replicas,
+        engine: SimEngineCfg {
+            shared_cores: spec.knobs.shared_cores,
+            latency_noise_cv: spec.noise_cv,
+            seed: spec.seed,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let mut engine = ReplicaSetEngine::new(reg, cfg).map_err(|e| e.to_string())?;
+    drive(&mut engine, &spec.model, requests, spec.time_scale)?;
+
+    let snap = engine.snapshot(&spec.model).map_err(|e| e.to_string())?;
+    let set = engine
+        .set(&spec.model)
+        .ok_or_else(|| format!("no replica set for '{}'", spec.model))?;
+    let tracker = set.merged_tracker();
+    let core_ms = set.core_ms();
+    let span_ms = engine.now_ms().max(1.0);
+    let (scaler_calls, scaler_ns) = set.scaler_cost();
+    let metrics = CellMetrics {
+        submitted: snap.submitted,
+        completed: snap.completed,
+        dropped: snap.dropped,
+        violations: snap.violations,
+        violation_rate_pct: tracker.violation_rate_pct(),
+        mean_e2e_ms: tracker.mean_e2e_ms(),
+        e2e_p50_ms: tracker.e2e_percentile(50.0).unwrap_or(0.0),
+        e2e_p99_ms: tracker.e2e_percentile(99.0).unwrap_or(0.0),
+        mean_queue_ms: tracker.mean_queue_ms(),
+        mean_cores: core_ms / span_ms,
+        peak_cores: set.peak_cores(),
         core_seconds: core_ms / 1_000.0,
         scaler_calls,
     };
@@ -237,6 +298,7 @@ mod tests {
                 discipline,
                 solver: SolverChoice::Incremental,
                 shared_cores: 48,
+                replicas: 1,
             },
             horizon_ms: 20_000.0,
             model: "yolov5s".into(),
@@ -277,6 +339,27 @@ mod tests {
         let fifo = run_cell(&tiny_cell(Policy::Sponge, QueueDiscipline::Fifo)).unwrap();
         assert_ne!(edf.id, fifo.id);
         assert_eq!(fifo.metrics.submitted, 400);
+    }
+
+    #[test]
+    fn replica_cell_conserves_and_labels() {
+        let mut cell = tiny_cell(Policy::Sponge, QueueDiscipline::Edf);
+        cell.knobs.replicas = 2;
+        let r = run_cell(&cell).unwrap();
+        assert!(r.id.ends_with("x2r"), "{}", r.id);
+        assert_eq!(r.metrics.submitted, 400);
+        assert_eq!(r.metrics.submitted, r.metrics.completed + r.metrics.dropped);
+        assert!(r.metrics.scaler_calls > 0);
+        assert!(r.metrics.mean_cores > 0.0);
+    }
+
+    #[test]
+    fn replica_cell_deterministic_across_runs() {
+        let mut cell = tiny_cell(Policy::Sponge, QueueDiscipline::Edf);
+        cell.knobs.replicas = 2;
+        let a = run_cell(&cell).unwrap();
+        let b = run_cell(&cell).unwrap();
+        assert_eq!(a.metrics, b.metrics);
     }
 
     #[test]

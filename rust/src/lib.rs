@@ -31,7 +31,9 @@
 //!
 //! **Serving API (top layer)**
 //! * [`engine`] — `ServingEngine` trait, `Clock`, `ModelRegistry`,
-//!   `SimEngine` / `LiveEngine`, scenario driver
+//!   `SimEngine` / `LiveEngine` / `ReplicaSetEngine` (per-model replica
+//!   fleets with a two-level horizontal × vertical reconciler), scenario
+//!   driver
 //! * [`experiment`] — spongebench: declarative experiment matrices over
 //!   the engine (workload × trace × policy knobs), deterministic JSON
 //!   reports, and the CI perf-regression gate

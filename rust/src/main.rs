@@ -61,6 +61,10 @@ fn command_help(cmd: &str) -> Option<&'static str> {
   --models a,b       comma-separated model variants to register
                      (resnet, resnet18lite, yolov5n, yolov5nlite, yolov5s);
                      the first is the default model   [default: resnet18lite]
+  --replicas N       serving replicas per model (one coordinator pipeline
+                     each, requests dispatched to the least-loaded one;
+                     per-replica stats on /v1/models/{name}/stats)
+                     [default: 1]
   --executor KIND    mock | pjrt   [default: pjrt]
                      pjrt executes AOT artifacts (needs --features pjrt +
                      `make artifacts`); mock serves deterministic zeros
@@ -228,7 +232,17 @@ fn cmd_serve(args: &Args) -> Result<()> {
         Some(csv) => csv.to_string(),
         None => args.str_or("variant", "resnet18lite"),
     };
-    let registry = ModelRegistry::from_names(&models).map_err(|e| anyhow::anyhow!(e))?;
+    let replicas = args.u32_or("replicas", 1)?;
+    anyhow::ensure!(replicas >= 1, "--replicas must be >= 1");
+    let mut registry = ModelRegistry::new();
+    for spec in ModelRegistry::from_names(&models)
+        .map_err(|e| anyhow::anyhow!(e))?
+        .iter()
+    {
+        registry
+            .register(spec.clone().with_replicas(replicas))
+            .map_err(|e| anyhow::anyhow!(e))?;
+    }
 
     let engine = match executor.as_str() {
         "mock" => LiveEngine::start_mock(&registry, LiveEngineCfg::default()),
@@ -256,9 +270,10 @@ fn cmd_serve(args: &Args) -> Result<()> {
     );
     let handle = sponge::server::serve(&bind, Arc::clone(&gateway))?;
     println!(
-        "serving {} model(s) [{}] on http://{}",
+        "serving {} model(s) [{}] x{} replica(s) on http://{}",
         registry.len(),
         registry.names().join(", "),
+        replicas,
         handle.addr()
     );
     println!(

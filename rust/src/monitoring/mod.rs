@@ -126,6 +126,41 @@ impl SloTracker {
     pub fn timeline(&self) -> &[(Ms, u64, u64)] {
         &self.timeline
     }
+
+    /// Fold another tracker into this one — the replica-set aggregation
+    /// path: per-replica trackers merge into one model-level view with
+    /// exact counts, exact percentiles (samples are concatenated), and
+    /// streaming moments combined via [`Welford::merge`]. Both trackers
+    /// must bucket their timelines on the same interval.
+    pub fn merge(&mut self, other: &SloTracker) {
+        assert!(
+            self.interval_ms == other.interval_ms
+                || self.total() == 0
+                || other.total() == 0,
+            "cannot merge trackers with different timeline intervals \
+             ({} vs {})",
+            self.interval_ms,
+            other.interval_ms
+        );
+        if self.interval_ms == 0.0 {
+            self.interval_ms = other.interval_ms;
+        }
+        self.completed += other.completed;
+        self.violated += other.violated;
+        self.dropped += other.dropped;
+        self.e2e.merge(&other.e2e);
+        self.queue.merge(&other.queue);
+        self.processing.merge(&other.processing);
+        self.e2e_samples.extend_from_slice(&other.e2e_samples);
+        while self.timeline.len() < other.timeline.len() {
+            self.timeline
+                .push((self.timeline.len() as f64 * self.interval_ms, 0, 0));
+        }
+        for (slot, &(_, v, t)) in self.timeline.iter_mut().zip(&other.timeline) {
+            slot.1 += v;
+            slot.2 += t;
+        }
+    }
 }
 
 /// Sliding-window arrival-rate estimator: the monitoring component reports
@@ -230,6 +265,62 @@ mod tests {
         assert!((t.e2e_percentile(100.0).unwrap() - 100.0).abs() < 1e-9);
         let p50 = t.e2e_percentile(50.0).unwrap();
         assert!((p50 - 50.5).abs() < 1e-9, "p50={p50}");
+    }
+
+    #[test]
+    fn e2e_percentile_single_sample_every_p() {
+        // With one completed request there is nothing to interpolate: every
+        // percentile — including the p=0 and p=100 endpoints — is that
+        // sample.
+        let mut t = SloTracker::new(1_000.0);
+        t.record(10.0, &Outcome { e2e_ms: 250.0, ..ok(0) });
+        for p in [0.0, 1.0, 50.0, 99.0, 100.0] {
+            assert_eq!(t.e2e_percentile(p), Some(250.0), "p={p}");
+        }
+    }
+
+    #[test]
+    fn e2e_percentile_interpolates_between_samples() {
+        // Two samples 100 and 200: numpy-style linear interpolation puts
+        // p25 a quarter of the way up the gap.
+        let mut t = SloTracker::new(1_000.0);
+        t.record(1.0, &Outcome { e2e_ms: 200.0, ..ok(0) });
+        t.record(2.0, &Outcome { e2e_ms: 100.0, ..ok(1) });
+        assert_eq!(t.e2e_percentile(0.0), Some(100.0));
+        assert_eq!(t.e2e_percentile(100.0), Some(200.0));
+        assert!((t.e2e_percentile(25.0).unwrap() - 125.0).abs() < 1e-9);
+        assert!((t.e2e_percentile(50.0).unwrap() - 150.0).abs() < 1e-9);
+        assert!((t.e2e_percentile(75.0).unwrap() - 175.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tracker_merge_combines_counts_latencies_and_timeline() {
+        let mut a = SloTracker::new(1_000.0);
+        let mut b = SloTracker::new(1_000.0);
+        a.record(100.0, &Outcome { e2e_ms: 100.0, ..ok(0) });
+        a.record(200.0, &Outcome { violated: true, e2e_ms: 900.0, ..ok(1) });
+        b.record(1_500.0, &Outcome { e2e_ms: 300.0, ..ok(2) });
+        b.record(2_500.0, &Outcome { dropped: true, ..ok(3) });
+        a.merge(&b);
+        assert_eq!(a.total(), 4);
+        assert_eq!(a.completed(), 3);
+        assert_eq!(a.dropped(), 1);
+        assert_eq!(a.violations(), 2);
+        // Merged mean over the three completed latencies.
+        assert!((a.mean_e2e_ms() - (100.0 + 900.0 + 300.0) / 3.0).abs() < 1e-9);
+        // Percentiles see the concatenated samples.
+        assert_eq!(a.e2e_percentile(100.0), Some(900.0));
+        assert_eq!(a.e2e_percentile(0.0), Some(100.0));
+        // Timeline padded to the longer run and summed per bucket.
+        let tl = a.timeline();
+        assert_eq!(tl.len(), 3);
+        assert_eq!(tl[0], (0.0, 1, 2));
+        assert_eq!(tl[1], (1_000.0, 0, 1));
+        assert_eq!(tl[2], (2_000.0, 1, 1));
+        // Merging an empty tracker changes nothing.
+        let before = a.total();
+        a.merge(&SloTracker::new(1_000.0));
+        assert_eq!(a.total(), before);
     }
 
     #[test]

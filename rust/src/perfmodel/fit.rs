@@ -158,7 +158,7 @@ pub fn fit_ransac(
             .collect();
         if inliers.len() as f64
             >= cfg.min_inlier_frac * profile.len() as f64
-            && best.as_ref().map_or(true, |(n, _)| inliers.len() > *n)
+            && best.as_ref().is_none_or(|(n, _)| inliers.len() > *n)
         {
             best = Some((inliers.len(), inliers));
         }

@@ -181,7 +181,13 @@ impl EdfQueue {
         self.heap.peek().map(|e| &e.req)
     }
 
-    /// Pop the highest-priority request.
+    /// Pop the highest-priority request. Expired requests get no special
+    /// treatment here: under EDF they sort first *because* their
+    /// deadlines are the smallest keys, while under FIFO they surface
+    /// strictly in arrival order — an expired request behind a fresh
+    /// head stays behind it (pinned by the expired-vs-fresh ordering
+    /// test; [`EdfQueue::drop_expired`] documents the matching sweep
+    /// semantics).
     pub fn pop(&mut self) -> Option<Request> {
         let r = self.heap.pop().map(|e| e.req);
         if r.is_some() {
@@ -345,6 +351,43 @@ mod tests {
         assert_eq!(q.pop().unwrap().id, 1);
         assert_eq!(q.pop().unwrap().id, 2);
         assert_eq!(q.pop().unwrap().id, 3);
+    }
+
+    #[test]
+    fn expired_vs_fresh_pop_order_edf_first_fifo_arrival() {
+        // Pins the documented discipline semantics for expired requests:
+        // under EDF, expired requests sort first (their deadlines are the
+        // smallest keys), so `pop` surfaces them ahead of every fresh
+        // request; under FIFO, expiry does not reorder anything — an
+        // expired request buried behind a fresh head stays buried, which
+        // is exactly why the FIFO drop_expired scan stops at a live head.
+        let now = 1_000.0;
+        let build = |d: QueueDiscipline| {
+            let mut q = EdfQueue::with_discipline(d);
+            q.push(req(0, 0.0, 5_000.0)); // fresh, arrived first
+            q.push(req(1, 0.0, 100.0)); // expired at `now`, arrived second
+            q.push(req(2, 0.0, 3_000.0)); // fresh, arrived third
+            q.push(req(3, 0.0, 200.0)); // expired at `now`, arrived fourth
+            q
+        };
+
+        let mut edf = build(QueueDiscipline::Edf);
+        assert!(edf.peek().unwrap().deadline_ms() <= now, "expired must head EDF");
+        let edf_order: Vec<u64> = std::iter::from_fn(|| edf.pop().map(|r| r.id)).collect();
+        assert_eq!(edf_order, vec![1, 3, 2, 0], "EDF: expired first, then deadline");
+
+        let mut fifo = build(QueueDiscipline::Fifo);
+        assert_eq!(fifo.peek().unwrap().id, 0, "FIFO head is the oldest arrival");
+        let fifo_order: Vec<u64> = std::iter::from_fn(|| fifo.pop().map(|r| r.id)).collect();
+        assert_eq!(fifo_order, vec![0, 1, 2, 3], "FIFO: arrival order, expiry ignored");
+
+        // Consequence for the sweep: EDF drops every expired request,
+        // FIFO (live head) drops none.
+        let mut edf = build(QueueDiscipline::Edf);
+        assert_eq!(edf.drop_expired(now).len(), 2);
+        let mut fifo = build(QueueDiscipline::Fifo);
+        assert_eq!(fifo.drop_expired(now).len(), 0);
+        assert_eq!(fifo.len(), 4);
     }
 
     #[test]

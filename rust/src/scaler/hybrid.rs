@@ -16,8 +16,8 @@
 use super::{Action, Autoscaler, ScalerObs};
 use crate::cluster::Cluster;
 use crate::perfmodel::LatencyModel;
-use crate::solver::{SolverChoice, SolverInput, SolverLimits};
-use crate::{BatchSize, Cores, Ms};
+use crate::solver::{plan_replicas, SolverChoice, SolverInput, SolverLimits};
+use crate::{BatchSize, Cores};
 
 /// Vertical-first, horizontal-when-saturated autoscaler.
 pub struct HybridScaler {
@@ -47,7 +47,9 @@ impl HybridScaler {
         self
     }
 
-    /// Find the smallest fleet (k, c, b) satisfying all constraints.
+    /// Find the smallest fleet (k, c, b) satisfying all constraints —
+    /// [`crate::solver::plan_replicas`] with this scaler's safety margins
+    /// applied (the same planner the replica-set reconciler uses).
     fn plan(
         &self,
         obs: &ScalerObs<'_>,
@@ -59,18 +61,12 @@ impl HybridScaler {
             model.delta * self.latency_margin,
             model.eta * self.latency_margin,
         );
-        let lambda = obs.lambda_rps * self.lambda_headroom;
-        for k in 1..=self.max_instances {
-            // Instance share under round-robin over EDF order: every k-th
-            // budget (the thinned list is still sorted ascending).
-            let thinned: Vec<Ms> =
-                obs.budgets_ms.iter().copied().step_by(k as usize).collect();
-            let input = SolverInput::per_request(thinned, lambda / k as f64);
-            if let Some(sol) = self.solver.solve(&planning, &input, self.limits) {
-                return Some((k, sol.cores, sol.batch));
-            }
-        }
-        None
+        let input = SolverInput::per_request(
+            obs.budgets_ms.to_vec(),
+            obs.lambda_rps * self.lambda_headroom,
+        );
+        plan_replicas(self.solver, &planning, &input, self.limits, self.max_instances)
+            .map(|p| (p.replicas, p.cores, p.batch))
     }
 }
 

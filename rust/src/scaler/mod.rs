@@ -235,7 +235,7 @@ impl Autoscaler for Fa2Scaler {
         for b in 1..=self.b_max {
             if model.latency_ms(b, 1) <= self.headroom * budget {
                 let h = model.throughput_rps(b, 1);
-                if best.map_or(true, |(_, bh)| h > bh) {
+                if best.is_none_or(|(_, bh)| h > bh) {
                     best = Some((b, h));
                 }
             }

@@ -7,9 +7,9 @@
 //!
 //! | Route | Method | Body | Success | Errors |
 //! |---|---|---|---|---|
-//! | `/v1/models` | GET | — | `200` `{"default": name, "models": [{"name", "queue_len", "cores", "batch"}]}` | — |
-//! | `/v1/models/{name}/infer` | POST | infer JSON (below) | `200` infer response | `400` bad JSON/body, `404` unknown model, `504` timeout |
-//! | `/v1/models/{name}/stats` | GET | — | `200` `{"received", "completed", "dropped", "violated", "queue_len", "cores", "batch", "model_refits"}` | `404` unknown model |
+//! | `/v1/models` | GET | — | `200` `{"default": name, "models": [{"name", "replicas", "queue_len", "cores", "batch"}]}` | — |
+//! | `/v1/models/{name}/infer` | POST | infer JSON (below) | `200` infer response (served by the least-loaded replica) | `400` bad JSON/body, `404` unknown model, `504` timeout |
+//! | `/v1/models/{name}/stats` | GET | — | `200` `{"received", "completed", "dropped", "violated", "queue_len", "cores", "batch", "model_refits", "replicas": [{"replica", "received", "completed", "dropped", "violated", "queue_len", "cores", "batch"}]}` — top level is fleet-aggregated, `replicas` is per replica | `404` unknown model |
 //! | `/infer` | POST | infer JSON | `200` — legacy alias for the **default** model | as above |
 //! | `/metrics` | GET | — | `200` Prometheus text (default model's registry) | — |
 //! | `/healthz` | GET | — | `200` `ok` | — |
@@ -51,20 +51,24 @@ const ROUTES: &[&str] = &[
     "POST /infer (legacy alias for the default model)",
 ];
 
-/// Named coordinators behind the HTTP surface; the first registered name
-/// is the default model (legacy `POST /infer` target).
+/// Named replica fleets behind the HTTP surface; the first registered
+/// name is the default model (legacy `POST /infer` target). Each model
+/// maps to one or more coordinators (`serve --replicas`); inference
+/// requests are dispatched to the least-loaded replica.
 pub struct Gateway {
-    models: Vec<(String, Arc<Coordinator>)>,
+    models: Vec<(String, Vec<Arc<Coordinator>>)>,
     by_name: BTreeMap<String, usize>,
 }
 
 impl Gateway {
-    /// Build from (name, coordinator) pairs in priority order; the first
-    /// pair is the default model. Duplicate names are rejected.
-    pub fn from_parts(parts: Vec<(String, Arc<Coordinator>)>) -> Result<Gateway> {
+    /// Build from (name, replica coordinators) pairs in priority order;
+    /// the first pair is the default model. Duplicate names and empty
+    /// fleets are rejected.
+    pub fn from_parts(parts: Vec<(String, Vec<Arc<Coordinator>>)>) -> Result<Gateway> {
         anyhow::ensure!(!parts.is_empty(), "gateway needs at least one model");
         let mut by_name = BTreeMap::new();
-        for (i, (name, _)) in parts.iter().enumerate() {
+        for (i, (name, replicas)) in parts.iter().enumerate() {
+            anyhow::ensure!(!replicas.is_empty(), "model '{name}' has no replicas");
             anyhow::ensure!(
                 by_name.insert(name.clone(), i).is_none(),
                 "duplicate model name '{name}'"
@@ -75,27 +79,36 @@ impl Gateway {
 
     /// A single anonymous model (`"default"`) — the pre-`/v1` shape.
     pub fn single(coordinator: Arc<Coordinator>) -> Gateway {
-        Gateway::from_parts(vec![("default".to_string(), coordinator)])
+        Gateway::from_parts(vec![("default".to_string(), vec![coordinator])])
             .expect("single entry cannot collide")
     }
 
-    pub fn get(&self, name: &str) -> Option<&Arc<Coordinator>> {
-        self.by_name.get(name).map(|&i| &self.models[i].1)
+    /// The replica fleet serving `name`.
+    pub fn get(&self, name: &str) -> Option<&[Arc<Coordinator>]> {
+        self.by_name.get(name).map(|&i| self.models[i].1.as_slice())
     }
 
-    /// The default (first-registered) model.
-    pub fn default_entry(&self) -> (&str, &Arc<Coordinator>) {
-        let (name, c) = &self.models[0];
-        (name.as_str(), c)
+    /// The default (first-registered) model and its replicas.
+    pub fn default_entry(&self) -> (&str, &[Arc<Coordinator>]) {
+        let (name, replicas) = &self.models[0];
+        (name.as_str(), replicas.as_slice())
     }
 
     pub fn names(&self) -> Vec<String> {
         self.models.iter().map(|(n, _)| n.clone()).collect()
     }
 
-    pub fn iter(&self) -> impl Iterator<Item = (&str, &Arc<Coordinator>)> {
-        self.models.iter().map(|(n, c)| (n.as_str(), c))
+    pub fn iter(&self) -> impl Iterator<Item = (&str, &[Arc<Coordinator>])> {
+        self.models.iter().map(|(n, r)| (n.as_str(), r.as_slice()))
     }
+}
+
+/// `POST .../infer`'s dispatch rule: [`crate::coordinator::least_loaded`]
+/// (shared with [`crate::engine::LiveEngine`]).
+fn least_loaded(replicas: &[Arc<Coordinator>]) -> &Coordinator {
+    crate::coordinator::least_loaded(replicas)
+        .expect("fleet is non-empty by Gateway construction")
+        .as_ref()
 }
 
 /// A running HTTP server; dropping the handle does not stop it — call
@@ -184,21 +197,22 @@ fn route(method: &str, path: &str, body: &[u8], gateway: &Gateway) -> (u16, Stri
     match (method, path) {
         ("GET", "/healthz") => (200, "text/plain".into(), "ok".into()),
         ("GET", "/metrics") => {
-            // Prometheus text for the default model (per-model numbers are
-            // on /v1/models/{name}/stats).
-            let (_, c) = gateway.default_entry();
-            (200, "text/plain; version=0.0.4".into(), c.metrics.expose())
+            // Prometheus text for the default model's first replica
+            // (per-model, per-replica numbers are on
+            // /v1/models/{name}/stats).
+            let (_, replicas) = gateway.default_entry();
+            (200, "text/plain; version=0.0.4".into(), replicas[0].metrics.expose())
         }
         ("GET", "/v1/models") => json(200, models_doc(gateway)),
         ("POST", "/infer") => {
-            let (name, c) = gateway.default_entry();
-            infer_response(name, c, body)
+            let (name, replicas) = gateway.default_entry();
+            infer_response(name, least_loaded(replicas), body)
         }
         _ => {
             // /v1/models/{name}/infer | /v1/models/{name}/stats
             if let Some(rest) = path.strip_prefix("/v1/models/") {
                 if let Some((name, action)) = rest.split_once('/') {
-                    let Some(c) = gateway.get(name) else {
+                    let Some(replicas) = gateway.get(name) else {
                         return json(
                             404,
                             Json::obj(vec![
@@ -213,8 +227,10 @@ fn route(method: &str, path: &str, body: &[u8], gateway: &Gateway) -> (u16, Stri
                         );
                     };
                     match (method, action) {
-                        ("POST", "infer") => return infer_response(name, c, body),
-                        ("GET", "stats") => return json(200, stats_doc(c)),
+                        ("POST", "infer") => {
+                            return infer_response(name, least_loaded(replicas), body)
+                        }
+                        ("GET", "stats") => return json(200, stats_doc(replicas)),
                         _ => {}
                     }
                 }
@@ -230,38 +246,73 @@ fn route(method: &str, path: &str, body: &[u8], gateway: &Gateway) -> (u16, Stri
     }
 }
 
-/// `GET /v1/models` payload.
+/// `GET /v1/models` payload (fleet-aggregated per model).
 fn models_doc(gateway: &Gateway) -> Json {
     let (default_name, _) = gateway.default_entry();
     Json::obj(vec![
         ("default", Json::str(default_name)),
         (
             "models",
-            Json::arr(gateway.iter().map(|(name, c)| {
-                let s = c.stats();
+            Json::arr(gateway.iter().map(|(name, replicas)| {
+                let stats: Vec<_> = replicas.iter().map(|c| c.stats()).collect();
                 Json::obj(vec![
                     ("name", Json::str(name)),
-                    ("queue_len", Json::num(s.queue_len as f64)),
-                    ("cores", Json::num(s.cores as f64)),
-                    ("batch", Json::num(s.batch as f64)),
+                    ("replicas", Json::num(replicas.len() as f64)),
+                    (
+                        "queue_len",
+                        Json::num(stats.iter().map(|s| s.queue_len as f64).sum()),
+                    ),
+                    (
+                        "cores",
+                        Json::num(stats.iter().map(|s| s.cores as f64).sum()),
+                    ),
+                    (
+                        "batch",
+                        Json::num(
+                            stats.iter().map(|s| s.batch).max().unwrap_or(0) as f64
+                        ),
+                    ),
                 ])
             })),
         ),
     ])
 }
 
-/// `GET /v1/models/{name}/stats` payload.
-fn stats_doc(c: &Coordinator) -> Json {
-    let s = c.stats();
+/// `GET /v1/models/{name}/stats` payload: fleet-aggregated counters at
+/// the top level (wire-compatible with the single-replica schema) plus a
+/// `replicas` array with each replica's cores / queue depth / decision.
+fn stats_doc(replicas: &[Arc<Coordinator>]) -> Json {
+    let stats: Vec<_> = replicas.iter().map(|c| c.stats()).collect();
+    let sum = |f: fn(&crate::coordinator::CoordinatorStats) -> f64| -> f64 {
+        stats.iter().map(f).sum()
+    };
     Json::obj(vec![
-        ("received", Json::num(s.received as f64)),
-        ("completed", Json::num(s.completed as f64)),
-        ("dropped", Json::num(s.dropped as f64)),
-        ("violated", Json::num(s.violated as f64)),
-        ("queue_len", Json::num(s.queue_len as f64)),
-        ("cores", Json::num(s.cores as f64)),
-        ("batch", Json::num(s.batch as f64)),
-        ("model_refits", Json::num(s.model_refits as f64)),
+        ("received", Json::num(sum(|s| s.received as f64))),
+        ("completed", Json::num(sum(|s| s.completed as f64))),
+        ("dropped", Json::num(sum(|s| s.dropped as f64))),
+        ("violated", Json::num(sum(|s| s.violated as f64))),
+        ("queue_len", Json::num(sum(|s| s.queue_len as f64))),
+        ("cores", Json::num(sum(|s| s.cores as f64))),
+        (
+            "batch",
+            Json::num(stats.iter().map(|s| s.batch).max().unwrap_or(0) as f64),
+        ),
+        ("model_refits", Json::num(sum(|s| s.model_refits as f64))),
+        (
+            "replicas",
+            Json::arr(stats.iter().enumerate().map(|(i, s)| {
+                Json::obj(vec![
+                    ("replica", Json::num(i as f64)),
+                    ("received", Json::num(s.received as f64)),
+                    ("completed", Json::num(s.completed as f64)),
+                    ("dropped", Json::num(s.dropped as f64)),
+                    ("violated", Json::num(s.violated as f64)),
+                    ("queue_len", Json::num(s.queue_len as f64)),
+                    ("cores", Json::num(s.cores as f64)),
+                    ("batch", Json::num(s.batch as f64)),
+                ])
+            })),
+        ),
     ])
 }
 

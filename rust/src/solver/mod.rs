@@ -217,6 +217,55 @@ impl SolverChoice {
     }
 }
 
+/// A two-level (horizontal × vertical) scaling decision: the smallest
+/// replica count `k` for which a per-replica `(c, b)` exists, plus that
+/// per-replica configuration.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ReplicaPlan {
+    /// Fleet size (replica count).
+    pub replicas: u32,
+    /// Cores per replica.
+    pub cores: Cores,
+    /// Batch size per replica.
+    pub batch: BatchSize,
+}
+
+/// Two-level extension of the IP (the *Tale of Two Scales* reconciliation
+/// this repo grows toward): vertical scaling caps out at `limits.c_max`,
+/// so when no single-replica `(c, b)` is feasible the only move is
+/// horizontal. Try fleet sizes `k = 1..=max_replicas` ascending; replica
+/// `i` of `k` serves every k-th request of the EDF queue (round-robin over
+/// the sorted deadlines), so its constraint set is the thinned budget list
+/// and `λ/k`. The first feasible `k` is returned — smallest fleet first,
+/// because replicas (unlike in-place resizes) pay a cold start.
+///
+/// Shared by [`crate::scaler::HybridScaler`] and the replica-set
+/// reconciler ([`crate::engine::replicaset`]) so the two layers can never
+/// disagree about when horizontal scaling is warranted.
+pub fn plan_replicas(
+    solver: SolverChoice,
+    model: &LatencyModel,
+    input: &SolverInput,
+    limits: SolverLimits,
+    max_replicas: u32,
+) -> Option<ReplicaPlan> {
+    assert!(max_replicas >= 1);
+    for k in 1..=max_replicas {
+        // Every k-th budget of an ascending list is still ascending.
+        let thinned: Vec<Ms> =
+            input.budgets_ms.iter().copied().step_by(k as usize).collect();
+        let per_replica = SolverInput {
+            budgets_ms: thinned,
+            lambda_rps: input.lambda_rps / k as f64,
+            uniform_budget_ms: input.uniform_budget_ms,
+        };
+        if let Some(sol) = solver.solve(model, &per_replica, limits) {
+            return Some(ReplicaPlan { replicas: k, cores: sol.cores, batch: sol.batch });
+        }
+    }
+    None
+}
+
 /// Algorithm 1, verbatim loop structure.
 #[derive(Debug, Clone, Copy, Default)]
 pub struct BruteForceSolver;
@@ -428,6 +477,80 @@ mod tests {
             let b = IncrementalSolver.solve(&m, &input, SolverLimits::default());
             assert_eq!(a, b, "diverged on {input:?}");
         }
+    }
+
+    #[test]
+    fn idle_system_empty_budgets_no_uniform_picks_cheapest() {
+        // The idle edge: nothing queued, no uniform budget, λ = 0. The
+        // drain check is vacuously feasible and the throughput constraint
+        // binds at nothing, so both solvers must return the objective
+        // minimum (1 core, batch 1) rather than erroring on the empty
+        // budget list.
+        let input = SolverInput { budgets_ms: vec![], lambda_rps: 0.0, uniform_budget_ms: None };
+        let m = model();
+        for (name, sol) in [
+            ("brute", BruteForceSolver.solve(&m, &input, SolverLimits::default())),
+            ("incremental", IncrementalSolver.solve(&m, &input, SolverLimits::default())),
+        ] {
+            let sol = sol.unwrap_or_else(|| panic!("{name} found idle infeasible"));
+            assert_eq!((sol.cores, sol.batch), (1, 1), "{name}: {sol:?}");
+        }
+        // Same via the per_request constructor (debug-asserted sorted).
+        let via_ctor = SolverInput::per_request(Vec::new(), 0.0);
+        assert_eq!(
+            BruteForceSolver.solve(&m, &via_ctor, SolverLimits::default()),
+            IncrementalSolver.solve(&m, &via_ctor, SolverLimits::default()),
+        );
+    }
+
+    #[test]
+    fn plan_replicas_stays_single_when_vertical_suffices() {
+        let input = SolverInput::uniform(10, 1_000.0, 0.0, 20.0);
+        let plan = plan_replicas(
+            SolverChoice::Incremental,
+            &model(),
+            &input,
+            SolverLimits::default(),
+            8,
+        )
+        .unwrap();
+        assert_eq!(plan.replicas, 1, "{plan:?}");
+    }
+
+    #[test]
+    fn plan_replicas_goes_horizontal_past_c_max() {
+        // yolov5s tops out around 31 rps per replica even at c = 16: 100
+        // rps requires horizontal scale-out, and 4 replicas (25 rps each)
+        // is the smallest feasible fleet.
+        let m = LatencyModel::yolov5s();
+        let input = SolverInput::per_request(vec![900.0; 20], 100.0);
+        let plan = plan_replicas(
+            SolverChoice::Incremental,
+            &m,
+            &input,
+            SolverLimits::default(),
+            8,
+        )
+        .unwrap();
+        assert!(plan.replicas >= 2, "{plan:?}");
+        assert!(m.throughput_rps(plan.batch, plan.cores) >= 100.0 / plan.replicas as f64);
+        // Brute force agrees (the two implementations are equivalent).
+        assert_eq!(
+            plan_replicas(SolverChoice::BruteForce, &m, &input, SolverLimits::default(), 8),
+            Some(plan)
+        );
+    }
+
+    #[test]
+    fn plan_replicas_none_when_even_max_fleet_infeasible() {
+        // Budget below l(1, 16) for every request: no fleet size helps,
+        // because thinning never relaxes the tightest per-request budget.
+        let m = model();
+        let input = SolverInput::per_request(vec![1.0; 12], 5.0);
+        assert_eq!(
+            plan_replicas(SolverChoice::Incremental, &m, &input, SolverLimits::default(), 6),
+            None
+        );
     }
 
     #[test]

@@ -109,6 +109,26 @@ impl Welford {
     pub fn max(&self) -> f64 {
         self.max
     }
+
+    /// Fold another accumulator into this one (Chan et al.'s parallel
+    /// variance combination) — exact up to float rounding, so replica-set
+    /// metrics can be aggregated without keeping every sample.
+    pub fn merge(&mut self, other: &Welford) {
+        if other.n == 0 {
+            return;
+        }
+        if self.n == 0 {
+            *self = other.clone();
+            return;
+        }
+        let n = self.n + other.n;
+        let delta = other.mean - self.mean;
+        self.m2 += other.m2 + delta * delta * (self.n as f64 * other.n as f64) / n as f64;
+        self.mean += delta * other.n as f64 / n as f64;
+        self.n = n;
+        self.min = self.min.min(other.min);
+        self.max = self.max.max(other.max);
+    }
 }
 
 /// Fixed-boundary histogram (Prometheus-style cumulative buckets).
@@ -236,6 +256,38 @@ mod tests {
         assert!((w.std() - s.std).abs() < 1e-9);
         assert_eq!(w.min(), s.min);
         assert_eq!(w.max(), s.max);
+    }
+
+    #[test]
+    fn welford_merge_matches_single_pass() {
+        let xs: Vec<f64> = (0..500).map(|i| (i as f64).cos() * 3.0 + 5.0).collect();
+        let (left, right) = xs.split_at(123);
+        let mut a = Welford::new();
+        for &x in left {
+            a.push(x);
+        }
+        let mut b = Welford::new();
+        for &x in right {
+            b.push(x);
+        }
+        a.merge(&b);
+        let mut whole = Welford::new();
+        for &x in &xs {
+            whole.push(x);
+        }
+        assert_eq!(a.count(), whole.count());
+        assert!((a.mean() - whole.mean()).abs() < 1e-9);
+        assert!((a.std() - whole.std()).abs() < 1e-9);
+        assert_eq!(a.min(), whole.min());
+        assert_eq!(a.max(), whole.max());
+        // Merging an empty accumulator is a no-op; merging into one adopts.
+        let empty = Welford::new();
+        let before = a.clone();
+        a.merge(&empty);
+        assert_eq!(a.count(), before.count());
+        let mut fresh = Welford::new();
+        fresh.merge(&whole);
+        assert_eq!(fresh.count(), whole.count());
     }
 
     #[test]

@@ -24,6 +24,7 @@ fn small_matrix(horizon_s: f64) -> ExperimentSpec {
         disciplines: vec![QueueDiscipline::Edf, QueueDiscipline::Fifo],
         solvers: vec![SolverChoice::Incremental, SolverChoice::BruteForce],
         budgets: vec![48],
+        replica_budgets: vec![1],
         horizon_ms: horizon_s * 1_000.0,
         model: "yolov5s".into(),
         seed: 42,
@@ -135,6 +136,59 @@ fn committed_baseline_parses_and_gates() {
         GateOutcome::Regressions(rs) => {
             panic!("fresh report regressed against committed baseline: {rs:?}")
         }
+    }
+}
+
+/// The replica-budget acceptance criterion: at 2x the paper's traffic
+/// (past a single replica's c_max ceiling), Sponge with a replica budget
+/// of 2 must do no worse on violation rate than single-replica Sponge —
+/// the same comparison the `paper` matrix reports at full length, kept
+/// here at an integration-test-sized horizon.
+#[test]
+fn replicated_sponge_beats_single_replica_at_double_traffic() {
+    let spec = ExperimentSpec {
+        name: "it-replicas".into(),
+        workloads: vec![WorkloadSource::paper_scaled(2.0)],
+        traces: vec![TraceSource::Synthetic { seed: 0x7ace }],
+        engines: vec![EngineKind::Sim],
+        policies: vec![Policy::Sponge],
+        disciplines: vec![QueueDiscipline::Edf],
+        solvers: vec![SolverChoice::Incremental],
+        budgets: vec![48],
+        replica_budgets: vec![1, 2],
+        horizon_ms: 60_000.0,
+        model: "yolov5s".into(),
+        seed: 42,
+        noise_cv: 0.05,
+        quick: false,
+    };
+    let report = run_matrix(&spec).unwrap();
+    assert_eq!(report.cells.len(), 2);
+    let rate_of = |suffix: &str| {
+        report
+            .cells
+            .iter()
+            .find(|c| c.id.ends_with(suffix))
+            .map(|c| c.metrics.violation_rate_pct)
+            .unwrap_or_else(|| panic!("no cell ending {suffix}"))
+    };
+    let single = rate_of("@48c");
+    let replicated = rate_of("@48cx2r");
+    assert!(
+        replicated <= single,
+        "replica budget 2 regressed violations: {replicated:.2}% > {single:.2}%"
+    );
+    // 40 rps is genuinely past one replica's ceiling (~31 rps): the
+    // single-replica cell must be visibly overloaded, and the replicated
+    // cell must be a real improvement, not a tie between two disasters.
+    assert!(single > 10.0, "single-replica cell not overloaded: {single:.2}%");
+    assert!(
+        replicated < single * 0.8,
+        "expected a sizeable win: {replicated:.2}% vs {single:.2}%"
+    );
+    // Both cells conserved.
+    for c in &report.cells {
+        assert_eq!(c.metrics.submitted, c.metrics.completed + c.metrics.dropped);
     }
 }
 

@@ -69,6 +69,22 @@ fn serve_rejects_unknown_model_variant() {
 }
 
 #[test]
+fn serve_rejects_zero_replicas() {
+    let (code, _, stderr) = run_code(&[
+        "serve", "--models", "resnet", "--executor", "mock", "--replicas", "0",
+    ]);
+    assert_eq!(code, Some(1), "{stderr}");
+    assert!(stderr.contains("--replicas"), "{stderr}");
+}
+
+#[test]
+fn serve_help_documents_replicas() {
+    let (code, stdout, _) = run_code(&["serve", "--help"]);
+    assert_eq!(code, Some(0));
+    assert!(stdout.contains("--replicas"), "{stdout}");
+}
+
+#[test]
 fn serve_rejects_unknown_executor() {
     let (code, _, stderr) =
         run_code(&["serve", "--models", "resnet", "--executor", "warp"]);

@@ -7,7 +7,7 @@
 use sponge::config::Policy;
 use sponge::engine::{
     run_scenario, EngineRequest, LiveEngine, LiveEngineCfg, ModelRegistry, ModelSpec,
-    Scenario, ServingEngine, SimEngine, SimEngineCfg,
+    ReplicaSetCfg, ReplicaSetEngine, Scenario, ServingEngine, SimEngine, SimEngineCfg,
 };
 use sponge::network::{BandwidthTrace, NetworkModel};
 use sponge::queue::{Batch, EdfQueue};
@@ -92,12 +92,42 @@ fn both_engines_expose_the_same_registry_surface() {
 }
 
 #[test]
+fn replicaset_engine_matches_sim_accounting_on_the_shared_scenario() {
+    // The replica-set engine is a third ServingEngine implementation;
+    // with a replica budget it must still satisfy the conformance
+    // contract (conservation, per-model isolation) on the same scenario.
+    let reg = registry();
+    let (scn, net) = scenario(5);
+    let mut rs = ReplicaSetEngine::new(
+        &reg,
+        ReplicaSetCfg { max_replicas: 2, ..Default::default() },
+    )
+    .unwrap();
+    let report = run_scenario(&mut rs, &scn, &net).unwrap();
+    assert_eq!(report.engine, "replicaset");
+    assert!(report.conserved(), "{report:?}");
+    assert_eq!(report.drain.submitted, 150);
+    for model in ["resnet", "yolov5s"] {
+        let s = report.snapshot(model).unwrap();
+        assert_eq!(s.in_flight(), 0, "{model}: work left in flight");
+        assert!(s.completed > 0, "{model}: completed nothing: {s:?}");
+    }
+}
+
+#[test]
 fn trait_objects_are_interchangeable() {
     // The point of the redesign: scenario code written once against
-    // `&mut dyn ServingEngine` runs on either implementation.
+    // `&mut dyn ServingEngine` runs on any implementation.
     let reg = registry();
     let mut engines: Vec<Box<dyn ServingEngine>> = vec![
         Box::new(SimEngine::new(&reg, SimEngineCfg::default()).unwrap()),
+        Box::new(
+            ReplicaSetEngine::new(
+                &reg,
+                ReplicaSetCfg { max_replicas: 2, ..Default::default() },
+            )
+            .unwrap(),
+        ),
         Box::new(
             LiveEngine::start_mock(
                 &reg,

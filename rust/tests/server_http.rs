@@ -222,6 +222,53 @@ fn v1_stats_tracks_per_model_traffic() {
 }
 
 #[test]
+fn v1_stats_reports_per_replica_breakdown() {
+    // A model served by 3 replicas: the stats doc keeps the aggregated
+    // top level (wire-compatible) and adds a per-replica array with each
+    // replica's cores / queue depth.
+    let mut reg = ModelRegistry::new();
+    reg.register(ModelSpec::named("resnet").unwrap().with_replicas(3)).unwrap();
+    let engine = LiveEngine::start_mock(&reg, LiveEngineCfg::default()).unwrap();
+    let gateway = Arc::new(Gateway::from_parts(engine.coordinators()).unwrap());
+    let handle = serve("127.0.0.1:0", gateway).unwrap();
+
+    for _ in 0..4 {
+        let (code, body) = client::post_json(
+            &handle.addr(),
+            "/v1/models/resnet/infer",
+            &infer_body(4),
+        )
+        .unwrap();
+        assert_eq!(code, 200, "{body}");
+    }
+    let (code, body) =
+        client::get(&handle.addr(), "/v1/models/resnet/stats").unwrap();
+    assert_eq!(code, 200, "{body}");
+    let doc = Json::parse(&body).unwrap();
+    assert_eq!(doc.get("received").as_u64(), Some(4), "{body}");
+    let replicas = doc.get("replicas").as_arr().unwrap();
+    assert_eq!(replicas.len(), 3, "{body}");
+    let mut received_sum = 0;
+    for (i, r) in replicas.iter().enumerate() {
+        assert_eq!(r.get("replica").as_u64(), Some(i as u64));
+        assert!(r.get("cores").as_f64().is_some(), "{body}");
+        assert!(r.get("queue_len").as_f64().is_some(), "{body}");
+        received_sum += r.get("received").as_u64().unwrap();
+    }
+    assert_eq!(received_sum, 4, "{body}");
+    // /v1/models aggregates the fleet and reports the replica count.
+    let (_, body) = client::get(&handle.addr(), "/v1/models").unwrap();
+    let doc = Json::parse(&body).unwrap();
+    assert_eq!(
+        doc.get("models").at(0).get("replicas").as_u64(),
+        Some(3),
+        "{body}"
+    );
+    handle.stop();
+    engine.shutdown();
+}
+
+#[test]
 fn metrics_exposed_after_traffic() {
     let handle = start_single();
     for _ in 0..3 {

@@ -30,7 +30,9 @@ fi
 if [ "${SKIP_CLIPPY:-0}" = "1" ]; then
     echo "==> SKIP_CLIPPY=1; skipping clippy"
 elif cargo clippy --version >/dev/null 2>&1; then
-    step cargo clippy -- -D warnings
+    # --all-targets lints tests, benches, and examples too, not just the
+    # lib/bin — the whole tree is held to -D warnings.
+    step cargo clippy --all-targets -- -D warnings
 else
     echo "==> cargo clippy unavailable; skipping lints"
 fi
