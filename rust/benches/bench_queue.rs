@@ -62,6 +62,12 @@ fn main() {
     });
     rep.record(r);
 
+    // The zero-copy solver view (incremental deadline index, no collect).
+    let r = bench("deadline index   n=50k", || {
+        keep(q.live_deadline_index(5_000.0).len());
+    });
+    rep.record(r);
+
     let r = bench("take_batch(16)+refill n=50k", || {
         if let Some(b) = q.take_batch(16) {
             for req in b.requests {

@@ -8,7 +8,7 @@ use sponge::solver::{BruteForceSolver, IncrementalSolver, IpSolver, SolverInput,
 use sponge::util::bench::{banner, bench, keep, Reporter};
 use sponge::util::rng::Pcg32;
 
-fn random_input(n: usize, seed: u64) -> SolverInput {
+fn random_input(n: usize, seed: u64) -> SolverInput<'static> {
     let mut rng = Pcg32::seeded(seed);
     let mut budgets: Vec<f64> = (0..n).map(|_| rng.uniform(50.0, 1_500.0)).collect();
     budgets.sort_by(f64::total_cmp);

@@ -206,6 +206,11 @@ pub struct ReplicaSet {
     /// Reconciler action counters (reported, and pinned by tests).
     scale_outs: u64,
     drains: u64,
+    /// Reusable merge buffer for the reconciler's fleet-wide deadline
+    /// list (k sorted per-replica indexes merged per tick) — cleared and
+    /// refilled in place, so steady-state reconciliation allocates
+    /// nothing once the buffer has grown to the working set.
+    deadline_scratch: Vec<Ms>,
 }
 
 impl ReplicaSet {
@@ -241,6 +246,7 @@ impl ReplicaSet {
             peak_cores: 0,
             scale_outs: 0,
             drains: 0,
+            deadline_scratch: Vec::new(),
         };
         for _ in 0..initial {
             set.add_replica(true)?;
@@ -461,25 +467,34 @@ impl ReplicaSet {
         if self.cfg.max_replicas <= 1 {
             return;
         }
-        // Merged EDF budget list across the fleet + aggregate λ̂.
-        let mut budgets: Vec<Ms> = Vec::new();
-        for r in &self.replicas {
-            if let Some(b) = r.engine.queued_budgets(&self.spec.name) {
-                budgets.extend(b);
-            }
-        }
-        budgets.retain(|b| *b > 0.0);
-        budgets.sort_by(f64::total_cmp);
-        let input =
-            SolverInput::per_request(budgets, self.lambda_rps * self.cfg.lambda_headroom);
         let limits = SolverLimits { c_max: self.c_eff(), ..self.spec.limits };
-        let plan = plan_replicas(
-            self.spec.solver,
-            &self.spec.latency,
-            &input,
-            limits,
-            self.cfg.max_replicas,
-        );
+        let lambda = self.lambda_rps * self.cfg.lambda_headroom;
+        let now = self.clock.now_ms();
+        let plan = {
+            // Merged fleet-wide EDF deadline list + aggregate λ̂: each
+            // replica lends a zero-copy borrow of its live deadline
+            // index (replica clocks are lock-stepped, so absolute
+            // deadlines are directly comparable); the reusable scratch
+            // buffer merges the k sorted runs. Thinning across candidate
+            // fleet sizes happens inside plan_replicas as a strided view
+            // — no per-k lists are materialized.
+            let scratch = &mut self.deadline_scratch;
+            scratch.clear();
+            for r in &self.replicas {
+                if let Some(d) = r.engine.live_deadlines(&self.spec.name) {
+                    scratch.extend_from_slice(d);
+                }
+            }
+            scratch.sort_unstable_by(f64::total_cmp);
+            let input = SolverInput::from_deadlines(scratch, now, lambda);
+            plan_replicas(
+                self.spec.solver,
+                &self.spec.latency,
+                &input,
+                limits,
+                self.cfg.max_replicas,
+            )
+        };
         let live = self.replicas.iter().filter(|r| !r.draining).count() as u32;
         // Globally infeasible even at the max fleet: scale out to the
         // ceiling — best effort, same spirit as Sponge's infeasible

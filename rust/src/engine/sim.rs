@@ -230,11 +230,20 @@ impl SimEngine {
     }
 
     /// EDF-sorted remaining budgets of one model's queued requests at the
-    /// current virtual time — the replica-set reconciler's per-replica
-    /// solver input.
+    /// current virtual time (owned; the zero-copy reconciler path is
+    /// [`SimEngine::live_deadlines`]).
     pub fn queued_budgets(&self, model: &str) -> Option<Vec<Ms>> {
         self.model_idx(model)
             .map(|i| self.models[i].queue.remaining_budgets(self.clock.now_ms()))
+    }
+
+    /// EDF-sorted absolute deadlines of one model's still-live queued
+    /// requests (deadline strictly past the current virtual time) — a
+    /// zero-copy borrow of the queue's incremental deadline index, the
+    /// replica-set reconciler's per-replica solver input.
+    pub fn live_deadlines(&self, model: &str) -> Option<&[Ms]> {
+        self.model_idx(model)
+            .map(|i| self.models[i].queue.live_deadline_index(self.clock.now_ms()))
     }
 
     /// Cores of one model's instances able to serve right now (0 while a
@@ -470,19 +479,19 @@ impl ServingEngine for SimEngine {
                 let m = &mut self.models[idx];
                 m.cluster.tick(t_end);
                 drop_expired(t_end, &mut m.queue, &mut m.tracker);
-                let mut budgets = m.queue.remaining_budgets(t_end);
-                // Under FIFO, expired requests buried behind a live head
-                // survive drop_expired; their negative budgets would make
-                // every (b, c) drain-infeasible and pin Sponge to its
-                // best-effort fallback. No allocation can save a doomed
-                // request, so the solver never plans for them. (Under EDF
-                // the expiry sweep is exhaustive and this is a no-op.)
-                budgets.retain(|b| *b > 0.0);
                 let lambda = m.rate.rate_rps(t_end);
+                // Zero-copy queue snapshot: borrow the incrementally
+                // sorted deadline index — no collect, no per-tick sort.
+                // The live suffix also skips expired requests buried
+                // behind a live FIFO head (their negative budgets would
+                // make every (b, c) drain-infeasible and pin Sponge to
+                // its best-effort fallback; no allocation can save a
+                // doomed request, so the solver never plans for them —
+                // under EDF the expiry sweep above makes this a no-op).
                 let obs = ScalerObs {
                     now_ms: t_end,
                     lambda_rps: lambda,
-                    budgets_ms: &budgets,
+                    deadlines_ms: m.queue.live_deadline_index(t_end),
                     cl_max_ms: m.cl_max_window,
                     slo_ms: m.spec.slo_ms,
                 };
@@ -693,6 +702,31 @@ mod tests {
     }
 
     #[test]
+    fn scaler_cost_counts_decide_calls_within_probe_budget() {
+        // The scaler-cost instrumentation counts one `decide` per model
+        // per tick, and the memoized/warm-started incremental solver must
+        // stay within its probe budget: at most 2 + ceil(log2(c_max)) = 6
+        // best_batch probes per solve (the old search paid an extra
+        // probe re-deriving the final batch; warm-started steady-state
+        // ticks pay ~2).
+        use crate::solver::probes;
+        let mut e = two_model_engine(0.0); // resnet=sponge, yolov5s=static8
+        load(&mut e, "resnet", 100, 50.0, 1_000.0);
+        probes::reset();
+        for _ in 0..10 {
+            e.tick();
+        }
+        let (calls, _ns) = e.scaler_cost("resnet").unwrap();
+        assert_eq!(calls, 10, "one decide per adaptation tick");
+        let used = probes::best_batch_calls();
+        assert!(used >= calls, "every sponge solve probes at least once");
+        assert!(
+            used <= calls * 6,
+            "{used} probes over {calls} solves busts the 2+log2(c_max) budget"
+        );
+    }
+
+    #[test]
     fn queued_budgets_accessor_reports_edf_order() {
         let mut e = two_model_engine(0.0);
         e.submit("resnet", EngineRequest::new(900.0, 0.0).at(0.0)).unwrap();
@@ -704,6 +738,14 @@ mod tests {
             "not EDF-sorted: {budgets:?}"
         );
         assert!(e.queued_budgets("nope").is_none());
+        // The zero-copy borrow agrees with the owned snapshot: same
+        // requests, shifted by `now`.
+        let now = e.now_ms();
+        let live = e.live_deadlines("resnet").unwrap();
+        let from_live: Vec<f64> = live.iter().map(|d| d - now).collect();
+        let positive: Vec<f64> = budgets.into_iter().filter(|b| *b > 0.0).collect();
+        assert_eq!(from_live, positive);
+        assert!(e.live_deadlines("nope").is_none());
     }
 
     #[test]

@@ -145,6 +145,11 @@ fn run_sim_cell(
     let core_ms = engine.core_ms(&spec.model).unwrap_or(0.0);
     let span_ms = engine.now_ms().max(1.0);
     let (scaler_calls, scaler_ns) = engine.scaler_cost(&spec.model).unwrap_or((0, 0));
+    // One sort serves both percentile queries.
+    let (p50, p99) = tracker
+        .e2e_percentiles(&[50.0, 99.0])
+        .map(|v| (v[0], v[1]))
+        .unwrap_or((0.0, 0.0));
     let metrics = CellMetrics {
         submitted: snap.submitted,
         completed: snap.completed,
@@ -152,8 +157,8 @@ fn run_sim_cell(
         violations: snap.violations,
         violation_rate_pct: tracker.violation_rate_pct(),
         mean_e2e_ms: tracker.mean_e2e_ms(),
-        e2e_p50_ms: tracker.e2e_percentile(50.0).unwrap_or(0.0),
-        e2e_p99_ms: tracker.e2e_percentile(99.0).unwrap_or(0.0),
+        e2e_p50_ms: p50,
+        e2e_p99_ms: p99,
         mean_queue_ms: tracker.mean_queue_ms(),
         mean_cores: core_ms / span_ms,
         peak_cores: engine.peak_cores(&spec.model).unwrap_or(0),
@@ -203,6 +208,10 @@ fn run_replica_cell(
     let core_ms = set.core_ms();
     let span_ms = engine.now_ms().max(1.0);
     let (scaler_calls, scaler_ns) = set.scaler_cost();
+    let (p50, p99) = tracker
+        .e2e_percentiles(&[50.0, 99.0])
+        .map(|v| (v[0], v[1]))
+        .unwrap_or((0.0, 0.0));
     let metrics = CellMetrics {
         submitted: snap.submitted,
         completed: snap.completed,
@@ -210,8 +219,8 @@ fn run_replica_cell(
         violations: snap.violations,
         violation_rate_pct: tracker.violation_rate_pct(),
         mean_e2e_ms: tracker.mean_e2e_ms(),
-        e2e_p50_ms: tracker.e2e_percentile(50.0).unwrap_or(0.0),
-        e2e_p99_ms: tracker.e2e_percentile(99.0).unwrap_or(0.0),
+        e2e_p50_ms: p50,
+        e2e_p99_ms: p99,
         mean_queue_ms: tracker.mean_queue_ms(),
         mean_cores: core_ms / span_ms,
         peak_cores: set.peak_cores(),

@@ -37,6 +37,9 @@
 //! * [`experiment`] — spongebench: declarative experiment matrices over
 //!   the engine (workload × trace × policy knobs), deterministic JSON
 //!   reports, and the CI perf-regression gate
+//! * [`microbench`] — fixed-iteration hot-path microbenchmarks (`sponge
+//!   bench --micro`): queue snapshot, IP solve (cold/warm), replica
+//!   planning — each against its pre-refactor reference implementation
 //! * [`server`] — versioned `/v1` HTTP surface over the registry
 //!   (hand-rolled HTTP/1.0; endpoint reference in the module docs)
 //! * [`coordinator`] — live pipeline: EDF queue + batcher + processor +
@@ -67,6 +70,7 @@ pub mod config;
 pub mod coordinator;
 pub mod engine;
 pub mod experiment;
+pub mod microbench;
 pub mod monitoring;
 pub mod network;
 pub mod perfmodel;

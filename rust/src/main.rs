@@ -80,11 +80,18 @@ Routes: GET /v1/models | POST /v1/models/{name}/infer |
             "USAGE: sponge bench [OPTIONS]
 
   --matrix NAME     experiment matrix: default | paper   [default: default]
-  --quick           cap the horizon at 120 s (CI smoke mode)
-  --out FILE        JSON report path   [default: BENCH_<utc-date>.json]
+  --micro           run the hot-path microbench suite instead of a matrix
+                    (queue snapshot, IP solve cold/warm, replica planning,
+                    each vs its pre-refactor reference implementation);
+                    fixed-iteration, deterministic checksums
+  --quick           matrix: cap the horizon at 120 s; micro: shrink the
+                    deep-queue fixture to n=5000 (CI smoke mode)
+  --out FILE        JSON report path   [default: BENCH_<utc-date>.json,
+                    micro: BENCH_<utc-date>-micro.json]
   --no-write        print only, write no report file
   --stable          omit wall timings + date: two runs of the same matrix
-                    produce byte-identical output (determinism check)
+                    (or micro suite) produce byte-identical output
+                    (determinism check)
   --baseline FILE   compare against a baseline report (benches/baseline.json);
                     exits nonzero when any cell's mean e2e latency regresses
                     beyond the threshold. Bootstrap baselines pass with a
@@ -92,7 +99,8 @@ Routes: GET /v1/models | POST /v1/models/{name}/infer |
   --threshold PCT   regression threshold in percent   [default: 25]
 
 The report schema (spongebench/v1) is documented in README.md and
-rust/src/experiment/report.rs.
+rust/src/experiment/report.rs; the micro section (kind: \"micro\") in
+rust/src/microbench/mod.rs.
 "
         }
         "simulate" => {
@@ -175,7 +183,7 @@ fn env_logger_lite() {
 /// Parse + dispatch; the return value is the process exit code.
 fn run() -> i32 {
     let args = match Args::from_env(
-        &["verbose", "paper-verbatim", "help", "quick", "stable", "no-write"],
+        &["verbose", "paper-verbatim", "help", "quick", "stable", "no-write", "micro"],
         true,
     ) {
         Ok(a) => a,
@@ -293,6 +301,10 @@ fn cmd_bench(args: &Args) -> Result<()> {
     };
     use sponge::util::json::Json;
 
+    if args.has("micro") {
+        return cmd_bench_micro(args);
+    }
+
     let name = args.str_or("matrix", "default");
     let mut spec = ExperimentSpec::named(&name)
         .ok_or_else(|| anyhow::anyhow!("unknown matrix '{name}' (default|paper)"))?;
@@ -365,6 +377,34 @@ fn cmd_bench(args: &Args) -> Result<()> {
                 );
             }
         }
+    }
+    Ok(())
+}
+
+/// `sponge bench --micro`: the fixed-iteration hot-path suite. Stable
+/// output is byte-deterministic (CI runs it twice and `cmp`s); the
+/// non-stable report adds wall ns/op so `BENCH_*-micro.json` tracks the
+/// hot path's trajectory next to the matrix reports.
+fn cmd_bench_micro(args: &Args) -> Result<()> {
+    use sponge::experiment::utc_today;
+    use sponge::microbench::{run_micro, MicroCfg};
+
+    let stable = args.has("stable");
+    let started = std::time::Instant::now();
+    let report = run_micro(&MicroCfg { quick: args.has("quick") });
+    print!("{}", report.table());
+    if !stable {
+        println!(
+            "\nmicrobench wall time: {:.1} s ({} benches)",
+            started.elapsed().as_secs_f64(),
+            report.benches.len()
+        );
+    }
+    if !args.has("no-write") {
+        let out = args.str_or("out", &format!("BENCH_{}-micro.json", utc_today()));
+        std::fs::write(&out, report.to_json(stable).pretty() + "\n")
+            .with_context(|| format!("writing {out}"))?;
+        println!("report -> {out}");
     }
     Ok(())
 }

@@ -1,0 +1,155 @@
+//! Pre-refactor reference implementations of the adaptation hot path.
+//!
+//! These are the algorithms the frontier/index refactor replaced, kept
+//! verbatim for two jobs:
+//!
+//! * the **oracle** for the equivalence property suite
+//!   (`rust/tests/solver_properties.rs`): the frontier solver must return
+//!   bit-identical `Solution`s to these on randomized inputs, and the
+//!   strided `plan_replicas` must match the Vec-thinning planner;
+//! * the **baseline** side of `sponge bench --micro`, so the speedup the
+//!   refactor bought stays measurable in-tree instead of decaying into a
+//!   stale claim in a comment.
+//!
+//! Nothing in the serving path calls these.
+
+use crate::perfmodel::LatencyModel;
+use crate::solver::{throughput_ok, ReplicaPlan, Solution, SolverInput, SolverLimits};
+use crate::{BatchSize, Cores, Ms};
+
+/// The old drain check: simulate the EDF queue drain with an accumulated
+/// `q_r += l` (Algorithm 1 lines 9–14), early-exiting on the first
+/// violated batch.
+pub fn legacy_drain_feasible(
+    model: &LatencyModel,
+    input: &SolverInput<'_>,
+    b: BatchSize,
+    c: Cores,
+) -> bool {
+    let l = model.latency_ms(b, c);
+    let n = input.n();
+    let mut q_r: Ms = 0.0;
+    let mut i = 0usize;
+    while i < n {
+        let finish = q_r + l;
+        if finish > input.budget_of(i) + 1e-9 {
+            return false;
+        }
+        q_r += l;
+        i += b as usize;
+    }
+    true
+}
+
+fn legacy_feasible(
+    model: &LatencyModel,
+    input: &SolverInput<'_>,
+    b: BatchSize,
+    c: Cores,
+) -> bool {
+    throughput_ok(model, input, b, c) && legacy_drain_feasible(model, input, b, c)
+}
+
+fn solution(model: &LatencyModel, limits: SolverLimits, b: BatchSize, c: Cores) -> Solution {
+    Solution {
+        cores: c,
+        batch: b,
+        predicted_latency_ms: model.latency_ms(b, c),
+        objective: c as f64 + limits.delta * b as f64,
+    }
+}
+
+fn legacy_best_batch(
+    model: &LatencyModel,
+    input: &SolverInput<'_>,
+    limits: SolverLimits,
+    c: Cores,
+) -> Option<BatchSize> {
+    let first_budget = if input.n() == 0 {
+        f64::INFINITY
+    } else {
+        input.budget_of(0)
+    };
+    for b in 1..=limits.b_max {
+        if model.latency_ms(b, c) > first_budget + 1e-9 {
+            return None;
+        }
+        if legacy_feasible(model, input, b, c) {
+            return Some(b);
+        }
+    }
+    None
+}
+
+/// The old `BruteForceSolver::solve` (per-candidate drain re-simulation).
+pub fn legacy_brute_solve(
+    model: &LatencyModel,
+    input: &SolverInput<'_>,
+    limits: SolverLimits,
+) -> Option<Solution> {
+    for c in 1..=limits.c_max {
+        for b in 1..=limits.b_max {
+            if legacy_feasible(model, input, b, c) {
+                return Some(solution(model, limits, b, c));
+            }
+        }
+    }
+    None
+}
+
+/// The old `IncrementalSolver::solve`: binary-search the smallest
+/// feasible `c` re-simulating the drain per candidate, then re-derive the
+/// batch for the final `c` (the redundant probe the refactor memoized
+/// away).
+pub fn legacy_incremental_solve(
+    model: &LatencyModel,
+    input: &SolverInput<'_>,
+    limits: SolverLimits,
+) -> Option<Solution> {
+    let exists = |c: Cores| legacy_best_batch(model, input, limits, c).is_some();
+    if !exists(limits.c_max) {
+        return None;
+    }
+    let (mut lo, mut hi) = (1u32, limits.c_max);
+    while lo < hi {
+        let mid = (lo + hi) / 2;
+        if exists(mid) {
+            hi = mid;
+        } else {
+            lo = mid + 1;
+        }
+    }
+    let c = lo;
+    let b = legacy_best_batch(model, input, limits, c)?;
+    Some(solution(model, limits, b, c))
+}
+
+/// The old `plan_replicas`: materialize each fleet size's thinned budget
+/// list with a per-`k` `collect`, then solve it.
+pub fn legacy_plan_replicas(
+    solver_brute: bool,
+    model: &LatencyModel,
+    input: &SolverInput<'_>,
+    limits: SolverLimits,
+    max_replicas: u32,
+) -> Option<ReplicaPlan> {
+    assert!(max_replicas >= 1);
+    for k in 1..=max_replicas {
+        // Every k-th budget of an ascending list is still ascending.
+        let thinned: Vec<Ms> = (0..input.n())
+            .step_by(k as usize)
+            .map(|i| input.budget_of(i))
+            .collect();
+        let mut per = SolverInput::per_request(thinned, input.lambda_rps / k as f64);
+        per.uniform_budget_ms = input.uniform_budget_ms;
+        let sol = if solver_brute {
+            legacy_brute_solve(model, &per, limits)
+        } else {
+            legacy_incremental_solve(model, &per, limits)
+        };
+        if let Some(sol) = sol {
+            return Some(ReplicaPlan { replicas: k, cores: sol.cores, batch: sol.batch });
+        }
+    }
+    None
+}

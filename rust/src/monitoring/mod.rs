@@ -112,14 +112,21 @@ impl SloTracker {
 
     /// Exact percentile (`p` in [0, 100]) of completed end-to-end latency;
     /// `None` when nothing completed. Sorts a copy — a per-report cost,
-    /// not a hot-path one.
+    /// not a hot-path one. For several percentiles of the same run, use
+    /// [`SloTracker::e2e_percentiles`] (one sort, not one per query).
     pub fn e2e_percentile(&self, p: f64) -> Option<Ms> {
+        self.e2e_percentiles(&[p]).map(|v| v[0])
+    }
+
+    /// Exact percentiles of completed end-to-end latency over one shared
+    /// sort of the samples; `None` when nothing completed.
+    pub fn e2e_percentiles(&self, ps: &[f64]) -> Option<Vec<Ms>> {
         if self.e2e_samples.is_empty() {
             return None;
         }
         let mut v = self.e2e_samples.clone();
         v.sort_by(f64::total_cmp);
-        Some(crate::util::stats::percentile(&v, p))
+        Some(ps.iter().map(|&p| crate::util::stats::percentile(&v, p)).collect())
     }
 
     /// Per-interval (start_ms, violations, total) series — Fig. 4 top.
@@ -265,6 +272,19 @@ mod tests {
         assert!((t.e2e_percentile(100.0).unwrap() - 100.0).abs() < 1e-9);
         let p50 = t.e2e_percentile(50.0).unwrap();
         assert!((p50 - 50.5).abs() < 1e-9, "p50={p50}");
+    }
+
+    #[test]
+    fn e2e_percentiles_batch_matches_singles() {
+        let mut t = SloTracker::new(1_000.0);
+        for i in 1..=50 {
+            t.record(i as f64, &Outcome { e2e_ms: (51 - i) as f64, ..ok(i) });
+        }
+        let batch = t.e2e_percentiles(&[0.0, 50.0, 99.0, 100.0]).unwrap();
+        for (i, p) in [0.0, 50.0, 99.0, 100.0].iter().enumerate() {
+            assert_eq!(Some(batch[i]), t.e2e_percentile(*p), "p={p}");
+        }
+        assert!(SloTracker::new(1_000.0).e2e_percentiles(&[50.0]).is_none());
     }
 
     #[test]

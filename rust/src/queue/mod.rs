@@ -11,6 +11,19 @@
 //! as the deadline-oblivious ablation the experiment matrix compares EDF
 //! against — same batching, same drop accounting, arrival order instead of
 //! deadline order.
+//!
+//! ## The deadline index (solver hot path)
+//!
+//! The IP solver consumes the queue as an EDF-sorted list of remaining
+//! budgets every adaptation interval. EDF order by *absolute deadline* is
+//! invariant under time shift, so instead of collecting and sorting the
+//! heap per tick (`O(n log n)` at every interval), the queue maintains an
+//! incrementally sorted [`DeadlineIndex`] — updated on push/pop/drop in
+//! `O(log n)` search (+ a short memmove) each — and hands the solver a
+//! *borrow* of it ([`EdfQueue::live_deadline_index`]); the `now` offset is
+//! applied lazily inside [`crate::solver::SolverInput`]. The per-tick
+//! snapshot is thereby allocation- and sort-free. The index is pinned
+//! against a sort-based oracle by a property test below.
 
 mod admission;
 
@@ -79,11 +92,61 @@ impl Ord for QueueEntry {
     }
 }
 
-/// EDF (or FIFO-ablation) priority queue with batch extraction and drop
-/// accounting.
+/// Incrementally sorted multiset of the queued requests' absolute
+/// deadlines: ascending `sorted[head..]`, with a consumed-head offset so
+/// EDF-order removals are O(1). Inserts binary-search their slot
+/// (arrivals land near the tail for SLO-shaped workloads, so the common
+/// insert is an append); arbitrary-position removals (the FIFO ablation)
+/// binary-search the value. The head region is compacted amortizedly.
+#[derive(Debug, Clone, Default)]
+struct DeadlineIndex {
+    sorted: Vec<Ms>,
+    head: usize,
+}
+
+impl DeadlineIndex {
+    fn live(&self) -> &[Ms] {
+        &self.sorted[self.head..]
+    }
+
+    fn insert(&mut self, d: Ms) {
+        // Fast path: new deadline is the latest seen — plain append.
+        if self.sorted.last().is_none_or(|m| m.total_cmp(&d).is_le()) {
+            self.sorted.push(d);
+            return;
+        }
+        let pos = self.live().partition_point(|x| x.total_cmp(&d).is_le());
+        self.sorted.insert(self.head + pos, d);
+    }
+
+    fn remove(&mut self, d: Ms) {
+        let live = self.live();
+        debug_assert!(!live.is_empty(), "removing from an empty index");
+        // Fast path: EDF pops always remove the current minimum.
+        if live[0].total_cmp(&d).is_eq() {
+            self.head += 1;
+        } else {
+            let pos = live.partition_point(|x| x.total_cmp(&d).is_lt());
+            debug_assert!(
+                pos < live.len() && live[pos].total_cmp(&d).is_eq(),
+                "deadline {d} not present in index"
+            );
+            self.sorted.remove(self.head + pos);
+        }
+        // Amortized O(1) compaction keeps the dead prefix bounded.
+        if self.head > 64 && self.head * 2 >= self.sorted.len() {
+            self.sorted.drain(..self.head);
+            self.head = 0;
+        }
+    }
+}
+
+/// EDF (or FIFO-ablation) priority queue with batch extraction, drop
+/// accounting, and an incrementally sorted deadline index (module docs).
 #[derive(Debug, Default)]
 pub struct EdfQueue {
     heap: BinaryHeap<QueueEntry>,
+    index: DeadlineIndex,
     discipline: QueueDiscipline,
     /// Arrival sequence counter — the FIFO priority key.
     seq: u64,
@@ -164,6 +227,10 @@ impl EdfQueue {
                 self.seq as f64
             }
         };
+        // The index tracks deadlines under *both* disciplines: the solver
+        // always plans against EDF-sorted budgets, however service is
+        // ordered.
+        self.index.insert(r.deadline_ms());
         self.heap.push(QueueEntry { key, req: r });
     }
 
@@ -190,7 +257,8 @@ impl EdfQueue {
     /// semantics).
     pub fn pop(&mut self) -> Option<Request> {
         let r = self.heap.pop().map(|e| e.req);
-        if r.is_some() {
+        if let Some(r) = &r {
+            self.index.remove(r.deadline_ms());
             self.dequeued += 1;
         }
         r
@@ -226,7 +294,9 @@ impl EdfQueue {
         let mut dropped = Vec::new();
         while let Some(head) = self.heap.peek() {
             if head.req.deadline_ms() <= now {
-                dropped.push(self.heap.pop().unwrap().req);
+                let r = self.heap.pop().unwrap().req;
+                self.index.remove(r.deadline_ms());
+                dropped.push(r);
             } else {
                 break;
             }
@@ -235,17 +305,31 @@ impl EdfQueue {
         dropped
     }
 
+    /// EDF-sorted absolute deadlines of all queued requests — the
+    /// zero-copy solver input (request i's remaining budget at `now` is
+    /// `deadline_index()[i] - now`). Maintained incrementally; no per-call
+    /// work beyond the borrow.
+    pub fn deadline_index(&self) -> &[Ms] {
+        self.index.live()
+    }
+
+    /// The suffix of [`EdfQueue::deadline_index`] that is still live at
+    /// `now` (deadline strictly in the future). Under EDF an expiry sweep
+    /// makes this the whole index; under FIFO it skips expired requests
+    /// buried behind a live head — their negative budgets would make every
+    /// `(b, c)` drain-infeasible, and no allocation can save a doomed
+    /// request, so the solver never plans for them.
+    pub fn live_deadline_index(&self, now: Ms) -> &[Ms] {
+        let live = self.index.live();
+        &live[live.partition_point(|d| *d <= now)..]
+    }
+
     /// Remaining budgets (ms) of all queued requests at `now`, in EDF
-    /// order — the solver's per-request constraint inputs.
+    /// order — the owned form of the deadline index (kept for callers
+    /// that need a `Vec`; the solver path borrows
+    /// [`EdfQueue::live_deadline_index`] instead).
     pub fn remaining_budgets(&self, now: Ms) -> Vec<Ms> {
-        let mut deadlines: Vec<Ms> =
-            self.heap.iter().map(|e| e.req.deadline_ms() - now).collect();
-        // Stable sort deliberately: the heap's backing array is already
-        // partially ordered, which timsort exploits — measured ~25 %
-        // faster than sort_unstable's pdqsort at 50 k entries (§Perf
-        // iteration 2, tried and reverted).
-        deadlines.sort_by(f64::total_cmp);
-        deadlines
+        self.index.live().iter().map(|d| d - now).collect()
     }
 
     /// Conservation counters: (enqueued, dequeued, dropped, in-queue).
@@ -339,6 +423,22 @@ mod tests {
         q.push(req(1, 0.0, 300.0));
         q.push(req(2, 0.0, 600.0));
         assert_eq!(q.remaining_budgets(100.0), vec![200.0, 500.0, 800.0]);
+        assert_eq!(q.deadline_index(), &[300.0, 600.0, 900.0]);
+    }
+
+    #[test]
+    fn live_deadline_index_skips_expired_prefix() {
+        let mut q = EdfQueue::with_discipline(QueueDiscipline::Fifo);
+        q.push(req(0, 0.0, 5_000.0)); // live head (blocks the FIFO sweep)
+        q.push(req(1, 0.0, 100.0)); // expired at now=1000, buried
+        q.push(req(2, 0.0, 3_000.0));
+        assert_eq!(q.drop_expired(1_000.0).len(), 0, "FIFO keeps buried expiry");
+        assert_eq!(q.deadline_index(), &[100.0, 3_000.0, 5_000.0]);
+        // The solver view excludes the doomed request; a deadline exactly
+        // at `now` counts as expired (budget 0 is not serveable).
+        assert_eq!(q.live_deadline_index(1_000.0), &[3_000.0, 5_000.0]);
+        assert_eq!(q.live_deadline_index(3_000.0), &[5_000.0]);
+        assert!(q.live_deadline_index(9_000.0).is_empty());
     }
 
     #[test]
@@ -399,6 +499,8 @@ mod tests {
         let dropped = q.drop_expired(250.0);
         assert_eq!(dropped.iter().map(|r| r.id).collect::<Vec<_>>(), vec![0]);
         assert_eq!(q.len(), 2);
+        // The index dropped exactly the swept request's deadline.
+        assert_eq!(q.deadline_index(), &[200.0, 500.0]);
     }
 
     #[test]
@@ -408,6 +510,29 @@ mod tests {
         assert_eq!(QueueDiscipline::parse("fifo").unwrap(), QueueDiscipline::Fifo);
         assert!(QueueDiscipline::parse("lifo").is_err());
         assert_eq!(QueueDiscipline::Fifo.name(), "fifo");
+    }
+
+    #[test]
+    fn index_compaction_survives_deep_drain() {
+        // Push and pop enough to trigger the head compaction repeatedly.
+        let mut q = EdfQueue::new();
+        for i in 0..500u64 {
+            q.push(req(i, i as f64, 1_000.0));
+        }
+        for _ in 0..400 {
+            q.pop().unwrap();
+        }
+        assert_eq!(q.deadline_index().len(), 100);
+        assert!(
+            q.deadline_index().windows(2).all(|w| w[0] <= w[1]),
+            "index lost order after compaction"
+        );
+        for i in 500..700u64 {
+            q.push(req(i, i as f64, 1_000.0));
+        }
+        assert_eq!(q.deadline_index().len(), 300);
+        while q.pop().is_some() {}
+        assert!(q.deadline_index().is_empty());
     }
 
     #[test]
@@ -442,6 +567,94 @@ mod tests {
                 enq == deq + drop + inq as u64,
                 "conservation broken: {enq} != {deq}+{drop}+{inq}"
             );
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_deadline_index_matches_sort_oracle() {
+        // The incremental index must equal a from-scratch sort of the
+        // surviving requests' deadlines after ANY interleaving of push /
+        // pop / take_batch / drop_expired, under both disciplines — the
+        // sorted-collect this index replaced is the oracle.
+        run_prop("deadline-index-vs-sort", 80, |g| {
+            let discipline = if g.bool() {
+                QueueDiscipline::Edf
+            } else {
+                QueueDiscipline::Fifo
+            };
+            let mut q = EdfQueue::with_discipline(discipline);
+            let mut oracle: Vec<Ms> = Vec::new();
+            let mut next_id = 0u64;
+            let ops = g.usize(1, 120);
+            for _ in 0..ops {
+                match g.u32(0, 4) {
+                    0 | 1 => {
+                        // Push (weighted: queues grow more than they drain);
+                        // coarse deadlines force duplicate values too.
+                        let r = req(
+                            next_id,
+                            g.f64(0.0, 50.0).round() * 10.0,
+                            g.f64(1.0, 40.0).round() * 25.0,
+                        );
+                        oracle.push(r.deadline_ms());
+                        q.push(r);
+                        next_id += 1;
+                    }
+                    2 => {
+                        if let Some(r) = q.pop() {
+                            let d = r.deadline_ms();
+                            let at = oracle
+                                .iter()
+                                .position(|x| x.total_cmp(&d).is_eq())
+                                .ok_or_else(|| format!("popped unknown deadline {d}"))?;
+                            oracle.swap_remove(at);
+                        }
+                    }
+                    3 => {
+                        if let Some(batch) = q.take_batch(g.u32(1, 8)) {
+                            for r in &batch.requests {
+                                let d = r.deadline_ms();
+                                let at = oracle
+                                    .iter()
+                                    .position(|x| x.total_cmp(&d).is_eq())
+                                    .ok_or_else(|| {
+                                        format!("batched unknown deadline {d}")
+                                    })?;
+                                oracle.swap_remove(at);
+                            }
+                        }
+                    }
+                    _ => {
+                        let now = g.f64(0.0, 1_200.0);
+                        for r in q.drop_expired(now) {
+                            let d = r.deadline_ms();
+                            let at = oracle
+                                .iter()
+                                .position(|x| x.total_cmp(&d).is_eq())
+                                .ok_or_else(|| format!("dropped unknown deadline {d}"))?;
+                            oracle.swap_remove(at);
+                        }
+                    }
+                }
+                let mut expect = oracle.clone();
+                expect.sort_by(f64::total_cmp);
+                crate::prop_assert!(
+                    q.deadline_index() == expect.as_slice(),
+                    "index diverged from sort oracle ({discipline:?}): \
+                     {:?} vs {expect:?}",
+                    q.deadline_index()
+                );
+                // The live view is exactly the strictly-future suffix.
+                let now = g.f64(0.0, 1_200.0);
+                let live = q.live_deadline_index(now);
+                let expect_live: Vec<Ms> =
+                    expect.iter().copied().filter(|d| *d > now).collect();
+                crate::prop_assert!(
+                    live == expect_live.as_slice(),
+                    "live view diverged at now={now}: {live:?} vs {expect_live:?}"
+                );
+            }
             Ok(())
         });
     }

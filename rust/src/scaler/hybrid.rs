@@ -61,8 +61,11 @@ impl HybridScaler {
             model.delta * self.latency_margin,
             model.eta * self.latency_margin,
         );
-        let input = SolverInput::per_request(
-            obs.budgets_ms.to_vec(),
+        // Zero-copy: borrow the deadline index; plan_replicas views each
+        // fleet size as a stride over it, so no lists are materialized.
+        let input = SolverInput::from_deadlines(
+            obs.deadlines_ms,
+            obs.now_ms,
             obs.lambda_rps * self.lambda_headroom,
         );
         plan_replicas(self.solver, &planning, &input, self.limits, self.max_instances)
@@ -131,14 +134,20 @@ mod tests {
         c
     }
 
-    fn obs<'a>(budgets: &'a [f64], lambda: f64) -> ScalerObs<'a> {
+    /// Observation at `now = 10_000`; callers pass absolute deadlines
+    /// (use `deadlines` to convert remaining budgets).
+    fn obs<'a>(deadlines: &'a [f64], lambda: f64) -> ScalerObs<'a> {
         ScalerObs {
             now_ms: 10_000.0,
             lambda_rps: lambda,
-            budgets_ms: budgets,
+            deadlines_ms: deadlines,
             cl_max_ms: 100.0,
             slo_ms: 1_000.0,
         }
+    }
+
+    fn deadlines(budgets: &[f64]) -> Vec<f64> {
+        budgets.iter().map(|b| 10_000.0 + b).collect()
     }
 
     #[test]
@@ -146,7 +155,7 @@ mod tests {
         let cluster = ready_cluster(&[2]);
         let mut s = HybridScaler::new(SolverLimits::default(), 4);
         let model = LatencyModel::resnet_human_detector();
-        let actions = s.decide(&obs(&[500.0; 10], 50.0), &cluster, &model);
+        let actions = s.decide(&obs(&deadlines(&[500.0; 10]), 50.0), &cluster, &model);
         assert!(
             !actions.iter().any(|a| matches!(a, Action::Launch { .. })),
             "{actions:?}"
@@ -161,7 +170,7 @@ mod tests {
         let cluster = ready_cluster(&[16]);
         let mut s = HybridScaler::new(SolverLimits::default(), 8);
         let model = LatencyModel::yolov5s();
-        let actions = s.decide(&obs(&[800.0; 20], 100.0), &cluster, &model);
+        let actions = s.decide(&obs(&deadlines(&[800.0; 20]), 100.0), &cluster, &model);
         let launches = actions
             .iter()
             .filter(|a| matches!(a, Action::Launch { .. }))
@@ -175,7 +184,7 @@ mod tests {
         let mut s = HybridScaler::new(SolverLimits::default(), 8);
         let model = LatencyModel::resnet_human_detector();
         // Tiny load: k=1 suffices.
-        let actions = s.decide(&obs(&[900.0; 2], 2.0), &cluster, &model);
+        let actions = s.decide(&obs(&deadlines(&[900.0; 2]), 2.0), &cluster, &model);
         let terms = actions
             .iter()
             .filter(|a| matches!(a, Action::Terminate { .. }))
@@ -189,7 +198,7 @@ mod tests {
         let mut s = HybridScaler::new(SolverLimits::default(), 3);
         let model = LatencyModel::yolov5s();
         // Demand far beyond even max_instances * capacity.
-        let actions = s.decide(&obs(&[50.0; 30], 500.0), &cluster, &model);
+        let actions = s.decide(&obs(&deadlines(&[50.0; 30]), 500.0), &cluster, &model);
         assert!(actions.iter().any(|a| matches!(a, Action::Launch { .. })));
         assert!(actions.contains(&Action::SetBatch { batch: 1 }));
     }

@@ -20,7 +20,10 @@ pub use variant::{Variant, VariantScaler};
 
 use crate::cluster::Cluster;
 use crate::perfmodel::LatencyModel;
-use crate::solver::{drain_feasible, throughput_ok, SolverChoice, SolverInput, SolverLimits};
+use crate::solver::{
+    drain_feasible, throughput_ok, IncrementalSolver, Solution, SolverChoice, SolverInput,
+    SolverLimits,
+};
 use crate::{BatchSize, Cores, Ms};
 
 /// Scaler observation at an adaptation tick.
@@ -29,8 +32,11 @@ pub struct ScalerObs<'a> {
     pub now_ms: Ms,
     /// Monitored arrival rate λ̂ (requests/second).
     pub lambda_rps: f64,
-    /// EDF-sorted remaining budgets of all queued requests (ms).
-    pub budgets_ms: &'a [Ms],
+    /// EDF-sorted *absolute* deadlines of all still-live queued requests —
+    /// a zero-copy borrow of the queue's incremental deadline index
+    /// ([`crate::queue::EdfQueue::live_deadline_index`]); request i's
+    /// remaining budget is `deadlines_ms[i] - now_ms`.
+    pub deadlines_ms: &'a [Ms],
     /// Largest observed communication latency in the last interval —
     /// the paper's `cl_max`.
     pub cl_max_ms: Ms,
@@ -90,6 +96,10 @@ pub struct SpongeScaler {
     /// engine's latency noise / P99-vs-mean gap).
     pub latency_margin: f64,
     last_batch: BatchSize,
+    /// Previous interval's solution — the incremental solver's warm-start
+    /// bracket (an unchanged system re-solves in two probes). Results are
+    /// identical to a cold solve; this is purely a cost optimization.
+    warm: Option<Solution>,
 }
 
 impl SpongeScaler {
@@ -101,6 +111,7 @@ impl SpongeScaler {
             lambda_headroom: 1.15,
             latency_margin: 1.1,
             last_batch: 1,
+            warm: None,
         }
     }
 
@@ -149,18 +160,28 @@ impl Autoscaler for SpongeScaler {
             return vec![Action::Launch { cores: 1 }];
         };
         let lambda = obs.lambda_rps * self.lambda_headroom;
+        // Allocation-free hot path: the per-request input borrows the
+        // queue's deadline index with a lazy `now` offset; only the
+        // paper-verbatim uniform mode materializes anything.
         let input = if self.uniform_budget {
             SolverInput::uniform(
-                obs.budgets_ms.len().max(1),
+                obs.deadlines_ms.len().max(1),
                 obs.slo_ms,
                 obs.cl_max_ms,
                 lambda,
             )
         } else {
-            SolverInput::per_request(obs.budgets_ms.to_vec(), lambda)
+            SolverInput::from_deadlines(obs.deadlines_ms, obs.now_ms, lambda)
         };
         let planning = self.planning_model(model);
-        match self.solver.solve(&planning, &input, self.limits) {
+        let solved = match self.solver {
+            SolverChoice::Incremental => {
+                IncrementalSolver.solve_warm(&planning, &input, self.limits, self.warm)
+            }
+            SolverChoice::BruteForce => self.solver.solve(&planning, &input, self.limits),
+        };
+        self.warm = solved;
+        match solved {
             Some(sol) => {
                 self.last_batch = sol.batch;
                 vec![
@@ -295,7 +316,7 @@ impl Autoscaler for StaticScaler {
     ) -> Vec<Action> {
         // Cores are fixed; batch is still chosen per interval (smallest
         // batch that is drain-feasible and sustains λ at this core count).
-        let input = SolverInput::per_request(obs.budgets_ms.to_vec(), obs.lambda_rps);
+        let input = SolverInput::from_deadlines(obs.deadlines_ms, obs.now_ms, obs.lambda_rps);
         for b in 1..=self.b_max {
             if throughput_ok(model, &input, b, self.cores)
                 && drain_feasible(model, &input, b, self.cores)
@@ -381,14 +402,20 @@ mod tests {
         c
     }
 
-    fn obs<'a>(budgets: &'a [Ms], lambda: f64, cl_max: Ms) -> ScalerObs<'a> {
+    /// Observation at `now = 10_000` whose i-th queued request has
+    /// `budgets[i]` ms remaining (deadline = now + budget).
+    fn obs<'a>(deadlines: &'a [Ms], lambda: f64, cl_max: Ms) -> ScalerObs<'a> {
         ScalerObs {
             now_ms: 10_000.0,
             lambda_rps: lambda,
-            budgets_ms: budgets,
+            deadlines_ms: deadlines,
             cl_max_ms: cl_max,
             slo_ms: 1_000.0,
         }
+    }
+
+    fn deadlines(budgets: &[Ms]) -> Vec<Ms> {
+        budgets.iter().map(|b| 10_000.0 + b).collect()
     }
 
     #[test]
@@ -396,7 +423,7 @@ mod tests {
         let cluster = ready_cluster(&[1]);
         let mut s = SpongeScaler::new(SolverLimits::default());
         let model = LatencyModel::resnet_human_detector();
-        let budgets = vec![400.0; 10];
+        let budgets = deadlines(&[400.0; 10]);
         let actions = s.decide(&obs(&budgets, 100.0, 600.0), &cluster, &model);
         assert_eq!(actions.len(), 2);
         let Action::Resize { cores, .. } = actions[0] else {
@@ -411,10 +438,35 @@ mod tests {
         let cluster = ready_cluster(&[1]);
         let mut s = SpongeScaler::new(SolverLimits::default());
         let model = LatencyModel::resnet_human_detector();
-        let budgets = vec![1.0; 4]; // hopeless budgets
+        let budgets = deadlines(&[1.0; 4]); // hopeless budgets
         let actions = s.decide(&obs(&budgets, 20.0, 999.0), &cluster, &model);
         assert!(actions.contains(&Action::Resize { id: 0, cores: 16 }));
         assert!(actions.contains(&Action::SetBatch { batch: 1 }));
+    }
+
+    #[test]
+    fn sponge_warm_start_matches_fresh_scaler_every_tick() {
+        // The warm-start hint is a pure cost optimization: a scaler that
+        // carries state across ticks must emit exactly the actions a
+        // fresh scaler would, on every observation shape — including the
+        // infeasible tick that clears the hint.
+        let cluster = ready_cluster(&[1]);
+        let model = LatencyModel::resnet_human_detector();
+        let mut warm = SpongeScaler::new(SolverLimits::default());
+        let scenarios: Vec<(Vec<Ms>, f64)> = vec![
+            (deadlines(&[400.0; 10]), 100.0),
+            (deadlines(&[400.0; 12]), 110.0),
+            (deadlines(&[900.0; 2]), 5.0),
+            (deadlines(&[1.0; 4]), 200.0), // infeasible tick
+            (deadlines(&[700.0; 6]), 40.0),
+        ];
+        for (d, lambda) in &scenarios {
+            let o = obs(d, *lambda, 100.0);
+            let warm_actions = warm.decide(&o, &cluster, &model);
+            let mut fresh = SpongeScaler::new(SolverLimits::default());
+            let fresh_actions = fresh.decide(&o, &cluster, &model);
+            assert_eq!(warm_actions, fresh_actions, "diverged on λ={lambda}");
+        }
     }
 
     #[test]
@@ -494,7 +546,7 @@ mod tests {
         let cluster = ready_cluster(&[8]);
         let mut s = StaticScaler::new(8, 16);
         let model = LatencyModel::resnet_human_detector();
-        let budgets = vec![500.0; 5];
+        let budgets = deadlines(&[500.0; 5]);
         let actions = s.decide(&obs(&budgets, 20.0, 100.0), &cluster, &model);
         assert_eq!(actions.len(), 1);
         assert!(matches!(actions[0], Action::SetBatch { .. }));

@@ -84,9 +84,9 @@ impl VariantScaler {
     fn choose(&self, obs: &ScalerObs<'_>) -> usize {
         let solver = IncrementalSolver;
         let lambda = obs.lambda_rps * self.inner.lambda_headroom;
+        // One borrowed input serves every variant probe — no copies.
+        let input = SolverInput::from_deadlines(obs.deadlines_ms, obs.now_ms, lambda);
         for (i, v) in self.variants.iter().enumerate() {
-            let input =
-                SolverInput::per_request(obs.budgets_ms.to_vec(), lambda);
             if solver.solve(&v.model, &input, self.limits).is_some() {
                 return i;
             }
@@ -138,14 +138,20 @@ mod tests {
         c
     }
 
-    fn obs<'a>(budgets: &'a [f64], lambda: f64) -> ScalerObs<'a> {
+    /// Observation at `now = 10_000`; callers pass absolute deadlines
+    /// (use `deadlines` to convert remaining budgets).
+    fn obs<'a>(deadlines: &'a [f64], lambda: f64) -> ScalerObs<'a> {
         ScalerObs {
             now_ms: 10_000.0,
             lambda_rps: lambda,
-            budgets_ms: budgets,
+            deadlines_ms: deadlines,
             cl_max_ms: 0.0,
             slo_ms: 1_000.0,
         }
+    }
+
+    fn deadlines(budgets: &[f64]) -> Vec<f64> {
+        budgets.iter().map(|b| 10_000.0 + b).collect()
     }
 
     #[test]
@@ -159,7 +165,7 @@ mod tests {
     fn keeps_accurate_variant_when_slack() {
         let mut s = VariantScaler::paper_ladder(SolverLimits::default());
         let cluster = ready_cluster();
-        let budgets = vec![900.0; 5];
+        let budgets = deadlines(&[900.0; 5]);
         let _ = s.decide(&obs(&budgets, 10.0), &cluster, &LatencyModel::yolov5s());
         assert_eq!(s.active_variant().name, "yolov5s");
         assert_eq!(s.switches(), 0);
@@ -171,12 +177,12 @@ mod tests {
         let cluster = ready_cluster();
         // λ = 100 rps: yolov5s tops out ~30 rps even at c=16 → must
         // downshift to a lighter variant that can sustain it.
-        let budgets = vec![600.0; 20];
+        let budgets = deadlines(&[600.0; 20]);
         let _ = s.decide(&obs(&budgets, 100.0), &cluster, &LatencyModel::yolov5s());
         assert_ne!(s.active_variant().name, "yolov5s", "did not downshift");
         assert_eq!(s.switches(), 1);
         // Pressure gone: upshift back.
-        let relaxed = vec![900.0; 3];
+        let relaxed = deadlines(&[900.0; 3]);
         let _ = s.decide(&obs(&relaxed, 5.0), &cluster, &LatencyModel::yolov5s());
         assert_eq!(s.active_variant().name, "yolov5s");
         assert_eq!(s.switches(), 2);
@@ -186,7 +192,7 @@ mod tests {
     fn hopeless_budget_runs_lightest_best_effort() {
         let mut s = VariantScaler::paper_ladder(SolverLimits::default());
         let cluster = ready_cluster();
-        let budgets = vec![1.0; 10];
+        let budgets = deadlines(&[1.0; 10]);
         let actions = s.decide(&obs(&budgets, 50.0), &cluster, &LatencyModel::yolov5s());
         assert_eq!(s.active_variant().name, "yolov5n");
         assert!(!actions.is_empty());
@@ -196,7 +202,7 @@ mod tests {
     fn emits_sponge_shaped_actions() {
         let mut s = VariantScaler::paper_ladder(SolverLimits::default());
         let cluster = ready_cluster();
-        let budgets = vec![800.0; 8];
+        let budgets = deadlines(&[800.0; 8]);
         let actions = s.decide(&obs(&budgets, 20.0), &cluster, &LatencyModel::yolov5s());
         assert!(actions.iter().any(|a| matches!(a, Action::Resize { .. })));
         assert!(actions.iter().any(|a| matches!(a, Action::SetBatch { .. })));

@@ -220,11 +220,13 @@ pub fn run(cfg: &SimConfig, net: &NetworkModel, mut scaler: Box<dyn Autoscaler>)
             EventKind::Tick => {
                 cluster.tick(now);
                 drop_expired(now, &mut queue, &mut tracker);
-                let budgets = queue.remaining_budgets(now);
+                // Zero-copy snapshot: borrow the queue's incremental
+                // deadline index (EDF's expiry sweep above guarantees the
+                // live suffix is the whole index here).
                 let obs = ScalerObs {
                     now_ms: now,
                     lambda_rps: rate.rate_rps(now),
-                    budgets_ms: &budgets,
+                    deadlines_ms: queue.live_deadline_index(now),
                     cl_max_ms: cl_max_window,
                     slo_ms: cfg.workload.slo_ms,
                 };
@@ -253,9 +255,6 @@ pub fn run(cfg: &SimConfig, net: &NetworkModel, mut scaler: Box<dyn Autoscaler>)
     // Anything still queued at the end (no events left to drive it) is a
     // drop — can only happen when no instance ever became ready.
     let end = cfg.horizon_ms;
-    for r in queue.remaining_budgets(end) {
-        let _ = r;
-    }
     while let Some(r) = queue.pop() {
         tracker.record(
             end,

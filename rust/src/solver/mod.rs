@@ -8,24 +8,48 @@
 //! ```
 //!
 //! [`BruteForceSolver`] is Algorithm 1 verbatim: iterate `c` then `b`
-//! ascending, simulate the EDF queue drain (each batch waits for its
-//! predecessors: `q_r += l(b,c)`), return the first feasible pair — which
-//! is optimal for the objective because iteration order is lexicographic
-//! in `(c, b)` and δ is insignificant.
+//! ascending, return the first feasible pair — which is optimal for the
+//! objective because iteration order is lexicographic in `(c, b)` and δ is
+//! insignificant.
 //!
 //! [`IncrementalSolver`] returns *identical* answers (property-tested in
-//! `rust/tests/solver_properties.rs`) at much lower cost by exploiting the
-//! model's monotonicity: `l` is non-decreasing in `b` and non-increasing in
-//! `c`, so feasibility of "∃b" is monotone in `c` (binary search) and the
-//! first-batch check is monotone in `b` (early break).
+//! `rust/tests/solver_properties.rs`) at much lower cost:
+//!
+//! * **Feasibility frontier.** The EDF drain check for `(b, c)` asks
+//!   whether every batch finishes within its binding member's budget:
+//!   batch `i` (0-based) completes at `(i+1)·l(b,c)` and its binding
+//!   member is request `i·b` (budgets are EDF-sorted ascending). All of
+//!   `c` cancels out of the constraint set: for each batch size `b` there
+//!   is a single number `L*(b) = min_i (budget[i·b] + ε) / (i+1)` — the
+//!   largest processing latency that still drains the queue — computed
+//!   once per solve in `O(n·H(b_max))` total (harmonic sum), after which
+//!   every `(c, b)` candidate is one `O(1)` comparison `l(b,c) ≤ L*(b)`.
+//! * **Monotone `c` search.** Feasibility of "∃b" is monotone in `c` (`l`
+//!   non-increasing, `h` non-decreasing in `c`), so the smallest feasible
+//!   `c` is found by a memoized binary search; the batch found at the
+//!   final probe is reused rather than re-derived.
+//! * **Warm start.** [`IncrementalSolver::solve_warm`] brackets the search
+//!   with the previous interval's solution: an unchanged system costs two
+//!   probes instead of a full binary search. Results are identical to the
+//!   cold solve by construction (the bracket only seeds the search).
 //!
 //! Both solvers accept either the paper-verbatim uniform budget
 //! (`SLO − cl_max`, §3.3 uses the worst communication latency for all
 //! requests) or fully per-request budgets — the request-level
-//! generalization Sponge's queue actually provides.
+//! generalization Sponge's queue actually provides. The hot path borrows
+//! the queue's incrementally sorted deadline index
+//! ([`crate::queue::EdfQueue::live_deadline_index`]) via
+//! [`SolverInput::from_deadlines`]: no copy, no sort, no heap allocation
+//! per solve.
+
+use std::borrow::Cow;
 
 use crate::perfmodel::LatencyModel;
 use crate::{BatchSize, Cores, Ms};
+
+/// Float-robustness epsilon on the budget side of every drain comparison
+/// (the strict `≥ SLO ⇒ infeasible` of Algorithm 1 kept as `>` plus ε).
+const EPS: Ms = 1e-9;
 
 /// Search-space limits and objective weight. The paper sets
 /// `c_max = b_max = 16` ("no significant gain afterward") and an
@@ -45,11 +69,21 @@ impl Default for SolverLimits {
 }
 
 /// One solver invocation's view of the world.
+///
+/// The request constraints are EDF-sorted *deadline keys*: request `i`'s
+/// remaining budget is `keys[stride·i] − now_ms`. Pre-offset budget lists
+/// (owned, `now_ms = 0`) and zero-copy deadline-index borrows (`now_ms =
+/// now`) are both supported; `stride > 1` views every k-th request of a
+/// shared queue without materializing the thinned list (the
+/// [`plan_replicas`] round-robin split).
 #[derive(Debug, Clone)]
-pub struct SolverInput {
-    /// Remaining server-side budgets (ms) of all queued requests, sorted
-    /// ascending — i.e. EDF order. Empty is allowed (idle system).
-    pub budgets_ms: Vec<Ms>,
+pub struct SolverInput<'a> {
+    /// EDF-sorted (ascending) deadline keys; see the struct docs.
+    keys_ms: Cow<'a, [Ms]>,
+    /// Lazy time offset: `budget_of(i) = keys[stride·i] - now_ms`.
+    now_ms: Ms,
+    /// Round-robin thinning stride (≥ 1).
+    stride: usize,
     /// Monitored arrival rate λ (requests/second) for the stability
     /// constraint `h(b,c) ≥ λ`.
     pub lambda_rps: f64,
@@ -58,29 +92,92 @@ pub struct SolverInput {
     pub uniform_budget_ms: Option<Ms>,
 }
 
-impl SolverInput {
+impl SolverInput<'static> {
     /// Paper-verbatim input: `n` requests, uniform budget `slo − cl_max`.
-    pub fn uniform(n: usize, slo_ms: Ms, cl_max_ms: Ms, lambda_rps: f64) -> SolverInput {
+    pub fn uniform(n: usize, slo_ms: Ms, cl_max_ms: Ms, lambda_rps: f64) -> SolverInput<'static> {
         SolverInput {
-            budgets_ms: vec![slo_ms - cl_max_ms; n],
+            keys_ms: Cow::Owned(vec![slo_ms - cl_max_ms; n]),
+            now_ms: 0.0,
+            stride: 1,
             lambda_rps,
             uniform_budget_ms: Some(slo_ms - cl_max_ms),
         }
     }
 
-    /// Request-level input from EDF-sorted remaining budgets.
-    pub fn per_request(budgets_ms: Vec<Ms>, lambda_rps: f64) -> SolverInput {
+    /// Request-level input from EDF-sorted remaining budgets (owned; the
+    /// zero-copy path is [`SolverInput::from_deadlines`]).
+    pub fn per_request(budgets_ms: Vec<Ms>, lambda_rps: f64) -> SolverInput<'static> {
         debug_assert!(
             budgets_ms.windows(2).all(|w| w[0] <= w[1]),
             "budgets must be EDF-sorted ascending"
         );
-        SolverInput { budgets_ms, lambda_rps, uniform_budget_ms: None }
+        SolverInput {
+            keys_ms: Cow::Owned(budgets_ms),
+            now_ms: 0.0,
+            stride: 1,
+            lambda_rps,
+            uniform_budget_ms: None,
+        }
+    }
+}
+
+impl<'a> SolverInput<'a> {
+    /// Zero-copy request-level input: borrow an EDF-sorted slice of
+    /// *absolute* deadlines (the queue's incremental deadline index) and
+    /// offset by `now_ms` lazily — EDF order by absolute deadline is
+    /// invariant under time shift, so no per-tick re-sort is ever needed.
+    pub fn from_deadlines(deadlines_ms: &'a [Ms], now_ms: Ms, lambda_rps: f64) -> SolverInput<'a> {
+        debug_assert!(
+            deadlines_ms.windows(2).all(|w| w[0] <= w[1]),
+            "deadlines must be EDF-sorted ascending"
+        );
+        SolverInput {
+            keys_ms: Cow::Borrowed(deadlines_ms),
+            now_ms,
+            stride: 1,
+            lambda_rps,
+            uniform_budget_ms: None,
+        }
     }
 
-    fn budget_of(&self, idx: usize) -> Ms {
+    /// Number of requests this input constrains (after thinning).
+    pub fn n(&self) -> usize {
+        self.keys_ms.len().div_ceil(self.stride)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.keys_ms.is_empty()
+    }
+
+    /// Remaining budget of (thinned) request `i`.
+    pub fn budget_of(&self, idx: usize) -> Ms {
         match self.uniform_budget_ms {
             Some(u) => u,
-            None => self.budgets_ms[idx],
+            None => self.keys_ms[idx * self.stride] - self.now_ms,
+        }
+    }
+
+    /// Borrowed view of every k-th request (round-robin split across `k`
+    /// replicas) with `λ/k` — no thinned list is materialized. Every k-th
+    /// element of an ascending list is still ascending.
+    pub fn thinned(&self, k: u32) -> SolverInput<'_> {
+        debug_assert!(k >= 1);
+        SolverInput {
+            keys_ms: Cow::Borrowed(self.keys_ms.as_ref()),
+            now_ms: self.now_ms,
+            stride: self.stride * k as usize,
+            lambda_rps: self.lambda_rps / k as f64,
+            uniform_budget_ms: self.uniform_budget_ms,
+        }
+    }
+
+    /// Tightest budget plus ε — the monotone batch-scan prune bound
+    /// (`+∞` when nothing is queued).
+    fn first_cap(&self) -> Ms {
+        if self.n() == 0 {
+            f64::INFINITY
+        } else {
+            self.budget_of(0) + EPS
         }
     }
 }
@@ -104,39 +201,67 @@ pub trait IpSolver {
     fn solve(
         &self,
         model: &LatencyModel,
-        input: &SolverInput,
+        input: &SolverInput<'_>,
         limits: SolverLimits,
     ) -> Option<Solution>;
 
     fn name(&self) -> &'static str;
 }
 
-/// Feasibility of `(b, c)`: simulate the EDF queue drain. Batch `i`
-/// (0-based) completes at `(i+1)·l(b,c)`; every member of batch `i` must
-/// have budget ≥ that completion time. With budgets EDF-sorted ascending,
-/// the binding member is the first of the batch.
+/// The largest processing latency `L*(b)` that drains this queue at batch
+/// size `b` without violating any deadline: batch `i` (0-based) completes
+/// at `(i+1)·l` and binds on request `i·b` (the smallest budget in the
+/// batch, since budgets are EDF-sorted), so
+/// `L*(b) = min_i (budget[i·b] + ε) / (i+1)` — `O(n/b)`, independent of
+/// `c`. `+∞` for an empty queue (drain vacuously feasible).
 ///
-/// Mirrors Algorithm 1 lines 9–14 (`q_r` accumulation + per-batch check),
-/// with the strict `≥ SLO ⇒ infeasible` comparison kept as `>` on the
-/// budget side plus epsilon for float robustness.
+/// Thinning identity: for an input thinned by `k`,
+/// `L*_thinned(b) == L*_base(b·k)` exactly (same index sequence, same
+/// arithmetic) — which is what lets [`plan_replicas`] reuse one frontier
+/// across every fleet size.
+pub fn max_drain_latency(input: &SolverInput<'_>, b: BatchSize) -> Ms {
+    let n = input.n();
+    let b = b as usize;
+    let mut l_star = f64::INFINITY;
+    let mut i = 0usize;
+    let mut batches = 1.0f64;
+    while i < n {
+        let cap = (input.budget_of(i) + EPS) / batches;
+        if cap < l_star {
+            l_star = cap;
+        }
+        i += b;
+        batches += 1.0;
+    }
+    l_star
+}
+
+/// Feasibility of `(b, c)`'s EDF queue drain: `l(b,c) ≤ L*(b)`.
+///
+/// Mirrors Algorithm 1 lines 9–14 (`q_r` accumulation + per-batch check)
+/// in closed form; the per-batch completion time is `(i+1)·l` rather than
+/// an accumulated `q_r += l`, identical up to float-accumulation ULPs.
+/// Early-exits at the first violated batch (the per-candidate callers —
+/// Algorithm 1, the static scaler — probe without a frontier); each
+/// comparison is the same `(budget + ε)/(i+1)` the frontier caches, so
+/// the decision is bit-identical to `l ≤ max_drain_latency`.
 pub fn drain_feasible(
     model: &LatencyModel,
-    input: &SolverInput,
+    input: &SolverInput<'_>,
     b: BatchSize,
     c: Cores,
 ) -> bool {
     let l = model.latency_ms(b, c);
-    let n = input.budgets_ms.len();
-    let mut q_r: Ms = 0.0;
+    let n = input.n();
+    let b = b as usize;
     let mut i = 0usize;
+    let mut batches = 1.0f64;
     while i < n {
-        let finish = q_r + l;
-        // Binding request of this batch: smallest budget, i.e. index i.
-        if finish > input.budget_of(i) + 1e-9 {
+        if l > (input.budget_of(i) + EPS) / batches {
             return false;
         }
-        q_r += l;
-        i += b as usize;
+        i += b;
+        batches += 1.0;
     }
     true
 }
@@ -144,7 +269,7 @@ pub fn drain_feasible(
 /// Throughput (stability) constraint `h(b,c) ≥ λ`.
 pub fn throughput_ok(
     model: &LatencyModel,
-    input: &SolverInput,
+    input: &SolverInput<'_>,
     b: BatchSize,
     c: Cores,
 ) -> bool {
@@ -153,7 +278,7 @@ pub fn throughput_ok(
 
 fn feasible(
     model: &LatencyModel,
-    input: &SolverInput,
+    input: &SolverInput<'_>,
     b: BatchSize,
     c: Cores,
 ) -> bool {
@@ -171,6 +296,76 @@ fn solution(
         batch: b,
         predicted_latency_ms: model.latency_ms(b, c),
         objective: c as f64 + limits.delta * b as f64,
+    }
+}
+
+// ------------------------------------------------------------- frontier --
+
+/// Cached frontier entries; batch sizes past the cap fall back to an
+/// on-the-fly [`max_drain_latency`] (identical arithmetic, just not
+/// cached). 256 covers `b_max · max_replicas` for every configured matrix
+/// while staying a 2 KiB stack value — no heap allocation per solve.
+const FRONTIER_CAP: usize = 256;
+
+/// Precomputed `L*(b)` for `b = 1..=len` (see [`max_drain_latency`]).
+/// Building it costs `Σ_b n/b = n·H(len)` once per solve; every
+/// subsequent `(c, b)` feasibility check is one comparison.
+pub struct FeasibilityFrontier {
+    l_star: [Ms; FRONTIER_CAP],
+    len: usize,
+}
+
+impl FeasibilityFrontier {
+    /// Compute the frontier of `input` for batch sizes `1..=max_b`
+    /// (clamped to the cache cap; larger batches fall back to direct
+    /// evaluation in [`FeasibilityFrontier::cap`]).
+    pub fn new(input: &SolverInput<'_>, max_b: usize) -> FeasibilityFrontier {
+        let len = max_b.min(FRONTIER_CAP);
+        let mut l_star = [f64::INFINITY; FRONTIER_CAP];
+        for (i, slot) in l_star.iter_mut().enumerate().take(len) {
+            *slot = max_drain_latency(input, (i + 1) as BatchSize);
+        }
+        FeasibilityFrontier { l_star, len }
+    }
+
+    /// `L*` for batch size `b` of an input thinned by `scale` relative to
+    /// the frontier's base input: the thinning identity gives
+    /// `L*_thinned(b) = L*_base(b·scale)`, served from cache when within
+    /// the cap and recomputed from the thinned view (bit-identical)
+    /// otherwise.
+    pub fn cap(&self, thinned: &SolverInput<'_>, scale: usize, b: BatchSize) -> Ms {
+        let eff = b as usize * scale;
+        if eff <= self.len {
+            self.l_star[eff - 1]
+        } else {
+            max_drain_latency(thinned, b)
+        }
+    }
+}
+
+/// Thread-local solver instrumentation: how many `best_batch` probes (the
+/// unit the binary search pays per candidate core count) ran on this
+/// thread. Thread-local so parallel test threads never see each other's
+/// counts; a relaxed counter would race across `cargo test` threads.
+pub mod probes {
+    use std::cell::Cell;
+
+    thread_local! {
+        static BEST_BATCH: Cell<u64> = const { Cell::new(0) };
+    }
+
+    /// Reset this thread's probe counter.
+    pub fn reset() {
+        BEST_BATCH.with(|c| c.set(0));
+    }
+
+    /// `best_batch` probes since the last [`reset`] on this thread.
+    pub fn best_batch_calls() -> u64 {
+        BEST_BATCH.with(|c| c.get())
+    }
+
+    pub(super) fn bump() {
+        BEST_BATCH.with(|c| c.set(c.get() + 1));
     }
 }
 
@@ -207,7 +402,7 @@ impl SolverChoice {
     pub fn solve(
         &self,
         model: &LatencyModel,
-        input: &SolverInput,
+        input: &SolverInput<'_>,
         limits: SolverLimits,
     ) -> Option<Solution> {
         match self {
@@ -235,9 +430,15 @@ pub struct ReplicaPlan {
 /// so when no single-replica `(c, b)` is feasible the only move is
 /// horizontal. Try fleet sizes `k = 1..=max_replicas` ascending; replica
 /// `i` of `k` serves every k-th request of the EDF queue (round-robin over
-/// the sorted deadlines), so its constraint set is the thinned budget list
-/// and `λ/k`. The first feasible `k` is returned — smallest fleet first,
-/// because replicas (unlike in-place resizes) pay a cold start.
+/// the sorted deadlines), so its constraint set is the *strided view*
+/// [`SolverInput::thinned`] and `λ/k` — no thinned list is ever
+/// materialized. The first feasible `k` is returned — smallest fleet
+/// first, because replicas (unlike in-place resizes) pay a cold start.
+///
+/// The incremental path computes one [`FeasibilityFrontier`] over the base
+/// input up to `b_max·max_replicas` and reuses it for every fleet size
+/// (thinning identity: `L*_k(b) = L*_1(b·k)`), so the whole fleet search
+/// costs `O(n·H(b_max·max_replicas))` plus `O(1)` candidate checks.
 ///
 /// Shared by [`crate::scaler::HybridScaler`] and the replica-set
 /// reconciler ([`crate::engine::replicaset`]) so the two layers can never
@@ -245,25 +446,39 @@ pub struct ReplicaPlan {
 pub fn plan_replicas(
     solver: SolverChoice,
     model: &LatencyModel,
-    input: &SolverInput,
+    input: &SolverInput<'_>,
     limits: SolverLimits,
     max_replicas: u32,
 ) -> Option<ReplicaPlan> {
     assert!(max_replicas >= 1);
-    for k in 1..=max_replicas {
-        // Every k-th budget of an ascending list is still ascending.
-        let thinned: Vec<Ms> =
-            input.budgets_ms.iter().copied().step_by(k as usize).collect();
-        let per_replica = SolverInput {
-            budgets_ms: thinned,
-            lambda_rps: input.lambda_rps / k as f64,
-            uniform_budget_ms: input.uniform_budget_ms,
-        };
-        if let Some(sol) = solver.solve(model, &per_replica, limits) {
-            return Some(ReplicaPlan { replicas: k, cores: sol.cores, batch: sol.batch });
+    match solver {
+        SolverChoice::Incremental => {
+            let max_eff = (limits.b_max as usize).saturating_mul(max_replicas as usize);
+            let frontier = FeasibilityFrontier::new(input, max_eff);
+            for k in 1..=max_replicas {
+                let per = input.thinned(k);
+                if let Some((c, b)) = IncrementalSolver::search_min_c(
+                    model, &per, &frontier, k as usize, limits, None,
+                ) {
+                    return Some(ReplicaPlan { replicas: k, cores: c, batch: b });
+                }
+            }
+            None
+        }
+        SolverChoice::BruteForce => {
+            for k in 1..=max_replicas {
+                let per = input.thinned(k);
+                if let Some(sol) = BruteForceSolver.solve(model, &per, limits) {
+                    return Some(ReplicaPlan {
+                        replicas: k,
+                        cores: sol.cores,
+                        batch: sol.batch,
+                    });
+                }
+            }
+            None
         }
     }
-    None
 }
 
 /// Algorithm 1, verbatim loop structure.
@@ -274,7 +489,7 @@ impl IpSolver for BruteForceSolver {
     fn solve(
         &self,
         model: &LatencyModel,
-        input: &SolverInput,
+        input: &SolverInput<'_>,
         limits: SolverLimits,
     ) -> Option<Solution> {
         for c in 1..=limits.c_max {
@@ -292,37 +507,113 @@ impl IpSolver for BruteForceSolver {
     }
 }
 
-/// Optimized solver: binary-search the smallest feasible `c` (feasibility
-/// of ∃b is monotone in `c`), then scan `b` ascending with an early break
-/// when even the *first* batch can no longer meet the tightest budget
-/// (that check is monotone in `b`).
+/// Optimized solver: feasibility frontier + memoized binary search over
+/// `c` + optional warm start (module docs).
 #[derive(Debug, Clone, Copy, Default)]
 pub struct IncrementalSolver;
 
 impl IncrementalSolver {
-    /// Smallest feasible batch at fixed `c`, or None.
+    /// Smallest feasible batch at fixed `c` against a precomputed
+    /// frontier, or None. One probe of the `c` search.
     fn best_batch(
         model: &LatencyModel,
-        input: &SolverInput,
+        input: &SolverInput<'_>,
+        frontier: &FeasibilityFrontier,
+        scale: usize,
         limits: SolverLimits,
         c: Cores,
     ) -> Option<BatchSize> {
-        let first_budget = if input.budgets_ms.is_empty() {
-            f64::INFINITY
-        } else {
-            input.budget_of(0)
-        };
+        probes::bump();
+        let first_cap = input.first_cap();
         for b in 1..=limits.b_max {
+            let l = model.latency_ms(b, c);
             // Monotone prune: l(b,c) grows with b; once the very first
             // batch misses the tightest deadline, all larger b miss too.
-            if model.latency_ms(b, c) > first_budget + 1e-9 {
+            if l > first_cap {
                 return None;
             }
-            if feasible(model, input, b, c) {
+            if throughput_ok(model, input, b, c) && l <= frontier.cap(input, scale, b) {
                 return Some(b);
             }
         }
         None
+    }
+
+    /// Smallest feasible `c` (with its batch), or None. Feasibility of
+    /// "∃b" is monotone in `c`: `l` strictly non-increasing in `c` ⇒ any
+    /// drain feasible at `c` is feasible at `c+1`; `h` non-decreasing in
+    /// `c` ⇒ same for throughput. The binary search memoizes the batch of
+    /// its last successful probe, so the answer's `best_batch` is never
+    /// recomputed; `hint` (a previous interval's solution) brackets the
+    /// search — two probes when the system hasn't moved.
+    fn search_min_c(
+        model: &LatencyModel,
+        input: &SolverInput<'_>,
+        frontier: &FeasibilityFrontier,
+        scale: usize,
+        limits: SolverLimits,
+        hint: Option<Solution>,
+    ) -> Option<(Cores, BatchSize)> {
+        let probe = |c: Cores| Self::best_batch(model, input, frontier, scale, limits, c);
+        let mut lo: Cores = 1;
+        let mut hi: Cores;
+        let mut b_hi: BatchSize;
+        match hint.map(|s| s.cores.clamp(1, limits.c_max)) {
+            Some(ch) => match probe(ch) {
+                Some(b) => {
+                    if ch == 1 {
+                        return Some((1, b));
+                    }
+                    match probe(ch - 1) {
+                        // One cheaper also works: search below it.
+                        Some(b_less) => {
+                            hi = ch - 1;
+                            b_hi = b_less;
+                        }
+                        // Previous answer is still the boundary.
+                        None => return Some((ch, b)),
+                    }
+                }
+                None => {
+                    if ch >= limits.c_max {
+                        return None;
+                    }
+                    b_hi = probe(limits.c_max)?;
+                    lo = ch + 1;
+                    hi = limits.c_max;
+                }
+            },
+            None => {
+                b_hi = probe(limits.c_max)?;
+                hi = limits.c_max;
+            }
+        }
+        while lo < hi {
+            let mid = lo + (hi - lo) / 2;
+            match probe(mid) {
+                Some(b) => {
+                    hi = mid;
+                    b_hi = b;
+                }
+                None => lo = mid + 1,
+            }
+        }
+        Some((hi, b_hi))
+    }
+
+    /// Solve with a warm-start hint (the previous adaptation interval's
+    /// solution). Returns exactly what the cold [`IpSolver::solve`] would
+    /// — the hint only brackets the `c` search.
+    pub fn solve_warm(
+        &self,
+        model: &LatencyModel,
+        input: &SolverInput<'_>,
+        limits: SolverLimits,
+        hint: Option<Solution>,
+    ) -> Option<Solution> {
+        let frontier = FeasibilityFrontier::new(input, limits.b_max as usize);
+        Self::search_min_c(model, input, &frontier, 1, limits, hint)
+            .map(|(c, b)| solution(model, limits, b, c))
     }
 }
 
@@ -330,28 +621,10 @@ impl IpSolver for IncrementalSolver {
     fn solve(
         &self,
         model: &LatencyModel,
-        input: &SolverInput,
+        input: &SolverInput<'_>,
         limits: SolverLimits,
     ) -> Option<Solution> {
-        // Feasibility of ∃b is monotone in c: l strictly non-increasing in
-        // c ⇒ any drain feasible at c is feasible at c+1; h non-decreasing
-        // in c ⇒ same for throughput. Binary search the boundary.
-        let exists = |c: Cores| Self::best_batch(model, input, limits, c).is_some();
-        if !exists(limits.c_max) {
-            return None;
-        }
-        let (mut lo, mut hi) = (1u32, limits.c_max);
-        while lo < hi {
-            let mid = (lo + hi) / 2;
-            if exists(mid) {
-                hi = mid;
-            } else {
-                lo = mid + 1;
-            }
-        }
-        let c = lo;
-        let b = Self::best_batch(model, input, limits, c)?;
-        Some(solution(model, limits, b, c))
+        self.solve_warm(model, input, limits, None)
     }
 
     fn name(&self) -> &'static str {
@@ -443,6 +716,71 @@ mod tests {
     }
 
     #[test]
+    fn deadline_view_equals_pre_offset_budgets() {
+        // The zero-copy deadline borrow is the same input as the owned
+        // budget list shifted by `now` — the invariance the lazy offset
+        // leans on.
+        let m = model();
+        let budgets = vec![150.0, 420.0, 900.0, 1_300.0];
+        let now = 87_654.0;
+        let deadlines: Vec<Ms> = budgets.iter().map(|b| b + now).collect();
+        let owned = SolverInput::per_request(budgets, 40.0);
+        let borrowed = SolverInput::from_deadlines(&deadlines, now, 40.0);
+        assert_eq!(owned.n(), borrowed.n());
+        for i in 0..owned.n() {
+            assert!((owned.budget_of(i) - borrowed.budget_of(i)).abs() < 1e-9);
+        }
+        assert_eq!(
+            BruteForceSolver.solve(&m, &owned, SolverLimits::default()),
+            BruteForceSolver.solve(&m, &borrowed, SolverLimits::default()),
+        );
+    }
+
+    #[test]
+    fn thinned_view_matches_collected_thinning() {
+        let budgets: Vec<Ms> = (0..23).map(|i| 50.0 + i as f64 * 37.0).collect();
+        let input = SolverInput::per_request(budgets.clone(), 60.0);
+        for k in 1..=5u32 {
+            let thin = input.thinned(k);
+            let collected: Vec<Ms> =
+                budgets.iter().copied().step_by(k as usize).collect();
+            assert_eq!(thin.n(), collected.len(), "k={k}");
+            for (i, want) in collected.iter().enumerate() {
+                assert_eq!(thin.budget_of(i), *want, "k={k} i={i}");
+            }
+            assert!((thin.lambda_rps - 60.0 / k as f64).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn frontier_matches_direct_drain_everywhere() {
+        // The cached frontier and the per-candidate evaluation must agree
+        // bit-for-bit — including past the cache via the thinning
+        // identity.
+        let budgets: Vec<Ms> = (0..200).map(|i| 30.0 + i as f64 * 11.0).collect();
+        let input = SolverInput::per_request(budgets, 25.0);
+        let frontier = FeasibilityFrontier::new(&input, 64);
+        for b in 1..=64u32 {
+            assert_eq!(
+                frontier.cap(&input, 1, b),
+                max_drain_latency(&input, b),
+                "b={b}"
+            );
+        }
+        // Thinning identity: L*_k(b) == L*_1(b·k).
+        for k in 1..=6u32 {
+            let thin = input.thinned(k);
+            for b in 1..=10u32 {
+                assert_eq!(
+                    max_drain_latency(&thin, b),
+                    max_drain_latency(&input, b * k),
+                    "k={k} b={b}"
+                );
+            }
+        }
+    }
+
+    #[test]
     fn objective_prefers_fewer_cores_then_smaller_batch() {
         let input = SolverInput::uniform(4, 1_000.0, 100.0, 50.0);
         let sol = BruteForceSolver.solve(&model(), &input, SolverLimits::default()).unwrap();
@@ -480,13 +818,80 @@ mod tests {
     }
 
     #[test]
+    fn warm_start_returns_cold_answer_for_any_hint() {
+        let m = model();
+        let limits = SolverLimits::default();
+        let input = SolverInput::per_request(vec![120.0, 300.0, 450.0, 800.0, 900.0], 60.0);
+        let cold = IncrementalSolver.solve(&m, &input, limits);
+        // Every possible hint — right, too low, too high, clamped —
+        // must land on the cold answer.
+        for hint_c in 0..=20u32 {
+            let hint = Some(Solution {
+                cores: hint_c,
+                batch: 4,
+                predicted_latency_ms: 0.0,
+                objective: 0.0,
+            });
+            assert_eq!(
+                IncrementalSolver.solve_warm(&m, &input, limits, hint),
+                cold,
+                "hint c={hint_c}"
+            );
+        }
+        // Infeasible input: warm must agree it is infeasible.
+        let hopeless = SolverInput::per_request(vec![0.5; 6], 10.0);
+        for hint_c in [1u32, 8, 16] {
+            let hint = Some(Solution {
+                cores: hint_c,
+                batch: 1,
+                predicted_latency_ms: 0.0,
+                objective: 0.0,
+            });
+            assert_eq!(
+                IncrementalSolver.solve_warm(&m, &hopeless, limits, hint),
+                None
+            );
+        }
+    }
+
+    #[test]
+    fn warm_start_probe_budget() {
+        // The memoized search: a cold solve pays at most
+        // 1 + ceil(log2(c_max)) best_batch probes (no final recompute —
+        // the binary search remembers the batch of its boundary probe); a
+        // warm re-solve of an unchanged system pays exactly 2 (hit at
+        // c_prev, miss at c_prev − 1).
+        let m = model();
+        let limits = SolverLimits::default();
+        let input = SolverInput::uniform(10, 1_000.0, 600.0, 100.0);
+        probes::reset();
+        let cold = IncrementalSolver.solve(&m, &input, limits).unwrap();
+        let cold_probes = probes::best_batch_calls();
+        assert!(cold.cores > 1, "scenario must not be trivial: {cold:?}");
+        assert!(
+            (1..=5).contains(&cold_probes),
+            "cold solve used {cold_probes} probes (max 1 + log2(16) = 5)"
+        );
+        probes::reset();
+        let warm = IncrementalSolver
+            .solve_warm(&m, &input, limits, Some(cold))
+            .unwrap();
+        assert_eq!(warm, cold);
+        assert_eq!(
+            probes::best_batch_calls(),
+            2,
+            "unchanged system must warm-solve in exactly two probes"
+        );
+    }
+
+    #[test]
     fn idle_system_empty_budgets_no_uniform_picks_cheapest() {
         // The idle edge: nothing queued, no uniform budget, λ = 0. The
         // drain check is vacuously feasible and the throughput constraint
         // binds at nothing, so both solvers must return the objective
         // minimum (1 core, batch 1) rather than erroring on the empty
         // budget list.
-        let input = SolverInput { budgets_ms: vec![], lambda_rps: 0.0, uniform_budget_ms: None };
+        let input = SolverInput::per_request(Vec::new(), 0.0);
         let m = model();
         for (name, sol) in [
             ("brute", BruteForceSolver.solve(&m, &input, SolverLimits::default())),
@@ -495,11 +900,12 @@ mod tests {
             let sol = sol.unwrap_or_else(|| panic!("{name} found idle infeasible"));
             assert_eq!((sol.cores, sol.batch), (1, 1), "{name}: {sol:?}");
         }
-        // Same via the per_request constructor (debug-asserted sorted).
-        let via_ctor = SolverInput::per_request(Vec::new(), 0.0);
+        // The zero-copy borrow of an empty index behaves the same.
+        let empty: [Ms; 0] = [];
+        let borrowed = SolverInput::from_deadlines(&empty, 5_000.0, 0.0);
         assert_eq!(
-            BruteForceSolver.solve(&m, &via_ctor, SolverLimits::default()),
-            IncrementalSolver.solve(&m, &via_ctor, SolverLimits::default()),
+            BruteForceSolver.solve(&m, &borrowed, SolverLimits::default()),
+            IncrementalSolver.solve(&m, &borrowed, SolverLimits::default()),
         );
     }
 

@@ -10,8 +10,8 @@ pub fn percentile(sorted: &[f64], p: f64) -> f64 {
     assert!(!sorted.is_empty(), "percentile of empty sample");
     assert!((0.0..=100.0).contains(&p), "p={p} out of range");
     debug_assert!(
-        sorted.windows(2).all(|w| w[0] <= w[1]),
-        "input must be sorted"
+        sorted.windows(2).all(|w| w[0].total_cmp(&w[1]).is_le()),
+        "input must be sorted (total order)"
     );
     if sorted.len() == 1 {
         return sorted[0];
@@ -39,10 +39,15 @@ pub struct Summary {
 
 impl Summary {
     /// Compute a summary from raw samples (need not be sorted).
+    ///
+    /// NaN handling is total and panic-free: `f64::total_cmp` (the same
+    /// order `remaining_budgets` and the trackers use) sorts any NaN after
+    /// every finite value, so `max` surfaces it and the moments propagate
+    /// it — a poisoned summary is visible, never a crash mid-report.
     pub fn of(samples: &[f64]) -> Summary {
         assert!(!samples.is_empty(), "summary of empty sample");
         let mut v = samples.to_vec();
-        v.sort_by(|a, b| a.partial_cmp(b).expect("NaN in samples"));
+        v.sort_by(f64::total_cmp);
         let n = v.len() as f64;
         let mean = v.iter().sum::<f64>() / n;
         let var = v.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n;
@@ -241,6 +246,22 @@ mod tests {
         assert!((s.std - 2.0).abs() < 1e-12);
         assert_eq!(s.min, 2.0);
         assert_eq!(s.max, 9.0);
+    }
+
+    #[test]
+    fn summary_nan_free_path_and_nan_behavior_well_defined() {
+        // NaN-free: total_cmp orders exactly like partial_cmp.
+        let s = Summary::of(&[3.0, -1.0, 2.0, 0.0]);
+        assert_eq!((s.min, s.max), (-1.0, 3.0));
+        assert!((s.p50 - 1.0).abs() < 1e-12);
+        // With a NaN: no panic (the old partial_cmp sort aborted here);
+        // total order sorts NaN last, so max surfaces it and the moments
+        // propagate it — poisoned but visible, never a crash.
+        let s = Summary::of(&[1.0, f64::NAN, 2.0]);
+        assert_eq!(s.count, 3);
+        assert_eq!(s.min, 1.0);
+        assert!(s.max.is_nan());
+        assert!(s.mean.is_nan());
     }
 
     #[test]

@@ -179,6 +179,40 @@ fn bench_quick_stable_emits_report_and_gates_bootstrap_baseline() {
 }
 
 #[test]
+fn bench_micro_quick_stable_is_byte_deterministic() {
+    // The microbench determinism contract CI leans on: two --stable runs
+    // write byte-identical reports (wall numbers omitted, checksums and
+    // iteration counts pinned).
+    let dir = std::env::temp_dir().join(format!("sponge_cli_micro_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let out_a = dir.join("micro-a.json");
+    let out_b = dir.join("micro-b.json");
+    for out in [&out_a, &out_b] {
+        let (ok, stdout, stderr) = run(&[
+            "bench",
+            "--micro",
+            "--quick",
+            "--stable",
+            "--out",
+            out.to_str().unwrap(),
+        ]);
+        assert!(ok, "{stderr}");
+        assert!(stdout.contains("sponge bench --micro"), "{stdout}");
+    }
+    let a = std::fs::read_to_string(&out_a).unwrap();
+    let b = std::fs::read_to_string(&out_b).unwrap();
+    assert_eq!(a, b, "stable micro reports must be byte-identical");
+    let doc = sponge::util::json::Json::parse(&a).unwrap();
+    assert_eq!(doc.get("schema").as_str(), Some("spongebench/v1"));
+    assert_eq!(doc.get("kind").as_str(), Some("micro"));
+    assert!(!a.contains("ns_per_op"), "stable micro report leaked timings");
+    // The acceptance-pinned stages all report.
+    for name in ["queue_snapshot", "solve_cold", "solve_warm", "plan_replicas"] {
+        assert!(a.contains(&format!("\"{name}\"")), "missing {name}: {a}");
+    }
+}
+
+#[test]
 fn trace_gen_emits_csv() {
     let (ok, stdout, _) = run(&["trace-gen", "--seconds", "30", "--seed", "3"]);
     assert!(ok);

@@ -1,12 +1,19 @@
 //! Property-based integration tests for the solver: Algorithm 1 semantics,
-//! optimality, and brute-force ≡ incremental equivalence over randomized
-//! inputs.
+//! optimality, brute-force ≡ incremental equivalence, and — since the
+//! feasibility-frontier refactor — equivalence against the *pre-refactor*
+//! reference implementations preserved in `sponge::microbench::reference`
+//! (the old drain-resimulating incremental solver and the Vec-thinning
+//! replica planner), over randomized inputs including empty, uniform, and
+//! per-request shapes.
 
+use sponge::microbench::reference::{
+    legacy_brute_solve, legacy_incremental_solve, legacy_plan_replicas,
+};
 use sponge::perfmodel::LatencyModel;
 use sponge::prop_assert;
 use sponge::solver::{
-    drain_feasible, throughput_ok, BruteForceSolver, IncrementalSolver, IpSolver, SolverInput,
-    SolverLimits,
+    drain_feasible, plan_replicas, throughput_ok, BruteForceSolver, IncrementalSolver, IpSolver,
+    Solution, SolverChoice, SolverInput, SolverLimits,
 };
 use sponge::util::proptest::{run_prop, Gen};
 
@@ -19,17 +26,23 @@ fn random_model(g: &mut Gen) -> LatencyModel {
     )
 }
 
-fn random_input(g: &mut Gen) -> SolverInput {
-    if g.bool() {
-        let n = g.usize(0, 64);
-        let slo = g.f64(200.0, 2_000.0);
-        let cl_max = g.f64(0.0, slo * 0.95);
-        SolverInput::uniform(n.max(1), slo, cl_max, g.f64(1.0, 150.0))
-    } else {
-        let n = g.usize(0, 64);
-        let mut budgets = g.vec(n, |g| g.f64(5.0, 1_500.0));
-        budgets.sort_by(f64::total_cmp);
-        SolverInput::per_request(budgets, g.f64(1.0, 150.0))
+/// Empty, uniform, or per-request — every input shape the solvers accept.
+fn random_input(g: &mut Gen) -> SolverInput<'static> {
+    match g.u32(0, 2) {
+        0 => {
+            let n = g.usize(0, 64);
+            let slo = g.f64(200.0, 2_000.0);
+            let cl_max = g.f64(0.0, slo * 0.95);
+            SolverInput::uniform(n.max(1), slo, cl_max, g.f64(1.0, 150.0))
+        }
+        1 => {
+            let n = g.usize(0, 64);
+            let mut budgets = g.vec(n, |g| g.f64(5.0, 1_500.0));
+            budgets.sort_by(f64::total_cmp);
+            SolverInput::per_request(budgets, g.f64(1.0, 150.0))
+        }
+        // Explicit empty (idle system), λ possibly 0.
+        _ => SolverInput::per_request(Vec::new(), g.f64(0.0, 50.0)),
     }
 }
 
@@ -46,6 +59,105 @@ fn prop_incremental_equals_brute_force() {
         let a = BruteForceSolver.solve(&model, &input, limits);
         let b = IncrementalSolver.solve(&model, &input, limits);
         prop_assert!(a == b, "brute={a:?} incremental={b:?} model={model:?}");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_frontier_solver_equals_pre_refactor_oracles() {
+    // The acceptance pin for the frontier refactor: on ≥1000 randomized
+    // cases (empty / uniform / per-request, random limits) the frontier
+    // solver, Algorithm 1, and BOTH pre-refactor implementations return
+    // identical `Solution`s — and the warm-started solve, seeded with an
+    // arbitrary (often wrong) hint, lands on the same answer.
+    run_prop("frontier-eq-legacy", 1_000, |g| {
+        let model = random_model(g);
+        let input = random_input(g);
+        let limits = SolverLimits {
+            c_max: g.u32(1, 24),
+            b_max: g.u32(1, 24),
+            delta: 1e-3,
+        };
+        let frontier = IncrementalSolver.solve(&model, &input, limits);
+        let brute = BruteForceSolver.solve(&model, &input, limits);
+        let old_inc = legacy_incremental_solve(&model, &input, limits);
+        let old_brute = legacy_brute_solve(&model, &input, limits);
+        prop_assert!(
+            frontier == brute,
+            "frontier={frontier:?} brute={brute:?} model={model:?}"
+        );
+        prop_assert!(
+            frontier == old_inc,
+            "frontier={frontier:?} legacy-incremental={old_inc:?} model={model:?}"
+        );
+        prop_assert!(
+            frontier == old_brute,
+            "frontier={frontier:?} legacy-brute={old_brute:?} model={model:?}"
+        );
+        let hint = Some(Solution {
+            cores: g.u32(1, 32),
+            batch: g.u32(1, 32),
+            predicted_latency_ms: 0.0,
+            objective: 0.0,
+        });
+        let warm = IncrementalSolver.solve_warm(&model, &input, limits, hint);
+        prop_assert!(
+            warm == frontier,
+            "warm(hint={hint:?})={warm:?} cold={frontier:?}"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_plan_replicas_strided_equals_vec_thinning() {
+    // The strided-view planner (one shared frontier, no per-k collect)
+    // must return exactly what the old materialize-and-solve planner
+    // returned, for both solver choices.
+    run_prop("plan-replicas-strided-eq-legacy", 300, |g| {
+        let model = random_model(g);
+        let input = random_input(g);
+        let limits = SolverLimits {
+            c_max: g.u32(1, 20),
+            b_max: g.u32(1, 20),
+            delta: 1e-3,
+        };
+        let max_replicas = g.u32(1, 8);
+        for (choice, brute) in [
+            (SolverChoice::Incremental, false),
+            (SolverChoice::BruteForce, true),
+        ] {
+            let strided = plan_replicas(choice, &model, &input, limits, max_replicas);
+            let legacy = legacy_plan_replicas(brute, &model, &input, limits, max_replicas);
+            prop_assert!(
+                strided == legacy,
+                "{choice:?} k≤{max_replicas}: strided={strided:?} legacy={legacy:?} \
+                 model={model:?}"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_deadline_borrow_equals_owned_budgets() {
+    // The zero-copy path: an input borrowing absolute deadlines with a
+    // lazy `now` offset is the same input as the owned budget list, when
+    // the budgets are materialized by the identical subtraction.
+    run_prop("deadline-borrow-eq-owned", 200, |g| {
+        let model = random_model(g);
+        let n = g.usize(0, 64);
+        let now = g.f64(0.0, 1_000_000.0);
+        let mut deadlines = g.vec(n, |g| now + g.f64(1.0, 2_000.0));
+        deadlines.sort_by(f64::total_cmp);
+        let lambda = g.f64(0.0, 150.0);
+        let budgets: Vec<f64> = deadlines.iter().map(|d| d - now).collect();
+        let owned = SolverInput::per_request(budgets, lambda);
+        let borrowed = SolverInput::from_deadlines(&deadlines, now, lambda);
+        let limits = SolverLimits::default();
+        let a = IncrementalSolver.solve(&model, &owned, limits);
+        let b = IncrementalSolver.solve(&model, &borrowed, limits);
+        prop_assert!(a == b, "owned={a:?} borrowed={b:?} now={now}");
         Ok(())
     });
 }
