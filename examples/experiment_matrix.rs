@@ -40,6 +40,7 @@ fn main() -> anyhow::Result<()> {
         solvers: vec![SolverChoice::Incremental],
         budgets: vec![48],
         replica_budgets: vec![1],
+        arbiters: vec![sponge::arbiter::ArbiterChoice::Static],
         horizon_ms: horizon_s as f64 * 1_000.0,
         model: "yolov5s".into(),
         seed: 42,

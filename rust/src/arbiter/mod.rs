@@ -1,0 +1,1122 @@
+//! `CoreArbiter` — the lease-based resource control plane.
+//!
+//! Sponge's IP formulation decides *how many* cores a model needs per
+//! adaptation interval; until this module existed, *getting* them was an
+//! ad-hoc first-come headroom subtraction buried in the engines. This is
+//! the explicit allocation surface every consumer goes through instead:
+//!
+//! * A **partition** is a nominal core budget with an owner group — one
+//!   node's worth of cores for a replica, or a model's guaranteed share of
+//!   a co-located budget. Partition budgets are the *guaranteed floor*
+//!   priority class.
+//! * A **tenant** is one allocation principal (a model inside a
+//!   [`crate::engine::SimEngine`], a replica of a
+//!   [`crate::engine::ReplicaSet`], a live coordinator). Tenants draw from
+//!   their partition first.
+//! * A [`CoreLease`] is a typed grant to one instance. Its `granted`
+//!   cores split into a guaranteed part (charged to the tenant's own
+//!   partition) and a *stolen* part borrowed from other partitions' idle
+//!   surplus — the stealable-surplus priority class, revocable at any
+//!   adaptation tick.
+//! * **Clawback**: when an owner's demand returns (its solver plan wants
+//!   cores its partition has lent out), the arbiter issues
+//!   [`Revocation`]s. A borrower's next [`CoreArbiter::renew`] is clamped
+//!   and the engine actuates the shrink as an ordinary *in-place* vertical
+//!   resize — no restarts, mirroring the paper's scaling mechanism — so
+//!   the lender has its floor back one adaptation tick plus one resize
+//!   actuation window later.
+//!
+//! Two implementations ship:
+//!
+//! * [`StaticPartition`] — lending disabled. With the layouts the engines
+//!   use by default (one pool shared by a `SimEngine`'s models; one
+//!   partition per replica) its grants are bit-identical to the legacy
+//!   headroom subtraction, making it the migration/compat oracle: every
+//!   pre-redesign baseline and the spongebench `benches/baseline.json`
+//!   stay valid under it.
+//! * [`StealingArbiter`] — idle partition surplus (idle for at least
+//!   [`StealingCfg::lend_hysteresis_ms`], so one quiet tick never lends)
+//!   is lent across models and across replicas, and clawed back on
+//!   pressure as above.
+//!
+//! ## Ledger semantics
+//!
+//! The ledger mirrors the cluster substrate's reservation rules exactly:
+//! a *grow* reserves its target immediately (K8s in-place resize holds
+//! `max(old, new)` during actuation), a *shrink* keeps the old
+//! reservation until the resize actuation window
+//! ([`StealingCfg::resize_ms`]) lands, and a terminate frees instantly.
+//! That mirroring is what makes [`StaticPartition`] grant-for-grant
+//! identical to the old engine-side arithmetic.
+//!
+//! Every mutating call takes `now` (engine-clock ms); time must be
+//! non-decreasing per arbiter, which the tick-driven engines guarantee.
+
+use std::sync::{Arc, Mutex};
+
+use crate::{Cores, Ms};
+
+/// One allocation principal (a model, a replica, a coordinator).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct TenantId(pub u32);
+
+/// One guaranteed-floor budget (a node's worth of cores, or a model's
+/// share of a co-located budget).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct PartitionId(pub u32);
+
+/// Handle to one lease (1:1 with a serving instance).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct LeaseId(pub u64);
+
+/// Priority class of a lease's marginal cores.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LeaseClass {
+    /// Entirely within the tenant's own partition floor — irrevocable.
+    Guaranteed,
+    /// Carries borrowed surplus — revocable at the next adaptation tick.
+    Surplus,
+}
+
+/// A point-in-time view of one lease, returned by
+/// [`CoreArbiter::request_lease`] and [`CoreArbiter::renew`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CoreLease {
+    pub id: LeaseId,
+    pub tenant: TenantId,
+    /// Negotiated allocation — what the instance should run at (and what
+    /// it will hold once any pending shrink window lands).
+    pub granted: Cores,
+    /// Pool reservation right now (`>= granted` during a shrink window,
+    /// mirroring the substrate's `max(old, target)` reservation).
+    pub reserved: Cores,
+    /// Portion of `reserved` borrowed from other partitions' surplus.
+    pub stolen: Cores,
+}
+
+impl CoreLease {
+    /// The lease's priority class (see [`LeaseClass`]).
+    pub fn class(&self) -> LeaseClass {
+        if self.stolen > 0 { LeaseClass::Surplus } else { LeaseClass::Guaranteed }
+    }
+}
+
+/// One clawback demand: `cores` of `lender`'s floor, currently held by
+/// `borrower` via `lease`, will be clamped off the lease at its next
+/// renewal (the next adaptation tick).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Revocation {
+    pub lease: LeaseId,
+    pub borrower: TenantId,
+    pub lender: PartitionId,
+    pub cores: Cores,
+}
+
+/// Per-partition accounting in an [`ArbiterSnapshot`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PartitionUsage {
+    pub id: PartitionId,
+    /// Guaranteed floor (0 once a retiring partition's loans are repaid).
+    pub budget: Cores,
+    /// Cores reserved against this budget (own tenants' holds + lent).
+    pub used: Cores,
+    /// Cores of this floor currently granted to other partitions' tenants.
+    pub lent: Cores,
+    /// Unreserved headroom.
+    pub free: Cores,
+    /// Surplus other tenants could borrow *right now* (0 unless the
+    /// partition has been idle past the lending hysteresis).
+    pub lendable: Cores,
+}
+
+/// Per-tenant accounting in an [`ArbiterSnapshot`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TenantUsage {
+    pub tenant: TenantId,
+    pub partition: PartitionId,
+    /// Total cores reserved by this tenant's leases.
+    pub granted: Cores,
+    /// Portion of `granted` borrowed from other partitions.
+    pub stolen: Cores,
+    /// Cores of this tenant's floor lent to others (attributed only when
+    /// the tenant is its partition's sole member; 0 in shared pools).
+    pub lent: Cores,
+    /// High-water mark of `stolen` over the arbiter's lifetime.
+    pub peak_stolen: Cores,
+}
+
+/// Whole-arbiter accounting view.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArbiterSnapshot {
+    /// Sum of partition budgets (retiring partitions count only their
+    /// outstanding loans).
+    pub budget: Cores,
+    /// Sum of all lease reservations. Invariant: `granted <= budget`.
+    pub granted: Cores,
+    pub partitions: Vec<PartitionUsage>,
+    pub tenants: Vec<TenantUsage>,
+}
+
+impl ArbiterSnapshot {
+    /// Usage row for one tenant.
+    pub fn tenant(&self, t: TenantId) -> Option<&TenantUsage> {
+        self.tenants.iter().find(|u| u.tenant == t)
+    }
+
+    /// The ceiling `tenant` could reach this tick — its current holds plus
+    /// its own partition's free floor plus every other partition's
+    /// currently-lendable surplus. This is the number fed to the solver as
+    /// [`crate::scaler::ScalerObs::cores_cap`]: the plan targets what a
+    /// lease can actually grant.
+    pub fn plannable(&self, t: TenantId) -> Cores {
+        let Some(u) = self.tenant(t) else { return 0 };
+        let mut cap = u.granted;
+        for p in &self.partitions {
+            if p.id == u.partition {
+                cap = cap.saturating_add(p.free);
+            } else {
+                cap = cap.saturating_add(p.lendable);
+            }
+        }
+        cap
+    }
+
+    /// Total cores currently crossing partition boundaries.
+    pub fn total_stolen(&self) -> Cores {
+        self.tenants.iter().map(|t| t.stolen).sum()
+    }
+}
+
+/// The lease-based resource-allocation surface. `request_lease`, `renew`,
+/// `release`, `reclaim`, and `snapshot` form the per-tick allocation
+/// protocol; `add_partition` / `register_tenant` / `retire_partition` are
+/// the (rarer) topology surface the engines call at construction and
+/// replica scale-in.
+pub trait CoreArbiter: Send {
+    /// Implementation label (`"static"` / `"stealing"`).
+    fn name(&self) -> &'static str;
+
+    /// Add a guaranteed-floor budget; returns its id.
+    fn add_partition(&mut self, budget: Cores) -> PartitionId;
+
+    /// Register an allocation principal drawing from `partition`.
+    fn register_tenant(&mut self, partition: PartitionId) -> TenantId;
+
+    /// Retire a partition (replica scale-in): its floor leaves the pool,
+    /// outstanding loans of its surplus are revoked (clawed back from
+    /// borrowers at their next renewal), and its tenants are deregistered.
+    /// The caller must have released the tenants' own leases first.
+    fn retire_partition(&mut self, partition: PartitionId, now: Ms);
+
+    /// Open a lease for `tenant` wanting `want` cores. The grant may be
+    /// smaller (down to 0) when neither the tenant's floor nor any
+    /// lendable surplus covers the request.
+    fn request_lease(&mut self, tenant: TenantId, want: Cores, now: Ms) -> CoreLease;
+
+    /// Re-negotiate a lease to `want` cores at an adaptation tick. Pending
+    /// clawbacks are enforced first (the grant shrinks below the current
+    /// holding); shrinks always succeed (freed cores return to the pool
+    /// after the resize actuation window); growth is clamped to the floor
+    /// + lendable surplus. When demand goes unmet while the tenant's own
+    /// floor is lent out, revocations are issued automatically so the
+    /// cores come home by the next tick.
+    fn renew(&mut self, lease: LeaseId, want: Cores, now: Ms) -> CoreLease;
+
+    /// Close a lease; all its cores (own and borrowed) free instantly —
+    /// instance termination, not an in-place shrink.
+    fn release(&mut self, lease: LeaseId, now: Ms);
+
+    /// Explicit clawback: demand up to `need` cores of `tenant`'s floor
+    /// back from current borrowers. Returns the revocations issued (each
+    /// takes effect at the borrower's next renewal).
+    fn reclaim(&mut self, tenant: TenantId, need: Cores, now: Ms) -> Vec<Revocation>;
+
+    /// Accounting view at `now` (pure; hysteresis evaluated against `now`).
+    fn snapshot(&self, now: Ms) -> ArbiterSnapshot;
+
+    /// [`ArbiterSnapshot::plannable`] for one tenant without materializing
+    /// the snapshot — the per-tick hot-path read (no allocation).
+    fn plannable(&self, tenant: TenantId, now: Ms) -> Cores;
+
+    /// One tenant's usage row without materializing the snapshot (the
+    /// per-dispatch stats read; no allocation).
+    fn usage(&self, tenant: TenantId) -> Option<TenantUsage>;
+}
+
+/// Shared handle: engines ticking in lock-step (replica fleets, the live
+/// coordinators) arbitrate through one ledger.
+pub type SharedArbiter = Arc<Mutex<dyn CoreArbiter>>;
+
+/// Wrap an arbiter into a [`SharedArbiter`] handle.
+pub fn shared(arbiter: impl CoreArbiter + 'static) -> SharedArbiter {
+    Arc::new(Mutex::new(arbiter))
+}
+
+/// The spongebench `arbiter` policy axis.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArbiterChoice {
+    /// [`StaticPartition`] — legacy-identical, no lending.
+    Static,
+    /// [`StealingArbiter`] — cross-partition lending with clawback.
+    Stealing,
+}
+
+impl ArbiterChoice {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ArbiterChoice::Static => "static",
+            ArbiterChoice::Stealing => "stealing",
+        }
+    }
+
+    /// Build an empty arbiter of this flavour (partitions added by the
+    /// engine that owns the topology).
+    pub fn build(&self) -> SharedArbiter {
+        match self {
+            ArbiterChoice::Static => shared(StaticPartition::new()),
+            ArbiterChoice::Stealing => shared(StealingArbiter::new(StealingCfg::default())),
+        }
+    }
+}
+
+/// Stealing-arbiter knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct StealingCfg {
+    /// A partition's surplus becomes lendable only after it has been
+    /// continuously idle this long (anti-thrash hysteresis; default two
+    /// paper adaptation intervals).
+    pub lend_hysteresis_ms: Ms,
+    /// In-place resize actuation window: a shrink's freed cores return to
+    /// the pool after this delay, mirroring
+    /// [`crate::cluster::ClusterCfg::resize_ms`].
+    pub resize_ms: Ms,
+}
+
+impl Default for StealingCfg {
+    fn default() -> Self {
+        StealingCfg { lend_hysteresis_ms: 2_000.0, resize_ms: 100.0 }
+    }
+}
+
+// ------------------------------------------------------------- the ledger --
+
+#[derive(Debug, Clone)]
+struct PartitionSlot {
+    budget: Cores,
+    /// Engine time since when the partition's *current* free headroom has
+    /// been continuously free (`None` while fully reserved). Any increase
+    /// of free headroom re-stamps the clock, so freshly freed cores must
+    /// age through the full hysteresis before they lend — one quiet tick
+    /// (or a release this instant) never lends.
+    idle_since: Option<Ms>,
+    /// Free headroom at the last bookkeeping pass (re-stamp detector).
+    last_free: Cores,
+    retiring: bool,
+}
+
+#[derive(Debug, Clone)]
+struct TenantSlot {
+    partition: usize,
+    live: bool,
+    peak_stolen: Cores,
+}
+
+#[derive(Debug, Clone)]
+struct LeaseSlot {
+    tenant: usize,
+    live: bool,
+    /// Negotiated allocation (post-land).
+    target: Cores,
+    /// Pool reservation now (`>= target` during a shrink window).
+    committed: Cores,
+    /// Portion of `committed` charged to the tenant's own partition.
+    own: Cores,
+    /// Portion of `committed` earmarked for clawback return at land time
+    /// (never regrowable; always borrowed cores).
+    enforced: Cores,
+    /// When the pending shrink lands (`f64::INFINITY` = none pending).
+    land_at: Ms,
+    /// Clawback demanded but not yet enforced (applied at next renew).
+    revoked: Cores,
+}
+
+impl LeaseSlot {
+    fn borrowed(&self) -> Cores {
+        self.committed - self.own
+    }
+}
+
+/// One cross-partition loan: `cores` of partition `lender`'s floor held
+/// by lease `lease`.
+#[derive(Debug, Clone, Copy)]
+struct Debt {
+    lender: usize,
+    lease: usize,
+    cores: Cores,
+}
+
+/// The ledger both arbiter flavours share; `lending` is the only policy
+/// difference.
+#[derive(Debug)]
+struct Ledger {
+    lending: bool,
+    cfg: StealingCfg,
+    partitions: Vec<PartitionSlot>,
+    tenants: Vec<TenantSlot>,
+    leases: Vec<LeaseSlot>,
+    debts: Vec<Debt>,
+}
+
+impl Ledger {
+    fn new(lending: bool, cfg: StealingCfg) -> Ledger {
+        Ledger {
+            lending,
+            cfg,
+            partitions: Vec::new(),
+            tenants: Vec::new(),
+            leases: Vec::new(),
+            debts: Vec::new(),
+        }
+    }
+
+    /// Cores of partition `p`'s floor lent to other partitions' tenants.
+    fn lent(&self, p: usize) -> Cores {
+        self.debts.iter().filter(|d| d.lender == p).map(|d| d.cores).sum()
+    }
+
+    /// Cores reserved against partition `p`'s budget.
+    fn used(&self, p: usize) -> Cores {
+        let own: Cores = self
+            .leases
+            .iter()
+            .filter(|l| l.live && self.tenants[l.tenant].partition == p)
+            .map(|l| l.own)
+            .sum();
+        own + self.lent(p)
+    }
+
+    /// Effective budget (retiring partitions shrink to their outstanding
+    /// loans, so the fleet invariant stays exact while borrowers wind
+    /// down).
+    fn effective_budget(&self, p: usize) -> Cores {
+        let slot = &self.partitions[p];
+        if slot.retiring { self.used(p) } else { slot.budget }
+    }
+
+    fn free(&self, p: usize) -> Cores {
+        self.effective_budget(p).saturating_sub(self.used(p))
+    }
+
+    /// Surplus of `p` lendable at `now` under the hysteresis rule.
+    fn lendable(&self, p: usize, now: Ms) -> Cores {
+        if !self.lending || self.partitions[p].retiring {
+            return 0;
+        }
+        match self.partitions[p].idle_since {
+            Some(t) if now - t >= self.cfg.lend_hysteresis_ms => self.free(p),
+            _ => 0,
+        }
+    }
+
+    /// Refresh every partition's idle stamp after a mutation. Growth of
+    /// the free headroom re-stamps the clock: newly freed cores restart
+    /// the hysteresis for the whole surplus (conservative, anti-thrash).
+    fn update_idle(&mut self, now: Ms) {
+        for p in 0..self.partitions.len() {
+            let f = self.free(p);
+            let slot = &mut self.partitions[p];
+            if f == 0 {
+                slot.idle_since = None;
+            } else if f > slot.last_free || slot.idle_since.is_none() {
+                slot.idle_since = Some(now);
+            }
+            slot.last_free = f;
+        }
+    }
+
+    /// Repay up to `amount` of `lease`'s debts, newest loans first.
+    /// Returns how much was repaid.
+    fn repay(&mut self, lease: usize, amount: Cores) -> Cores {
+        let mut left = amount;
+        for i in (0..self.debts.len()).rev() {
+            if left == 0 {
+                break;
+            }
+            if self.debts[i].lease != lease {
+                continue;
+            }
+            let pay = self.debts[i].cores.min(left);
+            self.debts[i].cores -= pay;
+            left -= pay;
+        }
+        self.debts.retain(|d| d.cores > 0);
+        amount - left
+    }
+
+    /// Land every pending shrink due by `now`: reduce reservations to
+    /// targets, returning borrowed cores (newest loans first) before own
+    /// floor cores.
+    fn land(&mut self, now: Ms) {
+        for i in 0..self.leases.len() {
+            let due = {
+                let l = &self.leases[i];
+                l.live && l.land_at <= now && l.committed > l.target
+            };
+            if !due {
+                if self.leases[i].land_at <= now {
+                    self.leases[i].land_at = f64::INFINITY;
+                    self.leases[i].enforced = 0;
+                }
+                continue;
+            }
+            let shed = self.leases[i].committed - self.leases[i].target;
+            let from_borrowed = shed.min(self.leases[i].borrowed());
+            let repaid = self.repay(i, from_borrowed);
+            let from_own = shed - repaid;
+            let l = &mut self.leases[i];
+            l.own -= from_own;
+            l.committed = l.target;
+            l.enforced = 0;
+            l.land_at = f64::INFINITY;
+        }
+        self.update_idle(now);
+    }
+
+    /// Grow lease `i` by up to `add` fresh cores: own floor first, then
+    /// (lending only) other partitions' lendable surplus in partition
+    /// order. Returns the cores obtained. Dead tenants (their partition
+    /// retired) can neither draw their floor nor borrow — grants 0.
+    fn grow(&mut self, i: usize, add: Cores, now: Ms) -> Cores {
+        if !self.tenants[self.leases[i].tenant].live {
+            return 0;
+        }
+        let p = self.tenants[self.leases[i].tenant].partition;
+        let from_own = add.min(self.free(p));
+        {
+            let l = &mut self.leases[i];
+            l.own += from_own;
+            l.committed += from_own;
+        }
+        let mut got = from_own;
+        if self.lending && got < add {
+            for q in 0..self.partitions.len() {
+                if got == add {
+                    break;
+                }
+                if q == p {
+                    continue;
+                }
+                let lend = (add - got).min(self.lendable(q, now));
+                if lend > 0 {
+                    self.debts.push(Debt { lender: q, lease: i, cores: lend });
+                    self.leases[i].committed += lend;
+                    got += lend;
+                }
+            }
+        }
+        got
+    }
+
+    /// Issue revocations for up to `need` cores of partition `p`'s lent
+    /// floor, newest loans first. `skip_lease` exempts the caller's own
+    /// lease (it cannot hold its own partition's loans anyway; belt and
+    /// braces).
+    fn issue_revocations(
+        &mut self,
+        p: usize,
+        need: Cores,
+        skip_lease: Option<usize>,
+    ) -> Vec<Revocation> {
+        let mut out = Vec::new();
+        let mut left = need;
+        for di in (0..self.debts.len()).rev() {
+            if left == 0 {
+                break;
+            }
+            let d = self.debts[di];
+            if d.lender != p || Some(d.lease) == skip_lease {
+                continue;
+            }
+            let l = &self.leases[d.lease];
+            if !l.live {
+                continue;
+            }
+            // Revocable: borrowed cores not already earmarked or demanded.
+            let already = l.enforced + l.revoked;
+            let revocable = l.borrowed().saturating_sub(already).min(d.cores);
+            let take = revocable.min(left);
+            if take == 0 {
+                continue;
+            }
+            self.leases[d.lease].revoked += take;
+            left -= take;
+            out.push(Revocation {
+                lease: LeaseId(d.lease as u64),
+                borrower: TenantId(self.leases[d.lease].tenant as u32),
+                lender: PartitionId(p as u32),
+                cores: take,
+            });
+        }
+        out
+    }
+
+    // ---- the trait operations -------------------------------------------
+
+    fn add_partition(&mut self, budget: Cores) -> PartitionId {
+        // `idle_since` stamps lazily at the first bookkeeping pass, so a
+        // partition added mid-run ages from its creation, not from t=0.
+        self.partitions.push(PartitionSlot {
+            budget,
+            idle_since: None,
+            last_free: 0,
+            retiring: false,
+        });
+        PartitionId(self.partitions.len() as u32 - 1)
+    }
+
+    fn register_tenant(&mut self, partition: PartitionId) -> TenantId {
+        let p = partition.0 as usize;
+        assert!(p < self.partitions.len(), "unknown partition {partition:?}");
+        self.tenants.push(TenantSlot { partition: p, live: true, peak_stolen: 0 });
+        TenantId(self.tenants.len() as u32 - 1)
+    }
+
+    fn retire_partition(&mut self, partition: PartitionId, now: Ms) {
+        self.land(now);
+        let p = partition.0 as usize;
+        if p >= self.partitions.len() || self.partitions[p].retiring {
+            return;
+        }
+        // Defensive: callers release their tenants' leases first, but a
+        // straggler must not keep holding (or keep borrowing against) a
+        // floor that is leaving the pool.
+        for i in 0..self.leases.len() {
+            if self.leases[i].live && self.tenants[self.leases[i].tenant].partition == p {
+                self.release(LeaseId(i as u64), now);
+            }
+        }
+        self.partitions[p].retiring = true;
+        // Its floor leaves the pool; whatever is still lent out is clawed
+        // back from the borrowers at their next renewal.
+        let lent = self.lent(p);
+        if lent > 0 {
+            let _ = self.issue_revocations(p, lent, None);
+        }
+        for t in &mut self.tenants {
+            if t.partition == p {
+                t.live = false;
+            }
+        }
+        self.update_idle(now);
+    }
+
+    fn request_lease(&mut self, tenant: TenantId, want: Cores, now: Ms) -> CoreLease {
+        self.land(now);
+        let t = tenant.0 as usize;
+        assert!(t < self.tenants.len(), "unknown tenant {tenant:?}");
+        self.leases.push(LeaseSlot {
+            tenant: t,
+            live: true,
+            target: 0,
+            committed: 0,
+            own: 0,
+            enforced: 0,
+            land_at: f64::INFINITY,
+            revoked: 0,
+        });
+        let i = self.leases.len() - 1;
+        let got = self.grow(i, want, now);
+        self.leases[i].target = got;
+        self.note_peak(t);
+        self.update_idle(now);
+        self.lease_view(i)
+    }
+
+    fn renew(&mut self, lease: LeaseId, want: Cores, now: Ms) -> CoreLease {
+        self.land(now);
+        let i = lease.0 as usize;
+        assert!(
+            i < self.leases.len() && self.leases[i].live,
+            "renew of dead lease {lease:?}"
+        );
+        // 1. Enforce pending clawback as a forced in-place shrink.
+        {
+            let l = &mut self.leases[i];
+            let forced = l.revoked.min(l.borrowed().saturating_sub(l.enforced));
+            if forced > 0 {
+                l.enforced += forced;
+                l.revoked -= forced;
+                let cap = l.committed - l.enforced;
+                if l.target > cap {
+                    l.target = cap;
+                }
+                l.land_at = l.land_at.min(now + self.cfg.resize_ms);
+            }
+            // Any remaining demand is against cores the lease no longer
+            // has (already shrunk); drop it.
+            l.revoked = 0;
+        }
+        // 2. Negotiate around the post-enforcement target.
+        let target = self.leases[i].target;
+        if want < target {
+            // Shrink: freed cores return after the actuation window.
+            let l = &mut self.leases[i];
+            l.target = want;
+            l.land_at = l.land_at.min(now + self.cfg.resize_ms);
+        } else if want > target {
+            // First reclaim any cancelable pending shrink of our own
+            // (regrowing cores we still hold reserved is free) …
+            {
+                let l = &mut self.leases[i];
+                let cancelable = (l.committed - l.enforced).saturating_sub(l.target);
+                let regrow = cancelable.min(want - l.target);
+                l.target += regrow;
+            }
+            // … then grow with fresh cores.
+            let need = want - self.leases[i].target;
+            if need > 0 {
+                let got = self.grow(i, need, now);
+                self.leases[i].target += got;
+            }
+            // Unmet demand while our own floor is lent out: claw it back
+            // for next tick.
+            let granted = self.leases[i].target;
+            if granted < want {
+                let p = self.tenants[self.leases[i].tenant].partition;
+                if self.lent(p) > 0 {
+                    let _ = self.issue_revocations(p, want - granted, Some(i));
+                }
+            }
+        }
+        if self.leases[i].committed == self.leases[i].target {
+            self.leases[i].land_at = f64::INFINITY;
+            self.leases[i].enforced = 0;
+        }
+        let t = self.leases[i].tenant;
+        self.note_peak(t);
+        self.update_idle(now);
+        self.lease_view(i)
+    }
+
+    fn release(&mut self, lease: LeaseId, now: Ms) {
+        self.land(now);
+        let i = lease.0 as usize;
+        if i >= self.leases.len() || !self.leases[i].live {
+            return;
+        }
+        let borrowed = self.leases[i].borrowed();
+        let _ = self.repay(i, borrowed);
+        let l = &mut self.leases[i];
+        l.live = false;
+        l.target = 0;
+        l.committed = 0;
+        l.own = 0;
+        l.enforced = 0;
+        l.revoked = 0;
+        l.land_at = f64::INFINITY;
+        self.update_idle(now);
+    }
+
+    fn reclaim(&mut self, tenant: TenantId, need: Cores, now: Ms) -> Vec<Revocation> {
+        self.land(now);
+        let t = tenant.0 as usize;
+        assert!(t < self.tenants.len(), "unknown tenant {tenant:?}");
+        if !self.tenants[t].live {
+            // A deregistered tenant has no floor left to reclaim.
+            return Vec::new();
+        }
+        let p = self.tenants[t].partition;
+        let out = self.issue_revocations(p, need, None);
+        self.update_idle(now);
+        out
+    }
+
+    /// One tenant's usage row (the allocation-free stats read).
+    fn tenant_usage(&self, t: usize) -> Option<TenantUsage> {
+        if t >= self.tenants.len() || !self.tenants[t].live {
+            return None;
+        }
+        let p = self.tenants[t].partition;
+        let (granted, stolen) = self
+            .leases
+            .iter()
+            .filter(|l| l.live && l.tenant == t)
+            .fold((0u32, 0u32), |(g, s), l| (g + l.committed, s + l.borrowed()));
+        let sole =
+            self.tenants.iter().filter(|x| x.live && x.partition == p).count() == 1;
+        Some(TenantUsage {
+            tenant: TenantId(t as u32),
+            partition: PartitionId(p as u32),
+            granted,
+            stolen,
+            lent: if sole { self.lent(p) } else { 0 },
+            peak_stolen: self.tenants[t].peak_stolen,
+        })
+    }
+
+    /// The per-tick planning ceiling (the allocation-free hot-path read):
+    /// current holds + own free floor + other partitions' lendable
+    /// surplus — the same number [`ArbiterSnapshot::plannable`] derives
+    /// from a full snapshot.
+    fn plannable(&self, tenant: TenantId, now: Ms) -> Cores {
+        let t = tenant.0 as usize;
+        if t >= self.tenants.len() || !self.tenants[t].live {
+            return 0;
+        }
+        let p = self.tenants[t].partition;
+        let granted: Cores = self
+            .leases
+            .iter()
+            .filter(|l| l.live && l.tenant == t)
+            .map(|l| l.committed)
+            .sum();
+        let mut cap = granted.saturating_add(self.free(p));
+        for q in 0..self.partitions.len() {
+            if q != p {
+                cap = cap.saturating_add(self.lendable(q, now));
+            }
+        }
+        cap
+    }
+
+    fn snapshot(&self, now: Ms) -> ArbiterSnapshot {
+        let partitions: Vec<PartitionUsage> = (0..self.partitions.len())
+            .map(|p| PartitionUsage {
+                id: PartitionId(p as u32),
+                budget: self.effective_budget(p),
+                used: self.used(p),
+                lent: self.lent(p),
+                free: self.free(p),
+                lendable: self.lendable(p, now),
+            })
+            .collect();
+        let tenants: Vec<TenantUsage> = (0..self.tenants.len())
+            .filter_map(|t| self.tenant_usage(t))
+            .collect();
+        ArbiterSnapshot {
+            budget: partitions.iter().map(|p| p.budget).sum(),
+            granted: self.leases.iter().filter(|l| l.live).map(|l| l.committed).sum(),
+            partitions,
+            tenants,
+        }
+    }
+
+    fn note_peak(&mut self, tenant: usize) {
+        let stolen: Cores = self
+            .leases
+            .iter()
+            .filter(|l| l.live && l.tenant == tenant)
+            .map(|l| l.borrowed())
+            .sum();
+        let slot = &mut self.tenants[tenant];
+        if stolen > slot.peak_stolen {
+            slot.peak_stolen = stolen;
+        }
+    }
+
+    fn lease_view(&self, i: usize) -> CoreLease {
+        let l = &self.leases[i];
+        CoreLease {
+            id: LeaseId(i as u64),
+            tenant: TenantId(l.tenant as u32),
+            granted: l.target,
+            reserved: l.committed,
+            stolen: l.borrowed(),
+        }
+    }
+}
+
+// ------------------------------------------------------ the two arbiters --
+
+/// Lending-disabled arbiter: each partition is a hard budget its own
+/// tenants pool first-come — bit-identical to the legacy engine-side
+/// headroom subtraction (the compat oracle; see the module docs).
+pub struct StaticPartition {
+    ledger: Ledger,
+}
+
+impl StaticPartition {
+    pub fn new() -> StaticPartition {
+        StaticPartition { ledger: Ledger::new(false, StealingCfg::default()) }
+    }
+
+    /// One pool of `budget` cores — the layout [`crate::engine::SimEngine`]
+    /// uses for its co-registered models.
+    pub fn single_pool(budget: Cores) -> StaticPartition {
+        let mut a = StaticPartition::new();
+        let _ = a.ledger.add_partition(budget);
+        a
+    }
+}
+
+impl Default for StaticPartition {
+    fn default() -> Self {
+        StaticPartition::new()
+    }
+}
+
+/// Cross-partition lending arbiter (see the module docs).
+pub struct StealingArbiter {
+    ledger: Ledger,
+}
+
+impl StealingArbiter {
+    pub fn new(cfg: StealingCfg) -> StealingArbiter {
+        StealingArbiter { ledger: Ledger::new(true, cfg) }
+    }
+}
+
+impl Default for StealingArbiter {
+    fn default() -> Self {
+        StealingArbiter::new(StealingCfg::default())
+    }
+}
+
+macro_rules! impl_arbiter {
+    ($ty:ty, $name:literal) => {
+        impl CoreArbiter for $ty {
+            fn name(&self) -> &'static str {
+                $name
+            }
+            fn add_partition(&mut self, budget: Cores) -> PartitionId {
+                self.ledger.add_partition(budget)
+            }
+            fn register_tenant(&mut self, partition: PartitionId) -> TenantId {
+                self.ledger.register_tenant(partition)
+            }
+            fn retire_partition(&mut self, partition: PartitionId, now: Ms) {
+                self.ledger.retire_partition(partition, now)
+            }
+            fn request_lease(&mut self, tenant: TenantId, want: Cores, now: Ms) -> CoreLease {
+                self.ledger.request_lease(tenant, want, now)
+            }
+            fn renew(&mut self, lease: LeaseId, want: Cores, now: Ms) -> CoreLease {
+                self.ledger.renew(lease, want, now)
+            }
+            fn release(&mut self, lease: LeaseId, now: Ms) {
+                self.ledger.release(lease, now)
+            }
+            fn reclaim(&mut self, tenant: TenantId, need: Cores, now: Ms) -> Vec<Revocation> {
+                self.ledger.reclaim(tenant, need, now)
+            }
+            fn snapshot(&self, now: Ms) -> ArbiterSnapshot {
+                self.ledger.snapshot(now)
+            }
+            fn plannable(&self, tenant: TenantId, now: Ms) -> Cores {
+                self.ledger.plannable(tenant, now)
+            }
+            fn usage(&self, tenant: TenantId) -> Option<TenantUsage> {
+                self.ledger.tenant_usage(tenant.0 as usize)
+            }
+        }
+    };
+}
+
+impl_arbiter!(StaticPartition, "static");
+impl_arbiter!(StealingArbiter, "stealing");
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Two-partition stealing arbiter, floors 8/8, one tenant each.
+    fn two_floor_stealing() -> (StealingArbiter, TenantId, TenantId) {
+        let mut a = StealingArbiter::new(StealingCfg::default());
+        let pa = a.add_partition(8);
+        let pb = a.add_partition(8);
+        let ta = a.register_tenant(pa);
+        let tb = a.register_tenant(pb);
+        (a, ta, tb)
+    }
+
+    #[test]
+    fn static_pool_grants_headroom_and_caps_at_budget() {
+        let mut a = StaticPartition::single_pool(8);
+        let p = PartitionId(0);
+        let t1 = a.register_tenant(p);
+        let t2 = a.register_tenant(p);
+        let l1 = a.request_lease(t1, 6, 0.0);
+        assert_eq!(l1.granted, 6);
+        assert_eq!(l1.class(), LeaseClass::Guaranteed);
+        // First-come pool semantics: t2 gets the remaining headroom only.
+        let l2 = a.request_lease(t2, 6, 0.0);
+        assert_eq!(l2.granted, 2);
+        let snap = a.snapshot(0.0);
+        assert_eq!(snap.granted, 8);
+        assert_eq!(snap.budget, 8);
+        // A resize regrant sees its own holding as headroom.
+        let r = a.renew(l1.id, 8, 1_000.0);
+        assert_eq!(r.granted, 6, "no free cores: clamped to current holding");
+        // Shrink frees after the actuation window, not instantly.
+        let r = a.renew(l1.id, 2, 2_000.0);
+        assert_eq!(r.granted, 2);
+        assert_eq!(r.reserved, 6, "old reservation holds through the window");
+        // Within the window the freed cores are not grantable yet.
+        let r2 = a.renew(l2.id, 6, 2_000.0);
+        assert_eq!(r2.granted, 2);
+        // Past the window they are.
+        let r2 = a.renew(l2.id, 6, 3_000.0);
+        assert_eq!(r2.granted, 6);
+    }
+
+    #[test]
+    fn static_never_lends_across_partitions() {
+        let mut a = StaticPartition::new();
+        let pa = a.add_partition(8);
+        let pb = a.add_partition(8);
+        let ta = a.register_tenant(pa);
+        let _tb = a.register_tenant(pb);
+        let l = a.request_lease(ta, 16, 10_000.0);
+        assert_eq!(l.granted, 8, "hard floor: no cross-partition grant");
+        assert_eq!(l.stolen, 0);
+        assert_eq!(a.snapshot(10_000.0).total_stolen(), 0);
+    }
+
+    #[test]
+    fn stealing_lends_idle_surplus_after_hysteresis() {
+        let (mut a, ta, tb) = two_floor_stealing();
+        // B holds 2 of its 8; 6 idle.
+        let _lb = a.request_lease(tb, 2, 0.0);
+        // Immediately: B's surplus is too fresh to lend.
+        let la = a.request_lease(ta, 14, 100.0);
+        assert_eq!(la.granted, 8, "hysteresis blocks instant lending");
+        // Past the hysteresis the surplus lends.
+        let la = a.renew(la.id, 14, 2_500.0);
+        assert_eq!(la.granted, 14);
+        assert_eq!(la.stolen, 6);
+        assert_eq!(la.class(), LeaseClass::Surplus);
+        let snap = a.snapshot(2_500.0);
+        assert_eq!(snap.granted, 16);
+        assert!(snap.granted <= snap.budget);
+        assert_eq!(snap.tenant(ta).unwrap().stolen, 6);
+        assert_eq!(snap.tenant(tb).unwrap().lent, 6);
+        assert_eq!(snap.tenant(ta).unwrap().peak_stolen, 6);
+    }
+
+    #[test]
+    fn clawback_returns_lent_cores_by_the_next_tick() {
+        let (mut a, ta, tb) = two_floor_stealing();
+        let lb = a.request_lease(tb, 2, 0.0);
+        let la = a.request_lease(ta, 14, 0.0);
+        let la = a.renew(la.id, 14, 3_000.0);
+        assert_eq!(la.stolen, 6);
+        // B's demand comes back: its renew can't be met from its own floor
+        // (6 of 8 lent out) — revocations are issued automatically.
+        let lb = a.renew(lb.id, 8, 4_000.0);
+        assert_eq!(lb.granted, 2, "cores still out this tick");
+        // Next tick: A's renewal is clamped (forced in-place shrink)...
+        let la = a.renew(la.id, 14, 5_000.0);
+        assert_eq!(la.granted, 8, "clawback enforced: back to own floor");
+        assert_eq!(la.reserved, 14, "shrink actuation window still open");
+        // ...and once the resize window lands, B has its floor back.
+        let lb = a.renew(lb.id, 8, 6_000.0);
+        assert_eq!(lb.granted, 8);
+        assert_eq!(a.snapshot(6_000.0).total_stolen(), 0);
+    }
+
+    #[test]
+    fn explicit_reclaim_issues_revocations() {
+        let (mut a, ta, tb) = two_floor_stealing();
+        let _lb = a.request_lease(tb, 1, 0.0);
+        let la = a.request_lease(ta, 12, 3_000.0);
+        assert_eq!(la.stolen, 4);
+        let revs = a.reclaim(tb, 4, 3_500.0);
+        assert_eq!(revs.len(), 1);
+        assert_eq!(revs[0].cores, 4);
+        assert_eq!(revs[0].borrower, ta);
+        assert_eq!(revs[0].lender, PartitionId(1));
+        let la = a.renew(la.id, 12, 4_000.0);
+        assert_eq!(la.granted, 8);
+    }
+
+    #[test]
+    fn release_frees_instantly_and_repays_loans() {
+        let (mut a, ta, tb) = two_floor_stealing();
+        let _lb = a.request_lease(tb, 1, 0.0);
+        let la = a.request_lease(ta, 12, 3_000.0);
+        assert_eq!(la.stolen, 4);
+        a.release(la.id, 3_100.0);
+        let snap = a.snapshot(3_100.0);
+        assert_eq!(snap.granted, 1);
+        assert_eq!(snap.total_stolen(), 0);
+        // The returned surplus is fresh again: hysteresis re-arms.
+        let lb2 = a.request_lease(tb, 8, 3_200.0);
+        assert_eq!(lb2.granted, 7, "own floor minus the standing 1-core lease");
+    }
+
+    #[test]
+    fn retiring_partition_revokes_its_loans_and_leaves_the_pool() {
+        let (mut a, ta, tb) = two_floor_stealing();
+        let lb = a.request_lease(tb, 1, 0.0);
+        let la = a.request_lease(ta, 12, 3_000.0);
+        assert_eq!(la.stolen, 4);
+        // B's replica retires: its own lease released, partition retired.
+        a.release(lb.id, 4_000.0);
+        a.retire_partition(PartitionId(1), 4_000.0);
+        let snap = a.snapshot(4_000.0);
+        // The retiring floor counts only its outstanding loan.
+        assert_eq!(snap.budget, 8 + 4);
+        assert!(snap.granted <= snap.budget);
+        // The borrower is clamped at its next renewal...
+        let la = a.renew(la.id, 12, 5_000.0);
+        assert_eq!(la.granted, 8);
+        // ...and after the window the retired floor is gone entirely.
+        let snap = a.snapshot(6_000.0);
+        let _ = a.renew(la.id, 8, 6_000.0);
+        let snap2 = a.snapshot(6_000.0);
+        assert!(snap.budget >= snap2.budget);
+        assert_eq!(snap2.budget, 8);
+        assert_eq!(snap2.granted, 8);
+    }
+
+    #[test]
+    fn freshly_freed_cores_re_age_before_lending() {
+        let (mut a, ta, tb) = two_floor_stealing();
+        // B holds 7 of its 8 for a long time, then shrinks to 1: the
+        // freed cores must age through the full hysteresis before they
+        // lend — a release this instant never lends this instant.
+        let lb = a.request_lease(tb, 7, 0.0);
+        let _ = a.renew(lb.id, 1, 5_000.0);
+        let la = a.request_lease(ta, 14, 6_000.0);
+        assert_eq!(la.granted, 8, "freshly freed cores lent without aging");
+        let la = a.renew(la.id, 14, 8_500.0);
+        assert_eq!(la.granted, 14, "aged surplus must lend");
+    }
+
+    #[test]
+    fn plannable_reports_floor_plus_lendable() {
+        let (mut a, ta, tb) = two_floor_stealing();
+        let _lb = a.request_lease(tb, 2, 0.0);
+        let _la = a.request_lease(ta, 4, 0.0);
+        // Before hysteresis: own floor only.
+        assert_eq!(a.snapshot(100.0).plannable(ta), 8);
+        // After: plus B's 6 idle cores.
+        assert_eq!(a.snapshot(2_500.0).plannable(ta), 14);
+        // The allocation-free trait read agrees with the snapshot math.
+        assert_eq!(a.plannable(ta, 100.0), 8);
+        assert_eq!(a.plannable(ta, 2_500.0), 14);
+        assert_eq!(a.usage(ta).unwrap().granted, 4);
+        // The static flavour never counts foreign surplus.
+        let mut s = StaticPartition::new();
+        let pa = s.add_partition(8);
+        let _pb = s.add_partition(8);
+        let t = s.register_tenant(pa);
+        let _l = s.request_lease(t, 4, 0.0);
+        assert_eq!(s.snapshot(10_000.0).plannable(t), 8);
+    }
+
+    #[test]
+    fn grow_during_pending_shrink_cancels_the_shrink_first() {
+        let mut a = StaticPartition::single_pool(8);
+        let t = a.register_tenant(PartitionId(0));
+        let l = a.request_lease(t, 8, 0.0);
+        let v = a.renew(l.id, 2, 1_000.0);
+        assert_eq!((v.granted, v.reserved), (2, 8));
+        // Regrow before the window lands: free (still reserved).
+        let v = a.renew(l.id, 6, 1_050.0);
+        assert_eq!((v.granted, v.reserved), (6, 8));
+        // Land: reservation settles at the final target.
+        let v = a.renew(l.id, 6, 2_000.0);
+        assert_eq!((v.granted, v.reserved), (6, 6));
+    }
+}

@@ -19,6 +19,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
+use crate::arbiter::{CoreArbiter, SharedArbiter, StaticPartition, TenantId};
 use crate::monitoring::MetricRegistry;
 use crate::perfmodel::{LatencyModel, OnlineCalibrator};
 use crate::solver::{IncrementalSolver, IpSolver, SolverInput, SolverLimits};
@@ -190,6 +191,11 @@ struct Shared {
     completed: AtomicU64,
     dropped: AtomicU64,
     violated: AtomicU64,
+    // Lease accounting published by the scaler loop: the arbiter grant
+    // behind the current `cores` decision, and the cross-tenant flows.
+    cores_granted: AtomicU32,
+    cores_lent: AtomicU32,
+    cores_stolen: AtomicU32,
 }
 
 /// Point-in-time request accounting + decision snapshot, served by
@@ -208,6 +214,12 @@ pub struct CoordinatorStats {
     pub cores: Cores,
     pub batch: BatchSize,
     pub model_refits: u64,
+    /// The arbiter lease behind the `cores` decision.
+    pub cores_granted: Cores,
+    /// Floor cores this coordinator's tenant has lent out.
+    pub cores_lent: Cores,
+    /// Cores held beyond the floor (borrowed surplus).
+    pub cores_stolen: Cores,
 }
 
 impl CoordinatorStats {
@@ -248,7 +260,26 @@ pub struct Coordinator {
 }
 
 impl Coordinator {
+    /// Start with a private single-tenant [`StaticPartition`] the size of
+    /// the solver's `c_max` — the standalone configuration, in which the
+    /// arbiter never clamps a decision.
     pub fn start(cfg: CoordinatorCfg, executor: Arc<dyn BatchExecutor>) -> Coordinator {
+        let mut arb = StaticPartition::new();
+        let p = arb.add_partition(cfg.limits.c_max);
+        let tenant = arb.register_tenant(p);
+        Self::start_with_arbiter(cfg, executor, crate::arbiter::shared(arb), tenant)
+    }
+
+    /// Start against an external (possibly shared) arbiter: the scaler
+    /// loop holds one lease for this pipeline, renews it to each solver
+    /// decision, and publishes the *grant* as the cores gauge — live core
+    /// accounting flows through the same surface the simulator uses.
+    pub fn start_with_arbiter(
+        cfg: CoordinatorCfg,
+        executor: Arc<dyn BatchExecutor>,
+        arbiter: SharedArbiter,
+        tenant: TenantId,
+    ) -> Coordinator {
         let image_len = executor.image_len();
         let shared = Arc::new(Shared {
             queue: Mutex::new(BinaryHeap::new()),
@@ -264,6 +295,9 @@ impl Coordinator {
             completed: AtomicU64::new(0),
             dropped: AtomicU64::new(0),
             violated: AtomicU64::new(0),
+            cores_granted: AtomicU32::new(1),
+            cores_lent: AtomicU32::new(0),
+            cores_stolen: AtomicU32::new(0),
         });
         let metrics = Arc::new(MetricRegistry::new());
 
@@ -282,7 +316,9 @@ impl Coordinator {
             let shared = Arc::clone(&shared);
             let metrics = Arc::clone(&metrics);
             let cfg = cfg.clone();
-            threads.push(std::thread::spawn(move || scaler_loop(shared, metrics, cfg)));
+            threads.push(std::thread::spawn(move || {
+                scaler_loop(shared, metrics, cfg, arbiter, tenant)
+            }));
         }
         Coordinator { cfg, shared, metrics, threads: Mutex::new(threads), image_len }
     }
@@ -339,6 +375,9 @@ impl Coordinator {
             cores: self.shared.cores.load(Ordering::Relaxed),
             batch: self.shared.batch.load(Ordering::Relaxed),
             model_refits: self.model_refits(),
+            cores_granted: self.shared.cores_granted.load(Ordering::Relaxed),
+            cores_lent: self.shared.cores_lent.load(Ordering::Relaxed),
+            cores_stolen: self.shared.cores_stolen.load(Ordering::Relaxed),
         }
     }
 
@@ -495,9 +534,34 @@ fn processor_loop(
     }
 }
 
-fn scaler_loop(shared: Arc<Shared>, metrics: Arc<MetricRegistry>, cfg: CoordinatorCfg) {
+/// Process-wide epoch for arbiter timestamps. Coordinator scaler threads
+/// spawn at different instants but may share one arbiter ledger, whose
+/// time must be non-decreasing across callers — so every thread measures
+/// from the same epoch rather than its own start.
+fn arbiter_now_ms() -> Ms {
+    use std::sync::OnceLock;
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    EPOCH.get_or_init(Instant::now).elapsed().as_secs_f64() * 1_000.0
+}
+
+fn scaler_loop(
+    shared: Arc<Shared>,
+    metrics: Arc<MetricRegistry>,
+    cfg: CoordinatorCfg,
+    arbiter: SharedArbiter,
+    tenant: TenantId,
+) {
     let solver = IncrementalSolver;
     let interval = Duration::from_secs_f64(cfg.adaptation_interval_ms / 1_000.0);
+    // The pipeline's core lease; renewed to every solver decision.
+    // `now` is always sampled *inside* the ledger lock: the lock
+    // serializes callers, and Instant is monotone, so the shared ledger
+    // sees non-decreasing time even across racing coordinator threads.
+    let lease = {
+        let mut arb = arbiter.lock().unwrap();
+        let now_ms = arbiter_now_ms();
+        arb.request_lease(tenant, 1, now_ms)
+    };
     while shared.running.load(Ordering::SeqCst) {
         // Sleep the adaptation interval in small chunks so shutdown stays
         // responsive.
@@ -536,15 +600,44 @@ fn scaler_loop(shared: Arc<Shared>, metrics: Arc<MetricRegistry>, cfg: Coordinat
         // Plan with the online-calibrated model (falls back to the static
         // offline profile when calibration is disabled).
         let model = *shared.calibrator.lock().unwrap().model();
-        let (cores, batch) = match solver.solve(&model, &input, cfg.limits) {
+        let (want, batch) = match solver.solve(&model, &input, cfg.limits) {
             Some(sol) => (sol.cores, sol.batch),
             None => (cfg.limits.c_max, 1),
         };
+        // The decision is actuated as a lease renewal: what the arbiter
+        // grants is what the pipeline runs at. With the standalone
+        // single-tenant arbiter the grant always equals the want; a
+        // shared (stealing) arbiter may clamp it or lend surplus.
+        let (cores, lent, stolen) = {
+            let mut arb = arbiter.lock().unwrap();
+            let now_ms = arbiter_now_ms();
+            let grant = arb.renew(lease.id, want, now_ms);
+            let usage = arb.usage(tenant);
+            (
+                grant.granted.max(1),
+                usage.map_or(0, |u| u.lent),
+                usage.map_or(0, |u| u.stolen),
+            )
+        };
         shared.cores.store(cores, Ordering::Relaxed);
         shared.batch.store(batch, Ordering::Relaxed);
+        shared.cores_granted.store(cores, Ordering::Relaxed);
+        shared.cores_lent.store(lent, Ordering::Relaxed);
+        shared.cores_stolen.store(stolen, Ordering::Relaxed);
         metrics.gauge_set("sponge_cores", "allocated cores (decision)", cores as f64);
         metrics.gauge_set("sponge_batch", "batch size (decision)", batch as f64);
         metrics.gauge_set("sponge_lambda_rps", "estimated arrival rate", lambda);
+        metrics.gauge_set(
+            "sponge_cores_stolen",
+            "cores held beyond the guaranteed floor",
+            stolen as f64,
+        );
+    }
+    // Pipeline is stopping: hand the cores back.
+    {
+        let mut arb = arbiter.lock().unwrap();
+        let now_ms = arbiter_now_ms();
+        arb.release(lease.id, now_ms);
     }
 }
 

@@ -14,6 +14,7 @@ use std::collections::VecDeque;
 use std::sync::{mpsc, Arc};
 use std::time::Duration;
 
+use crate::arbiter::{CoreArbiter, StaticPartition};
 use crate::coordinator::{BatchExecutor, Coordinator, CoordinatorCfg, LiveRequest, LiveResponse, MockExecutor};
 use crate::Ms;
 
@@ -97,17 +98,32 @@ impl LiveEngine {
         if registry.is_empty() {
             return Err(EngineError::Rejected("empty model registry".into()));
         }
-        let mut models = Vec::new();
+        // One arbiter for the whole engine: each replica pipeline is a
+        // tenant with a `c_max`-sized guaranteed floor, so live core
+        // accounting (granted/lent/stolen on `/v1` stats) flows through
+        // the same allocation surface the simulator uses.
+        let mut arb = StaticPartition::new();
+        let mut tenant_plan = Vec::new();
         for spec in registry.iter() {
+            let mut tenants = Vec::new();
+            for _ in 0..spec.replicas.max(1) {
+                let p = arb.add_partition(spec.limits.c_max);
+                tenants.push(arb.register_tenant(p));
+            }
+            tenant_plan.push(tenants);
+        }
+        let arbiter = crate::arbiter::shared(arb);
+        let mut models = Vec::new();
+        for (spec, tenants) in registry.iter().zip(tenant_plan) {
             // One coordinator (EDF queue + batcher + scaler threads +
             // executor) per replica; the executor factory runs once per
             // replica, since executors are single-pipeline resources.
             let mut replicas = Vec::new();
             let mut image_len = 0;
-            for _ in 0..spec.replicas.max(1) {
+            for tenant in tenants {
                 let executor = make_executor(spec)?;
                 image_len = executor.image_len();
-                replicas.push(Arc::new(Coordinator::start(
+                replicas.push(Arc::new(Coordinator::start_with_arbiter(
                     CoordinatorCfg {
                         limits: spec.limits,
                         adaptation_interval_ms: cfg.adaptation_interval_ms,
@@ -116,6 +132,8 @@ impl LiveEngine {
                         online_calibration: cfg.online_calibration,
                     },
                     executor,
+                    Arc::clone(&arbiter),
+                    tenant,
                 )));
             }
             models.push(LiveModel {
@@ -292,11 +310,17 @@ impl ServingEngine for LiveEngine {
         let mut queue_len = 0;
         let mut cores = 0;
         let mut batch = 0;
+        let mut cores_granted = 0;
+        let mut cores_lent = 0;
+        let mut cores_stolen = 0;
         for c in &m.replicas {
             let stats = c.stats();
             queue_len += stats.queue_len;
             cores += stats.cores;
             batch = batch.max(stats.batch);
+            cores_granted += stats.cores_granted;
+            cores_lent += stats.cores_lent;
+            cores_stolen += stats.cores_stolen;
         }
         Ok(ModelSnapshot {
             submitted: m.submitted,
@@ -306,6 +330,9 @@ impl ServingEngine for LiveEngine {
             queue_len,
             cores,
             batch,
+            cores_granted,
+            cores_lent,
+            cores_stolen,
         })
     }
 }

@@ -212,6 +212,15 @@ pub struct ModelSnapshot {
     pub cores: Cores,
     /// Current dynamic batch size decision.
     pub batch: BatchSize,
+    /// Cores granted to this model by the [`crate::arbiter::CoreArbiter`]
+    /// (lease reservations; equals `cores` up to in-flight actuation).
+    pub cores_granted: Cores,
+    /// Cores of this model's guaranteed floor currently lent to other
+    /// tenants through the arbiter (0 under [`crate::arbiter::StaticPartition`]).
+    pub cores_lent: Cores,
+    /// Cores this model holds beyond its floor, borrowed from other
+    /// tenants' surplus (0 under [`crate::arbiter::StaticPartition`]).
+    pub cores_stolen: Cores,
 }
 
 impl ModelSnapshot {

@@ -50,7 +50,9 @@
 
 use std::cmp::Reverse;
 use std::collections::BinaryHeap;
+use std::sync::Arc;
 
+use crate::arbiter::{ArbiterChoice, CoreArbiter, PartitionId, SharedArbiter, TenantId};
 use crate::monitoring::SloTracker;
 use crate::solver::{plan_replicas, SolverInput, SolverLimits};
 use crate::{Cores, Ms};
@@ -88,9 +90,15 @@ pub struct ReplicaSetCfg {
     /// take the EDF-aware dispatch path (emptiest queue first).
     pub urgent_intervals: f64,
     /// Per-replica engine config. `shared_cores` is each replica's *own*
-    /// node budget — replicas model the multi-node regime, they do not
-    /// share a node.
+    /// nominal budget: a hard node budget under the static arbiter, a
+    /// guaranteed floor under the stealing arbiter.
     pub engine: SimEngineCfg,
+    /// Resource control plane. [`ArbiterChoice::Static`] reproduces the
+    /// legacy one-node-per-replica budgets exactly;
+    /// [`ArbiterChoice::Stealing`] lets replicas (and, through
+    /// [`ReplicaSetEngine`], co-registered models) borrow each other's
+    /// idle floor cores, clawed back on pressure.
+    pub arbiter: ArbiterChoice,
 }
 
 impl Default for ReplicaSetCfg {
@@ -104,6 +112,7 @@ impl Default for ReplicaSetCfg {
             lambda_headroom: 1.15,
             urgent_intervals: 2.0,
             engine: SimEngineCfg::default(),
+            arbiter: ArbiterChoice::Static,
         }
     }
 }
@@ -118,6 +127,8 @@ struct RetiredTotals {
     core_ms: f64,
     scaler_calls: u64,
     scaler_ns: u64,
+    /// Largest borrowed-core holding any retired replica reached.
+    peak_stolen: Cores,
     tracker: SloTracker,
 }
 
@@ -127,6 +138,10 @@ struct Replica {
     /// Monotone ordinal (never reused) — seed derivation + tie-breaks.
     ord: u64,
     engine: SimEngine,
+    /// This replica's guaranteed-floor partition at the fleet arbiter.
+    partition: PartitionId,
+    /// Its allocation principal there.
+    tenant: TenantId,
     /// Draining replicas receive no new work and retire once empty.
     draining: bool,
     submitted: u64,
@@ -146,6 +161,9 @@ pub struct ReplicaStats {
     pub cores: Cores,
     /// Cores able to serve right now (0 while cold-starting).
     pub ready_cores: Cores,
+    /// Cores held beyond this replica's guaranteed floor (borrowed from
+    /// idle peers via the stealing arbiter; 0 under the static arbiter).
+    pub cores_stolen: Cores,
     pub queue_len: usize,
     pub in_flight: u64,
     pub submitted: u64,
@@ -211,6 +229,9 @@ pub struct ReplicaSet {
     /// refilled in place, so steady-state reconciliation allocates
     /// nothing once the buffer has grown to the working set.
     deadline_scratch: Vec<Ms>,
+    /// The fleet's resource control plane (shared across models when this
+    /// set lives inside a [`ReplicaSetEngine`]).
+    arbiter: SharedArbiter,
 }
 
 impl ReplicaSet {
@@ -219,6 +240,18 @@ impl ReplicaSet {
     /// as in the paper; replicas added *later* by the reconciler pay the
     /// cold start.
     pub fn new(spec: &ModelSpec, cfg: ReplicaSetCfg) -> Result<ReplicaSet, EngineError> {
+        let arbiter = cfg.arbiter.build();
+        Self::with_arbiter(spec, cfg, arbiter)
+    }
+
+    /// Build against a shared fleet arbiter ([`ReplicaSetEngine`] passes
+    /// one ledger to every model's set, so idle cores cross model
+    /// boundaries under the stealing arbiter).
+    pub fn with_arbiter(
+        spec: &ModelSpec,
+        cfg: ReplicaSetCfg,
+        arbiter: SharedArbiter,
+    ) -> Result<ReplicaSet, EngineError> {
         if cfg.min_replicas < 1 || cfg.max_replicas < cfg.min_replicas {
             return Err(EngineError::Rejected(format!(
                 "bad replica bounds: min {} max {}",
@@ -247,6 +280,7 @@ impl ReplicaSet {
             scale_outs: 0,
             drains: 0,
             deadline_scratch: Vec::new(),
+            arbiter,
         };
         for _ in 0..initial {
             set.add_replica(true)?;
@@ -285,6 +319,7 @@ impl ReplicaSet {
                     ord: r.ord,
                     cores: snap.cores,
                     ready_cores: r.engine.ready_cores(name).unwrap_or(0),
+                    cores_stolen: snap.cores_stolen,
                     queue_len: snap.queue_len,
                     in_flight: snap.in_flight(),
                     submitted: r.submitted,
@@ -292,6 +327,18 @@ impl ReplicaSet {
                 }
             })
             .collect()
+    }
+
+    /// Largest borrowed-core holding any replica of this set has reached
+    /// (live or retired); 0 under the static arbiter.
+    pub fn peak_stolen(&self) -> Cores {
+        let live = self
+            .replicas
+            .iter()
+            .filter_map(|r| r.engine.peak_stolen(&self.spec.name))
+            .max()
+            .unwrap_or(0);
+        live.max(self.retired.peak_stolen)
     }
 
     /// Merged SLO tracker across live and retired replicas (exact counts
@@ -335,9 +382,26 @@ impl ReplicaSet {
             .sum()
     }
 
-    /// The vertical ceiling a single replica can actually reach.
+    /// The vertical ceiling a single replica can actually reach: its
+    /// guaranteed floor — plus, under the stealing arbiter, what the
+    /// best-positioned live replica's lease could actually grant (its
+    /// holds + own free floor + *other* partitions' lendable surplus; a
+    /// partition's own surplus is floor headroom, never a loan, so it is
+    /// not double-counted).
     fn c_eff(&self) -> Cores {
-        self.spec.limits.c_max.min(self.cfg.engine.shared_cores)
+        let mut reach = self.cfg.engine.shared_cores;
+        if self.cfg.arbiter == ArbiterChoice::Stealing {
+            let now = self.clock.now_ms();
+            let arb = self.arbiter.lock().unwrap();
+            let best = self
+                .replicas
+                .iter()
+                .map(|r| arb.plannable(r.tenant, now))
+                .max()
+                .unwrap_or(0);
+            reach = reach.max(best);
+        }
+        self.spec.limits.c_max.min(reach)
     }
 
     fn add_replica(&mut self, warm: bool) -> Result<(), EngineError> {
@@ -346,15 +410,48 @@ impl ReplicaSet {
         let mut reg = ModelRegistry::new();
         reg.register(self.spec.clone())
             .map_err(EngineError::Rejected)?;
+        let mut cluster = self.cfg.engine.cluster;
+        if self.cfg.arbiter == ArbiterChoice::Stealing {
+            // Under stealing a replica may grow past its own floor into
+            // borrowed cores; widen the modeled node so the substrate
+            // doesn't refuse what the lease granted (the sim's replicas
+            // stand in for co-located multi-tenant capacity here).
+            let fleet_cap = self
+                .cfg
+                .engine
+                .shared_cores
+                .saturating_mul(self.cfg.max_replicas);
+            cluster.node_cores = cluster.node_cores.max(fleet_cap);
+        }
         let cfg = SimEngineCfg {
             // Distinct deterministic noise stream per replica ordinal.
             seed: self.cfg.engine.seed ^ ord.wrapping_mul(0x9e37_79b9_7f4a_7c15),
             start_ms: self.clock.now_ms(),
             warm_start: warm,
+            cluster,
             ..self.cfg.engine
         };
-        let engine = SimEngine::new(&reg, cfg)?;
-        self.replicas.push(Replica { ord, engine, draining: false, submitted: 0 });
+        // Each replica is a guaranteed-floor partition (its node's worth
+        // of cores) with a single tenant at the fleet arbiter.
+        let (partition, tenant) = {
+            let mut arb = self.arbiter.lock().unwrap();
+            let p = arb.add_partition(self.cfg.engine.shared_cores);
+            (p, arb.register_tenant(p))
+        };
+        let engine = SimEngine::with_arbiter(
+            &reg,
+            cfg,
+            Arc::clone(&self.arbiter),
+            vec![tenant],
+        )?;
+        self.replicas.push(Replica {
+            ord,
+            engine,
+            partition,
+            tenant,
+            draining: false,
+            submitted: 0,
+        });
         Ok(())
     }
 
@@ -552,7 +649,7 @@ impl ReplicaSet {
                 i += 1;
                 continue;
             }
-            let r = self.replicas.remove(i);
+            let mut r = self.replicas.remove(i);
             let snap = r.snapshot(&name);
             self.retired.completed += snap.completed;
             self.retired.dropped += snap.dropped;
@@ -561,9 +658,22 @@ impl ReplicaSet {
             let (calls, ns) = r.engine.scaler_cost(&name).unwrap_or((0, 0));
             self.retired.scaler_calls += calls;
             self.retired.scaler_ns += ns;
+            let stolen_peak = r.engine.peak_stolen(&name).unwrap_or(0);
+            if stolen_peak > self.retired.peak_stolen {
+                self.retired.peak_stolen = stolen_peak;
+            }
             if let Some(t) = r.engine.tracker(&name) {
                 self.retired.tracker.merge(t);
             }
+            // Hand the node back to the fleet: release every lease the
+            // replica still holds, then retire its floor partition (any
+            // surplus it had lent out is clawed back from the borrowers
+            // at their next renewal).
+            r.engine.release_leases();
+            self.arbiter
+                .lock()
+                .unwrap()
+                .retire_partition(r.partition, self.clock.now_ms());
         }
     }
 
@@ -580,6 +690,9 @@ impl ReplicaSet {
             queue_len: self.pending.len(),
             cores: 0,
             batch: 0,
+            cores_granted: 0,
+            cores_lent: 0,
+            cores_stolen: 0,
         };
         for r in &self.replicas {
             let s = r.snapshot(&self.spec.name);
@@ -589,6 +702,9 @@ impl ReplicaSet {
             out.queue_len += s.queue_len;
             out.cores += s.cores;
             out.batch = out.batch.max(s.batch);
+            out.cores_granted += s.cores_granted;
+            out.cores_lent += s.cores_lent;
+            out.cores_stolen += s.cores_stolen;
         }
         out
     }
@@ -650,9 +766,12 @@ impl ReplicaSetEngine {
         if registry.is_empty() {
             return Err(EngineError::Rejected("empty model registry".into()));
         }
+        // One fleet-wide ledger: under the stealing arbiter, idle cores
+        // cross replica *and* model boundaries.
+        let arbiter = cfg.arbiter.build();
         let mut sets = Vec::new();
         for spec in registry.iter() {
-            sets.push(ReplicaSet::new(spec, cfg)?);
+            sets.push(ReplicaSet::with_arbiter(spec, cfg, Arc::clone(&arbiter))?);
         }
         Ok(ReplicaSetEngine { sets, clock: VirtualClock::new() })
     }
@@ -902,6 +1021,49 @@ mod tests {
         assert_eq!(set.replica_count(), 2);
         let (outs, _) = set.reconciler_actions();
         assert_eq!(outs, 0, "reused the warm replica, no cold scale-out");
+    }
+
+    #[test]
+    fn stealing_borrows_an_idle_models_floor_across_sets() {
+        // Two single-replica models behind one ReplicaSetEngine, 4-core
+        // floors each. One model is loaded far past its floor, the other
+        // idles: under the stealing arbiter the loaded replica grows into
+        // the idle floor; under the static arbiter it is hard-capped.
+        let run = |arbiter: ArbiterChoice| {
+            let mut reg = ModelRegistry::new();
+            reg.register(ModelSpec::named("yolov5s").unwrap()).unwrap(); // busy
+            reg.register(ModelSpec::named("resnet").unwrap()).unwrap(); // idle
+            let mut e = ReplicaSetEngine::new(
+                &reg,
+                ReplicaSetCfg {
+                    max_replicas: 1,
+                    arbiter,
+                    engine: SimEngineCfg { shared_cores: 4, ..Default::default() },
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+            for i in 0..1_500 {
+                e.submit("yolov5s", EngineRequest::new(800.0, 10.0).at(i as f64 * 4.0))
+                    .unwrap();
+            }
+            for _ in 0..6 {
+                e.tick();
+            }
+            let busy = e.snapshot("yolov5s").unwrap();
+            let idle = e.snapshot("resnet").unwrap();
+            let peak = e.set("yolov5s").unwrap().peak_stolen();
+            let _ = e.drain();
+            (busy, idle, peak)
+        };
+        let (busy, idle, peak) = run(ArbiterChoice::Static);
+        assert!(busy.cores <= 4, "static floor breached: {busy:?}");
+        assert_eq!((busy.cores_stolen, idle.cores_lent, peak), (0, 0, 0));
+        let (busy, idle, peak) = run(ArbiterChoice::Stealing);
+        assert!(busy.cores > 4, "never grew past its floor: {busy:?}");
+        assert!(busy.cores_stolen > 0, "{busy:?}");
+        assert!(idle.cores_lent > 0, "idle floor never lent: {idle:?}");
+        assert!(peak > 0);
     }
 
     #[test]

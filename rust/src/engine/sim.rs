@@ -14,7 +14,8 @@ use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashMap};
 use std::time::Instant;
 
-use crate::cluster::Cluster;
+use crate::arbiter::{CoreArbiter, LeaseId, SharedArbiter, StaticPartition, TenantId};
+use crate::cluster::{Cluster, InstanceState};
 use crate::monitoring::{Outcome, RateEstimator, SloTracker};
 use crate::queue::EdfQueue;
 use crate::scaler::{Action, Autoscaler, ScalerObs};
@@ -77,6 +78,10 @@ struct SimModel {
     tracker: SloTracker,
     rate: RateEstimator,
     cluster: Cluster,
+    /// This model's allocation principal at the [`crate::arbiter::CoreArbiter`].
+    tenant: TenantId,
+    /// Instance id → core lease (1:1; every allocated core is leased).
+    leases: HashMap<u32, LeaseId>,
     busy: HashMap<u32, bool>,
     batch: BatchSize,
     /// Model the virtual engine executes (switched by
@@ -136,15 +141,47 @@ pub struct SimEngine {
     next_tick_ms: Ms,
     sigma: f64,
     noise: Pcg32,
+    /// The allocation authority every launch/resize goes through.
+    arbiter: SharedArbiter,
 }
 
 impl SimEngine {
     /// Build from a registry: every model gets its own pre-warmed fleet
     /// (instances launched in the virtual past so they are Ready at t=0,
     /// as in the paper's experiments that start from a stable system).
+    ///
+    /// Allocation goes through a private single-pool
+    /// [`StaticPartition`] over `cfg.shared_cores` — all registered models
+    /// draw from one first-come pool, which is grant-for-grant identical
+    /// to the legacy engine-side headroom subtraction.
     pub fn new(registry: &ModelRegistry, cfg: SimEngineCfg) -> Result<SimEngine, EngineError> {
+        let mut arbiter = StaticPartition::new();
+        let pool = arbiter.add_partition(cfg.shared_cores);
+        let tenants: Vec<TenantId> =
+            registry.iter().map(|_| arbiter.register_tenant(pool)).collect();
+        Self::with_arbiter(registry, cfg, crate::arbiter::shared(arbiter), tenants)
+    }
+
+    /// Build against an external (possibly shared) arbiter: `tenants[i]`
+    /// is the allocation principal for the i-th registered model. This is
+    /// how replica fleets and multi-partition (stealing) topologies
+    /// arbitrate one ledger across engines; `cfg.shared_cores` is ignored
+    /// — the arbiter's partition budgets govern.
+    pub fn with_arbiter(
+        registry: &ModelRegistry,
+        cfg: SimEngineCfg,
+        arbiter: SharedArbiter,
+        tenants: Vec<TenantId>,
+    ) -> Result<SimEngine, EngineError> {
         if registry.is_empty() {
             return Err(EngineError::Rejected("empty model registry".into()));
+        }
+        if tenants.len() != registry.len() {
+            return Err(EngineError::Rejected(format!(
+                "{} tenants for {} registered models",
+                tenants.len(),
+                registry.len()
+            )));
         }
         let sigma = if cfg.latency_noise_cv > 0.0 {
             (cfg.latency_noise_cv.powi(2) + 1.0).ln().sqrt()
@@ -158,16 +195,26 @@ impl SimEngine {
             cfg.start_ms
         };
         let mut models = Vec::new();
-        let mut allocated_total: Cores = 0;
-        for spec in registry.iter() {
+        for (spec, &tenant) in registry.iter().zip(tenants.iter()) {
             let scaler = spec.build_scaler();
             let mut cluster = Cluster::new(cfg.cluster);
+            let mut leases = HashMap::new();
             for cores in scaler.initial_cores() {
-                // Shared budget: grant what fits, never below one core.
-                let headroom = cfg.shared_cores.saturating_sub(allocated_total);
-                let granted = cores.min(headroom);
-                if granted >= 1 && cluster.launch(granted, launch_at).is_ok() {
-                    allocated_total += granted;
+                // Every core comes from a lease; grants below one core
+                // (or substrate refusals) release the lease untouched.
+                let lease = arbiter
+                    .lock()
+                    .unwrap()
+                    .request_lease(tenant, cores, cfg.start_ms);
+                let mut launched = false;
+                if lease.granted >= 1 {
+                    if let Ok(id) = cluster.launch(lease.granted, launch_at) {
+                        leases.insert(id, lease.id);
+                        launched = true;
+                    }
+                }
+                if !launched {
+                    arbiter.lock().unwrap().release(lease.id, cfg.start_ms);
                 }
             }
             cluster.tick(cfg.start_ms);
@@ -180,6 +227,8 @@ impl SimEngine {
                 tracker: SloTracker::new(cfg.adaptation_interval_ms),
                 rate: RateEstimator::new(5_000.0),
                 cluster,
+                tenant,
+                leases,
                 busy: HashMap::new(),
                 batch: 1,
                 cl_max_window: 0.0,
@@ -201,7 +250,40 @@ impl SimEngine {
             next_id: 0,
             sigma,
             noise: Pcg32::seeded(cfg.seed),
+            arbiter,
         })
+    }
+
+    /// The arbiter this engine allocates through.
+    pub fn arbiter(&self) -> &SharedArbiter {
+        &self.arbiter
+    }
+
+    /// High-water mark of cores `model` held beyond its guaranteed floor
+    /// (borrowed surplus); 0 under a static arbiter.
+    pub fn peak_stolen(&self, model: &str) -> Option<Cores> {
+        let idx = self.model_idx(model)?;
+        let usage = self.arbiter.lock().unwrap().usage(self.models[idx].tenant);
+        usage.map(|u| u.peak_stolen)
+    }
+
+    /// Release every lease this engine holds (retiring a replica: the
+    /// cores return to the fleet pool instantly). The engine must not be
+    /// ticked afterwards.
+    pub fn release_leases(&mut self) {
+        let now = self.clock.now_ms();
+        let mut arb = self.arbiter.lock().unwrap();
+        for m in &mut self.models {
+            // Deterministic release order (the ledger's loan bookkeeping
+            // is order-sensitive; HashMap drain order is not).
+            let mut ids: Vec<u32> = m.leases.keys().copied().collect();
+            ids.sort_unstable();
+            for id in ids {
+                if let Some(lease) = m.leases.remove(&id) {
+                    arb.release(lease, now);
+                }
+            }
+        }
     }
 
     /// The per-model SLO tracker (timeline, latency stats) — richer than
@@ -271,15 +353,6 @@ impl SimEngine {
 
     fn total_resolved(&self) -> u64 {
         self.models.iter().map(|m| m.tracker.total()).sum()
-    }
-
-    fn allocated_except(&self, idx: usize) -> Cores {
-        self.models
-            .iter()
-            .enumerate()
-            .filter(|(i, _)| *i != idx)
-            .map(|(_, m)| m.cluster.allocated_cores())
-            .sum()
     }
 
     fn push_event(&mut self, t: Ms, kind: EventKind) {
@@ -372,45 +445,92 @@ impl SimEngine {
         }
     }
 
-    /// Apply one scaler action under the shared core budget: grants are
-    /// clamped to the headroom left by the *other* models' fleets, so
-    /// co-registered models genuinely contend (capacity misses surface as
-    /// no-ops the scaler retries next tick, matching K8s semantics).
+    /// Apply one scaler action through the arbiter: every launch/resize is
+    /// a lease negotiation, so grants are clamped to what the allocation
+    /// layer can actually deliver and co-registered tenants genuinely
+    /// contend (capacity misses surface as partial grants the scaler
+    /// retries next tick, matching K8s semantics).
     fn apply_action(&mut self, idx: usize, action: Action, now: Ms) {
-        let others = self.allocated_except(idx);
-        let budget = self.cfg.shared_cores;
-        let m = &mut self.models[idx];
         match action {
             Action::Resize { id, cores } => {
-                let current = m
-                    .cluster
-                    .get(id)
-                    .map(|i| i.cores().max(i.target_cores()))
-                    .unwrap_or(0);
-                let headroom = budget
-                    .saturating_sub(others + m.cluster.allocated_cores() - current);
-                let granted = cores.min(headroom);
-                if granted >= 1 {
-                    let _ = m.cluster.resize(id, granted, now);
+                let (lease, reserved) = {
+                    let m = &self.models[idx];
+                    let Some(&lease) = m.leases.get(&id) else { return };
+                    let Some(inst) = m.cluster.get(id) else { return };
+                    if matches!(inst.state(), InstanceState::Terminated)
+                        || !inst.is_ready(now)
+                    {
+                        // Legacy semantics: resizing a cold/terminated
+                        // instance is a no-op the scaler retries.
+                        return;
+                    }
+                    (lease, inst.cores().max(inst.target_cores()))
+                };
+                let granted = self.arbiter.lock().unwrap().renew(lease, cores, now).granted;
+                if granted >= 1 && self.models[idx].cluster.resize(id, granted, now).is_ok() {
+                    return;
                 }
+                // Substrate refusal (node narrower than the pool): put the
+                // ledger back at the instance's standing reservation.
+                let _ = self.arbiter.lock().unwrap().renew(lease, reserved, now);
             }
             Action::Launch { cores } => {
-                let headroom =
-                    budget.saturating_sub(others + m.cluster.allocated_cores());
-                let granted = cores.min(headroom);
-                if granted >= 1 {
-                    let _ = m.cluster.launch(granted, now);
+                let tenant = self.models[idx].tenant;
+                let lease = self.arbiter.lock().unwrap().request_lease(tenant, cores, now);
+                let mut launched = false;
+                if lease.granted >= 1 {
+                    if let Ok(id) = self.models[idx].cluster.launch(lease.granted, now) {
+                        self.models[idx].leases.insert(id, lease.id);
+                        launched = true;
+                    }
+                }
+                if !launched {
+                    self.arbiter.lock().unwrap().release(lease.id, now);
                 }
             }
             Action::Terminate { id } => {
+                if let Some(lease) = self.models[idx].leases.remove(&id) {
+                    self.arbiter.lock().unwrap().release(lease, now);
+                }
+                let m = &mut self.models[idx];
                 let _ = m.cluster.terminate(id, now);
                 m.busy.remove(&id);
             }
             Action::SetBatch { batch } => {
-                m.batch = batch.max(1);
+                self.models[idx].batch = batch.max(1);
             }
             Action::SwitchModel { model } => {
-                m.exec_model = model;
+                self.models[idx].exec_model = model;
+            }
+        }
+    }
+
+    /// Per-tick lease renewal for every ready instance: keeps the ledger
+    /// mirroring the substrate and *enforces clawbacks* — a lease clamped
+    /// below its reservation is actuated as an ordinary in-place shrink
+    /// (the paper's mechanism; no restart), returning borrowed cores to
+    /// their owner one resize window later. Under a static arbiter every
+    /// renewal is an identity and this is pure bookkeeping.
+    fn heartbeat(&mut self, idx: usize, now: Ms) {
+        let entries: Vec<(u32, Cores)> = self.models[idx]
+            .cluster
+            .instances()
+            .filter(|i| i.is_ready(now))
+            .map(|i| (i.id, i.cores().max(i.target_cores())))
+            .collect();
+        for (id, reserved) in entries {
+            let Some(&lease) = self.models[idx].leases.get(&id) else { continue };
+            let granted = self.arbiter.lock().unwrap().renew(lease, reserved, now).granted;
+            if granted == 0 {
+                // Degenerate clawback: the instance ran entirely on
+                // borrowed cores and every owner took them back.
+                self.models[idx].leases.remove(&id);
+                self.arbiter.lock().unwrap().release(lease, now);
+                let m = &mut self.models[idx];
+                let _ = m.cluster.terminate(id, now);
+                m.busy.remove(&id);
+            } else if granted < reserved {
+                let _ = self.models[idx].cluster.resize(id, granted, now);
             }
         }
     }
@@ -475,10 +595,25 @@ impl ServingEngine for SimEngine {
         let t_end = self.next_tick_ms;
         self.process_until(t_end);
         for idx in 0..self.models.len() {
-            let actions = {
+            {
                 let m = &mut self.models[idx];
                 m.cluster.tick(t_end);
                 drop_expired(t_end, &mut m.queue, &mut m.tracker);
+            }
+            // Renew leases / enforce clawbacks before planning, so the
+            // scaler observes post-revocation reality.
+            self.heartbeat(idx, t_end);
+            // The lease-grantable ceiling: the solver plans against what
+            // the allocation layer can actually deliver this tick
+            // (allocation-free read — the adaptation loop stays free of
+            // per-tick heap traffic).
+            let cores_cap = self
+                .arbiter
+                .lock()
+                .unwrap()
+                .plannable(self.models[idx].tenant, t_end);
+            let actions = {
+                let m = &mut self.models[idx];
                 let lambda = m.rate.rate_rps(t_end);
                 // Zero-copy queue snapshot: borrow the incrementally
                 // sorted deadline index — no collect, no per-tick sort.
@@ -494,6 +629,7 @@ impl ServingEngine for SimEngine {
                     deadlines_ms: m.queue.live_deadline_index(t_end),
                     cl_max_ms: m.cl_max_window,
                     slo_ms: m.spec.slo_ms,
+                    cores_cap,
                 };
                 let t_decide = Instant::now();
                 let actions = m.scaler.decide(&obs, &m.cluster, &m.exec_model);
@@ -557,6 +693,9 @@ impl ServingEngine for SimEngine {
     fn snapshot(&self, model: &str) -> Result<ModelSnapshot, EngineError> {
         let idx = self.model_idx(model).ok_or_else(|| self.unknown(model))?;
         let m = &self.models[idx];
+        // Allocation-free usage read — snapshots are taken per dispatch
+        // decision on the replica-set path, so this must stay cheap.
+        let usage = self.arbiter.lock().unwrap().usage(m.tenant);
         Ok(ModelSnapshot {
             submitted: m.submitted,
             completed: m.tracker.completed(),
@@ -565,6 +704,9 @@ impl ServingEngine for SimEngine {
             queue_len: m.queue.len(),
             cores: m.cluster.allocated_cores(),
             batch: m.batch,
+            cores_granted: usage.map_or(0, |u| u.granted),
+            cores_lent: usage.map_or(0, |u| u.lent),
+            cores_stolen: usage.map_or(0, |u| u.stolen),
         })
     }
 }
@@ -746,6 +888,61 @@ mod tests {
         let positive: Vec<f64> = budgets.into_iter().filter(|b| *b > 0.0).collect();
         assert_eq!(from_live, positive);
         assert!(e.live_deadlines("nope").is_none());
+    }
+
+    #[test]
+    fn lease_ledger_mirrors_cluster_allocation() {
+        // The arbiter's reservations and the cluster substrate must agree
+        // at every tick boundary — the property that makes the static
+        // arbiter a faithful stand-in for the legacy headroom math.
+        let mut e = two_model_engine(0.0);
+        load(&mut e, "resnet", 200, 20.0, 800.0);
+        load(&mut e, "yolov5s", 50, 100.0, 800.0);
+        for _ in 0..15 {
+            e.tick();
+            for name in ["resnet", "yolov5s"] {
+                let s = e.snapshot(name).unwrap();
+                assert_eq!(s.cores_granted, s.cores, "{name}: ledger diverged {s:?}");
+                assert_eq!(s.cores_stolen, 0, "static arbiter never steals");
+                assert_eq!(s.cores_lent, 0, "static arbiter never lends");
+            }
+        }
+        let report = e.drain();
+        assert!(report.settled(), "{report:?}");
+    }
+
+    #[test]
+    fn stealing_arbiter_lends_idle_model_cores() {
+        use crate::arbiter::{shared, CoreArbiter, StealingArbiter, StealingCfg};
+        let mut reg = ModelRegistry::new();
+        reg.register(ModelSpec::named("resnet").unwrap()).unwrap(); // busy
+        reg.register(ModelSpec::named("yolov5s").unwrap()).unwrap(); // idle
+        // Per-model floors of 8 cores each; the idle model's surplus is
+        // lendable after the hysteresis.
+        let mut arb = StealingArbiter::new(StealingCfg::default());
+        let pa = arb.add_partition(8);
+        let pb = arb.add_partition(8);
+        let tenants = vec![arb.register_tenant(pa), arb.register_tenant(pb)];
+        let mut e = SimEngine::with_arbiter(
+            &reg,
+            SimEngineCfg::default(),
+            shared(arb),
+            tenants,
+        )
+        .unwrap();
+        // Far more resnet demand than an 8-core floor can carry.
+        load(&mut e, "resnet", 2_000, 2.5, 600.0); // 400 rps for 5 s
+        for _ in 0..12 {
+            e.tick();
+        }
+        let busy = e.snapshot("resnet").unwrap();
+        assert!(busy.cores > 8, "never grew past its floor: {busy:?}");
+        assert!(busy.cores_stolen > 0, "{busy:?}");
+        assert!(e.peak_stolen("resnet").unwrap() > 0);
+        let idle = e.snapshot("yolov5s").unwrap();
+        assert!(idle.cores_lent > 0, "idle floor never lent: {idle:?}");
+        let report = e.drain();
+        assert!(report.settled(), "{report:?}");
     }
 
     #[test]

@@ -98,6 +98,7 @@ mod tests {
             solvers: vec![SolverChoice::Incremental],
             budgets: vec![48],
             replica_budgets: vec![1],
+            arbiters: vec![crate::arbiter::ArbiterChoice::Static],
             horizon_ms: 15_000.0,
             model: "yolov5s".into(),
             seed: 42,

@@ -16,6 +16,7 @@
 //!       "workload": "paper-20rps", "trace": "embedded-4g",
 //!       "engine": "sim", "policy": "sponge", "discipline": "edf",
 //!       "solver": "incremental", "shared_cores": 48, "replicas": 1,
+//!       "arbiter": "-",   // "-" where inert, else "static" | "stealing"
 //!       "metrics": { "submitted": ..., "violation_rate_pct": ..., ... },
 //!       "wall": { "run_ms": ..., "scaler_ns_total": ... }  // omitted in stable mode
 //!     }
@@ -72,6 +73,7 @@ impl MatrixReport {
                         Json::num(c.spec.knobs.shared_cores as f64),
                     ),
                     ("replicas", Json::num(c.spec.knobs.replicas as f64)),
+                    ("arbiter", Json::str(c.spec.arbiter_label())),
                     (
                         "metrics",
                         Json::obj(vec![
@@ -91,6 +93,7 @@ impl MatrixReport {
                             ("peak_cores", Json::num(m.peak_cores as f64)),
                             ("core_seconds", Json::num(round3(m.core_seconds))),
                             ("scaler_calls", Json::num(m.scaler_calls as f64)),
+                            ("peak_stolen", Json::num(m.peak_stolen as f64)),
                         ]),
                     ),
                 ];
@@ -138,13 +141,13 @@ impl MatrixReport {
             if self.quick { ", quick" } else { "" },
         ));
         out.push_str(
-            "| cell | submitted | viol % | p50 ms | p99 ms | mean cores | peak | scaler calls |\n",
+            "| cell | submitted | viol % | p50 ms | p99 ms | mean cores | peak | stolen | scaler calls |\n",
         );
-        out.push_str("|---|---:|---:|---:|---:|---:|---:|---:|\n");
+        out.push_str("|---|---:|---:|---:|---:|---:|---:|---:|---:|\n");
         for c in &self.cells {
             let m = &c.metrics;
             out.push_str(&format!(
-                "| {} | {} | {:.2} | {:.1} | {:.1} | {:.2} | {} | {} |\n",
+                "| {} | {} | {:.2} | {:.1} | {:.1} | {:.2} | {} | {} | {} |\n",
                 c.id,
                 m.submitted,
                 m.violation_rate_pct,
@@ -152,6 +155,7 @@ impl MatrixReport {
                 m.e2e_p99_ms,
                 m.mean_cores,
                 m.peak_cores,
+                m.peak_stolen,
                 m.scaler_calls,
             ));
         }

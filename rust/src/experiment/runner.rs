@@ -9,6 +9,7 @@
 
 use std::time::Instant;
 
+use crate::arbiter::CoreArbiter;
 use crate::engine::{
     drive_timeline, LiveEngine, LiveEngineCfg, ModelRegistry, ModelSpec,
     ReplicaSetCfg, ReplicaSetEngine, ServingEngine, SimEngine, SimEngineCfg,
@@ -38,6 +39,10 @@ pub struct CellMetrics {
     pub core_seconds: f64,
     /// Scaler `decide` invocations (solver invocations, for Sponge).
     pub scaler_calls: u64,
+    /// Largest borrowed-core holding any tenant of the cell reached (the
+    /// arbiter's cross-tenant flow; 0 under the static arbiter and in
+    /// single-tenant cells).
+    pub peak_stolen: Cores,
 }
 
 /// Wall-clock cost of running the cell — excluded from determinism
@@ -73,11 +78,17 @@ pub fn run_cell(spec: &CellSpec) -> Result<CellResult, String> {
         );
     }
     let started = Instant::now();
+    // The contention pair drives two models through one engine — its own
+    // runner path (the arbiter axis's scenario).
+    if matches!(spec.workload, WorkloadSource::Contention { .. }) {
+        return run_contention_cell(spec, started);
+    }
     let horizon_s = (spec.horizon_ms / 1_000.0).ceil() as usize;
     let net = NetworkModel::new(spec.trace.build(horizon_s));
     let mut requests: Vec<Request> = match &spec.workload {
         WorkloadSource::Generated { gen, .. } => gen.generate(spec.horizon_ms, &net),
         WorkloadSource::Replay { workload, .. } => workload.take(spec.horizon_ms),
+        WorkloadSource::Contention { .. } => unreachable!("handled above"),
     };
     // Submit in send order (ids break exact ties deterministically).
     requests.sort_by(|a, b| {
@@ -164,6 +175,7 @@ fn run_sim_cell(
         peak_cores: engine.peak_cores(&spec.model).unwrap_or(0),
         core_seconds: core_ms / 1_000.0,
         scaler_calls,
+        peak_stolen: engine.peak_stolen(&spec.model).unwrap_or(0),
     };
     Ok(CellResult {
         id: spec.id(),
@@ -189,6 +201,7 @@ fn run_replica_cell(
 ) -> Result<CellResult, String> {
     let cfg = ReplicaSetCfg {
         max_replicas: spec.knobs.replicas,
+        arbiter: spec.knobs.arbiter,
         engine: SimEngineCfg {
             shared_cores: spec.knobs.shared_cores,
             latency_noise_cv: spec.noise_cv,
@@ -226,6 +239,7 @@ fn run_replica_cell(
         peak_cores: set.peak_cores(),
         core_seconds: core_ms / 1_000.0,
         scaler_calls,
+        peak_stolen: set.peak_stolen(),
     };
     Ok(CellResult {
         id: spec.id(),
@@ -277,6 +291,7 @@ fn run_live_cell(
         peak_cores: 0,
         core_seconds: 0.0,
         scaler_calls: 0,
+        peak_stolen: 0,
     };
     Ok(CellResult {
         id: spec.id(),
@@ -285,6 +300,138 @@ fn run_live_cell(
         wall: CellWall {
             run_ms: started.elapsed().as_secs_f64() * 1_000.0,
             scaler_ns_total: 0,
+        },
+    })
+}
+
+/// The arbiter axis's scenario cell: the primary model and a rival (same
+/// latency variant, own queue/scaler) co-registered in one [`SimEngine`]
+/// with per-model guaranteed floors of half the cell budget, driven by
+/// anti-phase bursty timelines. Under `arbiter=static` the floors are
+/// hard; under `arbiter=stealing` the idle model's floor lends to the
+/// bursting one and is clawed back when its own burst returns. Metrics
+/// aggregate both models (merged trackers, summed counts), so the
+/// static-vs-stealing violation delta is read directly off the report.
+fn run_contention_cell(spec: &CellSpec, started: Instant) -> Result<CellResult, String> {
+    let WorkloadSource::Contention { primary, rival, total, .. } = &spec.workload else {
+        return Err("not a contention workload".into());
+    };
+    if spec.engine != EngineKind::Sim {
+        return Err("contention cells run on the sim engine only".into());
+    }
+    // The burst rates were calibrated against the pair's own budget;
+    // running them under a different one would silently de-fang the
+    // scenario (expand() pins the coordinate — this guards hand-built
+    // cells).
+    if spec.knobs.shared_cores != *total {
+        return Err(format!(
+            "contention pair calibrated for {total} shared cores, cell has {}",
+            spec.knobs.shared_cores
+        ));
+    }
+    let a_reqs = primary.take(spec.horizon_ms);
+    let b_reqs = rival.take(spec.horizon_ms);
+
+    let a_name = spec.model.clone();
+    let b_name = format!("{}-rival", spec.model);
+    let mut reg = ModelRegistry::new();
+    let base = ModelSpec::named(&spec.model)?
+        .with_policy(spec.knobs.policy)
+        .with_discipline(spec.knobs.discipline)
+        .with_solver(spec.knobs.solver);
+    let mut rival_spec = base.clone();
+    rival_spec.name = b_name.clone();
+    reg.register(base)?;
+    reg.register(rival_spec)?;
+
+    // Two guaranteed floors splitting the calibrated budget; the arbiter
+    // choice decides whether idle floor cores cross the boundary.
+    let floor = (total / 2).max(1);
+    let arbiter = spec.knobs.arbiter.build();
+    let tenants = {
+        let mut arb = arbiter.lock().unwrap();
+        let pa = arb.add_partition(floor);
+        let pb = arb.add_partition(total.saturating_sub(floor).max(1));
+        vec![arb.register_tenant(pa), arb.register_tenant(pb)]
+    };
+    let cfg = SimEngineCfg {
+        shared_cores: spec.knobs.shared_cores,
+        latency_noise_cv: spec.noise_cv,
+        seed: spec.seed,
+        ..Default::default()
+    };
+    let mut engine =
+        SimEngine::with_arbiter(&reg, cfg, arbiter, tenants).map_err(|e| e.to_string())?;
+
+    // Merged send-order timeline; (send time, model, id) is a total order.
+    let mut timeline: Vec<(&str, &Request)> = a_reqs
+        .iter()
+        .map(|r| (a_name.as_str(), r))
+        .chain(b_reqs.iter().map(|r| (b_name.as_str(), r)))
+        .collect();
+    timeline.sort_by(|x, y| {
+        x.1.sent_at_ms
+            .total_cmp(&y.1.sent_at_ms)
+            .then_with(|| x.0.cmp(y.0))
+            .then_with(|| x.1.id.cmp(&y.1.id))
+    });
+    let drain =
+        drive_timeline(&mut engine, &timeline, spec.time_scale).map_err(|e| e.to_string())?;
+    if !drain.settled() {
+        return Err(format!(
+            "engine failed to settle: {} of {} resolved",
+            drain.resolved, drain.submitted
+        ));
+    }
+
+    let snap_a = engine.snapshot(&a_name).map_err(|e| e.to_string())?;
+    let snap_b = engine.snapshot(&b_name).map_err(|e| e.to_string())?;
+    let mut tracker = engine
+        .tracker(&a_name)
+        .ok_or_else(|| format!("no tracker for '{a_name}'"))?
+        .clone();
+    if let Some(t) = engine.tracker(&b_name) {
+        tracker.merge(t);
+    }
+    let core_ms =
+        engine.core_ms(&a_name).unwrap_or(0.0) + engine.core_ms(&b_name).unwrap_or(0.0);
+    let span_ms = engine.now_ms().max(1.0);
+    let (calls_a, ns_a) = engine.scaler_cost(&a_name).unwrap_or((0, 0));
+    let (calls_b, ns_b) = engine.scaler_cost(&b_name).unwrap_or((0, 0));
+    let (p50, p99) = tracker
+        .e2e_percentiles(&[50.0, 99.0])
+        .map(|v| (v[0], v[1]))
+        .unwrap_or((0.0, 0.0));
+    let metrics = CellMetrics {
+        submitted: snap_a.submitted + snap_b.submitted,
+        completed: snap_a.completed + snap_b.completed,
+        dropped: snap_a.dropped + snap_b.dropped,
+        violations: snap_a.violations + snap_b.violations,
+        violation_rate_pct: tracker.violation_rate_pct(),
+        mean_e2e_ms: tracker.mean_e2e_ms(),
+        e2e_p50_ms: p50,
+        e2e_p99_ms: p99,
+        mean_queue_ms: tracker.mean_queue_ms(),
+        mean_cores: core_ms / span_ms,
+        // Per-tenant peak (the two peaks are anti-phase by design).
+        peak_cores: engine
+            .peak_cores(&a_name)
+            .unwrap_or(0)
+            .max(engine.peak_cores(&b_name).unwrap_or(0)),
+        core_seconds: core_ms / 1_000.0,
+        scaler_calls: calls_a + calls_b,
+        peak_stolen: engine
+            .peak_stolen(&a_name)
+            .unwrap_or(0)
+            .max(engine.peak_stolen(&b_name).unwrap_or(0)),
+    };
+    Ok(CellResult {
+        id: spec.id(),
+        spec: spec.clone(),
+        metrics,
+        wall: CellWall {
+            run_ms: started.elapsed().as_secs_f64() * 1_000.0,
+            scaler_ns_total: ns_a + ns_b,
         },
     })
 }
@@ -308,6 +455,7 @@ mod tests {
                 solver: SolverChoice::Incremental,
                 shared_cores: 48,
                 replicas: 1,
+                arbiter: crate::arbiter::ArbiterChoice::Static,
             },
             horizon_ms: 20_000.0,
             model: "yolov5s".into(),
@@ -315,6 +463,17 @@ mod tests {
             noise_cv: 0.05,
             time_scale: 0.02,
         }
+    }
+
+    fn contention_cell(arbiter: crate::arbiter::ArbiterChoice) -> CellSpec {
+        let workload = WorkloadSource::contention("yolov5s", 16);
+        let mut cell = tiny_cell(Policy::Sponge, QueueDiscipline::Edf);
+        cell.knobs.shared_cores = 16;
+        cell.knobs.arbiter = arbiter;
+        // One full burst for each model plus both guard gaps.
+        cell.horizon_ms = 60_000.0;
+        cell.workload = workload;
+        cell
     }
 
     #[test]
@@ -366,6 +525,32 @@ mod tests {
     fn replica_cell_deterministic_across_runs() {
         let mut cell = tiny_cell(Policy::Sponge, QueueDiscipline::Edf);
         cell.knobs.replicas = 2;
+        let a = run_cell(&cell).unwrap();
+        let b = run_cell(&cell).unwrap();
+        assert_eq!(a.metrics, b.metrics);
+    }
+
+    #[test]
+    fn contention_cell_conserves_and_labels_the_arbiter() {
+        use crate::arbiter::ArbiterChoice;
+        let cell = contention_cell(ArbiterChoice::Stealing);
+        let r = run_cell(&cell).unwrap();
+        assert!(r.id.ends_with("+steal"), "{}", r.id);
+        assert!(r.id.contains("@16c"), "{}", r.id);
+        assert_eq!(r.metrics.submitted, r.metrics.completed + r.metrics.dropped);
+        assert!(r.metrics.scaler_calls > 0);
+        assert!(r.metrics.peak_stolen > 0, "stealing cell never stole");
+        let stat = run_cell(&contention_cell(ArbiterChoice::Static)).unwrap();
+        assert!(!stat.id.contains("steal"), "{}", stat.id);
+        assert_eq!(stat.metrics.peak_stolen, 0, "static cell must not steal");
+        // Same timelines either way.
+        assert_eq!(stat.metrics.submitted, r.metrics.submitted);
+    }
+
+    #[test]
+    fn contention_cell_deterministic_across_runs() {
+        use crate::arbiter::ArbiterChoice;
+        let cell = contention_cell(ArbiterChoice::Stealing);
         let a = run_cell(&cell).unwrap();
         let b = run_cell(&cell).unwrap();
         assert_eq!(a.metrics, b.metrics);

@@ -51,6 +51,11 @@
 //! * [`queue`] — EDF priority queue and dynamic batch extraction
 //! * [`solver`] — Algorithm 1 (brute force) + optimized incremental IP
 //! * [`scaler`] — Sponge scaler and the FA2 / static / VPA baselines
+//! * [`arbiter`] — the lease-based `CoreArbiter` resource control plane
+//!   (guaranteed floors, stealable surplus, clawback): every engine's
+//!   core allocation goes through it; `StaticPartition` reproduces the
+//!   legacy headroom math, `StealingArbiter` lends idle cores across
+//!   models and replicas
 //! * [`perfmodel`] — the paper's Eq. 1/2 latency model + robust fitting
 //! * [`profiler`] — (b, c) profiling sweeps feeding the fit
 //! * [`cluster`] — instances, in-place resize vs. cold-start scale-out
@@ -65,6 +70,7 @@
 //! * [`util`] — hand-rolled substrates (PRNG, stats, JSON, CLI,
 //!   prop-tests, bench harness)
 
+pub mod arbiter;
 pub mod cluster;
 pub mod config;
 pub mod coordinator;

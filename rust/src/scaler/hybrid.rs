@@ -68,7 +68,10 @@ impl HybridScaler {
             obs.now_ms,
             obs.lambda_rps * self.lambda_headroom,
         );
-        plan_replicas(self.solver, &planning, &input, self.limits, self.max_instances)
+        // Per-instance cores are capped by what a lease can actually
+        // grant (the arbiter ceiling), not just the search limit.
+        let limits = obs.clamp_limits(self.limits);
+        plan_replicas(self.solver, &planning, &input, limits, self.max_instances)
             .map(|p| (p.replicas, p.cores, p.batch))
     }
 }
@@ -143,6 +146,7 @@ mod tests {
             deadlines_ms: deadlines,
             cl_max_ms: 100.0,
             slo_ms: 1_000.0,
+            cores_cap: Cores::MAX,
         }
     }
 

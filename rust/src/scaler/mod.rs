@@ -42,6 +42,22 @@ pub struct ScalerObs<'a> {
     pub cl_max_ms: Ms,
     /// Nominal end-to-end SLO.
     pub slo_ms: Ms,
+    /// The core ceiling a lease could actually grant this tick — the
+    /// tenant's current holds plus its [`crate::arbiter::CoreArbiter`]
+    /// floor headroom plus any lendable surplus
+    /// ([`crate::arbiter::ArbiterSnapshot::plannable`]). Solver-backed
+    /// policies clamp their `c_max` search to it, so the plan targets
+    /// cores the allocation layer can deliver. `Cores::MAX` when the
+    /// caller enforces no budget (legacy single-tenant paths).
+    pub cores_cap: Cores,
+}
+
+impl ScalerObs<'_> {
+    /// `limits` with `c_max` clamped to the arbiter-grantable ceiling
+    /// (never below 1 core, so infeasible ticks still plan *something*).
+    pub fn clamp_limits(&self, limits: SolverLimits) -> SolverLimits {
+        SolverLimits { c_max: limits.c_max.min(self.cores_cap.max(1)), ..limits }
+    }
 }
 
 /// Actuation commands the adapter applies to the cluster/queue.
@@ -159,6 +175,16 @@ impl Autoscaler for SpongeScaler {
         let Some(inst) = cluster.instances().next() else {
             return vec![Action::Launch { cores: 1 }];
         };
+        // Plan against what the allocation layer can actually grant: the
+        // arbiter-reported ceiling clamps the core search space, so under
+        // a contended budget the solver picks the best *reachable*
+        // configuration instead of one the lease will cut down.
+        let limits = obs.clamp_limits(self.limits);
+        if self.warm.is_some_and(|w| w.cores > limits.c_max) {
+            // A warm hint outside the clamped search space is not a valid
+            // bracket; fall back to a cold solve this tick.
+            self.warm = None;
+        }
         let lambda = obs.lambda_rps * self.lambda_headroom;
         // Allocation-free hot path: the per-request input borrows the
         // queue's deadline index with a lazy `now` offset; only the
@@ -176,9 +202,9 @@ impl Autoscaler for SpongeScaler {
         let planning = self.planning_model(model);
         let solved = match self.solver {
             SolverChoice::Incremental => {
-                IncrementalSolver.solve_warm(&planning, &input, self.limits, self.warm)
+                IncrementalSolver.solve_warm(&planning, &input, limits, self.warm)
             }
-            SolverChoice::BruteForce => self.solver.solve(&planning, &input, self.limits),
+            SolverChoice::BruteForce => self.solver.solve(&planning, &input, limits),
         };
         self.warm = solved;
         match solved {
@@ -190,12 +216,12 @@ impl Autoscaler for SpongeScaler {
                 ]
             }
             None => {
-                // Infeasible: best effort — max cores, smallest batch, so
-                // the most urgent requests have the best chance. (The
-                // violations that remain are the experiment's signal.)
+                // Infeasible: best effort — max reachable cores, smallest
+                // batch, so the most urgent requests have the best chance.
+                // (The violations that remain are the experiment's signal.)
                 self.last_batch = 1;
                 vec![
-                    Action::Resize { id: inst.id, cores: self.limits.c_max },
+                    Action::Resize { id: inst.id, cores: limits.c_max },
                     Action::SetBatch { batch: 1 },
                 ]
             }
@@ -411,6 +437,7 @@ mod tests {
             deadlines_ms: deadlines,
             cl_max_ms: cl_max,
             slo_ms: 1_000.0,
+            cores_cap: Cores::MAX,
         }
     }
 

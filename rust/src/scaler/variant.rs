@@ -84,10 +84,12 @@ impl VariantScaler {
     fn choose(&self, obs: &ScalerObs<'_>) -> usize {
         let solver = IncrementalSolver;
         let lambda = obs.lambda_rps * self.inner.lambda_headroom;
-        // One borrowed input serves every variant probe — no copies.
+        // One borrowed input serves every variant probe — no copies. The
+        // feasibility probes honour the arbiter-grantable core ceiling.
+        let limits = obs.clamp_limits(self.limits);
         let input = SolverInput::from_deadlines(obs.deadlines_ms, obs.now_ms, lambda);
         for (i, v) in self.variants.iter().enumerate() {
-            if solver.solve(&v.model, &input, self.limits).is_some() {
+            if solver.solve(&v.model, &input, limits).is_some() {
                 return i;
             }
         }
@@ -147,6 +149,7 @@ mod tests {
             deadlines_ms: deadlines,
             cl_max_ms: 0.0,
             slo_ms: 1_000.0,
+            cores_cap: crate::Cores::MAX,
         }
     }
 

@@ -9,7 +9,7 @@
 //! |---|---|---|---|---|
 //! | `/v1/models` | GET | — | `200` `{"default": name, "models": [{"name", "replicas", "queue_len", "cores", "batch"}]}` | — |
 //! | `/v1/models/{name}/infer` | POST | infer JSON (below) | `200` infer response (served by the least-loaded replica) | `400` bad JSON/body, `404` unknown model, `504` timeout |
-//! | `/v1/models/{name}/stats` | GET | — | `200` `{"received", "completed", "dropped", "violated", "queue_len", "cores", "batch", "model_refits", "replicas": [{"replica", "received", "completed", "dropped", "violated", "queue_len", "cores", "batch"}]}` — top level is fleet-aggregated, `replicas` is per replica | `404` unknown model |
+//! | `/v1/models/{name}/stats` | GET | — | `200` `{"received", "completed", "dropped", "violated", "queue_len", "cores", "batch", "model_refits", "cores_granted", "cores_lent", "cores_stolen", "replicas": [{"replica", "received", "completed", "dropped", "violated", "queue_len", "cores", "batch", "cores_granted", "cores_lent", "cores_stolen"}]}` — top level is fleet-aggregated, `replicas` is per replica; the `cores_*` triple is the CoreArbiter lease accounting | `404` unknown model |
 //! | `/infer` | POST | infer JSON | `200` — legacy alias for the **default** model | as above |
 //! | `/metrics` | GET | — | `200` Prometheus text (default model's registry) | — |
 //! | `/healthz` | GET | — | `200` `ok` | — |
@@ -298,6 +298,11 @@ fn stats_doc(replicas: &[Arc<Coordinator>]) -> Json {
             Json::num(stats.iter().map(|s| s.batch).max().unwrap_or(0) as f64),
         ),
         ("model_refits", Json::num(sum(|s| s.model_refits as f64))),
+        // CoreArbiter lease accounting (see rust/src/arbiter/): the grant
+        // behind the decision, floor cores lent out, surplus borrowed.
+        ("cores_granted", Json::num(sum(|s| s.cores_granted as f64))),
+        ("cores_lent", Json::num(sum(|s| s.cores_lent as f64))),
+        ("cores_stolen", Json::num(sum(|s| s.cores_stolen as f64))),
         (
             "replicas",
             Json::arr(stats.iter().enumerate().map(|(i, s)| {
@@ -310,6 +315,9 @@ fn stats_doc(replicas: &[Arc<Coordinator>]) -> Json {
                     ("queue_len", Json::num(s.queue_len as f64)),
                     ("cores", Json::num(s.cores as f64)),
                     ("batch", Json::num(s.batch as f64)),
+                    ("cores_granted", Json::num(s.cores_granted as f64)),
+                    ("cores_lent", Json::num(s.cores_lent as f64)),
+                    ("cores_stolen", Json::num(s.cores_stolen as f64)),
                 ])
             })),
         ),

@@ -229,6 +229,9 @@ pub fn run(cfg: &SimConfig, net: &NetworkModel, mut scaler: Box<dyn Autoscaler>)
                     deadlines_ms: queue.live_deadline_index(now),
                     cl_max_ms: cl_max_window,
                     slo_ms: cfg.workload.slo_ms,
+                    // The single-model loop predates the arbiter; its one
+                    // tenant owns the whole node, so no ceiling applies.
+                    cores_cap: crate::Cores::MAX,
                 };
                 let t0 = std::time::Instant::now();
                 let actions = scaler.decide(&obs, &cluster, &exec_model);

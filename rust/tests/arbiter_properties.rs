@@ -1,0 +1,342 @@
+//! CoreArbiter invariants under randomized operation interleavings, plus
+//! the `StaticPartition` ≡ legacy-headroom equivalence oracle.
+//!
+//! The budget/conservation properties run 1000+ randomized interleavings
+//! each (request / renew / release / reclaim / retire + time advances)
+//! and check, after *every* operation:
+//!
+//! * total granted cores never exceed the fleet budget,
+//! * cores are conserved across lend/reclaim cycles
+//!   (Σ tenant `stolen` == Σ partition `lent`, per-partition
+//!   `used + free == budget`),
+//! * the static arbiter never moves a core across a partition boundary.
+//!
+//! The equivalence suite replays identical op sequences through
+//! `StaticPartition` and through a literal transcription of the
+//! pre-redesign engine arithmetic (`min(want, budget − Σ reservations +
+//! own reservation)` with the cluster's `max(old, target)` resize-window
+//! reservation) and pins grant-for-grant equality — the property that
+//! keeps every pre-arbiter baseline valid.
+
+use sponge::arbiter::{
+    ArbiterChoice, CoreArbiter, CoreLease, StaticPartition, StealingArbiter, StealingCfg,
+};
+use sponge::prop_assert;
+use sponge::util::proptest::run_prop;
+use sponge::Cores;
+
+/// Check the ledger invariants at `now`; returns Err on violation.
+fn check_invariants(
+    arb: &dyn CoreArbiter,
+    now: f64,
+    lending_allowed: bool,
+) -> Result<(), String> {
+    let snap = arb.snapshot(now);
+    prop_assert!(
+        snap.granted <= snap.budget,
+        "granted {} > budget {} at t={now}",
+        snap.granted,
+        snap.budget
+    );
+    let lent: Cores = snap.partitions.iter().map(|p| p.lent).sum();
+    let stolen = snap.total_stolen();
+    prop_assert!(
+        lent == stolen,
+        "conservation broken: lent {lent} != stolen {stolen} at t={now}"
+    );
+    for p in &snap.partitions {
+        prop_assert!(
+            p.used <= p.budget,
+            "partition {:?} over-used: {} > {}",
+            p.id,
+            p.used,
+            p.budget
+        );
+        prop_assert!(
+            p.used + p.free == p.budget,
+            "partition {:?} leaks: used {} + free {} != budget {}",
+            p.id,
+            p.used,
+            p.free,
+            p.budget
+        );
+    }
+    if !lending_allowed {
+        prop_assert!(stolen == 0, "static arbiter lent {stolen} cores");
+    }
+    Ok(())
+}
+
+/// Randomized interleavings against one arbiter flavour.
+fn interleaving_prop(choice: ArbiterChoice) {
+    let name = match choice {
+        ArbiterChoice::Static => "arbiter-interleave-static",
+        ArbiterChoice::Stealing => "arbiter-interleave-stealing",
+    };
+    let lending = choice == ArbiterChoice::Stealing;
+    run_prop(name, 1_000, |g| {
+        let mut arb: Box<dyn CoreArbiter> = match choice {
+            ArbiterChoice::Static => Box::new(StaticPartition::new()),
+            ArbiterChoice::Stealing => Box::new(StealingArbiter::new(StealingCfg {
+                lend_hysteresis_ms: g.f64(0.0, 3_000.0),
+                resize_ms: 100.0,
+            })),
+        };
+        let n_parts = g.usize(1, 4);
+        let mut tenants = Vec::new();
+        let mut partitions = Vec::new();
+        for _ in 0..n_parts {
+            let p = arb.add_partition(g.u32(2, 16));
+            partitions.push(p);
+            tenants.push(arb.register_tenant(p));
+            if g.bool() {
+                // Some partitions pool more than one tenant.
+                tenants.push(arb.register_tenant(p));
+            }
+        }
+        let mut now = 0.0;
+        let mut leases: Vec<CoreLease> = Vec::new();
+        let mut retired = vec![false; partitions.len()];
+        for _ in 0..g.usize(10, 40) {
+            now += g.f64(1.0, 1_500.0);
+            match g.u32(0, 9) {
+                // Open a lease.
+                0..=2 => {
+                    let t = tenants[g.usize(0, tenants.len() - 1)];
+                    let lease = arb.request_lease(t, g.u32(1, 20), now);
+                    if lease.granted > 0 {
+                        leases.push(lease);
+                    } else {
+                        arb.release(lease.id, now);
+                    }
+                }
+                // Renew to a new demand.
+                3..=6 => {
+                    if !leases.is_empty() {
+                        let i = g.usize(0, leases.len() - 1);
+                        let want = g.u32(1, 20);
+                        leases[i] = arb.renew(leases[i].id, want, now);
+                    }
+                }
+                // Release.
+                7 => {
+                    if !leases.is_empty() {
+                        let i = g.usize(0, leases.len() - 1);
+                        let lease = leases.swap_remove(i);
+                        arb.release(lease.id, now);
+                    }
+                }
+                // Explicit clawback.
+                8 => {
+                    let t = tenants[g.usize(0, tenants.len() - 1)];
+                    let _ = arb.reclaim(t, g.u32(1, 8), now);
+                }
+                // Retire a partition (release its tenants' leases first,
+                // as the replica-retirement path does).
+                _ => {
+                    let pi = g.usize(0, partitions.len() - 1);
+                    if !retired[pi] && partitions.len() > 1 {
+                        retired[pi] = true;
+                        let mut keep = Vec::new();
+                        for lease in leases.drain(..) {
+                            let snap = arb.snapshot(now);
+                            let owner = snap
+                                .tenants
+                                .iter()
+                                .find(|u| u.tenant == lease.tenant)
+                                .map(|u| u.partition);
+                            if owner == Some(partitions[pi]) || owner.is_none() {
+                                arb.release(lease.id, now);
+                            } else {
+                                keep.push(lease);
+                            }
+                        }
+                        leases = keep;
+                        arb.retire_partition(partitions[pi], now);
+                    }
+                }
+            }
+            check_invariants(arb.as_ref(), now, lending)?;
+        }
+        // Drain everything: after all leases close and every pending
+        // window lands, nothing may remain granted or lent.
+        for lease in leases.drain(..) {
+            arb.release(lease.id, now);
+        }
+        now += 10_000.0;
+        for &t in &tenants {
+            // Any renewal-driven bookkeeping is done; a reclaim on an
+            // empty ledger must be a no-op.
+            let snap = arb.snapshot(now);
+            if snap.tenants.iter().any(|u| u.tenant == t) {
+                let revs = arb.reclaim(t, 4, now);
+                prop_assert!(revs.is_empty(), "revocations without borrowers");
+            }
+        }
+        let end = arb.snapshot(now);
+        prop_assert!(end.granted == 0, "drained ledger still grants {}", end.granted);
+        prop_assert!(end.total_stolen() == 0, "drained ledger still lends");
+        Ok(())
+    });
+}
+
+#[test]
+fn randomized_interleavings_conserve_cores_stealing() {
+    interleaving_prop(ArbiterChoice::Stealing);
+}
+
+#[test]
+fn randomized_interleavings_conserve_cores_static() {
+    interleaving_prop(ArbiterChoice::Static);
+}
+
+// ------------------------------------------------------------------------
+// StaticPartition ≡ legacy headroom arithmetic
+// ------------------------------------------------------------------------
+
+/// Literal transcription of the pre-redesign allocation math: a shared
+/// pool of `budget` cores, per-instance reservations with the cluster's
+/// `max(old, target)` semantics during a resize actuation window.
+struct LegacyHeadroom {
+    budget: Cores,
+    /// (effective, target, land_at) per live instance.
+    instances: Vec<(Cores, Cores, f64)>,
+}
+
+impl LegacyHeadroom {
+    fn new(budget: Cores) -> LegacyHeadroom {
+        LegacyHeadroom { budget, instances: Vec::new() }
+    }
+
+    fn land(&mut self, now: f64) {
+        for inst in &mut self.instances {
+            if now >= inst.2 {
+                inst.0 = inst.1;
+                inst.2 = f64::INFINITY;
+            }
+        }
+    }
+
+    fn reservation(inst: &(Cores, Cores, f64)) -> Cores {
+        inst.0.max(inst.1)
+    }
+
+    fn total(&self) -> Cores {
+        self.instances.iter().map(Self::reservation).sum()
+    }
+
+    /// `cluster.launch` under the engine's old headroom subtraction.
+    fn launch(&mut self, want: Cores, now: f64) -> (usize, Cores) {
+        self.land(now);
+        let headroom = self.budget.saturating_sub(self.total());
+        let granted = want.min(headroom);
+        // The engine only launched when granted >= 1; grant 0 leaves no
+        // instance behind (mirrors the lease being released).
+        if granted >= 1 {
+            self.instances.push((granted, granted, f64::INFINITY));
+            (self.instances.len() - 1, granted)
+        } else {
+            (usize::MAX, 0)
+        }
+    }
+
+    /// `apply_action(Resize)` under the old math.
+    fn resize(&mut self, i: usize, want: Cores, now: f64) -> Cores {
+        self.land(now);
+        let current = Self::reservation(&self.instances[i]);
+        let headroom = self
+            .budget
+            .saturating_sub(self.total().saturating_sub(current));
+        let granted = want.min(headroom);
+        if granted >= 1 && granted != self.instances[i].0 {
+            self.instances[i].1 = granted;
+            self.instances[i].2 = now + 100.0; // resize_ms
+        } else if granted >= 1 {
+            self.instances[i].1 = granted;
+            self.instances[i].2 = f64::INFINITY;
+        }
+        granted
+    }
+
+    fn terminate(&mut self, i: usize, now: f64) {
+        self.land(now);
+        self.instances[i] = (0, 0, f64::INFINITY);
+    }
+}
+
+#[test]
+fn static_partition_matches_legacy_headroom_grant_for_grant() {
+    run_prop("static-equals-legacy-headroom", 1_000, |g| {
+        let budget = g.u32(4, 48);
+        let mut legacy = LegacyHeadroom::new(budget);
+        let mut arb = StaticPartition::single_pool(budget);
+        // A couple of tenants pooling the budget, as SimEngine models do.
+        let t0 = arb.register_tenant(sponge::arbiter::PartitionId(0));
+        let t1 = arb.register_tenant(sponge::arbiter::PartitionId(0));
+        let tenants = [t0, t1];
+        // legacy index -> lease id (entries for granted launches only).
+        let mut lease_of: Vec<Option<CoreLease>> = Vec::new();
+        let mut live: Vec<usize> = Vec::new();
+        let mut now = 0.0;
+        for _ in 0..g.usize(10, 40) {
+            // Tick-spaced ops, always past the 100 ms resize window, so
+            // both ledgers land pending shrinks at the same op boundaries.
+            now += g.f64(150.0, 2_000.0);
+            match g.u32(0, 3) {
+                0 | 1 => {
+                    let want = g.u32(1, 20);
+                    let tenant = tenants[g.usize(0, 1)];
+                    let lease = arb.request_lease(tenant, want, now);
+                    let (idx, granted) = legacy.launch(want, now);
+                    prop_assert!(
+                        lease.granted == granted,
+                        "launch grant diverged: arbiter {} vs legacy {granted}",
+                        lease.granted
+                    );
+                    if granted >= 1 {
+                        while lease_of.len() <= idx {
+                            lease_of.push(None);
+                        }
+                        lease_of[idx] = Some(lease);
+                        live.push(idx);
+                    } else {
+                        arb.release(lease.id, now);
+                    }
+                }
+                2 => {
+                    if !live.is_empty() {
+                        let idx = live[g.usize(0, live.len() - 1)];
+                        let want = g.u32(1, 20);
+                        let lease = lease_of[idx].as_ref().unwrap();
+                        let granted = arb.renew(lease.id, want, now).granted;
+                        let legacy_granted = legacy.resize(idx, want, now);
+                        prop_assert!(
+                            granted == legacy_granted,
+                            "resize grant diverged: arbiter {granted} vs legacy \
+                             {legacy_granted} (want {want})"
+                        );
+                    }
+                }
+                _ => {
+                    if !live.is_empty() {
+                        let pos = g.usize(0, live.len() - 1);
+                        let idx = live.swap_remove(pos);
+                        let lease = lease_of[idx].take().unwrap();
+                        arb.release(lease.id, now);
+                        legacy.terminate(idx, now);
+                    }
+                }
+            }
+            // Aggregate reservations agree at every step.
+            let snap = arb.snapshot(now);
+            legacy.land(now);
+            prop_assert!(
+                snap.granted == legacy.total(),
+                "reservations diverged: arbiter {} vs legacy {}",
+                snap.granted,
+                legacy.total()
+            );
+        }
+        Ok(())
+    });
+}

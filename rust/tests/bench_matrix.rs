@@ -2,6 +2,7 @@
 //! report schema, and the regression gate — the contract the `bench-smoke`
 //! CI job and the committed `benches/baseline.json` rely on.
 
+use sponge::arbiter::ArbiterChoice;
 use sponge::config::Policy;
 use sponge::experiment::{
     regression_gate, run_matrix, EngineKind, ExperimentSpec, GateOutcome, TraceSource,
@@ -25,6 +26,7 @@ fn small_matrix(horizon_s: f64) -> ExperimentSpec {
         solvers: vec![SolverChoice::Incremental, SolverChoice::BruteForce],
         budgets: vec![48],
         replica_budgets: vec![1],
+        arbiters: vec![ArbiterChoice::Static],
         horizon_ms: horizon_s * 1_000.0,
         model: "yolov5s".into(),
         seed: 42,
@@ -156,6 +158,7 @@ fn replicated_sponge_beats_single_replica_at_double_traffic() {
         solvers: vec![SolverChoice::Incremental],
         budgets: vec![48],
         replica_budgets: vec![1, 2],
+        arbiters: vec![ArbiterChoice::Static],
         horizon_ms: 60_000.0,
         model: "yolov5s".into(),
         seed: 42,
@@ -196,8 +199,64 @@ fn replicated_sponge_beats_single_replica_at_double_traffic() {
 fn default_matrix_stays_ci_sized() {
     let spec = ExperimentSpec::named("default").unwrap().quick();
     let cells = spec.expand();
-    assert_eq!(cells.len(), 16);
+    assert_eq!(cells.len(), 32);
     assert!(spec.horizon_ms <= 120_000.0);
     // Every cell is a deterministic sim cell — the CI gate's precondition.
     assert!(cells.iter().all(|c| c.engine == EngineKind::Sim));
+    // The arbiter axis is present: CI greps a stealing contention cell.
+    assert!(cells
+        .iter()
+        .any(|c| c.knobs.arbiter == ArbiterChoice::Stealing && c.id().ends_with("+steal")));
+}
+
+/// The arbiter-axis acceptance criterion: under the two-model contention
+/// scenario at equal total cores, the stealing arbiter yields strictly
+/// fewer SLO violations than the static split — the cross-model core
+/// stealing win, read off the same report CI produces.
+#[test]
+fn stealing_beats_static_on_the_contention_pair() {
+    let spec = ExperimentSpec {
+        name: "it-contend".into(),
+        workloads: vec![WorkloadSource::contention("yolov5s", 16)],
+        traces: vec![TraceSource::Synthetic { seed: 0x7ace }],
+        engines: vec![EngineKind::Sim],
+        policies: vec![Policy::Sponge],
+        disciplines: vec![QueueDiscipline::Edf],
+        solvers: vec![SolverChoice::Incremental],
+        budgets: vec![48], // overridden by the pair's calibrated total
+        replica_budgets: vec![1],
+        arbiters: vec![ArbiterChoice::Static, ArbiterChoice::Stealing],
+        horizon_ms: 120_000.0, // two full burst periods per model
+        model: "yolov5s".into(),
+        seed: 42,
+        noise_cv: 0.05,
+        quick: false,
+    };
+    let report = run_matrix(&spec).unwrap();
+    assert_eq!(report.cells.len(), 2);
+    let cell = |steal: bool| {
+        report
+            .cells
+            .iter()
+            .find(|c| c.id.ends_with("+steal") == steal)
+            .unwrap_or_else(|| panic!("missing steal={steal} cell"))
+    };
+    let static_cell = cell(false);
+    let stealing = cell(true);
+    // Same timelines, same total cores.
+    assert_eq!(static_cell.metrics.submitted, stealing.metrics.submitted);
+    assert_eq!(static_cell.spec.knobs.shared_cores, 16);
+    assert_eq!(stealing.spec.knobs.shared_cores, 16);
+    // The win: strictly fewer violations, via actual cross-model lending.
+    assert!(stealing.metrics.peak_stolen > 0, "no lending happened");
+    assert_eq!(static_cell.metrics.peak_stolen, 0);
+    assert!(
+        stealing.metrics.violations < static_cell.metrics.violations,
+        "stealing {} !< static {}",
+        stealing.metrics.violations,
+        static_cell.metrics.violations
+    );
+    for c in &report.cells {
+        assert_eq!(c.metrics.submitted, c.metrics.completed + c.metrics.dropped);
+    }
 }
