@@ -26,6 +26,9 @@
 //!   scaling reconciler ([`replicaset`]).
 //! * [`scenario`] — a clock-agnostic scenario driver: the same two-model
 //!   dynamic-SLO workload replays through either engine.
+//! * [`crate::pipeline::PipelineEngine`] — DAGs of registered models with
+//!   one end-to-end dynamic SLO, slack-apportioned into per-stage
+//!   deadlines (a fourth `ServingEngine` implementation).
 //!
 //! The versioned HTTP surface (`/v1/models/...`, [`crate::server`]) is the
 //! network face of the same registry.
@@ -40,7 +43,7 @@ pub use live::{LiveEngine, LiveEngineCfg};
 pub use registry::{builtin_latency_model, ModelRegistry, ModelSpec};
 pub use replicaset::{ReplicaSet, ReplicaSetCfg, ReplicaSetEngine, ReplicaStats};
 pub use scenario::{drive_timeline, run_scenario, Scenario, ScenarioModel, ScenarioReport};
-pub use sim::{SimEngine, SimEngineCfg};
+pub use sim::{Completion, SimEngine, SimEngineCfg};
 
 use std::cell::Cell;
 use std::fmt;

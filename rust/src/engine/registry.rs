@@ -10,6 +10,7 @@
 
 use crate::config::Policy;
 use crate::perfmodel::LatencyModel;
+use crate::pipeline::PipelineSpec;
 use crate::queue::QueueDiscipline;
 use crate::solver::{SolverChoice, SolverLimits};
 use crate::Ms;
@@ -117,14 +118,17 @@ impl ModelSpec {
 }
 
 /// Ordered collection of model specs; index 0 is the default model.
+/// Also holds the registered [`PipelineSpec`]s — named DAGs over the
+/// registered models ([`crate::pipeline`]).
 #[derive(Debug, Clone, Default)]
 pub struct ModelRegistry {
     specs: Vec<ModelSpec>,
+    pipelines: Vec<PipelineSpec>,
 }
 
 impl ModelRegistry {
     pub fn new() -> ModelRegistry {
-        ModelRegistry { specs: Vec::new() }
+        ModelRegistry { specs: Vec::new(), pipelines: Vec::new() }
     }
 
     /// Build a registry from a comma-separated variant list (the CLI's
@@ -173,6 +177,50 @@ impl ModelRegistry {
     pub fn is_empty(&self) -> bool {
         self.specs.is_empty()
     }
+
+    /// Register a pipeline over already-registered models. Validated at
+    /// registration: structural soundness (non-empty, unique stage names,
+    /// dependencies reference existing stages, acyclic — see
+    /// [`PipelineSpec::validate`]), every stage model registered, and the
+    /// pipeline name colliding with neither a model nor another pipeline.
+    pub fn register_pipeline(&mut self, spec: PipelineSpec) -> Result<(), String> {
+        spec.validate()?;
+        if self.get(&spec.name).is_some() {
+            return Err(format!(
+                "pipeline '{}' collides with a registered model name",
+                spec.name
+            ));
+        }
+        if self.pipeline(&spec.name).is_some() {
+            return Err(format!("pipeline '{}' already registered", spec.name));
+        }
+        for stage in &spec.stages {
+            if self.get(&stage.model).is_none() {
+                return Err(format!(
+                    "pipeline '{}' stage '{}' references unregistered model '{}' \
+                     (registered: {})",
+                    spec.name,
+                    stage.name,
+                    stage.model,
+                    self.names().join(", ")
+                ));
+            }
+        }
+        self.pipelines.push(spec);
+        Ok(())
+    }
+
+    pub fn pipeline(&self, name: &str) -> Option<&PipelineSpec> {
+        self.pipelines.iter().find(|p| p.name == name)
+    }
+
+    pub fn pipeline_names(&self) -> Vec<String> {
+        self.pipelines.iter().map(|p| p.name.clone()).collect()
+    }
+
+    pub fn pipelines(&self) -> impl Iterator<Item = &PipelineSpec> {
+        self.pipelines.iter()
+    }
 }
 
 #[cfg(test)]
@@ -219,5 +267,40 @@ mod tests {
         assert_eq!(spec.replicas, 1);
         assert_eq!(spec.clone().with_replicas(3).replicas, 3);
         assert_eq!(spec.with_replicas(0).replicas, 1, "clamped to >= 1");
+    }
+
+    #[test]
+    fn pipeline_registration_validates_models_and_names() {
+        use crate::pipeline::Apportionment;
+        let mut reg = ModelRegistry::from_names("yolov5n,yolov5s").unwrap();
+        let chain = PipelineSpec::chain(
+            "detect",
+            &["yolov5n", "yolov5s"],
+            Apportionment::Percentile(95.0),
+        );
+        reg.register_pipeline(chain.clone()).unwrap();
+        assert_eq!(reg.pipeline_names(), vec!["detect"]);
+        assert_eq!(reg.pipeline("detect").unwrap().stages.len(), 2);
+        assert_eq!(reg.pipelines().count(), 1);
+        // Duplicate pipeline name rejected.
+        assert!(reg.register_pipeline(chain).is_err());
+        // Unregistered stage model rejected, error naming the known set.
+        let err = reg
+            .register_pipeline(PipelineSpec::chain(
+                "bad",
+                &["yolov5n", "resnet"],
+                Apportionment::EvenSplit,
+            ))
+            .unwrap_err();
+        assert!(err.contains("resnet") && err.contains("yolov5n, yolov5s"), "{err}");
+        // Pipeline name colliding with a model name rejected.
+        let err = reg
+            .register_pipeline(PipelineSpec::chain(
+                "yolov5n",
+                &["yolov5s"],
+                Apportionment::EvenSplit,
+            ))
+            .unwrap_err();
+        assert!(err.contains("collides"), "{err}");
     }
 }

@@ -52,6 +52,11 @@ pub struct SimEngineCfg {
     /// launches at `start_ms` and pays the full cold start, which is how a
     /// scaled-out replica's spin-up cost enters the metrics.
     pub warm_start: bool,
+    /// Log every per-request resolution (completion or drop) into a
+    /// per-model [`Completion`] buffer readable via
+    /// [`SimEngine::take_completions`]. Off by default; the pipeline
+    /// engine turns it on to hand finished stage work to successor stages.
+    pub record_completions: bool,
 }
 
 impl Default for SimEngineCfg {
@@ -66,8 +71,20 @@ impl Default for SimEngineCfg {
             drain_stall_ticks: 64,
             start_ms: 0.0,
             warm_start: true,
+            record_completions: false,
         }
     }
+}
+
+/// One resolved request, as logged when [`SimEngineCfg::record_completions`]
+/// is on: the engine-assigned request id (the value `submit` returned),
+/// the virtual time it resolved, and whether it was dropped (deadline
+/// expiry / forced drain) rather than served.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Completion {
+    pub request_id: u64,
+    pub at_ms: Ms,
+    pub dropped: bool,
 }
 
 /// Per-model serving state: own queue, scaler, fleet, accounting.
@@ -91,6 +108,9 @@ struct SimModel {
     submitted: u64,
     /// Largest core allocation observed at any adaptation tick.
     peak_cores: Cores,
+    /// Per-request resolution log (only fed when
+    /// [`SimEngineCfg::record_completions`] is set).
+    completions: Vec<Completion>,
     /// Scaler-cost instrumentation: `decide` invocations and the wall
     /// nanoseconds they consumed (the solver dominates for Sponge). Wall
     /// time never feeds back into virtual time, so determinism holds.
@@ -234,6 +254,7 @@ impl SimEngine {
                 cl_max_window: 0.0,
                 submitted: 0,
                 peak_cores: initial_cores,
+                completions: Vec::new(),
                 scaler_calls: 0,
                 scaler_ns: 0,
             });
@@ -336,6 +357,15 @@ impl SimEngine {
             .map(|i| self.models[i].cluster.ready_cores(self.clock.now_ms()))
     }
 
+    /// Drain one model's [`Completion`] log (empty unless
+    /// [`SimEngineCfg::record_completions`] is set). Entries are in
+    /// resolution order; each engine-assigned request id appears exactly
+    /// once across the engine's lifetime.
+    pub fn take_completions(&mut self, model: &str) -> Option<Vec<Completion>> {
+        let idx = self.model_idx(model)?;
+        Some(std::mem::take(&mut self.models[idx].completions))
+    }
+
     fn model_idx(&self, name: &str) -> Option<usize> {
         self.models.iter().position(|m| m.spec.name == name)
     }
@@ -378,6 +408,7 @@ impl SimEngine {
                     self.dispatch(model, ev.t);
                 }
                 EventKind::Done { model, instance, requests, started_ms } => {
+                    let record = self.cfg.record_completions;
                     let m = &mut self.models[model];
                     m.busy.insert(instance, false);
                     for r in &requests {
@@ -393,6 +424,13 @@ impl SimEngine {
                                 dropped: false,
                             },
                         );
+                        if record {
+                            m.completions.push(Completion {
+                                request_id: r.id,
+                                at_ms: ev.t,
+                                dropped: false,
+                            });
+                        }
                     }
                     self.dispatch(model, ev.t);
                 }
@@ -404,12 +442,13 @@ impl SimEngine {
     /// Work-conserving dispatch for one model: every ready idle instance
     /// of its fleet takes the next EDF batch.
     fn dispatch(&mut self, idx: usize, now: Ms) {
+        let record = self.cfg.record_completions;
         let m = &mut self.models[idx];
         if m.queue.is_empty() {
             m.cluster.tick(now);
             return;
         }
-        drop_expired(now, &mut m.queue, &mut m.tracker);
+        drop_expired(now, &mut m.queue, &mut m.tracker, record, &mut m.completions);
         m.cluster.tick(now);
         let ready: Vec<(u32, Cores)> = m
             .cluster
@@ -536,7 +575,13 @@ impl SimEngine {
     }
 }
 
-fn drop_expired(now: Ms, queue: &mut EdfQueue, tracker: &mut SloTracker) {
+fn drop_expired(
+    now: Ms,
+    queue: &mut EdfQueue,
+    tracker: &mut SloTracker,
+    record: bool,
+    log: &mut Vec<Completion>,
+) {
     for r in queue.drop_expired(now) {
         tracker.record(
             now,
@@ -549,6 +594,9 @@ fn drop_expired(now: Ms, queue: &mut EdfQueue, tracker: &mut SloTracker) {
                 dropped: true,
             },
         );
+        if record {
+            log.push(Completion { request_id: r.id, at_ms: now, dropped: true });
+        }
     }
 }
 
@@ -594,11 +642,12 @@ impl ServingEngine for SimEngine {
     fn tick(&mut self) {
         let t_end = self.next_tick_ms;
         self.process_until(t_end);
+        let record = self.cfg.record_completions;
         for idx in 0..self.models.len() {
             {
                 let m = &mut self.models[idx];
                 m.cluster.tick(t_end);
-                drop_expired(t_end, &mut m.queue, &mut m.tracker);
+                drop_expired(t_end, &mut m.queue, &mut m.tracker, record, &mut m.completions);
             }
             // Renew leases / enforce clawbacks before planning, so the
             // scaler observes post-revocation reality.
@@ -665,6 +714,7 @@ impl ServingEngine for SimEngine {
                 // Zero serving capacity and nothing in flight: account the
                 // remainder as drops so conservation holds.
                 let now = self.clock.now_ms();
+                let record = self.cfg.record_completions;
                 for m in &mut self.models {
                     while let Some(r) = m.queue.pop() {
                         m.tracker.record(
@@ -678,6 +728,13 @@ impl ServingEngine for SimEngine {
                                 dropped: true,
                             },
                         );
+                        if record {
+                            m.completions.push(Completion {
+                                request_id: r.id,
+                                at_ms: now,
+                                dropped: true,
+                            });
+                        }
                     }
                 }
                 break;

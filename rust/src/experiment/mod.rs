@@ -30,7 +30,7 @@ pub mod runner;
 pub mod spec;
 
 pub use report::{regression_gate, utc_today, GateOutcome, MatrixReport, SCHEMA};
-pub use runner::{run_cell, CellMetrics, CellResult, CellWall};
+pub use runner::{run_cell, CellMetrics, CellResult, CellWall, StageMetrics};
 pub use spec::{
     CellSpec, EngineKind, ExperimentSpec, PolicyKnobs, TraceSource, WorkloadSource,
 };

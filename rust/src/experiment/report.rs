@@ -18,6 +18,7 @@
 //!       "solver": "incremental", "shared_cores": 48, "replicas": 1,
 //!       "arbiter": "-",   // "-" where inert, else "static" | "stealing"
 //!       "metrics": { "submitted": ..., "violation_rate_pct": ..., ... },
+//!       "stages": [ { "stage": ..., "model": ..., ... } ],  // pipeline cells only
 //!       "wall": { "run_ms": ..., "scaler_ns_total": ... }  // omitted in stable mode
 //!     }
 //!   ],
@@ -97,6 +98,41 @@ impl MatrixReport {
                         ]),
                     ),
                 ];
+                // Pipeline cells carry a per-stage breakdown; the key is
+                // absent elsewhere so pre-pipeline reports stay
+                // byte-identical.
+                if !m.stages.is_empty() {
+                    fields.push((
+                        "stages",
+                        Json::Arr(
+                            m.stages
+                                .iter()
+                                .map(|s| {
+                                    Json::obj(vec![
+                                        ("stage", Json::str(&s.stage)),
+                                        ("model", Json::str(&s.model)),
+                                        ("submitted", Json::num(s.submitted as f64)),
+                                        ("completed", Json::num(s.completed as f64)),
+                                        ("dropped", Json::num(s.dropped as f64)),
+                                        (
+                                            "violations",
+                                            Json::num(s.violations as f64),
+                                        ),
+                                        (
+                                            "mean_cores",
+                                            Json::num(round3(s.mean_cores)),
+                                        ),
+                                        ("peak_cores", Json::num(s.peak_cores as f64)),
+                                        (
+                                            "peak_stolen",
+                                            Json::num(s.peak_stolen as f64),
+                                        ),
+                                    ])
+                                })
+                                .collect(),
+                        ),
+                    ));
+                }
                 if !stable {
                     fields.push((
                         "wall",

@@ -14,7 +14,8 @@ use crate::engine::{
     drive_timeline, LiveEngine, LiveEngineCfg, ModelRegistry, ModelSpec,
     ReplicaSetCfg, ReplicaSetEngine, ServingEngine, SimEngine, SimEngineCfg,
 };
-use crate::network::NetworkModel;
+use crate::network::{BandwidthTrace, NetworkModel};
+use crate::pipeline::{PipelineEngine, PipelineEngineCfg, PipelineSpec};
 use crate::workload::Request;
 use crate::{Cores, Ms};
 
@@ -42,6 +43,28 @@ pub struct CellMetrics {
     /// Largest borrowed-core holding any tenant of the cell reached (the
     /// arbiter's cross-tenant flow; 0 under the static arbiter and in
     /// single-tenant cells).
+    pub peak_stolen: Cores,
+    /// Per-stage breakdown for pipeline cells (empty elsewhere): the
+    /// top-level counters stay pipeline-level (one outcome per pipeline
+    /// request), this names where the time and the violations went.
+    pub stages: Vec<StageMetrics>,
+}
+
+/// One pipeline stage's share of a pipeline cell ([`CellMetrics::stages`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct StageMetrics {
+    pub stage: String,
+    pub model: String,
+    /// Requests this stage was handed (admissions + upstream handoffs;
+    /// short-circuited requests never reach a stage).
+    pub submitted: u64,
+    pub completed: u64,
+    pub dropped: u64,
+    /// Apportioned stage-deadline violations (including drops).
+    pub violations: u64,
+    pub mean_cores: f64,
+    pub peak_cores: Cores,
+    /// High-water mark of cores this stage borrowed beyond its floor.
     pub peak_stolen: Cores,
 }
 
@@ -83,12 +106,19 @@ pub fn run_cell(spec: &CellSpec) -> Result<CellResult, String> {
     if matches!(spec.workload, WorkloadSource::Contention { .. }) {
         return run_contention_cell(spec, started);
     }
+    // Pipeline cells drive a stage DAG through the PipelineEngine — their
+    // own runner path (the pipeline axis's scenario).
+    if matches!(spec.workload, WorkloadSource::Pipeline { .. }) {
+        return run_pipeline_cell(spec, started);
+    }
     let horizon_s = (spec.horizon_ms / 1_000.0).ceil() as usize;
     let net = NetworkModel::new(spec.trace.build(horizon_s));
     let mut requests: Vec<Request> = match &spec.workload {
         WorkloadSource::Generated { gen, .. } => gen.generate(spec.horizon_ms, &net),
         WorkloadSource::Replay { workload, .. } => workload.take(spec.horizon_ms),
-        WorkloadSource::Contention { .. } => unreachable!("handled above"),
+        WorkloadSource::Contention { .. } | WorkloadSource::Pipeline { .. } => {
+            unreachable!("handled above")
+        }
     };
     // Submit in send order (ids break exact ties deterministically).
     requests.sort_by(|a, b| {
@@ -176,6 +206,7 @@ fn run_sim_cell(
         core_seconds: core_ms / 1_000.0,
         scaler_calls,
         peak_stolen: engine.peak_stolen(&spec.model).unwrap_or(0),
+        stages: Vec::new(),
     };
     Ok(CellResult {
         id: spec.id(),
@@ -240,6 +271,7 @@ fn run_replica_cell(
         core_seconds: core_ms / 1_000.0,
         scaler_calls,
         peak_stolen: set.peak_stolen(),
+        stages: Vec::new(),
     };
     Ok(CellResult {
         id: spec.id(),
@@ -292,6 +324,7 @@ fn run_live_cell(
         core_seconds: 0.0,
         scaler_calls: 0,
         peak_stolen: 0,
+        stages: Vec::new(),
     };
     Ok(CellResult {
         id: spec.id(),
@@ -424,6 +457,7 @@ fn run_contention_cell(spec: &CellSpec, started: Instant) -> Result<CellResult, 
             .peak_stolen(&a_name)
             .unwrap_or(0)
             .max(engine.peak_stolen(&b_name).unwrap_or(0)),
+        stages: Vec::new(),
     };
     Ok(CellResult {
         id: spec.id(),
@@ -432,6 +466,129 @@ fn run_contention_cell(spec: &CellSpec, started: Instant) -> Result<CellResult, 
         wall: CellWall {
             run_ms: started.elapsed().as_secs_f64() * 1_000.0,
             scaler_ns_total: ns_a + ns_b,
+        },
+    })
+}
+
+/// The pipeline axis's scenario cell: a linear chain of registered models
+/// driven through the [`PipelineEngine`] — one vertically-scaling engine
+/// per stage, each a `stage_cores` tenant at the cell's arbiter, the
+/// end-to-end SLO re-apportioned at every handoff. Top-level metrics are
+/// pipeline-level (one outcome per pipeline request); the per-stage
+/// breakdown rides in [`CellMetrics::stages`].
+fn run_pipeline_cell(spec: &CellSpec, started: Instant) -> Result<CellResult, String> {
+    let WorkloadSource::Pipeline { name, stages, apportionment, stage_cores, gen } =
+        &spec.workload
+    else {
+        return Err("not a pipeline workload".into());
+    };
+    if spec.engine != EngineKind::Sim {
+        return Err("pipeline cells run on the sim engine only".into());
+    }
+    // The arrival rates were calibrated against the chain's own stage
+    // floors; a different budget coordinate would mislabel the cell
+    // (expand() pins it — this guards hand-built cells).
+    let budget = stage_cores.saturating_mul(stages.len() as Cores);
+    if spec.knobs.shared_cores != budget {
+        return Err(format!(
+            "pipeline chain calibrated for {budget} total cores \
+             ({stage_cores} × {} stages), cell has {}",
+            stages.len(),
+            spec.knobs.shared_cores
+        ));
+    }
+    // A flat 20 Mbit-class link (20 ms comm at the 200 KB paper payload):
+    // the pipeline cells compare apportionment strategies, so the
+    // network contribution is held constant rather than trace-driven.
+    let horizon_s = (spec.horizon_ms / 1_000.0).ceil() as usize;
+    let net = NetworkModel::new(
+        BandwidthTrace::from_samples(1_000.0, vec![2.0e7; horizon_s.max(1)])
+            .expect("flat trace is well-formed"),
+    );
+    let mut requests = gen.generate(spec.horizon_ms, &net);
+    requests.sort_by(|a, b| {
+        a.sent_at_ms.total_cmp(&b.sent_at_ms).then_with(|| a.id.cmp(&b.id))
+    });
+
+    let mut reg = ModelRegistry::new();
+    for model in stages {
+        // A model may serve several stages; register each variant once.
+        if reg.get(model).is_none() {
+            reg.register(
+                ModelSpec::named(model)?
+                    .with_policy(spec.knobs.policy)
+                    .with_discipline(spec.knobs.discipline)
+                    .with_solver(spec.knobs.solver),
+            )?;
+        }
+    }
+    let stage_refs: Vec<&str> = stages.iter().map(String::as_str).collect();
+    reg.register_pipeline(PipelineSpec::chain(name, &stage_refs, *apportionment))?;
+
+    let cfg = PipelineEngineCfg {
+        stage_cores: *stage_cores,
+        arbiter: spec.knobs.arbiter,
+        engine: SimEngineCfg {
+            latency_noise_cv: spec.noise_cv,
+            seed: spec.seed,
+            ..Default::default()
+        },
+        ..Default::default()
+    };
+    let mut engine = PipelineEngine::new(&reg, cfg).map_err(|e| e.to_string())?;
+    drive(&mut engine, name, &requests, spec.time_scale)?;
+
+    let snap = engine.snapshot(name).map_err(|e| e.to_string())?;
+    let tracker = engine
+        .tracker(name)
+        .ok_or_else(|| format!("no tracker for pipeline '{name}'"))?;
+    let core_ms = engine.core_ms(name).unwrap_or(0.0);
+    let span_ms = engine.clock().now_ms().max(1.0);
+    let (scaler_calls, scaler_ns) = engine.scaler_cost(name).unwrap_or((0, 0));
+    let (p50, p99) = tracker
+        .e2e_percentiles(&[50.0, 99.0])
+        .map(|v| (v[0], v[1]))
+        .unwrap_or((0.0, 0.0));
+    let stage_metrics: Vec<StageMetrics> = engine
+        .stage_stats(name)
+        .unwrap_or_default()
+        .into_iter()
+        .map(|s| StageMetrics {
+            stage: s.stage,
+            model: s.model,
+            submitted: s.submitted,
+            completed: s.completed,
+            dropped: s.dropped,
+            violations: s.violations,
+            mean_cores: s.core_ms / span_ms,
+            peak_cores: s.peak_cores,
+            peak_stolen: s.peak_stolen,
+        })
+        .collect();
+    let metrics = CellMetrics {
+        submitted: snap.submitted,
+        completed: snap.completed,
+        dropped: snap.dropped,
+        violations: snap.violations,
+        violation_rate_pct: tracker.violation_rate_pct(),
+        mean_e2e_ms: tracker.mean_e2e_ms(),
+        e2e_p50_ms: p50,
+        e2e_p99_ms: p99,
+        mean_queue_ms: tracker.mean_queue_ms(),
+        mean_cores: core_ms / span_ms,
+        peak_cores: engine.peak_cores(name).unwrap_or(0),
+        core_seconds: core_ms / 1_000.0,
+        scaler_calls,
+        peak_stolen: engine.peak_stolen(name).unwrap_or(0),
+        stages: stage_metrics,
+    };
+    Ok(CellResult {
+        id: spec.id(),
+        spec: spec.clone(),
+        metrics,
+        wall: CellWall {
+            run_ms: started.elapsed().as_secs_f64() * 1_000.0,
+            scaler_ns_total: scaler_ns,
         },
     })
 }
@@ -554,6 +711,63 @@ mod tests {
         let a = run_cell(&cell).unwrap();
         let b = run_cell(&cell).unwrap();
         assert_eq!(a.metrics, b.metrics);
+    }
+
+    fn pipeline_cell(arbiter: crate::arbiter::ArbiterChoice) -> CellSpec {
+        use crate::pipeline::Apportionment;
+        let workload = WorkloadSource::pipeline_chain(
+            &["yolov5n", "yolov5s"],
+            Apportionment::Percentile(95.0),
+            8,
+            12.0,
+            400.0,
+        );
+        let mut cell = tiny_cell(Policy::Sponge, QueueDiscipline::Edf);
+        cell.knobs.shared_cores = 16; // 8 cores × 2 stages
+        cell.knobs.arbiter = arbiter;
+        cell.workload = workload;
+        cell
+    }
+
+    #[test]
+    fn pipeline_cell_conserves_and_reports_stages() {
+        use crate::arbiter::ArbiterChoice;
+        let r = run_cell(&pipeline_cell(ArbiterChoice::Static)).unwrap();
+        assert!(r.id.starts_with("pipe2-p95/"), "{}", r.id);
+        assert!(r.id.contains("@16c"), "{}", r.id);
+        assert_eq!(r.metrics.submitted, 240); // 12 rps × 20 s
+        assert_eq!(r.metrics.submitted, r.metrics.completed + r.metrics.dropped);
+        assert!(r.metrics.completed > 0);
+        assert!(r.metrics.scaler_calls > 0);
+        assert_eq!(r.metrics.peak_stolen, 0, "static arbiter must not steal");
+        assert_eq!(r.metrics.stages.len(), 2);
+        assert_eq!(r.metrics.stages[0].model, "yolov5n");
+        assert_eq!(r.metrics.stages[1].model, "yolov5s");
+        assert!(r.metrics.stages.iter().all(|s| s.mean_cores > 0.0));
+        // Stage submissions never exceed pipeline admissions.
+        assert!(r.metrics.stages.iter().all(|s| s.submitted <= 240));
+    }
+
+    #[test]
+    fn pipeline_cell_deterministic_across_runs() {
+        use crate::arbiter::ArbiterChoice;
+        let cell = pipeline_cell(ArbiterChoice::Stealing);
+        let a = run_cell(&cell).unwrap();
+        let b = run_cell(&cell).unwrap();
+        assert_eq!(a.metrics, b.metrics);
+        assert!(a.id.ends_with("+steal"), "{}", a.id);
+    }
+
+    #[test]
+    fn pipeline_cell_guards_its_core_coordinate() {
+        use crate::arbiter::ArbiterChoice;
+        let mut cell = pipeline_cell(ArbiterChoice::Static);
+        cell.knobs.shared_cores = 48;
+        let err = run_cell(&cell).unwrap_err();
+        assert!(err.contains("calibrated for 16"), "{err}");
+        let mut live = pipeline_cell(ArbiterChoice::Static);
+        live.engine = EngineKind::Live;
+        assert!(run_cell(&live).unwrap_err().contains("sim engine only"));
     }
 
     #[test]

@@ -34,6 +34,10 @@
 //!   `SimEngine` / `LiveEngine` / `ReplicaSetEngine` (per-model replica
 //!   fleets with a two-level horizontal × vertical reconciler), scenario
 //!   driver
+//! * [`pipeline`] — DAGs of registered models under one end-to-end
+//!   dynamic SLO: percentile-aware slack apportionment into per-stage
+//!   deadlines, one vertically-scaling engine per stage
+//!   (`PipelineEngine`, the fourth `ServingEngine`)
 //! * [`experiment`] — spongebench: declarative experiment matrices over
 //!   the engine (workload × trace × policy knobs), deterministic JSON
 //!   reports, and the CI perf-regression gate
@@ -80,6 +84,7 @@ pub mod microbench;
 pub mod monitoring;
 pub mod network;
 pub mod perfmodel;
+pub mod pipeline;
 pub mod profiler;
 pub mod queue;
 pub mod runtime;

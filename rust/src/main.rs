@@ -70,9 +70,18 @@ fn command_help(cmd: &str) -> Option<&'static str> {
                      `make artifacts`); mock serves deterministic zeros
   --artifacts DIR    artifact directory for pjrt   [default: artifacts]
   --bind ADDR        listen address   [default: 127.0.0.1:8080]
+  --pipelines SPECS  semicolon-separated pipeline chains over the served
+                     models, each `name=modelA>modelB[@MODE]` where MODE
+                     is even | p<1-99> (slack apportionment, default p95);
+                     e.g. `det=yolov5n>yolov5s@p95;cls=resnet`. Served on
+                     POST /v1/pipelines/{name}/infer with the remaining
+                     end-to-end budget re-apportioned at every stage
+                     handoff; per-stage counters on
+                     GET /v1/pipelines/{name}/stats
 
 Routes: GET /v1/models | POST /v1/models/{name}/infer |
-        GET /v1/models/{name}/stats | POST /infer (default model) |
+        GET /v1/models/{name}/stats | POST /v1/pipelines/{name}/infer |
+        GET /v1/pipelines/{name}/stats | POST /infer (default model) |
         GET /metrics | GET /healthz
 "
         }
@@ -273,9 +282,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
     }
     .map_err(|e| anyhow::anyhow!("{e}"))?;
 
-    let gateway = Arc::new(
-        Gateway::from_parts(engine.coordinators()).context("building gateway")?,
-    );
+    let mut gateway =
+        Gateway::from_parts(engine.coordinators()).context("building gateway")?;
+    if let Some(flag) = args.get("pipelines") {
+        let specs = parse_pipelines(flag)?;
+        anyhow::ensure!(
+            !specs.is_empty(),
+            "--pipelines given but no pipeline specs parsed"
+        );
+        gateway = gateway.with_pipelines(specs).context("registering pipelines")?;
+    }
+    let gateway = Arc::new(gateway);
+    let pipeline_names = gateway.pipeline_names();
     let handle = sponge::server::serve(&bind, Arc::clone(&gateway))?;
     println!(
         "serving {} model(s) [{}] x{} replica(s) on http://{}",
@@ -284,14 +302,49 @@ fn cmd_serve(args: &Args) -> Result<()> {
         replicas,
         handle.addr()
     );
+    if !pipeline_names.is_empty() {
+        println!("pipelines: [{}]", pipeline_names.join(", "));
+    }
     println!(
         "routes: GET /v1/models | POST /v1/models/{{name}}/infer | \
-         GET /v1/models/{{name}}/stats | POST /infer | GET /metrics"
+         GET /v1/models/{{name}}/stats | POST /v1/pipelines/{{name}}/infer | \
+         GET /v1/pipelines/{{name}}/stats | POST /infer | GET /metrics"
     );
     // Run until killed; `engine` stays alive so the coordinators do too.
     loop {
         std::thread::sleep(std::time::Duration::from_secs(3600));
     }
+}
+
+/// Parse `--pipelines`: semicolon-separated `name=modelA>modelB[@MODE]`
+/// chains, MODE an [`Apportionment::name`]-shaped token (default `p95`).
+/// Stage-model existence is checked by [`Gateway::with_pipelines`] against
+/// the actually served models.
+fn parse_pipelines(flag: &str) -> Result<Vec<sponge::pipeline::PipelineSpec>> {
+    use sponge::pipeline::{Apportionment, PipelineSpec};
+    let mut out = Vec::new();
+    for part in flag.split(';').map(str::trim).filter(|s| !s.is_empty()) {
+        let (name, rest) = part.split_once('=').with_context(|| {
+            format!("pipeline '{part}': expected name=modelA>modelB[@mode]")
+        })?;
+        let (chain, mode) = match rest.rsplit_once('@') {
+            Some((c, m)) => (
+                c,
+                Apportionment::parse(m.trim()).map_err(|e| anyhow::anyhow!(e))?,
+            ),
+            None => (rest, Apportionment::Percentile(95.0)),
+        };
+        let models: Vec<&str> = chain
+            .split('>')
+            .map(str::trim)
+            .filter(|s| !s.is_empty())
+            .collect();
+        anyhow::ensure!(!models.is_empty(), "pipeline '{name}' has no stages");
+        let spec = PipelineSpec::chain(name.trim(), &models, mode);
+        spec.validate().map_err(|e| anyhow::anyhow!(e))?;
+        out.push(spec);
+    }
+    Ok(out)
 }
 
 fn cmd_bench(args: &Args) -> Result<()> {

@@ -1,0 +1,887 @@
+//! [`PipelineEngine`]: a [`ServingEngine`] serving registered
+//! [`PipelineSpec`] DAGs, one vertically-scaling [`SimEngine`] per stage.
+//!
+//! Each stage keeps the paper's full machinery — its own EDF queue,
+//! IP-solver autoscaler, and in-place vertical scaling — and every stage
+//! is a tenant (own guaranteed-floor partition of `stage_cores`) at one
+//! shared [`crate::arbiter::CoreArbiter`] ledger, so under
+//! [`ArbiterChoice::Stealing`] a pressured stage borrows idle cores
+//! *from other stages* of the same (or another) pipeline.
+//!
+//! A pipeline request carries one end-to-end dynamic SLO. On admission
+//! the remaining budget (SLO minus communication latency) is apportioned
+//! into a first-stage deadline ([`planner::apportion`] over the critical
+//! path of percentile-aware stage estimates); at every stage completion
+//! the *actual* remaining budget is re-apportioned over the stages still
+//! ahead, so an upstream overrun eats downstream slack instead of
+//! violating instantly. A stage budget clamped to zero (deadline already
+//! unreachable) resolves the request as an immediate violation without
+//! occupying a queue slot.
+
+use std::cmp::Reverse;
+use std::collections::{BinaryHeap, HashMap};
+use std::sync::Arc;
+
+use crate::arbiter::{ArbiterChoice, SharedArbiter};
+use crate::engine::{
+    Clock, Completion, DrainReport, EngineError, EngineRequest, ModelRegistry,
+    ModelSnapshot, ServingEngine, SimEngine, SimEngineCfg, VirtualClock,
+};
+use crate::monitoring::{Outcome, SloTracker};
+use crate::{Cores, Ms};
+
+use super::planner::{apportion, stage_estimate, Apportionment};
+use super::PipelineSpec;
+
+/// Pipeline-engine knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct PipelineEngineCfg {
+    /// Guaranteed-floor core budget per stage (every stage gets its own
+    /// partition of this size at the shared arbiter; total pipeline cores
+    /// = `stage_cores × stages`).
+    pub stage_cores: Cores,
+    /// Core-allocation flavour: `Static` pins each stage to its floor,
+    /// `Stealing` lets pressured stages borrow idle stage floors.
+    pub arbiter: ArbiterChoice,
+    /// Per-stage engine configuration (interval, noise, seed, cluster
+    /// timing). `shared_cores` is overridden by `stage_cores`;
+    /// `record_completions` is forced on (the handoff mechanism).
+    pub engine: SimEngineCfg,
+    /// Consecutive no-progress drain ticks before leftovers are force-
+    /// dropped (pipeline-level guard on top of each stage's own).
+    pub drain_stall_ticks: u64,
+}
+
+impl Default for PipelineEngineCfg {
+    fn default() -> Self {
+        PipelineEngineCfg {
+            stage_cores: 8,
+            arbiter: ArbiterChoice::Static,
+            engine: SimEngineCfg::default(),
+            drain_stall_ticks: 256,
+        }
+    }
+}
+
+/// Per-stage serving breakdown, read off a live or drained engine — the
+/// source of the `stages` array in spongebench reports and `/v1`-style
+/// stats.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StageStats {
+    pub stage: String,
+    pub model: String,
+    /// Requests handed to this stage (admissions + upstream handoffs).
+    pub submitted: u64,
+    pub completed: u64,
+    pub dropped: u64,
+    /// Stage-deadline violations (including drops).
+    pub violations: u64,
+    /// Allocated core-ms integral (resource usage).
+    pub core_ms: f64,
+    pub peak_cores: Cores,
+    /// High-water mark of cores borrowed beyond this stage's floor.
+    pub peak_stolen: Cores,
+}
+
+/// One stage's runtime: a single-model [`SimEngine`] plus the mapping
+/// from its request ids back to pipeline request ids.
+struct StageRt {
+    name: String,
+    model: String,
+    engine: SimEngine,
+    /// Stage-engine request id → pipeline request id.
+    map: HashMap<u64, u64>,
+    submitted: u64,
+}
+
+/// Per-request pipeline progress.
+struct Inflight {
+    sent_ms: Ms,
+    deadline_ms: Ms,
+    /// Uncompleted predecessor count per stage (a stage enters service
+    /// when its count hits zero).
+    pending_preds: Vec<u32>,
+    /// Latest predecessor completion per stage (the stage's entry time).
+    ready_at: Vec<Ms>,
+    completed: u32,
+    /// Stage submissions currently in flight (entry freed at zero).
+    outstanding: u32,
+    resolved: bool,
+}
+
+/// One registered pipeline's runtime state.
+struct PipelineRt {
+    spec: PipelineSpec,
+    topo: Vec<usize>,
+    /// Successor adjacency (edge targets per stage).
+    succ: Vec<Vec<usize>>,
+    /// Predecessor counts, cloned into each request's `pending_preds`.
+    preds: Vec<u32>,
+    /// Source stages (no predecessors) — where admissions enter.
+    sources: Vec<usize>,
+    /// Critical-path stage estimates from each stage to the sink
+    /// (`path_est[i][0]` is stage i's own estimate) — the apportionment
+    /// input.
+    path_est: Vec<Vec<Ms>>,
+    stages: Vec<StageRt>,
+    tracker: SloTracker,
+    accepted: u64,
+    inflight: HashMap<u64, Inflight>,
+}
+
+/// A pipeline arrival buffered until its virtual send time falls inside
+/// the tick window.
+struct Pending {
+    at_ms: Ms,
+    seq: u64,
+    pipeline: usize,
+    id: u64,
+    slo_ms: Ms,
+    comm_ms: Ms,
+}
+
+impl PartialEq for Pending {
+    fn eq(&self, other: &Self) -> bool {
+        self.at_ms == other.at_ms && self.seq == other.seq
+    }
+}
+
+impl Eq for Pending {}
+
+impl PartialOrd for Pending {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for Pending {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.at_ms
+            .total_cmp(&other.at_ms)
+            .then_with(|| self.seq.cmp(&other.seq))
+    }
+}
+
+/// DAGs of models served under one end-to-end dynamic SLO (virtual
+/// clock; the fourth [`ServingEngine`] implementation).
+pub struct PipelineEngine {
+    cfg: PipelineEngineCfg,
+    clock: VirtualClock,
+    pipelines: Vec<PipelineRt>,
+    pending: BinaryHeap<Reverse<Pending>>,
+    seq: u64,
+    next_id: u64,
+    next_tick_ms: Ms,
+    arbiter: SharedArbiter,
+}
+
+impl PipelineEngine {
+    /// Build from a registry carrying at least one registered pipeline.
+    /// Every stage of every pipeline becomes its own `stage_cores`
+    /// partition + tenant at one freshly built arbiter ledger.
+    pub fn new(
+        registry: &ModelRegistry,
+        cfg: PipelineEngineCfg,
+    ) -> Result<PipelineEngine, EngineError> {
+        let specs: Vec<PipelineSpec> = registry.pipelines().cloned().collect();
+        if specs.is_empty() {
+            return Err(EngineError::Rejected(
+                "registry has no registered pipelines".into(),
+            ));
+        }
+        if cfg.stage_cores < 1 {
+            return Err(EngineError::Rejected("stage_cores must be >= 1".into()));
+        }
+        let arbiter = cfg.arbiter.build();
+        let total_stages: u32 =
+            specs.iter().map(|s| s.stages.len() as u32).sum();
+        let mut pipelines = Vec::with_capacity(specs.len());
+        let mut ord: u64 = 0;
+        for spec in specs {
+            let topo = spec.topo_order().map_err(EngineError::Rejected)?;
+            let n = spec.stages.len();
+            let succ: Vec<Vec<usize>> = (0..n).map(|i| spec.successors(i)).collect();
+            let preds: Vec<u32> =
+                spec.stages.iter().map(|s| s.after.len() as u32).collect();
+            let sources: Vec<usize> =
+                (0..n).filter(|&i| spec.stages[i].after.is_empty()).collect();
+            // Stage latency estimates at the planning percentile (the
+            // even-split baseline never reads them, but they are cheap).
+            let pct = match spec.apportionment {
+                Apportionment::Percentile(p) => p,
+                Apportionment::EvenSplit => 50.0,
+            };
+            let mut stages = Vec::with_capacity(n);
+            let mut est = Vec::with_capacity(n);
+            for stage in &spec.stages {
+                ord += 1;
+                let model_spec = registry.get(&stage.model).cloned().ok_or_else(|| {
+                    EngineError::Rejected(format!(
+                        "pipeline '{}' stage '{}': model '{}' not registered",
+                        spec.name, stage.name, stage.model
+                    ))
+                })?;
+                est.push(stage_estimate(
+                    &model_spec.latency,
+                    cfg.stage_cores,
+                    cfg.engine.latency_noise_cv,
+                    pct,
+                ));
+                let mut reg = ModelRegistry::new();
+                reg.register(model_spec).map_err(EngineError::Rejected)?;
+                let mut cluster = cfg.engine.cluster;
+                if cfg.arbiter == ArbiterChoice::Stealing {
+                    // A stage may grow past its floor into borrowed
+                    // cores; widen the modeled node so the substrate
+                    // doesn't refuse what the lease granted.
+                    let fleet_cap = cfg.stage_cores.saturating_mul(total_stages);
+                    cluster.node_cores = cluster.node_cores.max(fleet_cap);
+                }
+                let stage_cfg = SimEngineCfg {
+                    // Distinct deterministic noise stream per stage.
+                    seed: cfg.engine.seed ^ ord.wrapping_mul(0x9e37_79b9_7f4a_7c15),
+                    cluster,
+                    shared_cores: cfg.stage_cores,
+                    start_ms: 0.0,
+                    warm_start: true,
+                    record_completions: true,
+                    ..cfg.engine
+                };
+                let tenant = {
+                    let mut arb = arbiter.lock().unwrap();
+                    let p = arb.add_partition(cfg.stage_cores);
+                    arb.register_tenant(p)
+                };
+                let engine = SimEngine::with_arbiter(
+                    &reg,
+                    stage_cfg,
+                    Arc::clone(&arbiter),
+                    vec![tenant],
+                )?;
+                stages.push(StageRt {
+                    name: stage.name.clone(),
+                    model: stage.model.clone(),
+                    engine,
+                    map: HashMap::new(),
+                    submitted: 0,
+                });
+            }
+            // Critical-path estimates, sink-to-source: the apportionment
+            // plans each stage against the costliest path still ahead.
+            let mut path_est: Vec<Vec<Ms>> = vec![Vec::new(); n];
+            for &i in topo.iter().rev() {
+                let tail: Vec<Ms> = succ[i]
+                    .iter()
+                    .max_by(|&&a, &&b| {
+                        let ta: Ms = path_est[a].iter().sum();
+                        let tb: Ms = path_est[b].iter().sum();
+                        ta.total_cmp(&tb)
+                    })
+                    .map(|&j| path_est[j].clone())
+                    .unwrap_or_default();
+                let mut p = Vec::with_capacity(1 + tail.len());
+                p.push(est[i]);
+                p.extend(tail);
+                path_est[i] = p;
+            }
+            pipelines.push(PipelineRt {
+                topo,
+                succ,
+                preds,
+                sources,
+                path_est,
+                stages,
+                tracker: SloTracker::new(cfg.engine.adaptation_interval_ms),
+                accepted: 0,
+                inflight: HashMap::new(),
+                spec,
+            });
+        }
+        Ok(PipelineEngine {
+            next_tick_ms: cfg.engine.adaptation_interval_ms,
+            cfg,
+            clock: VirtualClock::new(),
+            pipelines,
+            pending: BinaryHeap::new(),
+            seq: 0,
+            next_id: 0,
+            arbiter,
+        })
+    }
+
+    /// The arbiter every stage of every pipeline allocates through.
+    pub fn arbiter(&self) -> &SharedArbiter {
+        &self.arbiter
+    }
+
+    /// Pipeline-level SLO tracker (end-to-end outcomes).
+    pub fn tracker(&self, pipeline: &str) -> Option<&SloTracker> {
+        self.pipeline_idx(pipeline).map(|i| &self.pipelines[i].tracker)
+    }
+
+    /// Allocated core-ms integral summed over the pipeline's stages.
+    pub fn core_ms(&self, pipeline: &str) -> Option<f64> {
+        let p = &self.pipelines[self.pipeline_idx(pipeline)?];
+        Some(
+            p.stages
+                .iter()
+                .map(|s| s.engine.core_ms(&s.model).unwrap_or(0.0))
+                .sum(),
+        )
+    }
+
+    /// Peak concurrent core allocation (per-stage peaks summed).
+    pub fn peak_cores(&self, pipeline: &str) -> Option<Cores> {
+        let p = &self.pipelines[self.pipeline_idx(pipeline)?];
+        Some(
+            p.stages
+                .iter()
+                .map(|s| s.engine.peak_cores(&s.model).unwrap_or(0))
+                .sum(),
+        )
+    }
+
+    /// Largest cross-stage borrow any stage reached (0 under a static
+    /// arbiter).
+    pub fn peak_stolen(&self, pipeline: &str) -> Option<Cores> {
+        let p = &self.pipelines[self.pipeline_idx(pipeline)?];
+        Some(
+            p.stages
+                .iter()
+                .map(|s| s.engine.peak_stolen(&s.model).unwrap_or(0))
+                .max()
+                .unwrap_or(0),
+        )
+    }
+
+    /// Scaler-cost counters summed over stages (calls, wall ns).
+    pub fn scaler_cost(&self, pipeline: &str) -> Option<(u64, u64)> {
+        let p = &self.pipelines[self.pipeline_idx(pipeline)?];
+        let mut calls = 0u64;
+        let mut ns = 0u64;
+        for s in &p.stages {
+            let (c, n) = s.engine.scaler_cost(&s.model).unwrap_or((0, 0));
+            calls += c;
+            ns += n;
+        }
+        Some((calls, ns))
+    }
+
+    /// Per-stage breakdown in declaration order.
+    pub fn stage_stats(&self, pipeline: &str) -> Option<Vec<StageStats>> {
+        let p = &self.pipelines[self.pipeline_idx(pipeline)?];
+        Some(
+            p.stages
+                .iter()
+                .map(|s| {
+                    let snap = s.engine.snapshot(&s.model).unwrap_or_default();
+                    StageStats {
+                        stage: s.name.clone(),
+                        model: s.model.clone(),
+                        submitted: s.submitted,
+                        completed: snap.completed,
+                        dropped: snap.dropped,
+                        violations: snap.violations,
+                        core_ms: s.engine.core_ms(&s.model).unwrap_or(0.0),
+                        peak_cores: s.engine.peak_cores(&s.model).unwrap_or(0),
+                        peak_stolen: s.engine.peak_stolen(&s.model).unwrap_or(0),
+                    }
+                })
+                .collect(),
+        )
+    }
+
+    fn pipeline_idx(&self, name: &str) -> Option<usize> {
+        self.pipelines.iter().position(|p| p.spec.name == name)
+    }
+
+    fn unknown(&self, name: &str) -> EngineError {
+        EngineError::UnknownModel {
+            name: name.to_string(),
+            known: self.pipelines.iter().map(|p| p.spec.name.clone()).collect(),
+        }
+    }
+
+    fn total_accepted(&self) -> u64 {
+        self.pipelines.iter().map(|p| p.accepted).sum()
+    }
+
+    fn total_resolved(&self) -> u64 {
+        self.pipelines.iter().map(|p| p.tracker.total()).sum()
+    }
+
+    fn settled(&self) -> bool {
+        self.pending.is_empty() && self.pipelines.iter().all(|p| p.inflight.is_empty())
+    }
+
+    /// Admit one pipeline arrival: create the in-flight record and enter
+    /// every source stage at the server-arrival time (send + comm — the
+    /// dynamic-SLO subtraction).
+    fn admit(&mut self, pend: Pending) {
+        let pidx = pend.pipeline;
+        let t_adm = pend.at_ms + pend.comm_ms;
+        let n = self.pipelines[pidx].spec.stages.len();
+        let entry = Inflight {
+            sent_ms: pend.at_ms,
+            deadline_ms: pend.at_ms + pend.slo_ms,
+            pending_preds: self.pipelines[pidx].preds.clone(),
+            ready_at: vec![t_adm; n],
+            completed: 0,
+            outstanding: 0,
+            resolved: false,
+        };
+        self.pipelines[pidx].inflight.insert(pend.id, entry);
+        let sources = self.pipelines[pidx].sources.clone();
+        for s in sources {
+            self.enter_stage(pidx, s, pend.id, t_adm);
+        }
+    }
+
+    /// Hand request `rid` to stage `sidx` at time `t`: re-apportion the
+    /// actual remaining end-to-end budget over the critical path from
+    /// this stage and submit with the resulting stage deadline. A budget
+    /// clamped to zero resolves the request as an immediate violation.
+    fn enter_stage(&mut self, pidx: usize, sidx: usize, rid: u64, t: Ms) {
+        let p = &mut self.pipelines[pidx];
+        let (deadline, sent) = match p.inflight.get(&rid) {
+            Some(e) if !e.resolved => (e.deadline_ms, e.sent_ms),
+            _ => return,
+        };
+        let budgets = apportion(deadline - t, &p.path_est[sidx], p.spec.apportionment);
+        let budget = budgets[0];
+        if budget <= 0.0 {
+            let remove = {
+                let e = p.inflight.get_mut(&rid).expect("checked above");
+                e.resolved = true;
+                e.outstanding == 0
+            };
+            p.tracker.record(
+                t,
+                &Outcome {
+                    request_id: rid,
+                    e2e_ms: t - sent,
+                    queue_ms: t - sent,
+                    processing_ms: 0.0,
+                    violated: true,
+                    dropped: true,
+                },
+            );
+            if remove {
+                p.inflight.remove(&rid);
+            }
+            return;
+        }
+        let st = &mut p.stages[sidx];
+        let sid = st
+            .engine
+            .submit(&st.model, EngineRequest::new(budget, 0.0).at(t))
+            .expect("stage model is registered and budget is positive");
+        st.map.insert(sid, rid);
+        st.submitted += 1;
+        p.inflight.get_mut(&rid).expect("checked above").outstanding += 1;
+    }
+
+    /// Process one stage completion: propagate to ready successors (or
+    /// resolve the pipeline request at the sink / on a stage drop).
+    fn on_stage_done(&mut self, pidx: usize, sidx: usize, c: Completion) {
+        let Some(rid) = self.pipelines[pidx].stages[sidx].map.remove(&c.request_id)
+        else {
+            return;
+        };
+        let n = self.pipelines[pidx].spec.stages.len() as u32;
+        let p = &mut self.pipelines[pidx];
+        let mut to_enter: Vec<(usize, Ms)> = Vec::new();
+        let remove = {
+            let Some(e) = p.inflight.get_mut(&rid) else { return };
+            e.outstanding -= 1;
+            if e.resolved {
+                e.outstanding == 0
+            } else if c.dropped {
+                // A stage missed its apportioned deadline: the pipeline
+                // request is violated and dropped.
+                e.resolved = true;
+                p.tracker.record(
+                    c.at_ms,
+                    &Outcome {
+                        request_id: rid,
+                        e2e_ms: c.at_ms - e.sent_ms,
+                        queue_ms: c.at_ms - e.sent_ms,
+                        processing_ms: 0.0,
+                        violated: true,
+                        dropped: true,
+                    },
+                );
+                e.outstanding == 0
+            } else {
+                e.completed += 1;
+                for &j in &p.succ[sidx] {
+                    e.pending_preds[j] -= 1;
+                    if c.at_ms > e.ready_at[j] {
+                        e.ready_at[j] = c.at_ms;
+                    }
+                    if e.pending_preds[j] == 0 {
+                        to_enter.push((j, e.ready_at[j]));
+                    }
+                }
+                if e.completed == n {
+                    // Sink reached: the end-to-end outcome.
+                    e.resolved = true;
+                    p.tracker.record(
+                        c.at_ms,
+                        &Outcome {
+                            request_id: rid,
+                            e2e_ms: c.at_ms - e.sent_ms,
+                            queue_ms: 0.0,
+                            processing_ms: c.at_ms - e.sent_ms,
+                            violated: c.at_ms > e.deadline_ms + 1e-9,
+                            dropped: false,
+                        },
+                    );
+                    e.outstanding == 0
+                } else {
+                    false
+                }
+            }
+        };
+        if remove {
+            p.inflight.remove(&rid);
+        }
+        for (j, t) in to_enter {
+            self.enter_stage(pidx, j, rid, t);
+        }
+    }
+
+    /// Force-resolve everything still unresolved as dropped violations
+    /// (the drain stall guard — conservation over liveness).
+    fn force_drop_leftovers(&mut self) {
+        let now = self.clock.now_ms();
+        let mut pendings: Vec<Pending> = Vec::new();
+        while let Some(Reverse(pend)) = self.pending.pop() {
+            pendings.push(pend);
+        }
+        for pend in pendings {
+            self.pipelines[pend.pipeline].tracker.record(
+                now,
+                &Outcome {
+                    request_id: pend.id,
+                    e2e_ms: now - pend.at_ms,
+                    queue_ms: now - pend.at_ms,
+                    processing_ms: 0.0,
+                    violated: true,
+                    dropped: true,
+                },
+            );
+            self.pipelines[pend.pipeline].inflight.remove(&pend.id);
+        }
+        for p in &mut self.pipelines {
+            let mut rids: Vec<u64> = p.inflight.keys().copied().collect();
+            rids.sort_unstable();
+            for rid in rids {
+                let e = &p.inflight[&rid];
+                if !e.resolved {
+                    let sent = e.sent_ms;
+                    p.tracker.record(
+                        now,
+                        &Outcome {
+                            request_id: rid,
+                            e2e_ms: now - sent,
+                            queue_ms: now - sent,
+                            processing_ms: 0.0,
+                            violated: true,
+                            dropped: true,
+                        },
+                    );
+                }
+            }
+            p.inflight.clear();
+            for s in &mut p.stages {
+                s.map.clear();
+            }
+        }
+    }
+}
+
+impl ServingEngine for PipelineEngine {
+    fn kind(&self) -> &'static str {
+        "pipeline"
+    }
+
+    fn clock(&self) -> &dyn Clock {
+        &self.clock
+    }
+
+    /// The registered *pipeline* names (the submission targets).
+    fn models(&self) -> Vec<String> {
+        self.pipelines.iter().map(|p| p.spec.name.clone()).collect()
+    }
+
+    fn submit(&mut self, pipeline: &str, req: EngineRequest) -> Result<u64, EngineError> {
+        let pidx = self.pipeline_idx(pipeline).ok_or_else(|| self.unknown(pipeline))?;
+        if req.slo_ms <= 0.0 {
+            return Err(EngineError::Rejected(format!(
+                "slo_ms must be positive (got {})",
+                req.slo_ms
+            )));
+        }
+        let now = self.clock.now_ms();
+        let at = req.at_ms.unwrap_or(now).max(now);
+        let id = self.next_id;
+        self.next_id += 1;
+        self.seq += 1;
+        self.pipelines[pidx].accepted += 1;
+        self.pending.push(Reverse(Pending {
+            at_ms: at,
+            seq: self.seq,
+            pipeline: pidx,
+            id,
+            slo_ms: req.slo_ms,
+            comm_ms: req.comm_ms,
+        }));
+        Ok(id)
+    }
+
+    fn tick(&mut self) {
+        let t1 = self.next_tick_ms;
+        // 1. Admit arrivals whose send time falls inside this window.
+        while self
+            .pending
+            .peek()
+            .is_some_and(|Reverse(p)| p.at_ms <= t1)
+        {
+            let Reverse(pend) = self.pending.pop().unwrap();
+            self.admit(pend);
+        }
+        // 2. Tick stages in topological order: a predecessor's window-t1
+        //    completions are handed to successors *before* those tick, so
+        //    a handoff flows through the whole chain within one window.
+        for pidx in 0..self.pipelines.len() {
+            let topo = self.pipelines[pidx].topo.clone();
+            for sidx in topo {
+                let completions = {
+                    let st = &mut self.pipelines[pidx].stages[sidx];
+                    st.engine.tick();
+                    st.engine.take_completions(&st.model).unwrap_or_default()
+                };
+                for c in completions {
+                    self.on_stage_done(pidx, sidx, c);
+                }
+            }
+        }
+        self.clock.advance_to(t1);
+        self.next_tick_ms = t1 + self.cfg.engine.adaptation_interval_ms;
+    }
+
+    fn drain(&mut self) -> DrainReport {
+        let mut ticks = 0u64;
+        let mut stall = 0u64;
+        while !self.settled() {
+            let before = self.total_resolved();
+            self.tick();
+            ticks += 1;
+            stall = if self.total_resolved() == before { stall + 1 } else { 0 };
+            if stall >= self.cfg.drain_stall_ticks {
+                self.force_drop_leftovers();
+                break;
+            }
+        }
+        DrainReport {
+            submitted: self.total_accepted(),
+            resolved: self.total_resolved(),
+            ticks,
+        }
+    }
+
+    fn snapshot(&self, pipeline: &str) -> Result<ModelSnapshot, EngineError> {
+        let pidx = self.pipeline_idx(pipeline).ok_or_else(|| self.unknown(pipeline))?;
+        let p = &self.pipelines[pidx];
+        let mut queue_len = self
+            .pending
+            .iter()
+            .filter(|Reverse(pe)| pe.pipeline == pidx)
+            .count();
+        let mut cores = 0u32;
+        let mut batch = 0u32;
+        let mut granted = 0u32;
+        let mut lent = 0u32;
+        let mut stolen = 0u32;
+        for s in &p.stages {
+            let snap = s.engine.snapshot(&s.model).unwrap_or_default();
+            queue_len += snap.queue_len;
+            cores += snap.cores;
+            batch = batch.max(snap.batch);
+            granted += snap.cores_granted;
+            lent += snap.cores_lent;
+            stolen += snap.cores_stolen;
+        }
+        Ok(ModelSnapshot {
+            submitted: p.accepted,
+            completed: p.tracker.completed(),
+            dropped: p.tracker.dropped(),
+            violations: p.tracker.violations(),
+            queue_len,
+            cores,
+            batch,
+            cores_granted: granted,
+            cores_lent: lent,
+            cores_stolen: stolen,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::ModelSpec;
+
+    fn chain_registry(
+        models: &[&str],
+        apportionment: Apportionment,
+    ) -> ModelRegistry {
+        let mut reg = ModelRegistry::new();
+        for m in models {
+            reg.register(ModelSpec::named(m).unwrap()).unwrap();
+        }
+        reg.register_pipeline(PipelineSpec::chain("chain", models, apportionment))
+            .unwrap();
+        reg
+    }
+
+    fn load(engine: &mut PipelineEngine, n: usize, gap_ms: f64, slo: f64) {
+        for i in 0..n {
+            engine
+                .submit("chain", EngineRequest::new(slo, 10.0).at(i as f64 * gap_ms))
+                .unwrap();
+        }
+    }
+
+    #[test]
+    fn two_stage_chain_conserves_and_completes() {
+        let reg = chain_registry(
+            &["yolov5n", "yolov5s"],
+            Apportionment::Percentile(95.0),
+        );
+        let mut e = PipelineEngine::new(&reg, PipelineEngineCfg::default()).unwrap();
+        assert_eq!(e.models(), vec!["chain"]);
+        load(&mut e, 100, 50.0, 2_000.0);
+        let report = e.drain();
+        assert!(report.settled(), "{report:?}");
+        assert_eq!(report.submitted, 100);
+        let s = e.snapshot("chain").unwrap();
+        assert_eq!(s.submitted, 100);
+        assert_eq!(s.resolved(), 100);
+        assert!(s.completed > 0, "{s:?}");
+        // Every stage saw every non-short-circuited request.
+        let stages = e.stage_stats("chain").unwrap();
+        assert_eq!(stages.len(), 2);
+        assert_eq!(stages[0].submitted, 100);
+        assert!(stages[1].submitted <= 100);
+        assert!(stages[1].completed > 0, "{stages:?}");
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let run = || {
+            let reg = chain_registry(
+                &["yolov5n", "yolov5s"],
+                Apportionment::Percentile(95.0),
+            );
+            let cfg = PipelineEngineCfg {
+                engine: SimEngineCfg {
+                    latency_noise_cv: 0.1,
+                    ..Default::default()
+                },
+                ..Default::default()
+            };
+            let mut e = PipelineEngine::new(&reg, cfg).unwrap();
+            load(&mut e, 200, 25.0, 1_500.0);
+            e.drain();
+            (e.snapshot("chain").unwrap(), e.core_ms("chain").unwrap())
+        };
+        assert_eq!(run(), run());
+    }
+
+    #[test]
+    fn hopeless_requests_violate_immediately_without_queueing() {
+        // comm > slo: the budget apportions to zero at admission and the
+        // request resolves as a drop before touching a stage queue.
+        let reg = chain_registry(&["yolov5n", "yolov5s"], Apportionment::EvenSplit);
+        let mut e = PipelineEngine::new(&reg, PipelineEngineCfg::default()).unwrap();
+        e.submit("chain", EngineRequest::new(5.0, 100.0).at(0.0)).unwrap();
+        let report = e.drain();
+        assert!(report.settled(), "{report:?}");
+        let s = e.snapshot("chain").unwrap();
+        assert_eq!(s.dropped, 1);
+        assert_eq!(s.violations, 1);
+        let stages = e.stage_stats("chain").unwrap();
+        assert_eq!(stages[0].submitted, 0, "never entered a stage queue");
+    }
+
+    #[test]
+    fn unknown_pipeline_and_bad_slo_rejected() {
+        let reg = chain_registry(&["yolov5n", "yolov5s"], Apportionment::EvenSplit);
+        let mut e = PipelineEngine::new(&reg, PipelineEngineCfg::default()).unwrap();
+        let err = e.submit("ghost", EngineRequest::new(1_000.0, 0.0)).unwrap_err();
+        match err {
+            EngineError::UnknownModel { known, .. } => {
+                assert_eq!(known, vec!["chain"]);
+            }
+            other => panic!("expected UnknownModel, got {other:?}"),
+        }
+        assert!(e
+            .submit("chain", EngineRequest::new(0.0, 0.0))
+            .is_err());
+        // A registry without pipelines is rejected outright.
+        let empty = ModelRegistry::from_names("resnet").unwrap();
+        assert!(PipelineEngine::new(&empty, PipelineEngineCfg::default()).is_err());
+    }
+
+    #[test]
+    fn stealing_lends_cores_between_stages() {
+        // Heavy stage (yolov5s) behind a light one: under the stealing
+        // arbiter the pressured stage borrows the light stage's idle
+        // floor cores.
+        let reg = chain_registry(
+            &["yolov5n", "yolov5s"],
+            Apportionment::Percentile(95.0),
+        );
+        let cfg = PipelineEngineCfg {
+            stage_cores: 8,
+            arbiter: ArbiterChoice::Stealing,
+            ..Default::default()
+        };
+        let mut e = PipelineEngine::new(&reg, cfg).unwrap();
+        load(&mut e, 1_000, 5.0, 1_200.0); // 200 rps: past an 8-core floor
+        let report = e.drain();
+        assert!(report.settled(), "{report:?}");
+        assert!(
+            e.peak_stolen("chain").unwrap() > 0,
+            "no cross-stage stealing happened"
+        );
+    }
+
+    #[test]
+    fn diamond_dag_joins_and_conserves() {
+        let mut reg = ModelRegistry::from_names("resnet,yolov5n,yolov5s").unwrap();
+        reg.register_pipeline(
+            PipelineSpec::new("diamond", Apportionment::Percentile(95.0))
+                .stage("pre", "yolov5n", &[])
+                .stage("left", "resnet", &["pre"])
+                .stage("right", "yolov5s", &["pre"])
+                .stage("post", "yolov5n", &["left", "right"]),
+        )
+        .unwrap();
+        let mut e = PipelineEngine::new(&reg, PipelineEngineCfg::default()).unwrap();
+        for i in 0..50 {
+            e.submit("diamond", EngineRequest::new(3_000.0, 10.0).at(i as f64 * 100.0))
+                .unwrap();
+        }
+        let report = e.drain();
+        assert!(report.settled(), "{report:?}");
+        let s = e.snapshot("diamond").unwrap();
+        assert_eq!(s.resolved(), 50);
+        assert!(s.completed > 0, "{s:?}");
+        let stages = e.stage_stats("diamond").unwrap();
+        // The join stage runs only after both branches complete.
+        assert!(stages[3].submitted <= stages[1].completed.min(stages[2].completed));
+    }
+}

@@ -1,0 +1,257 @@
+//! Pipeline serving: DAGs of registered models with one end-to-end
+//! dynamic SLO.
+//!
+//! Real inference services are multi-stage (retrieval → model →
+//! post-process) and the SLO binds the *pipeline*, not one model (Vortex,
+//! Orloj — PAPERS.md). This module generalizes the paper's dynamic-SLO
+//! machinery to stage graphs:
+//!
+//! * [`PipelineSpec`] — a named DAG of already-registered model variants,
+//!   validated acyclic at registration time
+//!   ([`crate::engine::ModelRegistry::register_pipeline`]).
+//! * [`planner`] — slack apportionment: each stage's per-request deadline
+//!   is derived from the remaining end-to-end budget minus the expected
+//!   (percentile-aware, [`crate::perfmodel`]-fed) latency of the stages
+//!   still downstream, re-apportioned at every stage handoff so upstream
+//!   overruns eat downstream slack instead of violating instantly.
+//! * [`PipelineEngine`] — a [`crate::engine::ServingEngine`] that runs
+//!   one vertically-scaling [`crate::engine::SimEngine`] per stage over
+//!   the existing EDF queues, with every stage a tenant of one shared
+//!   [`crate::arbiter::CoreArbiter`] ledger so cores can be stolen
+//!   *between stages* under pressure.
+//!
+//! The HTTP face is `POST /v1/pipelines/{name}/infer` + `GET
+//! /v1/pipelines/{name}/stats` ([`crate::server`]); spongebench's
+//! `pipeline` workload axis measures percentile-aware vs even-split
+//! apportionment at equal total cores.
+
+mod engine;
+pub mod planner;
+
+pub use engine::{PipelineEngine, PipelineEngineCfg, StageStats};
+pub use planner::{apportion, normal_quantile, stage_estimate, Apportionment};
+
+/// One stage of a pipeline: a named slot served by a registered model
+/// variant, runnable once every `after` stage has completed.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PipelineStage {
+    /// Stage name, unique within the pipeline.
+    pub name: String,
+    /// Registered model variant serving this stage.
+    pub model: String,
+    /// Names of the stages this one waits for (empty = source stage).
+    pub after: Vec<String>,
+}
+
+/// A named DAG of registered models sharing one end-to-end SLO.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PipelineSpec {
+    pub name: String,
+    pub stages: Vec<PipelineStage>,
+    /// How the remaining end-to-end budget is split across the stages
+    /// still ahead of a request.
+    pub apportionment: Apportionment,
+}
+
+impl PipelineSpec {
+    /// An empty pipeline; add stages with [`PipelineSpec::stage`].
+    pub fn new(name: &str, apportionment: Apportionment) -> PipelineSpec {
+        PipelineSpec { name: name.to_string(), stages: Vec::new(), apportionment }
+    }
+
+    /// Append a stage (builder style). `after` lists stage *names* this
+    /// stage depends on.
+    pub fn stage(mut self, name: &str, model: &str, after: &[&str]) -> PipelineSpec {
+        self.stages.push(PipelineStage {
+            name: name.to_string(),
+            model: model.to_string(),
+            after: after.iter().map(|s| s.to_string()).collect(),
+        });
+        self
+    }
+
+    /// A linear chain over `models`, each stage feeding the next. Stage
+    /// names are the model names (disambiguated with an ordinal suffix if
+    /// a model appears twice).
+    pub fn chain(name: &str, models: &[&str], apportionment: Apportionment) -> PipelineSpec {
+        let mut spec = PipelineSpec::new(name, apportionment);
+        let mut prev: Option<String> = None;
+        for (i, model) in models.iter().enumerate() {
+            let dup = models[..i].contains(model);
+            let stage_name =
+                if dup { format!("{model}#{i}") } else { (*model).to_string() };
+            spec.stages.push(PipelineStage {
+                name: stage_name.clone(),
+                model: (*model).to_string(),
+                after: prev.iter().cloned().collect(),
+            });
+            prev = Some(stage_name);
+        }
+        spec
+    }
+
+    /// Index of the stage named `name`.
+    pub fn stage_index(&self, name: &str) -> Option<usize> {
+        self.stages.iter().position(|s| s.name == name)
+    }
+
+    /// Indices of the stages that depend on stage `idx` (edge targets).
+    pub fn successors(&self, idx: usize) -> Vec<usize> {
+        let name = &self.stages[idx].name;
+        self.stages
+            .iter()
+            .enumerate()
+            .filter(|(_, s)| s.after.iter().any(|a| a == name))
+            .map(|(i, _)| i)
+            .collect()
+    }
+
+    /// Structural validation: non-empty, unique stage names, every
+    /// dependency references an existing stage (not itself), and the
+    /// graph is acyclic. Model registration is checked separately by
+    /// [`crate::engine::ModelRegistry::register_pipeline`].
+    pub fn validate(&self) -> Result<(), String> {
+        if self.name.trim().is_empty() {
+            return Err("pipeline name must be non-empty".into());
+        }
+        if self.stages.is_empty() {
+            return Err(format!("pipeline '{}' has no stages", self.name));
+        }
+        for (i, s) in self.stages.iter().enumerate() {
+            if s.name.trim().is_empty() {
+                return Err(format!("pipeline '{}': stage {i} has no name", self.name));
+            }
+            if self.stages[..i].iter().any(|p| p.name == s.name) {
+                return Err(format!(
+                    "pipeline '{}': duplicate stage name '{}'",
+                    self.name, s.name
+                ));
+            }
+        }
+        for s in &self.stages {
+            for dep in &s.after {
+                if dep == &s.name {
+                    return Err(format!(
+                        "pipeline '{}': stage '{}' depends on itself",
+                        self.name, s.name
+                    ));
+                }
+                if self.stage_index(dep).is_none() {
+                    return Err(format!(
+                        "pipeline '{}': stage '{}' depends on unknown stage '{dep}'",
+                        self.name, s.name
+                    ));
+                }
+            }
+        }
+        self.topo_order().map(|_| ())
+    }
+
+    /// Deterministic topological order (Kahn's algorithm; ties broken by
+    /// declaration order). `Err` names the stages stuck on a cycle.
+    pub fn topo_order(&self) -> Result<Vec<usize>, String> {
+        let n = self.stages.len();
+        let mut indegree = vec![0usize; n];
+        for (i, s) in self.stages.iter().enumerate() {
+            // Count only resolvable deps; unknown names are reported by
+            // `validate` with a better message.
+            indegree[i] = s.after.iter().filter(|d| self.stage_index(d).is_some()).count();
+        }
+        let mut order = Vec::with_capacity(n);
+        let mut ready: Vec<usize> =
+            (0..n).filter(|&i| indegree[i] == 0).collect();
+        while let Some(i) = ready.first().copied() {
+            ready.remove(0);
+            order.push(i);
+            for j in self.successors(i) {
+                indegree[j] -= 1;
+                if indegree[j] == 0 {
+                    // Keep `ready` in declaration order for determinism.
+                    let pos = ready.partition_point(|&k| k < j);
+                    ready.insert(pos, j);
+                }
+            }
+        }
+        if order.len() < n {
+            let stuck: Vec<&str> = (0..n)
+                .filter(|i| !order.contains(i))
+                .map(|i| self.stages[i].name.as_str())
+                .collect();
+            return Err(format!(
+                "pipeline '{}': dependency cycle through stages [{}]",
+                self.name,
+                stuck.join(", ")
+            ));
+        }
+        Ok(order)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chain_builds_a_linear_dag() {
+        let p = PipelineSpec::chain(
+            "det",
+            &["yolov5n", "yolov5s", "resnet"],
+            Apportionment::Percentile(95.0),
+        );
+        p.validate().unwrap();
+        assert_eq!(p.topo_order().unwrap(), vec![0, 1, 2]);
+        assert_eq!(p.stages[1].after, vec!["yolov5n"]);
+        assert_eq!(p.successors(0), vec![1]);
+        assert!(p.successors(2).is_empty());
+    }
+
+    #[test]
+    fn chain_disambiguates_repeated_models() {
+        let p = PipelineSpec::chain(
+            "twice",
+            &["resnet", "resnet"],
+            Apportionment::EvenSplit,
+        );
+        p.validate().unwrap();
+        assert_eq!(p.stages[1].name, "resnet#1");
+        assert_eq!(p.stages[1].model, "resnet");
+    }
+
+    #[test]
+    fn diamond_topo_is_deterministic() {
+        let p = PipelineSpec::new("diamond", Apportionment::EvenSplit)
+            .stage("src", "resnet", &[])
+            .stage("left", "yolov5n", &["src"])
+            .stage("right", "yolov5s", &["src"])
+            .stage("sink", "resnet", &["left", "right"]);
+        p.validate().unwrap();
+        assert_eq!(p.topo_order().unwrap(), vec![0, 1, 2, 3]);
+        assert_eq!(p.successors(0), vec![1, 2]);
+    }
+
+    #[test]
+    fn validation_rejects_cycles_and_bad_refs() {
+        let cyclic = PipelineSpec::new("loop", Apportionment::EvenSplit)
+            .stage("a", "resnet", &["b"])
+            .stage("b", "resnet", &["a"]);
+        let err = cyclic.validate().unwrap_err();
+        assert!(err.contains("cycle"), "{err}");
+
+        let dangling = PipelineSpec::new("dangle", Apportionment::EvenSplit)
+            .stage("a", "resnet", &["ghost"]);
+        assert!(dangling.validate().unwrap_err().contains("ghost"));
+
+        let selfy = PipelineSpec::new("selfy", Apportionment::EvenSplit)
+            .stage("a", "resnet", &["a"]);
+        assert!(selfy.validate().unwrap_err().contains("itself"));
+
+        assert!(PipelineSpec::new("empty", Apportionment::EvenSplit)
+            .validate()
+            .is_err());
+
+        let dup = PipelineSpec::new("dup", Apportionment::EvenSplit)
+            .stage("a", "resnet", &[])
+            .stage("a", "yolov5s", &[]);
+        assert!(dup.validate().unwrap_err().contains("duplicate"));
+    }
+}

@@ -1,0 +1,268 @@
+//! Slack apportionment: splitting a request's remaining end-to-end budget
+//! into per-stage deadlines.
+//!
+//! The paper's dynamic-SLO math subtracts observed communication latency
+//! from a single model's budget; a pipeline generalizes the subtraction —
+//! each stage's deadline is the end-to-end deadline minus the *expected*
+//! latency of everything downstream. Orloj's observation (PAPERS.md) is
+//! that the expectation must come from the latency *distribution*, not a
+//! point estimate: a p95-aware stage budget reserves room for downstream
+//! tail latency instead of planning on the mean and violating whenever a
+//! later stage draws a slow sample. Budgets are re-apportioned at every
+//! stage handoff from the *actual* remaining budget, so an upstream
+//! overrun eats downstream slack instead of violating instantly.
+
+use crate::perfmodel::LatencyModel;
+use crate::{Cores, Ms};
+
+/// How a pipeline splits the remaining end-to-end budget across the
+/// stages still ahead of a request.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Apportionment {
+    /// Equal share per remaining stage, blind to stage cost — the naive
+    /// baseline the percentile-aware planner is measured against.
+    EvenSplit,
+    /// Proportional to each remaining stage's expected latency at the
+    /// given percentile of the engine's lognormal noise distribution
+    /// (`Percentile(50.0)` plans on the median — a point estimate;
+    /// `Percentile(95.0)` reserves tail headroom).
+    Percentile(f64),
+}
+
+impl Apportionment {
+    /// Short stable name used in cell ids and CLI specs: `even`, `p50`,
+    /// `p95`, ...
+    pub fn name(&self) -> String {
+        match self {
+            Apportionment::EvenSplit => "even".to_string(),
+            Apportionment::Percentile(p) => format!("p{:.0}", p),
+        }
+    }
+
+    /// Parse a [`Apportionment::name`]-shaped token (`even` | `p<0-100>`).
+    pub fn parse(s: &str) -> Result<Apportionment, String> {
+        if s == "even" {
+            return Ok(Apportionment::EvenSplit);
+        }
+        if let Some(num) = s.strip_prefix('p') {
+            if let Ok(p) = num.parse::<f64>() {
+                if (0.0..100.0).contains(&p) && p > 0.0 {
+                    return Ok(Apportionment::Percentile(p));
+                }
+            }
+        }
+        Err(format!("unknown apportionment '{s}' (even | p<1-99>, e.g. p95)"))
+    }
+}
+
+/// Split `remaining_ms` of end-to-end budget across the stages whose
+/// expected latencies are `est_ms` (ordered first-to-last remaining
+/// stage). Guarantees, for every input:
+///
+/// * every returned budget is `>= 0` (a negative remaining budget clamps
+///   to zero shares — the caller counts that as an immediate violation);
+/// * the budgets sum to `<= remaining_ms.max(0)`, so a request that meets
+///   every stage deadline meets its end-to-end deadline.
+///
+/// With positive slack (`remaining > Σ est`) the percentile mode gives
+/// each stage its estimate plus a proportional slice of the slack; in
+/// deficit it shrinks every stage proportionally, so a recoverable
+/// upstream overrun squeezes downstream budgets instead of pushing one
+/// stage's deadline into the past.
+pub fn apportion(remaining_ms: Ms, est_ms: &[Ms], mode: Apportionment) -> Vec<Ms> {
+    let n = est_ms.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let remaining = remaining_ms.max(0.0);
+    let total: Ms = est_ms.iter().sum();
+    match mode {
+        // Even split, or percentile over degenerate (all-zero) estimates.
+        Apportionment::EvenSplit => vec![remaining / n as f64; n],
+        Apportionment::Percentile(_) if total <= 0.0 => vec![remaining / n as f64; n],
+        Apportionment::Percentile(_) => {
+            let slack = remaining - total;
+            est_ms
+                .iter()
+                .map(|&e| {
+                    let share = e / total;
+                    if slack >= 0.0 {
+                        (e + slack * share).max(0.0)
+                    } else {
+                        remaining * share
+                    }
+                })
+                .collect()
+        }
+    }
+}
+
+/// Expected single-request latency of one stage at `percentile` of the
+/// engine's latency-noise distribution: the fitted model's `l(1, cores)`
+/// scaled by the lognormal quantile matching the simulator's mean-1
+/// multiplicative noise (`sigma = sqrt(ln(1 + cv^2))`, median `< 1`).
+/// `noise_cv = 0` collapses every percentile to the deterministic model.
+pub fn stage_estimate(
+    model: &LatencyModel,
+    cores: Cores,
+    noise_cv: f64,
+    percentile: f64,
+) -> Ms {
+    let base = model.latency_ms(1, cores.max(1));
+    if noise_cv <= 0.0 {
+        return base;
+    }
+    let sigma = (noise_cv * noise_cv + 1.0).ln().sqrt();
+    let z = normal_quantile(percentile / 100.0);
+    base * (-sigma * sigma / 2.0 + sigma * z).exp()
+}
+
+/// Inverse standard-normal CDF (Acklam's rational approximation, abs
+/// error < 1.15e-9 — far below the latency model's fit error).
+pub fn normal_quantile(p: f64) -> f64 {
+    assert!((0.0..1.0).contains(&p) && p > 0.0, "p in (0,1), got {p}");
+    const A: [f64; 6] = [
+        -3.969683028665376e+01,
+        2.209460984245205e+02,
+        -2.759285104469687e+02,
+        1.383577518672690e+02,
+        -3.066479806614716e+01,
+        2.506628277459239e+00,
+    ];
+    const B: [f64; 5] = [
+        -5.447609879822406e+01,
+        1.615858368580409e+02,
+        -1.556989798598866e+02,
+        6.680131188771972e+01,
+        -1.328068155288572e+01,
+    ];
+    const C: [f64; 6] = [
+        -7.784894002430293e-03,
+        -3.223964580411365e-01,
+        -2.400758277161838e+00,
+        -2.549732539343734e+00,
+        4.374664141464968e+00,
+        2.938163982698783e+00,
+    ];
+    const D: [f64; 4] = [
+        7.784695709041462e-03,
+        3.224671290700398e-01,
+        2.445134137142996e+00,
+        3.754408661907416e+00,
+    ];
+    const P_LOW: f64 = 0.02425;
+    if p < P_LOW {
+        let q = (-2.0 * p.ln()).sqrt();
+        (((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    } else if p <= 1.0 - P_LOW {
+        let q = p - 0.5;
+        let r = q * q;
+        (((((A[0] * r + A[1]) * r + A[2]) * r + A[3]) * r + A[4]) * r + A[5]) * q
+            / (((((B[0] * r + B[1]) * r + B[2]) * r + B[3]) * r + B[4]) * r + 1.0)
+    } else {
+        let q = (-2.0 * (1.0 - p).ln()).sqrt();
+        -(((((C[0] * q + C[1]) * q + C[2]) * q + C[3]) * q + C[4]) * q + C[5])
+            / ((((D[0] * q + D[1]) * q + D[2]) * q + D[3]) * q + 1.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::run_prop;
+
+    #[test]
+    fn quantile_matches_known_values() {
+        assert!(normal_quantile(0.5).abs() < 1e-8);
+        assert!((normal_quantile(0.95) - 1.6449).abs() < 1e-3);
+        assert!((normal_quantile(0.99) - 2.3263).abs() < 1e-3);
+        assert!((normal_quantile(0.05) + 1.6449).abs() < 1e-3);
+        // Tail branches are finite and monotone.
+        assert!(normal_quantile(0.001) < normal_quantile(0.01));
+        assert!(normal_quantile(0.999) > normal_quantile(0.99));
+    }
+
+    #[test]
+    fn names_parse_roundtrip() {
+        for mode in [
+            Apportionment::EvenSplit,
+            Apportionment::Percentile(50.0),
+            Apportionment::Percentile(95.0),
+        ] {
+            assert_eq!(Apportionment::parse(&mode.name()).unwrap(), mode);
+        }
+        assert!(Apportionment::parse("zeus").is_err());
+        assert!(Apportionment::parse("p0").is_err());
+        assert!(Apportionment::parse("p100").is_err());
+    }
+
+    #[test]
+    fn even_split_is_uniform() {
+        let b = apportion(900.0, &[10.0, 500.0, 20.0], Apportionment::EvenSplit);
+        assert_eq!(b, vec![300.0, 300.0, 300.0]);
+    }
+
+    #[test]
+    fn percentile_split_tracks_stage_cost() {
+        let b = apportion(
+            1_000.0,
+            &[100.0, 300.0],
+            Apportionment::Percentile(95.0),
+        );
+        // Each stage gets its estimate plus a proportional slack slice.
+        assert!((b[0] - 250.0).abs() < 1e-9, "{b:?}");
+        assert!((b[1] - 750.0).abs() < 1e-9, "{b:?}");
+        assert!(((b[0] + b[1]) - 1_000.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn deficit_shrinks_proportionally_and_negative_clamps() {
+        // Remaining budget below the estimate sum: shrink, never negative.
+        let b = apportion(200.0, &[100.0, 300.0], Apportionment::Percentile(95.0));
+        assert!((b[0] - 50.0).abs() < 1e-9 && (b[1] - 150.0).abs() < 1e-9, "{b:?}");
+        // Already-violated request: zero budgets, not negative ones.
+        for mode in [Apportionment::EvenSplit, Apportionment::Percentile(95.0)] {
+            let b = apportion(-50.0, &[100.0, 300.0], mode);
+            assert!(b.iter().all(|&x| x == 0.0), "{b:?}");
+        }
+    }
+
+    #[test]
+    fn stage_estimate_orders_percentiles() {
+        let m = LatencyModel::yolov5s();
+        let p50 = stage_estimate(&m, 8, 0.1, 50.0);
+        let p95 = stage_estimate(&m, 8, 0.1, 95.0);
+        let exact = stage_estimate(&m, 8, 0.0, 95.0);
+        assert!(p50 < p95, "median must undercut the tail: {p50} vs {p95}");
+        assert_eq!(exact, m.latency_ms(1, 8), "cv=0 collapses to the model");
+        // The lognormal is mean-1: the median sits just below the model.
+        assert!(p50 < m.latency_ms(1, 8));
+    }
+
+    #[test]
+    fn prop_apportion_sums_within_budget_and_non_negative() {
+        run_prop("apportion-bounded", 300, |g| {
+            let n = 1 + (g.rng.next_u64() % 5) as usize;
+            let est: Vec<f64> = (0..n).map(|_| g.f64(0.0, 800.0)).collect();
+            let remaining = g.f64(-500.0, 3_000.0);
+            let mode = if g.bool() {
+                Apportionment::EvenSplit
+            } else {
+                Apportionment::Percentile(g.f64(1.0, 99.0))
+            };
+            let b = apportion(remaining, &est, mode);
+            crate::prop_assert!(b.len() == n, "length mismatch");
+            crate::prop_assert!(
+                b.iter().all(|&x| x >= 0.0),
+                "negative stage budget: {b:?}"
+            );
+            let sum: f64 = b.iter().sum();
+            crate::prop_assert!(
+                sum <= remaining.max(0.0) + 1e-6,
+                "budgets {sum} exceed remaining {remaining}"
+            );
+            Ok(())
+        });
+    }
+}

@@ -10,9 +10,19 @@
 //! | `/v1/models` | GET | — | `200` `{"default": name, "models": [{"name", "replicas", "queue_len", "cores", "batch"}]}` | — |
 //! | `/v1/models/{name}/infer` | POST | infer JSON (below) | `200` infer response (served by the least-loaded replica) | `400` bad JSON/body, `404` unknown model, `504` timeout |
 //! | `/v1/models/{name}/stats` | GET | — | `200` `{"received", "completed", "dropped", "violated", "queue_len", "cores", "batch", "model_refits", "cores_granted", "cores_lent", "cores_stolen", "replicas": [{"replica", "received", "completed", "dropped", "violated", "queue_len", "cores", "batch", "cores_granted", "cores_lent", "cores_stolen"}]}` — top level is fleet-aggregated, `replicas` is per replica; the `cores_*` triple is the CoreArbiter lease accounting | `404` unknown model |
+//! | `/v1/pipelines/{name}/infer` | POST | infer JSON (below) | `200` pipeline infer response: `{"id", "pipeline", "e2e_ms", "violated", "dropped", "logits", "stages": [{"stage", "model", "deadline_ms", "queue_ms", "processing_ms", "server_ms", "violated", "dropped"}]}` | `400` bad JSON/body, `404` unknown pipeline, `504` timeout |
+//! | `/v1/pipelines/{name}/stats` | GET | — | `200` `{"pipeline", "apportionment", "received", "completed", "dropped", "violated", "stages": [{"stage", "model", "served", "violations", "mean_ms"}]}` | `404` unknown pipeline |
 //! | `/infer` | POST | infer JSON | `200` — legacy alias for the **default** model | as above |
 //! | `/metrics` | GET | — | `200` Prometheus text (default model's registry) | — |
 //! | `/healthz` | GET | — | `200` `ok` | — |
+//!
+//! **Pipeline semantics**: a pipeline (`serve --pipelines`) runs its
+//! stages in topological order against the stage models' own replica
+//! fleets, re-apportioning the remaining end-to-end budget (`slo_ms -
+//! comm_ms - elapsed`) into a per-stage deadline at every handoff
+//! ([`crate::pipeline::planner`]). A stage whose remaining budget is
+//! already gone still runs (the live surface returns answers, unlike the
+//! simulator), but the response is marked `violated`.
 //!
 //! **Infer request body** (`application/json`):
 //! `{"slo_ms": float, "comm_ms": float, "image": [float; image_len]}` —
@@ -25,20 +35,24 @@
 //!
 //! **Error contract**: every error is `application/json` of the shape
 //! `{"error": "..."}`; `404`s for unknown routes additionally carry
-//! `"routes": [...]` (the valid route list) and unknown models carry
-//! `"models": [...]` (the registered names). Malformed JSON bodies are
-//! `400`, never a dropped connection.
+//! `"routes": [...]` (the valid route list), unknown models carry
+//! `"models": [...]` (the registered names), and unknown pipelines carry
+//! `"pipelines": [...]` (the registered pipeline names) — the resource
+//! class is never ambiguous. Malformed JSON bodies are `400`, never a
+//! dropped connection.
 
 use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{mpsc, Arc};
-use std::time::Duration;
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
 use crate::coordinator::{Coordinator, LiveRequest};
+use crate::perfmodel::LatencyModel;
+use crate::pipeline::{apportion, PipelineSpec};
 use crate::util::json::Json;
 
 /// The route list served with unknown-route 404s.
@@ -48,6 +62,8 @@ const ROUTES: &[&str] = &[
     "GET /v1/models",
     "POST /v1/models/{name}/infer",
     "GET /v1/models/{name}/stats",
+    "POST /v1/pipelines/{name}/infer",
+    "GET /v1/pipelines/{name}/stats",
     "POST /infer (legacy alias for the default model)",
 ];
 
@@ -58,6 +74,34 @@ const ROUTES: &[&str] = &[
 pub struct Gateway {
     models: Vec<(String, Vec<Arc<Coordinator>>)>,
     by_name: BTreeMap<String, usize>,
+    pipelines: Vec<PipelineRoute>,
+    pipes_by_name: BTreeMap<String, usize>,
+}
+
+/// One served pipeline: the validated spec, its serial execution order,
+/// per-stage latency models feeding the slack apportionment, and the
+/// served-traffic counters behind `GET /v1/pipelines/{name}/stats`.
+struct PipelineRoute {
+    spec: PipelineSpec,
+    /// Topological order — the stages run serially in this order.
+    order: Vec<usize>,
+    /// Latency model per stage (declaration order), for apportionment
+    /// estimates.
+    latency: Vec<LatencyModel>,
+    counters: Mutex<PipeCounters>,
+}
+
+#[derive(Default)]
+struct PipeCounters {
+    received: u64,
+    completed: u64,
+    dropped: u64,
+    violated: u64,
+    /// Per stage (declaration order): requests served, apportioned-
+    /// deadline misses, summed server time.
+    stage_served: Vec<u64>,
+    stage_violations: Vec<u64>,
+    stage_total_ms: Vec<f64>,
 }
 
 impl Gateway {
@@ -74,7 +118,72 @@ impl Gateway {
                 "duplicate model name '{name}'"
             );
         }
-        Ok(Gateway { models: parts, by_name })
+        Ok(Gateway {
+            models: parts,
+            by_name,
+            pipelines: Vec::new(),
+            pipes_by_name: BTreeMap::new(),
+        })
+    }
+
+    /// Register pipelines over the gateway's models (builder style, after
+    /// [`Gateway::from_parts`]). Each spec is structurally validated,
+    /// every stage model must be a registered gateway model, and pipeline
+    /// names may not collide with each other or with model names.
+    pub fn with_pipelines(mut self, specs: Vec<PipelineSpec>) -> Result<Gateway> {
+        for spec in specs {
+            spec.validate().map_err(|e| anyhow::anyhow!(e))?;
+            anyhow::ensure!(
+                !self.by_name.contains_key(&spec.name),
+                "pipeline '{}' collides with a model name",
+                spec.name
+            );
+            let order = spec.topo_order().map_err(|e| anyhow::anyhow!(e))?;
+            let mut latency = Vec::with_capacity(spec.stages.len());
+            for st in &spec.stages {
+                anyhow::ensure!(
+                    self.by_name.contains_key(&st.model),
+                    "pipeline '{}' stage '{}': model '{}' is not served \
+                     (served models: {})",
+                    spec.name,
+                    st.name,
+                    st.model,
+                    self.names().join(", ")
+                );
+                let ms = crate::engine::ModelSpec::named(&st.model)
+                    .map_err(|e| anyhow::anyhow!(e))?;
+                latency.push(ms.latency);
+            }
+            let n = spec.stages.len();
+            anyhow::ensure!(
+                self.pipes_by_name
+                    .insert(spec.name.clone(), self.pipelines.len())
+                    .is_none(),
+                "duplicate pipeline name '{}'",
+                spec.name
+            );
+            self.pipelines.push(PipelineRoute {
+                spec,
+                order,
+                latency,
+                counters: Mutex::new(PipeCounters {
+                    stage_served: vec![0; n],
+                    stage_violations: vec![0; n],
+                    stage_total_ms: vec![0.0; n],
+                    ..Default::default()
+                }),
+            });
+        }
+        Ok(self)
+    }
+
+    /// The registered pipeline names (declaration order).
+    pub fn pipeline_names(&self) -> Vec<String> {
+        self.pipelines.iter().map(|p| p.spec.name.clone()).collect()
+    }
+
+    fn pipeline(&self, name: &str) -> Option<&PipelineRoute> {
+        self.pipes_by_name.get(name).map(|&i| &self.pipelines[i])
     }
 
     /// A single anonymous model (`"default"`) — the pre-`/v1` shape.
@@ -235,6 +344,40 @@ fn route(method: &str, path: &str, body: &[u8], gateway: &Gateway) -> (u16, Stri
                     }
                 }
             }
+            // /v1/pipelines/{name}/infer | /v1/pipelines/{name}/stats
+            if let Some(rest) = path.strip_prefix("/v1/pipelines/") {
+                if let Some((name, action)) = rest.split_once('/') {
+                    let Some(route) = gateway.pipeline(name) else {
+                        // Unknown *pipeline* — name the resource class and
+                        // list the valid pipelines, not the models.
+                        return json(
+                            404,
+                            Json::obj(vec![
+                                (
+                                    "error",
+                                    Json::str(&format!("unknown pipeline '{name}'")),
+                                ),
+                                (
+                                    "pipelines",
+                                    Json::arr(
+                                        gateway
+                                            .pipeline_names()
+                                            .iter()
+                                            .map(|n| Json::str(n)),
+                                    ),
+                                ),
+                            ]),
+                        );
+                    };
+                    match (method, action) {
+                        ("POST", "infer") => {
+                            return pipeline_infer_response(gateway, route, body)
+                        }
+                        ("GET", "stats") => return json(200, pipeline_stats_doc(route)),
+                        _ => {}
+                    }
+                }
+            }
             json(
                 404,
                 Json::obj(vec![
@@ -375,6 +518,192 @@ fn handle_infer(model: &str, body: &str, coordinator: &Coordinator) -> Result<Js
         ("violated", Json::Bool(resp.violated)),
         ("dropped", Json::Bool(resp.dropped)),
     ]))
+}
+
+/// POST pipeline infer → (status, content type, body).
+fn pipeline_infer_response(
+    gateway: &Gateway,
+    route: &PipelineRoute,
+    body: &[u8],
+) -> (u16, String, String) {
+    let text = String::from_utf8_lossy(body);
+    match handle_pipeline_infer(gateway, route, &text) {
+        Ok(json) => (200, "application/json".into(), json.to_string()),
+        Err(e) => {
+            let code = if e.to_string().contains("timed out") { 504 } else { 400 };
+            (
+                code,
+                "application/json".into(),
+                Json::obj(vec![("error", Json::str(&format!("{e:#}")))]).to_string(),
+            )
+        }
+    }
+}
+
+/// Run one request through the pipeline's stages in topological order,
+/// re-apportioning the remaining wall-clock budget into a per-stage
+/// deadline at every handoff (the simulator's planner, on real time).
+fn handle_pipeline_infer(
+    gateway: &Gateway,
+    route: &PipelineRoute,
+    body: &str,
+) -> Result<Json> {
+    let doc = Json::parse(body).map_err(|e| anyhow::anyhow!("bad json: {e}"))?;
+    let slo_ms = doc.get("slo_ms").as_f64().unwrap_or(1_000.0);
+    let comm_ms = doc.get("comm_ms").as_f64().unwrap_or(0.0);
+    anyhow::ensure!(slo_ms > 0.0, "slo_ms must be positive (got {slo_ms})");
+    let arr = doc.get("image").as_arr().context("missing 'image' array")?;
+    let mut image = Vec::with_capacity(arr.len());
+    for (i, v) in arr.iter().enumerate() {
+        let x = v
+            .as_f64()
+            .with_context(|| format!("'image'[{i}] is not a number"))?;
+        image.push(x as f32);
+    }
+    {
+        let mut c = route.counters.lock().unwrap();
+        c.received += 1;
+    }
+
+    // Stage latency estimates at each stage's *current* core allocation
+    // (declaration order) — the apportionment weights.
+    let est_all: Vec<f64> = route
+        .spec
+        .stages
+        .iter()
+        .zip(&route.latency)
+        .map(|(st, lat)| {
+            let replicas = gateway.get(&st.model).expect("validated at registration");
+            let cores = least_loaded(replicas).stats().cores.max(1);
+            lat.latency_ms(1, cores)
+        })
+        .collect();
+
+    // The dynamic-SLO subtraction: the server's share of the deadline.
+    let budget_ms = slo_ms - comm_ms;
+    let started = Instant::now();
+    let mut stages_json = Vec::with_capacity(route.order.len());
+    let mut last_logits: Vec<f32> = Vec::new();
+    let mut last_id = 0u64;
+    let mut dropped = false;
+    for (hop, &sidx) in route.order.iter().enumerate() {
+        let st = &route.spec.stages[sidx];
+        let replicas = gateway.get(&st.model).expect("validated at registration");
+        let coordinator = least_loaded(replicas);
+        let elapsed_ms = started.elapsed().as_secs_f64() * 1_000.0;
+        // Remaining serial estimates: this hop and everything after it.
+        let est: Vec<f64> =
+            route.order[hop..].iter().map(|&j| est_all[j]).collect();
+        let stage_budget = apportion(
+            budget_ms - elapsed_ms,
+            &est,
+            route.spec.apportionment,
+        )[0];
+        // The live surface keeps answering even with the budget gone
+        // (floor at 1 ms keeps EDF ordering sane); the final response is
+        // marked violated either way.
+        let stage_slo = stage_budget.max(1.0);
+        // Every stage sees the original payload, adapted to its own
+        // input length (the mock executors check it exactly).
+        let mut stage_image = image.clone();
+        stage_image.resize(coordinator.image_len(), 0.0);
+        let (tx, rx) = mpsc::channel();
+        coordinator.submit(LiveRequest {
+            id: 0,
+            image: stage_image,
+            slo_ms: stage_slo,
+            comm_latency_ms: 0.0,
+            reply: tx,
+        });
+        let resp = rx
+            .recv_timeout(Duration::from_secs_f64(stage_slo.max(1_000.0) / 1_000.0 * 3.0))
+            .map_err(|_| {
+                anyhow::anyhow!("stage '{}' inference timed out", st.name)
+            })?;
+        let stage_violated = resp.violated || resp.server_ms > stage_budget;
+        {
+            let mut c = route.counters.lock().unwrap();
+            c.stage_served[sidx] += 1;
+            c.stage_total_ms[sidx] += resp.server_ms;
+            if stage_violated {
+                c.stage_violations[sidx] += 1;
+            }
+        }
+        stages_json.push(Json::obj(vec![
+            ("stage", Json::str(&st.name)),
+            ("model", Json::str(&st.model)),
+            ("deadline_ms", Json::num(stage_budget)),
+            ("queue_ms", Json::num(resp.queue_ms)),
+            ("processing_ms", Json::num(resp.processing_ms)),
+            ("server_ms", Json::num(resp.server_ms)),
+            ("violated", Json::Bool(stage_violated)),
+            ("dropped", Json::Bool(resp.dropped)),
+        ]));
+        last_logits = resp.logits;
+        last_id = resp.id;
+        if resp.dropped {
+            dropped = true;
+            break;
+        }
+    }
+    let e2e_ms = started.elapsed().as_secs_f64() * 1_000.0 + comm_ms;
+    let violated = dropped || e2e_ms > slo_ms;
+    {
+        let mut c = route.counters.lock().unwrap();
+        if dropped {
+            c.dropped += 1;
+        } else {
+            c.completed += 1;
+        }
+        if violated {
+            c.violated += 1;
+        }
+    }
+    Ok(Json::obj(vec![
+        ("id", Json::num(last_id as f64)),
+        ("pipeline", Json::str(&route.spec.name)),
+        ("e2e_ms", Json::num(e2e_ms)),
+        ("violated", Json::Bool(violated)),
+        ("dropped", Json::Bool(dropped)),
+        (
+            "logits",
+            Json::arr(last_logits.iter().map(|&v| Json::num(v as f64))),
+        ),
+        ("stages", Json::Arr(stages_json)),
+    ]))
+}
+
+/// `GET /v1/pipelines/{name}/stats` payload.
+fn pipeline_stats_doc(route: &PipelineRoute) -> Json {
+    let c = route.counters.lock().unwrap();
+    Json::obj(vec![
+        ("pipeline", Json::str(&route.spec.name)),
+        ("apportionment", Json::str(&route.spec.apportionment.name())),
+        ("received", Json::num(c.received as f64)),
+        ("completed", Json::num(c.completed as f64)),
+        ("dropped", Json::num(c.dropped as f64)),
+        ("violated", Json::num(c.violated as f64)),
+        (
+            "stages",
+            Json::arr(route.spec.stages.iter().enumerate().map(|(i, st)| {
+                let served = c.stage_served[i];
+                Json::obj(vec![
+                    ("stage", Json::str(&st.name)),
+                    ("model", Json::str(&st.model)),
+                    ("served", Json::num(served as f64)),
+                    ("violations", Json::num(c.stage_violations[i] as f64)),
+                    (
+                        "mean_ms",
+                        Json::num(if served == 0 {
+                            0.0
+                        } else {
+                            c.stage_total_ms[i] / served as f64
+                        }),
+                    ),
+                ])
+            })),
+        ),
+    ])
 }
 
 fn respond(stream: &mut TcpStream, code: u16, ctype: &str, body: &str) -> Result<()> {

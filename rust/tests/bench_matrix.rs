@@ -8,6 +8,7 @@ use sponge::experiment::{
     regression_gate, run_matrix, EngineKind, ExperimentSpec, GateOutcome, TraceSource,
     WorkloadSource, SCHEMA,
 };
+use sponge::pipeline::Apportionment;
 use sponge::queue::QueueDiscipline;
 use sponge::solver::SolverChoice;
 use sponge::util::json::Json;
@@ -199,7 +200,7 @@ fn replicated_sponge_beats_single_replica_at_double_traffic() {
 fn default_matrix_stays_ci_sized() {
     let spec = ExperimentSpec::named("default").unwrap().quick();
     let cells = spec.expand();
-    assert_eq!(cells.len(), 32);
+    assert_eq!(cells.len(), 40);
     assert!(spec.horizon_ms <= 120_000.0);
     // Every cell is a deterministic sim cell — the CI gate's precondition.
     assert!(cells.iter().all(|c| c.engine == EngineKind::Sim));
@@ -207,6 +208,87 @@ fn default_matrix_stays_ci_sized() {
     assert!(cells
         .iter()
         .any(|c| c.knobs.arbiter == ArbiterChoice::Stealing && c.id().ends_with("+steal")));
+    // The pipeline axis is present: CI greps the 3-stage p95 cell.
+    assert!(cells
+        .iter()
+        .any(|c| c.id() == "pipe3-p95/-/sim/sponge+edf+incremental@24c"));
+}
+
+/// The pipeline-axis acceptance criterion: on the 3-stage chain
+/// (yolov5n → yolov5s → resnet) at equal total cores, percentile-aware
+/// slack apportionment yields strictly fewer end-to-end SLO violations
+/// than even-split. The load is calibrated so the comparison bites: at
+/// 16.5 rps / 300 ms SLO, an even third of the budget caps the heavy
+/// yolov5s stage below batch 2 (≈15.7 rps sustainable < offered), while
+/// the p95-weighted share keeps it at batch 2 (≈17 rps).
+#[test]
+fn percentile_apportionment_beats_even_split_on_the_three_stage_chain() {
+    let chain = |mode| {
+        WorkloadSource::pipeline_chain(
+            &["yolov5n", "yolov5s", "resnet"],
+            mode,
+            8,
+            16.5,
+            300.0,
+        )
+    };
+    let spec = ExperimentSpec {
+        name: "it-pipeline".into(),
+        workloads: vec![chain(Apportionment::EvenSplit), chain(Apportionment::Percentile(95.0))],
+        traces: vec![TraceSource::Synthetic { seed: 0x7ace }],
+        engines: vec![EngineKind::Sim],
+        policies: vec![Policy::Sponge],
+        disciplines: vec![QueueDiscipline::Edf],
+        solvers: vec![SolverChoice::Incremental],
+        budgets: vec![48], // overridden by the chain's stage floors (24)
+        replica_budgets: vec![1],
+        arbiters: vec![ArbiterChoice::Static],
+        horizon_ms: 60_000.0,
+        model: "yolov5s".into(),
+        seed: 42,
+        noise_cv: 0.05,
+        quick: false,
+    };
+    let report = run_matrix(&spec).unwrap();
+    assert_eq!(report.cells.len(), 2);
+    let cell = |prefix: &str| {
+        report
+            .cells
+            .iter()
+            .find(|c| c.id.starts_with(prefix))
+            .unwrap_or_else(|| panic!("missing {prefix} cell"))
+    };
+    let even = cell("pipe3-even/");
+    let p95 = cell("pipe3-p95/");
+    // Same timeline, same total cores.
+    assert_eq!(even.metrics.submitted, p95.metrics.submitted);
+    assert_eq!(even.spec.knobs.shared_cores, 24);
+    assert_eq!(p95.spec.knobs.shared_cores, 24);
+    // The win: strictly fewer end-to-end violations at equal resources.
+    assert!(
+        p95.metrics.violations < even.metrics.violations,
+        "p95 {} !< even {}",
+        p95.metrics.violations,
+        even.metrics.violations
+    );
+    // Per-stage breakdown rides in the report for both cells.
+    for c in &report.cells {
+        assert_eq!(c.metrics.submitted, c.metrics.completed + c.metrics.dropped);
+        assert_eq!(c.metrics.stages.len(), 3, "{}", c.id);
+        assert!(c.metrics.stages.iter().all(|s| s.submitted > 0), "{}", c.id);
+    }
+    let json = report.to_json(true);
+    let first = json.get("cells").at(0);
+    let stages = first.get("stages").as_arr().unwrap();
+    assert_eq!(stages.len(), 3);
+    for st in stages {
+        for key in ["stage", "model"] {
+            assert!(st.get(key).as_str().is_some(), "missing {key}");
+        }
+        for key in ["submitted", "violations", "mean_cores", "peak_cores"] {
+            assert!(st.get(key).as_f64().is_some(), "missing {key}");
+        }
+    }
 }
 
 /// The arbiter-axis acceptance criterion: under the two-model contention

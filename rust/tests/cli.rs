@@ -85,6 +85,33 @@ fn serve_help_documents_replicas() {
 }
 
 #[test]
+fn serve_rejects_malformed_pipeline_spec() {
+    let (code, _, stderr) = run_code(&[
+        "serve", "--models", "resnet", "--executor", "mock", "--pipelines", "det",
+    ]);
+    assert_eq!(code, Some(1), "{stderr}");
+    assert!(stderr.contains("expected name=modelA>modelB"), "{stderr}");
+}
+
+#[test]
+fn serve_rejects_pipeline_over_unserved_model() {
+    let (code, _, stderr) = run_code(&[
+        "serve", "--models", "resnet", "--executor", "mock",
+        "--pipelines", "det=resnet>yolov5s",
+    ]);
+    assert_eq!(code, Some(1), "{stderr}");
+    assert!(stderr.contains("'yolov5s' is not served"), "{stderr}");
+}
+
+#[test]
+fn serve_help_documents_pipelines() {
+    let (code, stdout, _) = run_code(&["serve", "--help"]);
+    assert_eq!(code, Some(0));
+    assert!(stdout.contains("--pipelines"), "{stdout}");
+    assert!(stdout.contains("/v1/pipelines/{name}/infer"), "{stdout}");
+}
+
+#[test]
 fn serve_rejects_unknown_executor() {
     let (code, _, stderr) =
         run_code(&["serve", "--models", "resnet", "--executor", "warp"]);
@@ -173,7 +200,7 @@ fn bench_quick_stable_emits_report_and_gates_bootstrap_baseline() {
     let text = std::fs::read_to_string(&out).unwrap();
     let doc = sponge::util::json::Json::parse(&text).unwrap();
     assert_eq!(doc.get("schema").as_str(), Some("spongebench/v1"));
-    assert_eq!(doc.get("cells").as_arr().map(|c| c.len()), Some(16));
+    assert_eq!(doc.get("cells").as_arr().map(|c| c.len()), Some(40));
     // Stable mode: no wall-clock sections.
     assert!(!text.contains("\"wall\""), "stable report leaked timings");
 }

@@ -10,6 +10,7 @@ use sponge::engine::{
     ReplicaSetCfg, ReplicaSetEngine, Scenario, ServingEngine, SimEngine, SimEngineCfg,
 };
 use sponge::network::{BandwidthTrace, NetworkModel};
+use sponge::pipeline::{apportion, Apportionment, PipelineEngine, PipelineEngineCfg, PipelineSpec};
 use sponge::queue::{Batch, EdfQueue};
 use sponge::workload::{Request, WorkloadGen};
 
@@ -148,6 +149,128 @@ fn trait_objects_are_interchangeable() {
         let report = engine.drain();
         assert!(report.settled(), "{}: {report:?}", engine.kind());
         assert_eq!(report.submitted, 10);
+    }
+}
+
+// ------------------------------------------------------ pipeline conformance --
+
+/// A registry serving a two-stage detection chain as the pipeline `det`.
+fn pipeline_registry(apportionment: Apportionment) -> ModelRegistry {
+    let mut reg = ModelRegistry::new();
+    reg.register(ModelSpec::named("yolov5n").unwrap()).unwrap();
+    reg.register(ModelSpec::named("yolov5s").unwrap()).unwrap();
+    reg.register_pipeline(PipelineSpec::chain(
+        "det",
+        &["yolov5n", "yolov5s"],
+        apportionment,
+    ))
+    .unwrap();
+    reg
+}
+
+#[test]
+fn pipeline_engine_conforms_on_a_two_stage_chain() {
+    // The fourth ServingEngine implementation must satisfy the same
+    // contract on the shared scenario machinery: submission targets are
+    // the *pipeline* names, and accounting is conserved end-to-end.
+    let reg = pipeline_registry(Apportionment::Percentile(95.0));
+    let gen = WorkloadGen { rate_rps: 10.0, slo_ms: 2_000.0, ..WorkloadGen::paper_default() };
+    let scn = Scenario::new(5_000.0).with_model("det", gen).with_time_scale(0.02);
+    let net = NetworkModel::new(BandwidthTrace::synthetic_4g(6, 1_000.0, 9));
+
+    let mut engine =
+        PipelineEngine::new(&reg, PipelineEngineCfg::default()).unwrap();
+    let report = run_scenario(&mut engine, &scn, &net).unwrap();
+    assert_eq!(report.engine, "pipeline");
+    assert!(report.conserved(), "{report:?}");
+    assert_eq!(report.drain.submitted, 50); // 10 rps × 5 s
+    let s = report.snapshot("det").unwrap();
+    assert_eq!(s.in_flight(), 0, "pipeline left work in flight");
+    assert!(s.completed > 0, "pipeline completed nothing: {s:?}");
+    // Both stages actually served requests.
+    let stages = engine.stage_stats("det").unwrap();
+    assert_eq!(stages.len(), 2);
+    assert!(stages.iter().all(|st| st.completed > 0), "{stages:?}");
+}
+
+#[test]
+fn pipeline_engine_works_as_a_trait_object() {
+    let reg = pipeline_registry(Apportionment::EvenSplit);
+    let mut engine: Box<dyn ServingEngine> =
+        Box::new(PipelineEngine::new(&reg, PipelineEngineCfg::default()).unwrap());
+    assert_eq!(engine.models(), vec!["det"]);
+    for i in 0..10 {
+        engine
+            .submit("det", EngineRequest::new(2_000.0, 5.0).at(i as f64 * 10.0))
+            .unwrap();
+    }
+    let report = engine.drain();
+    assert!(report.settled(), "{report:?}");
+    assert_eq!(report.submitted, 10);
+    assert!(engine.submit("ghost", EngineRequest::new(1_000.0, 0.0)).is_err());
+}
+
+#[test]
+fn clamped_stage_budget_is_an_immediate_violation() {
+    // comm latency already past the SLO: the apportioned first-stage
+    // budget clamps to zero, and the request must resolve as a violated
+    // drop without ever occupying a stage queue.
+    let reg = pipeline_registry(Apportionment::Percentile(95.0));
+    let mut engine =
+        PipelineEngine::new(&reg, PipelineEngineCfg::default()).unwrap();
+    engine.submit("det", EngineRequest::new(10.0, 500.0).at(0.0)).unwrap();
+    let report = engine.drain();
+    assert!(report.settled(), "{report:?}");
+    let s = engine.snapshot("det").unwrap();
+    assert_eq!(s.dropped, 1);
+    assert_eq!(s.violations, 1);
+    let stages = engine.stage_stats("det").unwrap();
+    assert_eq!(stages[0].submitted, 0, "hopeless request entered a queue");
+}
+
+#[test]
+fn prop_apportioned_deadlines_sum_within_budget_and_never_go_negative() {
+    // Property sweep over pseudo-random (remaining budget, stage
+    // estimates, mode) triples — the planner invariants the engine's
+    // handoff logic depends on: every per-stage deadline is >= 0, and
+    // their sum never exceeds the (clamped) remaining budget.
+    let mut state = 0x5eed_cafe_u64;
+    let mut rnd = move || {
+        // xorshift64* — deterministic, dependency-free.
+        state ^= state << 13;
+        state ^= state >> 7;
+        state ^= state << 17;
+        (state.wrapping_mul(0x2545_f491_4f6c_dd1d) >> 40) as f64 / (1u64 << 24) as f64
+    };
+    for iter in 0..500 {
+        let n = 1 + (rnd() * 5.0) as usize;
+        let est: Vec<f64> = (0..n).map(|_| 1.0 + rnd() * 200.0).collect();
+        // Remaining spans deficit (negative) through generous.
+        let remaining = -200.0 + rnd() * 1_400.0;
+        for mode in [
+            Apportionment::EvenSplit,
+            Apportionment::Percentile(50.0),
+            Apportionment::Percentile(95.0),
+        ] {
+            let budgets = apportion(remaining, &est, mode);
+            assert_eq!(budgets.len(), n);
+            assert!(
+                budgets.iter().all(|&b| b >= 0.0),
+                "iter {iter}: negative stage deadline: {budgets:?} \
+                 (remaining {remaining}, est {est:?}, mode {mode:?})"
+            );
+            let sum: f64 = budgets.iter().sum();
+            assert!(
+                sum <= remaining.max(0.0) + 1e-6,
+                "iter {iter}: stage deadlines {sum} exceed budget {remaining} \
+                 ({budgets:?}, mode {mode:?})"
+            );
+            if remaining <= 0.0 {
+                // Clamped: the engine resolves these as immediate
+                // violations, so every stage share must be zero.
+                assert!(budgets.iter().all(|&b| b == 0.0), "{budgets:?}");
+            }
+        }
     }
 }
 

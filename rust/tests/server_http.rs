@@ -7,6 +7,7 @@ use std::sync::Arc;
 
 use sponge::coordinator::{Coordinator, CoordinatorCfg, MockExecutor};
 use sponge::engine::{LiveEngine, LiveEngineCfg, ModelRegistry, ModelSpec};
+use sponge::pipeline::{Apportionment, PipelineSpec};
 use sponge::server::{client, serve, Gateway};
 use sponge::util::json::Json;
 
@@ -265,6 +266,147 @@ fn v1_stats_reports_per_replica_breakdown() {
         "{body}"
     );
     handle.stop();
+    engine.shutdown();
+}
+
+/// Two models plus a two-stage pipeline chained over them.
+fn start_pipeline() -> (sponge::server::ServerHandle, LiveEngine) {
+    let mut reg = ModelRegistry::new();
+    reg.register(ModelSpec::named("yolov5n").unwrap()).unwrap();
+    reg.register(ModelSpec::named("yolov5s").unwrap()).unwrap();
+    let engine = LiveEngine::start_mock(&reg, LiveEngineCfg::default()).unwrap();
+    let gateway = Arc::new(
+        Gateway::from_parts(engine.coordinators())
+            .unwrap()
+            .with_pipelines(vec![PipelineSpec::chain(
+                "det",
+                &["yolov5n", "yolov5s"],
+                Apportionment::Percentile(95.0),
+            )])
+            .unwrap(),
+    );
+    let handle = serve("127.0.0.1:0", gateway).unwrap();
+    (handle, engine)
+}
+
+#[test]
+fn v1_pipeline_infer_runs_every_stage_and_reports_deadlines() {
+    let (handle, engine) = start_pipeline();
+    let (code, body) = client::post_json(
+        &handle.addr(),
+        "/v1/pipelines/det/infer",
+        &infer_body(4),
+    )
+    .unwrap();
+    assert_eq!(code, 200, "{body}");
+    let doc = Json::parse(&body).unwrap();
+    assert_eq!(doc.get("pipeline").as_str(), Some("det"));
+    assert_eq!(doc.get("dropped").as_bool(), Some(false));
+    assert!(doc.get("e2e_ms").as_f64().unwrap() > 0.0, "{body}");
+    let stages = doc.get("stages").as_arr().unwrap();
+    assert_eq!(stages.len(), 2, "{body}");
+    assert_eq!(stages[0].get("model").as_str(), Some("yolov5n"));
+    assert_eq!(stages[1].get("model").as_str(), Some("yolov5s"));
+    // Apportioned per-stage deadlines are positive and within the SLO.
+    for st in stages {
+        let d = st.get("deadline_ms").as_f64().unwrap();
+        assert!(d > 0.0 && d < 2_000.0, "{body}");
+        assert!(st.get("server_ms").as_f64().is_some(), "{body}");
+    }
+    // Stats reflect the served request, per stage.
+    let (code, body) =
+        client::get(&handle.addr(), "/v1/pipelines/det/stats").unwrap();
+    assert_eq!(code, 200, "{body}");
+    let doc = Json::parse(&body).unwrap();
+    assert_eq!(doc.get("pipeline").as_str(), Some("det"));
+    assert_eq!(doc.get("apportionment").as_str(), Some("p95"));
+    assert_eq!(doc.get("received").as_u64(), Some(1), "{body}");
+    assert_eq!(doc.get("completed").as_u64(), Some(1), "{body}");
+    let stages = doc.get("stages").as_arr().unwrap();
+    assert_eq!(stages.len(), 2);
+    assert!(
+        stages.iter().all(|s| s.get("served").as_u64() == Some(1)),
+        "{body}"
+    );
+    handle.stop();
+    engine.shutdown();
+}
+
+#[test]
+fn v1_unknown_pipeline_404_names_the_resource_class() {
+    let (handle, engine) = start_pipeline();
+    // Unknown pipeline: 404 carrying the *pipeline* list.
+    let (code, body) = client::post_json(
+        &handle.addr(),
+        "/v1/pipelines/ghost/infer",
+        &infer_body(4),
+    )
+    .unwrap();
+    assert_eq!(code, 404, "{body}");
+    let doc = Json::parse(&body).unwrap();
+    assert!(doc.get("error").as_str().unwrap().contains("unknown pipeline"));
+    let known: Vec<&str> = doc
+        .get("pipelines")
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|p| p.as_str().unwrap())
+        .collect();
+    assert_eq!(known, vec!["det"]);
+    assert_eq!(doc.get("models"), &Json::Null, "{body}");
+    // Unknown model: still the model list, never the pipeline list.
+    let (code, body) = client::post_json(
+        &handle.addr(),
+        "/v1/models/ghost/infer",
+        &infer_body(4),
+    )
+    .unwrap();
+    assert_eq!(code, 404, "{body}");
+    let doc = Json::parse(&body).unwrap();
+    assert!(doc.get("error").as_str().unwrap().contains("unknown model"));
+    assert!(doc.get("models").as_arr().is_some(), "{body}");
+    assert_eq!(doc.get("pipelines"), &Json::Null, "{body}");
+    // The unknown-route 404 lists the pipeline endpoints.
+    let (code, body) = client::get(&handle.addr(), "/nope").unwrap();
+    assert_eq!(code, 404);
+    assert!(body.contains("/v1/pipelines/{name}/infer"), "{body}");
+    // Pipeline infer validates bodies like model infer does.
+    let (code, _) = client::post_json(
+        &handle.addr(),
+        "/v1/pipelines/det/infer",
+        "{not json",
+    )
+    .unwrap();
+    assert_eq!(code, 400);
+    handle.stop();
+    engine.shutdown();
+}
+
+#[test]
+fn gateway_rejects_bad_pipeline_specs() {
+    let mut reg = ModelRegistry::new();
+    reg.register(ModelSpec::named("resnet").unwrap()).unwrap();
+    let engine = LiveEngine::start_mock(&reg, LiveEngineCfg::default()).unwrap();
+    // Stage model not served by this gateway.
+    let err = Gateway::from_parts(engine.coordinators())
+        .unwrap()
+        .with_pipelines(vec![PipelineSpec::chain(
+            "det",
+            &["resnet", "yolov5s"],
+            Apportionment::EvenSplit,
+        )])
+        .unwrap_err();
+    assert!(err.to_string().contains("yolov5s"), "{err:#}");
+    // Pipeline name colliding with a model name.
+    let err = Gateway::from_parts(engine.coordinators())
+        .unwrap()
+        .with_pipelines(vec![PipelineSpec::chain(
+            "resnet",
+            &["resnet"],
+            Apportionment::EvenSplit,
+        )])
+        .unwrap_err();
+    assert!(err.to_string().contains("collides"), "{err:#}");
     engine.shutdown();
 }
 
