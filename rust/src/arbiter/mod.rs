@@ -192,6 +192,31 @@ impl ArbiterSnapshot {
 /// protocol; `add_partition` / `register_tenant` / `retire_partition` are
 /// the (rarer) topology surface the engines call at construction and
 /// replica scale-in.
+///
+/// # Example
+///
+/// The allocation protocol against the default implementation — two
+/// guaranteed floors, no lending:
+///
+/// ```
+/// use sponge::arbiter::{CoreArbiter, StaticPartition};
+///
+/// let mut arb = StaticPartition::new();
+/// let floor_a = arb.add_partition(8);
+/// let floor_b = arb.add_partition(8);
+/// let tenant = arb.register_tenant(floor_a);
+///
+/// // Grants come from the tenant's own floor; a static arbiter never
+/// // lends the other partition's surplus, however idle.
+/// let lease = arb.request_lease(tenant, 16, 0.0);
+/// assert_eq!(lease.granted, 8);
+/// assert_eq!(lease.stolen, 0);
+///
+/// // Releasing returns every core to the pool.
+/// arb.release(lease.id, 100.0);
+/// assert_eq!(arb.snapshot(100.0).granted, 0);
+/// # let _ = floor_b;
+/// ```
 pub trait CoreArbiter: Send {
     /// Implementation label (`"static"` / `"stealing"`).
     fn name(&self) -> &'static str;
@@ -241,6 +266,13 @@ pub trait CoreArbiter: Send {
     /// One tenant's usage row without materializing the snapshot (the
     /// per-dispatch stats read; no allocation).
     fn usage(&self, tenant: TenantId) -> Option<TenantUsage>;
+
+    /// `true` iff no allocation change is in flight: no live lease has a
+    /// pending shrink window (`land_at`) or an unenforced clawback. While
+    /// quiescent, identical renewals are pure no-ops at any time, so the
+    /// discrete-event drain loops may fast-forward adaptation boundaries
+    /// without changing what any future lease negotiation would grant.
+    fn quiescent(&self) -> bool;
 }
 
 /// Shared handle: engines ticking in lock-step (replica fleets, the live
@@ -432,6 +464,14 @@ impl Ledger {
             }
             slot.last_free = f;
         }
+    }
+
+    /// No live lease has a pending shrink window or an unenforced
+    /// clawback ([`CoreArbiter::quiescent`]).
+    fn quiescent(&self) -> bool {
+        self.leases
+            .iter()
+            .all(|l| !l.live || (l.land_at == f64::INFINITY && l.revoked == 0))
     }
 
     /// Repay up to `amount` of `lease`'s debts, newest loans first.
@@ -908,6 +948,9 @@ macro_rules! impl_arbiter {
             fn usage(&self, tenant: TenantId) -> Option<TenantUsage> {
                 self.ledger.tenant_usage(tenant.0 as usize)
             }
+            fn quiescent(&self) -> bool {
+                self.ledger.quiescent()
+            }
         }
     };
 }
@@ -927,6 +970,29 @@ mod tests {
         let ta = a.register_tenant(pa);
         let tb = a.register_tenant(pb);
         (a, ta, tb)
+    }
+
+    #[test]
+    fn quiescent_tracks_shrink_windows_and_clawbacks() {
+        let (mut a, ta, tb) = two_floor_stealing();
+        assert!(a.quiescent(), "empty ledger is quiescent");
+        let la = a.request_lease(ta, 8, 0.0);
+        assert_eq!(la.granted, 8);
+        assert!(a.quiescent(), "grants land instantly");
+        // In-place shrink opens a resize window → change in flight.
+        let _ = a.renew(la.id, 4, 1_000.0);
+        assert!(!a.quiescent(), "pending shrink window");
+        // The next renewal past land time lands the shrink.
+        let _ = a.renew(la.id, 4, 2_000.0);
+        assert!(a.quiescent(), "shrink landed");
+        // Borrow B's idle floor, then let B claw it back: the unenforced
+        // revocation keeps the ledger non-quiescent until A's next renew.
+        let la2 = a.renew(la.id, 12, 10_000.0);
+        assert!(la2.granted > 8, "borrowed from B's aged surplus");
+        assert!(a.quiescent(), "loans in steady state are quiescent");
+        let revs = a.reclaim(tb, 4, 11_000.0);
+        assert!(!revs.is_empty());
+        assert!(!a.quiescent(), "unenforced clawback in flight");
     }
 
     #[test]

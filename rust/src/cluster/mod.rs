@@ -276,6 +276,23 @@ impl Cluster {
         self.core_ms_integral
     }
 
+    /// `true` iff no lifecycle transition is still pending at `now`:
+    /// every cold start has reached its `ready_at` and every in-place
+    /// resize has reached its `effective_at` (the transitions themselves
+    /// may still be un-landed — [`Cluster::tick`] lands them lazily — but
+    /// landing them cannot change behaviour at or after `now`). The
+    /// discrete-event drain loops require this before fast-forwarding
+    /// through an idle gap, so no resize/cold-start edge is jumped over.
+    pub fn settled(&self, now: Ms) -> bool {
+        self.instances().all(|i| match i.state {
+            InstanceState::ColdStarting { ready_at_ms_bits } => now >= ms(ready_at_ms_bits),
+            InstanceState::Resizing { effective_at_ms_bits, .. } => {
+                now >= ms(effective_at_ms_bits)
+            }
+            InstanceState::Ready | InstanceState::Terminated => true,
+        })
+    }
+
     fn integrate(&mut self, now: Ms) {
         if now > self.last_integral_at {
             self.core_ms_integral +=
@@ -369,6 +386,21 @@ mod tests {
         assert_eq!(c.allocated_cores(), 0);
         assert!(c.launch(8, 200.0).is_ok());
         assert!(c.terminate(id, 300.0).is_err()); // already gone
+    }
+
+    #[test]
+    fn settled_tracks_pending_transitions() {
+        let mut c = cluster();
+        assert!(c.settled(0.0), "empty cluster has nothing pending");
+        let id = c.launch(2, 0.0).unwrap();
+        assert!(!c.settled(5_000.0), "cold start pending");
+        assert!(c.settled(10_000.0), "cold start elapsed (even if unlanded)");
+        c.tick(10_000.0);
+        c.resize(id, 4, 10_000.0).unwrap();
+        assert!(!c.settled(10_050.0), "resize window open");
+        assert!(c.settled(10_100.0), "resize elapsed");
+        c.terminate(id, 10_200.0).unwrap();
+        assert!(c.settled(10_200.0), "terminated instances never pend");
     }
 
     #[test]

@@ -272,6 +272,31 @@ impl DrainReport {
 /// * **Isolation** — each registered model has its own queue, latency
 ///   model, and autoscaler; models contend only through the shared core
 ///   budget.
+///
+/// # Example
+///
+/// Drive the virtual-time implementation through the trait: register a
+/// model, submit one request, drain to a settled report, and read the
+/// conserved accounting back:
+///
+/// ```
+/// use sponge::engine::{
+///     EngineRequest, ModelRegistry, ServingEngine, SimEngine, SimEngineCfg,
+/// };
+///
+/// let reg = ModelRegistry::from_names("yolov5s").unwrap();
+/// let mut engine = SimEngine::new(&reg, SimEngineCfg::default()).unwrap();
+///
+/// // One request: 1 s SLO, 5 ms of network latency, sent "now" (t = 0).
+/// engine.submit("yolov5s", EngineRequest::new(1_000.0, 5.0)).unwrap();
+///
+/// let report = engine.drain();
+/// assert!(report.settled());
+///
+/// let snap = engine.snapshot("yolov5s").unwrap();
+/// assert_eq!(snap.submitted, 1);
+/// assert_eq!(snap.submitted, snap.completed + snap.dropped);
+/// ```
 pub trait ServingEngine {
     /// `"sim"` or `"live"`.
     fn kind(&self) -> &'static str;

@@ -41,24 +41,24 @@
 //!   [`ReplicaSet`] per registry entry, so the spongebench runner, the
 //!   scenario driver, and the conformance contract all work unchanged.
 //!
-//! Determinism: the pending timeline orders on (arrival, submission
-//! sequence), dispatch keys derive from engine snapshots (virtual time),
+//! Determinism: the pending timeline is a [`crate::sim::EventHeap`]
+//! ordered on (arrival, submission sequence), dispatch keys derive from
+//! engine snapshots (virtual time),
 //! replica seeds from the base seed and a monotone replica ordinal, and
 //! the reconciler only looks at virtual-time state — two runs of the same
 //! workload produce byte-identical metrics, which is what keeps
 //! `sponge bench --stable` reproducible with a replica budget > 1.
 
-use std::cmp::Reverse;
-use std::collections::BinaryHeap;
 use std::sync::Arc;
 
 use crate::arbiter::{ArbiterChoice, CoreArbiter, PartitionId, SharedArbiter, TenantId};
 use crate::monitoring::SloTracker;
+use crate::sim::EventHeap;
 use crate::solver::{plan_replicas, SolverInput, SolverLimits};
 use crate::{Cores, Ms};
 
 use super::registry::{ModelRegistry, ModelSpec};
-use super::sim::{SimEngine, SimEngineCfg};
+use super::sim::{EngineFp, SimEngine, SimEngineCfg};
 use super::{
     Clock, DrainReport, EngineError, EngineRequest, ModelSnapshot, ServingEngine, VirtualClock,
 };
@@ -170,34 +170,12 @@ pub struct ReplicaStats {
     pub draining: bool,
 }
 
-/// A buffered submission awaiting its virtual arrival interval.
-struct Pending {
-    at_ms: Ms,
-    seq: u64,
-    req: EngineRequest,
-}
-
-impl PartialEq for Pending {
-    fn eq(&self, other: &Self) -> bool {
-        self.seq == other.seq
-    }
-}
-
-impl Eq for Pending {}
-
-impl PartialOrd for Pending {
-    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
-        Some(self.cmp(other))
-    }
-}
-
-impl Ord for Pending {
-    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        self.at_ms
-            .total_cmp(&other.at_ms)
-            .then_with(|| self.seq.cmp(&other.seq))
-    }
-}
+/// Fleet-level no-op detector for the idle fast-forward: a tick whose
+/// fingerprint equals the previous tick's left the reconciler's whole
+/// observable state (resolution totals, fleet size, action counters,
+/// hysteresis counters, λ̂, and every replica engine's own digest)
+/// untouched.
+type SetFp = (u64, u64, u64, u64, u32, u32, u64, Vec<EngineFp>);
 
 /// One model's replica fleet (see the module docs).
 pub struct ReplicaSet {
@@ -206,8 +184,11 @@ pub struct ReplicaSet {
     replicas: Vec<Replica>,
     retired: RetiredTotals,
     /// Submissions not yet routed (virtual send times ahead of the
-    /// fleet's clock).
-    pending: BinaryHeap<Reverse<Pending>>,
+    /// fleet's clock); the heap's own (time, seq) order reproduces
+    /// submission order within an arrival instant.
+    pending: EventHeap<EngineRequest>,
+    /// Request-id counter (`submit`'s return value) — kept separate from
+    /// the heap's internal sequence so ids survive the heap draining.
     pending_seq: u64,
     /// Total submissions accepted (routed + still pending).
     accepted: u64,
@@ -267,7 +248,7 @@ impl ReplicaSet {
                 tracker: SloTracker::new(cfg.engine.adaptation_interval_ms),
                 ..Default::default()
             },
-            pending: BinaryHeap::new(),
+            pending: EventHeap::new(),
             pending_seq: 0,
             accepted: 0,
             clock: VirtualClock::new(),
@@ -503,30 +484,33 @@ impl ReplicaSet {
         let seq = self.pending_seq;
         self.pending_seq += 1;
         self.accepted += 1;
-        self.pending.push(Reverse(Pending { at_ms, seq, req }));
+        self.pending.schedule(at_ms, req);
         Ok(seq)
     }
 
     /// Route every pending request due by `horizon_ms` to a replica.
+    /// Peek-before-pop: a request only leaves the heap once a replica is
+    /// committed to take it, so a routing dead end (all draining — cannot
+    /// happen while min_replicas >= 1) never re-enqueues and therefore
+    /// never perturbs the heap's deterministic (time, seq) order.
     fn flush_due(&mut self, horizon_ms: Ms) {
-        while self
-            .pending
-            .peek()
-            .is_some_and(|Reverse(p)| p.at_ms <= horizon_ms)
-        {
-            let Reverse(p) = self.pending.pop().expect("peeked");
-            let Some(idx) = self.pick_replica(p.slack_ms()) else {
-                // No dispatchable replica (all draining) — cannot happen
-                // while min_replicas >= 1, but never lose the request.
-                self.pending.push(Reverse(p));
+        loop {
+            // Server-side slack at arrival: the end-to-end budget less the
+            // network share, same for every replica.
+            let slack_ms = match self.pending.peek() {
+                Some((at_ms, req)) if at_ms <= horizon_ms => req.slo_ms - req.comm_ms,
+                _ => return,
+            };
+            let Some(idx) = self.pick_replica(slack_ms) else {
                 return;
             };
+            let (at_ms, req) = self.pending.pop_due(horizon_ms).expect("peeked in-horizon");
             self.routed_this_interval += 1;
             let r = &mut self.replicas[idx];
             r.submitted += 1;
             // Engine submit cannot fail here: the model is registered and
             // the SLO was validated at accept time.
-            let _ = r.engine.submit(&self.spec.name, p.req.at(p.at_ms));
+            let _ = r.engine.submit(&self.spec.name, req.at(at_ms));
         }
     }
 
@@ -553,6 +537,13 @@ impl ReplicaSet {
         } else {
             0.5 * self.lambda_rps + 0.5 * instant
         };
+        // Snap the geometric decay to an exact zero once it is far below
+        // any rate the planner could distinguish from idle. This gives
+        // the drain fast-forward a reachable λ̂ = 0 fixpoint; without it
+        // the EWMA halves forever and the fleet state never quiesces.
+        if self.lambda_rps < 1e-12 {
+            self.lambda_rps = 0.0;
+        }
         self.routed_this_interval = 0;
         self.reconcile();
         self.peak_cores = self.peak_cores.max(self.total_cores());
@@ -714,16 +705,79 @@ impl ReplicaSet {
         s.completed + s.dropped
     }
 
+    /// Observable fleet-state digest for the drain fast-forward's no-op
+    /// detector (see [`ReplicaSet::drain`] and [`SimEngine::drain`]).
+    fn fingerprint(&self) -> SetFp {
+        (
+            self.resolved(),
+            self.replicas.len() as u64,
+            self.scale_outs,
+            self.drains,
+            self.saturated_for,
+            self.idle_for,
+            self.lambda_rps.to_bits(),
+            self.replicas.iter().map(|r| r.engine.fingerprint()).collect(),
+        )
+    }
+
+    /// `true` iff every tick until the next pending arrival is provably a
+    /// fleet-wide no-op: λ̂ has decayed to an exact zero (so the planner's
+    /// input cannot change), the fleet sits at its floor with nothing
+    /// draining (so `reconcile` lands in its counter-reset arm whatever
+    /// `c_eff` does as arbiter hysteresis ages), and each replica engine
+    /// is at its own idle fixpoint with an empty event heap.
+    fn gap_skippable(&self) -> bool {
+        self.lambda_rps == 0.0
+            && self.replicas.len() as u32 == self.cfg.min_replicas
+            && self.replicas.iter().all(|r| !r.draining && r.engine.gap_skippable())
+    }
+
+    /// Jump the whole fleet across one adaptation interval without work:
+    /// each replica's boundary moves exactly as `SimEngine::tick` would
+    /// have moved it (`+= interval` on the same accumulated grid, so the
+    /// clocks stay bit-identical to the unskipped run), then the group
+    /// clock re-syncs the way `tick` does.
+    fn skip_idle_interval(&mut self) {
+        for r in &mut self.replicas {
+            r.engine.skip_idle_interval();
+        }
+        let now = self
+            .replicas
+            .iter()
+            .map(|r| r.engine.now_ms())
+            .fold(self.clock.now_ms(), f64::max);
+        self.clock.advance_to(now);
+    }
+
     /// Drain the fleet: keep ticking (which routes pending arrivals,
     /// advances every replica, and lets the reconciler act on the tail)
     /// until every accepted request has a terminal outcome.
+    ///
+    /// Idle gaps on the pending timeline are fast-forwarded: once two
+    /// consecutive ticks produce the same fleet fingerprint *and* the
+    /// fleet is provably at an idle fixpoint, boundaries up to the next
+    /// pending arrival are skipped interval-by-interval (bit-identical
+    /// clocks, zero per-boundary work) instead of simulated.
     fn drain(&mut self) -> (u64, u64, u64) {
         let mut ticks = 0u64;
         let mut stall = 0u64;
+        let mut last_fp: Option<SetFp> = None;
         while self.resolved() < self.accepted {
             let before = self.resolved();
             self.tick();
             ticks += 1;
+            let fp = self.fingerprint();
+            if last_fp.as_ref() == Some(&fp) && self.gap_skippable() {
+                let interval = self.cfg.engine.adaptation_interval_ms;
+                while self
+                    .pending
+                    .next_time()
+                    .is_some_and(|t| t > self.clock.now_ms() + interval)
+                {
+                    self.skip_idle_interval();
+                }
+            }
+            last_fp = Some(fp);
             stall = if self.resolved() == before { stall + 1 } else { 0 };
             // Quiet gaps in the timeline are not stalls: progress resumes
             // once the clock reaches the next pending arrival.
@@ -737,13 +791,6 @@ impl ReplicaSet {
             }
         }
         (self.accepted, self.resolved(), ticks)
-    }
-}
-
-impl Pending {
-    /// Server-side slack this request will have at arrival.
-    fn slack_ms(&self) -> Ms {
-        self.req.slo_ms - self.req.comm_ms
     }
 }
 
@@ -1126,5 +1173,62 @@ mod tests {
         let routed: Vec<u64> = stats.iter().map(|r| r.submitted).collect();
         assert_eq!(routed, vec![2, 2], "{stats:?}");
         e.drain();
+    }
+
+    #[test]
+    fn drain_fast_forwards_idle_gaps_bit_identically() {
+        let build = || {
+            let mut reg = ModelRegistry::new();
+            reg.register(spec(1)).unwrap();
+            let mut e = ReplicaSetEngine::new(&reg, cfg(2)).unwrap();
+            // A burst, an hour-long dead gap, then a second burst. The
+            // gap is long enough that the reconciler's EWMA λ̂ decays to
+            // its exact-zero snap well before the gap ends.
+            for i in 0..20 {
+                e.submit("yolov5s", EngineRequest::new(1_000.0, 10.0).at(i as f64 * 25.0))
+                    .unwrap();
+                e.submit(
+                    "yolov5s",
+                    EngineRequest::new(1_000.0, 10.0).at(3_600_000.0 + i as f64 * 25.0),
+                )
+                .unwrap();
+            }
+            e
+        };
+        // Reference: one explicit tick per adaptation boundary, never
+        // skipping — the behaviour the fast-forward must reproduce.
+        let mut reference = build();
+        let mut ref_ticks = 0u64;
+        loop {
+            let s = reference.snapshot("yolov5s").unwrap();
+            if s.resolved() >= s.submitted {
+                break;
+            }
+            reference.tick();
+            ref_ticks += 1;
+        }
+        let mut fast = build();
+        let report = fast.drain();
+        assert!(report.settled(), "{report:?}");
+        assert!(
+            report.ticks < ref_ticks / 10,
+            "idle gap not fast-forwarded: {} ticks vs {ref_ticks} reference",
+            report.ticks
+        );
+        assert_eq!(
+            fast.snapshot("yolov5s").unwrap(),
+            reference.snapshot("yolov5s").unwrap()
+        );
+        let (ft, rt) = (
+            fast.set("yolov5s").unwrap().merged_tracker(),
+            reference.set("yolov5s").unwrap().merged_tracker(),
+        );
+        assert_eq!(ft.mean_e2e_ms().to_bits(), rt.mean_e2e_ms().to_bits());
+        assert_eq!(ft.timeline(), rt.timeline());
+        // The skipped grid stayed on the reference's float-exact ticks.
+        assert_eq!(
+            fast.clock().now_ms().to_bits(),
+            reference.clock().now_ms().to_bits()
+        );
     }
 }

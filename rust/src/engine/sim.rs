@@ -10,8 +10,7 @@
 //! Time is virtual ([`VirtualClock`]): a 10-minute two-model experiment
 //! settles in milliseconds of wall time, deterministically per seed.
 
-use std::cmp::Reverse;
-use std::collections::{BinaryHeap, HashMap};
+use std::collections::HashMap;
 use std::time::Instant;
 
 use crate::arbiter::{CoreArbiter, LeaseId, SharedArbiter, StaticPartition, TenantId};
@@ -19,6 +18,7 @@ use crate::cluster::{Cluster, InstanceState};
 use crate::monitoring::{Outcome, RateEstimator, SloTracker};
 use crate::queue::EdfQueue;
 use crate::scaler::{Action, Autoscaler, ScalerObs};
+use crate::sim::EventHeap;
 use crate::util::rng::Pcg32;
 use crate::workload::Request;
 use crate::{BatchSize, Cores, Ms};
@@ -124,39 +124,22 @@ enum EventKind {
     Done { model: usize, instance: u32, requests: Vec<Request>, started_ms: Ms },
 }
 
-struct Event {
-    t: Ms,
-    seq: u64,
-    kind: EventKind,
-}
+/// The per-model no-op detector for the idle fast-forward: a tick whose
+/// fingerprint equals the previous tick's changed nothing observable
+/// (resolution totals, allocations, batch signal, lease population, and
+/// the executed variant all held).
+pub(crate) type ModelFp = (Cores, BatchSize, usize, [u64; 4]);
 
-impl PartialEq for Event {
-    fn eq(&self, other: &Self) -> bool {
-        self.t == other.t && self.seq == other.seq
-    }
-}
-
-impl Eq for Event {}
-
-impl PartialOrd for Event {
-    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
-        Some(self.cmp(other))
-    }
-}
-
-impl Ord for Event {
-    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        self.t.total_cmp(&other.t).then_with(|| self.seq.cmp(&other.seq))
-    }
-}
+/// Whole-engine digest: (total resolved, per-model [`ModelFp`]s). The
+/// replica-set reconciler folds these into its fleet-level fingerprint.
+pub(crate) type EngineFp = (u64, Vec<ModelFp>);
 
 /// Multi-model discrete-event serving engine (virtual clock).
 pub struct SimEngine {
     cfg: SimEngineCfg,
     clock: VirtualClock,
     models: Vec<SimModel>,
-    heap: BinaryHeap<Reverse<Event>>,
-    seq: u64,
+    events: EventHeap<EventKind>,
     next_id: u64,
     next_tick_ms: Ms,
     sigma: f64,
@@ -266,8 +249,7 @@ impl SimEngine {
             cfg,
             clock,
             models,
-            heap: BinaryHeap::new(),
-            seq: 0,
+            events: EventHeap::new(),
             next_id: 0,
             sigma,
             noise: Pcg32::seeded(cfg.seed),
@@ -385,41 +367,31 @@ impl SimEngine {
         self.models.iter().map(|m| m.tracker.total()).sum()
     }
 
-    fn push_event(&mut self, t: Ms, kind: EventKind) {
-        self.seq += 1;
-        self.heap.push(Reverse(Event { t, seq: self.seq, kind }));
-    }
-
     /// Process every due event up to and including `t_end`.
     fn process_until(&mut self, t_end: Ms) {
-        while self
-            .heap
-            .peek()
-            .is_some_and(|Reverse(e)| e.t <= t_end)
-        {
-            let Reverse(ev) = self.heap.pop().unwrap();
-            self.clock.advance_to(ev.t);
-            match ev.kind {
+        while let Some((t, kind)) = self.events.pop_due(t_end) {
+            self.clock.advance_to(t);
+            match kind {
                 EventKind::Arrival { model, req } => {
                     let m = &mut self.models[model];
-                    m.rate.on_arrival(ev.t);
+                    m.rate.on_arrival(t);
                     m.cl_max_window = m.cl_max_window.max(req.comm_latency_ms);
                     m.queue.push(req);
-                    self.dispatch(model, ev.t);
+                    self.dispatch(model, t);
                 }
                 EventKind::Done { model, instance, requests, started_ms } => {
                     let record = self.cfg.record_completions;
                     let m = &mut self.models[model];
                     m.busy.insert(instance, false);
                     for r in &requests {
-                        let e2e = ev.t - r.sent_at_ms;
+                        let e2e = t - r.sent_at_ms;
                         m.tracker.record(
-                            ev.t,
+                            t,
                             &Outcome {
                                 request_id: r.id,
                                 e2e_ms: e2e,
                                 queue_ms: started_ms - r.arrived_at_ms,
-                                processing_ms: ev.t - started_ms,
+                                processing_ms: t - started_ms,
                                 violated: e2e > r.slo_ms + 1e-9,
                                 dropped: false,
                             },
@@ -427,12 +399,12 @@ impl SimEngine {
                         if record {
                             m.completions.push(Completion {
                                 request_id: r.id,
-                                at_ms: ev.t,
+                                at_ms: t,
                                 dropped: false,
                             });
                         }
                     }
-                    self.dispatch(model, ev.t);
+                    self.dispatch(model, t);
                 }
             }
         }
@@ -470,17 +442,15 @@ impl SimEngine {
                     .lognormal(-self.sigma * self.sigma / 2.0, self.sigma);
             }
             m.busy.insert(id, true);
-            self.seq += 1;
-            self.heap.push(Reverse(Event {
-                t: now + latency,
-                seq: self.seq,
-                kind: EventKind::Done {
+            self.events.schedule(
+                now + latency,
+                EventKind::Done {
                     model: idx,
                     instance: id,
                     requests: batch.requests,
                     started_ms: now,
                 },
-            }));
+            );
         }
     }
 
@@ -542,6 +512,73 @@ impl SimEngine {
                 self.models[idx].exec_model = model;
             }
         }
+    }
+
+    /// Observable state digest for the idle fast-forward's no-op
+    /// detector (see [`SimEngine::drain`]).
+    pub(crate) fn fingerprint(&self) -> EngineFp {
+        (
+            self.total_resolved(),
+            self.models
+                .iter()
+                .map(|m| {
+                    (
+                        m.cluster.allocated_cores(),
+                        m.batch,
+                        m.leases.len(),
+                        [
+                            m.exec_model.gamma.to_bits(),
+                            m.exec_model.epsilon.to_bits(),
+                            m.exec_model.delta.to_bits(),
+                            m.exec_model.eta.to_bits(),
+                        ],
+                    )
+                })
+                .collect(),
+        )
+    }
+
+    /// `true` iff the engine provably sits at an idle fixpoint *right
+    /// now*: every queue empty, every rate window drained (λ exactly 0 —
+    /// a decaying estimate would still change solver inputs at future
+    /// boundaries), every cluster transition landed, every policy
+    /// declaring its idle `decide` pure ([`Autoscaler::idle_fixpoint`]),
+    /// and no lease change in flight
+    /// ([`crate::arbiter::CoreArbiter::quiescent`]). Under these
+    /// conditions an adaptation boundary is a bit-exact no-op, so the
+    /// drain loop may jump over it.
+    fn idle_fixpoint_state(&self) -> bool {
+        let now = self.clock.now_ms();
+        self.models.iter().all(|m| {
+            m.queue.is_empty()
+                && m.rate.quiescent_at(now)
+                && m.cluster.settled(now)
+                && m.scaler.idle_fixpoint()
+        }) && self.arbiter.lock().unwrap().quiescent()
+    }
+
+    /// May a composite engine (replica set, pipeline) skip this engine's
+    /// next adaptation boundary outright? Unlike the internal drain skip
+    /// — which jumps *toward* the next scheduled event — a composite
+    /// caller has no per-engine jump target, so the event heap must be
+    /// fully empty on top of the idle-fixpoint conditions.
+    pub(crate) fn gap_skippable(&self) -> bool {
+        self.events.is_empty() && self.idle_fixpoint_state()
+    }
+
+    /// Advance exactly one adaptation boundary without running it. Only
+    /// sound when [`SimEngine::gap_skippable`] held at the boundary; the
+    /// tick grid stays bit-identical because the boundary accumulates by
+    /// the same repeated addition `tick` performs.
+    pub(crate) fn skip_idle_interval(&mut self) {
+        self.clock.advance_to(self.next_tick_ms);
+        self.next_tick_ms += self.cfg.adaptation_interval_ms;
+    }
+
+    /// Lifetime event-heap (pushes, pops) — the `engine_drain_events`
+    /// microbench's events/sec denominator.
+    pub(crate) fn event_counters(&self) -> (u64, u64) {
+        self.events.counters()
     }
 
     /// Per-tick lease renewal for every ready instance: keeps the ledger
@@ -635,7 +672,7 @@ impl ServingEngine for SimEngine {
             payload_bytes: req.payload.len() as f64 * 4.0,
         };
         self.models[idx].submitted += 1;
-        self.push_event(arrived, EventKind::Arrival { model: idx, req: request });
+        self.events.schedule(arrived, EventKind::Arrival { model: idx, req: request });
         Ok(id)
     }
 
@@ -705,12 +742,32 @@ impl ServingEngine for SimEngine {
     fn drain(&mut self) -> DrainReport {
         let mut ticks = 0u64;
         let mut stall = 0u64;
+        let mut last_fp: Option<EngineFp> = None;
         while self.total_resolved() < self.total_submitted() {
             let before = self.total_resolved();
             self.tick();
             ticks += 1;
+            // Idle fast-forward (next-event time advance): when the tick
+            // just executed was a provable no-op — identical fingerprint
+            // to the previous boundary AND the engine sits at an idle
+            // fixpoint — every boundary strictly before the next
+            // scheduled event is the same no-op, so jump straight to it.
+            // Skipped boundaries record nothing and change no state, so
+            // `SloTracker` outcomes stay bit-identical to the unskipped
+            // reference; only the tick count differs.
+            let fp = self.fingerprint();
+            if last_fp.as_ref() == Some(&fp) && self.idle_fixpoint_state() {
+                while self
+                    .events
+                    .next_time()
+                    .is_some_and(|t| t > self.next_tick_ms)
+                {
+                    self.skip_idle_interval();
+                }
+            }
+            last_fp = Some(fp);
             stall = if self.total_resolved() == before { stall + 1 } else { 0 };
-            if stall >= self.cfg.drain_stall_ticks && self.heap.is_empty() {
+            if stall >= self.cfg.drain_stall_ticks && self.events.is_empty() {
                 // Zero serving capacity and nothing in flight: account the
                 // remainder as drops so conservation holds.
                 let now = self.clock.now_ms();
@@ -1000,6 +1057,65 @@ mod tests {
         assert!(idle.cores_lent > 0, "idle floor never lent: {idle:?}");
         let report = e.drain();
         assert!(report.settled(), "{report:?}");
+    }
+
+    #[test]
+    fn drain_fast_forwards_idle_gaps_bit_identically() {
+        let build = || {
+            let mut reg = ModelRegistry::new();
+            reg.register(ModelSpec::named("resnet").unwrap()).unwrap();
+            let mut e = SimEngine::new(&reg, SimEngineCfg::default()).unwrap();
+            // A burst, a ten-minute dead gap, then a second burst.
+            for i in 0..20 {
+                e.submit("resnet", EngineRequest::new(1_000.0, 10.0).at(i as f64 * 25.0))
+                    .unwrap();
+            }
+            for i in 0..20 {
+                e.submit(
+                    "resnet",
+                    EngineRequest::new(1_000.0, 10.0).at(600_000.0 + i as f64 * 25.0),
+                )
+                .unwrap();
+            }
+            e
+        };
+        // Reference: one explicit tick per adaptation boundary, never
+        // skipping — the behaviour the fast-forward must reproduce.
+        let mut reference = build();
+        let mut ref_ticks = 0u64;
+        while reference.total_resolved() < reference.total_submitted() {
+            reference.tick();
+            ref_ticks += 1;
+        }
+        let mut fast = build();
+        let report = fast.drain();
+        assert!(report.settled(), "{report:?}");
+        assert!(
+            report.ticks < ref_ticks / 10,
+            "idle gap not fast-forwarded: {} ticks vs {ref_ticks} reference",
+            report.ticks
+        );
+        assert_eq!(
+            fast.snapshot("resnet").unwrap(),
+            reference.snapshot("resnet").unwrap()
+        );
+        let (ft, rt) = (
+            fast.tracker("resnet").unwrap(),
+            reference.tracker("resnet").unwrap(),
+        );
+        assert_eq!(ft.mean_e2e_ms().to_bits(), rt.mean_e2e_ms().to_bits());
+        assert_eq!(
+            ft.e2e_percentiles(&[50.0, 99.0]).map(|v| {
+                v.into_iter().map(f64::to_bits).collect::<Vec<_>>()
+            }),
+            rt.e2e_percentiles(&[50.0, 99.0]).map(|v| {
+                v.into_iter().map(f64::to_bits).collect::<Vec<_>>()
+            })
+        );
+        assert_eq!(ft.timeline(), rt.timeline());
+        // The clocks agree at the moment the last request resolved, and
+        // the skipped grid stayed on the reference's float-exact ticks.
+        assert_eq!(fast.now_ms().to_bits(), reference.now_ms().to_bits());
     }
 
     #[test]

@@ -27,6 +27,19 @@
 //! `GET /v1/models/{name}/stats`, with legacy `POST /infer` aliasing the
 //! default model).
 //!
+//! ## Determinism and the event model
+//!
+//! Every virtual-time engine runs on the event-heap discrete-event core
+//! ([`sim::EventHeap`]): pending work is `(time, seq, event)` entries
+//! ordered by `f64::total_cmp` then by a monotone submission sequence, so
+//! simultaneous events execute in submission order and idle periods cost
+//! zero work. Adaptation boundaries stay a fixed time grid (they are
+//! walked, not scheduled), which keeps clocks float-exact and reports
+//! byte-identical across runs and machines — the property the spongebench
+//! CI determinism checks `cmp` for. The full event model (event kinds,
+//! tie-break order, idle fast-forward rules) is documented in
+//! `docs/ARCHITECTURE.md`.
+//!
 //! ## Module map
 //!
 //! **Serving API (top layer)**
@@ -48,8 +61,10 @@
 //!   (hand-rolled HTTP/1.0; endpoint reference in the module docs)
 //! * [`coordinator`] — live pipeline: EDF queue + batcher + processor +
 //!   scaler threads (what `LiveEngine` wraps, one per model)
-//! * [`sim`] — the original single-model discrete-event loop
-//!   (`sim::run`), kept for the Fig. 4 benches and ablations
+//! * [`sim`] — the discrete-event substrate: [`sim::EventHeap`] (the
+//!   deterministic event queue every virtual-time engine drains) and the
+//!   original single-model loop (`sim::run`), kept for the Fig. 4 benches
+//!   and ablations
 //!
 //! **The paper's mechanisms**
 //! * [`queue`] — EDF priority queue and dynamic batch extraction

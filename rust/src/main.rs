@@ -88,7 +88,8 @@ Routes: GET /v1/models | POST /v1/models/{name}/infer |
         "bench" => {
             "USAGE: sponge bench [OPTIONS]
 
-  --matrix NAME     experiment matrix: default | paper   [default: default]
+  --matrix NAME     experiment matrix: default | paper | scale
+                    [default: default]
   --micro           run the hot-path microbench suite instead of a matrix
                     (queue snapshot, IP solve cold/warm, replica planning,
                     each vs its pre-refactor reference implementation);
@@ -107,9 +108,8 @@ Routes: GET /v1/models | POST /v1/models/{name}/infer |
                     notice. Latencies are virtual-time: machine-independent.
   --threshold PCT   regression threshold in percent   [default: 25]
 
-The report schema (spongebench/v1) is documented in README.md and
-rust/src/experiment/report.rs; the micro section (kind: \"micro\") in
-rust/src/microbench/mod.rs.
+The report schema (spongebench/v1), the cell-id grammar, and the
+baseline-arming procedure are documented in docs/BENCH.md.
 "
         }
         "simulate" => {
@@ -360,7 +360,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
 
     let name = args.str_or("matrix", "default");
     let mut spec = ExperimentSpec::named(&name)
-        .ok_or_else(|| anyhow::anyhow!("unknown matrix '{name}' (default|paper)"))?;
+        .ok_or_else(|| anyhow::anyhow!("unknown matrix '{name}' (default|paper|scale)"))?;
     if args.has("quick") {
         spec = spec.quick();
     }

@@ -32,8 +32,10 @@ pub mod reference;
 use std::hint::black_box;
 use std::time::Instant;
 
+use crate::engine::{EngineRequest, ModelRegistry, ServingEngine, SimEngine, SimEngineCfg};
 use crate::perfmodel::LatencyModel;
 use crate::queue::EdfQueue;
+use crate::sim::EventHeap;
 use crate::solver::{
     plan_replicas, IncrementalSolver, IpSolver, Solution, SolverChoice, SolverInput,
     SolverLimits,
@@ -313,6 +315,38 @@ pub fn run_micro(cfg: &MicroCfg) -> MicroReport {
         }));
     }
 
+    // --- the event-heap primitive every discrete-event engine schedules
+    // on: one steady-state push+pop cycle per op against a pre-filled
+    // heap (the regime `SimEngine::process_until` lives in).
+    {
+        let mut heap: EventHeap<u64> = EventHeap::new();
+        for i in 0..n as u64 {
+            heap.schedule((i % 97) as f64, i);
+        }
+        benches.push(run_bench("heap_push_pop", n, 4096, |i| {
+            heap.schedule(((i * 131) % 997) as f64, i);
+            heap.pop_due(f64::INFINITY).map_or(0, |(_, v)| v)
+        }));
+    }
+
+    // --- end-to-end event throughput: a saturating burst built and
+    // drained through a fresh SimEngine per op. ns_per_op divided by the
+    // event count (`n` arrivals + as many completion events) is the
+    // engine's ns/event; the digest folds the heap's lifetime counters so
+    // the amount of event traffic itself is pinned across runs.
+    let ev_n = if cfg.quick { 2_000 } else { 10_000 };
+    benches.push(run_bench("engine_drain_events", ev_n, 2, |_| {
+        let reg = ModelRegistry::from_names("yolov5s").expect("builtin model");
+        let mut e = SimEngine::new(&reg, SimEngineCfg::default()).expect("fresh engine");
+        for i in 0..ev_n {
+            e.submit("yolov5s", EngineRequest::new(1_000.0, 10.0).at(i as f64))
+                .expect("valid request");
+        }
+        e.drain();
+        let (pushes, pops) = e.event_counters();
+        pushes.rotate_left(32) ^ pops
+    }));
+
     // --- two-level replica planning: per-k collect vs strided view with
     // a shared frontier. λ past one replica's ceiling so the fleet
     // search actually walks k.
@@ -363,6 +397,8 @@ mod tests {
             "solve/legacy",
             "hotpath_tick",
             "hotpath_tick/legacy",
+            "heap_push_pop",
+            "engine_drain_events",
             "plan_replicas",
             "plan_replicas/legacy",
         ] {

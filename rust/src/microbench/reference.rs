@@ -13,9 +13,42 @@
 //!
 //! Nothing in the serving path calls these.
 
+use crate::engine::{DrainReport, ServingEngine};
 use crate::perfmodel::LatencyModel;
 use crate::solver::{throughput_ok, ReplicaPlan, Solution, SolverInput, SolverLimits};
 use crate::{BatchSize, Cores, Ms};
+
+/// The pre-event-heap drain loop: one explicit [`ServingEngine::tick`]
+/// per adaptation boundary, never fast-forwarding idle gaps — the
+/// behaviour every engine's heap-driven `drain()` must reproduce
+/// bit-identically (pinned by `rust/tests/event_heap_equivalence.rs` on
+/// randomized scenarios, and by each engine's own in-module gap test).
+///
+/// `max_ticks` bounds runaway scenarios (an engine that cannot settle —
+/// zero capacity, say — would loop forever here, since this loop
+/// deliberately has no force-drop escape hatch); the returned report says
+/// how far it got.
+pub fn reference_drain(engine: &mut dyn ServingEngine, max_ticks: u64) -> DrainReport {
+    let totals = |e: &dyn ServingEngine| {
+        e.models()
+            .iter()
+            .map(|m| {
+                e.snapshot(m)
+                    .map(|s| (s.submitted, s.resolved()))
+                    .unwrap_or((0, 0))
+            })
+            .fold((0u64, 0u64), |acc, t| (acc.0 + t.0, acc.1 + t.1))
+    };
+    let mut ticks = 0u64;
+    loop {
+        let (submitted, resolved) = totals(engine);
+        if resolved >= submitted || ticks >= max_ticks {
+            return DrainReport { submitted, resolved, ticks };
+        }
+        engine.tick();
+        ticks += 1;
+    }
+}
 
 /// The old drain check: simulate the EDF queue drain with an accumulated
 /// `q_r += l` (Algorithm 1 lines 9–14), early-exiting on the first

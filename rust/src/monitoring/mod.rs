@@ -188,6 +188,16 @@ impl RateEstimator {
         self.arrivals.push_back(at_ms);
     }
 
+    /// `true` iff the trailing window is (or will be) empty at `now` —
+    /// i.e. [`RateEstimator::rate_rps`] would report exactly 0.0, and
+    /// will keep reporting 0.0 at every later instant until the next
+    /// arrival. Arrivals are recorded in time order, so inspecting the
+    /// newest one suffices. Cheap and `&self`: the idle-gap gate in the
+    /// discrete-event drain loops calls this without draining the window.
+    pub fn quiescent_at(&self, now: Ms) -> bool {
+        self.arrivals.back().is_none_or(|&t| t < now - self.window_ms)
+    }
+
     /// Estimated arrival rate (requests/second) over the trailing window.
     pub fn rate_rps(&mut self, now: Ms) -> f64 {
         while let Some(&front) = self.arrivals.front() {
@@ -352,5 +362,22 @@ mod tests {
         assert!((e.rate_rps(1_000.0) - 20.0).abs() < 1.0);
         // 2 s later with no arrivals, the window has drained.
         assert_eq!(e.rate_rps(3_000.0), 0.0);
+    }
+
+    #[test]
+    fn rate_estimator_quiescence_tracks_window_edge() {
+        let mut e = RateEstimator::new(1_000.0);
+        assert!(e.quiescent_at(0.0), "empty estimator is quiescent");
+        e.on_arrival(500.0);
+        assert!(!e.quiescent_at(1_000.0), "arrival inside the window");
+        // rate_rps drains strictly-older-than-edge entries; quiescent_at
+        // must agree with it at the boundary (500 is NOT < 1500 - 1000).
+        assert!(!e.quiescent_at(1_500.0));
+        assert!((e.rate_rps(1_500.0) - 1.0).abs() < 1e-9);
+        assert!(e.quiescent_at(1_500.1), "just past the window edge");
+        assert_eq!(e.rate_rps(1_500.1), 0.0);
+        // quiescent_at is &self: the probe above must not have drained.
+        e.on_arrival(2_000.0);
+        assert!(!e.quiescent_at(2_500.0));
     }
 }

@@ -18,16 +18,17 @@
 //! unreachable) resolves the request as an immediate violation without
 //! occupying a queue slot.
 
-use std::cmp::Reverse;
-use std::collections::{BinaryHeap, HashMap};
+use std::collections::HashMap;
 use std::sync::Arc;
 
 use crate::arbiter::{ArbiterChoice, SharedArbiter};
+use crate::engine::sim::EngineFp;
 use crate::engine::{
     Clock, Completion, DrainReport, EngineError, EngineRequest, ModelRegistry,
     ModelSnapshot, ServingEngine, SimEngine, SimEngineCfg, VirtualClock,
 };
 use crate::monitoring::{Outcome, SloTracker};
+use crate::sim::EventHeap;
 use crate::{Cores, Ms};
 
 use super::planner::{apportion, stage_estimate, Apportionment};
@@ -130,37 +131,18 @@ struct PipelineRt {
 }
 
 /// A pipeline arrival buffered until its virtual send time falls inside
-/// the tick window.
+/// the tick window. The send time itself is the event-heap key; the
+/// heap's internal sequence reproduces submission order at equal times.
 struct Pending {
-    at_ms: Ms,
-    seq: u64,
     pipeline: usize,
     id: u64,
     slo_ms: Ms,
     comm_ms: Ms,
 }
 
-impl PartialEq for Pending {
-    fn eq(&self, other: &Self) -> bool {
-        self.at_ms == other.at_ms && self.seq == other.seq
-    }
-}
-
-impl Eq for Pending {}
-
-impl PartialOrd for Pending {
-    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
-        Some(self.cmp(other))
-    }
-}
-
-impl Ord for Pending {
-    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        self.at_ms
-            .total_cmp(&other.at_ms)
-            .then_with(|| self.seq.cmp(&other.seq))
-    }
-}
+/// Engine-wide no-op detector for the drain fast-forward: total resolved
+/// plus every stage engine's own digest.
+type PipeFp = (u64, Vec<EngineFp>);
 
 /// DAGs of models served under one end-to-end dynamic SLO (virtual
 /// clock; the fourth [`ServingEngine`] implementation).
@@ -168,8 +150,7 @@ pub struct PipelineEngine {
     cfg: PipelineEngineCfg,
     clock: VirtualClock,
     pipelines: Vec<PipelineRt>,
-    pending: BinaryHeap<Reverse<Pending>>,
-    seq: u64,
+    pending: EventHeap<Pending>,
     next_id: u64,
     next_tick_ms: Ms,
     arbiter: SharedArbiter,
@@ -302,8 +283,7 @@ impl PipelineEngine {
             cfg,
             clock: VirtualClock::new(),
             pipelines,
-            pending: BinaryHeap::new(),
-            seq: 0,
+            pending: EventHeap::new(),
             next_id: 0,
             arbiter,
         })
@@ -414,16 +394,16 @@ impl PipelineEngine {
         self.pending.is_empty() && self.pipelines.iter().all(|p| p.inflight.is_empty())
     }
 
-    /// Admit one pipeline arrival: create the in-flight record and enter
-    /// every source stage at the server-arrival time (send + comm — the
-    /// dynamic-SLO subtraction).
-    fn admit(&mut self, pend: Pending) {
+    /// Admit one pipeline arrival sent at `at_ms`: create the in-flight
+    /// record and enter every source stage at the server-arrival time
+    /// (send + comm — the dynamic-SLO subtraction).
+    fn admit(&mut self, at_ms: Ms, pend: Pending) {
         let pidx = pend.pipeline;
-        let t_adm = pend.at_ms + pend.comm_ms;
+        let t_adm = at_ms + pend.comm_ms;
         let n = self.pipelines[pidx].spec.stages.len();
         let entry = Inflight {
-            sent_ms: pend.at_ms,
-            deadline_ms: pend.at_ms + pend.slo_ms,
+            sent_ms: at_ms,
+            deadline_ms: at_ms + pend.slo_ms,
             pending_preds: self.pipelines[pidx].preds.clone(),
             ready_at: vec![t_adm; n],
             completed: 0,
@@ -555,17 +535,17 @@ impl PipelineEngine {
     /// (the drain stall guard — conservation over liveness).
     fn force_drop_leftovers(&mut self) {
         let now = self.clock.now_ms();
-        let mut pendings: Vec<Pending> = Vec::new();
-        while let Some(Reverse(pend)) = self.pending.pop() {
-            pendings.push(pend);
+        let mut pendings: Vec<(Ms, Pending)> = Vec::new();
+        while let Some(due) = self.pending.pop_due(f64::INFINITY) {
+            pendings.push(due);
         }
-        for pend in pendings {
+        for (at_ms, pend) in pendings {
             self.pipelines[pend.pipeline].tracker.record(
                 now,
                 &Outcome {
                     request_id: pend.id,
-                    e2e_ms: now - pend.at_ms,
-                    queue_ms: now - pend.at_ms,
+                    e2e_ms: now - at_ms,
+                    queue_ms: now - at_ms,
                     processing_ms: 0.0,
                     violated: true,
                     dropped: true,
@@ -599,6 +579,42 @@ impl PipelineEngine {
             }
         }
     }
+
+    /// Observable state digest for the drain fast-forward's no-op
+    /// detector: total resolved plus every stage engine's own digest.
+    fn fingerprint(&self) -> PipeFp {
+        (
+            self.total_resolved(),
+            self.pipelines
+                .iter()
+                .flat_map(|p| p.stages.iter().map(|s| s.engine.fingerprint()))
+                .collect(),
+        )
+    }
+
+    /// `true` iff every tick until the next pending arrival is provably a
+    /// no-op: no pipeline request is in flight anywhere, and each stage
+    /// engine sits at its own idle fixpoint with an empty event heap.
+    fn gap_skippable(&self) -> bool {
+        self.pipelines.iter().all(|p| {
+            p.inflight.is_empty() && p.stages.iter().all(|s| s.engine.gap_skippable())
+        })
+    }
+
+    /// Jump the whole engine across one adaptation interval without
+    /// work: each stage's boundary moves exactly as its own tick would
+    /// have moved it (`+= interval` on the same accumulated float grid,
+    /// so clocks stay bit-identical to the unskipped run), and the
+    /// pipeline-level grid advances in lockstep.
+    fn skip_idle_interval(&mut self) {
+        for p in &mut self.pipelines {
+            for s in &mut p.stages {
+                s.engine.skip_idle_interval();
+            }
+        }
+        self.clock.advance_to(self.next_tick_ms);
+        self.next_tick_ms += self.cfg.engine.adaptation_interval_ms;
+    }
 }
 
 impl ServingEngine for PipelineEngine {
@@ -627,29 +643,19 @@ impl ServingEngine for PipelineEngine {
         let at = req.at_ms.unwrap_or(now).max(now);
         let id = self.next_id;
         self.next_id += 1;
-        self.seq += 1;
         self.pipelines[pidx].accepted += 1;
-        self.pending.push(Reverse(Pending {
-            at_ms: at,
-            seq: self.seq,
-            pipeline: pidx,
-            id,
-            slo_ms: req.slo_ms,
-            comm_ms: req.comm_ms,
-        }));
+        self.pending.schedule(
+            at,
+            Pending { pipeline: pidx, id, slo_ms: req.slo_ms, comm_ms: req.comm_ms },
+        );
         Ok(id)
     }
 
     fn tick(&mut self) {
         let t1 = self.next_tick_ms;
         // 1. Admit arrivals whose send time falls inside this window.
-        while self
-            .pending
-            .peek()
-            .is_some_and(|Reverse(p)| p.at_ms <= t1)
-        {
-            let Reverse(pend) = self.pending.pop().unwrap();
-            self.admit(pend);
+        while let Some((at_ms, pend)) = self.pending.pop_due(t1) {
+            self.admit(at_ms, pend);
         }
         // 2. Tick stages in topological order: a predecessor's window-t1
         //    completions are handed to successors *before* those tick, so
@@ -674,10 +680,25 @@ impl ServingEngine for PipelineEngine {
     fn drain(&mut self) -> DrainReport {
         let mut ticks = 0u64;
         let mut stall = 0u64;
+        let mut last_fp: Option<PipeFp> = None;
         while !self.settled() {
             let before = self.total_resolved();
             self.tick();
             ticks += 1;
+            // Idle fast-forward (same protocol as `SimEngine::drain`):
+            // after two consecutive no-op ticks at a provable idle
+            // fixpoint, skip boundaries up to the next pending arrival.
+            let fp = self.fingerprint();
+            if last_fp.as_ref() == Some(&fp) && self.gap_skippable() {
+                while self
+                    .pending
+                    .next_time()
+                    .is_some_and(|t| t > self.next_tick_ms)
+                {
+                    self.skip_idle_interval();
+                }
+            }
+            last_fp = Some(fp);
             stall = if self.total_resolved() == before { stall + 1 } else { 0 };
             if stall >= self.cfg.drain_stall_ticks {
                 self.force_drop_leftovers();
@@ -697,7 +718,7 @@ impl ServingEngine for PipelineEngine {
         let mut queue_len = self
             .pending
             .iter()
-            .filter(|Reverse(pe)| pe.pipeline == pidx)
+            .filter(|(_, pe)| pe.pipeline == pidx)
             .count();
         let mut cores = 0u32;
         let mut batch = 0u32;
@@ -883,5 +904,58 @@ mod tests {
         let stages = e.stage_stats("diamond").unwrap();
         // The join stage runs only after both branches complete.
         assert!(stages[3].submitted <= stages[1].completed.min(stages[2].completed));
+    }
+
+    #[test]
+    fn drain_fast_forwards_idle_gaps_bit_identically() {
+        let build = || {
+            let reg = chain_registry(
+                &["yolov5n", "yolov5s"],
+                Apportionment::Percentile(95.0),
+            );
+            let mut e = PipelineEngine::new(&reg, PipelineEngineCfg::default()).unwrap();
+            // A burst, a ten-minute dead gap, then a second burst.
+            for i in 0..20 {
+                e.submit("chain", EngineRequest::new(2_000.0, 10.0).at(i as f64 * 50.0))
+                    .unwrap();
+                e.submit(
+                    "chain",
+                    EngineRequest::new(2_000.0, 10.0).at(600_000.0 + i as f64 * 50.0),
+                )
+                .unwrap();
+            }
+            e
+        };
+        // Reference: one explicit tick per adaptation boundary, never
+        // skipping — the behaviour the fast-forward must reproduce.
+        let mut reference = build();
+        let mut ref_ticks = 0u64;
+        while !reference.settled() {
+            reference.tick();
+            ref_ticks += 1;
+        }
+        let mut fast = build();
+        let report = fast.drain();
+        assert!(report.settled(), "{report:?}");
+        assert!(
+            report.ticks < ref_ticks / 10,
+            "idle gap not fast-forwarded: {} ticks vs {ref_ticks} reference",
+            report.ticks
+        );
+        assert_eq!(
+            fast.snapshot("chain").unwrap(),
+            reference.snapshot("chain").unwrap()
+        );
+        let (ft, rt) = (
+            fast.tracker("chain").unwrap(),
+            reference.tracker("chain").unwrap(),
+        );
+        assert_eq!(ft.mean_e2e_ms().to_bits(), rt.mean_e2e_ms().to_bits());
+        assert_eq!(ft.timeline(), rt.timeline());
+        // The skipped grid stayed on the reference's float-exact ticks.
+        assert_eq!(
+            fast.clock.now_ms().to_bits(),
+            reference.clock.now_ms().to_bits()
+        );
     }
 }

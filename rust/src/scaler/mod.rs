@@ -92,6 +92,21 @@ pub trait Autoscaler: Send {
     /// starts (instances are pre-warmed so every policy begins stable,
     /// as in the paper's Fig. 4 where t=0 starts from a working system).
     fn initial_cores(&self) -> Vec<Cores>;
+
+    /// `true` iff, whenever the observation is *idle* (λ = 0, empty
+    /// queue) and the system already sits at this policy's idle target,
+    /// `decide` is a pure function of the observation — repeated calls
+    /// return the same actions and mutate no time-dependent state. The
+    /// discrete-event drain loop uses this to fast-forward adaptation
+    /// boundaries through quiescent gaps without changing outcomes.
+    ///
+    /// Default `false` (conservative: never skip). Only override to
+    /// `true` for policies whose `decide` carries no wall-clock state;
+    /// time-stamped policies (e.g. FA2's reconfiguration cooldown) must
+    /// stay `false`.
+    fn idle_fixpoint(&self) -> bool {
+        false
+    }
 }
 
 // ---------------------------------------------------------------- Sponge --
@@ -231,6 +246,14 @@ impl Autoscaler for SpongeScaler {
     fn initial_cores(&self) -> Vec<Cores> {
         vec![1]
     }
+
+    /// Sponge's `decide` is a pure function of the observation (the warm
+    /// bracket only changes solve *cost*, never the solution), so an idle
+    /// system sits at a fixpoint: λ = 0, empty queue ⇒ the same
+    /// `[Resize, SetBatch]` pair every interval.
+    fn idle_fixpoint(&self) -> bool {
+        true
+    }
 }
 
 // ------------------------------------------------------------------- FA2 --
@@ -357,6 +380,11 @@ impl Autoscaler for StaticScaler {
     fn initial_cores(&self) -> Vec<Cores> {
         vec![self.cores]
     }
+
+    /// Stateless batch selection: same idle observation ⇒ same action.
+    fn idle_fixpoint(&self) -> bool {
+        true
+    }
 }
 
 // ------------------------------------------------------------------- VPA --
@@ -411,6 +439,13 @@ impl Autoscaler for VpaScaler {
 
     fn initial_cores(&self) -> Vec<Cores> {
         vec![1]
+    }
+
+    /// Threshold rule over (λ, current cores) only — at λ = 0 below the
+    /// low-water mark it keeps shrinking until 1 core, then repeats the
+    /// identical no-op decision forever.
+    fn idle_fixpoint(&self) -> bool {
+        true
     }
 }
 

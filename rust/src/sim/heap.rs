@@ -1,0 +1,219 @@
+//! [`EventHeap`]: the deterministic event queue at the core of every
+//! discrete-event engine in this crate.
+//!
+//! Four subsystems used to carry their own ad-hoc `BinaryHeap<Reverse<…>>`
+//! with a hand-rolled `(time, seq)` ordering: the single-model
+//! [`run`](crate::sim::run) loop, [`crate::engine::SimEngine`], the
+//! replica-set pending timeline, and the pipeline admission timeline.
+//! This type is that pattern, written once:
+//!
+//! * **Next-event time advance.** [`EventHeap::pop_due`] yields events in
+//!   nondecreasing time order up to an inclusive bound; an engine
+//!   advances its virtual clock to each popped event and does *zero work*
+//!   for the idle stretches in between — the property that makes
+//!   million-request horizons affordable (see `docs/ARCHITECTURE.md`,
+//!   "Event model").
+//! * **Deterministic tie-breaks.** Every [`EventHeap::schedule`] stamps a
+//!   monotone sequence number; events at the same timestamp pop in
+//!   schedule order (`f64::total_cmp` on time, then `seq`). Two runs of
+//!   the same scenario pop the exact same event sequence, which is what
+//!   keeps `sponge bench --stable` byte-reproducible.
+//! * **Instrumented.** Push/pop counters feed the `heap_push_pop`
+//!   microbenchmark and let composite engines assert quiescence cheaply.
+//!
+//! Times are `f64` milliseconds ordered by [`f64::total_cmp`], so NaN
+//! never panics the ordering (it sorts after every real time — and the
+//! engines never schedule NaN).
+
+use std::cmp::Reverse;
+use std::collections::BinaryHeap;
+
+use crate::Ms;
+
+struct Entry<E> {
+    t: Ms,
+    seq: u64,
+    ev: E,
+}
+
+impl<E> PartialEq for Entry<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.t.to_bits() == other.t.to_bits() && self.seq == other.seq
+    }
+}
+
+impl<E> Eq for Entry<E> {}
+
+impl<E> PartialOrd for Entry<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl<E> Ord for Entry<E> {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        self.t.total_cmp(&other.t).then_with(|| self.seq.cmp(&other.seq))
+    }
+}
+
+/// A min-heap of `(time, seq, event)` with deterministic tie-breaks —
+/// the discrete-event core shared by every virtual-time engine.
+///
+/// ```
+/// use sponge::sim::EventHeap;
+///
+/// let mut heap: EventHeap<&str> = EventHeap::new();
+/// heap.schedule(20.0, "b");
+/// heap.schedule(10.0, "a");
+/// heap.schedule(10.0, "a2"); // same time: pops after "a" (schedule order)
+/// assert_eq!(heap.next_time(), Some(10.0));
+/// assert_eq!(heap.pop_due(10.0), Some((10.0, "a")));
+/// assert_eq!(heap.pop_due(10.0), Some((10.0, "a2")));
+/// assert_eq!(heap.pop_due(10.0), None); // "b" is not due yet
+/// assert_eq!(heap.pop_due(f64::INFINITY), Some((20.0, "b")));
+/// assert!(heap.is_empty());
+/// ```
+pub struct EventHeap<E> {
+    heap: BinaryHeap<Reverse<Entry<E>>>,
+    seq: u64,
+    pushes: u64,
+    pops: u64,
+}
+
+impl<E> Default for EventHeap<E> {
+    fn default() -> Self {
+        EventHeap::new()
+    }
+}
+
+impl<E> EventHeap<E> {
+    pub fn new() -> EventHeap<E> {
+        EventHeap { heap: BinaryHeap::new(), seq: 0, pushes: 0, pops: 0 }
+    }
+
+    /// Schedule `ev` at time `t`. Events at equal times pop in schedule
+    /// order. Scheduling in the past is allowed — the event simply pops
+    /// at the next [`EventHeap::pop_due`] whose bound covers it (engines
+    /// clamp execution to their current virtual time).
+    pub fn schedule(&mut self, t: Ms, ev: E) {
+        self.seq += 1;
+        self.pushes += 1;
+        self.heap.push(Reverse(Entry { t, seq: self.seq, ev }));
+    }
+
+    /// Pop the earliest event with `t <= t_end`, or `None` if the next
+    /// event (if any) is later than the bound.
+    pub fn pop_due(&mut self, t_end: Ms) -> Option<(Ms, E)> {
+        if self.heap.peek().is_some_and(|Reverse(e)| e.t <= t_end) {
+            let Reverse(e) = self.heap.pop().expect("peeked");
+            self.pops += 1;
+            Some((e.t, e.ev))
+        } else {
+            None
+        }
+    }
+
+    /// Timestamp of the earliest scheduled event.
+    pub fn next_time(&self) -> Option<Ms> {
+        self.heap.peek().map(|Reverse(e)| e.t)
+    }
+
+    /// Borrow the earliest scheduled event without popping it.
+    pub fn peek(&self) -> Option<(Ms, &E)> {
+        self.heap.peek().map(|Reverse(e)| (e.t, &e.ev))
+    }
+
+    /// Iterate over all scheduled events in arbitrary (heap) order —
+    /// accounting reads only; never rely on the iteration order.
+    pub fn iter(&self) -> impl Iterator<Item = (Ms, &E)> {
+        self.heap.iter().map(|Reverse(e)| (e.t, &e.ev))
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    /// Lifetime (pushes, pops) — the `heap_push_pop` microbench
+    /// instrumentation and a cheap progress signal for drain loops.
+    pub fn counters(&self) -> (u64, u64) {
+        (self.pushes, self.pops)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order_with_seq_tiebreak() {
+        let mut h = EventHeap::new();
+        h.schedule(30.0, 'c');
+        h.schedule(10.0, 'a');
+        h.schedule(10.0, 'b'); // ties pop in schedule order
+        h.schedule(20.0, 'd');
+        let mut out = Vec::new();
+        while let Some((t, e)) = h.pop_due(f64::INFINITY) {
+            out.push((t, e));
+        }
+        assert_eq!(out, vec![(10.0, 'a'), (10.0, 'b'), (20.0, 'd'), (30.0, 'c')]);
+    }
+
+    #[test]
+    fn pop_due_bound_is_inclusive() {
+        let mut h = EventHeap::new();
+        h.schedule(5.0, 1u32);
+        h.schedule(5.0 + f64::EPSILON * 16.0, 2u32);
+        assert_eq!(h.pop_due(5.0), Some((5.0, 1)));
+        assert_eq!(h.pop_due(5.0), None, "later event must not pop early");
+        assert_eq!(h.len(), 1);
+        assert_eq!(h.next_time(), Some(5.0 + f64::EPSILON * 16.0));
+    }
+
+    #[test]
+    fn peek_and_iter_do_not_consume() {
+        let mut h = EventHeap::new();
+        h.schedule(2.0, "x");
+        h.schedule(1.0, "y");
+        assert_eq!(h.peek(), Some((1.0, &"y")));
+        assert_eq!(h.iter().count(), 2);
+        assert_eq!(h.len(), 2);
+    }
+
+    #[test]
+    fn counters_track_lifetime_traffic() {
+        let mut h = EventHeap::new();
+        for i in 0..10 {
+            h.schedule(i as f64, i);
+        }
+        for _ in 0..4 {
+            h.pop_due(f64::INFINITY);
+        }
+        assert_eq!(h.counters(), (10, 4));
+        assert_eq!(h.len(), 6);
+        assert!(!h.is_empty());
+    }
+
+    #[test]
+    fn identical_schedules_pop_identically() {
+        // The determinism contract: same schedule sequence → same pop
+        // sequence, bit for bit.
+        let run = || {
+            let mut h = EventHeap::new();
+            let mut t = 0.37f64;
+            for i in 0..500u64 {
+                t = (t * 1.7).rem_euclid(97.0); // deterministic pseudo-times
+                h.schedule(t, i);
+            }
+            let mut out = Vec::new();
+            while let Some((tt, i)) = h.pop_due(f64::INFINITY) {
+                out.push((tt.to_bits(), i));
+            }
+            out
+        };
+        assert_eq!(run(), run());
+    }
+}

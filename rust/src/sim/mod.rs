@@ -9,9 +9,14 @@
 //!
 //! Event order is fully deterministic: ties break on a monotone sequence
 //! number, and all randomness (arrival gaps, latency noise) is PCG-seeded.
+//! The event queue itself is the shared [`EventHeap`] (see [`heap`]) —
+//! the same discrete-event core every `ServingEngine` runs on.
 
-use std::cmp::Reverse;
-use std::collections::{BinaryHeap, HashMap};
+pub mod heap;
+
+pub use heap::EventHeap;
+
+use std::collections::HashMap;
 
 use crate::cluster::{Cluster, ClusterCfg};
 use crate::monitoring::{Outcome, RateEstimator, SloTracker};
@@ -91,48 +96,16 @@ enum EventKind {
     Tick,
 }
 
-struct Event {
-    t: Ms,
-    seq: u64,
-    kind: EventKind,
-}
-
-impl PartialEq for Event {
-    fn eq(&self, other: &Self) -> bool {
-        self.t == other.t && self.seq == other.seq
-    }
-}
-
-impl Eq for Event {}
-
-impl PartialOrd for Event {
-    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
-        Some(self.cmp(other))
-    }
-}
-
-impl Ord for Event {
-    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        self.t.total_cmp(&other.t).then_with(|| self.seq.cmp(&other.seq))
-    }
-}
-
 /// Run one policy over one workload/trace. Deterministic per config+seed.
 pub fn run(cfg: &SimConfig, net: &NetworkModel, mut scaler: Box<dyn Autoscaler>) -> SimResult {
     let requests = cfg.workload.generate(cfg.horizon_ms, net);
     let generated = requests.len() as u64;
 
-    let mut heap: BinaryHeap<Reverse<Event>> = BinaryHeap::new();
-    let mut seq = 0u64;
-    let push = |heap: &mut BinaryHeap<Reverse<Event>>, seq: &mut u64, t: Ms, kind: EventKind| {
-        *seq += 1;
-        heap.push(Reverse(Event { t, seq: *seq, kind }));
-    };
-
+    let mut heap: EventHeap<EventKind> = EventHeap::new();
     for r in requests {
-        push(&mut heap, &mut seq, r.arrived_at_ms, EventKind::Arrival(r));
+        heap.schedule(r.arrived_at_ms, EventKind::Arrival(r));
     }
-    push(&mut heap, &mut seq, 0.0, EventKind::Tick);
+    heap.schedule(0.0, EventKind::Tick);
 
     let mut cluster = Cluster::new(cfg.cluster);
     // Pre-warm the policy's initial fleet (the paper's runs start from a
@@ -169,9 +142,8 @@ pub fn run(cfg: &SimConfig, net: &NetworkModel, mut scaler: Box<dyn Autoscaler>)
     // via Action::SwitchModel; plain policies never touch it).
     let mut exec_model = cfg.model;
 
-    while let Some(Reverse(ev)) = heap.pop() {
-        let now = ev.t;
-        match ev.kind {
+    while let Some((now, kind)) = heap.pop_due(f64::INFINITY) {
+        match kind {
             EventKind::Arrival(r) => {
                 rate.on_arrival(now);
                 cl_max_window = cl_max_window.max(r.comm_latency_ms);
@@ -193,7 +165,7 @@ pub fn run(cfg: &SimConfig, net: &NetworkModel, mut scaler: Box<dyn Autoscaler>)
                 queue.push(r);
                 dispatch(
                     now, &mut queue, &mut cluster, &mut busy, batch_size, &exec_model,
-                    sigma, &mut noise, &mut heap, &mut seq, &mut tracker,
+                    sigma, &mut noise, &mut heap, &mut tracker,
                 );
             }
             EventKind::Done { instance, requests, started_ms } => {
@@ -214,7 +186,7 @@ pub fn run(cfg: &SimConfig, net: &NetworkModel, mut scaler: Box<dyn Autoscaler>)
                 }
                 dispatch(
                     now, &mut queue, &mut cluster, &mut busy, batch_size, &exec_model,
-                    sigma, &mut noise, &mut heap, &mut seq, &mut tracker,
+                    sigma, &mut noise, &mut heap, &mut tracker,
                 );
             }
             EventKind::Tick => {
@@ -245,11 +217,11 @@ pub fn run(cfg: &SimConfig, net: &NetworkModel, mut scaler: Box<dyn Autoscaler>)
                 batch_series.push((now, batch_size));
                 let next = now + cfg.adaptation_interval_ms;
                 if next < cfg.horizon_ms {
-                    push(&mut heap, &mut seq, next, EventKind::Tick);
+                    heap.schedule(next, EventKind::Tick);
                 }
                 dispatch(
                     now, &mut queue, &mut cluster, &mut busy, batch_size, &exec_model,
-                    sigma, &mut noise, &mut heap, &mut seq, &mut tracker,
+                    sigma, &mut noise, &mut heap, &mut tracker,
                 );
             }
         }
@@ -331,8 +303,7 @@ fn dispatch(
     model: &LatencyModel,
     sigma: f64,
     noise: &mut Pcg32,
-    heap: &mut BinaryHeap<Reverse<Event>>,
-    seq: &mut u64,
+    heap: &mut EventHeap<EventKind>,
     tracker: &mut SloTracker,
 ) {
     if queue.is_empty() {
@@ -360,12 +331,10 @@ fn dispatch(
             latency *= noise.lognormal(-sigma * sigma / 2.0, sigma);
         }
         busy.insert(id, true);
-        *seq += 1;
-        heap.push(Reverse(Event {
-            t: now + latency,
-            seq: *seq,
-            kind: EventKind::Done { instance: id, requests: batch.requests, started_ms: now },
-        }));
+        heap.schedule(
+            now + latency,
+            EventKind::Done { instance: id, requests: batch.requests, started_ms: now },
+        );
     }
 }
 

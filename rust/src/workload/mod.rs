@@ -57,6 +57,28 @@ pub enum ArrivalProcess {
         /// Mean phase length in ms.
         mean_phase_ms: f64,
     },
+    /// Deterministic sinusoidal rate swing — a compressed diurnal cycle.
+    /// The instantaneous rate starts at the base (`rate_rps` is the
+    /// trough, at `t = 0`) and peaks at `peak_factor`× half a period
+    /// later. Like `FixedRate`, gaps are deterministic: no RNG draw.
+    Diurnal {
+        /// Peak-to-trough rate ratio (>= 1.0).
+        peak_factor: f64,
+        /// Full cycle length in ms.
+        period_ms: f64,
+    },
+    /// Deterministic open-loop flash crowd: the base rate everywhere
+    /// except a `[at_ms, at_ms + width_ms)` window sent at `spike_rps` —
+    /// the arrival curve keeps coming regardless of how far the server
+    /// falls behind (nothing is closed-loop paced on responses).
+    Flash {
+        /// Spike arrival rate (requests per second).
+        spike_rps: f64,
+        /// Spike onset (ms on the experiment clock).
+        at_ms: f64,
+        /// Spike duration in ms.
+        width_ms: f64,
+    },
 }
 
 /// Payload-size mix (bytes). The paper's Fig. 1 uses 100/200/500 KB.
@@ -134,6 +156,18 @@ impl WorkloadGen {
                     }
                     gap
                 }
+                ArrivalProcess::Diurnal { peak_factor, period_ms } => {
+                    let swing =
+                        0.5 - 0.5 * (t / period_ms * std::f64::consts::TAU).cos();
+                    1.0 / (rate_ms * (1.0 + (peak_factor - 1.0) * swing))
+                }
+                ArrivalProcess::Flash { spike_rps, at_ms, width_ms } => {
+                    if t >= at_ms && t < at_ms + width_ms {
+                        1_000.0 / spike_rps
+                    } else {
+                        1.0 / rate_ms
+                    }
+                }
             };
             t += gap;
         }
@@ -203,6 +237,52 @@ mod tests {
         };
         let n = net(2.0e6);
         assert!(var_of(&bursty.generate(horizon, &n)) > 2.0 * var_of(&base.generate(horizon, &n)));
+    }
+
+    #[test]
+    fn diurnal_rate_swings_between_trough_and_peak() {
+        let w = WorkloadGen {
+            rate_rps: 20.0,
+            process: ArrivalProcess::Diurnal { peak_factor: 6.0, period_ms: 120_000.0 },
+            ..WorkloadGen::paper_default()
+        };
+        let reqs = w.generate(120_000.0, &net(2.0e6));
+        let count_in = |lo: f64, hi: f64| {
+            reqs.iter().filter(|r| r.sent_at_ms >= lo && r.sent_at_ms < hi).count() as f64
+        };
+        // Trough second (cycle start) ≈ 20 rps; peak second (half period,
+        // 60 s in) ≈ 120 rps. Deterministic gaps, so bands are tight.
+        let trough = count_in(0.0, 1_000.0);
+        let peak = count_in(59_500.0, 60_500.0);
+        assert!((trough - 20.0).abs() < 4.0, "trough={trough}");
+        assert!((peak - 120.0).abs() < 10.0, "peak={peak}");
+        // Determinism — the process draws no randomness.
+        assert_eq!(reqs, w.generate(120_000.0, &net(2.0e6)));
+    }
+
+    #[test]
+    fn flash_spike_is_open_loop_at_the_spike_rate() {
+        let w = WorkloadGen {
+            rate_rps: 100.0,
+            process: ArrivalProcess::Flash {
+                spike_rps: 100_000.0,
+                at_ms: 60_000.0,
+                width_ms: 200.0,
+            },
+            ..WorkloadGen::paper_default()
+        };
+        let reqs = w.generate(120_000.0, &net(2.0e6));
+        let in_spike = reqs
+            .iter()
+            .filter(|r| r.sent_at_ms >= 60_000.0 && r.sent_at_ms < 60_200.0)
+            .count();
+        // 100k rps × 0.2 s = 20k requests, generated regardless of any
+        // server backlog (open loop).
+        assert!((in_spike as i64 - 20_000).abs() <= 1, "in_spike={in_spike}");
+        // Outside the window the base rate holds: ~100 rps.
+        let before = reqs.iter().filter(|r| r.sent_at_ms < 1_000.0).count();
+        assert!((before as i64 - 100).abs() <= 1, "before={before}");
+        assert_eq!(reqs, w.generate(120_000.0, &net(2.0e6)));
     }
 
     #[test]

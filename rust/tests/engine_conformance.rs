@@ -343,3 +343,92 @@ fn drop_expired_respects_exact_tie_on_now() {
     assert_eq!(dropped[0].id, 1);
     assert_eq!(q.len(), 1);
 }
+
+// --------------------------------------- idle ticks & past-dated submits --
+
+/// Every `ServingEngine` implementation, boxed. The single-model engines
+/// share the two-model registry; the pipeline engine serves its chain.
+fn all_engines() -> Vec<Box<dyn ServingEngine>> {
+    let reg = registry();
+    let preg = pipeline_registry(Apportionment::Percentile(95.0));
+    vec![
+        Box::new(SimEngine::new(&reg, SimEngineCfg::default()).unwrap()),
+        Box::new(
+            ReplicaSetEngine::new(
+                &reg,
+                ReplicaSetCfg { max_replicas: 2, ..Default::default() },
+            )
+            .unwrap(),
+        ),
+        Box::new(PipelineEngine::new(&preg, PipelineEngineCfg::default()).unwrap()),
+        Box::new(
+            LiveEngine::start_mock(
+                &reg,
+                LiveEngineCfg { adaptation_interval_ms: 50.0, ..Default::default() },
+            )
+            .unwrap(),
+        ),
+    ]
+}
+
+#[test]
+fn idle_ticks_and_repeat_drains_are_harmless_noops() {
+    // Zero-duration work: ticking an engine with nothing queued, draining
+    // an empty engine, and draining twice must all be safe no-ops that
+    // leave the lifetime accounting untouched — on every implementation.
+    for mut engine in all_engines() {
+        let kind = engine.kind();
+        let model = engine.models()[0].clone();
+        for _ in 0..3 {
+            engine.tick();
+        }
+        let empty = engine.drain();
+        assert!(empty.settled(), "{kind}: {empty:?}");
+        assert_eq!(empty.submitted, 0, "{kind}: phantom submissions");
+
+        engine.submit(&model, EngineRequest::new(2_000.0, 5.0)).unwrap();
+        let report = engine.drain();
+        assert!(report.settled(), "{kind}: {report:?}");
+        assert_eq!(report.submitted, 1, "{kind}");
+
+        // Post-settlement ticks and a second drain: totals must not move
+        // and nothing may un-resolve.
+        engine.tick();
+        let again = engine.drain();
+        assert_eq!(again.submitted, report.submitted, "{kind}");
+        assert!(again.settled(), "{kind}: {again:?}");
+        let snap = engine.snapshot(&model).unwrap();
+        assert_eq!(snap.in_flight(), 0, "{kind}");
+        assert_eq!(snap.submitted, snap.completed + snap.dropped, "{kind}");
+    }
+}
+
+#[test]
+fn past_timestamps_execute_at_now_instead_of_vanishing() {
+    // The submit contract: a request dated before the engine's current
+    // time executes at `now` — it may be expired-on-arrival (a *counted*
+    // violated drop), but it must never silently disappear.
+    for mut engine in all_engines() {
+        let kind = engine.kind();
+        let model = engine.models()[0].clone();
+        engine.submit(&model, EngineRequest::new(2_000.0, 5.0).at(500.0)).unwrap();
+        for _ in 0..5 {
+            engine.tick();
+        }
+        let now = engine.now_ms();
+        assert!(now > 0.0, "{kind}: clock did not advance");
+        // Out-of-order: both send times precede `now` (and each other).
+        engine.submit(&model, EngineRequest::new(2_000.0, 5.0).at(now - 1.0)).unwrap();
+        engine.submit(&model, EngineRequest::new(2_000.0, 5.0).at(0.0)).unwrap();
+
+        let report = engine.drain();
+        assert_eq!(report.submitted, 3, "{kind}: a submission vanished");
+        assert!(report.settled(), "{kind}: past-dated request unresolved: {report:?}");
+        let snap = engine.snapshot(&model).unwrap();
+        assert_eq!(snap.submitted, 3, "{kind}");
+        assert_eq!(snap.completed + snap.dropped, 3, "{kind}: lost a terminal outcome");
+        // The near-now requests carry a ~2 s budget against a ~100 ms
+        // service time, so at least one must actually complete.
+        assert!(snap.completed > 0, "{kind}: everything dropped: {snap:?}");
+    }
+}

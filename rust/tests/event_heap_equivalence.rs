@@ -1,0 +1,244 @@
+//! Event-heap equivalence property suite.
+//!
+//! The discrete-event drain (heap-driven, with the idle fast-forward)
+//! must be observationally *bit-identical* to the preserved per-tick
+//! reference loop (`sponge::microbench::reference::reference_drain`):
+//! same snapshots, same `SloTracker` counts, means, percentiles, and
+//! per-interval timelines, and the same final virtual clock — across
+//! every `ServingEngine` implementation, scaling policy, and randomized
+//! arrival pattern (bursts, dead gaps, out-of-order submissions).
+
+use sponge::config::Policy;
+use sponge::engine::{
+    EngineRequest, ModelRegistry, ModelSpec, ReplicaSetCfg, ReplicaSetEngine,
+    ServingEngine, SimEngine, SimEngineCfg,
+};
+use sponge::microbench::reference::reference_drain;
+use sponge::monitoring::SloTracker;
+use sponge::pipeline::{Apportionment, PipelineEngine, PipelineEngineCfg, PipelineSpec};
+
+const MAX_REF_TICKS: u64 = 20_000;
+
+/// xorshift64* — deterministic, dependency-free uniform in [0, 1).
+struct Rng(u64);
+
+impl Rng {
+    fn next(&mut self) -> f64 {
+        self.0 ^= self.0 << 13;
+        self.0 ^= self.0 >> 7;
+        self.0 ^= self.0 << 17;
+        (self.0.wrapping_mul(0x2545_f491_4f6c_dd1d) >> 40) as f64 / (1u64 << 24) as f64
+    }
+}
+
+/// A randomized gap-heavy arrival tape: a few bursts separated by dead
+/// gaps long enough that the fast-forward has something to skip, with a
+/// slice of the submissions issued out of arrival order.
+fn arrival_tape(seed: u64) -> Vec<(f64, f64)> {
+    let mut rng = Rng(seed | 1);
+    let mut tape: Vec<(f64, f64)> = Vec::new();
+    let mut t = 0.0;
+    let bursts = 2 + (rng.next() * 2.0) as usize;
+    for _ in 0..bursts {
+        let n = 10 + (rng.next() * 30.0) as usize;
+        let gap_ms = 20.0 + rng.next() * 60.0;
+        let slo = 600.0 + rng.next() * 1_400.0;
+        for _ in 0..n {
+            tape.push((t, slo));
+            t += gap_ms;
+        }
+        // Dead gap: 30–90 adaptation intervals of silence.
+        t += 30_000.0 + rng.next() * 60_000.0;
+    }
+    // Shuffle a slice so some submissions arrive out of timestamp order
+    // (the pending heap must re-order them deterministically).
+    let n = tape.len();
+    for i in 0..n / 3 {
+        let j = (rng.next() * n as f64) as usize % n;
+        tape.swap(i, j);
+    }
+    tape
+}
+
+fn submit_tape(engine: &mut dyn ServingEngine, model: &str, tape: &[(f64, f64)]) {
+    for &(at, slo) in tape {
+        engine.submit(model, EngineRequest::new(slo, 10.0).at(at)).unwrap();
+    }
+}
+
+/// Everything observable about a tracker, bit-exact.
+fn tracker_sig(t: &SloTracker) -> (u64, u64, u64, u64, Vec<u64>, Vec<(f64, u64, u64)>) {
+    (
+        t.completed(),
+        t.dropped(),
+        t.violations(),
+        t.mean_e2e_ms().to_bits(),
+        t.e2e_percentiles(&[50.0, 95.0, 99.0])
+            .map(|v| v.into_iter().map(f64::to_bits).collect())
+            .unwrap_or_default(),
+        t.timeline().to_vec(),
+    )
+}
+
+/// Drive `fast` through its own heap-driven `drain()` and `slow` through
+/// the reference per-tick loop, then assert the shared observable
+/// contract: reports agree on totals, the fast path never ticks more,
+/// per-model snapshots match exactly, and the clocks land on the same
+/// bits.
+fn assert_equivalent(
+    fast: &mut dyn ServingEngine,
+    slow: &mut dyn ServingEngine,
+    label: &str,
+) {
+    let fast_report = fast.drain();
+    let slow_report = reference_drain(slow, MAX_REF_TICKS);
+    assert!(
+        slow_report.ticks < MAX_REF_TICKS,
+        "{label}: reference never settled: {slow_report:?}"
+    );
+    assert_eq!(
+        (fast_report.submitted, fast_report.resolved),
+        (slow_report.submitted, slow_report.resolved),
+        "{label}: totals diverged"
+    );
+    assert!(
+        fast_report.ticks <= slow_report.ticks,
+        "{label}: event drain ticked more ({}) than the reference ({})",
+        fast_report.ticks,
+        slow_report.ticks
+    );
+    for model in fast.models() {
+        assert_eq!(
+            fast.snapshot(&model).unwrap(),
+            slow.snapshot(&model).unwrap(),
+            "{label}: snapshot diverged for {model}"
+        );
+    }
+    assert_eq!(
+        fast.clock().now_ms().to_bits(),
+        slow.clock().now_ms().to_bits(),
+        "{label}: clocks diverged ({} vs {})",
+        fast.clock().now_ms(),
+        slow.clock().now_ms()
+    );
+}
+
+fn two_model_registry(policy: Policy) -> ModelRegistry {
+    let mut reg = ModelRegistry::new();
+    reg.register(ModelSpec::named("resnet").unwrap().with_policy(policy)).unwrap();
+    reg.register(
+        ModelSpec::named("yolov5s").unwrap().with_policy(Policy::Static8),
+    )
+    .unwrap();
+    reg
+}
+
+#[test]
+fn prop_sim_engine_matches_reference_across_policies_and_tapes() {
+    // FA2 keeps wall-timestamp scaler state, so its `idle_fixpoint` is
+    // false and the fast-forward must decline to skip — equivalence has
+    // to hold both when the optimization fires and when it refuses to.
+    for policy in [Policy::Sponge, Policy::Vpa, Policy::Fa2] {
+        for seed in [0x0dd5_eed1u64, 0xfeed_f00d, 0xabad_cafe] {
+            let tape_a = arrival_tape(seed);
+            let tape_b = arrival_tape(seed.rotate_left(17));
+            let build = || {
+                let mut e =
+                    SimEngine::new(&two_model_registry(policy), SimEngineCfg::default())
+                        .unwrap();
+                submit_tape(&mut e, "resnet", &tape_a);
+                submit_tape(&mut e, "yolov5s", &tape_b);
+                e
+            };
+            let (mut fast, mut slow) = (build(), build());
+            let label = format!("sim/{policy:?}/seed={seed:#x}");
+            assert_equivalent(&mut fast, &mut slow, &label);
+            let (ft, rt) = (
+                fast.tracker("resnet").unwrap(),
+                slow.tracker("resnet").unwrap(),
+            );
+            assert_eq!(tracker_sig(ft), tracker_sig(rt), "{label}: tracker diverged");
+        }
+    }
+}
+
+#[test]
+fn prop_replicaset_engine_matches_reference() {
+    for seed in [0x5eed_0001u64, 0x5eed_0002] {
+        let tape = arrival_tape(seed);
+        let build = || {
+            let mut reg = ModelRegistry::new();
+            reg.register(ModelSpec::named("yolov5s").unwrap()).unwrap();
+            let mut e = ReplicaSetEngine::new(
+                &reg,
+                ReplicaSetCfg { max_replicas: 2, ..Default::default() },
+            )
+            .unwrap();
+            submit_tape(&mut e, "yolov5s", &tape);
+            e
+        };
+        let (mut fast, mut slow) = (build(), build());
+        let label = format!("replicaset/seed={seed:#x}");
+        assert_equivalent(&mut fast, &mut slow, &label);
+        let (ft, rt) = (
+            fast.set("yolov5s").unwrap().merged_tracker(),
+            slow.set("yolov5s").unwrap().merged_tracker(),
+        );
+        assert_eq!(tracker_sig(&ft), tracker_sig(&rt), "{label}: tracker diverged");
+    }
+}
+
+#[test]
+fn prop_pipeline_engine_matches_reference() {
+    for seed in [0x9a9a_0001u64, 0x9a9a_0002] {
+        let tape = arrival_tape(seed);
+        let build = || {
+            let mut reg = ModelRegistry::new();
+            reg.register(ModelSpec::named("yolov5n").unwrap()).unwrap();
+            reg.register(ModelSpec::named("yolov5s").unwrap()).unwrap();
+            reg.register_pipeline(PipelineSpec::chain(
+                "det",
+                &["yolov5n", "yolov5s"],
+                Apportionment::Percentile(95.0),
+            ))
+            .unwrap();
+            let mut e = PipelineEngine::new(&reg, PipelineEngineCfg::default()).unwrap();
+            submit_tape(&mut e, "det", &tape);
+            e
+        };
+        let (mut fast, mut slow) = (build(), build());
+        let label = format!("pipeline/seed={seed:#x}");
+        assert_equivalent(&mut fast, &mut slow, &label);
+        let (ft, rt) = (
+            fast.tracker("det").unwrap(),
+            slow.tracker("det").unwrap(),
+        );
+        assert_eq!(tracker_sig(ft), tracker_sig(rt), "{label}: tracker diverged");
+    }
+}
+
+#[test]
+fn past_timestamp_submissions_execute_at_now_not_dropped() {
+    // Schedule-in-the-past contract: after the clock has advanced, a
+    // submission stamped before `now` is clamped to `now` at accept time
+    // and still served — never silently lost (per-engine conformance for
+    // the same contract lives in `engine_conformance.rs`; this pins the
+    // equivalence of the two drain paths on such a tape).
+    let build = || {
+        let mut e = SimEngine::new(
+            &two_model_registry(Policy::Sponge),
+            SimEngineCfg::default(),
+        )
+        .unwrap();
+        e.submit("resnet", EngineRequest::new(1_000.0, 10.0).at(0.0)).unwrap();
+        e.tick();
+        e.tick();
+        // Stamped 1.5 s in the past relative to the 2 s clock.
+        e.submit("resnet", EngineRequest::new(1_000.0, 10.0).at(500.0)).unwrap();
+        e
+    };
+    let (mut fast, mut slow) = (build(), build());
+    assert_equivalent(&mut fast, &mut slow, "sim/past-timestamps");
+    let snap = fast.snapshot("resnet").unwrap();
+    assert_eq!(snap.resolved(), 2, "past-stamped request was lost: {snap:?}");
+}

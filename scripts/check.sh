@@ -21,6 +21,12 @@ step cargo build --release --examples
 step cargo check --no-default-features
 step cargo test -q
 
+# Documentation is a build artifact too: rustdoc warnings (broken intra-doc
+# links, bad code fences) fail the gate, and every doc-example must compile
+# and pass as a doctest.
+step env RUSTDOCFLAGS=-Dwarnings cargo doc --no-deps
+step cargo test -q --doc
+
 if cargo fmt --version >/dev/null 2>&1; then
     step cargo fmt --check
 else
