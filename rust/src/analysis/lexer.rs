@@ -1,0 +1,301 @@
+//! Line lexer for the static-analysis pass: splits Rust source into
+//! per-line *code* and *comment* channels.
+//!
+//! The rule engine must never fire on text inside a string literal (rule
+//! patterns are themselves spelled as strings in `rules.rs`) or inside a
+//! comment (docs legitimately discuss `HashMap` and `unwrap`). The lexer
+//! therefore walks the file once with a small state machine — line
+//! comments, nestable block comments, plain strings with escapes, raw
+//! strings with hash fences, char literals vs. lifetimes — and emits, for
+//! every source line:
+//!
+//! * `code`    — the line with comment text removed and string/char
+//!   *contents* blanked to spaces (the delimiting quotes survive so
+//!   brace tracking over multi-line strings stays honest);
+//! * `comment` — the concatenated comment text of the line (where the
+//!   `// lint: ...` directives live).
+//!
+//! This is deliberately not a full Rust lexer: it only needs to be exact
+//! about *where code stops and prose begins*. Token-level precision is
+//! the rules' job, via word-boundary matching over the code channel.
+
+/// One source line, split into its code and comment channels.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct LexedLine {
+    /// Code with string/char contents blanked and comments removed.
+    pub code: String,
+    /// Comment text (without the `//` / `/* */` markers). Doc-comment
+    /// sigils (`/` of `///`, `!` of `//!`) are left in and trimmed by the
+    /// directive parser.
+    pub comment: String,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum State {
+    Code,
+    LineComment,
+    /// Nestable `/* */`; the payload is the nesting depth.
+    BlockComment(u32),
+    Str,
+    /// Raw string; the payload is the hash-fence length of `r#…#"`.
+    RawStr(u32),
+}
+
+/// Lex `text` into per-line code/comment channels. Always returns one
+/// entry per source line (including a trailing line without newline).
+pub fn lex(text: &str) -> Vec<LexedLine> {
+    let chars: Vec<char> = text.chars().collect();
+    let mut lines = Vec::new();
+    let mut code = String::new();
+    let mut comment = String::new();
+    let mut state = State::Code;
+    let mut i = 0;
+    while i < chars.len() {
+        let c = chars[i];
+        let next = chars.get(i + 1).copied();
+        if c == '\n' {
+            if state == State::LineComment {
+                state = State::Code;
+            }
+            lines.push(LexedLine {
+                code: std::mem::take(&mut code),
+                comment: std::mem::take(&mut comment),
+            });
+            i += 1;
+            continue;
+        }
+        match state {
+            State::Code => {
+                if c == '/' && next == Some('/') {
+                    state = State::LineComment;
+                    i += 2;
+                } else if c == '/' && next == Some('*') {
+                    state = State::BlockComment(1);
+                    i += 2;
+                } else if c == '"' {
+                    code.push('"');
+                    state = State::Str;
+                    i += 1;
+                } else if (c == 'r' || c == 'b') && is_raw_start(&chars, i) {
+                    // r"…", r#"…"#, br"…": skip the prefix, count hashes.
+                    let mut j = i + 1;
+                    if c == 'b' && chars.get(j) == Some(&'r') {
+                        j += 1;
+                    }
+                    let mut hashes = 0u32;
+                    while chars.get(j) == Some(&'#') {
+                        hashes += 1;
+                        j += 1;
+                    }
+                    code.push('"');
+                    state = State::RawStr(hashes);
+                    i = j + 1; // past the opening quote
+                } else if c == 'b' && next == Some('"') {
+                    code.push('"');
+                    state = State::Str;
+                    i += 2;
+                } else if c == '\'' {
+                    i = lex_quote(&chars, i, &mut code);
+                } else {
+                    code.push(c);
+                    i += 1;
+                }
+            }
+            State::LineComment => {
+                comment.push(c);
+                i += 1;
+            }
+            State::BlockComment(depth) => {
+                if c == '/' && next == Some('*') {
+                    state = State::BlockComment(depth + 1);
+                    i += 2;
+                } else if c == '*' && next == Some('/') {
+                    state = if depth == 1 {
+                        State::Code
+                    } else {
+                        State::BlockComment(depth - 1)
+                    };
+                    i += 2;
+                } else {
+                    comment.push(c);
+                    i += 1;
+                }
+            }
+            State::Str => {
+                if c == '\\' {
+                    // Escape: blank both chars (covers \" and \\).
+                    code.push(' ');
+                    i += 2;
+                } else if c == '"' {
+                    code.push('"');
+                    state = State::Code;
+                    i += 1;
+                } else {
+                    code.push(' ');
+                    i += 1;
+                }
+            }
+            State::RawStr(hashes) => {
+                if c == '"' {
+                    let mut j = i + 1;
+                    let mut k = 0;
+                    while k < hashes && chars.get(j) == Some(&'#') {
+                        k += 1;
+                        j += 1;
+                    }
+                    if k == hashes {
+                        code.push('"');
+                        state = State::Code;
+                        i = j;
+                    } else {
+                        code.push(' ');
+                        i += 1;
+                    }
+                } else {
+                    code.push(' ');
+                    i += 1;
+                }
+            }
+        }
+    }
+    lines.push(LexedLine { code, comment });
+    lines
+}
+
+/// Does position `i` (holding `r` or `b`) start a raw-string literal?
+/// Accepts `r"`, `r#…#"`, `br"`, `br#…#"` — but not an identifier that
+/// merely starts with `r` (the caller's char is preceded by a non-ident
+/// or is itself mid-identifier; we additionally require the quote).
+fn is_raw_start(chars: &[char], i: usize) -> bool {
+    // Reject mid-identifier positions: `for`, `attr"..."` would otherwise
+    // misfire on their trailing `r`.
+    if i > 0 {
+        let p = chars[i - 1];
+        if p.is_alphanumeric() || p == '_' {
+            return false;
+        }
+    }
+    let mut j = i + 1;
+    if chars[i] == 'b' {
+        if chars.get(j) != Some(&'r') {
+            return false;
+        }
+        j += 1;
+    }
+    while chars.get(j) == Some(&'#') {
+        j += 1;
+    }
+    chars.get(j) == Some(&'"')
+}
+
+/// Handle a `'` in code position: either a char literal (blank its
+/// contents) or a lifetime (keep walking). Returns the next index.
+fn lex_quote(chars: &[char], i: usize, code: &mut String) -> usize {
+    let next = chars.get(i + 1).copied();
+    if next == Some('\\') {
+        // Escaped char literal: '\n', '\'', '\u{1F600}' … — skip the
+        // escaped character itself before hunting the closing quote (for
+        // '\'' the escaped char IS a quote).
+        code.push('\'');
+        code.push(' ');
+        let mut j = i + 3;
+        while j < chars.len() && chars[j] != '\'' && chars[j] != '\n' {
+            j += 1;
+        }
+        if chars.get(j) == Some(&'\'') {
+            code.push('\'');
+            j += 1;
+        }
+        j
+    } else if chars.get(i + 2) == Some(&'\'') && next != Some('\n') {
+        // Plain char literal 'x'.
+        code.push('\'');
+        code.push(' ');
+        code.push('\'');
+        i + 3
+    } else {
+        // Lifetime ('a) or a stray quote: emit as-is, stay in code.
+        code.push('\'');
+        i + 1
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn codes(text: &str) -> Vec<String> {
+        lex(text).into_iter().map(|l| l.code).collect()
+    }
+
+    #[test]
+    fn strips_line_comments_into_comment_channel() {
+        let l = lex("let x = 1; // uses unwrap() on purpose");
+        assert_eq!(l.len(), 1);
+        assert_eq!(l[0].code, "let x = 1; ");
+        assert!(l[0].comment.contains("unwrap()"));
+    }
+
+    #[test]
+    fn blanks_string_contents_but_keeps_quotes() {
+        let c = codes("let s = \"Instant::now()\";");
+        assert!(!c[0].contains("Instant::now"));
+        assert!(c[0].contains('"'));
+        assert!(c[0].ends_with(';'));
+    }
+
+    #[test]
+    fn raw_strings_with_fences() {
+        let src = "let s = r#\"a \"quoted\" HashMap\"#; let y = 2;";
+        let c = codes(src);
+        assert!(!c[0].contains("HashMap"), "{:?}", c[0]);
+        assert!(c[0].contains("let y = 2;"));
+    }
+
+    #[test]
+    fn multiline_string_spans_lines() {
+        let c = codes("let s = \"line one\n  HashMap inside\n  end\"; foo();");
+        assert!(!c[1].contains("HashMap"));
+        assert!(c[2].contains("foo();"));
+    }
+
+    #[test]
+    fn nested_block_comments() {
+        let src = "a(); /* outer /* inner unwrap() */ still out */ b();";
+        let l = lex(src);
+        assert!(l[0].code.contains("a();"));
+        assert!(l[0].code.contains("b();"));
+        assert!(!l[0].code.contains("unwrap"));
+        assert!(l[0].comment.contains("inner unwrap()"));
+    }
+
+    #[test]
+    fn char_literals_and_lifetimes() {
+        // The '"' char literal must not open a string state.
+        let c = codes("if c == '\"' { x::<'a>(); } let q = '\\n';");
+        assert!(c[0].contains("x::<'a>();"));
+        assert!(c[0].contains('{') && c[0].contains('}'));
+    }
+
+    #[test]
+    fn escaped_quote_inside_string() {
+        let c = codes(r#"let s = "he said \"unwrap()\""; done();"#);
+        assert!(!c[0].contains("unwrap"));
+        assert!(c[0].contains("done();"));
+    }
+
+    #[test]
+    fn doc_comment_text_lands_in_comment_channel() {
+        let l = lex("/// uses `partial_cmp` for ordering\nfn f() {}");
+        assert!(l[0].comment.contains("partial_cmp"));
+        assert_eq!(l[0].code, "");
+        assert!(l[1].code.contains("fn f()"));
+    }
+
+    #[test]
+    fn one_entry_per_line_with_trailing_newline() {
+        assert_eq!(lex("a\nb\n").len(), 3);
+        assert_eq!(lex("a\nb").len(), 2);
+        assert_eq!(lex("").len(), 1);
+    }
+}

@@ -1,0 +1,454 @@
+//! `sponge lint` — the in-tree determinism & invariant static-analysis
+//! pass.
+//!
+//! The repo's correctness story rests on properties the compiler cannot
+//! see: virtual time must only flow through `Clock`, report/event paths
+//! must iterate in a deterministic order, float sorts must use
+//! `total_cmp`, the PR-4 hot path must not allocate, and the gateway
+//! must answer errors instead of panicking. This module machine-checks
+//! those conventions with a line-level scan: [`lexer`] splits each
+//! source line into code and comment channels, [`rules`] holds the
+//! catalog and the word-boundary matcher, and the engine here walks the
+//! tree, applies module scoping, honors inline suppressions, and emits a
+//! deterministic [`report::LintReport`].
+//!
+//! Directive grammar (written in a comment, one directive per line):
+//!
+//! * `// lint: allow(D001) -- wall ns only feeds instrumentation` —
+//!   suppress the named rule(s) on this line (or the next code line when
+//!   the directive stands alone). The `-- reason` clause is mandatory;
+//!   a reason-less allow is itself a finding (L001), and an allow that
+//!   matches nothing is flagged unused (L002).
+//! * `// lint: alloc-free` — the next function body is an allocation-free
+//!   span; P001 patterns (`Vec::new`, `collect`, `format!`, …) become
+//!   findings inside it.
+//!
+//! `#[cfg(test)]` spans are skipped entirely: tests may use wall clocks,
+//! hash maps, and `unwrap` freely.
+
+pub mod lexer;
+pub mod report;
+pub mod rules;
+
+use std::path::Path;
+
+use lexer::LexedLine;
+use report::{Finding, LintReport};
+use rules::{Scope, Severity};
+
+/// One file to scan: a root-relative path (forward slashes) plus its text.
+pub struct SourceFile {
+    pub path: String,
+    pub text: String,
+}
+
+/// Top-level module of a scanned path: `engine/sim.rs` → `engine`,
+/// `main.rs` → `main`. Rule scopes are expressed in these names.
+pub fn module_of(path: &str) -> &str {
+    match path.find('/') {
+        Some(p) => &path[..p],
+        None => path.strip_suffix(".rs").unwrap_or(path),
+    }
+}
+
+/// Recursively collect `.rs` files under `root`, sorted by relative path
+/// so the scan (and therefore the report) is deterministic.
+pub fn collect_tree(root: &Path) -> std::io::Result<Vec<SourceFile>> {
+    let mut files = Vec::new();
+    walk(root, root, &mut files)?;
+    files.sort_by(|a, b| a.path.cmp(&b.path));
+    Ok(files)
+}
+
+fn walk(root: &Path, dir: &Path, out: &mut Vec<SourceFile>) -> std::io::Result<()> {
+    let mut entries: Vec<_> = std::fs::read_dir(dir)?.collect::<Result<_, _>>()?;
+    entries.sort_by_key(|e| e.file_name());
+    for e in entries {
+        let p = e.path();
+        if p.is_dir() {
+            walk(root, &p, out)?;
+        } else if p.extension().is_some_and(|x| x == "rs") {
+            let rel = p
+                .strip_prefix(root)
+                .unwrap_or(&p)
+                .to_string_lossy()
+                .replace('\\', "/");
+            out.push(SourceFile { path: rel, text: std::fs::read_to_string(&p)? });
+        }
+    }
+    Ok(())
+}
+
+/// Lint a whole source tree (normally `rust/src`).
+pub fn lint_tree(root: &Path) -> std::io::Result<LintReport> {
+    Ok(lint_files(&collect_tree(root)?))
+}
+
+/// Lint an explicit file set (the unit the fixture tests drive).
+pub fn lint_files(files: &[SourceFile]) -> LintReport {
+    let mut findings = Vec::new();
+    for f in files {
+        lint_file(f, &mut findings);
+    }
+    findings.sort_by(|a, b| {
+        (a.file.as_str(), a.line, a.rule).cmp(&(b.file.as_str(), b.line, b.rule))
+    });
+    LintReport { files_scanned: files.len(), findings }
+}
+
+/// A parsed, well-formed allow directive awaiting application.
+struct Allow {
+    /// 0-based directive line.
+    line: usize,
+    ids: Vec<&'static str>,
+    reason: String,
+}
+
+fn lint_file(file: &SourceFile, out: &mut Vec<Finding>) {
+    let lines = lexer::lex(&file.text);
+    let original: Vec<&str> = file.text.lines().collect();
+    let module = module_of(&file.path);
+    let in_test = test_spans(&lines);
+
+    let snippet =
+        |idx: usize| original.get(idx).copied().unwrap_or("").trim().to_string();
+    let engine_finding = |id: &'static str, idx: usize| Finding {
+        rule: id,
+        severity: rules::rule(id).map_or(Severity::Deny, |r| r.severity),
+        file: file.path.clone(),
+        line: idx + 1,
+        snippet: snippet(idx),
+        suppressed: false,
+        reason: None,
+    };
+
+    // Pass 1: directives — alloc-free spans, allows, and L001 for
+    // anything malformed.
+    let mut allows: Vec<Allow> = Vec::new();
+    let mut alloc_free = vec![false; lines.len()];
+    let mut extras: Vec<Finding> = Vec::new();
+    for (i, line) in lines.iter().enumerate() {
+        if in_test[i] {
+            continue;
+        }
+        let t = line.comment.trim_start_matches(['/', '!']).trim_start();
+        let Some(rest) = t.strip_prefix("lint:") else {
+            continue;
+        };
+        let rest = rest.trim();
+        if rest == "alloc-free" {
+            match alloc_free_target(&lines, i) {
+                Some(fn_line) => {
+                    let end = brace_span_end(&lines, fn_line);
+                    for flag in alloc_free.iter_mut().take(end + 1).skip(fn_line) {
+                        *flag = true;
+                    }
+                }
+                // Dangling directive: nothing function-like follows.
+                None => extras.push(engine_finding("L001", i)),
+            }
+        } else if let Some(after) = rest.strip_prefix("allow(") {
+            match parse_allow(after) {
+                Some((ids, reason)) => allows.push(Allow { line: i, ids, reason }),
+                None => extras.push(engine_finding("L001", i)),
+            }
+        } else {
+            // Unknown directive keyword.
+            extras.push(engine_finding("L001", i));
+        }
+    }
+
+    // Pass 2: the rule catalog over the code channel.
+    let mut file_findings: Vec<Finding> = Vec::new();
+    for (i, line) in lines.iter().enumerate() {
+        if in_test[i] {
+            continue;
+        }
+        let code = line.code.as_str();
+        if code.trim().is_empty() {
+            continue;
+        }
+        for spec in rules::CATALOG {
+            let applies = match spec.scope {
+                Scope::AllModules => true,
+                Scope::Modules(ms) => ms.contains(&module),
+                Scope::AllocFreeSpans => alloc_free[i],
+            };
+            if !applies {
+                continue;
+            }
+            let hit = spec.patterns.iter().any(|p| rules::matches_pattern(code, p))
+                || (spec.numeric_index && rules::has_numeric_index(code));
+            if hit {
+                file_findings.push(Finding {
+                    rule: spec.id,
+                    severity: spec.severity,
+                    file: file.path.clone(),
+                    line: i + 1,
+                    snippet: snippet(i),
+                    suppressed: false,
+                    reason: None,
+                });
+            }
+        }
+    }
+
+    // Pass 3: apply suppressions. A directive on a code-bearing line
+    // targets that line; a standalone directive targets the next code
+    // line. Each listed id suppresses at most one finding; a miss is
+    // an unused suppression (L002, warn).
+    for a in &allows {
+        let target = if !lines[a.line].code.trim().is_empty() {
+            Some(a.line)
+        } else {
+            (a.line + 1..lines.len()).find(|&j| !lines[j].code.trim().is_empty())
+        };
+        for id in &a.ids {
+            let hit = target.and_then(|t| {
+                file_findings
+                    .iter_mut()
+                    .find(|f| f.line == t + 1 && f.rule == *id && !f.suppressed)
+            });
+            match hit {
+                Some(f) => {
+                    f.suppressed = true;
+                    f.reason = Some(a.reason.clone());
+                }
+                None => extras.push(engine_finding("L002", a.line)),
+            }
+        }
+    }
+
+    out.extend(file_findings);
+    out.extend(extras);
+}
+
+/// Parse the tail of an allow directive (everything after `allow(`):
+/// a comma-separated id list, `)`, then a mandatory `-- reason`.
+/// Returns None on any malformation — unclosed paren, unknown or
+/// engine-internal (L-prefixed) rule id, missing or empty reason.
+fn parse_allow(after: &str) -> Option<(Vec<&'static str>, String)> {
+    let close = after.find(')')?;
+    let mut ids = Vec::new();
+    for id in after[..close].split(',') {
+        let spec = rules::rule(id.trim())?;
+        if spec.id.starts_with('L') {
+            // Suppression hygiene is not itself suppressible.
+            return None;
+        }
+        ids.push(spec.id);
+    }
+    let reason = after[close + 1..].trim().strip_prefix("--")?.trim();
+    if reason.is_empty() {
+        return None;
+    }
+    Some((ids, reason.to_string()))
+}
+
+/// Flag every line covered by a `#[cfg(test)]` item (attribute line
+/// through the close of the item's brace block, or through the `;` of a
+/// braceless item).
+fn test_spans(lines: &[LexedLine]) -> Vec<bool> {
+    let mut flagged = vec![false; lines.len()];
+    let mut i = 0;
+    while i < lines.len() {
+        if lines[i].code.contains("#[cfg(test)]") {
+            let end = brace_span_end(lines, i);
+            for flag in flagged.iter_mut().take(end + 1).skip(i) {
+                *flag = true;
+            }
+            i = end + 1;
+        } else {
+            i += 1;
+        }
+    }
+    flagged
+}
+
+/// The function line an alloc-free directive annotates: the first
+/// following (or same) line with code, skipping attributes. None when
+/// that line is not a `fn` item.
+fn alloc_free_target(lines: &[LexedLine], i: usize) -> Option<usize> {
+    for j in std::iter::once(i).chain(i + 1..lines.len()) {
+        let c = lines[j].code.trim();
+        if c.is_empty() || c.starts_with('#') {
+            continue;
+        }
+        return rules::matches_pattern(c, "fn").then_some(j);
+    }
+    None
+}
+
+/// Last line (0-based) of the item starting at `start`: the close of its
+/// first brace block, or the line of a top-level `;` for braceless
+/// items. Falls back to EOF for unbalanced input.
+fn brace_span_end(lines: &[LexedLine], start: usize) -> usize {
+    let mut depth = 0i32;
+    let mut opened = false;
+    for (j, line) in lines.iter().enumerate().skip(start) {
+        for c in line.code.chars() {
+            match c {
+                '{' => {
+                    depth += 1;
+                    opened = true;
+                }
+                '}' => {
+                    depth -= 1;
+                    if opened && depth <= 0 {
+                        return j;
+                    }
+                }
+                ';' if !opened && depth == 0 => return j,
+                _ => {}
+            }
+        }
+    }
+    lines.len().saturating_sub(1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sf(path: &str, text: &str) -> SourceFile {
+        SourceFile { path: path.to_string(), text: text.to_string() }
+    }
+
+    fn open_rules(r: &LintReport) -> Vec<&'static str> {
+        r.unsuppressed().map(|f| f.rule).collect()
+    }
+
+    #[test]
+    fn module_scoping_gates_d001() {
+        let bad = "fn f() -> u64 { std::time::Instant::now().elapsed().as_nanos() as u64 }\n";
+        let hit = lint_files(&[sf("sim/x.rs", bad)]);
+        assert_eq!(open_rules(&hit), vec!["D001"]);
+        let miss = lint_files(&[sf("util/x.rs", bad)]);
+        assert!(open_rules(&miss).is_empty());
+    }
+
+    #[test]
+    fn allow_with_reason_suppresses_exactly_one() {
+        let src = "fn f() {\n\
+                   let a = std::time::Instant::now(); // lint: allow(D001) -- timing shim\n\
+                   let b = std::time::Instant::now();\n\
+                   }\n";
+        let r = lint_files(&[sf("engine/x.rs", src)]);
+        assert_eq!(open_rules(&r), vec!["D001"]);
+        let sup: Vec<_> = r.findings.iter().filter(|f| f.suppressed).collect();
+        assert_eq!(sup.len(), 1);
+        assert_eq!(sup[0].line, 2);
+        assert_eq!(sup[0].reason.as_deref(), Some("timing shim"));
+    }
+
+    #[test]
+    fn standalone_allow_targets_next_code_line() {
+        let src = "fn f() {\n\
+                   // lint: allow(D002) -- scratch map, never iterated\n\
+                   let m: std::collections::HashMap<u32, u32> = Default::default();\n\
+                   let _ = m;\n\
+                   }\n";
+        let r = lint_files(&[sf("queue/x.rs", src)]);
+        assert!(open_rules(&r).is_empty(), "{:?}", open_rules(&r));
+        assert_eq!(r.findings.len(), 1);
+        assert!(r.findings[0].suppressed);
+    }
+
+    #[test]
+    fn reasonless_allow_is_l001_and_does_not_suppress() {
+        let src = "// lint: allow(D002)\n\
+                   fn f(m: &std::collections::HashMap<u32, u32>) -> usize { m.len() }\n";
+        let r = lint_files(&[sf("solver/x.rs", src)]);
+        let mut open = open_rules(&r);
+        open.sort_unstable();
+        assert_eq!(open, vec!["D002", "L001"]);
+    }
+
+    #[test]
+    fn unknown_rule_id_is_l001() {
+        let src = "// lint: allow(Z999) -- no such rule\nfn f() {}\n";
+        let r = lint_files(&[sf("sim/x.rs", src)]);
+        assert_eq!(open_rules(&r), vec!["L001"]);
+    }
+
+    #[test]
+    fn unused_allow_is_l002_warn_and_not_fatal() {
+        let src = "// lint: allow(D001) -- nothing here uses a clock\nfn f() {}\n";
+        let r = lint_files(&[sf("sim/x.rs", src)]);
+        assert_eq!(open_rules(&r), vec!["L002"]);
+        assert_eq!(r.deny_count(), 0);
+    }
+
+    #[test]
+    fn cfg_test_spans_are_skipped() {
+        let src = "fn f() {}\n\
+                   #[cfg(test)]\n\
+                   mod tests {\n\
+                   fn g() { let t = std::time::Instant::now(); let _ = t; }\n\
+                   }\n";
+        let r = lint_files(&[sf("sim/x.rs", src)]);
+        assert!(r.findings.is_empty(), "{:?}", open_rules(&r));
+    }
+
+    #[test]
+    fn alloc_free_span_flags_p001_inside_only() {
+        let src = "// lint: alloc-free\n\
+                   #[inline]\n\
+                   fn hot(xs: &[u64]) -> u64 {\n\
+                   xs.iter().map(|x| x + 1).sum()\n\
+                   }\n\
+                   fn cold(xs: &[u64]) -> Vec<u64> {\n\
+                   xs.to_vec()\n\
+                   }\n";
+        let r = lint_files(&[sf("solver/x.rs", src)]);
+        assert!(r.findings.is_empty(), "{:?}", open_rules(&r));
+        let bad = "// lint: alloc-free\n\
+                   fn hot(xs: &[u64]) -> Vec<u64> {\n\
+                   xs.iter().map(|x| x + 1).collect()\n\
+                   }\n";
+        let rb = lint_files(&[sf("solver/x.rs", bad)]);
+        assert_eq!(open_rules(&rb), vec!["P001"]);
+        assert_eq!(rb.findings[0].line, 3);
+    }
+
+    #[test]
+    fn dangling_alloc_free_is_l001() {
+        let src = "const X: u32 = 1;\n// lint: alloc-free\n";
+        let r = lint_files(&[sf("solver/x.rs", src)]);
+        assert_eq!(open_rules(&r), vec!["L001"]);
+    }
+
+    #[test]
+    fn r001_catches_panics_and_literal_indexing_in_server() {
+        let src = "fn f(xs: &[u64]) -> u64 { xs[0] }\n\
+                   fn g(x: Option<u64>) -> u64 { x.unwrap() }\n";
+        let r = lint_files(&[sf("server/x.rs", src)]);
+        assert_eq!(open_rules(&r), vec!["R001", "R001"]);
+        // Same text outside a request-path module is clean.
+        let clean = lint_files(&[sf("workload/x.rs", src)]);
+        assert!(clean.findings.is_empty());
+    }
+
+    #[test]
+    fn findings_sorted_and_module_of_paths() {
+        assert_eq!(module_of("engine/sim.rs"), "engine");
+        assert_eq!(module_of("main.rs"), "main");
+        assert_eq!(module_of("util/json.rs"), "util");
+        let r = lint_files(&[
+            sf("sim/b.rs", "fn f() { let t = std::time::Instant::now(); let _ = t; }\n"),
+            sf("engine/a.rs", "fn f() { let t = std::time::Instant::now(); let _ = t; }\n"),
+        ]);
+        let files: Vec<_> = r.findings.iter().map(|f| f.file.as_str()).collect();
+        assert_eq!(files, vec!["engine/a.rs", "sim/b.rs"]);
+    }
+
+    #[test]
+    fn patterns_inside_strings_and_comments_do_not_fire() {
+        let src = "fn f() -> &'static str {\n\
+                   // A doc note mentioning Instant::now() and HashMap.\n\
+                   \"Instant::now() HashMap .unwrap()\"\n\
+                   }\n";
+        let r = lint_files(&[sf("server/x.rs", src)]);
+        assert!(r.findings.is_empty(), "{:?}", open_rules(&r));
+    }
+}

@@ -1,0 +1,269 @@
+//! Lint findings, the `sponge-lint/v1` report, and the baseline budget.
+//!
+//! The report is deterministic: findings are sorted by (file, line, rule)
+//! and serialized through [`crate::util::json::Json`], whose objects are
+//! BTreeMaps — two runs over the same tree produce byte-identical JSON
+//! (the same property spongebench's CI `cmp` check leans on).
+
+use std::collections::BTreeMap;
+
+use crate::util::json::Json;
+
+use super::rules::{self, Severity};
+
+/// One lint finding.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Finding {
+    pub rule: &'static str,
+    pub severity: Severity,
+    /// Path as scanned (relative to the lint root).
+    pub file: String,
+    /// 1-based source line.
+    pub line: usize,
+    /// The offending source line, trimmed (original text, not the
+    /// blanked code channel).
+    pub snippet: String,
+    /// Suppressed by an inline `// lint: allow(...) -- reason`?
+    pub suppressed: bool,
+    /// The suppression's reason (required by the directive grammar).
+    pub reason: Option<String>,
+}
+
+/// The full result of one lint pass.
+#[derive(Debug, Clone, Default)]
+pub struct LintReport {
+    pub files_scanned: usize,
+    /// Sorted by (file, line, rule).
+    pub findings: Vec<Finding>,
+}
+
+impl LintReport {
+    /// Unsuppressed findings at [`Severity::Deny`] — what fails the gate.
+    pub fn deny_count(&self) -> usize {
+        self.findings
+            .iter()
+            .filter(|f| !f.suppressed && f.severity == Severity::Deny)
+            .count()
+    }
+
+    /// Unsuppressed findings of any severity.
+    pub fn unsuppressed(&self) -> impl Iterator<Item = &Finding> {
+        self.findings.iter().filter(|f| !f.suppressed)
+    }
+
+    /// Unsuppressed deny findings per rule id (the budget's unit).
+    pub fn counts_by_rule(&self) -> BTreeMap<&'static str, usize> {
+        let mut out = BTreeMap::new();
+        for f in self.unsuppressed() {
+            if f.severity == Severity::Deny {
+                *out.entry(f.rule).or_insert(0) += 1;
+            }
+        }
+        out
+    }
+
+    /// The `sponge-lint/v1` JSON document.
+    pub fn to_json(&self) -> Json {
+        let rules = Json::Obj(
+            rules::CATALOG
+                .iter()
+                .map(|r| {
+                    (
+                        r.id.to_string(),
+                        Json::obj(vec![
+                            ("severity", Json::str(r.severity.name())),
+                            ("summary", Json::str(r.summary)),
+                        ]),
+                    )
+                })
+                .collect(),
+        );
+        let findings = Json::arr(self.findings.iter().map(|f| {
+            let mut pairs = vec![
+                ("rule", Json::str(f.rule)),
+                ("severity", Json::str(f.severity.name())),
+                ("file", Json::str(&f.file)),
+                ("line", Json::num(f.line as f64)),
+                ("snippet", Json::str(&f.snippet)),
+                ("suppressed", Json::Bool(f.suppressed)),
+            ];
+            if let Some(reason) = &f.reason {
+                pairs.push(("reason", Json::str(reason)));
+            }
+            Json::obj(pairs)
+        }));
+        let suppressed = self.findings.iter().filter(|f| f.suppressed).count();
+        Json::obj(vec![
+            ("schema", Json::str("sponge-lint/v1")),
+            ("files_scanned", Json::num(self.files_scanned as f64)),
+            ("rules", rules),
+            ("findings", findings),
+            (
+                "counts",
+                Json::obj(vec![
+                    ("total", Json::num(self.findings.len() as f64)),
+                    ("suppressed", Json::num(suppressed as f64)),
+                    (
+                        "unsuppressed",
+                        Json::num(self.unsuppressed().count() as f64),
+                    ),
+                    ("deny", Json::num(self.deny_count() as f64)),
+                ]),
+            ),
+        ])
+    }
+
+    /// Human-readable report: per-rule tallies, then every unsuppressed
+    /// finding with its snippet.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "sponge lint: {} file(s) scanned, {} finding(s) \
+             ({} suppressed, {} unsuppressed)\n",
+            self.files_scanned,
+            self.findings.len(),
+            self.findings.iter().filter(|f| f.suppressed).count(),
+            self.unsuppressed().count(),
+        ));
+        for r in rules::CATALOG {
+            let total = self.findings.iter().filter(|f| f.rule == r.id).count();
+            let open = self
+                .unsuppressed()
+                .filter(|f| f.rule == r.id)
+                .count();
+            if total > 0 {
+                out.push_str(&format!(
+                    "  {:<5} [{}] {:>3} finding(s), {} unsuppressed\n",
+                    r.id,
+                    r.severity.name(),
+                    total,
+                    open
+                ));
+            }
+        }
+        for f in self.unsuppressed() {
+            out.push_str(&format!(
+                "{}:{}: {} [{}] {}\n    {}\n",
+                f.file,
+                f.line,
+                f.rule,
+                f.severity.name(),
+                rules::rule(f.rule).map_or("", |r| r.summary),
+                f.snippet
+            ));
+        }
+        out
+    }
+}
+
+/// Per-rule allowance of unsuppressed deny findings (the checked-in
+/// allowlist count). Rules absent from the budget default to 0 — any
+/// *new* unsuppressed finding fails CI even if an old debt was granted.
+#[derive(Debug, Clone, Default)]
+pub struct Budget {
+    pub per_rule: BTreeMap<String, usize>,
+}
+
+impl Budget {
+    /// Parse a `sponge-lint-baseline/v1` document.
+    pub fn from_json(doc: &Json) -> Result<Budget, String> {
+        match doc.get("schema").as_str() {
+            Some("sponge-lint-baseline/v1") => {}
+            other => {
+                return Err(format!(
+                    "baseline schema must be sponge-lint-baseline/v1 (got {other:?})"
+                ))
+            }
+        }
+        let mut per_rule = BTreeMap::new();
+        if let Some(obj) = doc.get("budget").as_obj() {
+            for (id, v) in obj {
+                let n = v
+                    .as_u64()
+                    .ok_or_else(|| format!("budget.{id} must be a count"))?;
+                if !rules::known_rule(id) {
+                    return Err(format!("budget names unknown rule '{id}'"));
+                }
+                per_rule.insert(id.clone(), n as usize);
+            }
+        }
+        Ok(Budget { per_rule })
+    }
+
+    /// Violations of the budget: one message per rule whose unsuppressed
+    /// deny count exceeds its allowance. Empty means the gate passes.
+    pub fn violations(&self, report: &LintReport) -> Vec<String> {
+        report
+            .counts_by_rule()
+            .into_iter()
+            .filter_map(|(rule, n)| {
+                let allowed = self.per_rule.get(rule).copied().unwrap_or(0);
+                (n > allowed).then(|| {
+                    format!(
+                        "{rule}: {n} unsuppressed finding(s), budget allows {allowed}"
+                    )
+                })
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn finding(rule: &'static str, sup: bool) -> Finding {
+        Finding {
+            rule,
+            severity: Severity::Deny,
+            file: "engine/sim.rs".into(),
+            line: 7,
+            snippet: "let t = now();".into(),
+            suppressed: sup,
+            reason: sup.then(|| "instrumentation".to_string()),
+        }
+    }
+
+    #[test]
+    fn json_roundtrips_and_counts() {
+        let report = LintReport {
+            files_scanned: 2,
+            findings: vec![finding("D001", false), finding("D002", true)],
+        };
+        let doc = report.to_json();
+        let parsed = Json::parse(&doc.pretty()).unwrap();
+        assert_eq!(parsed, doc);
+        assert_eq!(parsed.get("schema").as_str(), Some("sponge-lint/v1"));
+        assert_eq!(parsed.get("counts").get("total").as_u64(), Some(2));
+        assert_eq!(parsed.get("counts").get("suppressed").as_u64(), Some(1));
+        assert_eq!(parsed.get("counts").get("deny").as_u64(), Some(1));
+        let f0 = parsed.get("findings").at(0);
+        assert_eq!(f0.get("rule").as_str(), Some("D001"));
+        assert_eq!(f0.get("line").as_u64(), Some(7));
+    }
+
+    #[test]
+    fn budget_gates_on_excess() {
+        let report = LintReport {
+            files_scanned: 1,
+            findings: vec![finding("D001", false), finding("D001", false)],
+        };
+        let zero = Budget::default();
+        assert_eq!(zero.violations(&report).len(), 1);
+        let granted = Budget {
+            per_rule: [("D001".to_string(), 2)].into_iter().collect(),
+        };
+        assert!(granted.violations(&report).is_empty());
+    }
+
+    #[test]
+    fn budget_rejects_unknown_rules_and_schema() {
+        let bad = Json::parse(r#"{"schema":"nope","budget":{}}"#).unwrap();
+        assert!(Budget::from_json(&bad).is_err());
+        let unk = Json::parse(
+            r#"{"schema":"sponge-lint-baseline/v1","budget":{"Z999":1}}"#,
+        )
+        .unwrap();
+        assert!(Budget::from_json(&unk).is_err());
+    }
+}

@@ -1,0 +1,293 @@
+//! The lint rule catalog: what the determinism & invariant pass checks.
+//!
+//! Each rule is a set of word-boundary patterns matched against the code
+//! channel of [`super::lexer::lex`], gated on the file's top-level module
+//! (`engine/sim.rs` → `engine`). The catalog is data, the matching lives
+//! here, and the walking/suppression machinery lives in `analysis::mod` —
+//! adding a rule is adding one [`RuleSpec`] entry plus a fixture under
+//! `rust/tests/lint_fixtures/`.
+//!
+//! The full catalog with rationale and worked examples is documented in
+//! `docs/ANALYSIS.md`; keep the two in sync.
+
+/// How a finding counts against the gate. `Deny` findings fail
+/// `sponge lint` (and therefore CI) unless suppressed; `Warn` findings
+/// are reported but never fatal.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Severity {
+    Deny,
+    Warn,
+}
+
+impl Severity {
+    pub fn name(self) -> &'static str {
+        match self {
+            Severity::Deny => "deny",
+            Severity::Warn => "warn",
+        }
+    }
+}
+
+/// Where a rule's patterns run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Scope {
+    /// Every scanned file.
+    AllModules,
+    /// Only files whose top-level module is in the list.
+    Modules(&'static [&'static str]),
+    /// Only lines inside a `// lint: alloc-free` function span.
+    AllocFreeSpans,
+}
+
+/// One lint rule.
+pub struct RuleSpec {
+    pub id: &'static str,
+    pub severity: Severity,
+    pub scope: Scope,
+    /// One-line statement of the invariant (report + JSON).
+    pub summary: &'static str,
+    /// Word-boundary needles over the code channel. A line yields at most
+    /// one finding per rule no matter how many patterns hit.
+    pub patterns: &'static [&'static str],
+    /// Additionally flag `ident[<digits>]` literal indexing (R001's
+    /// "indexing-without-get" clause).
+    pub numeric_index: bool,
+}
+
+/// Modules whose time must only flow through the `Clock` abstraction —
+/// the virtual-time half of the tree (wall time here either breaks
+/// byte-determinism or silently diverges sim from live).
+const VIRTUAL_TIME: &[&str] = &["sim", "engine", "pipeline", "experiment", "microbench"];
+
+/// Modules feeding the spongebench report, event ordering, or the `/v1`
+/// JSON surface — everything CI byte-compares or clients parse.
+const REPORT_PATHS: &[&str] = &[
+    "arbiter",
+    "coordinator",
+    "engine",
+    "experiment",
+    "microbench",
+    "monitoring",
+    "pipeline",
+    "queue",
+    "server",
+    "sim",
+    "solver",
+];
+
+/// Request-path modules where a panic kills a serving thread (the
+/// gateway contract: malformed input is a 4xx, internal trouble a 5xx —
+/// never a dropped connection).
+const REQUEST_PATHS: &[&str] = &["coordinator", "server"];
+
+/// The rule catalog, in report order. `L001`/`L002` (suppression
+/// hygiene) are issued by the engine itself and therefore carry no
+/// patterns here, but they are part of the catalog so reports and docs
+/// enumerate them.
+pub const CATALOG: &[RuleSpec] = &[
+    RuleSpec {
+        id: "D001",
+        severity: Severity::Deny,
+        scope: Scope::Modules(VIRTUAL_TIME),
+        summary: "wall-clock read outside the Clock abstraction in a \
+                  virtual-time module",
+        patterns: &["Instant::now(", "SystemTime::now(", "SystemTime::UNIX_EPOCH"],
+        numeric_index: false,
+    },
+    RuleSpec {
+        id: "D002",
+        severity: Severity::Deny,
+        scope: Scope::Modules(REPORT_PATHS),
+        summary: "HashMap/HashSet on a report/event/JSON path (iteration \
+                  order is nondeterministic; use BTreeMap/BTreeSet or a \
+                  sorted collect)",
+        patterns: &["HashMap", "HashSet"],
+        numeric_index: false,
+    },
+    RuleSpec {
+        id: "D003",
+        severity: Severity::Deny,
+        scope: Scope::AllModules,
+        summary: "partial_cmp call in a sort/ranking path (NaN collapses \
+                  the order; use f64::total_cmp)",
+        patterns: &[".partial_cmp("],
+        numeric_index: false,
+    },
+    RuleSpec {
+        id: "D004",
+        severity: Severity::Deny,
+        scope: Scope::AllModules,
+        summary: "unseeded randomness (every run must replay from its \
+                  seed; use util::Pcg32::seeded)",
+        patterns: &["thread_rng", "from_entropy", "rand::random", "RandomState", "getrandom"],
+        numeric_index: false,
+    },
+    RuleSpec {
+        id: "P001",
+        severity: Severity::Deny,
+        scope: Scope::AllocFreeSpans,
+        summary: "allocation inside a `// lint: alloc-free` function (the \
+                  PR-4 hot-path contract)",
+        patterns: &[
+            "Vec::new(",
+            "vec!",
+            ".collect(",
+            "format!(",
+            ".to_vec(",
+            ".clone(",
+            "String::new(",
+            ".to_string(",
+            ".to_owned(",
+            "Box::new(",
+            "with_capacity(",
+        ],
+        numeric_index: false,
+    },
+    RuleSpec {
+        id: "R001",
+        severity: Severity::Deny,
+        scope: Scope::Modules(REQUEST_PATHS),
+        summary: "panic path in a request-serving module (unwrap/expect/\
+                  panic/literal indexing; answer 4xx/5xx instead)",
+        patterns: &[
+            ".unwrap(",
+            ".expect(",
+            "panic!(",
+            "unreachable!(",
+            "todo!(",
+            "unimplemented!(",
+        ],
+        numeric_index: true,
+    },
+    RuleSpec {
+        id: "S001",
+        severity: Severity::Deny,
+        scope: Scope::AllModules,
+        summary: "unsafe code (the crate is #![forbid(unsafe_code)]; the \
+                  lint catches it before the compiler does)",
+        patterns: &["unsafe"],
+        numeric_index: false,
+    },
+    RuleSpec {
+        id: "L001",
+        severity: Severity::Deny,
+        scope: Scope::AllModules,
+        summary: "malformed lint directive (allow without a `-- reason`, \
+                  unknown rule id, or dangling alloc-free)",
+        patterns: &[],
+        numeric_index: false,
+    },
+    RuleSpec {
+        id: "L002",
+        severity: Severity::Warn,
+        scope: Scope::AllModules,
+        summary: "unused suppression (the allow matched no finding; \
+                  delete it or fix the rule id)",
+        patterns: &[],
+        numeric_index: false,
+    },
+];
+
+/// Look up a rule by id.
+pub fn rule(id: &str) -> Option<&'static RuleSpec> {
+    CATALOG.iter().find(|r| r.id == id)
+}
+
+/// Is `id` a known rule id (valid in an `allow(...)` list)?
+pub fn known_rule(id: &str) -> bool {
+    rule(id).is_some()
+}
+
+fn is_ident(c: char) -> bool {
+    c.is_alphanumeric() || c == '_'
+}
+
+/// Word-boundary occurrence check of `pat` in `code`: the characters
+/// immediately before the match and (when the pattern ends in an
+/// identifier character) immediately after must not be identifier
+/// characters. Keeps `unsafe` from matching `unsafe_code` and `HashMap`
+/// from matching `MyHashMapLike`.
+pub fn matches_pattern(code: &str, pat: &str) -> bool {
+    let pat_starts_ident = pat.chars().next().is_some_and(is_ident);
+    let pat_ends_ident = pat.chars().last().is_some_and(is_ident);
+    let mut from = 0;
+    while let Some(off) = code[from..].find(pat) {
+        let start = from + off;
+        let end = start + pat.len();
+        let ok_before = !pat_starts_ident
+            || !code[..start].chars().next_back().is_some_and(is_ident);
+        let ok_after =
+            !pat_ends_ident || !code[end..].chars().next().is_some_and(is_ident);
+        if ok_before && ok_after {
+            return true;
+        }
+        from = start + 1;
+    }
+    false
+}
+
+/// `ident[<digits>]` literal indexing (e.g. `replicas[0]`, `parts[1]`) —
+/// the lexically-detectable slice of R001's indexing clause. Array
+/// repeats (`[0; n]`) and variable indices don't match.
+pub fn has_numeric_index(code: &str) -> bool {
+    let bytes = code.as_bytes();
+    for (i, &b) in bytes.iter().enumerate() {
+        if b != b'[' || i == 0 {
+            continue;
+        }
+        // An index expression follows a value: ident char, `)`, or `]`.
+        let prev = bytes[i - 1];
+        let indexes_value =
+            prev == b')' || prev == b']' || is_ident(prev as char);
+        if !indexes_value {
+            continue;
+        }
+        let mut j = i + 1;
+        let mut digits = 0;
+        while j < bytes.len() && bytes[j].is_ascii_digit() {
+            digits += 1;
+            j += 1;
+        }
+        if digits > 0 && j < bytes.len() && bytes[j] == b']' {
+            return true;
+        }
+    }
+    false
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn word_boundaries_respected() {
+        assert!(matches_pattern("let m: HashMap<u32, u32> = x;", "HashMap"));
+        assert!(!matches_pattern("#![forbid(unsafe_code)]", "unsafe"));
+        assert!(matches_pattern("unsafe { *p }", "unsafe"));
+        assert!(!matches_pattern("let MyHashMapLike = 1;", "HashMap"));
+        assert!(matches_pattern("a.unwrap()", ".unwrap("));
+        assert!(!matches_pattern("a.unwrap_or(1)", ".unwrap("));
+        assert!(!matches_pattern("FeasibilityFrontier::new(i, 4)", "Vec::new("));
+    }
+
+    #[test]
+    fn numeric_index_detection() {
+        assert!(has_numeric_index("let x = replicas[0];"));
+        assert!(has_numeric_index("apportion(b, &est, m)[0]"));
+        assert!(!has_numeric_index("let v = vec![0; n];"));
+        assert!(!has_numeric_index("let x = arr[i];"));
+        assert!(!has_numeric_index("let a = [0, 1];"));
+        assert!(!has_numeric_index("let s = &xs[1..];"));
+    }
+
+    #[test]
+    fn catalog_ids_unique_and_fixture_rules_present() {
+        let mut seen = std::collections::BTreeSet::new();
+        for r in CATALOG {
+            assert!(seen.insert(r.id), "duplicate rule id {}", r.id);
+        }
+        for id in ["D001", "D002", "D003", "D004", "P001", "R001", "S001", "L001", "L002"] {
+            assert!(known_rule(id), "missing {id}");
+        }
+    }
+}

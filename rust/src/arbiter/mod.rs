@@ -772,6 +772,7 @@ impl Ledger {
     }
 
     /// One tenant's usage row (the allocation-free stats read).
+    // lint: alloc-free
     fn tenant_usage(&self, t: usize) -> Option<TenantUsage> {
         if t >= self.tenants.len() || !self.tenants[t].live {
             return None;
@@ -798,6 +799,7 @@ impl Ledger {
     /// current holds + own free floor + other partitions' lendable
     /// surplus — the same number [`ArbiterSnapshot::plannable`] derives
     /// from a full snapshot.
+    // lint: alloc-free
     fn plannable(&self, tenant: TenantId, now: Ms) -> Cores {
         let t = tenant.0 as usize;
         if t >= self.tenants.len() || !self.tenants[t].live {

@@ -23,6 +23,7 @@ use crate::arbiter::{CoreArbiter, SharedArbiter, StaticPartition, TenantId};
 use crate::monitoring::MetricRegistry;
 use crate::perfmodel::{LatencyModel, OnlineCalibrator};
 use crate::solver::{IncrementalSolver, IpSolver, SolverInput, SolverLimits};
+use crate::util::lock;
 use crate::{BatchSize, Cores, Ms};
 
 /// Batch executor abstraction for the live path. [`crate::runtime::PjrtProxy`]
@@ -332,9 +333,9 @@ impl Coordinator {
         let deadline = now + Duration::from_secs_f64(remaining / 1_000.0);
         self.shared.received.fetch_add(1, Ordering::Relaxed);
         self.metrics.counter_add("sponge_requests_total", "requests received", 1.0);
-        self.shared.arrivals_window.lock().unwrap().push(now);
+        lock(&self.shared.arrivals_window).push(now);
         {
-            let mut q = self.shared.queue.lock().unwrap();
+            let mut q = lock(&self.shared.queue);
             q.push(QueuedReq { req, enqueued_at: now, deadline });
         }
         self.shared.notify.notify_all();
@@ -350,17 +351,17 @@ impl Coordinator {
     }
 
     pub fn queue_len(&self) -> usize {
-        self.shared.queue.lock().unwrap().len()
+        lock(&self.shared.queue).len()
     }
 
     /// Number of online performance-model refits so far.
     pub fn model_refits(&self) -> u64 {
-        self.shared.calibrator.lock().unwrap().refits()
+        lock(&self.shared.calibrator).refits()
     }
 
     /// The model the scaler is currently planning with.
     pub fn current_model(&self) -> LatencyModel {
-        *self.shared.calibrator.lock().unwrap().model()
+        *lock(&self.shared.calibrator).model()
     }
 
     /// Request accounting + current decision, in one consistent-enough
@@ -392,11 +393,11 @@ impl Coordinator {
     pub fn shutdown(&self) {
         self.shared.running.store(false, Ordering::SeqCst);
         self.shared.notify.notify_all();
-        for t in self.threads.lock().unwrap().drain(..) {
+        for t in lock(&self.threads).drain(..) {
             let _ = t.join();
         }
         // Flush the queue with dropped responses.
-        let mut q = self.shared.queue.lock().unwrap();
+        let mut q = lock(&self.shared.queue);
         while let Some(item) = q.pop() {
             self.shared.dropped.fetch_add(1, Ordering::Relaxed);
             let _ = item.req.reply.send(LiveResponse {
@@ -427,12 +428,12 @@ fn processor_loop(
     while shared.running.load(Ordering::SeqCst) {
         // Collect a batch under the lock.
         let batch: Vec<QueuedReq> = {
-            let mut q = shared.queue.lock().unwrap();
+            let mut q = lock(&shared.queue);
             while q.is_empty() && shared.running.load(Ordering::SeqCst) {
                 let (guard, _) = shared
                     .notify
                     .wait_timeout(q, Duration::from_millis(50))
-                    .unwrap();
+                    .unwrap_or_else(std::sync::PoisonError::into_inner);
                 q = guard;
             }
             if !shared.running.load(Ordering::SeqCst) {
@@ -493,10 +494,7 @@ fn processor_loop(
         // Feed the online calibrator with the real (b, c, latency) sample.
         if shared.calibrate && logits.is_ok() {
             let cores = shared.cores.load(Ordering::Relaxed).max(1);
-            let refit = shared
-                .calibrator
-                .lock()
-                .unwrap()
+            let refit = lock(&shared.calibrator)
                 .observe(n as BatchSize, cores, processing_ms.max(1e-3));
             if refit {
                 metrics.counter_add(
@@ -558,7 +556,7 @@ fn scaler_loop(
     // serializes callers, and Instant is monotone, so the shared ledger
     // sees non-decreasing time even across racing coordinator threads.
     let lease = {
-        let mut arb = arbiter.lock().unwrap();
+        let mut arb = lock(&arbiter);
         let now_ms = arbiter_now_ms();
         arb.request_lease(tenant, 1, now_ms)
     };
@@ -576,14 +574,14 @@ fn scaler_loop(
         }
         // λ̂ over the trailing 5 s.
         let lambda = {
-            let mut w = shared.arrivals_window.lock().unwrap();
+            let mut w = lock(&shared.arrivals_window);
             let cutoff = Instant::now() - Duration::from_secs(5);
             w.retain(|t| *t >= cutoff);
             w.len() as f64 / 5.0
         };
         // EDF budgets snapshot.
         let budgets: Vec<Ms> = {
-            let q = shared.queue.lock().unwrap();
+            let q = lock(&shared.queue);
             let now = Instant::now();
             let mut b: Vec<Ms> = q
                 .iter()
@@ -599,7 +597,7 @@ fn scaler_loop(
         let input = SolverInput::per_request(budgets, lambda);
         // Plan with the online-calibrated model (falls back to the static
         // offline profile when calibration is disabled).
-        let model = *shared.calibrator.lock().unwrap().model();
+        let model = *lock(&shared.calibrator).model();
         let (want, batch) = match solver.solve(&model, &input, cfg.limits) {
             Some(sol) => (sol.cores, sol.batch),
             None => (cfg.limits.c_max, 1),
@@ -609,7 +607,7 @@ fn scaler_loop(
         // single-tenant arbiter the grant always equals the want; a
         // shared (stealing) arbiter may clamp it or lend surplus.
         let (cores, lent, stolen) = {
-            let mut arb = arbiter.lock().unwrap();
+            let mut arb = lock(&arbiter);
             let now_ms = arbiter_now_ms();
             let grant = arb.renew(lease.id, want, now_ms);
             let usage = arb.usage(tenant);
@@ -635,7 +633,7 @@ fn scaler_loop(
     }
     // Pipeline is stopping: hand the cores back.
     {
-        let mut arb = arbiter.lock().unwrap();
+        let mut arb = lock(&arbiter);
         let now_ms = arbiter_now_ms();
         arb.release(lease.id, now_ms);
     }

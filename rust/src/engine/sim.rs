@@ -10,7 +10,7 @@
 //! Time is virtual ([`VirtualClock`]): a 10-minute two-model experiment
 //! settles in milliseconds of wall time, deterministically per seed.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::time::Instant;
 
 use crate::arbiter::{CoreArbiter, LeaseId, SharedArbiter, StaticPartition, TenantId};
@@ -98,8 +98,9 @@ struct SimModel {
     /// This model's allocation principal at the [`crate::arbiter::CoreArbiter`].
     tenant: TenantId,
     /// Instance id → core lease (1:1; every allocated core is leased).
-    leases: HashMap<u32, LeaseId>,
-    busy: HashMap<u32, bool>,
+    /// Ordered so lease drains and fingerprints iterate deterministically.
+    leases: BTreeMap<u32, LeaseId>,
+    busy: BTreeMap<u32, bool>,
     batch: BatchSize,
     /// Model the virtual engine executes (switched by
     /// [`Action::SwitchModel`]; plain policies never touch it).
@@ -201,7 +202,7 @@ impl SimEngine {
         for (spec, &tenant) in registry.iter().zip(tenants.iter()) {
             let scaler = spec.build_scaler();
             let mut cluster = Cluster::new(cfg.cluster);
-            let mut leases = HashMap::new();
+            let mut leases = BTreeMap::new();
             for cores in scaler.initial_cores() {
                 // Every core comes from a lease; grants below one core
                 // (or substrate refusals) release the lease untouched.
@@ -232,7 +233,7 @@ impl SimEngine {
                 cluster,
                 tenant,
                 leases,
-                busy: HashMap::new(),
+                busy: BTreeMap::new(),
                 batch: 1,
                 cl_max_window: 0.0,
                 submitted: 0,
@@ -277,14 +278,10 @@ impl SimEngine {
         let now = self.clock.now_ms();
         let mut arb = self.arbiter.lock().unwrap();
         for m in &mut self.models {
-            // Deterministic release order (the ledger's loan bookkeeping
-            // is order-sensitive; HashMap drain order is not).
-            let mut ids: Vec<u32> = m.leases.keys().copied().collect();
-            ids.sort_unstable();
-            for id in ids {
-                if let Some(lease) = m.leases.remove(&id) {
-                    arb.release(lease, now);
-                }
+            // The ledger's loan bookkeeping is order-sensitive; the
+            // BTreeMap drains in instance-id order, deterministically.
+            for (_, lease) in std::mem::take(&mut m.leases) {
+                arb.release(lease, now);
             }
         }
     }
@@ -717,7 +714,9 @@ impl ServingEngine for SimEngine {
                     slo_ms: m.spec.slo_ms,
                     cores_cap,
                 };
-                let t_decide = Instant::now();
+                // Wall ns feed only the scaler-cost counters, never
+                // virtual time (see the SimModel field docs).
+                let t_decide = Instant::now(); // lint: allow(D001) -- instrumentation only; wall ns never reach the virtual clock
                 let actions = m.scaler.decide(&obs, &m.cluster, &m.exec_model);
                 m.scaler_ns = m
                     .scaler_ns

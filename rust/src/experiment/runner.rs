@@ -100,7 +100,7 @@ pub fn run_cell(spec: &CellSpec) -> Result<CellResult, String> {
                 .into(),
         );
     }
-    let started = Instant::now();
+    let started = Instant::now(); // lint: allow(D001) -- cell wall-time metadata; omitted under --stable, never feeds virtual time
     // The contention pair drives two models through one engine — its own
     // runner path (the arbiter axis's scenario).
     if matches!(spec.workload, WorkloadSource::Contention { .. }) {

@@ -1,3 +1,5 @@
+#![forbid(unsafe_code)]
+
 //! # Sponge — inference serving with dynamic SLOs via in-place vertical scaling
 //!
 //! A from-scratch reproduction of *Sponge: Inference Serving with Dynamic
@@ -80,6 +82,8 @@
 //! * [`cluster`] — instances, in-place resize vs. cold-start scale-out
 //!
 //! **Substrates**
+//! * [`analysis`] — `sponge lint`: the in-tree determinism & invariant
+//!   static-analysis pass (rule catalog in `docs/ANALYSIS.md`)
 //! * [`workload`] — request types and arrival-process generators
 //! * [`network`] — 4G/LTE bandwidth traces and communication latency
 //! * [`monitoring`] — metrics registry, SLO tracking, Prometheus text
@@ -89,6 +93,7 @@
 //! * [`util`] — hand-rolled substrates (PRNG, stats, JSON, CLI,
 //!   prop-tests, bench harness)
 
+pub mod analysis;
 pub mod arbiter;
 pub mod cluster;
 pub mod config;

@@ -6,6 +6,9 @@
 //!   mock` for a model-free smoke stack).
 //! * `bench`     — run a spongebench experiment matrix, emit the JSON
 //!   report (+ markdown table), and optionally gate against a baseline.
+//! * `lint`      — run the in-tree determinism & invariant static-analysis
+//!   pass over `rust/src` (rule catalog in `docs/ANALYSIS.md`); exits
+//!   nonzero on unsuppressed findings.
 //! * `simulate`  — run a Fig. 4-style experiment in the discrete-event
 //!   simulator and print the result summary.
 //! * `profile`   — run a (batch, cores) profiling sweep on the sim or
@@ -42,6 +45,7 @@ USAGE: sponge <COMMAND> [OPTIONS]
 COMMANDS:
   serve         multi-model live serving behind the versioned /v1 HTTP API
   bench         run a spongebench experiment matrix, emit the JSON report
+  lint          determinism & invariant static analysis over rust/src
   simulate      run a policy-vs-workload experiment in the simulator
   profile       (batch, cores) profiling sweep as CSV
   fit           fit the Eq. 2 latency model on a profile CSV
@@ -110,6 +114,24 @@ Routes: GET /v1/models | POST /v1/models/{name}/infer |
 
 The report schema (spongebench/v1), the cell-id grammar, and the
 baseline-arming procedure are documented in docs/BENCH.md.
+"
+        }
+        "lint" => {
+            "USAGE: sponge lint [OPTIONS]
+
+  --root DIR        source tree to scan   [default: rust/src]
+  --json            print the sponge-lint/v1 JSON document instead of the
+                    human-readable report
+  --out FILE        also write the JSON document to FILE
+                    (CI uploads lint-report.json as an artifact)
+  --baseline FILE   per-rule budget of unsuppressed deny findings
+                    [default: rust/lint-baseline.json; a missing default
+                    baseline means every budget is 0]
+
+Exits nonzero when any rule's unsuppressed deny findings exceed its
+budget — i.e. on any new violation. The rule catalog, module scopes, and
+the `lint: allow(...) -- reason` suppression syntax are documented in
+docs/ANALYSIS.md.
 "
         }
         "simulate" => {
@@ -192,7 +214,7 @@ fn env_logger_lite() {
 /// Parse + dispatch; the return value is the process exit code.
 fn run() -> i32 {
     let args = match Args::from_env(
-        &["verbose", "paper-verbatim", "help", "quick", "stable", "no-write", "micro"],
+        &["verbose", "paper-verbatim", "help", "quick", "stable", "no-write", "micro", "json"],
         true,
     ) {
         Ok(a) => a,
@@ -223,6 +245,7 @@ fn run() -> i32 {
     let result = match cmd {
         "serve" => cmd_serve(&args),
         "bench" => cmd_bench(&args),
+        "lint" => cmd_lint(&args),
         "simulate" => cmd_simulate(&args),
         "profile" => cmd_profile(&args),
         "fit" => cmd_fit(&args),
@@ -458,6 +481,66 @@ fn cmd_bench_micro(args: &Args) -> Result<()> {
         std::fs::write(&out, report.to_json(stable).pretty() + "\n")
             .with_context(|| format!("writing {out}"))?;
         println!("report -> {out}");
+    }
+    Ok(())
+}
+
+/// `sponge lint`: scan the source tree with the determinism & invariant
+/// pass, render the report (text or `sponge-lint/v1` JSON), and gate
+/// against the checked-in per-rule budget.
+fn cmd_lint(args: &Args) -> Result<()> {
+    use sponge::analysis::{self, report::Budget};
+    use sponge::util::json::Json;
+
+    let root = args.str_or("root", "rust/src");
+    let root_path = std::path::Path::new(&root);
+    anyhow::ensure!(
+        root_path.is_dir(),
+        "lint root '{root}' not found (run from the repo root, or pass --root)"
+    );
+    let report =
+        analysis::lint_tree(root_path).with_context(|| format!("scanning {root}"))?;
+
+    let explicit_baseline = args.get("baseline").is_some();
+    let baseline_path = args.str_or("baseline", "rust/lint-baseline.json");
+    let budget = match std::fs::read_to_string(&baseline_path) {
+        Ok(text) => {
+            let doc = Json::parse(&text)
+                .map_err(|e| anyhow::anyhow!("{baseline_path}: {e}"))?;
+            Budget::from_json(&doc)
+                .map_err(|e| anyhow::anyhow!("{baseline_path}: {e}"))?
+        }
+        Err(e) if explicit_baseline => {
+            return Err(anyhow::Error::new(e)
+                .context(format!("reading baseline {baseline_path}")))
+        }
+        // No checked-in baseline: the strictest budget (all zeros).
+        Err(_) => Budget::default(),
+    };
+
+    let json = report.to_json();
+    if let Some(out) = args.get("out") {
+        std::fs::write(out, json.pretty() + "\n")
+            .with_context(|| format!("writing {out}"))?;
+    }
+    if args.has("json") {
+        println!("{}", json.pretty());
+    } else {
+        print!("{}", report.render());
+    }
+
+    let violations = budget.violations(&report);
+    if !violations.is_empty() {
+        for v in &violations {
+            eprintln!("lint: {v}");
+        }
+        bail!(
+            "{} rule(s) over budget ({} unsuppressed deny finding(s)); \
+             fix the code or suppress with `lint: allow(ID) -- reason` \
+             (see docs/ANALYSIS.md)",
+            violations.len(),
+            report.deny_count()
+        );
     }
     Ok(())
 }

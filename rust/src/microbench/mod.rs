@@ -157,7 +157,7 @@ fn run_bench<F: FnMut(u64) -> u64>(
     iters: u64,
     mut op: F,
 ) -> MicroBenchResult {
-    let t0 = Instant::now();
+    let t0 = Instant::now(); // lint: allow(D001) -- measuring wall ns/op is the point; checksums stay deterministic
     let mut checksum = 0u64;
     for i in 0..iters {
         checksum = checksum.rotate_left(7) ^ black_box(op(i));

@@ -18,7 +18,7 @@
 //! unreachable) resolves the request as an immediate violation without
 //! occupying a queue slot.
 
-use std::collections::HashMap;
+use std::collections::BTreeMap;
 use std::sync::Arc;
 
 use crate::arbiter::{ArbiterChoice, SharedArbiter};
@@ -90,8 +90,9 @@ struct StageRt {
     name: String,
     model: String,
     engine: SimEngine,
-    /// Stage-engine request id → pipeline request id.
-    map: HashMap<u64, u64>,
+    /// Stage-engine request id → pipeline request id (ordered: drain
+    /// walks survivors in id order when closing out a run).
+    map: BTreeMap<u64, u64>,
     submitted: u64,
 }
 
@@ -127,7 +128,7 @@ struct PipelineRt {
     stages: Vec<StageRt>,
     tracker: SloTracker,
     accepted: u64,
-    inflight: HashMap<u64, Inflight>,
+    inflight: BTreeMap<u64, Inflight>,
 }
 
 /// A pipeline arrival buffered until its virtual send time falls inside
@@ -243,7 +244,7 @@ impl PipelineEngine {
                     name: stage.name.clone(),
                     model: stage.model.clone(),
                     engine,
-                    map: HashMap::new(),
+                    map: BTreeMap::new(),
                     submitted: 0,
                 });
             }
@@ -274,7 +275,7 @@ impl PipelineEngine {
                 stages,
                 tracker: SloTracker::new(cfg.engine.adaptation_interval_ms),
                 accepted: 0,
-                inflight: HashMap::new(),
+                inflight: BTreeMap::new(),
                 spec,
             });
         }
@@ -554,8 +555,9 @@ impl PipelineEngine {
             self.pipelines[pend.pipeline].inflight.remove(&pend.id);
         }
         for p in &mut self.pipelines {
-            let mut rids: Vec<u64> = p.inflight.keys().copied().collect();
-            rids.sort_unstable();
+            // BTreeMap keys are already in id order; the collect only
+            // decouples the walk from the tracker borrow below.
+            let rids: Vec<u64> = p.inflight.keys().copied().collect();
             for rid in rids {
                 let e = &p.inflight[&rid];
                 if !e.resolved {

@@ -309,6 +309,7 @@ impl EdfQueue {
     /// zero-copy solver input (request i's remaining budget at `now` is
     /// `deadline_index()[i] - now`). Maintained incrementally; no per-call
     /// work beyond the borrow.
+    // lint: alloc-free
     pub fn deadline_index(&self) -> &[Ms] {
         self.index.live()
     }
@@ -319,6 +320,7 @@ impl EdfQueue {
     /// buried behind a live head — their negative budgets would make every
     /// `(b, c)` drain-infeasible, and no allocation can save a doomed
     /// request, so the solver never plans for them.
+    // lint: alloc-free
     pub fn live_deadline_index(&self, now: Ms) -> &[Ms] {
         let live = self.index.live();
         &live[live.partition_point(|d| *d <= now)..]

@@ -54,6 +54,7 @@ use crate::coordinator::{Coordinator, LiveRequest};
 use crate::perfmodel::LatencyModel;
 use crate::pipeline::{apportion, PipelineSpec};
 use crate::util::json::Json;
+use crate::util::lock;
 
 /// The route list served with unknown-route 404s.
 const ROUTES: &[&str] = &[
@@ -189,6 +190,7 @@ impl Gateway {
     /// A single anonymous model (`"default"`) — the pre-`/v1` shape.
     pub fn single(coordinator: Arc<Coordinator>) -> Gateway {
         Gateway::from_parts(vec![("default".to_string(), vec![coordinator])])
+            // lint: allow(R001) -- constructor, not request path: one non-empty entry cannot trip from_parts' checks
             .expect("single entry cannot collide")
     }
 
@@ -199,7 +201,7 @@ impl Gateway {
 
     /// The default (first-registered) model and its replicas.
     pub fn default_entry(&self) -> (&str, &[Arc<Coordinator>]) {
-        let (name, replicas) = &self.models[0];
+        let (name, replicas) = &self.models[0]; // lint: allow(R001) -- from_parts rejects an empty model list
         (name.as_str(), replicas.as_slice())
     }
 
@@ -213,11 +215,11 @@ impl Gateway {
 }
 
 /// `POST .../infer`'s dispatch rule: [`crate::coordinator::least_loaded`]
-/// (shared with [`crate::engine::LiveEngine`]).
-fn least_loaded(replicas: &[Arc<Coordinator>]) -> &Coordinator {
-    crate::coordinator::least_loaded(replicas)
-        .expect("fleet is non-empty by Gateway construction")
-        .as_ref()
+/// (shared with [`crate::engine::LiveEngine`]). `None` on an empty fleet
+/// — which [`Gateway::from_parts`] rejects, so callers answer 500 rather
+/// than panicking a serving thread if the invariant ever breaks.
+fn least_loaded(replicas: &[Arc<Coordinator>]) -> Option<&Coordinator> {
+    crate::coordinator::least_loaded(replicas).map(|c| c.as_ref())
 }
 
 /// A running HTTP server; dropping the handle does not stop it — call
@@ -310,12 +312,20 @@ fn route(method: &str, path: &str, body: &[u8], gateway: &Gateway) -> (u16, Stri
             // (per-model, per-replica numbers are on
             // /v1/models/{name}/stats).
             let (_, replicas) = gateway.default_entry();
-            (200, "text/plain; version=0.0.4".into(), replicas[0].metrics.expose())
+            match replicas.first() {
+                Some(r) => {
+                    (200, "text/plain; version=0.0.4".into(), r.metrics.expose())
+                }
+                None => (500, "text/plain".into(), "no replicas".into()),
+            }
         }
         ("GET", "/v1/models") => json(200, models_doc(gateway)),
         ("POST", "/infer") => {
             let (name, replicas) = gateway.default_entry();
-            infer_response(name, least_loaded(replicas), body)
+            match least_loaded(replicas) {
+                Some(c) => infer_response(name, c, body),
+                None => json(500, no_replicas_doc(name)),
+            }
         }
         _ => {
             // /v1/models/{name}/infer | /v1/models/{name}/stats
@@ -337,7 +347,10 @@ fn route(method: &str, path: &str, body: &[u8], gateway: &Gateway) -> (u16, Stri
                     };
                     match (method, action) {
                         ("POST", "infer") => {
-                            return infer_response(name, least_loaded(replicas), body)
+                            return match least_loaded(replicas) {
+                                Some(c) => infer_response(name, c, body),
+                                None => json(500, no_replicas_doc(name)),
+                            }
                         }
                         ("GET", "stats") => return json(200, stats_doc(replicas)),
                         _ => {}
@@ -387,6 +400,15 @@ fn route(method: &str, path: &str, body: &[u8], gateway: &Gateway) -> (u16, Stri
             )
         }
     }
+}
+
+/// `500` payload for a model whose replica set is empty — a registration
+/// bug, not a client error, hence the 5xx.
+fn no_replicas_doc(model: &str) -> Json {
+    Json::obj(vec![(
+        "error",
+        Json::str(&format!("no replicas for model '{model}'")),
+    )])
 }
 
 /// `GET /v1/models` payload (fleet-aggregated per model).
@@ -530,7 +552,14 @@ fn pipeline_infer_response(
     match handle_pipeline_infer(gateway, route, &text) {
         Ok(json) => (200, "application/json".into(), json.to_string()),
         Err(e) => {
-            let code = if e.to_string().contains("timed out") { 504 } else { 400 };
+            let msg = e.to_string();
+            let code = if msg.contains("timed out") {
+                504
+            } else if msg.contains("no replicas") || msg.contains("not registered") {
+                500
+            } else {
+                400
+            };
             (
                 code,
                 "application/json".into(),
@@ -561,23 +590,22 @@ fn handle_pipeline_infer(
         image.push(x as f32);
     }
     {
-        let mut c = route.counters.lock().unwrap();
+        let mut c = lock(&route.counters);
         c.received += 1;
     }
 
     // Stage latency estimates at each stage's *current* core allocation
     // (declaration order) — the apportionment weights.
-    let est_all: Vec<f64> = route
-        .spec
-        .stages
-        .iter()
-        .zip(&route.latency)
-        .map(|(st, lat)| {
-            let replicas = gateway.get(&st.model).expect("validated at registration");
-            let cores = least_loaded(replicas).stats().cores.max(1);
-            lat.latency_ms(1, cores)
-        })
-        .collect();
+    let mut est_all: Vec<f64> = Vec::with_capacity(route.spec.stages.len());
+    for (st, lat) in route.spec.stages.iter().zip(&route.latency) {
+        let replicas = gateway
+            .get(&st.model)
+            .with_context(|| format!("stage model '{}' not registered", st.model))?;
+        let coordinator = least_loaded(replicas)
+            .with_context(|| format!("no replicas for stage model '{}'", st.model))?;
+        let cores = coordinator.stats().cores.max(1);
+        est_all.push(lat.latency_ms(1, cores));
+    }
 
     // The dynamic-SLO subtraction: the server's share of the deadline.
     let budget_ms = slo_ms - comm_ms;
@@ -588,8 +616,11 @@ fn handle_pipeline_infer(
     let mut dropped = false;
     for (hop, &sidx) in route.order.iter().enumerate() {
         let st = &route.spec.stages[sidx];
-        let replicas = gateway.get(&st.model).expect("validated at registration");
-        let coordinator = least_loaded(replicas);
+        let replicas = gateway
+            .get(&st.model)
+            .with_context(|| format!("stage model '{}' not registered", st.model))?;
+        let coordinator = least_loaded(replicas)
+            .with_context(|| format!("no replicas for stage model '{}'", st.model))?;
         let elapsed_ms = started.elapsed().as_secs_f64() * 1_000.0;
         // Remaining serial estimates: this hop and everything after it.
         let est: Vec<f64> =
@@ -598,7 +629,7 @@ fn handle_pipeline_infer(
             budget_ms - elapsed_ms,
             &est,
             route.spec.apportionment,
-        )[0];
+        )[0]; // lint: allow(R001) -- apportion returns one weight per estimate and `est` always holds at least the current hop
         // The live surface keeps answering even with the budget gone
         // (floor at 1 ms keeps EDF ordering sane); the final response is
         // marked violated either way.
@@ -622,7 +653,7 @@ fn handle_pipeline_infer(
             })?;
         let stage_violated = resp.violated || resp.server_ms > stage_budget;
         {
-            let mut c = route.counters.lock().unwrap();
+            let mut c = lock(&route.counters);
             c.stage_served[sidx] += 1;
             c.stage_total_ms[sidx] += resp.server_ms;
             if stage_violated {
@@ -649,7 +680,7 @@ fn handle_pipeline_infer(
     let e2e_ms = started.elapsed().as_secs_f64() * 1_000.0 + comm_ms;
     let violated = dropped || e2e_ms > slo_ms;
     {
-        let mut c = route.counters.lock().unwrap();
+        let mut c = lock(&route.counters);
         if dropped {
             c.dropped += 1;
         } else {
@@ -675,7 +706,7 @@ fn handle_pipeline_infer(
 
 /// `GET /v1/pipelines/{name}/stats` payload.
 fn pipeline_stats_doc(route: &PipelineRoute) -> Json {
-    let c = route.counters.lock().unwrap();
+    let c = lock(&route.counters);
     Json::obj(vec![
         ("pipeline", Json::str(&route.spec.name)),
         ("apportionment", Json::str(&route.spec.apportionment.name())),

@@ -219,6 +219,7 @@ pub trait IpSolver {
 /// `L*_thinned(b) == L*_base(b·k)` exactly (same index sequence, same
 /// arithmetic) — which is what lets [`plan_replicas`] reuse one frontier
 /// across every fleet size.
+// lint: alloc-free
 pub fn max_drain_latency(input: &SolverInput<'_>, b: BatchSize) -> Ms {
     let n = input.n();
     let b = b as usize;
@@ -245,6 +246,7 @@ pub fn max_drain_latency(input: &SolverInput<'_>, b: BatchSize) -> Ms {
 /// Algorithm 1, the static scaler — probe without a frontier); each
 /// comparison is the same `(budget + ε)/(i+1)` the frontier caches, so
 /// the decision is bit-identical to `l ≤ max_drain_latency`.
+// lint: alloc-free
 pub fn drain_feasible(
     model: &LatencyModel,
     input: &SolverInput<'_>,
@@ -319,6 +321,7 @@ impl FeasibilityFrontier {
     /// Compute the frontier of `input` for batch sizes `1..=max_b`
     /// (clamped to the cache cap; larger batches fall back to direct
     /// evaluation in [`FeasibilityFrontier::cap`]).
+    // lint: alloc-free
     pub fn new(input: &SolverInput<'_>, max_b: usize) -> FeasibilityFrontier {
         let len = max_b.min(FRONTIER_CAP);
         let mut l_star = [f64::INFINITY; FRONTIER_CAP];
@@ -333,6 +336,7 @@ impl FeasibilityFrontier {
     /// `L*_thinned(b) = L*_base(b·scale)`, served from cache when within
     /// the cap and recomputed from the thinned view (bit-identical)
     /// otherwise.
+    // lint: alloc-free
     pub fn cap(&self, thinned: &SolverInput<'_>, scale: usize, b: BatchSize) -> Ms {
         let eff = b as usize * scale;
         if eff <= self.len {
@@ -515,6 +519,7 @@ pub struct IncrementalSolver;
 impl IncrementalSolver {
     /// Smallest feasible batch at fixed `c` against a precomputed
     /// frontier, or None. One probe of the `c` search.
+    // lint: alloc-free
     fn best_batch(
         model: &LatencyModel,
         input: &SolverInput<'_>,
@@ -546,6 +551,7 @@ impl IncrementalSolver {
     /// its last successful probe, so the answer's `best_batch` is never
     /// recomputed; `hint` (a previous interval's solution) brackets the
     /// search — two probes when the system hasn't moved.
+    // lint: alloc-free
     fn search_min_c(
         model: &LatencyModel,
         input: &SolverInput<'_>,
@@ -604,6 +610,7 @@ impl IncrementalSolver {
     /// Solve with a warm-start hint (the previous adaptation interval's
     /// solution). Returns exactly what the cold [`IpSolver::solve`] would
     /// — the hint only brackets the `c` search.
+    // lint: alloc-free
     pub fn solve_warm(
         &self,
         model: &LatencyModel,

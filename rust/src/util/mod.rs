@@ -15,3 +15,16 @@ pub mod stats;
 
 pub use rng::Pcg32;
 pub use stats::{percentile, Summary};
+
+use std::sync::{Mutex, MutexGuard, PoisonError};
+
+/// Lock a mutex, recovering the guard when the lock is poisoned.
+///
+/// A poisoned mutex means some thread panicked while holding it. For the
+/// serving path the right response is to keep answering requests with
+/// whatever state is there — monotone counters and queues stay valid —
+/// rather than cascading the panic through every thread that touches the
+/// lock (R001: no panic paths in request-serving modules).
+pub fn lock<T: ?Sized>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}

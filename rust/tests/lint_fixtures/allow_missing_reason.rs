@@ -1,0 +1,5 @@
+// Fixture: a reason-less allow is itself a finding (L001) and must not
+// suppress the violation it sits on.
+fn stamp() -> std::time::Instant {
+    std::time::Instant::now() // lint: allow(D001)
+}

@@ -1,0 +1,6 @@
+// Fixture: an allow that matches nothing is flagged unused (L002, warn)
+// so stale suppressions cannot quietly accumulate.
+// lint: allow(D001) -- fixture: nothing below reads a clock
+fn quiet() -> u64 {
+    7
+}

@@ -1,0 +1,5 @@
+// Fixture: a wall-clock read outside the Clock abstraction (D001).
+fn decide() -> u128 {
+    let t0 = std::time::Instant::now();
+    t0.elapsed().as_nanos()
+}

@@ -1,0 +1,5 @@
+// Fixture: an iteration-order-dependent container on a report path (D002).
+fn keys() -> usize {
+    let m: std::collections::HashMap<u32, u32> = Default::default();
+    m.len()
+}

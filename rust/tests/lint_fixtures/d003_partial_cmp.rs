@@ -1,0 +1,5 @@
+// Fixture: a float sort through partial_cmp (D003) — NaN handling and tie
+// order diverge across runs; total_cmp is the deterministic spelling.
+fn sort(xs: &mut [f64]) {
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+}

@@ -1,0 +1,5 @@
+// Fixture: unseeded randomness (D004) — replays stop being reproducible.
+fn jitter() -> f64 {
+    let mut rng = rand::thread_rng();
+    rng.gen()
+}

@@ -1,0 +1,11 @@
+// Fixture: an allocation inside a declared alloc-free span (P001). The
+// second function allocates too, but sits outside the span and is clean.
+// lint: alloc-free
+fn hot(xs: &[u64]) -> u64 {
+    let v: Vec<u64> = xs.iter().map(|x| x * 2).collect();
+    v.len() as u64
+}
+
+fn cold(xs: &[u64]) -> Vec<u64> {
+    xs.to_vec()
+}

@@ -1,0 +1,9 @@
+// Fixture: panic paths in a request-serving module (R001): a literal
+// index and an expect, each of which can take down a serving thread.
+fn first(xs: &[u64]) -> u64 {
+    xs[0]
+}
+
+fn must(x: Option<u64>) -> u64 {
+    x.expect("set by caller")
+}

@@ -1,0 +1,4 @@
+// Fixture: unsafe code (S001) — the crate forbids it outright.
+fn read(p: *const u64) -> u64 {
+    unsafe { *p }
+}

@@ -1,0 +1,5 @@
+// Fixture: a correctly suppressed finding — the rule fires, the inline
+// allow suppresses exactly it, and the reason lands in the report.
+fn stamp() -> std::time::Instant {
+    std::time::Instant::now() // lint: allow(D001) -- fixture: wall time never reaches the virtual clock
+}

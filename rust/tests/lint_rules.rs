@@ -1,0 +1,166 @@
+//! Fixture-driven conformance tests for `sponge lint` (the `analysis`
+//! module): every rule in the catalog fires on its bad-example fixture,
+//! suppression works and is audited, the JSON report round-trips, and the
+//! shipped tree itself is clean against the checked-in baseline.
+//!
+//! The fixtures under `rust/tests/lint_fixtures/` are plain text to the
+//! linter — they are never compiled, so each can hold exactly the
+//! violation its rule is about.
+
+use std::path::Path;
+
+use sponge::analysis::report::{Budget, LintReport};
+use sponge::analysis::rules::Severity;
+use sponge::analysis::{lint_files, lint_tree, SourceFile};
+use sponge::util::json::Json;
+
+fn fixture(name: &str) -> String {
+    let p = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("rust/tests/lint_fixtures")
+        .join(name);
+    std::fs::read_to_string(&p)
+        .unwrap_or_else(|e| panic!("reading {}: {e}", p.display()))
+}
+
+/// Lint one fixture as if it lived at `path` inside the source tree —
+/// the path's first component is what module-scoped rules key on.
+fn scan(path: &str, name: &str) -> LintReport {
+    lint_files(&[SourceFile { path: path.to_string(), text: fixture(name) }])
+}
+
+fn open_rules(r: &LintReport) -> Vec<&'static str> {
+    r.unsuppressed().map(|f| f.rule).collect()
+}
+
+#[test]
+fn d001_fires_in_virtual_time_modules_only() {
+    let hit = scan("sim/fixture.rs", "d001_wall_clock.rs");
+    assert_eq!(open_rules(&hit), vec!["D001"]);
+    assert_eq!(hit.findings[0].line, 3);
+    // The same text in a module that legitimately owns wall time is clean.
+    let miss = scan("server/fixture.rs", "d001_wall_clock.rs");
+    assert!(miss.findings.is_empty(), "{:?}", open_rules(&miss));
+}
+
+#[test]
+fn d002_fires_on_report_paths_only() {
+    let hit = scan("queue/fixture.rs", "d002_hash_map.rs");
+    assert_eq!(open_rules(&hit), vec!["D002"]);
+    let miss = scan("util/fixture.rs", "d002_hash_map.rs");
+    assert!(miss.findings.is_empty(), "{:?}", open_rules(&miss));
+}
+
+#[test]
+fn d003_fires_on_partial_cmp_sorts() {
+    let hit = scan("sim/fixture.rs", "d003_partial_cmp.rs");
+    assert_eq!(open_rules(&hit), vec!["D003"]);
+    assert_eq!(hit.findings[0].line, 4);
+}
+
+#[test]
+fn d004_fires_on_unseeded_randomness() {
+    let hit = scan("workload/fixture.rs", "d004_unseeded_rng.rs");
+    assert_eq!(open_rules(&hit), vec!["D004"]);
+}
+
+#[test]
+fn p001_fires_inside_alloc_free_span_only() {
+    let hit = scan("solver/fixture.rs", "p001_alloc_free.rs");
+    assert_eq!(open_rules(&hit), vec!["P001"]);
+    // The allocation inside the span, not the one in `cold` below it.
+    assert_eq!(hit.findings[0].line, 5);
+}
+
+#[test]
+fn r001_fires_on_request_path_panics() {
+    let hit = scan("server/fixture.rs", "r001_panic_path.rs");
+    assert_eq!(open_rules(&hit), vec!["R001", "R001"]);
+    let lines: Vec<usize> = hit.findings.iter().map(|f| f.line).collect();
+    assert_eq!(lines, vec![4, 8]);
+    // Panicking is fine off the request path.
+    let miss = scan("queue/fixture.rs", "r001_panic_path.rs");
+    assert!(miss.findings.is_empty(), "{:?}", open_rules(&miss));
+}
+
+#[test]
+fn s001_fires_everywhere() {
+    for module in ["sim/fixture.rs", "util/fixture.rs", "runtime/fixture.rs"] {
+        let hit = scan(module, "s001_unsafe.rs");
+        assert_eq!(open_rules(&hit), vec!["S001"], "in {module}");
+    }
+}
+
+#[test]
+fn allow_with_reason_suppresses_exactly_one_finding() {
+    let r = scan("engine/fixture.rs", "suppressed_clean.rs");
+    assert_eq!(r.deny_count(), 0);
+    assert!(open_rules(&r).is_empty(), "{:?}", open_rules(&r));
+    assert_eq!(r.findings.len(), 1);
+    let f = &r.findings[0];
+    assert!(f.suppressed);
+    assert_eq!(f.rule, "D001");
+    assert_eq!(
+        f.reason.as_deref(),
+        Some("fixture: wall time never reaches the virtual clock")
+    );
+}
+
+#[test]
+fn reasonless_allow_is_rejected_and_suppresses_nothing() {
+    let r = scan("engine/fixture.rs", "allow_missing_reason.rs");
+    let mut open = open_rules(&r);
+    open.sort_unstable();
+    assert_eq!(open, vec!["D001", "L001"]);
+    assert!(r.deny_count() >= 2, "both the violation and the bad allow gate");
+}
+
+#[test]
+fn unused_allow_is_a_warning_not_a_gate() {
+    let r = scan("engine/fixture.rs", "allow_unused.rs");
+    assert_eq!(open_rules(&r), vec!["L002"]);
+    assert_eq!(r.findings[0].severity, Severity::Warn);
+    assert_eq!(r.deny_count(), 0);
+}
+
+#[test]
+fn json_report_roundtrips() {
+    let r = scan("server/fixture.rs", "r001_panic_path.rs");
+    let doc = r.to_json();
+    let parsed = Json::parse(&doc.pretty()).expect("report JSON parses");
+    assert_eq!(parsed, doc, "pretty-print then parse is the identity");
+    assert_eq!(parsed.get("schema").as_str(), Some("sponge-lint/v1"));
+    assert_eq!(parsed.get("counts").get("total").as_u64(), Some(2));
+    assert_eq!(parsed.get("counts").get("deny").as_u64(), Some(2));
+    assert_eq!(
+        parsed.get("findings").at(0).get("rule").as_str(),
+        Some("R001")
+    );
+}
+
+#[test]
+fn shipped_tree_is_clean_against_checked_in_baseline() {
+    let root = Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/src");
+    let report = lint_tree(&root).expect("scanning rust/src");
+    assert!(report.files_scanned > 30, "tree scan looks truncated");
+    // Every suppression carries its mandatory reason.
+    for f in report.findings.iter().filter(|f| f.suppressed) {
+        assert!(
+            f.reason.as_deref().is_some_and(|r| !r.is_empty()),
+            "{}:{} suppressed without reason",
+            f.file,
+            f.line
+        );
+    }
+    // The all-zeros baseline holds: no unsuppressed deny findings at all.
+    let baseline = Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/lint-baseline.json");
+    let text = std::fs::read_to_string(&baseline).expect("reading baseline");
+    let budget = Budget::from_json(&Json::parse(&text).expect("baseline JSON"))
+        .expect("baseline schema");
+    let violations = budget.violations(&report);
+    assert!(
+        violations.is_empty(),
+        "lint gate fails:\n{}\n{}",
+        violations.join("\n"),
+        report.render()
+    );
+}

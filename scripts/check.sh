@@ -10,6 +10,12 @@
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
+if ! command -v cargo >/dev/null 2>&1; then
+    echo "error: no cargo toolchain found on PATH — install Rust" \
+         "(https://rustup.rs) before running the gate" >&2
+    exit 1
+fi
+
 step() {
     echo
     echo "==> $*"
@@ -20,6 +26,11 @@ step cargo build --release
 step cargo build --release --examples
 step cargo check --no-default-features
 step cargo test -q
+
+# The in-tree static-analysis pass (docs/ANALYSIS.md): determinism scopes,
+# alloc-free spans, panic paths. Any unsuppressed finding beyond the
+# checked-in rust/lint-baseline.json budget fails the gate.
+step ./target/release/sponge lint
 
 # Documentation is a build artifact too: rustdoc warnings (broken intra-doc
 # links, bad code fences) fail the gate, and every doc-example must compile
