@@ -57,7 +57,8 @@ pub struct RuleSpec {
 /// Modules whose time must only flow through the `Clock` abstraction —
 /// the virtual-time half of the tree (wall time here either breaks
 /// byte-determinism or silently diverges sim from live).
-const VIRTUAL_TIME: &[&str] = &["sim", "engine", "pipeline", "experiment", "microbench"];
+const VIRTUAL_TIME: &[&str] =
+    &["sim", "engine", "faults", "pipeline", "experiment", "microbench"];
 
 /// Modules feeding the spongebench report, event ordering, or the `/v1`
 /// JSON surface — everything CI byte-compares or clients parse.
@@ -66,6 +67,7 @@ const REPORT_PATHS: &[&str] = &[
     "coordinator",
     "engine",
     "experiment",
+    "faults",
     "microbench",
     "monitoring",
     "pipeline",

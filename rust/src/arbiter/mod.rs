@@ -153,6 +153,10 @@ pub struct ArbiterSnapshot {
     pub budget: Cores,
     /// Sum of all lease reservations. Invariant: `granted <= budget`.
     pub granted: Cores,
+    /// Cumulative cores clawed back through lease-TTL expiry (a holder
+    /// stopped renewing — crash or partition — and its grant went home;
+    /// see [`StealingCfg::lease_ttl_ms`]). 0 whenever TTLs are disabled.
+    pub expired_reclaims: u64,
     pub partitions: Vec<PartitionUsage>,
     pub tenants: Vec<TenantUsage>,
 }
@@ -256,7 +260,17 @@ pub trait CoreArbiter: Send {
     /// takes effect at the borrower's next renewal).
     fn reclaim(&mut self, tenant: TenantId, need: Cores, now: Ms) -> Vec<Revocation>;
 
+    /// Arm lease TTLs ([`StealingCfg::lease_ttl_ms`]): every *future*
+    /// request/renew stamps `now + ttl_ms`; a lease not renewed by its
+    /// stamp expires back to the pool at the next mutating call
+    /// (detection latency ≤ one adaptation tick — faults are noticed at
+    /// ticks, like everything else in the virtual-time stack).
+    /// `f64::INFINITY` disables expiry (the default).
+    fn set_lease_ttl(&mut self, ttl_ms: Ms);
+
     /// Accounting view at `now` (pure; hysteresis evaluated against `now`).
+    /// Expiries are applied by mutating calls, so a snapshot taken after a
+    /// quiet gap reflects the ledger as of the last mutation.
     fn snapshot(&self, now: Ms) -> ArbiterSnapshot;
 
     /// [`ArbiterSnapshot::plannable`] for one tenant without materializing
@@ -322,11 +336,22 @@ pub struct StealingCfg {
     /// the pool after this delay, mirroring
     /// [`crate::cluster::ClusterCfg::resize_ms`].
     pub resize_ms: Ms,
+    /// Lease time-to-live: a lease whose holder has not called
+    /// [`CoreArbiter::renew`] (or re-requested) within this window expires
+    /// back to the pool — borrowed surplus repays its lenders first
+    /// ([`LeaseClass::Surplus`] claws back before the own floor returns).
+    /// `f64::INFINITY` (the default) disables expiry, preserving the
+    /// original always-alive protocol bit-for-bit.
+    pub lease_ttl_ms: Ms,
 }
 
 impl Default for StealingCfg {
     fn default() -> Self {
-        StealingCfg { lend_hysteresis_ms: 2_000.0, resize_ms: 100.0 }
+        StealingCfg {
+            lend_hysteresis_ms: 2_000.0,
+            resize_ms: 100.0,
+            lease_ttl_ms: f64::INFINITY,
+        }
     }
 }
 
@@ -370,6 +395,13 @@ struct LeaseSlot {
     land_at: Ms,
     /// Clawback demanded but not yet enforced (applied at next renew).
     revoked: Cores,
+    /// When an unrenewed lease expires back to the pool
+    /// (`f64::INFINITY` = TTLs disabled); re-stamped on every
+    /// request/renew.
+    expires_at: Ms,
+    /// The lease expired: its cores went home but the slot stays live so
+    /// a post-heal renew re-grants from zero instead of panicking.
+    expired: bool,
 }
 
 impl LeaseSlot {
@@ -397,6 +429,8 @@ struct Ledger {
     tenants: Vec<TenantSlot>,
     leases: Vec<LeaseSlot>,
     debts: Vec<Debt>,
+    /// Cumulative cores clawed back through lease-TTL expiry.
+    expired_reclaims: u64,
 }
 
 impl Ledger {
@@ -408,6 +442,7 @@ impl Ledger {
             tenants: Vec::new(),
             leases: Vec::new(),
             debts: Vec::new(),
+            expired_reclaims: 0,
         }
     }
 
@@ -493,10 +528,40 @@ impl Ledger {
         amount - left
     }
 
+    /// Expire every lease whose TTL has lapsed by `now`: all its cores go
+    /// home instantly (a dead holder can't actuate a graceful shrink) —
+    /// borrowed surplus repays its lenders first, then the own floor
+    /// frees. The slot stays `live` but marked `expired`, so a post-heal
+    /// renew re-grants from zero.
+    fn expire(&mut self, now: Ms) {
+        for i in 0..self.leases.len() {
+            let due = {
+                let l = &self.leases[i];
+                l.live && !l.expired && now >= l.expires_at
+            };
+            if !due {
+                continue;
+            }
+            let shed = self.leases[i].committed;
+            let borrowed = self.leases[i].borrowed();
+            let _ = self.repay(i, borrowed);
+            let l = &mut self.leases[i];
+            l.own = 0;
+            l.target = 0;
+            l.committed = 0;
+            l.enforced = 0;
+            l.revoked = 0;
+            l.land_at = f64::INFINITY;
+            l.expired = true;
+            self.expired_reclaims += u64::from(shed);
+        }
+    }
+
     /// Land every pending shrink due by `now`: reduce reservations to
     /// targets, returning borrowed cores (newest loans first) before own
     /// floor cores.
     fn land(&mut self, now: Ms) {
+        self.expire(now);
         for i in 0..self.leases.len() {
             let due = {
                 let l = &self.leases[i];
@@ -663,6 +728,8 @@ impl Ledger {
             enforced: 0,
             land_at: f64::INFINITY,
             revoked: 0,
+            expires_at: now + self.cfg.lease_ttl_ms,
+            expired: false,
         });
         let i = self.leases.len() - 1;
         let got = self.grow(i, want, now);
@@ -679,6 +746,14 @@ impl Ledger {
             i < self.leases.len() && self.leases[i].live,
             "renew of dead lease {lease:?}"
         );
+        // A renew is proof of life: re-arm the TTL. An expired slot
+        // re-grants from zero below (its target was zeroed at expiry) —
+        // the heal path after a partition.
+        {
+            let l = &mut self.leases[i];
+            l.expires_at = now + self.cfg.lease_ttl_ms;
+            l.expired = false;
+        }
         // 1. Enforce pending clawback as a forced in-place shrink.
         {
             let l = &mut self.leases[i];
@@ -838,6 +913,7 @@ impl Ledger {
         ArbiterSnapshot {
             budget: partitions.iter().map(|p| p.budget).sum(),
             granted: self.leases.iter().filter(|l| l.live).map(|l| l.committed).sum(),
+            expired_reclaims: self.expired_reclaims,
             partitions,
             tenants,
         }
@@ -940,6 +1016,9 @@ macro_rules! impl_arbiter {
             }
             fn reclaim(&mut self, tenant: TenantId, need: Cores, now: Ms) -> Vec<Revocation> {
                 self.ledger.reclaim(tenant, need, now)
+            }
+            fn set_lease_ttl(&mut self, ttl_ms: Ms) {
+                self.ledger.cfg.lease_ttl_ms = ttl_ms;
             }
             fn snapshot(&self, now: Ms) -> ArbiterSnapshot {
                 self.ledger.snapshot(now)
@@ -1186,5 +1265,101 @@ mod tests {
         // Land: reservation settles at the final target.
         let v = a.renew(l.id, 6, 2_000.0);
         assert_eq!((v.granted, v.reserved), (6, 6));
+    }
+
+    /// Two-floor stealing arbiter with a finite lease TTL armed.
+    fn ttl_arbiter(ttl: Ms) -> (StealingArbiter, TenantId, TenantId) {
+        let mut a = StealingArbiter::new(StealingCfg {
+            lease_ttl_ms: ttl,
+            ..StealingCfg::default()
+        });
+        let pa = a.add_partition(8);
+        let pb = a.add_partition(8);
+        let ta = a.register_tenant(pa);
+        let tb = a.register_tenant(pb);
+        (a, ta, tb)
+    }
+
+    #[test]
+    fn unrenewed_lease_expires_back_within_one_ttl() {
+        let (mut a, ta, tb) = ttl_arbiter(5_000.0);
+        let la = a.request_lease(ta, 8, 0.0);
+        assert_eq!(la.granted, 8);
+        let lb = a.request_lease(tb, 2, 0.0);
+        // A partitions away at t=0 (stops renewing); B keeps its
+        // heartbeat. One TTL later, B's renew sweeps A's grant home.
+        let _ = a.renew(lb.id, 2, 5_000.0);
+        let snap = a.snapshot(5_000.0);
+        assert_eq!(snap.granted, 2, "expired grant went home");
+        assert_eq!(snap.expired_reclaims, 8);
+        assert_eq!(snap.partitions[0].free, 8, "owner has its floor back");
+        assert!(a.quiescent(), "expiry is instant, no window in flight");
+    }
+
+    #[test]
+    fn expiry_repays_stolen_surplus_to_the_lender() {
+        let (mut a, ta, tb) = ttl_arbiter(5_000.0);
+        let _lb = a.request_lease(tb, 1, 0.0);
+        // A borrows 4 of B's aged surplus, then partitions away.
+        let la = a.request_lease(ta, 0, 2_500.0);
+        let la = a.renew(la.id, 12, 2_500.0);
+        assert_eq!(la.stolen, 4);
+        // B's renew at one TTL past A's last call claws everything back:
+        // the Surplus class repays B's floor, the own part frees A's.
+        let lb = a.renew(_lb.id, 8, 7_500.0);
+        assert_eq!(lb.granted, 8, "lender recovered its whole floor");
+        let snap = a.snapshot(7_500.0);
+        assert_eq!(snap.total_stolen(), 0);
+        assert_eq!(snap.expired_reclaims, 12);
+    }
+
+    #[test]
+    fn renew_after_expiry_regrants_from_zero() {
+        let (mut a, ta, tb) = ttl_arbiter(5_000.0);
+        let la = a.request_lease(ta, 8, 0.0);
+        let lb = a.request_lease(tb, 2, 0.0);
+        let _ = a.renew(lb.id, 2, 6_000.0); // sweeps A's expiry
+        assert_eq!(a.snapshot(6_000.0).granted, 2);
+        // The partition heals: A's next renew is a fresh negotiation on
+        // the same lease id — no panic, full floor regranted.
+        let la = a.renew(la.id, 8, 7_000.0);
+        assert_eq!(la.granted, 8);
+        let snap = a.snapshot(7_000.0);
+        assert_eq!(snap.granted, 10);
+        assert_eq!(snap.expired_reclaims, 8, "heal does not un-count the claw");
+    }
+
+    #[test]
+    fn steady_renewals_never_expire_and_infinite_ttl_is_inert() {
+        // Renewing inside the TTL window keeps the lease alive forever.
+        let (mut a, ta, tb) = ttl_arbiter(5_000.0);
+        let la = a.request_lease(ta, 8, 0.0);
+        let _ = a.request_lease(tb, 2, 0.0);
+        for k in 1..=10 {
+            let v = a.renew(la.id, 8, k as f64 * 4_000.0);
+            assert_eq!(v.granted, 8, "renewed lease must not decay");
+        }
+        assert_eq!(a.snapshot(40_000.0).expired_reclaims, 0);
+        // The default (infinite TTL) never expires anything, however long
+        // the silence — the pre-TTL protocol is preserved bit-for-bit.
+        let (mut b, ta2, tb2) = two_floor_stealing();
+        let l2 = b.request_lease(ta2, 8, 0.0);
+        let l3 = b.request_lease(tb2, 2, 0.0);
+        let _ = b.renew(l3.id, 2, 1.0e9);
+        let snap = b.snapshot(1.0e9);
+        assert_eq!(snap.granted, 10);
+        assert_eq!(snap.expired_reclaims, 0);
+        let v = b.renew(l2.id, 8, 1.0e9);
+        assert_eq!(v.granted, 8);
+    }
+
+    #[test]
+    fn set_lease_ttl_arms_future_grants() {
+        let (mut a, ta, tb) = two_floor_stealing();
+        a.set_lease_ttl(5_000.0);
+        let _la = a.request_lease(ta, 8, 0.0);
+        let lb = a.request_lease(tb, 2, 0.0);
+        let _ = a.renew(lb.id, 2, 5_000.0);
+        assert_eq!(a.snapshot(5_000.0).expired_reclaims, 8);
     }
 }

@@ -237,15 +237,52 @@ impl CoordinatorStats {
     }
 }
 
-/// Least-loaded replica of a coordinator fleet (queue depth first — the
-/// signal a violation actually hinges on — then replica order as a
-/// stable tie-break). The one dispatch rule shared by
+/// The one liveness predicate every dispatcher routes through — the live
+/// fleet's [`least_loaded`] below and the simulator's replica-set router
+/// ([`crate::engine::ReplicaSetEngine`]). A target takes new work only
+/// while it is neither dead nor draining. Before this trait the two
+/// paths disagreed: the replica-set router skipped draining replicas
+/// while `least_loaded` happily routed to shut-down coordinators, whose
+/// flushed queues made them look *least* loaded of all.
+pub trait DispatchLiveness {
+    /// Dead targets (shut down, crashed) never serve again.
+    fn is_dead(&self) -> bool;
+
+    /// Draining targets finish their queued work but accept nothing new.
+    fn is_draining(&self) -> bool;
+
+    /// The routing predicate. Default-composed here — exactly once — so
+    /// the live and simulated dispatchers cannot drift apart again.
+    fn is_serving(&self) -> bool {
+        !self.is_dead() && !self.is_draining()
+    }
+}
+
+impl DispatchLiveness for Coordinator {
+    /// [`Coordinator::shutdown`] is terminal: the processor/scaler loops
+    /// exit and the queue is flushed as drops.
+    fn is_dead(&self) -> bool {
+        !self.shared.running.load(Ordering::SeqCst)
+    }
+
+    /// Live coordinators have no drain state — a fleet shrinks by
+    /// shutting a replica down, never by draining it gradually.
+    fn is_draining(&self) -> bool {
+        false
+    }
+}
+
+/// Least-loaded *serving* replica of a coordinator fleet (queue depth
+/// first — the signal a violation actually hinges on — then replica
+/// order as a stable tie-break). The one dispatch rule shared by
 /// [`crate::engine::LiveEngine`] and the HTTP gateway
-/// ([`crate::server::Gateway`]), so the two paths cannot diverge.
+/// ([`crate::server::Gateway`]), so the two paths cannot diverge. `None`
+/// when the fleet is empty or no replica passes [`DispatchLiveness`].
 pub fn least_loaded(replicas: &[Arc<Coordinator>]) -> Option<&Arc<Coordinator>> {
     replicas
         .iter()
         .enumerate()
+        .filter(|(_, c)| c.is_serving())
         .min_by_key(|(i, c)| (c.stats().queue_len, *i))
         .map(|(_, c)| c)
 }
@@ -752,6 +789,30 @@ mod tests {
             m.latency_ms(4, 1)
         );
         c.shutdown();
+    }
+
+    #[test]
+    fn least_loaded_skips_dead_replicas() {
+        let a = Arc::new(Coordinator::start(
+            CoordinatorCfg::default(),
+            Arc::new(MockExecutor::default()),
+        ));
+        let b = Arc::new(Coordinator::start(
+            CoordinatorCfg::default(),
+            Arc::new(MockExecutor::default()),
+        ));
+        let fleet = vec![Arc::clone(&a), Arc::clone(&b)];
+        // Both serving, equal queues: replica order breaks the tie.
+        assert!(Arc::ptr_eq(least_loaded(&fleet).unwrap(), &a));
+        // A shut-down replica's flushed queue reads as length 0 — without
+        // the liveness filter it would look *least* loaded and take all
+        // the traffic.
+        a.shutdown();
+        assert!(a.is_dead());
+        assert!(!a.is_serving());
+        assert!(Arc::ptr_eq(least_loaded(&fleet).unwrap(), &b));
+        b.shutdown();
+        assert!(least_loaded(&fleet).is_none(), "all-dead fleet routes nowhere");
     }
 
     #[test]

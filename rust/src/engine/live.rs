@@ -250,8 +250,13 @@ impl ServingEngine for LiveEngine {
         let mut image = req.payload;
         image.resize(m.image_len, 0.0);
         let (tx, rx) = mpsc::channel();
-        let replica = crate::coordinator::least_loaded(&m.replicas)
-            .expect("every model has >= 1 replica");
+        // `least_loaded` filters through the shared liveness predicate,
+        // so an all-shut-down fleet is a rejection, not a panic.
+        let Some(replica) = crate::coordinator::least_loaded(&m.replicas) else {
+            return Err(EngineError::Rejected(format!(
+                "no serving replicas for model '{model}'"
+            )));
+        };
         replica.submit(LiveRequest {
             id: 0, // coordinator assigns its own internal id
             image,

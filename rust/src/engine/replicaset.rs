@@ -52,7 +52,9 @@
 use std::sync::Arc;
 
 use crate::arbiter::{ArbiterChoice, CoreArbiter, PartitionId, SharedArbiter, TenantId};
-use crate::monitoring::SloTracker;
+use crate::coordinator::DispatchLiveness;
+use crate::faults::{FaultInjector, FaultKind, FaultPlan, RecoveryPolicy, LEASE_TTL_INTERVALS};
+use crate::monitoring::{Outcome, SloTracker};
 use crate::sim::EventHeap;
 use crate::solver::{plan_replicas, SolverInput, SolverLimits};
 use crate::{Cores, Ms};
@@ -129,6 +131,10 @@ struct RetiredTotals {
     scaler_ns: u64,
     /// Largest borrowed-core holding any retired replica reached.
     peak_stolen: Cores,
+    /// Injected transport-loss drops folded from retired replicas.
+    transport_dropped: u64,
+    /// Injected executor failures folded from retired replicas.
+    flaky_failures: u64,
     tracker: SloTracker,
 }
 
@@ -150,6 +156,22 @@ struct Replica {
 impl Replica {
     fn snapshot(&self, name: &str) -> ModelSnapshot {
         self.engine.snapshot(name).unwrap_or_default()
+    }
+}
+
+/// The same routing predicate the live gateway uses (see
+/// [`crate::coordinator::DispatchLiveness`]): `pick_replica` consults
+/// `is_serving()`, never the raw flags.
+impl DispatchLiveness for Replica {
+    /// Crashed replicas are removed from the fleet at the fault edge
+    /// (their accounting folds into the retired totals), so a replica
+    /// still in the vec is alive by construction.
+    fn is_dead(&self) -> bool {
+        false
+    }
+
+    fn is_draining(&self) -> bool {
+        self.draining
     }
 }
 
@@ -213,6 +235,26 @@ pub struct ReplicaSet {
     /// The fleet's resource control plane (shared across models when this
     /// set lives inside a [`ReplicaSetEngine`]).
     arbiter: SharedArbiter,
+    /// Drives the installed [`FaultPlan`] (empty plan → inert: the tick
+    /// path never polls it and replica engines never see it).
+    injector: FaultInjector,
+    /// What happens to a crashed replica's orphaned requests.
+    recovery: RecoveryPolicy,
+    /// Injected replica crashes this set has absorbed.
+    crashes: u64,
+    /// Orphans re-queued to survivors with their remaining budget.
+    requests_rehomed: u64,
+    /// Orphans accounted as violated drops at crash time (past-deadline
+    /// rehomes, or every orphan under [`RecoveryPolicy::Drop`]).
+    crash_dropped: u64,
+    /// Replacement replicas spawned by the crash path (distinct from the
+    /// reconciler's demand-driven `scale_outs`).
+    replacements: u64,
+    /// Earliest unhealed crash instant; cleared — stamping
+    /// `time_to_ready_ms` — once the fleet is whole and warm again.
+    recovering_since: Option<Ms>,
+    /// Crash-to-whole-fleet-ready recovery latency (0 until measured).
+    time_to_ready_ms: Ms,
 }
 
 impl ReplicaSet {
@@ -262,6 +304,14 @@ impl ReplicaSet {
             drains: 0,
             deadline_scratch: Vec::new(),
             arbiter,
+            injector: FaultInjector::new(FaultPlan::none()),
+            recovery: RecoveryPolicy::Rehome,
+            crashes: 0,
+            requests_rehomed: 0,
+            crash_dropped: 0,
+            replacements: 0,
+            recovering_since: None,
+            time_to_ready_ms: 0.0,
         };
         for _ in 0..initial {
             set.add_replica(true)?;
@@ -282,6 +332,65 @@ impl ReplicaSet {
     /// (scale-outs, drains) the reconciler has performed.
     pub fn reconciler_actions(&self) -> (u64, u64) {
         (self.scale_outs, self.drains)
+    }
+
+    /// Install a fault schedule. The plan reaches three places: this
+    /// set's injector (crash and partition edges, polled at tick
+    /// boundaries), every replica engine (transport-loss and
+    /// flaky-executor windows, checked at exact event times), and — when
+    /// the plan schedules a lease partition — the fleet arbiter, whose
+    /// lease TTL is armed to [`LEASE_TTL_INTERVALS`] adaptation
+    /// intervals so an unrenewed grant expires back to its floor.
+    /// Installing [`FaultPlan::none`] is bit-identical to never calling
+    /// this at all.
+    pub fn set_fault_plan(&mut self, plan: FaultPlan) {
+        self.recovery = plan.recovery;
+        if !plan.is_empty() {
+            let partitions = plan
+                .events
+                .iter()
+                .any(|e| matches!(e.kind, FaultKind::LeasePartition { .. }));
+            if partitions {
+                let ttl = LEASE_TTL_INTERVALS * self.cfg.engine.adaptation_interval_ms;
+                self.arbiter.lock().unwrap().set_lease_ttl(ttl);
+            }
+            for r in &mut self.replicas {
+                r.engine.set_fault_plan(plan.clone());
+            }
+        }
+        self.injector = FaultInjector::new(plan);
+    }
+
+    /// Crash-recovery counters:
+    /// `(crashes, requests_rehomed, crash_dropped, replacements)`.
+    pub fn recovery_counters(&self) -> (u64, u64, u64, u64) {
+        (self.crashes, self.requests_rehomed, self.crash_dropped, self.replacements)
+    }
+
+    /// Milliseconds from the most recent crash until the fleet was back
+    /// at full strength with every replica warm (0 until measured).
+    pub fn time_to_ready_ms(&self) -> Ms {
+        self.time_to_ready_ms
+    }
+
+    /// Accepted requests with no terminal outcome yet. After a settled
+    /// drain this is the conservation gap — the faults matrix pins it
+    /// at 0 in every crash cell.
+    pub fn requests_lost(&self) -> u64 {
+        self.accepted.saturating_sub(self.resolved())
+    }
+
+    /// Aggregate injected-fault counters across live and retired
+    /// replicas: `(transport_dropped, flaky_failures)`.
+    pub fn fault_counters(&self) -> (u64, u64) {
+        let (mut lost, mut flaky) =
+            (self.retired.transport_dropped, self.retired.flaky_failures);
+        for r in &self.replicas {
+            let (l, f) = r.engine.fault_counters();
+            lost += l;
+            flaky += f;
+        }
+        (lost, flaky)
     }
 
     /// Largest whole-fleet core allocation observed at any tick.
@@ -419,12 +528,17 @@ impl ReplicaSet {
             let p = arb.add_partition(self.cfg.engine.shared_cores);
             (p, arb.register_tenant(p))
         };
-        let engine = SimEngine::with_arbiter(
+        let mut engine = SimEngine::with_arbiter(
             &reg,
             cfg,
             Arc::clone(&self.arbiter),
             vec![tenant],
         )?;
+        // Replicas born after the plan was installed (reconciler
+        // scale-outs, crash replacements) live under the same faults.
+        if !self.injector.is_empty() {
+            engine.set_fault_plan(self.injector.plan().clone());
+        }
         self.replicas.push(Replica {
             ord,
             engine,
@@ -439,7 +553,8 @@ impl ReplicaSet {
     /// Deterministic dispatch: the replica index for a request with
     /// `slack_ms` of remaining end-to-end budget. Ready replicas are
     /// preferred (a cold-starting replica takes no traffic); if none are
-    /// ready, any non-draining replica queues the work.
+    /// ready, any serving replica (the shared [`DispatchLiveness`]
+    /// predicate) queues the work.
     fn pick_replica(&self, slack_ms: Ms) -> Option<usize> {
         let urgent =
             slack_ms < self.cfg.urgent_intervals * self.cfg.engine.adaptation_interval_ms;
@@ -459,13 +574,13 @@ impl ReplicaSet {
         self.replicas
             .iter()
             .enumerate()
-            .filter(|(_, r)| !r.draining && ready(r))
+            .filter(|(_, r)| r.is_serving() && ready(r))
             .min_by_key(|(_, r)| key(r))
             .or_else(|| {
                 self.replicas
                     .iter()
                     .enumerate()
-                    .filter(|(_, r)| !r.draining)
+                    .filter(|(_, r)| r.is_serving())
                     .min_by_key(|(_, r)| key(r))
             })
             .map(|(i, _)| i)
@@ -515,10 +630,18 @@ impl ReplicaSet {
     }
 
     /// Advance the fleet one adaptation interval: route the interval's
-    /// arrivals, tick every replica, then reconcile the fleet size.
+    /// arrivals, fire due fault edges, tick every replica, then reconcile
+    /// the fleet size. Fault edges fire *after* routing on purpose — the
+    /// dispatcher has not noticed the crash yet (detection is one tick),
+    /// so requests routed to the doomed replica this interval are already
+    /// on the wire and come back through the evacuation/rehome path with
+    /// their remaining deadline budget.
     pub fn tick(&mut self) {
         let horizon = self.clock.now_ms() + self.cfg.engine.adaptation_interval_ms;
         self.flush_due(horizon);
+        if !self.injector.is_empty() {
+            self.apply_fault_edges();
+        }
         for r in &mut self.replicas {
             r.engine.tick();
         }
@@ -547,11 +670,135 @@ impl ReplicaSet {
         self.routed_this_interval = 0;
         self.reconcile();
         self.peak_cores = self.peak_cores.max(self.total_cores());
+        // Stamp crash-recovery latency once the fleet is whole again:
+        // back at (or above) its floor with every serving replica warm.
+        if let Some(t0) = self.recovering_since {
+            let whole = (self.replicas.len() as u32) >= self.cfg.min_replicas
+                && self.replicas.iter().all(|r| {
+                    r.draining || r.engine.ready_cores(&self.spec.name).unwrap_or(0) > 0
+                });
+            if whole {
+                self.time_to_ready_ms = self.clock.now_ms() - t0;
+                self.recovering_since = None;
+            }
+        }
+    }
+
+    /// Deliver every fault edge due at this tick boundary. Crash and
+    /// partition edges are fleet-level and handled here; transport-loss
+    /// and flaky-executor windows need no edge handling because each
+    /// replica engine answers them statelessly at exact event times.
+    fn apply_fault_edges(&mut self) {
+        let now = self.clock.now_ms();
+        for edge in self.injector.poll(now) {
+            if edge.event.kind.target() != self.spec.name {
+                continue;
+            }
+            match &edge.event.kind {
+                FaultKind::ReplicaCrash { replica, .. } => {
+                    if edge.start {
+                        self.crash_replica(*replica);
+                    }
+                }
+                FaultKind::LeasePartition { replica, .. } => {
+                    if let Some(r) = self.replicas.iter_mut().find(|r| r.ord == *replica) {
+                        // Start edge: renewals stop, releases defer, the
+                        // armed TTL expires the grant back to its floor.
+                        // Heal edge: deferred releases flush and the next
+                        // heartbeat re-grows from a fresh lease.
+                        r.engine.set_suppress_renews(edge.start);
+                    }
+                }
+                FaultKind::TransportLoss { .. } | FaultKind::ExecutorError { .. } => {}
+            }
+        }
+    }
+
+    /// Kill the replica with ordinal `ord` instantly: fold its resolved
+    /// accounting into the retired totals (conservation), evacuate every
+    /// queued and in-flight request, hand its cores back, and spawn a
+    /// cold replacement. Orphans re-enter the pending timeline with
+    /// their *remaining* deadline budget — counted once at original
+    /// submit, so `accepted` does not move — or, past deadline or under
+    /// [`RecoveryPolicy::Drop`], resolve immediately as violated drops.
+    /// Either way every request stays accounted: none are silently lost.
+    fn crash_replica(&mut self, ord: u64) {
+        let Some(i) = self.replicas.iter().position(|r| r.ord == ord) else {
+            return; // already gone (double crash in a plan is a no-op)
+        };
+        let now = self.clock.now_ms();
+        self.crashes += 1;
+        let mut r = self.replicas.remove(i);
+        let orphans = r.engine.evacuate();
+        let name = self.spec.name.clone();
+        let snap = r.engine.snapshot(&name).unwrap_or_default();
+        self.retired.completed += snap.completed;
+        self.retired.dropped += snap.dropped;
+        self.retired.violations += snap.violations;
+        self.retired.core_ms += r.engine.core_ms(&name).unwrap_or(0.0);
+        let (calls, ns) = r.engine.scaler_cost(&name).unwrap_or((0, 0));
+        self.retired.scaler_calls += calls;
+        self.retired.scaler_ns += ns;
+        let stolen_peak = r.engine.peak_stolen(&name).unwrap_or(0);
+        self.retired.peak_stolen = self.retired.peak_stolen.max(stolen_peak);
+        let (lost, flaky) = r.engine.fault_counters();
+        self.retired.transport_dropped += lost;
+        self.retired.flaky_failures += flaky;
+        if let Some(t) = r.engine.tracker(&name) {
+            self.retired.tracker.merge(t);
+        }
+        self.arbiter
+            .lock()
+            .unwrap()
+            .retire_partition(r.partition, now);
+        for (_, req) in orphans {
+            let remaining = req.deadline_ms() - now;
+            if self.recovery == RecoveryPolicy::Rehome && remaining > 0.0 {
+                // The network share was paid on the first trip; the
+                // rehomed request re-arrives instantly with whatever
+                // end-to-end budget the crash left it.
+                self.pending.schedule(now, EngineRequest::new(remaining, 0.0).at(now));
+                self.requests_rehomed += 1;
+            } else {
+                self.crash_dropped += 1;
+                self.retired.dropped += 1;
+                self.retired.violations += 1;
+                self.retired.tracker.record(
+                    now,
+                    &Outcome {
+                        request_id: req.id,
+                        e2e_ms: now - req.sent_at_ms,
+                        queue_ms: 0.0,
+                        processing_ms: 0.0,
+                        violated: true,
+                        dropped: true,
+                    },
+                );
+            }
+        }
+        // The replacement pays the full ~10 s cold start through the
+        // normal reconciler path — no warm-start shortcut for failures.
+        if (self.replicas.len() as u32) < self.cfg.max_replicas
+            && self.add_replica(false).is_ok()
+        {
+            self.replacements += 1;
+        }
+        self.recovering_since.get_or_insert(now);
     }
 
     /// The horizontal control loop (see module docs).
     fn reconcile(&mut self) {
         self.retire_empty_drained();
+        // Fleet-floor repair: only injected crashes can leave the fleet
+        // under `min_replicas` (the drain path never retires below it),
+        // so this loop is inert in fault-free runs. Replacements pay the
+        // cold start like any failure recovery.
+        while (self.replicas.len() as u32) < self.cfg.min_replicas {
+            if self.add_replica(false).is_err() {
+                break;
+            }
+            self.replacements += 1;
+        }
         if self.cfg.max_replicas <= 1 {
             return;
         }
@@ -653,6 +900,9 @@ impl ReplicaSet {
             if stolen_peak > self.retired.peak_stolen {
                 self.retired.peak_stolen = stolen_peak;
             }
+            let (lost, flaky) = r.engine.fault_counters();
+            self.retired.transport_dropped += lost;
+            self.retired.flaky_failures += flaky;
             if let Some(t) = r.engine.tracker(&name) {
                 self.retired.tracker.merge(t);
             }
@@ -769,10 +1019,17 @@ impl ReplicaSet {
             let fp = self.fingerprint();
             if last_fp.as_ref() == Some(&fp) && self.gap_skippable() {
                 let interval = self.cfg.engine.adaptation_interval_ms;
+                // Never skip across an undelivered fault edge: a crash or
+                // partition boundary inside the gap must fire on the same
+                // tick grid the unskipped run would have fired it on.
                 while self
                     .pending
                     .next_time()
                     .is_some_and(|t| t > self.clock.now_ms() + interval)
+                    && self
+                        .injector
+                        .next_edge_ms()
+                        .map_or(true, |e| e > self.clock.now_ms() + interval)
                 {
                     self.skip_idle_interval();
                 }
@@ -821,6 +1078,16 @@ impl ReplicaSetEngine {
             sets.push(ReplicaSet::with_arbiter(spec, cfg, Arc::clone(&arbiter))?);
         }
         Ok(ReplicaSetEngine { sets, clock: VirtualClock::new() })
+    }
+
+    /// Install a fault schedule fleet-wide. Every model's set drives its
+    /// own injector over the same plan (events address models by name,
+    /// so non-matching edges are ignored where they land); installing
+    /// [`FaultPlan::none`] is bit-identical to never calling this.
+    pub fn set_fault_plan(&mut self, plan: FaultPlan) {
+        for set in &mut self.sets {
+            set.set_fault_plan(plan.clone());
+        }
     }
 
     /// The replica set serving `model`.
@@ -1230,5 +1497,146 @@ mod tests {
             fast.clock().now_ms().to_bits(),
             reference.clock().now_ms().to_bits()
         );
+    }
+
+    #[test]
+    fn crash_rehomes_every_orphan_and_replaces_the_replica() {
+        let mut reg = ModelRegistry::new();
+        reg.register(spec(2)).unwrap();
+        let mut e = ReplicaSetEngine::new(&reg, cfg(2)).unwrap();
+        e.set_fault_plan(FaultPlan::crash("yolov5s", 1, 2_000.0));
+        load(&mut e, 400, 25.0, 2_000.0); // 10 s at 40 rps, crash mid-burst
+        let report = e.drain();
+        assert!(report.settled(), "{report:?}");
+        let set = e.set("yolov5s").unwrap();
+        let (crashes, rehomed, _, replacements) = set.recovery_counters();
+        assert_eq!(crashes, 1);
+        assert!(rehomed > 0, "no orphans rehomed: {:?}", set.recovery_counters());
+        assert_eq!(replacements, 1);
+        assert_eq!(set.requests_lost(), 0);
+        assert_eq!(set.replica_count(), 2, "{:?}", set.replica_stats());
+        // The replacement paid the full cold start before the fleet
+        // counted as recovered.
+        let ttr = set.time_to_ready_ms();
+        assert!((10_000.0..30_000.0).contains(&ttr), "time to ready {ttr}");
+        // Conservation across crash + rehome + replacement.
+        let s = e.snapshot("yolov5s").unwrap();
+        assert_eq!(s.submitted, 400);
+        assert_eq!(s.resolved(), 400);
+    }
+
+    #[test]
+    fn rehoming_strictly_beats_dropping_at_equal_cores() {
+        let run = |recovery| {
+            let mut reg = ModelRegistry::new();
+            reg.register(spec(2)).unwrap();
+            let mut e = ReplicaSetEngine::new(&reg, cfg(2)).unwrap();
+            e.set_fault_plan(
+                FaultPlan::crash("yolov5s", 1, 2_000.0).with_recovery(recovery),
+            );
+            load(&mut e, 400, 25.0, 2_000.0);
+            let report = e.drain();
+            assert!(report.settled(), "{report:?}");
+            let set = e.set("yolov5s").unwrap();
+            assert_eq!(set.requests_lost(), 0);
+            (set.merged_tracker().violation_rate_pct(), set.recovery_counters())
+        };
+        let (rehome_pct, _) = run(crate::faults::RecoveryPolicy::Rehome);
+        let (drop_pct, (_, _, dropped, _)) = run(crate::faults::RecoveryPolicy::Drop);
+        assert!(dropped > 0, "drop policy never dropped an orphan");
+        assert!(
+            rehome_pct < drop_pct,
+            "rehoming {rehome_pct:.2}% !< dropping {drop_pct:.2}%"
+        );
+    }
+
+    #[test]
+    fn partition_expires_the_unrenewed_lease_within_one_ttl() {
+        let mut reg = ModelRegistry::new();
+        reg.register(spec(2)).unwrap();
+        let mut e = ReplicaSetEngine::new(
+            &reg,
+            ReplicaSetCfg {
+                max_replicas: 2,
+                arbiter: ArbiterChoice::Stealing,
+                engine: SimEngineCfg { shared_cores: 4, ..Default::default() },
+                ..Default::default()
+            },
+        )
+        .unwrap();
+        e.set_fault_plan(FaultPlan::partition("yolov5s", 0, 3_000.0, 15_000.0));
+        load(&mut e, 1_000, 25.0, 2_000.0); // 25 s at 40 rps spans the window
+        // The partition starts at t = 3 s; the armed TTL (5 adaptation
+        // intervals) runs out by t = 8 s, and the survivor's own
+        // renewals drive the sweep that claws the grant back.
+        for _ in 0..10 {
+            e.tick();
+        }
+        {
+            let set = e.set("yolov5s").unwrap();
+            let now = set.clock.now_ms();
+            let snap = set.arbiter.lock().unwrap().snapshot(now);
+            assert!(
+                snap.expired_reclaims > 0,
+                "partitioned lease never expired back"
+            );
+        }
+        let report = e.drain();
+        assert!(report.settled(), "{report:?}");
+        let set = e.set("yolov5s").unwrap();
+        assert_eq!(set.requests_lost(), 0);
+        assert_eq!(set.recovery_counters().0, 0, "a partition is not a crash");
+    }
+
+    #[test]
+    fn injected_faults_reach_replica_engines_through_the_set() {
+        let mut reg = ModelRegistry::new();
+        reg.register(spec(2)).unwrap();
+        let mut e = ReplicaSetEngine::new(&reg, cfg(2)).unwrap();
+        e.set_fault_plan(
+            FaultPlan::loss("yolov5s", 1.0, 0.0, 5_000.0)
+                .with_flaky("yolov5s", 3, 5_000.0, 5_000.0),
+        );
+        load(&mut e, 200, 50.0, 2_000.0); // 10 s at 20 rps spans both windows
+        let report = e.drain();
+        assert!(report.settled(), "{report:?}");
+        let set = e.set("yolov5s").unwrap();
+        let (lost, flaky) = set.fault_counters();
+        assert!(lost > 0, "transport-loss window never fired");
+        assert!(flaky > 0, "flaky-executor window never fired");
+        assert_eq!(set.requests_lost(), 0);
+    }
+
+    #[test]
+    fn empty_fault_plan_is_bit_identical_to_no_plan() {
+        let run = |install: bool| {
+            let mut reg = ModelRegistry::new();
+            reg.register(spec(2)).unwrap();
+            let mut e = ReplicaSetEngine::new(
+                &reg,
+                ReplicaSetCfg {
+                    max_replicas: 3,
+                    engine: SimEngineCfg { latency_noise_cv: 0.05, ..Default::default() },
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+            if install {
+                e.set_fault_plan(FaultPlan::none());
+            }
+            load(&mut e, 600, 25.0, 900.0);
+            e.drain();
+            let set = e.set("yolov5s").unwrap();
+            let t = set.merged_tracker();
+            (
+                e.snapshot("yolov5s").unwrap(),
+                set.replica_count(),
+                set.reconciler_actions(),
+                set.recovery_counters(),
+                set.core_ms().to_bits(),
+                t.mean_e2e_ms().to_bits(),
+            )
+        };
+        assert_eq!(run(true), run(false));
     }
 }

@@ -15,6 +15,7 @@ use std::time::Instant;
 
 use crate::arbiter::{CoreArbiter, LeaseId, SharedArbiter, StaticPartition, TenantId};
 use crate::cluster::{Cluster, InstanceState};
+use crate::faults::FaultPlan;
 use crate::monitoring::{Outcome, RateEstimator, SloTracker};
 use crate::queue::EdfQueue;
 use crate::scaler::{Action, Autoscaler, ScalerObs};
@@ -122,7 +123,16 @@ struct SimModel {
 #[derive(Debug)]
 enum EventKind {
     Arrival { model: usize, req: Request },
-    Done { model: usize, instance: u32, requests: Vec<Request>, started_ms: Ms },
+    Done {
+        model: usize,
+        instance: u32,
+        requests: Vec<Request>,
+        started_ms: Ms,
+        /// The executor failed this batch (injected [`FaultPlan`] flaky
+        /// window): latency was burned, results are garbage — the
+        /// requests go back to the queue with their original deadlines.
+        failed: bool,
+    },
 }
 
 /// The per-model no-op detector for the idle fast-forward: a tick whose
@@ -147,6 +157,24 @@ pub struct SimEngine {
     noise: Pcg32,
     /// The allocation authority every launch/resize goes through.
     arbiter: SharedArbiter,
+    /// Installed fault schedule (empty = every hook short-circuits; the
+    /// conformance contract of [`FaultPlan::none`]).
+    fault_plan: FaultPlan,
+    /// Seeded from the plan; drawn only for transport-loss arrivals
+    /// inside an active window, so fault-free runs consume zero draws.
+    fault_rng: Pcg32,
+    /// Batches dispatched inside flaky-executor windows (the every-k-th
+    /// failure counter).
+    flaky_count: u64,
+    /// Batches the injected executor failed (requests were re-queued).
+    flaky_failures: u64,
+    /// Arrivals lost in transit (each recorded as a violated drop).
+    transport_dropped: u64,
+    /// Lease partition in effect: the heartbeat drops renews and every
+    /// other arbiter mutation is unreachable until heal (releases queue
+    /// up in `deferred_releases`).
+    suppress_renews: bool,
+    deferred_releases: Vec<LeaseId>,
 }
 
 impl SimEngine {
@@ -255,7 +283,88 @@ impl SimEngine {
             sigma,
             noise: Pcg32::seeded(cfg.seed),
             arbiter,
+            fault_plan: FaultPlan::none(),
+            fault_rng: Pcg32::seeded(0),
+            flaky_count: 0,
+            flaky_failures: 0,
+            transport_dropped: 0,
+            suppress_renews: false,
+            deferred_releases: Vec::new(),
         })
+    }
+
+    /// Install a fault schedule (transport-loss and flaky-executor
+    /// windows apply at this engine's level; crashes and partitions are
+    /// the composite engines' concern). An empty plan is bit-identical
+    /// to never calling this — the [`FaultPlan::none`] conformance
+    /// contract.
+    pub fn set_fault_plan(&mut self, plan: FaultPlan) {
+        self.fault_rng = Pcg32::seeded(plan.seed);
+        self.fault_plan = plan;
+    }
+
+    /// Drop (`true`) or resume (`false`) this engine's arbiter traffic —
+    /// the lease-partition fault. While partitioned the heartbeat skips
+    /// renews (an armed TTL expires the leases ledger-side while the
+    /// engine keeps serving on its stale grant), launches and resizes
+    /// are unreachable no-ops the scaler retries, and terminate-releases
+    /// queue up; healing flushes the queued releases, and the next
+    /// heartbeat's renews re-grant expired leases from zero.
+    pub fn set_suppress_renews(&mut self, on: bool) {
+        if !on && self.suppress_renews && !self.deferred_releases.is_empty() {
+            let now = self.clock.now_ms();
+            let mut arb = self.arbiter.lock().unwrap();
+            for lease in self.deferred_releases.drain(..) {
+                arb.release(lease, now);
+            }
+        }
+        self.suppress_renews = on;
+    }
+
+    /// (arrivals lost in transit, batches failed by the flaky executor)
+    /// — injected-fault telemetry, both 0 on fault-free runs.
+    pub fn fault_counters(&self) -> (u64, u64) {
+        (self.transport_dropped, self.flaky_failures)
+    }
+
+    /// Crash this engine instantly: every instance terminates (core-ms
+    /// integration stops now), every lease releases, and every
+    /// unresolved request — queued, in-flight, and not-yet-arrived —
+    /// comes back as `(model index, request)` orphans for the caller to
+    /// re-home or account. Deterministic order: heap order first, then
+    /// per-model EDF queue order. The engine must not be ticked
+    /// afterwards.
+    pub fn evacuate(&mut self) -> Vec<(usize, Request)> {
+        let now = self.clock.now_ms();
+        let mut orphans: Vec<(usize, Request)> = Vec::new();
+        while let Some((_, kind)) = self.events.pop_due(f64::INFINITY) {
+            match kind {
+                EventKind::Arrival { model, req } => orphans.push((model, req)),
+                EventKind::Done { model, requests, .. } => {
+                    orphans.extend(requests.into_iter().map(|r| (model, r)));
+                }
+            }
+        }
+        for (idx, m) in self.models.iter_mut().enumerate() {
+            while let Some(r) = m.queue.pop() {
+                orphans.push((idx, r));
+            }
+            m.busy.clear();
+            m.cluster.tick(now);
+            let ids: Vec<u32> = m.cluster.instances().map(|i| i.id).collect();
+            for id in ids {
+                let _ = m.cluster.terminate(id, now);
+            }
+        }
+        {
+            let mut arb = self.arbiter.lock().unwrap();
+            for lease in self.deferred_releases.drain(..) {
+                arb.release(lease, now);
+            }
+        }
+        self.suppress_renews = false;
+        self.release_leases();
+        orphans
     }
 
     /// The arbiter this engine allocates through.
@@ -370,13 +479,62 @@ impl SimEngine {
             self.clock.advance_to(t);
             match kind {
                 EventKind::Arrival { model, req } => {
+                    // Transport loss: a seeded fraction of arrivals inside
+                    // an active window dies in transit — recorded as a
+                    // violated drop (never silently vanished), invisible
+                    // to the server's rate estimator (it never arrived).
+                    if !self.fault_plan.is_empty() {
+                        let name = &self.models[model].spec.name;
+                        if let Some(frac) = self.fault_plan.loss_frac_at(name, t) {
+                            if self.fault_rng.f64() < frac {
+                                self.transport_dropped += 1;
+                                let record = self.cfg.record_completions;
+                                let m = &mut self.models[model];
+                                m.tracker.record(
+                                    t,
+                                    &Outcome {
+                                        request_id: req.id,
+                                        e2e_ms: t - req.sent_at_ms,
+                                        queue_ms: 0.0,
+                                        processing_ms: 0.0,
+                                        violated: true,
+                                        dropped: true,
+                                    },
+                                );
+                                if record {
+                                    m.completions.push(Completion {
+                                        request_id: req.id,
+                                        at_ms: t,
+                                        dropped: true,
+                                    });
+                                }
+                                continue;
+                            }
+                        }
+                    }
                     let m = &mut self.models[model];
                     m.rate.on_arrival(t);
                     m.cl_max_window = m.cl_max_window.max(req.comm_latency_ms);
                     m.queue.push(req);
                     self.dispatch(model, t);
                 }
-                EventKind::Done { model, instance, requests, started_ms } => {
+                EventKind::Done { model, instance, requests, started_ms, failed } => {
+                    if failed {
+                        // Flaky executor: the batch burned its latency and
+                        // produced garbage. The requests keep their
+                        // original deadlines and re-queue; past-deadline
+                        // ones become violated drops at the next expiry
+                        // sweep — every request still gets exactly one
+                        // terminal outcome.
+                        self.flaky_failures += 1;
+                        let m = &mut self.models[model];
+                        m.busy.insert(instance, false);
+                        for r in requests {
+                            m.queue.push(r);
+                        }
+                        self.dispatch(model, t);
+                        continue;
+                    }
                     let record = self.cfg.record_completions;
                     let m = &mut self.models[model];
                     m.busy.insert(instance, false);
@@ -438,6 +596,16 @@ impl SimEngine {
                     .noise
                     .lognormal(-self.sigma * self.sigma / 2.0, self.sigma);
             }
+            // Flaky executor: inside an active window every `every`-th
+            // dispatched batch fails at completion time (exact dispatch
+            // instants, deterministic counter — no randomness).
+            let mut failed = false;
+            if !self.fault_plan.is_empty() {
+                if let Some(every) = self.fault_plan.flaky_every_at(&m.spec.name, now) {
+                    self.flaky_count += 1;
+                    failed = self.flaky_count % every == 0;
+                }
+            }
             m.busy.insert(id, true);
             self.events.schedule(
                 now + latency,
@@ -446,6 +614,7 @@ impl SimEngine {
                     instance: id,
                     requests: batch.requests,
                     started_ms: now,
+                    failed,
                 },
             );
         }
@@ -459,6 +628,11 @@ impl SimEngine {
     fn apply_action(&mut self, idx: usize, action: Action, now: Ms) {
         match action {
             Action::Resize { id, cores } => {
+                if self.suppress_renews {
+                    // Partitioned: the lease negotiation can't reach the
+                    // arbiter; the resize is a no-op the scaler retries.
+                    return;
+                }
                 let (lease, reserved) = {
                     let m = &self.models[idx];
                     let Some(&lease) = m.leases.get(&id) else { return };
@@ -481,6 +655,9 @@ impl SimEngine {
                 let _ = self.arbiter.lock().unwrap().renew(lease, reserved, now);
             }
             Action::Launch { cores } => {
+                if self.suppress_renews {
+                    return;
+                }
                 let tenant = self.models[idx].tenant;
                 let lease = self.arbiter.lock().unwrap().request_lease(tenant, cores, now);
                 let mut launched = false;
@@ -496,7 +673,13 @@ impl SimEngine {
             }
             Action::Terminate { id } => {
                 if let Some(lease) = self.models[idx].leases.remove(&id) {
-                    self.arbiter.lock().unwrap().release(lease, now);
+                    if self.suppress_renews {
+                        // The release can't reach the arbiter until the
+                        // partition heals; queue it for the flush.
+                        self.deferred_releases.push(lease);
+                    } else {
+                        self.arbiter.lock().unwrap().release(lease, now);
+                    }
                 }
                 let m = &mut self.models[idx];
                 let _ = m.cluster.terminate(id, now);
@@ -585,6 +768,13 @@ impl SimEngine {
     /// their owner one resize window later. Under a static arbiter every
     /// renewal is an identity and this is pure bookkeeping.
     fn heartbeat(&mut self, idx: usize, now: Ms) {
+        if self.suppress_renews {
+            // Lease partition: renews never reach the arbiter. With a
+            // TTL armed the ledger expires this engine's leases while
+            // the instances keep serving on their stale grants — the
+            // modeled inconsistency a partition actually causes.
+            return;
+        }
         let entries: Vec<(u32, Cores)> = self.models[idx]
             .cluster
             .instances()
@@ -1115,6 +1305,83 @@ mod tests {
         // The clocks agree at the moment the last request resolved, and
         // the skipped grid stayed on the reference's float-exact ticks.
         assert_eq!(fast.now_ms().to_bits(), reference.now_ms().to_bits());
+    }
+
+    #[test]
+    fn installing_the_empty_fault_plan_is_bit_identical_to_no_plan() {
+        use crate::faults::FaultPlan;
+        let run = |install: bool| {
+            let mut e = two_model_engine(0.05);
+            if install {
+                e.set_fault_plan(FaultPlan::none());
+            }
+            load(&mut e, "resnet", 300, 20.0, 800.0);
+            load(&mut e, "yolov5s", 150, 40.0, 800.0);
+            let report = e.drain();
+            let (ta, tb) = (e.tracker("resnet").unwrap(), e.tracker("yolov5s").unwrap());
+            (
+                report,
+                e.snapshot("resnet").unwrap(),
+                e.snapshot("yolov5s").unwrap(),
+                ta.mean_e2e_ms().to_bits(),
+                tb.mean_e2e_ms().to_bits(),
+                e.core_ms("resnet").unwrap().to_bits(),
+                e.fault_counters(),
+            )
+        };
+        assert_eq!(run(false), run(true));
+    }
+
+    #[test]
+    fn transport_loss_drops_are_violated_never_lost() {
+        use crate::faults::FaultPlan;
+        let mut e = two_model_engine(0.0);
+        e.set_fault_plan(FaultPlan::loss("resnet", 1.0, 0.0, 10_000.0).with_seed(7));
+        load(&mut e, "resnet", 50, 50.0, 1_000.0);
+        let report = e.drain();
+        assert!(report.settled(), "{report:?}");
+        let s = e.snapshot("resnet").unwrap();
+        assert_eq!(s.dropped, 50, "frac=1.0 loses every arrival in-window");
+        assert_eq!(s.violations, 50);
+        assert_eq!(e.fault_counters().0, 50);
+    }
+
+    #[test]
+    fn flaky_executor_retries_conserve_every_request() {
+        use crate::faults::FaultPlan;
+        let mut e = two_model_engine(0.0);
+        // Every 2nd batch fails for the first 20 s; generous SLO so the
+        // retries still land in time.
+        e.set_fault_plan(FaultPlan::flaky("resnet", 2, 0.0, 20_000.0));
+        load(&mut e, "resnet", 100, 50.0, 5_000.0);
+        let report = e.drain();
+        assert!(report.settled(), "{report:?}");
+        let s = e.snapshot("resnet").unwrap();
+        assert_eq!(s.resolved(), 100);
+        let (_, flaky) = e.fault_counters();
+        assert!(flaky > 0, "no batch ever failed inside the window");
+        assert!(s.completed > 0, "retries must still complete work");
+    }
+
+    #[test]
+    fn evacuate_returns_every_unresolved_request_and_frees_cores() {
+        let mut e = two_model_engine(0.0);
+        load(&mut e, "resnet", 40, 25.0, 2_000.0);
+        load(&mut e, "yolov5s", 10, 100.0, 2_000.0);
+        e.tick(); // some work queued, some in flight, some not yet arrived
+        let resolved_before: u64 = ["resnet", "yolov5s"]
+            .iter()
+            .map(|m| e.snapshot(m).unwrap().resolved())
+            .sum();
+        let orphans = e.evacuate();
+        assert_eq!(
+            orphans.len() as u64 + resolved_before,
+            50,
+            "orphans + already-resolved must cover every submission"
+        );
+        assert_eq!(e.snapshot("resnet").unwrap().cores, 0, "crashed fleet holds no cores");
+        let snap = e.arbiter().lock().unwrap().snapshot(e.now_ms());
+        assert_eq!(snap.granted, 0, "crash released every lease");
     }
 
     #[test]

@@ -30,7 +30,9 @@ pub mod runner;
 pub mod spec;
 
 pub use report::{regression_gate, utc_today, GateOutcome, MatrixReport, SCHEMA};
-pub use runner::{run_cell, CellMetrics, CellResult, CellWall, StageMetrics};
+pub use runner::{
+    run_cell, CellMetrics, CellResult, CellWall, RecoveryMetrics, StageMetrics,
+};
 pub use spec::{
     CellSpec, EngineKind, ExperimentSpec, PolicyKnobs, TraceSource, WorkloadSource,
 };
@@ -41,11 +43,33 @@ use crate::util::bench::{bench_with, keep, BenchResult};
 
 /// Expand and execute a whole matrix. Cells run sequentially (each cell is
 /// itself a full discrete-event simulation); the first failing cell aborts
-/// with its error.
+/// with its error. Faulted cells are then paired with their fault-free
+/// twin — the cell at the same coordinates minus the `+flt-<plan>` id
+/// suffix — to fill `recovery.violation_delta_pct`, so the cost of a
+/// fault (and the payoff of rehoming over dropping) reads directly off
+/// the report.
 pub fn run_matrix(spec: &ExperimentSpec) -> Result<MatrixReport, String> {
     let mut cells = Vec::new();
     for cell in spec.expand() {
         cells.push(run_cell(&cell).map_err(|e| format!("cell {}: {e}", cell.id()))?);
+    }
+    let twin_rate: Vec<Option<f64>> = cells
+        .iter()
+        .map(|c| {
+            if c.metrics.recovery.is_none() {
+                return None;
+            }
+            let base_id = c.id.split("+flt-").next().unwrap_or(&c.id);
+            cells
+                .iter()
+                .find(|t| t.id == base_id)
+                .map(|t| t.metrics.violation_rate_pct)
+        })
+        .collect();
+    for (cell, twin) in cells.iter_mut().zip(twin_rate) {
+        if let (Some(rec), Some(rate)) = (cell.metrics.recovery.as_mut(), twin) {
+            rec.violation_delta_pct = cell.metrics.violation_rate_pct - rate;
+        }
     }
     Ok(MatrixReport {
         matrix: spec.name.clone(),
@@ -99,6 +123,7 @@ mod tests {
             budgets: vec![48],
             replica_budgets: vec![1],
             arbiters: vec![crate::arbiter::ArbiterChoice::Static],
+            faults: vec![crate::faults::FaultPlan::none()],
             horizon_ms: 15_000.0,
             model: "yolov5s".into(),
             seed: 42,
@@ -120,6 +145,38 @@ mod tests {
                 cell.id
             );
         }
+    }
+
+    #[test]
+    fn twin_pairing_fills_violation_delta() {
+        use crate::faults::FaultPlan;
+        let mut spec = tiny_matrix();
+        spec.name = "tiny-faults".into();
+        spec.policies = vec![Policy::Sponge];
+        spec.replica_budgets = vec![2];
+        spec.faults = vec![
+            FaultPlan::none(),
+            FaultPlan::crash("yolov5s", 1, 5_000.0),
+        ];
+        let report = run_matrix(&spec).unwrap();
+        assert_eq!(report.cells.len(), 2);
+        let faulted = report
+            .cells
+            .iter()
+            .find(|c| c.id.ends_with("+flt-crash"))
+            .expect("crash cell present");
+        let twin = report
+            .cells
+            .iter()
+            .find(|c| !c.id.contains("+flt-"))
+            .expect("fault-free twin present");
+        let rec = faulted.metrics.recovery.as_ref().expect("recovery reported");
+        assert_eq!(rec.requests_lost, 0);
+        assert_eq!(
+            rec.violation_delta_pct,
+            faulted.metrics.violation_rate_pct - twin.metrics.violation_rate_pct
+        );
+        assert!(twin.metrics.recovery.is_none());
     }
 
     #[test]

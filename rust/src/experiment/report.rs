@@ -19,6 +19,9 @@
 //!       "arbiter": "-",   // "-" where inert, else "static" | "stealing"
 //!       "metrics": { "submitted": ..., "violation_rate_pct": ..., ... },
 //!       "stages": [ { "stage": ..., "model": ..., ... } ],  // pipeline cells only
+//!       "recovery": { "crashes": ..., "requests_rehomed": ...,
+//!                     "requests_lost": 0, "time_to_ready_ms": ...,
+//!                     "violation_delta_pct": ... },          // faulted cells only
 //!       "wall": { "run_ms": ..., "scaler_ns_total": ... }  // omitted in stable mode
 //!     }
 //!   ],
@@ -131,6 +134,46 @@ impl MatrixReport {
                                 })
                                 .collect(),
                         ),
+                    ));
+                }
+                // Faulted cells carry recovery accounting; the key is
+                // absent elsewhere so fault-free reports stay
+                // byte-identical to pre-fault baselines. The bench-smoke
+                // CI greps the crash cells for `"requests_lost": 0`.
+                if let Some(rec) = &m.recovery {
+                    fields.push((
+                        "recovery",
+                        Json::obj(vec![
+                            ("crashes", Json::num(rec.crashes as f64)),
+                            (
+                                "requests_rehomed",
+                                Json::num(rec.requests_rehomed as f64),
+                            ),
+                            (
+                                "requests_lost",
+                                Json::num(rec.requests_lost as f64),
+                            ),
+                            (
+                                "replacements",
+                                Json::num(rec.replacements as f64),
+                            ),
+                            (
+                                "time_to_ready_ms",
+                                Json::num(round3(rec.time_to_ready_ms)),
+                            ),
+                            (
+                                "violation_delta_pct",
+                                Json::num(round3(rec.violation_delta_pct)),
+                            ),
+                            (
+                                "transport_dropped",
+                                Json::num(rec.transport_dropped as f64),
+                            ),
+                            (
+                                "flaky_failures",
+                                Json::num(rec.flaky_failures as f64),
+                            ),
+                        ]),
                     ));
                 }
                 if !stable {

@@ -48,6 +48,40 @@ pub struct CellMetrics {
     /// top-level counters stay pipeline-level (one outcome per pipeline
     /// request), this names where the time and the violations went.
     pub stages: Vec<StageMetrics>,
+    /// Fault-recovery accounting for cells running a non-empty
+    /// [`crate::faults::FaultPlan`] (`None` elsewhere, so fault-free
+    /// reports stay byte-identical to pre-fault baselines).
+    pub recovery: Option<RecoveryMetrics>,
+}
+
+/// Recovery accounting for a faulted cell ([`CellMetrics::recovery`]).
+/// The conservation invariant the `faults` matrix CI greps for is
+/// `requests_lost == 0`: every request a fault orphaned is re-homed or
+/// counted as a violated drop, never silently vanished.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RecoveryMetrics {
+    /// Injected replica (or pipeline-stage) crashes that fired.
+    pub crashes: u64,
+    /// Orphaned requests re-queued to survivors with their remaining
+    /// deadline budget.
+    pub requests_rehomed: u64,
+    /// Requests that left the accounting entirely — must be 0.
+    pub requests_lost: u64,
+    /// Cold-start replacements the reconciler launched after crashes.
+    pub replacements: u64,
+    /// Virtual time from the (first unhealed) crash until the fleet was
+    /// back at full strength with warm cores.
+    pub time_to_ready_ms: Ms,
+    /// `violation_rate_pct` minus the fault-free twin cell's (same
+    /// coordinates, empty plan) — filled by `run_matrix`'s twin-pairing
+    /// pass, 0 when the matrix carries no twin.
+    pub violation_delta_pct: f64,
+    /// Arrivals lost in transit by [`crate::faults::FaultKind::TransportLoss`]
+    /// windows (each one a recorded violated drop).
+    pub transport_dropped: u64,
+    /// Batches failed by [`crate::faults::FaultKind::ExecutorError`]
+    /// windows (their requests re-queued with original deadlines).
+    pub flaky_failures: u64,
 }
 
 /// One pipeline stage's share of a pipeline cell ([`CellMetrics::stages`]).
@@ -177,6 +211,12 @@ fn run_sim_cell(
         ..Default::default()
     };
     let mut engine = SimEngine::new(reg, cfg).map_err(|e| e.to_string())?;
+    if !spec.faults.is_empty() {
+        // Single-engine cells host the windowed kinds (transport loss,
+        // flaky executors); crash/partition plans name replica ordinals
+        // and are gated to replica cells by FaultPlan::applicable.
+        engine.set_fault_plan(spec.faults.clone());
+    }
     drive(&mut engine, &spec.model, requests, spec.time_scale)?;
 
     let snap = engine.snapshot(&spec.model).map_err(|e| e.to_string())?;
@@ -207,6 +247,21 @@ fn run_sim_cell(
         scaler_calls,
         peak_stolen: engine.peak_stolen(&spec.model).unwrap_or(0),
         stages: Vec::new(),
+        recovery: (!spec.faults.is_empty()).then(|| {
+            let (transport_dropped, flaky_failures) = engine.fault_counters();
+            RecoveryMetrics {
+                crashes: 0,
+                requests_rehomed: 0,
+                requests_lost: snap
+                    .submitted
+                    .saturating_sub(snap.completed + snap.dropped),
+                replacements: 0,
+                time_to_ready_ms: 0.0,
+                violation_delta_pct: 0.0,
+                transport_dropped,
+                flaky_failures,
+            }
+        }),
     };
     Ok(CellResult {
         id: spec.id(),
@@ -242,6 +297,9 @@ fn run_replica_cell(
         ..Default::default()
     };
     let mut engine = ReplicaSetEngine::new(reg, cfg).map_err(|e| e.to_string())?;
+    if !spec.faults.is_empty() {
+        engine.set_fault_plan(spec.faults.clone());
+    }
     drive(&mut engine, &spec.model, requests, spec.time_scale)?;
 
     let snap = engine.snapshot(&spec.model).map_err(|e| e.to_string())?;
@@ -272,6 +330,21 @@ fn run_replica_cell(
         scaler_calls,
         peak_stolen: set.peak_stolen(),
         stages: Vec::new(),
+        recovery: (!spec.faults.is_empty()).then(|| {
+            let (crashes, requests_rehomed, _crash_dropped, replacements) =
+                set.recovery_counters();
+            let (transport_dropped, flaky_failures) = set.fault_counters();
+            RecoveryMetrics {
+                crashes,
+                requests_rehomed,
+                requests_lost: set.requests_lost(),
+                replacements,
+                time_to_ready_ms: set.time_to_ready_ms(),
+                violation_delta_pct: 0.0,
+                transport_dropped,
+                flaky_failures,
+            }
+        }),
     };
     Ok(CellResult {
         id: spec.id(),
@@ -290,6 +363,12 @@ fn run_live_cell(
     requests: &[Request],
     started: Instant,
 ) -> Result<CellResult, String> {
+    // Fault injection is a virtual-time construct; expand() never crosses
+    // a plan into a live cell (FaultPlan::applicable) — this guards
+    // hand-built cells.
+    if !spec.faults.is_empty() {
+        return Err("fault plans run on the sim engine only".into());
+    }
     let mut engine = LiveEngine::start_mock(
         reg,
         LiveEngineCfg { adaptation_interval_ms: 100.0, ..Default::default() },
@@ -325,6 +404,7 @@ fn run_live_cell(
         scaler_calls: 0,
         peak_stolen: 0,
         stages: Vec::new(),
+        recovery: None,
     };
     Ok(CellResult {
         id: spec.id(),
@@ -351,6 +431,12 @@ fn run_contention_cell(spec: &CellSpec, started: Instant) -> Result<CellResult, 
     };
     if spec.engine != EngineKind::Sim {
         return Err("contention cells run on the sim engine only".into());
+    }
+    // The contention cell's two tenants share one plain SimEngine; a
+    // crash plan names replica ordinals it does not have. Keep the axis
+    // out rather than half-supporting it.
+    if !spec.faults.is_empty() {
+        return Err("fault plans are not supported for contention cells".into());
     }
     // The burst rates were calibrated against the pair's own budget;
     // running them under a different one would silently de-fang the
@@ -458,6 +544,7 @@ fn run_contention_cell(spec: &CellSpec, started: Instant) -> Result<CellResult, 
             .unwrap_or(0)
             .max(engine.peak_stolen(&b_name).unwrap_or(0)),
         stages: Vec::new(),
+        recovery: None,
     };
     Ok(CellResult {
         id: spec.id(),
@@ -536,6 +623,11 @@ fn run_pipeline_cell(spec: &CellSpec, started: Instant) -> Result<CellResult, St
         ..Default::default()
     };
     let mut engine = PipelineEngine::new(&reg, cfg).map_err(|e| e.to_string())?;
+    if !spec.faults.is_empty() {
+        // expand() pins matrix pipeline cells fault-free; hand-built
+        // cells may still target stages by name.
+        engine.set_fault_plan(spec.faults.clone());
+    }
     drive(&mut engine, name, &requests, spec.time_scale)?;
 
     let snap = engine.snapshot(name).map_err(|e| e.to_string())?;
@@ -581,6 +673,21 @@ fn run_pipeline_cell(spec: &CellSpec, started: Instant) -> Result<CellResult, St
         scaler_calls,
         peak_stolen: engine.peak_stolen(name).unwrap_or(0),
         stages: stage_metrics,
+        recovery: (!spec.faults.is_empty()).then(|| {
+            let (crashes, requests_rehomed) = engine.fault_recovery();
+            RecoveryMetrics {
+                crashes,
+                requests_rehomed,
+                requests_lost: snap
+                    .submitted
+                    .saturating_sub(snap.completed + snap.dropped),
+                replacements: 0,
+                time_to_ready_ms: 0.0,
+                violation_delta_pct: 0.0,
+                transport_dropped: 0,
+                flaky_failures: 0,
+            }
+        }),
     };
     Ok(CellResult {
         id: spec.id(),
@@ -619,6 +726,7 @@ mod tests {
             seed: 42,
             noise_cv: 0.05,
             time_scale: 0.02,
+            faults: crate::faults::FaultPlan::none(),
         }
     }
 
@@ -768,6 +876,45 @@ mod tests {
         let mut live = pipeline_cell(ArbiterChoice::Static);
         live.engine = EngineKind::Live;
         assert!(run_cell(&live).unwrap_err().contains("sim engine only"));
+    }
+
+    #[test]
+    fn faulted_replica_cell_reports_recovery_and_loses_nothing() {
+        use crate::faults::FaultPlan;
+        let mut cell = tiny_cell(Policy::Sponge, QueueDiscipline::Edf);
+        cell.knobs.replicas = 2;
+        cell.faults = FaultPlan::crash("yolov5s", 1, 5_000.0);
+        let r = run_cell(&cell).unwrap();
+        assert!(r.id.ends_with("+flt-crash"), "{}", r.id);
+        let rec = r.metrics.recovery.as_ref().expect("faulted cell reports recovery");
+        assert_eq!(rec.crashes, 1);
+        assert_eq!(rec.requests_lost, 0, "crash must never lose a request");
+        assert!(rec.requests_rehomed > 0);
+        assert_eq!(rec.replacements, 1);
+        assert!(rec.time_to_ready_ms > 0.0);
+        assert_eq!(r.metrics.submitted, r.metrics.completed + r.metrics.dropped);
+        // Determinism holds under faults too.
+        let again = run_cell(&cell).unwrap();
+        assert_eq!(r.metrics, again.metrics);
+    }
+
+    #[test]
+    fn fault_free_cells_report_no_recovery_section() {
+        let r = run_cell(&tiny_cell(Policy::Sponge, QueueDiscipline::Edf)).unwrap();
+        assert!(r.metrics.recovery.is_none());
+        assert!(!r.id.contains("+flt-"), "{}", r.id);
+    }
+
+    #[test]
+    fn fault_plans_rejected_off_the_sim_path() {
+        use crate::faults::FaultPlan;
+        let mut live = tiny_cell(Policy::Sponge, QueueDiscipline::Edf);
+        live.engine = EngineKind::Live;
+        live.faults = FaultPlan::flaky("yolov5s", 3, 0.0, 5_000.0);
+        assert!(run_cell(&live).unwrap_err().contains("sim engine only"));
+        let mut cont = contention_cell(crate::arbiter::ArbiterChoice::Static);
+        cont.faults = FaultPlan::flaky("yolov5s", 3, 0.0, 5_000.0);
+        assert!(run_cell(&cont).unwrap_err().contains("not supported"));
     }
 
     #[test]

@@ -1,0 +1,473 @@
+//! Deterministic fault-injection plane: declarative, seedable schedules
+//! of component failures fired at exact virtual times.
+//!
+//! A [`FaultPlan`] is a list of [`FaultEvent`]s — replica crashes, lease
+//! partitions, transport-loss windows, flaky-executor windows — each with
+//! a start time and (for windowed kinds) a duration. The plan is pure
+//! data; the engines own the reaction. Delivery goes through a
+//! [`FaultInjector`] built on the same [`crate::sim::EventHeap`] the
+//! serving engines drain, so fault edges fire in `(time, seq)` order and
+//! a faulted run stays byte-deterministic: two runs of the same plan
+//! produce identical reports (the property the `faults` matrix CI smoke
+//! double-runs and `cmp`s).
+//!
+//! Contract pinned by the conformance tests: an empty plan
+//! ([`FaultPlan::none`]) must be indistinguishable — bit-for-bit — from
+//! no plan at all. Engines guarantee that by skipping every fault hook
+//! when [`FaultPlan::is_empty`] holds, so the fault plane adds zero
+//! behavior (and zero RNG draws) until a plan actually carries events.
+//!
+//! What each kind means (reaction semantics live in the consuming layer,
+//! documented in `docs/ARCHITECTURE.md` § Fault model):
+//!
+//! * [`FaultKind::ReplicaCrash`] — the target replica dies instantly at
+//!   `at_ms`: queued + in-flight work is orphaned, its cores vanish. The
+//!   [`crate::engine::ReplicaSetEngine`] detects the crash at its next
+//!   tick and re-homes the orphans with their *remaining* deadline
+//!   budget; [`crate::pipeline::PipelineEngine`] re-apportions stage
+//!   slack for requests orphaned mid-chain.
+//! * [`FaultKind::LeasePartition`] — the target's arbiter renews are
+//!   dropped for the window; with a lease TTL armed, the unrenewed lease
+//!   expires back to its owning partition (`expired_reclaims` in
+//!   [`crate::arbiter::ArbiterSnapshot`]). Heals at window end.
+//! * [`FaultKind::TransportLoss`] — a seeded fraction of arrivals inside
+//!   the window is lost in transit; every loss is recorded as a violated
+//!   drop, never silently vanished.
+//! * [`FaultKind::ExecutorError`] — every `every`-th batch dispatched
+//!   inside the window fails after burning its latency; its requests are
+//!   re-queued with their original deadlines.
+
+use crate::sim::EventHeap;
+use crate::Ms;
+
+/// Lease TTL armed on a shared arbiter when a plan schedules a
+/// [`FaultKind::LeasePartition`], in adaptation intervals. Engines renew
+/// every tick, so a healthy lease re-arms well inside the window while a
+/// partitioned tenant's grant measurably expires back to its owning
+/// partition within one TTL of the partition start.
+pub const LEASE_TTL_INTERVALS: f64 = 5.0;
+
+/// One kind of injected failure. `target` names the component the way
+/// the consuming engine does: the model name for [`crate::engine`]
+/// engines, the stage name for [`crate::pipeline::PipelineEngine`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum FaultKind {
+    /// Kill replica `replica` (ordinal) of `target` instantly.
+    ReplicaCrash { target: String, replica: u64 },
+    /// Drop lease renewals from replica `replica` of `target` for the
+    /// event's window.
+    LeasePartition { target: String, replica: u64 },
+    /// Lose a seeded `frac` (0..=1) of `target`'s arrivals in transit
+    /// for the event's window.
+    TransportLoss { target: String, frac: f64 },
+    /// Fail every `every`-th batch `target` dispatches inside the
+    /// event's window (`every >= 1`; 1 fails all of them).
+    ExecutorError { target: String, every: u64 },
+}
+
+impl FaultKind {
+    /// The component label the event addresses.
+    pub fn target(&self) -> &str {
+        match self {
+            FaultKind::ReplicaCrash { target, .. }
+            | FaultKind::LeasePartition { target, .. }
+            | FaultKind::TransportLoss { target, .. }
+            | FaultKind::ExecutorError { target, .. } => target,
+        }
+    }
+}
+
+/// One scheduled fault: a kind, a start, and a duration (ignored for the
+/// instantaneous [`FaultKind::ReplicaCrash`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultEvent {
+    pub at_ms: Ms,
+    pub duration_ms: Ms,
+    pub kind: FaultKind,
+}
+
+impl FaultEvent {
+    /// Window membership: `at_ms <= t < at_ms + duration_ms`.
+    pub fn active_at(&self, t: Ms) -> bool {
+        t >= self.at_ms && t < self.at_ms + self.duration_ms
+    }
+}
+
+/// What happens to a crashed replica's orphaned requests.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RecoveryPolicy {
+    /// Re-queue orphans to surviving replicas with their remaining
+    /// deadline budget (past-deadline orphans are counted violated).
+    Rehome,
+    /// Count every orphan as a violated drop — the straw-man baseline
+    /// the acceptance cell compares rehoming against at equal cores.
+    Drop,
+}
+
+/// A declarative, seedable fault schedule. Pure data: build one, hand it
+/// to an engine via its `set_fault_plan`, run.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultPlan {
+    /// Short label; becomes the `+flt-<name>` cell-id suffix in the
+    /// spongebench `faults` matrix.
+    pub name: String,
+    /// Seed for injector randomness (transport-loss draws). Fault
+    /// schedules themselves are exact times, never random.
+    pub seed: u64,
+    pub events: Vec<FaultEvent>,
+    pub recovery: RecoveryPolicy,
+}
+
+impl FaultPlan {
+    /// The empty plan: engines treat it exactly like no plan at all.
+    pub fn none() -> FaultPlan {
+        FaultPlan {
+            name: "none".into(),
+            seed: 0,
+            events: Vec::new(),
+            recovery: RecoveryPolicy::Rehome,
+        }
+    }
+
+    /// No events scheduled — every fault hook must short-circuit.
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    fn named(name: &str) -> FaultPlan {
+        FaultPlan { name: name.into(), ..FaultPlan::none() }
+    }
+
+    /// A single-crash plan: replica `replica` of `target` dies at `at_ms`.
+    pub fn crash(target: &str, replica: u64, at_ms: Ms) -> FaultPlan {
+        FaultPlan::named("crash").with_crash(target, replica, at_ms)
+    }
+
+    /// A single-partition plan: `target`/`replica` renews drop during
+    /// `[at_ms, at_ms + duration_ms)`.
+    pub fn partition(target: &str, replica: u64, at_ms: Ms, duration_ms: Ms) -> FaultPlan {
+        FaultPlan::named("partition").with_partition(target, replica, at_ms, duration_ms)
+    }
+
+    /// A flaky-executor plan: every `every`-th batch fails during the
+    /// window.
+    pub fn flaky(target: &str, every: u64, at_ms: Ms, duration_ms: Ms) -> FaultPlan {
+        FaultPlan::named("flaky").with_flaky(target, every, at_ms, duration_ms)
+    }
+
+    /// A transport-loss plan: a seeded `frac` of arrivals lost during
+    /// the window.
+    pub fn loss(target: &str, frac: f64, at_ms: Ms, duration_ms: Ms) -> FaultPlan {
+        let mut p = FaultPlan::named("loss");
+        p.events.push(FaultEvent {
+            at_ms,
+            duration_ms,
+            kind: FaultKind::TransportLoss { target: target.into(), frac },
+        });
+        p
+    }
+
+    /// Rename the plan (the cell-id suffix).
+    pub fn with_name(mut self, name: &str) -> FaultPlan {
+        self.name = name.into();
+        self
+    }
+
+    /// Change the crash-recovery policy.
+    pub fn with_recovery(mut self, recovery: RecoveryPolicy) -> FaultPlan {
+        self.recovery = recovery;
+        self
+    }
+
+    /// Reseed the injector randomness.
+    pub fn with_seed(mut self, seed: u64) -> FaultPlan {
+        self.seed = seed;
+        self
+    }
+
+    /// Append a crash event.
+    pub fn with_crash(mut self, target: &str, replica: u64, at_ms: Ms) -> FaultPlan {
+        self.events.push(FaultEvent {
+            at_ms,
+            duration_ms: 0.0,
+            kind: FaultKind::ReplicaCrash { target: target.into(), replica },
+        });
+        self
+    }
+
+    /// Append a lease-partition window.
+    pub fn with_partition(
+        mut self,
+        target: &str,
+        replica: u64,
+        at_ms: Ms,
+        duration_ms: Ms,
+    ) -> FaultPlan {
+        self.events.push(FaultEvent {
+            at_ms,
+            duration_ms,
+            kind: FaultKind::LeasePartition { target: target.into(), replica },
+        });
+        self
+    }
+
+    /// Append a flaky-executor window.
+    pub fn with_flaky(
+        mut self,
+        target: &str,
+        every: u64,
+        at_ms: Ms,
+        duration_ms: Ms,
+    ) -> FaultPlan {
+        self.events.push(FaultEvent {
+            at_ms,
+            duration_ms,
+            kind: FaultKind::ExecutorError { target: target.into(), every },
+        });
+        self
+    }
+
+    /// Transport-loss fraction covering `target` at exact time `t`.
+    pub fn loss_frac_at(&self, target: &str, t: Ms) -> Option<f64> {
+        self.events.iter().find_map(|e| match &e.kind {
+            FaultKind::TransportLoss { target: tg, frac } if tg == target && e.active_at(t) => {
+                Some(*frac)
+            }
+            _ => None,
+        })
+    }
+
+    /// Flaky-executor cadence covering `target` at exact time `t`.
+    pub fn flaky_every_at(&self, target: &str, t: Ms) -> Option<u64> {
+        self.events.iter().find_map(|e| match &e.kind {
+            FaultKind::ExecutorError { target: tg, every } if tg == target && e.active_at(t) => {
+                Some((*every).max(1))
+            }
+            _ => None,
+        })
+    }
+
+    /// True when every event in the plan can fire against a cell with
+    /// `replicas` replicas on the (sim-only) fault-capable path — the
+    /// spongebench expansion gate that keeps a crash plan from being
+    /// crossed into a cell without the replica it names.
+    pub fn applicable(&self, replicas: u32, sim: bool) -> bool {
+        if self.is_empty() {
+            return true;
+        }
+        if !sim {
+            return false; // fault injection is a virtual-time construct
+        }
+        self.events.iter().all(|e| match &e.kind {
+            FaultKind::ReplicaCrash { replica, .. }
+            | FaultKind::LeasePartition { replica, .. } => *replica < replicas as u64,
+            FaultKind::TransportLoss { .. } | FaultKind::ExecutorError { .. } => true,
+        })
+    }
+}
+
+/// One fault edge delivered by [`FaultInjector::poll`]: the event plus
+/// whether this is its start (`true`) or its window-end heal (`false`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultEdge {
+    pub event: FaultEvent,
+    pub start: bool,
+}
+
+/// Heap entry: index into the plan's event list + edge direction.
+#[derive(Debug, Clone, Copy)]
+struct Edge {
+    idx: usize,
+    start: bool,
+}
+
+/// Drives a [`FaultPlan`] through an [`EventHeap`]: start edges are
+/// scheduled at each event's `at_ms`, heal edges at `at_ms +
+/// duration_ms` (windowed kinds only). Engines poll once per tick; due
+/// edges come back in deterministic `(time, plan order)` order. Window
+/// membership for exact-time checks (loss at an arrival instant, flaky
+/// at a dispatch instant) is answered statelessly from the plan, so
+/// those hooks see exact virtual times rather than tick boundaries.
+#[derive(Debug, Clone)]
+pub struct FaultInjector {
+    plan: FaultPlan,
+    heap: EventHeap<Edge>,
+    /// Per-event active flag (windowed kinds; crash events never linger).
+    active: Vec<bool>,
+    delivered: u64,
+}
+
+impl FaultInjector {
+    pub fn new(plan: FaultPlan) -> FaultInjector {
+        let mut heap = EventHeap::new();
+        for (idx, ev) in plan.events.iter().enumerate() {
+            heap.schedule(ev.at_ms, Edge { idx, start: true });
+            let windowed = !matches!(ev.kind, FaultKind::ReplicaCrash { .. });
+            if windowed {
+                heap.schedule(ev.at_ms + ev.duration_ms, Edge { idx, start: false });
+            }
+        }
+        let active = vec![false; plan.events.len()];
+        FaultInjector { plan, heap, active, delivered: 0 }
+    }
+
+    /// The plan this injector drives.
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+
+    /// No events at all — callers may skip fault hooks entirely.
+    pub fn is_empty(&self) -> bool {
+        self.plan.is_empty()
+    }
+
+    /// Total edges delivered so far (telemetry).
+    pub fn delivered(&self) -> u64 {
+        self.delivered
+    }
+
+    /// Pop every edge due at or before `now`, updating window state.
+    /// Call once per engine tick; handle the returned edges in order.
+    pub fn poll(&mut self, now: Ms) -> Vec<FaultEdge> {
+        let mut out = Vec::new();
+        while let Some((_, edge)) = self.heap.pop_due(now) {
+            self.active[edge.idx] = edge.start
+                && !matches!(
+                    self.plan.events[edge.idx].kind,
+                    FaultKind::ReplicaCrash { .. }
+                );
+            self.delivered += 1;
+            out.push(FaultEdge { event: self.plan.events[edge.idx].clone(), start: edge.start });
+        }
+        out
+    }
+
+    /// Virtual time of the next undelivered edge, if any.
+    pub fn next_edge_ms(&self) -> Option<Ms> {
+        self.heap.next_time()
+    }
+
+    /// Is `target`/`replica` inside an active lease partition (as of the
+    /// last [`FaultInjector::poll`])?
+    pub fn partitioned(&self, target: &str, replica: u64) -> bool {
+        self.plan.events.iter().zip(&self.active).any(|(e, on)| {
+            *on && matches!(
+                &e.kind,
+                FaultKind::LeasePartition { target: t, replica: r }
+                    if t == target && *r == replica
+            )
+        })
+    }
+
+    /// Transport-loss fraction covering `target` at exact time `t`
+    /// (stateless — valid between polls).
+    pub fn loss_frac_at(&self, target: &str, t: Ms) -> Option<f64> {
+        self.plan.loss_frac_at(target, t)
+    }
+
+    /// Flaky-executor cadence covering `target` at exact time `t`
+    /// (stateless — valid between polls).
+    pub fn flaky_every_at(&self, target: &str, t: Ms) -> Option<u64> {
+        self.plan.flaky_every_at(target, t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn empty_plan_is_empty_and_universally_applicable() {
+        let p = FaultPlan::none();
+        assert!(p.is_empty());
+        assert!(p.applicable(1, true));
+        assert!(p.applicable(0, false));
+        let mut inj = FaultInjector::new(p);
+        assert!(inj.is_empty());
+        assert!(inj.poll(1e12).is_empty());
+        assert_eq!(inj.next_edge_ms(), None);
+    }
+
+    #[test]
+    fn edges_fire_in_time_then_plan_order() {
+        let plan = FaultPlan::named("multi")
+            .with_partition("m", 1, 50.0, 100.0)
+            .with_crash("m", 0, 50.0)
+            .with_flaky("m", 3, 200.0, 10.0);
+        let mut inj = FaultInjector::new(plan);
+        // Both t=50 starts fire, partition (plan order 0) first.
+        let edges = inj.poll(50.0);
+        assert_eq!(edges.len(), 2);
+        assert!(matches!(edges[0].event.kind, FaultKind::LeasePartition { .. }));
+        assert!(edges[0].start);
+        assert!(matches!(edges[1].event.kind, FaultKind::ReplicaCrash { .. }));
+        assert!(inj.partitioned("m", 1));
+        assert!(!inj.partitioned("m", 0));
+        // Partition heals at 150, flaky opens at 200.
+        let edges = inj.poll(200.0);
+        assert_eq!(edges.len(), 2);
+        assert!(!edges[0].start, "heal edge first");
+        assert!(!inj.partitioned("m", 1));
+        assert_eq!(inj.flaky_every_at("m", 205.0), Some(3));
+        let _ = inj.poll(1e9);
+        assert_eq!(inj.flaky_every_at("m", 205.0), None, "window closed after heal");
+        assert_eq!(inj.delivered(), 6);
+    }
+
+    #[test]
+    fn stateless_window_checks_use_exact_times() {
+        let plan = FaultPlan::loss("m", 0.5, 100.0, 50.0);
+        let inj = FaultInjector::new(plan);
+        // Never polled: the stateless checks still answer exactly.
+        assert_eq!(inj.loss_frac_at("m", 99.9), None);
+        assert_eq!(inj.loss_frac_at("m", 100.0), Some(0.5));
+        assert_eq!(inj.loss_frac_at("m", 149.9), Some(0.5));
+        assert_eq!(inj.loss_frac_at("m", 150.0), None);
+        assert_eq!(inj.loss_frac_at("other", 120.0), None);
+    }
+
+    #[test]
+    fn applicability_gates_on_replica_ordinals_and_sim() {
+        let crash1 = FaultPlan::crash("m", 1, 60_000.0);
+        assert!(crash1.applicable(2, true));
+        assert!(!crash1.applicable(1, true), "replica 1 needs >= 2 replicas");
+        assert!(!crash1.applicable(2, false), "faults are sim-only");
+        let flaky = FaultPlan::flaky("m", 3, 0.0, 10.0);
+        assert!(flaky.applicable(1, true));
+    }
+
+    #[test]
+    fn builders_compose_and_label() {
+        let p = FaultPlan::crash("m", 1, 10.0)
+            .with_partition("m", 0, 20.0, 5.0)
+            .with_name("crash+part")
+            .with_recovery(RecoveryPolicy::Drop)
+            .with_seed(9);
+        assert_eq!(p.name, "crash+part");
+        assert_eq!(p.events.len(), 2);
+        assert_eq!(p.recovery, RecoveryPolicy::Drop);
+        assert_eq!(p.seed, 9);
+        assert_eq!(p.events[0].kind.target(), "m");
+    }
+
+    #[test]
+    fn injector_is_deterministic_across_builds() {
+        let plan = FaultPlan::named("det")
+            .with_crash("a", 0, 5.0)
+            .with_partition("b", 2, 5.0, 5.0)
+            .with_flaky("c", 2, 7.0, 1.0);
+        let drain = |mut inj: FaultInjector| -> Vec<FaultEdge> {
+            let mut out = Vec::new();
+            let mut t = 0.0;
+            while let Some(next) = inj.next_edge_ms() {
+                t = t.max(next);
+                out.extend(inj.poll(t));
+            }
+            out
+        };
+        let a = drain(FaultInjector::new(plan.clone()));
+        let b = drain(FaultInjector::new(plan));
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 5);
+    }
+}

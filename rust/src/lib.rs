@@ -84,6 +84,10 @@
 //! **Substrates**
 //! * [`analysis`] — `sponge lint`: the in-tree determinism & invariant
 //!   static-analysis pass (rule catalog in `docs/ANALYSIS.md`)
+//! * [`faults`] — the deterministic fault-injection plane: declarative
+//!   [`faults::FaultPlan`] schedules (replica crashes, lease partitions,
+//!   transport loss, flaky executors) fired at exact virtual times
+//!   through the event heap; engines react, the plan stays pure data
 //! * [`workload`] — request types and arrival-process generators
 //! * [`network`] — 4G/LTE bandwidth traces and communication latency
 //! * [`monitoring`] — metrics registry, SLO tracking, Prometheus text
@@ -100,6 +104,7 @@ pub mod config;
 pub mod coordinator;
 pub mod engine;
 pub mod experiment;
+pub mod faults;
 pub mod microbench;
 pub mod monitoring;
 pub mod network;

@@ -92,7 +92,7 @@ Routes: GET /v1/models | POST /v1/models/{name}/infer |
         "bench" => {
             "USAGE: sponge bench [OPTIONS]
 
-  --matrix NAME     experiment matrix: default | paper | scale
+  --matrix NAME     experiment matrix: default | paper | scale | faults
                     [default: default]
   --micro           run the hot-path microbench suite instead of a matrix
                     (queue snapshot, IP solve cold/warm, replica planning,
@@ -382,8 +382,9 @@ fn cmd_bench(args: &Args) -> Result<()> {
     }
 
     let name = args.str_or("matrix", "default");
-    let mut spec = ExperimentSpec::named(&name)
-        .ok_or_else(|| anyhow::anyhow!("unknown matrix '{name}' (default|paper|scale)"))?;
+    let mut spec = ExperimentSpec::named(&name).ok_or_else(|| {
+        anyhow::anyhow!("unknown matrix '{name}' (default|paper|scale|faults)")
+    })?;
     if args.has("quick") {
         spec = spec.quick();
     }

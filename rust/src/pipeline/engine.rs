@@ -21,8 +21,11 @@
 use std::collections::BTreeMap;
 use std::sync::Arc;
 
-use crate::arbiter::{ArbiterChoice, SharedArbiter};
+use crate::arbiter::{ArbiterChoice, CoreArbiter, SharedArbiter};
 use crate::engine::sim::EngineFp;
+use crate::faults::{
+    FaultEvent, FaultInjector, FaultKind, FaultPlan, LEASE_TTL_INTERVALS,
+};
 use crate::engine::{
     Clock, Completion, DrainReport, EngineError, EngineRequest, ModelRegistry,
     ModelSnapshot, ServingEngine, SimEngine, SimEngineCfg, VirtualClock,
@@ -155,6 +158,13 @@ pub struct PipelineEngine {
     next_id: u64,
     next_tick_ms: Ms,
     arbiter: SharedArbiter,
+    /// Drives the installed [`FaultPlan`] (empty → inert; events target
+    /// *stage* names here).
+    injector: FaultInjector,
+    /// Injected stage crashes absorbed so far.
+    stage_crashes: u64,
+    /// Orphans re-entered into their stage with re-apportioned slack.
+    requests_rehomed: u64,
 }
 
 impl PipelineEngine {
@@ -287,7 +297,45 @@ impl PipelineEngine {
             pending: EventHeap::new(),
             next_id: 0,
             arbiter,
+            injector: FaultInjector::new(FaultPlan::none()),
+            stage_crashes: 0,
+            requests_rehomed: 0,
         })
+    }
+
+    /// Install a fault schedule. Events address *stages* by name. Crash
+    /// and partition edges are handled at this level (a crash evacuates
+    /// the stage and re-enters its orphans with re-apportioned slack; a
+    /// partition suppresses the stage's renews under an armed lease
+    /// TTL); transport-loss and flaky-executor windows are re-targeted
+    /// from the stage name to its model and pushed down into the stage
+    /// engine, which answers them at exact event times. Installing
+    /// [`FaultPlan::none`] is bit-identical to never calling this.
+    pub fn set_fault_plan(&mut self, plan: FaultPlan) {
+        if !plan.is_empty() {
+            let partitions = plan
+                .events
+                .iter()
+                .any(|e| matches!(e.kind, FaultKind::LeasePartition { .. }));
+            if partitions {
+                let ttl = LEASE_TTL_INTERVALS * self.cfg.engine.adaptation_interval_ms;
+                self.arbiter.lock().unwrap().set_lease_ttl(ttl);
+            }
+            for p in &mut self.pipelines {
+                for st in &mut p.stages {
+                    let sub = stage_subplan(&plan, &st.name, &st.model);
+                    if !sub.is_empty() {
+                        st.engine.set_fault_plan(sub);
+                    }
+                }
+            }
+        }
+        self.injector = FaultInjector::new(plan);
+    }
+
+    /// Fault-recovery counters: `(stage_crashes, requests_rehomed)`.
+    pub fn fault_recovery(&self) -> (u64, u64) {
+        (self.stage_crashes, self.requests_rehomed)
     }
 
     /// The arbiter every stage of every pipeline allocates through.
@@ -374,6 +422,64 @@ impl PipelineEngine {
 
     fn pipeline_idx(&self, name: &str) -> Option<usize> {
         self.pipelines.iter().position(|p| p.spec.name == name)
+    }
+
+    /// Locate a stage by name across every registered pipeline.
+    fn stage_idx(&self, stage: &str) -> Option<(usize, usize)> {
+        self.pipelines.iter().enumerate().find_map(|(pi, p)| {
+            p.stages.iter().position(|s| s.name == stage).map(|si| (pi, si))
+        })
+    }
+
+    /// Deliver every fault edge due at this tick boundary.
+    fn apply_fault_edges(&mut self) {
+        let now = self.clock.now_ms();
+        for edge in self.injector.poll(now) {
+            let Some((pidx, sidx)) = self.stage_idx(edge.event.kind.target()) else {
+                continue;
+            };
+            match &edge.event.kind {
+                FaultKind::ReplicaCrash { .. } => {
+                    if edge.start {
+                        self.crash_stage(pidx, sidx, now);
+                    }
+                }
+                FaultKind::LeasePartition { .. } => {
+                    self.pipelines[pidx].stages[sidx]
+                        .engine
+                        .set_suppress_renews(edge.start);
+                }
+                FaultKind::TransportLoss { .. } | FaultKind::ExecutorError { .. } => {}
+            }
+        }
+    }
+
+    /// Kill stage `sidx` mid-chain: every request queued or in flight on
+    /// the stage is evacuated, unmapped, and re-enters the same stage at
+    /// `now` — the re-apportionment inside [`PipelineEngine::enter_stage`]
+    /// re-plans whatever end-to-end budget the crash left it (a budget
+    /// clamped to zero resolves as an immediate violation, so no request
+    /// is ever silently lost). The stage's own scaler relaunches from an
+    /// empty cluster at the next boundary, paying the full cold start.
+    fn crash_stage(&mut self, pidx: usize, sidx: usize, now: Ms) {
+        self.stage_crashes += 1;
+        let orphans = self.pipelines[pidx].stages[sidx].engine.evacuate();
+        let mut rehome: Vec<u64> = Vec::new();
+        {
+            let st = &mut self.pipelines[pidx].stages[sidx];
+            for (_, req) in &orphans {
+                if let Some(rid) = st.map.remove(&req.id) {
+                    rehome.push(rid);
+                }
+            }
+        }
+        for rid in rehome {
+            if let Some(e) = self.pipelines[pidx].inflight.get_mut(&rid) {
+                e.outstanding -= 1;
+            }
+            self.requests_rehomed += 1;
+            self.enter_stage(pidx, sidx, rid, now);
+        }
     }
 
     fn unknown(&self, name: &str) -> EngineError {
@@ -619,6 +725,36 @@ impl PipelineEngine {
     }
 }
 
+/// The slice of `plan` a single stage engine handles itself: transport
+/// loss and executor errors addressed to `stage`, re-targeted to the
+/// stage's `model` (the name its [`SimEngine`] keys hooks on). Crashes
+/// and partitions stay at the pipeline level and are excluded.
+fn stage_subplan(plan: &FaultPlan, stage: &str, model: &str) -> FaultPlan {
+    let mut sub = FaultPlan::none();
+    sub.name = plan.name.clone();
+    sub.seed = plan.seed;
+    sub.recovery = plan.recovery;
+    for ev in &plan.events {
+        let kind = match &ev.kind {
+            FaultKind::TransportLoss { target, frac } if target == stage => {
+                Some(FaultKind::TransportLoss { target: model.to_string(), frac: *frac })
+            }
+            FaultKind::ExecutorError { target, every } if target == stage => {
+                Some(FaultKind::ExecutorError { target: model.to_string(), every: *every })
+            }
+            _ => None,
+        };
+        if let Some(kind) = kind {
+            sub.events.push(FaultEvent {
+                at_ms: ev.at_ms,
+                duration_ms: ev.duration_ms,
+                kind,
+            });
+        }
+    }
+    sub
+}
+
 impl ServingEngine for PipelineEngine {
     fn kind(&self) -> &'static str {
         "pipeline"
@@ -655,6 +791,10 @@ impl ServingEngine for PipelineEngine {
 
     fn tick(&mut self) {
         let t1 = self.next_tick_ms;
+        // 0. Fire fault edges due at this boundary (crashes, partitions).
+        if !self.injector.is_empty() {
+            self.apply_fault_edges();
+        }
         // 1. Admit arrivals whose send time falls inside this window.
         while let Some((at_ms, pend)) = self.pending.pop_due(t1) {
             self.admit(at_ms, pend);
@@ -692,10 +832,16 @@ impl ServingEngine for PipelineEngine {
             // fixpoint, skip boundaries up to the next pending arrival.
             let fp = self.fingerprint();
             if last_fp.as_ref() == Some(&fp) && self.gap_skippable() {
+                // Never skip across an undelivered fault edge: it must
+                // fire on the same tick grid the unskipped run uses.
                 while self
                     .pending
                     .next_time()
                     .is_some_and(|t| t > self.next_tick_ms)
+                    && self
+                        .injector
+                        .next_edge_ms()
+                        .map_or(true, |e| e > self.next_tick_ms)
                 {
                     self.skip_idle_interval();
                 }
@@ -959,5 +1105,106 @@ mod tests {
             fast.clock.now_ms().to_bits(),
             reference.clock.now_ms().to_bits()
         );
+    }
+
+    #[test]
+    fn mid_chain_stage_crash_reapportions_remaining_slack() {
+        let reg = chain_registry(
+            &["yolov5n", "yolov5s"],
+            Apportionment::Percentile(95.0),
+        );
+        let mut e = PipelineEngine::new(&reg, PipelineEngineCfg::default()).unwrap();
+        // Crash the downstream stage mid-burst: its queued + in-flight
+        // requests re-enter with whatever end-to-end budget remains.
+        e.set_fault_plan(FaultPlan::crash("yolov5s", 0, 2_000.0));
+        load(&mut e, 100, 50.0, 4_000.0); // 5 s at 20 rps
+        let report = e.drain();
+        assert!(report.settled(), "{report:?}");
+        let (crashes, rehomed) = e.fault_recovery();
+        assert_eq!(crashes, 1);
+        assert!(rehomed > 0, "no orphans re-entered the crashed stage");
+        // Conservation: every admitted request has a terminal outcome —
+        // completed before the crash, rehomed, or violated, never lost.
+        let s = e.snapshot("chain").unwrap();
+        assert_eq!(s.submitted, 100);
+        assert_eq!(s.resolved(), 100);
+        assert!(s.completed > 0, "{s:?}");
+    }
+
+    #[test]
+    fn stage_partition_expires_its_lease_and_heals() {
+        let reg = chain_registry(
+            &["yolov5n", "yolov5s"],
+            Apportionment::Percentile(95.0),
+        );
+        let cfg = PipelineEngineCfg {
+            stage_cores: 8,
+            arbiter: ArbiterChoice::Stealing,
+            ..Default::default()
+        };
+        let mut e = PipelineEngine::new(&reg, cfg).unwrap();
+        e.set_fault_plan(FaultPlan::partition("yolov5s", 0, 2_000.0, 10_000.0));
+        load(&mut e, 1_000, 5.0, 1_200.0); // 200 rps: past an 8-core floor
+        // Partition starts at t = 2 s; the armed TTL (5 adaptation
+        // intervals) runs out by t = 7 s while the healthy stage's own
+        // renewals drive the expiry sweep.
+        for _ in 0..10 {
+            e.tick();
+        }
+        let now = e.clock.now_ms();
+        let snap = e.arbiter().lock().unwrap().snapshot(now);
+        assert!(
+            snap.expired_reclaims > 0,
+            "partitioned stage lease never expired back"
+        );
+        let report = e.drain();
+        assert!(report.settled(), "{report:?}");
+    }
+
+    #[test]
+    fn stage_targeted_loss_reaches_the_stage_engine() {
+        let reg = chain_registry(
+            &["yolov5n", "yolov5s"],
+            Apportionment::Percentile(95.0),
+        );
+        let mut e = PipelineEngine::new(&reg, PipelineEngineCfg::default()).unwrap();
+        e.set_fault_plan(FaultPlan::loss("yolov5n", 1.0, 0.0, 2_000.0));
+        load(&mut e, 100, 50.0, 2_000.0);
+        let report = e.drain();
+        assert!(report.settled(), "{report:?}");
+        // Window arrivals vanish at the first stage and resolve as
+        // violated drops through the stage completion path — never lost.
+        let s = e.snapshot("chain").unwrap();
+        assert_eq!(s.resolved(), 100);
+        assert!(s.dropped > 0, "{s:?}");
+    }
+
+    #[test]
+    fn empty_fault_plan_is_bit_identical_to_no_plan() {
+        let run = |install: bool| {
+            let reg = chain_registry(
+                &["yolov5n", "yolov5s"],
+                Apportionment::Percentile(95.0),
+            );
+            let cfg = PipelineEngineCfg {
+                engine: SimEngineCfg {
+                    latency_noise_cv: 0.1,
+                    ..Default::default()
+                },
+                ..Default::default()
+            };
+            let mut e = PipelineEngine::new(&reg, cfg).unwrap();
+            if install {
+                e.set_fault_plan(FaultPlan::none());
+            }
+            load(&mut e, 200, 25.0, 1_500.0);
+            e.drain();
+            (
+                e.snapshot("chain").unwrap(),
+                e.core_ms("chain").unwrap().to_bits(),
+                e.tracker("chain").unwrap().mean_e2e_ms().to_bits(),
+            )
+        };
+        assert_eq!(run(true), run(false));
     }
 }

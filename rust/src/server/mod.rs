@@ -8,7 +8,7 @@
 //! | Route | Method | Body | Success | Errors |
 //! |---|---|---|---|---|
 //! | `/v1/models` | GET | — | `200` `{"default": name, "models": [{"name", "replicas", "queue_len", "cores", "batch"}]}` | — |
-//! | `/v1/models/{name}/infer` | POST | infer JSON (below) | `200` infer response (served by the least-loaded replica) | `400` bad JSON/body, `404` unknown model, `504` timeout |
+//! | `/v1/models/{name}/infer` | POST | infer JSON (below) | `200` infer response (served by the least-loaded serving replica) | `400` bad JSON/body, `404` unknown model, `503` zero deadline budget (`Retry-After` set), `504` timeout |
 //! | `/v1/models/{name}/stats` | GET | — | `200` `{"received", "completed", "dropped", "violated", "queue_len", "cores", "batch", "model_refits", "cores_granted", "cores_lent", "cores_stolen", "replicas": [{"replica", "received", "completed", "dropped", "violated", "queue_len", "cores", "batch", "cores_granted", "cores_lent", "cores_stolen"}]}` — top level is fleet-aggregated, `replicas` is per replica; the `cores_*` triple is the CoreArbiter lease accounting | `404` unknown model |
 //! | `/v1/pipelines/{name}/infer` | POST | infer JSON (below) | `200` pipeline infer response: `{"id", "pipeline", "e2e_ms", "violated", "dropped", "logits", "stages": [{"stage", "model", "deadline_ms", "queue_ms", "processing_ms", "server_ms", "violated", "dropped"}]}` | `400` bad JSON/body, `404` unknown pipeline, `504` timeout |
 //! | `/v1/pipelines/{name}/stats` | GET | — | `200` `{"pipeline", "apportionment", "received", "completed", "dropped", "violated", "stages": [{"stage", "model", "served", "violations", "mean_ms"}]}` | `404` unknown pipeline |
@@ -28,7 +28,11 @@
 //! `{"slo_ms": float, "comm_ms": float, "image": [float; image_len]}` —
 //! `slo_ms` defaults to 1000, `comm_ms` to 0; `image` is required, must be
 //! exactly the model's input length, and every entry must be a number
-//! (wrong length / non-numeric entries are `400`).
+//! (wrong length / non-numeric entries are `400`). A request whose
+//! `comm_ms` already consumed its whole `slo_ms` (zero remaining budget
+//! after the dynamic-SLO subtraction) is rejected with `503` + a
+//! `Retry-After` header of one adaptation interval instead of being
+//! queued — queueing it could only ever produce a drop.
 //!
 //! **Infer response body**: `{"id", "model", "logits": [...], "queue_ms",
 //! "processing_ms", "server_ms", "violated": bool, "dropped": bool}`.
@@ -38,8 +42,11 @@
 //! `"routes": [...]` (the valid route list), unknown models carry
 //! `"models": [...]` (the registered names), and unknown pipelines carry
 //! `"pipelines": [...]` (the registered pipeline names) — the resource
-//! class is never ambiguous. Malformed JSON bodies are `400`, never a
-//! dropped connection.
+//! class is never ambiguous. `503`s carry a `Retry-After` header plus a
+//! matching `"retry_after_s"` body field (the coordinator's adaptation
+//! interval rounded up to whole seconds — the soonest serving conditions
+//! can change). Malformed JSON bodies are `400`, never a dropped
+//! connection.
 
 use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Read, Write};
@@ -67,6 +74,30 @@ const ROUTES: &[&str] = &[
     "GET /v1/pipelines/{name}/stats",
     "POST /infer (legacy alias for the default model)",
 ];
+
+/// One rendered HTTP response: status, content type, body, plus the one
+/// extra header this surface ever sets (`Retry-After`, on `503`s).
+struct Resp {
+    code: u16,
+    ctype: &'static str,
+    body: String,
+    retry_after_s: Option<u64>,
+}
+
+impl Resp {
+    fn json(code: u16, doc: Json) -> Resp {
+        Resp {
+            code,
+            ctype: "application/json",
+            body: doc.to_string(),
+            retry_after_s: None,
+        }
+    }
+
+    fn text(code: u16, ctype: &'static str, body: String) -> Resp {
+        Resp { code, ctype, body, retry_after_s: None }
+    }
+}
 
 /// Named replica fleets behind the HTTP surface; the first registered
 /// name is the default model (legacy `POST /infer` target). Each model
@@ -215,9 +246,11 @@ impl Gateway {
 }
 
 /// `POST .../infer`'s dispatch rule: [`crate::coordinator::least_loaded`]
-/// (shared with [`crate::engine::LiveEngine`]). `None` on an empty fleet
-/// — which [`Gateway::from_parts`] rejects, so callers answer 500 rather
-/// than panicking a serving thread if the invariant ever breaks.
+/// (shared with [`crate::engine::LiveEngine`]), which filters through the
+/// one [`crate::coordinator::DispatchLiveness`] predicate — shut-down
+/// replicas receive no traffic. `None` on an empty fleet (which
+/// [`Gateway::from_parts`] rejects) or an all-dead one, so callers answer
+/// 500 rather than panicking a serving thread.
 fn least_loaded(replicas: &[Arc<Coordinator>]) -> Option<&Coordinator> {
     crate::coordinator::least_loaded(replicas).map(|c| c.as_ref())
 }
@@ -298,15 +331,15 @@ fn handle_conn(stream: TcpStream, gateway: &Gateway) -> Result<()> {
         reader.read_exact(&mut body)?;
     }
     let mut stream = reader.into_inner();
-    let (code, ctype, payload) = route(&method, &path, &body, gateway);
-    respond(&mut stream, code, &ctype, &payload)
+    let resp = route(&method, &path, &body, gateway);
+    respond(&mut stream, &resp)
 }
 
-/// Dispatch one request to (status, content type, body).
-fn route(method: &str, path: &str, body: &[u8], gateway: &Gateway) -> (u16, String, String) {
-    let json = |code: u16, doc: Json| (code, "application/json".to_string(), doc.to_string());
+/// Dispatch one request to a rendered response.
+fn route(method: &str, path: &str, body: &[u8], gateway: &Gateway) -> Resp {
+    let json = Resp::json;
     match (method, path) {
-        ("GET", "/healthz") => (200, "text/plain".into(), "ok".into()),
+        ("GET", "/healthz") => Resp::text(200, "text/plain", "ok".into()),
         ("GET", "/metrics") => {
             // Prometheus text for the default model's first replica
             // (per-model, per-replica numbers are on
@@ -314,9 +347,9 @@ fn route(method: &str, path: &str, body: &[u8], gateway: &Gateway) -> (u16, Stri
             let (_, replicas) = gateway.default_entry();
             match replicas.first() {
                 Some(r) => {
-                    (200, "text/plain; version=0.0.4".into(), r.metrics.expose())
+                    Resp::text(200, "text/plain; version=0.0.4", r.metrics.expose())
                 }
-                None => (500, "text/plain".into(), "no replicas".into()),
+                None => Resp::text(500, "text/plain", "no replicas".into()),
             }
         }
         ("GET", "/v1/models") => json(200, models_doc(gateway)),
@@ -489,19 +522,35 @@ fn stats_doc(replicas: &[Arc<Coordinator>]) -> Json {
     ])
 }
 
-/// POST infer → (status, content type, body). Malformed input is `400`
-/// with a JSON error body; slow inference is `504`.
-fn infer_response(model: &str, c: &Coordinator, body: &[u8]) -> (u16, String, String) {
+/// POST infer → rendered response. Malformed input is `400` with a JSON
+/// error body; a zero deadline budget is `503` + `Retry-After`; slow
+/// inference is `504`.
+fn infer_response(model: &str, c: &Coordinator, body: &[u8]) -> Resp {
     let text = String::from_utf8_lossy(body);
     match handle_infer(model, &text, c) {
-        Ok(json) => (200, "application/json".into(), json.to_string()),
+        Ok(json) => Resp::json(200, json),
         Err(e) => {
-            let code = if e.to_string().contains("timed out") { 504 } else { 400 };
-            (
-                code,
-                "application/json".into(),
-                Json::obj(vec![("error", Json::str(&format!("{e:#}")))]).to_string(),
-            )
+            let msg = format!("{e:#}");
+            if msg.contains("zero deadline budget") {
+                // The coordinator would clamp this request's remaining
+                // budget to zero and the processor would drop it from the
+                // queue unserved — reject it at the gateway instead, with
+                // a retry hint of one adaptation interval (the soonest
+                // the serving conditions can change).
+                let retry_s =
+                    (c.cfg().adaptation_interval_ms / 1_000.0).ceil().max(1.0) as u64;
+                let mut resp = Resp::json(
+                    503,
+                    Json::obj(vec![
+                        ("error", Json::str(&msg)),
+                        ("retry_after_s", Json::num(retry_s as f64)),
+                    ]),
+                );
+                resp.retry_after_s = Some(retry_s);
+                return resp;
+            }
+            let code = if msg.contains("timed out") { 504 } else { 400 };
+            Resp::json(code, Json::obj(vec![("error", Json::str(&msg))]))
         }
     }
 }
@@ -511,6 +560,14 @@ fn handle_infer(model: &str, body: &str, coordinator: &Coordinator) -> Result<Js
     let slo_ms = doc.get("slo_ms").as_f64().unwrap_or(1_000.0);
     let comm_ms = doc.get("comm_ms").as_f64().unwrap_or(0.0);
     anyhow::ensure!(slo_ms > 0.0, "slo_ms must be positive (got {slo_ms})");
+    // The dynamic-SLO subtraction (slo − comm) is the deadline budget the
+    // coordinator actually schedules against; when it is already gone the
+    // request can only be dropped, so it never enters the queue.
+    anyhow::ensure!(
+        slo_ms - comm_ms > 0.0,
+        "zero deadline budget: comm_ms ({comm_ms}) consumed the whole \
+         slo_ms ({slo_ms})"
+    );
     let arr = doc.get("image").as_arr().context("missing 'image' array")?;
     anyhow::ensure!(
         arr.len() == coordinator.image_len(),
@@ -542,15 +599,11 @@ fn handle_infer(model: &str, body: &str, coordinator: &Coordinator) -> Result<Js
     ]))
 }
 
-/// POST pipeline infer → (status, content type, body).
-fn pipeline_infer_response(
-    gateway: &Gateway,
-    route: &PipelineRoute,
-    body: &[u8],
-) -> (u16, String, String) {
+/// POST pipeline infer → rendered response.
+fn pipeline_infer_response(gateway: &Gateway, route: &PipelineRoute, body: &[u8]) -> Resp {
     let text = String::from_utf8_lossy(body);
     match handle_pipeline_infer(gateway, route, &text) {
-        Ok(json) => (200, "application/json".into(), json.to_string()),
+        Ok(json) => Resp::json(200, json),
         Err(e) => {
             let msg = e.to_string();
             let code = if msg.contains("timed out") {
@@ -560,11 +613,7 @@ fn pipeline_infer_response(
             } else {
                 400
             };
-            (
-                code,
-                "application/json".into(),
-                Json::obj(vec![("error", Json::str(&format!("{e:#}")))]).to_string(),
-            )
+            Resp::json(code, Json::obj(vec![("error", Json::str(&format!("{e:#}")))]))
         }
     }
 }
@@ -737,18 +786,26 @@ fn pipeline_stats_doc(route: &PipelineRoute) -> Json {
     ])
 }
 
-fn respond(stream: &mut TcpStream, code: u16, ctype: &str, body: &str) -> Result<()> {
-    let status = match code {
+fn respond(stream: &mut TcpStream, r: &Resp) -> Result<()> {
+    let status = match r.code {
         200 => "OK",
         400 => "Bad Request",
         404 => "Not Found",
+        503 => "Service Unavailable",
         504 => "Gateway Timeout",
         _ => "Internal Server Error",
     };
+    let retry = match r.retry_after_s {
+        Some(s) => format!("Retry-After: {s}\r\n"),
+        None => String::new(),
+    };
     write!(
         stream,
-        "HTTP/1.0 {code} {status}\r\nContent-Type: {ctype}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
-        body.len()
+        "HTTP/1.0 {} {status}\r\nContent-Type: {}\r\nContent-Length: {}\r\n{retry}Connection: close\r\n\r\n{}",
+        r.code,
+        r.ctype,
+        r.body.len(),
+        r.body
     )?;
     stream.flush()?;
     Ok(())

@@ -79,7 +79,7 @@ fn interleaving_prop(choice: ArbiterChoice) {
             ArbiterChoice::Static => Box::new(StaticPartition::new()),
             ArbiterChoice::Stealing => Box::new(StealingArbiter::new(StealingCfg {
                 lend_hysteresis_ms: g.f64(0.0, 3_000.0),
-                resize_ms: 100.0,
+                ..StealingCfg::default()
             })),
         };
         let n_parts = g.usize(1, 4);
@@ -183,6 +183,84 @@ fn interleaving_prop(choice: ArbiterChoice) {
 #[test]
 fn randomized_interleavings_conserve_cores_stealing() {
     interleaving_prop(ArbiterChoice::Stealing);
+}
+
+/// Lease-TTL conservation under randomized partition interleavings: every
+/// tenant heartbeats each step unless "partitioned away" (its renews are
+/// dropped, exactly what the fault injector does); after every sweep,
+/// granted + expired accounting stays within budget, the ledger conserves
+/// cores, and any tenant silent for a full TTL holds nothing — expiry-back
+/// within one TTL of the partition event.
+#[test]
+fn lease_expiry_conserves_cores_under_partition_interleavings() {
+    run_prop("arbiter-lease-expiry-conservation", 1_000, |g| {
+        let ttl = g.f64(500.0, 3_000.0);
+        let mut arb = StealingArbiter::new(StealingCfg {
+            lend_hysteresis_ms: g.f64(0.0, 2_000.0),
+            lease_ttl_ms: ttl,
+            ..StealingCfg::default()
+        });
+        let n_parts = g.usize(2, 4);
+        let mut tenants = Vec::new();
+        for _ in 0..n_parts {
+            let p = arb.add_partition(g.u32(2, 12));
+            tenants.push(arb.register_tenant(p));
+        }
+        let mut leases: Vec<CoreLease> = Vec::new();
+        for &t in &tenants {
+            leases.push(arb.request_lease(t, g.u32(1, 16), 0.0));
+        }
+        let mut last_renew = vec![0.0f64; tenants.len()];
+        let mut partitioned = vec![false; tenants.len()];
+        let mut now = 0.0;
+        let mut prev_expired = 0u64;
+        for _ in 0..g.usize(15, 40) {
+            now += g.f64(100.0, 900.0);
+            // A random tenant drops off the fabric — or heals.
+            let pi = g.usize(0, tenants.len() - 1);
+            if g.u32(0, 2) == 0 {
+                partitioned[pi] = !partitioned[pi];
+            }
+            // Heartbeats: the injector drops a partitioned tenant's renews.
+            for i in 0..tenants.len() {
+                if partitioned[i] {
+                    continue;
+                }
+                leases[i] = arb.renew(leases[i].id, g.u32(1, 16), now);
+                last_renew[i] = now;
+            }
+            // Force one ledger sweep even when every tenant is silent (a
+            // zero-core reclaim is a pure bookkeeping pass).
+            let _ = arb.reclaim(tenants[0], 0, now);
+            check_invariants(&arb, now, true)?;
+            let snap = arb.snapshot(now);
+            prop_assert!(
+                snap.granted <= snap.budget,
+                "granted {} + expired reclaims {} overdraw budget {} at t={now}",
+                snap.granted,
+                snap.expired_reclaims,
+                snap.budget
+            );
+            prop_assert!(
+                snap.expired_reclaims >= prev_expired,
+                "expired_reclaims regressed at t={now}"
+            );
+            prev_expired = snap.expired_reclaims;
+            // Expiry-back within one TTL: a tenant silent for >= ttl holds
+            // nothing once the sweep has run.
+            for i in 0..tenants.len() {
+                if now - last_renew[i] >= ttl {
+                    let held = snap.tenant(tenants[i]).map_or(0, |u| u.granted);
+                    prop_assert!(
+                        held == 0,
+                        "tenant {i} silent {} ms (ttl {ttl}) still holds {held}",
+                        now - last_renew[i]
+                    );
+                }
+            }
+        }
+        Ok(())
+    });
 }
 
 #[test]

@@ -128,6 +128,45 @@ fn infer_rejects_garbage_with_json_400() {
 }
 
 #[test]
+fn zero_budget_infer_rejected_503_with_retry_after() {
+    let handle = start_single();
+    // comm_ms consumes the whole slo_ms: the dynamic-SLO clamp leaves a
+    // zero deadline budget, so the gateway refuses to queue the request
+    // (queueing it could only ever produce a drop).
+    let body = r#"{"slo_ms": 100, "comm_ms": 100, "image": [0, 0, 0, 0]}"#;
+    for path in ["/infer", "/v1/models/default/infer"] {
+        let (code, resp) = client::post_json(&handle.addr(), path, body).unwrap();
+        assert_eq!(code, 503, "{path}: {resp}");
+        let doc = Json::parse(&resp).unwrap();
+        assert!(
+            doc.get("error").as_str().unwrap().contains("zero deadline budget"),
+            "{resp}"
+        );
+        // Default adaptation interval (1000 ms) rounds up to a 1 s hint.
+        assert_eq!(doc.get("retry_after_s").as_f64(), Some(1.0), "{resp}");
+    }
+    // The Retry-After header itself — the test client strips headers, so
+    // speak raw HTTP for this one.
+    use std::io::{Read as _, Write as _};
+    let mut s = std::net::TcpStream::connect(handle.addr()).unwrap();
+    write!(
+        s,
+        "POST /infer HTTP/1.0\r\nHost: sponge\r\nContent-Type: application/json\r\nContent-Length: {}\r\n\r\n{body}",
+        body.len()
+    )
+    .unwrap();
+    let mut raw = String::new();
+    s.read_to_string(&mut raw).unwrap();
+    assert!(raw.starts_with("HTTP/1.0 503 Service Unavailable"), "{raw}");
+    assert!(raw.contains("Retry-After: 1\r\n"), "{raw}");
+    // A request with budget to spare still serves afterwards.
+    let (code, _) =
+        client::post_json(&handle.addr(), "/infer", &infer_body(4)).unwrap();
+    assert_eq!(code, 200);
+    handle.stop();
+}
+
+#[test]
 fn v1_models_lists_both_variants_with_default() {
     let (handle, engine) = start_two_model();
     let (code, body) = client::get(&handle.addr(), "/v1/models").unwrap();
