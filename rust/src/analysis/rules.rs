@@ -58,7 +58,7 @@ pub struct RuleSpec {
 /// the virtual-time half of the tree (wall time here either breaks
 /// byte-determinism or silently diverges sim from live).
 const VIRTUAL_TIME: &[&str] =
-    &["sim", "engine", "faults", "pipeline", "experiment", "microbench"];
+    &["sim", "engine", "faults", "federation", "pipeline", "experiment", "microbench"];
 
 /// Modules feeding the spongebench report, event ordering, or the `/v1`
 /// JSON surface — everything CI byte-compares or clients parse.
@@ -68,6 +68,7 @@ const REPORT_PATHS: &[&str] = &[
     "engine",
     "experiment",
     "faults",
+    "federation",
     "microbench",
     "monitoring",
     "pipeline",

@@ -7,6 +7,12 @@
 //! vertical scaling wants headroom *around* existing instances, so keeping
 //! nodes evenly loaded preserves each instance's room to grow — the
 //! interplay the paper's future-work section calls out.
+//!
+//! The federation layer revives this substrate as its node model:
+//! [`crate::federation::NodeMap::build_fleet`] materializes one
+//! [`Cluster`] per federation node, sized from the node table, so a
+//! consumer that wants cold-start and resize-actuation realism under
+//! cross-node lending gets it from the same placement machinery.
 
 use super::{Cluster, ClusterCfg, ClusterError, Instance};
 use crate::{Cores, Ms};

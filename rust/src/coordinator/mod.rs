@@ -572,8 +572,10 @@ fn processor_loop(
 /// Process-wide epoch for arbiter timestamps. Coordinator scaler threads
 /// spawn at different instants but may share one arbiter ledger, whose
 /// time must be non-decreasing across callers — so every thread measures
-/// from the same epoch rather than its own start.
-fn arbiter_now_ms() -> Ms {
+/// from the same epoch rather than its own start. Crate-visible because
+/// the gateway's `/v1/cluster` snapshot must read the same ledger on the
+/// same timeline.
+pub(crate) fn arbiter_now_ms() -> Ms {
     use std::sync::OnceLock;
     static EPOCH: OnceLock<Instant> = OnceLock::new();
     EPOCH.get_or_init(Instant::now).elapsed().as_secs_f64() * 1_000.0
@@ -643,7 +645,7 @@ fn scaler_loop(
         // grants is what the pipeline runs at. With the standalone
         // single-tenant arbiter the grant always equals the want; a
         // shared (stealing) arbiter may clamp it or lend surplus.
-        let (cores, lent, stolen) = {
+        let (cores, lent, stolen, ledger) = {
             let mut arb = lock(&arbiter);
             let now_ms = arbiter_now_ms();
             let grant = arb.renew(lease.id, want, now_ms);
@@ -652,6 +654,7 @@ fn scaler_loop(
                 grant.granted.max(1),
                 usage.map_or(0, |u| u.lent),
                 usage.map_or(0, |u| u.stolen),
+                arb.snapshot(now_ms),
             )
         };
         shared.cores.store(cores, Ordering::Relaxed);
@@ -667,6 +670,32 @@ fn scaler_loop(
             "cores held beyond the guaranteed floor",
             stolen as f64,
         );
+        // Cluster-wide lease accounting: TTL expiry-backs plus per-node
+        // cross-partition core flows (a partition is one node's floor; a
+        // federated arbiter reports one partition per node).
+        metrics.gauge_set(
+            "sponge_expired_reclaims",
+            "cores reclaimed through lease-TTL expiry",
+            ledger.expired_reclaims as f64,
+        );
+        for p in &ledger.partitions {
+            let stolen_here: u32 = ledger
+                .tenants
+                .iter()
+                .filter(|t| t.partition == p.id)
+                .map(|t| t.stolen)
+                .sum();
+            metrics.gauge_set(
+                &format!("sponge_cores_lent{{node=\"{}\"}}", p.id.0),
+                "floor cores lent out, by node",
+                p.lent as f64,
+            );
+            metrics.gauge_set(
+                &format!("sponge_cores_stolen{{node=\"{}\"}}", p.id.0),
+                "cores held beyond the floor, by node",
+                stolen_here as f64,
+            );
+        }
     }
     // Pipeline is stopping: hand the cores back.
     {

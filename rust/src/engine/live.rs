@@ -14,7 +14,7 @@ use std::collections::VecDeque;
 use std::sync::{mpsc, Arc};
 use std::time::Duration;
 
-use crate::arbiter::{CoreArbiter, StaticPartition};
+use crate::arbiter::{CoreArbiter, SharedArbiter, StaticPartition};
 use crate::coordinator::{BatchExecutor, Coordinator, CoordinatorCfg, LiveRequest, LiveResponse, MockExecutor};
 use crate::Ms;
 
@@ -82,6 +82,10 @@ pub struct LiveEngine {
     clock: WallClock,
     models: Vec<LiveModel>,
     next_id: u64,
+    /// The engine-wide allocation ledger every coordinator leases from —
+    /// retained so the gateway's `/v1/cluster` document can read the
+    /// same ledger the scaler loops mutate.
+    arbiter: SharedArbiter,
 }
 
 impl LiveEngine {
@@ -147,7 +151,7 @@ impl LiveEngine {
                 violations: 0,
             });
         }
-        Ok(LiveEngine { cfg, clock: WallClock::new(), models, next_id: 0 })
+        Ok(LiveEngine { cfg, clock: WallClock::new(), models, next_id: 0, arbiter })
     }
 
     /// Start with deterministic [`MockExecutor`]s — the conformance-suite
@@ -157,6 +161,11 @@ impl LiveEngine {
         cfg: LiveEngineCfg,
     ) -> Result<LiveEngine, EngineError> {
         Self::start_with(registry, cfg, |_| Ok(Arc::new(MockExecutor::default())))
+    }
+
+    /// The engine-wide core-allocation ledger (`Gateway::with_cluster`).
+    pub fn arbiter(&self) -> SharedArbiter {
+        Arc::clone(&self.arbiter)
     }
 
     /// The first (or only) coordinator serving `model`.

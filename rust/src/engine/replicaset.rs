@@ -1067,12 +1067,29 @@ impl ReplicaSetEngine {
         registry: &ModelRegistry,
         cfg: ReplicaSetCfg,
     ) -> Result<ReplicaSetEngine, EngineError> {
+        // One fleet-wide ledger: under the stealing arbiter, idle cores
+        // cross replica *and* model boundaries.
+        Self::with_arbiter(registry, cfg, cfg.arbiter.build())
+    }
+
+    /// Build against an externally-owned control plane — how the
+    /// spongebench federation cells run: a
+    /// [`crate::federation::FederatedArbiter`] is built over a seeded
+    /// [`crate::federation::SimTransport`], every replica's
+    /// `add_partition` pins its floor to a node round-robin, and the
+    /// caller keeps a typed handle on the same `Arc` for per-node
+    /// accounting after the drain. Set `cfg.arbiter` to the choice the
+    /// ledger behaves like ([`ArbiterChoice::Stealing`] for a federated
+    /// ledger) so the reach/ceiling paths (`c_eff`, node widening)
+    /// engage; the `cfg.arbiter.build()` ledger itself is bypassed.
+    pub fn with_arbiter(
+        registry: &ModelRegistry,
+        cfg: ReplicaSetCfg,
+        arbiter: SharedArbiter,
+    ) -> Result<ReplicaSetEngine, EngineError> {
         if registry.is_empty() {
             return Err(EngineError::Rejected("empty model registry".into()));
         }
-        // One fleet-wide ledger: under the stealing arbiter, idle cores
-        // cross replica *and* model boundaries.
-        let arbiter = cfg.arbiter.build();
         let mut sets = Vec::new();
         for spec in registry.iter() {
             sets.push(ReplicaSet::with_arbiter(spec, cfg, Arc::clone(&arbiter))?);

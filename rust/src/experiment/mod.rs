@@ -31,10 +31,12 @@ pub mod spec;
 
 pub use report::{regression_gate, utc_today, GateOutcome, MatrixReport, SCHEMA};
 pub use runner::{
-    run_cell, CellMetrics, CellResult, CellWall, RecoveryMetrics, StageMetrics,
+    run_cell, CellMetrics, CellResult, CellWall, FederationCellMetrics,
+    RecoveryMetrics, StageMetrics,
 };
 pub use spec::{
-    CellSpec, EngineKind, ExperimentSpec, PolicyKnobs, TraceSource, WorkloadSource,
+    CellSpec, EngineKind, ExperimentSpec, FedKnobs, PolicyKnobs, TraceSource,
+    WorkloadSource,
 };
 
 use crate::perfmodel::LatencyModel;
@@ -124,6 +126,7 @@ mod tests {
             replica_budgets: vec![1],
             arbiters: vec![crate::arbiter::ArbiterChoice::Static],
             faults: vec![crate::faults::FaultPlan::none()],
+            federation: vec![None],
             horizon_ms: 15_000.0,
             model: "yolov5s".into(),
             seed: 42,

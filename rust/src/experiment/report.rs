@@ -22,6 +22,10 @@
 //!       "recovery": { "crashes": ..., "requests_rehomed": ...,
 //!                     "requests_lost": 0, "time_to_ready_ms": ...,
 //!                     "violation_delta_pct": ... },          // faulted cells only
+//!       "federation": { "nodes": 2, "lent": ..., "stolen": ...,
+//!                       "remote_grants": ..., "expired_reclaims": ...,
+//!                       "requests_lost": 0, "msgs_sent": ...,
+//!                       "rtt_p50_ms": ..., ... },          // federated cells only
 //!       "wall": { "run_ms": ..., "scaler_ns_total": ... }  // omitted in stable mode
 //!     }
 //!   ],
@@ -173,6 +177,48 @@ impl MatrixReport {
                                 "flaky_failures",
                                 Json::num(rec.flaky_failures as f64),
                             ),
+                        ]),
+                    ));
+                }
+                // Federated cells carry wire-protocol accounting; the key
+                // is absent elsewhere so non-federated reports stay
+                // byte-identical to pre-federation baselines. The
+                // federation-matrix CI greps these cells for
+                // `"requests_lost": 0`.
+                if let Some(fed) = &m.federation {
+                    fields.push((
+                        "federation",
+                        Json::obj(vec![
+                            ("nodes", Json::num(fed.nodes as f64)),
+                            ("lent", Json::num(fed.lent as f64)),
+                            ("stolen", Json::num(fed.stolen as f64)),
+                            (
+                                "remote_grants",
+                                Json::num(fed.remote_grants as f64),
+                            ),
+                            (
+                                "expired_reclaims",
+                                Json::num(fed.expired_reclaims as f64),
+                            ),
+                            (
+                                "requests_lost",
+                                Json::num(fed.requests_lost as f64),
+                            ),
+                            ("msgs_sent", Json::num(fed.msgs_sent as f64)),
+                            (
+                                "msgs_delivered",
+                                Json::num(fed.msgs_delivered as f64),
+                            ),
+                            (
+                                "msgs_dropped",
+                                Json::num(fed.msgs_dropped as f64),
+                            ),
+                            (
+                                "msgs_duplicated",
+                                Json::num(fed.msgs_duplicated as f64),
+                            ),
+                            ("rtt_p50_ms", Json::num(round3(fed.rtt_p50_ms))),
+                            ("rtt_p95_ms", Json::num(round3(fed.rtt_p95_ms))),
                         ]),
                     ));
                 }

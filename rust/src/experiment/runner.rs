@@ -7,19 +7,24 @@
 //! machines. Live cells (real threads, wall clock) report request
 //! accounting only.
 
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
-use crate::arbiter::CoreArbiter;
+use crate::arbiter::{CoreArbiter, SharedArbiter};
 use crate::engine::{
     drive_timeline, LiveEngine, LiveEngineCfg, ModelRegistry, ModelSpec,
     ReplicaSetCfg, ReplicaSetEngine, ServingEngine, SimEngine, SimEngineCfg,
+};
+use crate::faults::FaultKind;
+use crate::federation::{
+    FederatedArbiter, FederationCfg, LinkCfg, NodeMap, SimTransport,
 };
 use crate::network::{BandwidthTrace, NetworkModel};
 use crate::pipeline::{PipelineEngine, PipelineEngineCfg, PipelineSpec};
 use crate::workload::Request;
 use crate::{Cores, Ms};
 
-use super::spec::{CellSpec, EngineKind, WorkloadSource};
+use super::spec::{CellSpec, EngineKind, FedKnobs, WorkloadSource};
 
 /// Deterministic per-cell metrics. Everything here is derived from virtual
 /// time and seeded randomness for simulator cells, so two runs of the same
@@ -52,6 +57,40 @@ pub struct CellMetrics {
     /// [`crate::faults::FaultPlan`] (`None` elsewhere, so fault-free
     /// reports stay byte-identical to pre-fault baselines).
     pub recovery: Option<RecoveryMetrics>,
+    /// Cross-node lease-protocol accounting for cells carrying a
+    /// federation coordinate (`None` elsewhere, so non-federated reports
+    /// stay byte-identical to pre-federation baselines).
+    pub federation: Option<FederationCellMetrics>,
+}
+
+/// Federation accounting for one federated cell
+/// ([`CellMetrics::federation`]): the end-of-horizon
+/// [`crate::federation::FederationStats`] plus the conservation check.
+/// The federation-matrix CI greps these cells for `"requests_lost": 0`
+/// (no request vanished, whatever the wire did) and reads
+/// `expired_reclaims` as the evidence that every loan a partition
+/// orphaned found its way home through TTL expiry.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FederationCellMetrics {
+    pub nodes: u32,
+    /// Cores still on loan at the horizon (lender records).
+    pub lent: Cores,
+    /// Cores still held remotely at the horizon (borrower records).
+    pub stolen: Cores,
+    /// Times a remote grant actually extended a borrower's cores.
+    pub remote_grants: u64,
+    /// Cores reclaimed through loan-TTL expiry at lenders.
+    pub expired_reclaims: u64,
+    /// `submitted - completed - dropped` — must be 0.
+    pub requests_lost: u64,
+    pub msgs_sent: u64,
+    pub msgs_delivered: u64,
+    pub msgs_dropped: u64,
+    pub msgs_duplicated: u64,
+    /// Measured Request→Grant round-trip percentiles (0 when the wire
+    /// never completed a steal).
+    pub rtt_p50_ms: Ms,
+    pub rtt_p95_ms: Ms,
 }
 
 /// Recovery accounting for a faulted cell ([`CellMetrics::recovery`]).
@@ -262,6 +301,7 @@ fn run_sim_cell(
                 flaky_failures,
             }
         }),
+        federation: None,
     };
     Ok(CellResult {
         id: spec.id(),
@@ -345,6 +385,7 @@ fn run_replica_cell(
                 flaky_failures,
             }
         }),
+        federation: None,
     };
     Ok(CellResult {
         id: spec.id(),
@@ -405,6 +446,7 @@ fn run_live_cell(
         peak_stolen: 0,
         stages: Vec::new(),
         recovery: None,
+        federation: None,
     };
     Ok(CellResult {
         id: spec.id(),
@@ -425,6 +467,16 @@ fn run_live_cell(
 /// bursting one and is clawed back when its own burst returns. Metrics
 /// aggregate both models (merged trackers, summed counts), so the
 /// static-vs-stealing violation delta is read directly off the report.
+///
+/// With a federation coordinate ([`CellSpec::federation`]) the pair
+/// instead splits across a two-node [`FederatedArbiter`] — each tenant
+/// pinned to its own node with the floor as the whole node budget — so
+/// every steal crosses a seeded lossy wire and pays the measured round
+/// trip. Fault plans on federated cells describe the *wire*, not the
+/// engine: the runner translates them into transport windows
+/// ([`FaultKind::LeasePartition`] → total outage,
+/// [`FaultKind::TransportLoss`] → extra loss fraction) and the engine
+/// never sees the plan.
 fn run_contention_cell(spec: &CellSpec, started: Instant) -> Result<CellResult, String> {
     let WorkloadSource::Contention { primary, rival, total, .. } = &spec.workload else {
         return Err("not a contention workload".into());
@@ -433,10 +485,14 @@ fn run_contention_cell(spec: &CellSpec, started: Instant) -> Result<CellResult, 
         return Err("contention cells run on the sim engine only".into());
     }
     // The contention cell's two tenants share one plain SimEngine; a
-    // crash plan names replica ordinals it does not have. Keep the axis
-    // out rather than half-supporting it.
-    if !spec.faults.is_empty() {
-        return Err("fault plans are not supported for contention cells".into());
+    // crash plan names replica ordinals it does not have. Fault plans are
+    // only meaningful here as *wire* conditions, which need a wire.
+    if !spec.faults.is_empty() && spec.federation.is_none() {
+        return Err(
+            "fault plans are not supported for contention cells (federated \
+             cells translate partition/loss plans into wire windows)"
+                .into(),
+        );
     }
     // The burst rates were calibrated against the pair's own budget;
     // running them under a different one would silently de-fang the
@@ -464,9 +520,19 @@ fn run_contention_cell(spec: &CellSpec, started: Instant) -> Result<CellResult, 
     reg.register(rival_spec)?;
 
     // Two guaranteed floors splitting the calibrated budget; the arbiter
-    // choice decides whether idle floor cores cross the boundary.
+    // choice decides whether idle floor cores cross the boundary. Under
+    // federation the floors become per-node budgets and the boundary is
+    // a wire: the typed handle stays with the runner (federation metrics
+    // come off it after the drain), the engine sees only `SharedArbiter`.
     let floor = (total / 2).max(1);
-    let arbiter = spec.knobs.arbiter.build();
+    let fed_handle: Option<Arc<Mutex<FederatedArbiter>>> = match spec.federation {
+        Some(knobs) => Some(Arc::new(Mutex::new(build_federation(spec, knobs, floor)?))),
+        None => None,
+    };
+    let arbiter: SharedArbiter = match &fed_handle {
+        Some(fed) => Arc::clone(fed) as SharedArbiter,
+        None => spec.knobs.arbiter.build(),
+    };
     let tenants = {
         let mut arb = arbiter.lock().unwrap();
         let pa = arb.add_partition(floor);
@@ -521,10 +587,34 @@ fn run_contention_cell(spec: &CellSpec, started: Instant) -> Result<CellResult, 
         .e2e_percentiles(&[50.0, 99.0])
         .map(|v| (v[0], v[1]))
         .unwrap_or((0.0, 0.0));
+    let submitted = snap_a.submitted + snap_b.submitted;
+    let completed = snap_a.completed + snap_b.completed;
+    let dropped = snap_a.dropped + snap_b.dropped;
+    // Drain the wire's tail (in-flight grants, final TTL sweeps) at the
+    // horizon, then read the federation ledgers.
+    let federation = fed_handle.map(|fed| {
+        let mut fed = fed.lock().unwrap();
+        fed.advance(engine.now_ms());
+        let stats = fed.fed_stats();
+        FederationCellMetrics {
+            nodes: stats.nodes,
+            lent: stats.lent,
+            stolen: stats.stolen,
+            remote_grants: stats.remote_grants,
+            expired_reclaims: stats.expired_reclaims,
+            requests_lost: submitted.saturating_sub(completed + dropped),
+            msgs_sent: stats.transport.sent,
+            msgs_delivered: stats.transport.delivered,
+            msgs_dropped: stats.transport.dropped,
+            msgs_duplicated: stats.transport.duplicated,
+            rtt_p50_ms: stats.rtt_p50_ms,
+            rtt_p95_ms: stats.rtt_p95_ms,
+        }
+    });
     let metrics = CellMetrics {
-        submitted: snap_a.submitted + snap_b.submitted,
-        completed: snap_a.completed + snap_b.completed,
-        dropped: snap_a.dropped + snap_b.dropped,
+        submitted,
+        completed,
+        dropped,
         violations: snap_a.violations + snap_b.violations,
         violation_rate_pct: tracker.violation_rate_pct(),
         mean_e2e_ms: tracker.mean_e2e_ms(),
@@ -545,6 +635,7 @@ fn run_contention_cell(spec: &CellSpec, started: Instant) -> Result<CellResult, 
             .max(engine.peak_stolen(&b_name).unwrap_or(0)),
         stages: Vec::new(),
         recovery: None,
+        federation,
     };
     Ok(CellResult {
         id: spec.id(),
@@ -555,6 +646,44 @@ fn run_contention_cell(spec: &CellSpec, started: Instant) -> Result<CellResult, 
             scaler_ns_total: ns_a + ns_b,
         },
     })
+}
+
+/// Build the federated control plane for a contention cell: two nodes of
+/// `floor` cores over a [`SimTransport`] seeded from the cell seed, with
+/// the cell's fault plan translated into wire windows. The plan stays
+/// untouched and the engine never installs it — on a federated cell a
+/// "fault" is a property of the wire between the nodes, exactly the
+/// composition [`crate::federation`]'s module docs promise.
+fn build_federation(
+    spec: &CellSpec,
+    knobs: FedKnobs,
+    floor: Cores,
+) -> Result<FederatedArbiter, String> {
+    let link = LinkCfg { latency_ms: knobs.link_latency_ms, ..LinkCfg::default() };
+    let mut transport = SimTransport::new(link, spec.seed);
+    for ev in &spec.faults.events {
+        match &ev.kind {
+            FaultKind::LeasePartition { .. } => {
+                transport = transport.with_outage(ev.at_ms, ev.at_ms + ev.duration_ms);
+            }
+            FaultKind::TransportLoss { frac, .. } => {
+                transport =
+                    transport.with_loss_window(*frac, ev.at_ms, ev.at_ms + ev.duration_ms);
+            }
+            FaultKind::ReplicaCrash { .. } | FaultKind::ExecutorError { .. } => {
+                return Err(
+                    "federated contention cells host wire faults only \
+                     (lease partitions and transport loss)"
+                        .into(),
+                );
+            }
+        }
+    }
+    Ok(FederatedArbiter::new(
+        NodeMap::homogeneous(2, floor),
+        Box::new(transport),
+        FederationCfg { lease_ttl_ms: knobs.ttl_ms, ..FederationCfg::default() },
+    ))
 }
 
 /// The pipeline axis's scenario cell: a linear chain of registered models
@@ -688,6 +817,7 @@ fn run_pipeline_cell(spec: &CellSpec, started: Instant) -> Result<CellResult, St
                 flaky_failures: 0,
             }
         }),
+        federation: None,
     };
     Ok(CellResult {
         id: spec.id(),
@@ -727,6 +857,7 @@ mod tests {
             noise_cv: 0.05,
             time_scale: 0.02,
             faults: crate::faults::FaultPlan::none(),
+            federation: None,
         }
     }
 
@@ -819,6 +950,80 @@ mod tests {
         let a = run_cell(&cell).unwrap();
         let b = run_cell(&cell).unwrap();
         assert_eq!(a.metrics, b.metrics);
+    }
+
+    fn federated_cell(ttl_ms: Ms, link_latency_ms: Ms) -> CellSpec {
+        let mut cell = contention_cell(crate::arbiter::ArbiterChoice::Stealing);
+        cell.federation = Some(FedKnobs { ttl_ms, link_latency_ms });
+        cell
+    }
+
+    #[test]
+    fn federated_cell_steals_across_the_wire() {
+        let cell = federated_cell(5_000.0, 20.0);
+        let r = run_cell(&cell).unwrap();
+        assert!(r.id.contains("+steal+fed-5000-20"), "{}", r.id);
+        let fed = r.metrics.federation.as_ref().expect("federated cell reports");
+        assert_eq!(fed.nodes, 2);
+        assert_eq!(fed.requests_lost, 0, "no request may vanish");
+        assert!(fed.remote_grants >= 1, "steal never crossed the wire: {fed:?}");
+        assert!(fed.msgs_delivered > 0);
+        assert!(fed.rtt_p50_ms >= 2.0 * 20.0, "round trip below two legs");
+        assert!(r.metrics.peak_stolen > 0, "federated steal invisible in peaks");
+        assert_eq!(r.metrics.submitted, r.metrics.completed + r.metrics.dropped);
+        // The moderate-latency acceptance pin: remote stealing strictly
+        // beats the static per-node split at equal total cores.
+        let stat = run_cell(&contention_cell(crate::arbiter::ArbiterChoice::Static))
+            .unwrap();
+        assert!(
+            r.metrics.violations < stat.metrics.violations,
+            "federated {} !< static {}",
+            r.metrics.violations,
+            stat.metrics.violations
+        );
+    }
+
+    #[test]
+    fn federated_cell_deterministic_across_runs() {
+        let cell = federated_cell(5_000.0, 20.0);
+        let a = run_cell(&cell).unwrap();
+        let b = run_cell(&cell).unwrap();
+        assert_eq!(a.metrics, b.metrics);
+    }
+
+    #[test]
+    fn federated_cell_with_cut_wire_is_no_worse_than_static() {
+        use crate::faults::FaultPlan;
+        let mut cell = federated_cell(2_000.0, 20.0);
+        // The whole horizon partitioned: nothing ever crosses the wire.
+        cell.faults =
+            FaultPlan::partition("yolov5s", 0, 0.0, cell.horizon_ms).with_name("cut");
+        let r = run_cell(&cell).unwrap();
+        assert!(r.id.ends_with("+fed-2000-20+flt-cut"), "{}", r.id);
+        let fed = r.metrics.federation.as_ref().expect("federated cell reports");
+        assert_eq!(fed.requests_lost, 0);
+        assert_eq!(fed.msgs_delivered, 0, "cut wire delivered a message");
+        assert_eq!(fed.stolen, 0);
+        assert_eq!(fed.lent, 0, "conservation: nothing may stay on loan");
+        assert_eq!(fed.remote_grants, 0);
+        let stat = run_cell(&contention_cell(crate::arbiter::ArbiterChoice::Static))
+            .unwrap();
+        assert!(
+            r.metrics.violations <= stat.metrics.violations,
+            "cut federation {} worse than static {}",
+            r.metrics.violations,
+            stat.metrics.violations
+        );
+        assert_eq!(r.metrics.submitted, stat.metrics.submitted);
+    }
+
+    #[test]
+    fn federated_cell_rejects_non_wire_faults() {
+        use crate::faults::FaultPlan;
+        let mut cell = federated_cell(5_000.0, 20.0);
+        cell.faults = FaultPlan::crash("yolov5s", 0, 5_000.0);
+        let err = run_cell(&cell).unwrap_err();
+        assert!(err.contains("wire faults only"), "{err}");
     }
 
     fn pipeline_cell(arbiter: crate::arbiter::ArbiterChoice) -> CellSpec {

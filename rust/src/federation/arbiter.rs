@@ -1,0 +1,1355 @@
+//! [`FederatedArbiter`]: the cross-node lease control plane.
+//!
+//! One local [`StealingArbiter`] ledger runs per node; cross-node
+//! stealing goes through the [`LeaseMsg`] protocol over a pluggable
+//! [`Transport`]. Each node's ledger carries a zero-budget **wire
+//! partition**: remote loans are held by proxy tenants registered there,
+//! so a loan can only draw the node's hysteresis-aged *lendable* surplus
+//! (exactly the local stealing rule, applied across the wire) and the
+//! per-node invariant `granted <= budget` is enforced by the existing
+//! ledger arithmetic, never re-derived here.
+//!
+//! ## Conservation under arbitrary loss
+//!
+//! The federation-level loan record is deliberately conservative:
+//!
+//! * A borrower counts remote cores only once a `Grant` has actually
+//!   been **delivered** — a steal pays the measured round trip (plus up
+//!   to one adaptation tick) before cores arrive.
+//! * A lender's loan record (`lent`) only shrinks on a borrower-
+//!   confirmed `Renew`/`Release`, or when the loan's TTL lapses
+//!   (`expired_reclaims`). A `Reclaim` in flight therefore keeps the
+//!   cores counted at the lender until the borrower has verifiably shed.
+//!
+//! Together: cluster-wide `stolen <= lent` at every instant under any
+//! loss/reorder/duplication pattern, with equality restored within one
+//! TTL of a heal (both sides expire orphaned state independently). The
+//! local ledgers' resize-actuation window means the *pool* may see
+//! reclaimed cores up to one RTT before the borrower's shed lands —
+//! the kernel-level approximation the module accepts and the loan
+//! record deliberately does not.
+//!
+//! ## Measured steal latency (Orloj-style planning)
+//!
+//! Every `Request → Grant` round trip is measured; the arbiter stops
+//! advertising (and requesting) remote surplus once the p95 of the
+//! measured distribution exceeds half the loan TTL — remote cores that
+//! would expire before they can be renewed are not worth the wire.
+
+use std::collections::BTreeMap;
+
+use crate::arbiter::{
+    ArbiterSnapshot, CoreArbiter, CoreLease, LeaseId, PartitionId, Revocation,
+    StealingArbiter, StealingCfg, TenantId, TenantUsage,
+};
+use crate::{Cores, Ms};
+
+use super::node::NodeMap;
+use super::protocol::{Envelope, LeaseMsg};
+use super::transport::{Transport, TransportStats};
+use super::NodeId;
+
+/// Federation knobs.
+#[derive(Debug, Clone, Copy)]
+pub struct FederationCfg {
+    /// Cross-node loan TTL: a loan not refreshed by a borrower message
+    /// within this window expires back to its lender
+    /// (`expired_reclaims`); a hold not refreshed by a delivered `Grant`
+    /// is shed by its borrower. Finite by construction — an un-renewable
+    /// remote grant must always find its way home.
+    pub lease_ttl_ms: Ms,
+    /// Knobs for every node's local ledger (hysteresis, resize window,
+    /// local lease TTL).
+    pub stealing: StealingCfg,
+    /// Measured-RTT gate: stop using a peer once p95(RTT) exceeds
+    /// `lease_ttl_ms / 2`, but only after this many samples.
+    pub min_rtt_samples: usize,
+}
+
+impl Default for FederationCfg {
+    fn default() -> Self {
+        FederationCfg {
+            lease_ttl_ms: 5_000.0,
+            stealing: StealingCfg::default(),
+            min_rtt_samples: 8,
+        }
+    }
+}
+
+/// Whole-federation accounting (feeds the `federation` report object and
+/// `/v1/cluster`).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FederationStats {
+    pub nodes: u32,
+    /// Cores currently on loan, summed over every lender's records.
+    pub lent: Cores,
+    /// Cores currently held remotely, summed over every borrower.
+    pub stolen: Cores,
+    /// Times a loan grew (a remote grant actually extended cores).
+    pub remote_grants: u64,
+    /// Cores reclaimed through loan-TTL expiry at lenders.
+    pub expired_reclaims: u64,
+    pub transport: TransportStats,
+    /// Measured Request→Grant round trip percentiles (0 when unmeasured).
+    pub rtt_p50_ms: Ms,
+    pub rtt_p95_ms: Ms,
+}
+
+/// Lender-side record of one cross-node loan.
+#[derive(Debug, Clone, Copy)]
+struct Loan {
+    /// Global borrower tenant.
+    tenant: usize,
+    /// Proxy lease on this node's ledger holding the loaned cores.
+    lease: LeaseId,
+    /// What the lender currently extends (== the proxy lease's grant).
+    offer: Cores,
+    /// The borrower's last announced hold (`Renew`); the loan record —
+    /// the `lent` metric — is `max(offer, known_hold)`, which only
+    /// falls on borrower confirmation or TTL expiry.
+    known_hold: Cores,
+    /// Pending lender-side demand (`Reclaim { keep }`); `None` = none.
+    reclaim_to: Option<Cores>,
+    /// Expiry deadline, refreshed by every borrower message.
+    deadline: Ms,
+}
+
+impl Loan {
+    fn cores(&self) -> Cores {
+        self.offer.max(self.known_hold)
+    }
+}
+
+/// Borrower-side record of one remote hold.
+#[derive(Debug, Clone, Copy)]
+struct Hold {
+    lender: NodeId,
+    cores: Cores,
+    /// Ceiling on what a delivered `Grant` may raise the hold to — the
+    /// last quantity this borrower announced wanting (`Request { want }`
+    /// / `Renew { cores }`). A reordered or loss-surviving stale `Grant`
+    /// can therefore never resurrect a hold the borrower already shed,
+    /// which would break `stolen <= lent`.
+    asked: Cores,
+    /// Shed deadline, refreshed by every delivered `Grant`.
+    expires_at: Ms,
+    /// Outstanding `Request` send time (RTT measurement; reset by every
+    /// re-request so the sample is one true round trip).
+    requested_at: Option<Ms>,
+    /// When the *oldest* unanswered request went out (not reset by
+    /// re-requests; cleared by any delivered `Grant`) — the dead-wire
+    /// detector's clock.
+    pending_since: Option<Ms>,
+}
+
+struct NodeState {
+    id: NodeId,
+    ledger: StealingArbiter,
+    /// The zero-budget partition remote proxies draw through.
+    wire: PartitionId,
+    /// Standing proxy used to *price* this node's lendable surplus.
+    probe: TenantId,
+    /// Proxy tenant per global borrower tenant (lazily registered,
+    /// reused across loans).
+    proxies: BTreeMap<usize, TenantId>,
+    loans: Vec<Loan>,
+}
+
+struct FedTenant {
+    node: usize,
+    local: TenantId,
+    /// Global partition the tenant registered under.
+    part: usize,
+    live: bool,
+    holds: Vec<Hold>,
+    peak_stolen: Cores,
+}
+
+struct FedLease {
+    tenant: usize,
+    local: LeaseId,
+    live: bool,
+}
+
+/// The federated control plane (see the module docs).
+pub struct FederatedArbiter {
+    cfg: FederationCfg,
+    nodes: Vec<NodeState>,
+    map: NodeMap,
+    /// Global partition id → (node index, local partition id).
+    parts: Vec<(usize, PartitionId)>,
+    tenants: Vec<FedTenant>,
+    leases: Vec<FedLease>,
+    transport: Box<dyn Transport>,
+    /// Monotone send sequence per directed `(from, to)` channel.
+    chan_seq: BTreeMap<(u32, u32), u64>,
+    /// Last applied sequence per `(from, to, tenant)` — the loss/
+    /// reorder/duplication filter (newest absolute state wins).
+    applied: BTreeMap<(u32, u32, u32), u64>,
+    expired_reclaims: u64,
+    remote_grants: u64,
+    /// Ring of measured Request→Grant round trips.
+    rtt: Vec<Ms>,
+    rtt_next: usize,
+    /// Consecutive dead-wire observations (a request unanswered for half
+    /// a TTL, or a hold expiring un-refreshed). Any delivered `Grant`
+    /// resets the count. At [`WIRE_STRIKES`] the remote gate closes —
+    /// the ring can't learn a latency from round trips that never
+    /// complete, so a fully cut link needs its own detector.
+    wire_strikes: u32,
+    last_strike_ms: Ms,
+}
+
+const RTT_RING: usize = 128;
+/// Dead-wire observations before the remote gate closes.
+const WIRE_STRIKES: u32 = 3;
+
+impl FederatedArbiter {
+    pub fn new(
+        map: NodeMap,
+        transport: Box<dyn Transport>,
+        cfg: FederationCfg,
+    ) -> FederatedArbiter {
+        let nodes = map
+            .specs()
+            .iter()
+            .map(|spec| {
+                let mut ledger = StealingArbiter::new(cfg.stealing);
+                let wire = ledger.add_partition(0);
+                let probe = ledger.register_tenant(wire);
+                NodeState {
+                    id: spec.id,
+                    ledger,
+                    wire,
+                    probe,
+                    proxies: BTreeMap::new(),
+                    loans: Vec::new(),
+                }
+            })
+            .collect();
+        FederatedArbiter {
+            cfg,
+            nodes,
+            map,
+            parts: Vec::new(),
+            tenants: Vec::new(),
+            leases: Vec::new(),
+            transport,
+            chan_seq: BTreeMap::new(),
+            applied: BTreeMap::new(),
+            expired_reclaims: 0,
+            remote_grants: 0,
+            rtt: Vec::new(),
+            rtt_next: 0,
+            wire_strikes: 0,
+            last_strike_ms: f64::NEG_INFINITY,
+        }
+    }
+
+    /// `count` nodes with one transport between them.
+    pub fn homogeneous(
+        count: u32,
+        transport: Box<dyn Transport>,
+        cfg: FederationCfg,
+    ) -> FederatedArbiter {
+        FederatedArbiter::new(NodeMap::homogeneous(count, 0), transport, cfg)
+    }
+
+    pub fn node_count(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// One node's local ledger view (per-node invariants, `/v1/cluster`).
+    pub fn node_snapshot(&self, node: usize, now: Ms) -> ArbiterSnapshot {
+        self.nodes[node].ledger.snapshot(now)
+    }
+
+    /// The home node a global tenant is pinned to.
+    pub fn tenant_home(&self, tenant: TenantId) -> Option<NodeId> {
+        self.tenants.get(tenant.0 as usize).map(|t| self.nodes[t.node].id)
+    }
+
+    /// Whole-federation accounting.
+    pub fn fed_stats(&self) -> FederationStats {
+        let lent =
+            self.nodes.iter().flat_map(|n| n.loans.iter()).map(|l| l.cores()).sum();
+        let stolen = self
+            .tenants
+            .iter()
+            .flat_map(|t| t.holds.iter())
+            .map(|h| h.cores)
+            .sum();
+        FederationStats {
+            nodes: self.nodes.len() as u32,
+            lent,
+            stolen,
+            remote_grants: self.remote_grants,
+            expired_reclaims: self.expired_reclaims,
+            transport: self.transport.stats(),
+            rtt_p50_ms: self.rtt_percentile(50.0),
+            rtt_p95_ms: self.rtt_percentile(95.0),
+        }
+    }
+
+    /// Deliver every due message and sweep both TTL directions — called
+    /// at the top of every mutating trait operation (mutation-driven
+    /// time, like the ledgers themselves). Each envelope is applied *at
+    /// its delivery instant*, and replies it provokes are posted from
+    /// that instant — so a Request→Grant round trip completes inside one
+    /// pump when the wire is fast enough, instead of quantizing every
+    /// protocol leg to the caller's tick. The loop is bounded: only
+    /// engine-driven calls originate borrower traffic, and every reply
+    /// chain (Request→Grant, Renew→Grant→confirm) is finite.
+    pub fn advance(&mut self, now: Ms) {
+        loop {
+            let envs = self.transport.poll(now);
+            if envs.is_empty() {
+                break;
+            }
+            for (at, env) in envs {
+                if self.stale(&env) {
+                    continue;
+                }
+                match env.msg {
+                    LeaseMsg::Request { .. }
+                    | LeaseMsg::Renew { .. }
+                    | LeaseMsg::Release { .. } => self.lender_apply(env, at),
+                    LeaseMsg::Grant { .. }
+                    | LeaseMsg::Reclaim { .. }
+                    | LeaseMsg::Expire { .. } => self.borrower_apply(env, at),
+                }
+            }
+        }
+        self.sweep_loans(now);
+        self.sweep_holds(now);
+    }
+
+    // ---- wire plumbing ---------------------------------------------------
+
+    fn node_index(&self, id: NodeId) -> Option<usize> {
+        self.nodes.iter().position(|n| n.id == id)
+    }
+
+    fn post(&mut self, from: NodeId, to: NodeId, msg: LeaseMsg, now: Ms) {
+        let seq = self.chan_seq.entry((from.0, to.0)).or_insert(0);
+        *seq += 1;
+        let env = Envelope { from, to, seq: *seq, msg };
+        self.transport.send(env, now);
+    }
+
+    /// Drop duplicates and anything older than the newest applied state
+    /// for the same `(channel, tenant)` (absolute-state messages make
+    /// newest-wins sound).
+    fn stale(&mut self, env: &Envelope) -> bool {
+        let key = (env.from.0, env.to.0, env.msg.tenant().0);
+        let last = self.applied.entry(key).or_insert(0);
+        if env.seq <= *last {
+            return true;
+        }
+        *last = env.seq;
+        false
+    }
+
+    // ---- lender side -----------------------------------------------------
+
+    fn lender_apply(&mut self, env: Envelope, now: Ms) {
+        let Some(n) = self.node_index(env.to) else { return };
+        let tenant_g = env.msg.tenant().0 as usize;
+        let ttl = self.cfg.lease_ttl_ms;
+        let li = self.nodes[n].loans.iter().position(|l| l.tenant == tenant_g);
+        match env.msg {
+            LeaseMsg::Request { want, .. } => {
+                let li = match li {
+                    Some(i) => i,
+                    None => {
+                        let proxy = match self.nodes[n].proxies.get(&tenant_g) {
+                            Some(p) => *p,
+                            None => {
+                                let wire = self.nodes[n].wire;
+                                let p = self.nodes[n].ledger.register_tenant(wire);
+                                self.nodes[n].proxies.insert(tenant_g, p);
+                                p
+                            }
+                        };
+                        let lease = self.nodes[n].ledger.request_lease(proxy, 0, now);
+                        self.nodes[n].loans.push(Loan {
+                            tenant: tenant_g,
+                            lease: lease.id,
+                            offer: 0,
+                            known_hold: 0,
+                            reclaim_to: None,
+                            deadline: now + ttl,
+                        });
+                        self.nodes[n].loans.len() - 1
+                    }
+                };
+                // A pending reclaim caps what the borrower may ask for.
+                let cap = self.nodes[n].loans[li].reclaim_to.unwrap_or(Cores::MAX);
+                let target = want.min(cap);
+                let lease = self.nodes[n].loans[li].lease;
+                let renewed = self.nodes[n].ledger.renew(lease, target, now);
+                let loan = &mut self.nodes[n].loans[li];
+                if renewed.granted > loan.offer {
+                    self.remote_grants += 1;
+                }
+                loan.offer = renewed.granted;
+                loan.deadline = now + ttl;
+                if loan.reclaim_to.map(|k| loan.known_hold <= k).unwrap_or(false) {
+                    loan.reclaim_to = None;
+                }
+                let offer = loan.offer;
+                let (from, to) = (env.to, env.from);
+                self.post(
+                    from,
+                    to,
+                    LeaseMsg::Grant { tenant: TenantId(tenant_g as u32), cores: offer, ttl_ms: ttl },
+                    now,
+                );
+                self.close_loan_if_empty(n, li, now);
+            }
+            LeaseMsg::Renew { cores, .. } => {
+                let Some(li) = li else {
+                    // No loan (expired or never granted): their hold is void.
+                    let (from, to) = (env.to, env.from);
+                    self.post(
+                        from,
+                        to,
+                        LeaseMsg::Expire { tenant: TenantId(tenant_g as u32) },
+                        now,
+                    );
+                    return;
+                };
+                // Borrower-confirmed hold, capped by any pending reclaim
+                // (a heartbeat must not keep a reclaimed loan extended).
+                let lease = self.nodes[n].loans[li].lease;
+                let offer = self.nodes[n].loans[li].offer;
+                let cap = self.nodes[n].loans[li].reclaim_to.unwrap_or(Cores::MAX);
+                let target = cores.min(cap);
+                let new_offer = if target < offer {
+                    self.nodes[n].ledger.renew(lease, target, now).granted
+                } else {
+                    offer
+                };
+                let loan = &mut self.nodes[n].loans[li];
+                loan.known_hold = cores;
+                loan.offer = new_offer;
+                loan.deadline = now + ttl;
+                if loan.reclaim_to.map(|k| cores <= k).unwrap_or(false) {
+                    loan.reclaim_to = None;
+                }
+                let offer = loan.offer;
+                let (from, to) = (env.to, env.from);
+                self.post(
+                    from,
+                    to,
+                    LeaseMsg::Grant { tenant: TenantId(tenant_g as u32), cores: offer, ttl_ms: ttl },
+                    now,
+                );
+                self.close_loan_if_empty(n, li, now);
+            }
+            LeaseMsg::Release { .. } => {
+                if let Some(li) = li {
+                    let lease = self.nodes[n].loans[li].lease;
+                    self.nodes[n].ledger.release(lease, now);
+                    self.nodes[n].loans.swap_remove(li);
+                }
+            }
+            _ => {}
+        }
+    }
+
+    fn close_loan_if_empty(&mut self, n: usize, li: usize, now: Ms) {
+        let loan = self.nodes[n].loans[li];
+        if loan.offer == 0 && loan.known_hold == 0 {
+            self.nodes[n].ledger.release(loan.lease, now);
+            self.nodes[n].loans.swap_remove(li);
+        }
+    }
+
+    /// Expire every loan whose deadline lapsed: the proxy lease releases
+    /// (cores home instantly) and the reclaim is accounted.
+    fn sweep_loans(&mut self, now: Ms) {
+        for n in 0..self.nodes.len() {
+            let mut i = 0;
+            while i < self.nodes[n].loans.len() {
+                if self.nodes[n].loans[i].deadline <= now {
+                    let loan = self.nodes[n].loans[i];
+                    self.expired_reclaims += u64::from(loan.cores());
+                    self.nodes[n].ledger.release(loan.lease, now);
+                    self.nodes[n].loans.swap_remove(i);
+                    let from = self.nodes[n].id;
+                    let to = self.tenant_home_id(loan.tenant);
+                    self.post(
+                        from,
+                        to,
+                        LeaseMsg::Expire { tenant: TenantId(loan.tenant as u32) },
+                        now,
+                    );
+                } else {
+                    i += 1;
+                }
+            }
+        }
+    }
+
+    fn tenant_home_id(&self, tenant_g: usize) -> NodeId {
+        self.nodes[self.tenants[tenant_g].node].id
+    }
+
+    // ---- borrower side ---------------------------------------------------
+
+    fn borrower_apply(&mut self, env: Envelope, now: Ms) {
+        let tenant_g = env.msg.tenant().0 as usize;
+        if tenant_g >= self.tenants.len() {
+            return;
+        }
+        let home = self.tenants[tenant_g].node;
+        let from_id = self.nodes[home].id;
+        let tenant = TenantId(tenant_g as u32);
+        let hi = self.tenants[tenant_g]
+            .holds
+            .iter()
+            .position(|h| h.lender == env.from);
+        match env.msg {
+            LeaseMsg::Grant { cores, ttl_ms, .. } => {
+                // Any delivered grant proves the wire is alive.
+                self.wire_strikes = 0;
+                let t = &mut self.tenants[tenant_g];
+                let hi = match hi {
+                    Some(i) => i,
+                    None => {
+                        // No outstanding ask: a late Grant for a hold we
+                        // already walked away from. `asked = 0` voids it.
+                        t.holds.push(Hold {
+                            lender: env.from,
+                            cores: 0,
+                            asked: 0,
+                            expires_at: now + ttl_ms,
+                            requested_at: None,
+                            pending_since: None,
+                        });
+                        t.holds.len() - 1
+                    }
+                };
+                t.holds[hi].pending_since = None;
+                if let Some(sent) = t.holds[hi].requested_at.take() {
+                    let sample = now - sent;
+                    if self.rtt.len() < RTT_RING {
+                        self.rtt.push(sample);
+                    } else {
+                        self.rtt[self.rtt_next] = sample;
+                    }
+                    self.rtt_next = (self.rtt_next + 1) % RTT_RING;
+                }
+                let t = &mut self.tenants[tenant_g];
+                let before = t.holds[hi].cores;
+                let after = cores.min(t.holds[hi].asked);
+                t.holds[hi].cores = after;
+                t.holds[hi].expires_at = now + ttl_ms;
+                if after == 0 {
+                    t.holds.swap_remove(hi);
+                }
+                // Confirm a shrink straight away so the lender's ledger
+                // frees without waiting for the next heartbeat tick.
+                if after < before {
+                    let msg = if after == 0 {
+                        LeaseMsg::Release { tenant }
+                    } else {
+                        LeaseMsg::Renew { tenant, cores: after }
+                    };
+                    self.post(from_id, env.from, msg, now);
+                }
+            }
+            LeaseMsg::Reclaim { keep, .. } => {
+                if let Some(hi) = hi {
+                    let t = &mut self.tenants[tenant_g];
+                    let before = t.holds[hi].cores;
+                    let after = before.min(keep);
+                    t.holds[hi].cores = after;
+                    t.holds[hi].asked = t.holds[hi].asked.min(keep);
+                    if after == 0 && t.holds[hi].requested_at.is_none() {
+                        t.holds.swap_remove(hi);
+                    }
+                    // Shed-and-confirm: `stolen` falls here, the lender
+                    // frees only once this confirmation is delivered.
+                    if after < before {
+                        let msg = if after == 0 {
+                            LeaseMsg::Release { tenant }
+                        } else {
+                            LeaseMsg::Renew { tenant, cores: after }
+                        };
+                        self.post(from_id, env.from, msg, now);
+                    }
+                }
+            }
+            LeaseMsg::Expire { .. } => {
+                if let Some(hi) = hi {
+                    self.tenants[tenant_g].holds.swap_remove(hi);
+                }
+            }
+            _ => {}
+        }
+    }
+
+    /// Shed every hold whose lender has gone silent past the TTL. Each
+    /// expiry is a dead-wire observation — a healthy link refreshes every
+    /// hold with a `Grant` well inside a TTL.
+    fn sweep_holds(&mut self, now: Ms) {
+        let mut expired = 0u32;
+        for t in &mut self.tenants {
+            let before = t.holds.len();
+            t.holds.retain(|h| h.expires_at > now);
+            expired += (before - t.holds.len()) as u32;
+        }
+        if expired > 0 {
+            self.wire_strikes = self.wire_strikes.saturating_add(expired);
+            self.last_strike_ms = now;
+        }
+    }
+
+    // ---- the steal negotiation ------------------------------------------
+
+    fn held_remote(&self, tenant_g: usize) -> Cores {
+        self.tenants[tenant_g].holds.iter().map(|h| h.cores).sum()
+    }
+
+    fn rtt_percentile(&self, p: f64) -> Ms {
+        if self.rtt.is_empty() {
+            return 0.0;
+        }
+        let mut xs = self.rtt.clone();
+        xs.sort_by(f64::total_cmp);
+        let idx = ((p / 100.0) * (xs.len() as f64 - 1.0)).round() as usize;
+        xs[idx.min(xs.len() - 1)]
+    }
+
+    /// The measured-distribution gate: remote surplus is only worth the
+    /// wire while p95(RTT) fits inside half a TTL (a grant must survive
+    /// at least one renewal round trip to be useful). A cut link never
+    /// completes a round trip, so the percentile branch can't see it —
+    /// the strike counter closes the gate instead, and reopens it for a
+    /// single probe once a full TTL has passed without a fresh strike
+    /// (self-healing after a partition, ~one probe message per 1.5 TTL
+    /// while the cut lasts).
+    fn remote_worthwhile(&self, now: Ms) -> bool {
+        if self.wire_strikes >= WIRE_STRIKES
+            && now - self.last_strike_ms <= self.cfg.lease_ttl_ms
+        {
+            return false;
+        }
+        self.rtt.len() < self.cfg.min_rtt_samples
+            || self.rtt_percentile(95.0) <= self.cfg.lease_ttl_ms * 0.5
+    }
+
+    /// What node `q` would lend a new borrower right now (the gossiped
+    /// capacity advertisement; priced through the probe proxy so the
+    /// hysteresis rule applies unchanged).
+    fn advertised(&self, q: usize, now: Ms) -> Cores {
+        let probe = self.nodes[q].probe;
+        self.nodes[q].ledger.plannable(probe, now)
+    }
+
+    /// Align the tenant's remote holds with `want`: shed surplus, demand
+    /// back the home node's outbound loans, request the remainder from
+    /// peers, and heartbeat what stays. At most one message per
+    /// `(peer, tenant)` per call.
+    fn settle_remote(&mut self, tenant_g: usize, want: Cores, local: Cores, now: Ms) {
+        let home = self.tenants[tenant_g].node;
+        let have = self.held_remote(tenant_g);
+        let total = local.saturating_add(have);
+        if total > want {
+            // Shed newest holds first; the lender frees on delivery.
+            let mut excess = total - want;
+            let tenant = TenantId(tenant_g as u32);
+            let mut msgs = Vec::new();
+            {
+                let t = &mut self.tenants[tenant_g];
+                for i in (0..t.holds.len()).rev() {
+                    if excess == 0 {
+                        break;
+                    }
+                    let cut = t.holds[i].cores.min(excess);
+                    t.holds[i].cores -= cut;
+                    excess -= cut;
+                    let kept = t.holds[i].cores;
+                    t.holds[i].asked = kept;
+                    let lender = t.holds[i].lender;
+                    if kept == 0 {
+                        t.holds.swap_remove(i);
+                        msgs.push((lender, LeaseMsg::Release { tenant }));
+                    } else {
+                        msgs.push((lender, LeaseMsg::Renew { tenant, cores: kept }));
+                    }
+                }
+            }
+            let from = self.nodes[home].id;
+            let mut renewed: Vec<NodeId> = Vec::new();
+            for (to, msg) in msgs {
+                renewed.push(to);
+                self.post(from, to, msg, now);
+            }
+            // Heartbeat the untouched holds too.
+            self.heartbeat(tenant_g, &renewed, now);
+            return;
+        }
+        let mut short = want - total;
+        let tenant = TenantId(tenant_g as u32);
+        let from = self.nodes[home].id;
+        // 1. Unmet demand while our node has loans out: demand them home
+        //    (the cross-node clawback; cores return within one round trip
+        //    plus the borrower's next tick).
+        if short > 0 {
+            let mut demand = short;
+            let mut msgs = Vec::new();
+            for loan in &mut self.nodes[home].loans {
+                if demand == 0 {
+                    break;
+                }
+                let take = loan.cores().min(demand);
+                let keep = loan.cores() - take;
+                let cur = loan.reclaim_to.unwrap_or(Cores::MAX);
+                if keep < cur {
+                    loan.reclaim_to = Some(keep);
+                    msgs.push((
+                        self.tenants[loan.tenant].node,
+                        LeaseMsg::Reclaim { tenant: TenantId(loan.tenant as u32), keep },
+                    ));
+                }
+                demand -= take;
+            }
+            for (to_node, msg) in msgs {
+                let to = self.nodes[to_node].id;
+                self.post(from, to, msg, now);
+            }
+        }
+        // 2. Request the remainder from peers, in node order, sized by
+        //    their advertisements (gated on the measured RTT).
+        let mut messaged: Vec<NodeId> = Vec::new();
+        if short > 0 && self.remote_worthwhile(now) {
+            for q in 0..self.nodes.len() {
+                if q == home || short == 0 {
+                    continue;
+                }
+                let qid = self.nodes[q].id;
+                let held = self.tenants[tenant_g]
+                    .holds
+                    .iter()
+                    .find(|h| h.lender == qid)
+                    .map(|h| h.cores)
+                    .unwrap_or(0);
+                let adv = self.advertised(q, now);
+                if adv == 0 && held == 0 {
+                    continue;
+                }
+                let ask = held + short.min(adv.max(if held > 0 { 1 } else { 0 }));
+                if ask == 0 {
+                    continue;
+                }
+                let ttl = self.cfg.lease_ttl_ms;
+                let mut struck = false;
+                {
+                    let t = &mut self.tenants[tenant_g];
+                    match t.holds.iter_mut().find(|h| h.lender == qid) {
+                        Some(h) => {
+                            // A request unanswered for half a TTL is a
+                            // dead-wire observation (see
+                            // `remote_worthwhile`); re-arm the clock so a
+                            // still-dead wire keeps striking.
+                            match h.pending_since {
+                                Some(since) if now - since > ttl * 0.5 => {
+                                    struck = true;
+                                    h.pending_since = Some(now);
+                                }
+                                Some(_) => {}
+                                None => h.pending_since = Some(now),
+                            }
+                            h.requested_at = Some(now);
+                            h.asked = ask;
+                        }
+                        None => t.holds.push(Hold {
+                            lender: qid,
+                            cores: 0,
+                            asked: ask,
+                            expires_at: now + ttl,
+                            requested_at: Some(now),
+                            pending_since: Some(now),
+                        }),
+                    }
+                }
+                if struck {
+                    self.wire_strikes = self.wire_strikes.saturating_add(1);
+                    self.last_strike_ms = now;
+                }
+                self.post(from, qid, LeaseMsg::Request { tenant, want: ask }, now);
+                messaged.push(qid);
+                short = short.saturating_sub(adv.min(short));
+            }
+        }
+        // 3. Heartbeat every hold not already messaged this call.
+        self.heartbeat(tenant_g, &messaged, now);
+    }
+
+    fn heartbeat(&mut self, tenant_g: usize, skip: &[NodeId], now: Ms) {
+        let home = self.tenants[tenant_g].node;
+        let from = self.nodes[home].id;
+        let tenant = TenantId(tenant_g as u32);
+        let beats: Vec<(NodeId, Cores)> = self.tenants[tenant_g]
+            .holds
+            .iter_mut()
+            .filter(|h| h.cores > 0 && !skip.contains(&h.lender))
+            .map(|h| {
+                h.asked = h.cores;
+                (h.lender, h.cores)
+            })
+            .collect();
+        for (to, cores) in beats {
+            self.post(from, to, LeaseMsg::Renew { tenant, cores }, now);
+        }
+    }
+
+    fn note_peak(&mut self, tenant_g: usize, stolen: Cores) {
+        let t = &mut self.tenants[tenant_g];
+        if stolen > t.peak_stolen {
+            t.peak_stolen = stolen;
+        }
+    }
+
+    fn view(&mut self, gid: usize, local: CoreLease) -> CoreLease {
+        let tenant_g = self.leases[gid].tenant;
+        let remote = self.held_remote(tenant_g);
+        let stolen = local.stolen + remote;
+        self.note_peak(tenant_g, stolen);
+        CoreLease {
+            id: LeaseId(gid as u64),
+            tenant: TenantId(tenant_g as u32),
+            granted: local.granted + remote,
+            reserved: local.reserved + remote,
+            stolen,
+        }
+    }
+
+    /// Map one node-local revocation back to the global id space.
+    fn globalize(&self, node: usize, r: Revocation) -> Option<Revocation> {
+        let lease = self
+            .leases
+            .iter()
+            .position(|l| l.live && l.local == r.lease && self.tenants[l.tenant].node == node)?;
+        let tenant = self.leases[lease].tenant;
+        let lender = self
+            .parts
+            .iter()
+            .position(|(n, lp)| *n == node && *lp == r.lender)?;
+        Some(Revocation {
+            lease: LeaseId(lease as u64),
+            borrower: TenantId(tenant as u32),
+            lender: PartitionId(lender as u32),
+            cores: r.cores,
+        })
+    }
+}
+
+impl CoreArbiter for FederatedArbiter {
+    fn name(&self) -> &'static str {
+        "federated"
+    }
+
+    fn add_partition(&mut self, budget: Cores) -> PartitionId {
+        let node = self.map.pin_next();
+        let n = self.node_index(node).unwrap_or(0);
+        let local = self.nodes[n].ledger.add_partition(budget);
+        self.parts.push((n, local));
+        PartitionId(self.parts.len() as u32 - 1)
+    }
+
+    fn register_tenant(&mut self, partition: PartitionId) -> TenantId {
+        let gp = partition.0 as usize;
+        assert!(gp < self.parts.len(), "unknown partition {partition:?}");
+        let (n, local_p) = self.parts[gp];
+        let local = self.nodes[n].ledger.register_tenant(local_p);
+        self.tenants.push(FedTenant {
+            node: n,
+            local,
+            part: gp,
+            live: true,
+            holds: Vec::new(),
+            peak_stolen: 0,
+        });
+        TenantId(self.tenants.len() as u32 - 1)
+    }
+
+    fn retire_partition(&mut self, partition: PartitionId, now: Ms) {
+        self.advance(now);
+        let gp = partition.0 as usize;
+        if gp >= self.parts.len() {
+            return;
+        }
+        let (n, local_p) = self.parts[gp];
+        // Retiring tenants return their remote holds first.
+        let tenant_ids: Vec<usize> = self
+            .tenants
+            .iter()
+            .enumerate()
+            .filter(|(_, t)| t.live && t.part == gp)
+            .map(|(i, _)| i)
+            .collect();
+        let from = self.nodes[n].id;
+        for tg in tenant_ids {
+            let lenders: Vec<NodeId> =
+                self.tenants[tg].holds.iter().map(|h| h.lender).collect();
+            for to in lenders {
+                self.post(from, to, LeaseMsg::Release { tenant: TenantId(tg as u32) }, now);
+            }
+            self.tenants[tg].holds.clear();
+            self.tenants[tg].live = false;
+        }
+        self.nodes[n].ledger.retire_partition(local_p, now);
+    }
+
+    fn request_lease(&mut self, tenant: TenantId, want: Cores, now: Ms) -> CoreLease {
+        self.advance(now);
+        let tg = tenant.0 as usize;
+        assert!(tg < self.tenants.len(), "unknown tenant {tenant:?}");
+        let (node, local_t) = (self.tenants[tg].node, self.tenants[tg].local);
+        let local = self.nodes[node].ledger.request_lease(local_t, want, now);
+        self.leases.push(FedLease { tenant: tg, local: local.id, live: true });
+        let gid = self.leases.len() - 1;
+        self.settle_remote(tg, want, local.granted, now);
+        self.view(gid, local)
+    }
+
+    fn renew(&mut self, lease: LeaseId, want: Cores, now: Ms) -> CoreLease {
+        self.advance(now);
+        let gid = lease.0 as usize;
+        assert!(
+            gid < self.leases.len() && self.leases[gid].live,
+            "renew of dead lease {lease:?}"
+        );
+        let tg = self.leases[gid].tenant;
+        let node = self.tenants[tg].node;
+        let local_id = self.leases[gid].local;
+        // The local ledger is asked for the full demand first — local
+        // cores are cheaper (no wire, no TTL churn) — and whatever it
+        // cannot cover is negotiated remotely; surplus holds are shed.
+        let local = self.nodes[node].ledger.renew(local_id, want, now);
+        self.settle_remote(tg, want, local.granted, now);
+        self.view(gid, local)
+    }
+
+    fn release(&mut self, lease: LeaseId, now: Ms) {
+        self.advance(now);
+        let gid = lease.0 as usize;
+        if gid >= self.leases.len() || !self.leases[gid].live {
+            return;
+        }
+        let tg = self.leases[gid].tenant;
+        let node = self.tenants[tg].node;
+        let local_id = self.leases[gid].local;
+        self.nodes[node].ledger.release(local_id, now);
+        self.leases[gid].live = false;
+        let from = self.nodes[node].id;
+        let lenders: Vec<NodeId> =
+            self.tenants[tg].holds.iter().map(|h| h.lender).collect();
+        self.tenants[tg].holds.clear();
+        for to in lenders {
+            self.post(from, to, LeaseMsg::Release { tenant: TenantId(tg as u32) }, now);
+        }
+    }
+
+    fn reclaim(&mut self, tenant: TenantId, need: Cores, now: Ms) -> Vec<Revocation> {
+        self.advance(now);
+        let tg = tenant.0 as usize;
+        assert!(tg < self.tenants.len(), "unknown tenant {tenant:?}");
+        if !self.tenants[tg].live {
+            return Vec::new();
+        }
+        let node = self.tenants[tg].node;
+        let local_t = self.tenants[tg].local;
+        let local = self.nodes[node].ledger.reclaim(local_t, need, now);
+        let out: Vec<Revocation> =
+            local.into_iter().filter_map(|r| self.globalize(node, r)).collect();
+        // Cross-node share: demand outbound loans home too.
+        let from = self.nodes[node].id;
+        let mut demand = need;
+        let mut msgs = Vec::new();
+        for loan in &mut self.nodes[node].loans {
+            if demand == 0 {
+                break;
+            }
+            let take = loan.cores().min(demand);
+            let keep = loan.cores() - take;
+            let cur = loan.reclaim_to.unwrap_or(Cores::MAX);
+            if keep < cur {
+                loan.reclaim_to = Some(keep);
+                msgs.push((
+                    self.tenants[loan.tenant].node,
+                    LeaseMsg::Reclaim { tenant: TenantId(loan.tenant as u32), keep },
+                ));
+            }
+            demand -= take;
+        }
+        for (to_node, msg) in msgs {
+            let to = self.nodes[to_node].id;
+            self.post(from, to, msg, now);
+        }
+        out
+    }
+
+    fn set_lease_ttl(&mut self, ttl_ms: Ms) {
+        self.cfg.lease_ttl_ms = ttl_ms;
+        for n in &mut self.nodes {
+            n.ledger.set_lease_ttl(ttl_ms);
+        }
+    }
+
+    fn snapshot(&self, now: Ms) -> ArbiterSnapshot {
+        let node_snaps: Vec<ArbiterSnapshot> =
+            self.nodes.iter().map(|n| n.ledger.snapshot(now)).collect();
+        let partitions = self
+            .parts
+            .iter()
+            .enumerate()
+            .filter_map(|(gp, (n, lp))| {
+                node_snaps[*n]
+                    .partitions
+                    .iter()
+                    .find(|p| p.id == *lp)
+                    .map(|p| crate::arbiter::PartitionUsage {
+                        id: PartitionId(gp as u32),
+                        ..*p
+                    })
+            })
+            .collect();
+        let tenants = (0..self.tenants.len())
+            .filter_map(|tg| self.usage(TenantId(tg as u32)))
+            .collect();
+        ArbiterSnapshot {
+            budget: node_snaps.iter().map(|s| s.budget).sum(),
+            granted: node_snaps.iter().map(|s| s.granted).sum(),
+            expired_reclaims: node_snaps
+                .iter()
+                .map(|s| s.expired_reclaims)
+                .sum::<u64>()
+                + self.expired_reclaims,
+            partitions,
+            tenants,
+        }
+    }
+
+    fn plannable(&self, tenant: TenantId, now: Ms) -> Cores {
+        let tg = tenant.0 as usize;
+        if tg >= self.tenants.len() || !self.tenants[tg].live {
+            return 0;
+        }
+        let t = &self.tenants[tg];
+        let mut cap = self.nodes[t.node]
+            .ledger
+            .plannable(t.local, now)
+            .saturating_add(self.held_remote(tg));
+        // Remote surplus enters the *plan* only while the wire is both
+        // worthwhile and not currently suspect: an unstruck wire may
+        // bootstrap on faith (the first over-floor plan sends the
+        // Request that measures it), but once a request has gone
+        // unanswered the peer's cores stay out of the plan until a
+        // delivered Grant clears the strikes (ring non-empty keeps a
+        // once-proven wire plannable across a mid-run partition's heal).
+        // Planning on phantom capacity is how a cut link would make
+        // federation *worse* than a static split.
+        if self.remote_worthwhile(now) && (self.wire_strikes == 0 || !self.rtt.is_empty())
+        {
+            for q in 0..self.nodes.len() {
+                if q != t.node {
+                    cap = cap.saturating_add(self.advertised(q, now));
+                }
+            }
+        }
+        cap
+    }
+
+    fn usage(&self, tenant: TenantId) -> Option<TenantUsage> {
+        let tg = tenant.0 as usize;
+        let t = self.tenants.get(tg)?;
+        if !t.live {
+            return None;
+        }
+        let base = self.nodes[t.node].ledger.usage(t.local)?;
+        let remote = self.held_remote(tg);
+        // Loans out of the tenant's home node are attributed to it when
+        // it is the node's only live principal (same sole-member rule as
+        // the ledger's own `lent` attribution).
+        let sole = self
+            .tenants
+            .iter()
+            .filter(|x| x.live && x.node == t.node)
+            .count()
+            == 1;
+        let lent_out: Cores = if sole {
+            self.nodes[t.node].loans.iter().map(|l| l.cores()).sum()
+        } else {
+            0
+        };
+        Some(TenantUsage {
+            tenant,
+            partition: PartitionId(t.part as u32),
+            granted: base.granted + remote,
+            stolen: base.stolen + remote,
+            lent: base.lent.max(lent_out),
+            peak_stolen: t.peak_stolen.max(base.peak_stolen),
+        })
+    }
+
+    fn quiescent(&self) -> bool {
+        // Remote loans need heartbeats a fast-forwarded gap would skip,
+        // so any outstanding federation state blocks quiescence.
+        self.nodes.iter().all(|n| n.ledger.quiescent() && n.loans.is_empty())
+            && self.tenants.iter().all(|t| t.holds.is_empty())
+            && self.transport.idle()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::federation::transport::{LinkCfg, SimTransport};
+
+    /// Two 8-core nodes, one tenant each, 20 ms links, 5 s TTL.
+    fn two_node(
+        link: LinkCfg,
+    ) -> (FederatedArbiter, TenantId, TenantId, CoreLease, CoreLease) {
+        let transport = SimTransport::new(link, 7);
+        let mut fed = FederatedArbiter::new(
+            NodeMap::homogeneous(2, 8),
+            Box::new(transport),
+            FederationCfg::default(),
+        );
+        let pa = fed.add_partition(8);
+        let pb = fed.add_partition(8);
+        let ta = fed.register_tenant(pa);
+        let tb = fed.register_tenant(pb);
+        let la = fed.request_lease(ta, 2, 0.0);
+        let lb = fed.request_lease(tb, 2, 0.0);
+        (fed, ta, tb, la, lb)
+    }
+
+    fn link20() -> LinkCfg {
+        LinkCfg { latency_ms: 20.0, ..LinkCfg::default() }
+    }
+
+    /// Drive per-tick renews until `t_end`.
+    fn tick_until(
+        fed: &mut FederatedArbiter,
+        la: LeaseId,
+        lb: LeaseId,
+        want_a: Cores,
+        want_b: Cores,
+        from: Ms,
+        t_end: Ms,
+    ) -> (CoreLease, CoreLease) {
+        let mut va = CoreLease { id: la, tenant: TenantId(0), granted: 0, reserved: 0, stolen: 0 };
+        let mut vb = va;
+        vb.id = lb;
+        let mut t = from;
+        while t <= t_end {
+            va = fed.renew(la, want_a, t);
+            vb = fed.renew(lb, want_b, t);
+            t += 1_000.0;
+        }
+        (va, vb)
+    }
+
+    #[test]
+    fn remote_steal_pays_the_round_trip_then_lands() {
+        let (mut fed, _ta, _tb, la, lb) = two_node(link20());
+        // Age node B's surplus past the hysteresis, then spike A to 14.
+        let (_, _) = tick_until(&mut fed, la.id, lb.id, 2, 2, 1_000.0, 4_000.0);
+        let spike = fed.renew(la.id, 14, 5_000.0);
+        assert_eq!(spike.granted, 8, "remote cores cannot arrive instantly");
+        // Next tick: the Grant (sent at +20 ms, delivered on this pump)
+        // has landed — the borrower now holds remote cores.
+        let after = fed.renew(la.id, 14, 6_000.0);
+        assert_eq!(after.granted, 14, "granted after one round trip + tick");
+        assert!(after.stolen >= 6);
+        let stats = fed.fed_stats();
+        assert_eq!(stats.stolen, 6);
+        assert!(stats.lent >= stats.stolen, "conservation: stolen <= lent");
+        assert!(stats.remote_grants >= 1);
+        assert!(stats.rtt_p50_ms > 0.0, "round trip was measured");
+    }
+
+    #[test]
+    fn per_node_budget_never_exceeded_and_cluster_conserves() {
+        let (mut fed, _ta, _tb, la, lb) = two_node(link20());
+        for k in 1..=20u32 {
+            let t = k as f64 * 1_000.0;
+            let _ = fed.renew(la.id, 14, t);
+            let _ = fed.renew(lb.id, 2, t);
+            for n in 0..fed.node_count() {
+                let s = fed.node_snapshot(n, t);
+                assert!(s.granted <= s.budget, "node {n} overcommitted at {t}");
+            }
+            let stats = fed.fed_stats();
+            assert!(stats.stolen <= stats.lent, "stolen > lent at {t}");
+        }
+        let snap = fed.snapshot(20_000.0);
+        assert!(snap.granted <= snap.budget);
+        assert!(snap.total_stolen() >= 6, "remote steal visible in usage");
+    }
+
+    #[test]
+    fn orphaned_grant_expires_back_within_one_ttl() {
+        let transport = SimTransport::new(link20(), 7).with_outage(8_500.0, 60_000.0);
+        let mut fed = FederatedArbiter::new(
+            NodeMap::homogeneous(2, 8),
+            Box::new(transport),
+            FederationCfg::default(),
+        );
+        let pa = fed.add_partition(8);
+        let pb = fed.add_partition(8);
+        let ta = fed.register_tenant(pa);
+        let tb = fed.register_tenant(pb);
+        let la = fed.request_lease(ta, 2, 0.0);
+        let lb = fed.request_lease(tb, 2, 0.0);
+        let (va, _) = tick_until(&mut fed, la.id, lb.id, 14, 2, 1_000.0, 8_000.0);
+        assert_eq!(va.granted, 14, "steal established before the cut");
+        // The wire is cut at 8.5 s. Keep ticking: the borrower sheds its
+        // hold and the lender reclaims the loan, each within one TTL.
+        let (va, vb) = tick_until(&mut fed, la.id, lb.id, 14, 8, 9_000.0, 15_000.0);
+        assert_eq!(va.granted, 8, "borrower shed the orphaned hold");
+        assert_eq!(vb.granted, 8, "lender has its full floor back");
+        let stats = fed.fed_stats();
+        assert_eq!(stats.stolen, 0);
+        assert_eq!(stats.lent, 0);
+        assert!(stats.expired_reclaims >= 6, "expiry accounted: {stats:?}");
+        assert!(fed.snapshot(15_000.0).expired_reclaims >= 6);
+    }
+
+    #[test]
+    fn shedding_returns_cores_to_the_lender() {
+        let (mut fed, _ta, _tb, la, lb) = two_node(link20());
+        let _ = tick_until(&mut fed, la.id, lb.id, 14, 2, 1_000.0, 6_000.0);
+        assert_eq!(fed.fed_stats().stolen, 6);
+        // A's demand collapses; the borrower sheds instantly, the lender
+        // frees on the Release/Renew delivery.
+        let (va, _) = tick_until(&mut fed, la.id, lb.id, 2, 2, 7_000.0, 9_000.0);
+        assert_eq!(va.granted, 2);
+        let stats = fed.fed_stats();
+        assert_eq!(stats.stolen, 0);
+        assert_eq!(stats.lent, 0, "lender freed on borrower confirmation");
+        assert_eq!(stats.expired_reclaims, 0, "graceful return, no expiry");
+    }
+
+    #[test]
+    fn lender_pressure_reclaims_the_loan() {
+        let (mut fed, _ta, _tb, la, lb) = two_node(link20());
+        let _ = tick_until(&mut fed, la.id, lb.id, 14, 2, 1_000.0, 6_000.0);
+        assert_eq!(fed.fed_stats().stolen, 6);
+        // B's demand returns: its renew demands the loan home; A keeps
+        // asking for 14 but is clamped back toward its floor.
+        let (va, vb) = tick_until(&mut fed, la.id, lb.id, 14, 8, 7_000.0, 12_000.0);
+        assert_eq!(vb.granted, 8, "lender's own tenant recovered its floor");
+        assert!(va.granted <= 9, "borrower clamped near its floor: {va:?}");
+        let stats = fed.fed_stats();
+        assert!(stats.stolen <= 1, "loan substantially reclaimed: {stats:?}");
+    }
+
+    #[test]
+    fn loss_and_duplication_delay_but_never_corrupt() {
+        let lossy = LinkCfg {
+            latency_ms: 20.0,
+            jitter_sigma: 0.5,
+            loss: 0.3,
+            duplicate: 0.3,
+        };
+        let (mut fed, _ta, _tb, la, lb) = two_node(lossy);
+        let mut best = 0;
+        for k in 1..=30u32 {
+            let t = k as f64 * 1_000.0;
+            let va = fed.renew(la.id, 14, t);
+            let _ = fed.renew(lb.id, 2, t);
+            best = best.max(va.granted);
+            let stats = fed.fed_stats();
+            assert!(stats.stolen <= stats.lent, "conservation broke at {t}");
+            for n in 0..fed.node_count() {
+                let s = fed.node_snapshot(n, t);
+                assert!(s.granted <= s.budget);
+            }
+        }
+        // Even at 30% loss the steal establishes at some point.
+        assert!(best > 8, "steal never landed under loss: best {best}");
+        assert!(fed.fed_stats().transport.dropped > 0);
+    }
+
+    #[test]
+    fn release_returns_everything_and_quiesces() {
+        let (mut fed, _ta, _tb, la, lb) = two_node(link20());
+        let _ = tick_until(&mut fed, la.id, lb.id, 14, 2, 1_000.0, 6_000.0);
+        assert!(!fed.quiescent(), "outstanding loans block quiescence");
+        fed.release(la.id, 7_000.0);
+        // Drain the Release delivery and the lender's bookkeeping.
+        let _ = fed.renew(lb.id, 2, 8_000.0);
+        let _ = fed.renew(lb.id, 2, 9_000.0);
+        assert!(fed.quiescent(), "all loans returned, wire idle");
+        let snap = fed.snapshot(9_000.0);
+        assert_eq!(snap.total_stolen(), 0);
+    }
+
+    #[test]
+    fn fully_cut_wire_never_grants_and_never_corrupts() {
+        let transport = SimTransport::new(link20(), 7).with_outage(0.0, 1.0e9);
+        let mut fed = FederatedArbiter::new(
+            NodeMap::homogeneous(2, 8),
+            Box::new(transport),
+            FederationCfg::default(),
+        );
+        let pa = fed.add_partition(8);
+        let pb = fed.add_partition(8);
+        let ta = fed.register_tenant(pa);
+        let tb = fed.register_tenant(pb);
+        let la = fed.request_lease(ta, 2, 0.0);
+        let lb = fed.request_lease(tb, 2, 0.0);
+        // Sustained over-floor demand against a wire that never answers:
+        // only the local floor is ever granted, and nothing leaks.
+        let (va, vb) = tick_until(&mut fed, la.id, lb.id, 14, 2, 1_000.0, 40_000.0);
+        assert_eq!(va.granted, 8, "only local cores under a full cut");
+        assert_eq!(vb.granted, 2);
+        let stats = fed.fed_stats();
+        assert_eq!(stats.stolen, 0);
+        assert_eq!(stats.lent, 0);
+        assert_eq!(stats.remote_grants, 0);
+        assert_eq!(stats.transport.delivered, 0, "cut wire delivered something");
+        // The strike gate throttles a dead wire to probe cadence: without
+        // it every tick would fire a Request (40 renews here), with it
+        // the send count stays well below the tick count.
+        assert!(
+            stats.transport.sent < 40,
+            "dead wire not throttled: {} sends",
+            stats.transport.sent
+        );
+    }
+
+    #[test]
+    fn plannable_advertises_remote_surplus_after_hysteresis() {
+        let (mut fed, ta, _tb, la, lb) = two_node(link20());
+        let _ = tick_until(&mut fed, la.id, lb.id, 2, 2, 1_000.0, 4_000.0);
+        // Home floor (8) plus the peer's aged surplus (6).
+        assert_eq!(fed.plannable(ta, 4_000.0), 14);
+        let snap = fed.snapshot(4_000.0);
+        assert_eq!(snap.budget, 16);
+    }
+
+    #[test]
+    fn globalized_ids_in_snapshot() {
+        let (mut fed, ta, tb, la, lb) = two_node(link20());
+        let _ = tick_until(&mut fed, la.id, lb.id, 14, 2, 1_000.0, 6_000.0);
+        let snap = fed.snapshot(6_000.0);
+        assert_eq!(snap.partitions.len(), 2, "wire partitions hidden");
+        assert_eq!(snap.partitions[0].id, PartitionId(0));
+        assert_eq!(snap.partitions[1].id, PartitionId(1));
+        let ua = snap.tenant(ta).expect("tenant a");
+        assert!(ua.stolen >= 6);
+        assert!(ua.peak_stolen >= 6);
+        let ub = snap.tenant(tb).expect("tenant b");
+        assert!(ub.lent >= 6, "lender attribution: {ub:?}");
+        assert_eq!(fed.tenant_home(ta), Some(NodeId(0)));
+        assert_eq!(fed.tenant_home(tb), Some(NodeId(1)));
+    }
+}

@@ -1,0 +1,52 @@
+//! Federation: the cross-node lease protocol over a lossy simulated wire.
+//!
+//! Sponge's in-place vertical scaling assumes one kernel's cpuset; a
+//! fleet spans hosts. This subsystem federates the [`crate::arbiter`]
+//! lease ledger across [`NodeId`]-addressed nodes: one local
+//! [`crate::arbiter::StealingArbiter`] ledger runs per node, and nodes
+//! negotiate cross-node loans with the [`protocol::LeaseMsg`] message
+//! protocol over a pluggable [`transport::Transport`] — deterministic
+//! [`transport::SimTransport`] in simulation (seeded per-link latency /
+//! loss / reorder / duplication, delivered through the same
+//! [`crate::sim::EventHeap`] discipline as every other engine), gateway
+//! peer endpoints (`/v1/cluster/peers`) in a real deployment.
+//!
+//! The layer contract, end to end:
+//!
+//! * **Per-node safety** — each node's `granted <= budget` is enforced
+//!   by its own ledger; remote loans draw only hysteresis-aged lendable
+//!   surplus through a zero-budget wire partition.
+//! * **Cluster conservation** — `stolen <= lent` at every instant under
+//!   arbitrary loss/reorder/duplication, with `lent == stolen == 0`
+//!   restored within one TTL of a heal; every expired loan is accounted
+//!   in `expired_reclaims`.
+//! * **Measured-latency planning** — a remote steal pays the measured
+//!   round trip before cores arrive, and the arbiter stops chasing
+//!   remote surplus when the measured RTT p95 no longer fits the TTL.
+//!
+//! Module map:
+//!
+//! * [`protocol`] — message kinds, envelopes, the absolute-state rule.
+//! * [`transport`] — the wire trait and the deterministic sim wire.
+//! * [`node`] — the node table, round-robin pinning, fleet bridge.
+//! * [`arbiter`] — [`FederatedArbiter`], the distributed control plane.
+
+pub mod arbiter;
+pub mod node;
+pub mod protocol;
+pub mod transport;
+
+pub use arbiter::{FederatedArbiter, FederationCfg, FederationStats};
+pub use node::{NodeMap, NodeSpec};
+pub use protocol::{Envelope, LeaseMsg};
+pub use transport::{LinkCfg, SimTransport, Transport, TransportStats};
+
+/// One host in the federation. Ids are dense and stable for a run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct NodeId(pub u32);
+
+impl std::fmt::Display for NodeId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "node{}", self.0)
+    }
+}

@@ -1,0 +1,128 @@
+//! The federation node model: [`NodeId`]-addressed hosts, each one
+//! kernel's cpuset, bridged to the dormant [`crate::cluster::fleet`]
+//! substrate (revived here as the multi-host capacity model the paper's
+//! §6 future-work section sketches).
+//!
+//! A [`NodeMap`] owns the per-node core budgets and the pinning rule the
+//! federated arbiter uses: partitions (and therefore replicas) are
+//! assigned to nodes round-robin in registration order, so replica `i`
+//! of a [`crate::engine::ReplicaSetEngine`] fleet lands on node
+//! `i % nodes` — deterministic and id-stable. The optional
+//! [`crate::cluster::fleet::Fleet`] bridge gives each node the full
+//! cold-start/resize-actuation substrate when a consumer wants placement
+//! realism rather than just budget arithmetic.
+
+use crate::cluster::fleet::Fleet;
+use crate::cluster::ClusterCfg;
+use crate::Cores;
+
+use super::NodeId;
+
+/// One host in the federation: an id and its core budget.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct NodeSpec {
+    pub id: NodeId,
+    pub cores: Cores,
+}
+
+/// The node table + pinning rule (see the module docs).
+#[derive(Debug)]
+pub struct NodeMap {
+    nodes: Vec<NodeSpec>,
+    /// Partitions pinned so far (drives the round-robin cursor).
+    pinned: usize,
+}
+
+impl NodeMap {
+    /// `count` homogeneous nodes of `cores_each`.
+    pub fn homogeneous(count: u32, cores_each: Cores) -> NodeMap {
+        assert!(count >= 1, "a federation needs at least one node");
+        NodeMap {
+            nodes: (0..count)
+                .map(|i| NodeSpec { id: NodeId(i), cores: cores_each })
+                .collect(),
+            pinned: 0,
+        }
+    }
+
+    /// Explicit (possibly heterogeneous) node table.
+    pub fn from_specs(nodes: Vec<NodeSpec>) -> NodeMap {
+        assert!(!nodes.is_empty(), "a federation needs at least one node");
+        NodeMap { nodes, pinned: 0 }
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    pub fn specs(&self) -> &[NodeSpec] {
+        &self.nodes
+    }
+
+    pub fn spec(&self, id: NodeId) -> Option<&NodeSpec> {
+        self.nodes.iter().find(|n| n.id == id)
+    }
+
+    /// Pin the next partition: round-robin over the node table in
+    /// registration order (replica `i` → node `i % nodes`).
+    pub fn pin_next(&mut self) -> NodeId {
+        let id = self.nodes[self.pinned % self.nodes.len()].id;
+        self.pinned += 1;
+        id
+    }
+
+    /// Materialize the fleet substrate: one [`crate::cluster::Cluster`]
+    /// per node, sized to the node budget (homogeneous tables only take
+    /// the first node's budget — the `Fleet` substrate is per-node-
+    /// uniform by construction).
+    pub fn build_fleet(&self, cfg: ClusterCfg) -> Fleet {
+        let node_cores =
+            self.nodes.first().map(|n| n.cores).unwrap_or(cfg.node_cores);
+        Fleet::new(self.nodes.len(), ClusterCfg { node_cores, ..cfg })
+    }
+
+    /// Total cores across every node.
+    pub fn total_cores(&self) -> Cores {
+        self.nodes.iter().map(|n| n.cores).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_robin_pinning_is_deterministic() {
+        let mut m = NodeMap::homogeneous(3, 8);
+        let pins: Vec<u32> = (0..7).map(|_| m.pin_next().0).collect();
+        assert_eq!(pins, vec![0, 1, 2, 0, 1, 2, 0]);
+        assert_eq!(m.len(), 3);
+        assert_eq!(m.total_cores(), 24);
+        assert_eq!(m.spec(NodeId(1)).map(|s| s.cores), Some(8));
+    }
+
+    #[test]
+    fn heterogeneous_table_keeps_budgets() {
+        let m = NodeMap::from_specs(vec![
+            NodeSpec { id: NodeId(0), cores: 16 },
+            NodeSpec { id: NodeId(1), cores: 4 },
+        ]);
+        assert_eq!(m.total_cores(), 20);
+        assert!(!m.is_empty());
+    }
+
+    #[test]
+    fn fleet_bridge_sizes_nodes_from_the_table() {
+        let m = NodeMap::homogeneous(2, 12);
+        let mut fleet = m.build_fleet(ClusterCfg::default());
+        assert_eq!(fleet.node_count(), 2);
+        let id = fleet.launch(12, 0.0).expect("fits one node exactly");
+        fleet.tick(20_000.0);
+        assert_eq!(fleet.ready_cores(20_000.0), 12);
+        assert!(fleet.resize(id, 13, 20_000.0).is_err(), "bounded by node budget");
+    }
+}

@@ -1,0 +1,111 @@
+//! The cross-node lease wire protocol: message kinds and envelopes.
+//!
+//! Every message is an **absolute state announcement**, never a delta:
+//! `Request { want }` is the borrower's total desired loan from that
+//! lender, `Grant { cores }` is the lender's total current loan, `Renew
+//! { cores }` is the borrower's total current hold. Receivers apply a
+//! message only when its per-channel sequence number is newer than the
+//! last one applied for that `(channel, tenant)` pair, so a lost,
+//! reordered, or duplicated message can delay convergence but can never
+//! corrupt the ledger: the newest announcement always wins and stale
+//! copies are ignored ([`super::FederatedArbiter`] owns that filter).
+//!
+//! | message   | direction         | absolute meaning                        |
+//! |-----------|-------------------|-----------------------------------------|
+//! | `Request` | borrower → lender | total loan the borrower wants           |
+//! | `Grant`   | lender → borrower | total loan the lender extends (0 = none)|
+//! | `Renew`   | borrower → lender | total hold; proof of life (0 = release) |
+//! | `Release` | borrower → lender | hold dropped to zero (terminal `Renew`) |
+//! | `Reclaim` | lender → borrower | shed down to `keep` cores now           |
+//! | `Expire`  | lender → borrower | loan TTL lapsed; hold is void           |
+
+use crate::arbiter::TenantId;
+use crate::{Cores, Ms};
+
+use super::NodeId;
+
+/// One lease-protocol message (see the module table). All quantities are
+/// absolute totals for one `(lender, borrower, tenant)` loan.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum LeaseMsg {
+    /// Borrower asks the lender to extend its loan to `want` cores total.
+    Request { tenant: TenantId, want: Cores },
+    /// Lender's authoritative loan size, with the TTL the borrower must
+    /// renew within. `cores == 0` means "nothing available".
+    Grant { tenant: TenantId, cores: Cores, ttl_ms: Ms },
+    /// Borrower heartbeat: it currently holds `cores` of this lender's
+    /// loan. Refreshes the lender-side deadline; a value below the loan
+    /// is a borrower-confirmed shrink the lender frees immediately.
+    Renew { tenant: TenantId, cores: Cores },
+    /// Borrower returns the whole loan (equivalent to `Renew { 0 }`).
+    Release { tenant: TenantId },
+    /// Lender demands the loan shrink to `keep` cores. The borrower sheds
+    /// on delivery; its next `Renew` confirms, and only then does the
+    /// lender's ledger free the cores (conservation: `stolen <= lent`
+    /// at every instant, never the other way).
+    Reclaim { tenant: TenantId, keep: Cores },
+    /// The loan's TTL lapsed at the lender; whatever the borrower still
+    /// holds of it is void.
+    Expire { tenant: TenantId },
+}
+
+impl LeaseMsg {
+    /// The loan principal the message is about.
+    pub fn tenant(&self) -> TenantId {
+        match self {
+            LeaseMsg::Request { tenant, .. }
+            | LeaseMsg::Grant { tenant, .. }
+            | LeaseMsg::Renew { tenant, .. }
+            | LeaseMsg::Release { tenant }
+            | LeaseMsg::Reclaim { tenant, .. }
+            | LeaseMsg::Expire { tenant } => *tenant,
+        }
+    }
+
+    /// Wire label (telemetry, docs, debugging).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            LeaseMsg::Request { .. } => "request",
+            LeaseMsg::Grant { .. } => "grant",
+            LeaseMsg::Renew { .. } => "renew",
+            LeaseMsg::Release { .. } => "release",
+            LeaseMsg::Reclaim { .. } => "reclaim",
+            LeaseMsg::Expire { .. } => "expire",
+        }
+    }
+}
+
+/// One addressed, sequenced message on the wire. `seq` is monotone per
+/// directed `(from, to)` channel; receivers drop anything not newer than
+/// the last applied sequence for the same `(channel, tenant)`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Envelope {
+    pub from: NodeId,
+    pub to: NodeId,
+    pub seq: u64,
+    pub msg: LeaseMsg,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn messages_carry_their_tenant_and_kind() {
+        let t = TenantId(3);
+        let msgs = [
+            LeaseMsg::Request { tenant: t, want: 4 },
+            LeaseMsg::Grant { tenant: t, cores: 2, ttl_ms: 5_000.0 },
+            LeaseMsg::Renew { tenant: t, cores: 2 },
+            LeaseMsg::Release { tenant: t },
+            LeaseMsg::Reclaim { tenant: t, keep: 1 },
+            LeaseMsg::Expire { tenant: t },
+        ];
+        let kinds: Vec<&str> = msgs.iter().map(|m| m.kind()).collect();
+        assert_eq!(
+            kinds,
+            vec!["request", "grant", "renew", "release", "reclaim", "expire"]
+        );
+        assert!(msgs.iter().all(|m| m.tenant() == t));
+    }
+}

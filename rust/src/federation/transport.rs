@@ -1,0 +1,349 @@
+//! The pluggable wire: a [`Transport`] trait and its deterministic
+//! virtual-time implementation, [`SimTransport`].
+//!
+//! `SimTransport` delivers [`Envelope`]s through the same
+//! [`crate::sim::EventHeap`] every other discrete-event engine drains, so
+//! a federated run stays byte-deterministic: per-link latency is a seeded
+//! lognormal around the link's base (jitter is also the reorder source —
+//! a later send can overtake an earlier one), loss and duplication are
+//! seeded Bernoulli draws, and outage/loss *windows* are pure data
+//! checked against virtual time at both the send and the delivery
+//! instant, which is how [`crate::faults::FaultKind::LeasePartition`] and
+//! [`crate::faults::FaultKind::TransportLoss`] plans compose with the
+//! federation plane unchanged (the runner translates a plan's windows
+//! into transport windows; the plan itself is untouched).
+
+use crate::sim::EventHeap;
+use crate::util::Pcg32;
+use crate::Ms;
+
+use super::protocol::Envelope;
+use super::NodeId;
+
+/// Per-link wire characteristics. Links are undirected: `(a, b)` and
+/// `(b, a)` share one configuration.
+#[derive(Debug, Clone, Copy)]
+pub struct LinkCfg {
+    /// One-way base latency.
+    pub latency_ms: Ms,
+    /// Lognormal sigma on the latency multiplier (0 = exact base, no
+    /// reordering).
+    pub jitter_sigma: f64,
+    /// Per-message drop probability (0..=1).
+    pub loss: f64,
+    /// Per-message duplicate-delivery probability (0..=1).
+    pub duplicate: f64,
+}
+
+impl Default for LinkCfg {
+    fn default() -> Self {
+        LinkCfg { latency_ms: 20.0, jitter_sigma: 0.0, loss: 0.0, duplicate: 0.0 }
+    }
+}
+
+/// Lifetime wire counters (feeds the federation cell metrics and the
+/// `/v1/cluster` document).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct TransportStats {
+    pub sent: u64,
+    pub delivered: u64,
+    pub dropped: u64,
+    pub duplicated: u64,
+}
+
+/// The wire abstraction the federated arbiter speaks over. Sim cells use
+/// [`SimTransport`]; a real deployment would back this with the gateway's
+/// `/v1/cluster/peers` endpoints.
+pub trait Transport: Send {
+    /// Hand `env` to the wire at virtual time `now`. May drop it.
+    fn send(&mut self, env: Envelope, now: Ms);
+    /// Every envelope whose delivery time has arrived, tagged with that
+    /// delivery time, in deterministic `(time, schedule order)` — the
+    /// receiver reacts *at* the delivery instant, not at the poll
+    /// instant, so protocol legs don't quantize to the poller's tick.
+    fn poll(&mut self, now: Ms) -> Vec<(Ms, Envelope)>;
+    /// True when nothing is in flight (quiescence input).
+    fn idle(&self) -> bool;
+    /// Lifetime counters.
+    fn stats(&self) -> TransportStats;
+}
+
+/// A time-bounded condition on a link set: `link = None` means every
+/// link. Windows are half-open `[from_ms, to_ms)`.
+#[derive(Debug, Clone, Copy)]
+struct Window {
+    link: Option<(u32, u32)>,
+    from_ms: Ms,
+    to_ms: Ms,
+    /// `None` = total outage; `Some(frac)` = extra loss fraction.
+    loss: Option<f64>,
+}
+
+impl Window {
+    fn covers(&self, link: (u32, u32), t: Ms) -> bool {
+        t >= self.from_ms
+            && t < self.to_ms
+            && self.link.map(|l| l == link).unwrap_or(true)
+    }
+}
+
+/// Deterministic in-memory wire (see the module docs).
+pub struct SimTransport {
+    heap: EventHeap<Envelope>,
+    rng: Pcg32,
+    default_link: LinkCfg,
+    /// Per-link overrides, keyed by the normalized `(min, max)` pair.
+    links: Vec<((u32, u32), LinkCfg)>,
+    windows: Vec<Window>,
+    stats: TransportStats,
+}
+
+impl SimTransport {
+    pub fn new(default_link: LinkCfg, seed: u64) -> SimTransport {
+        SimTransport {
+            heap: EventHeap::new(),
+            rng: Pcg32::new(seed, 0x5ead_11e5),
+            default_link,
+            links: Vec::new(),
+            windows: Vec::new(),
+            stats: TransportStats::default(),
+        }
+    }
+
+    fn key(a: NodeId, b: NodeId) -> (u32, u32) {
+        (a.0.min(b.0), a.0.max(b.0))
+    }
+
+    /// Override one link's characteristics.
+    pub fn with_link(mut self, a: NodeId, b: NodeId, cfg: LinkCfg) -> SimTransport {
+        let k = Self::key(a, b);
+        if let Some(slot) = self.links.iter_mut().find(|(l, _)| *l == k) {
+            slot.1 = cfg;
+        } else {
+            self.links.push((k, cfg));
+        }
+        self
+    }
+
+    /// Total outage on every link during `[from_ms, to_ms)` — the
+    /// [`crate::faults::FaultKind::LeasePartition`] translation.
+    pub fn with_outage(mut self, from_ms: Ms, to_ms: Ms) -> SimTransport {
+        self.windows.push(Window { link: None, from_ms, to_ms, loss: None });
+        self
+    }
+
+    /// Total outage on one link during `[from_ms, to_ms)`.
+    pub fn with_link_outage(
+        mut self,
+        a: NodeId,
+        b: NodeId,
+        from_ms: Ms,
+        to_ms: Ms,
+    ) -> SimTransport {
+        self.windows.push(Window {
+            link: Some(Self::key(a, b)),
+            from_ms,
+            to_ms,
+            loss: None,
+        });
+        self
+    }
+
+    /// Extra loss fraction on every link during `[from_ms, to_ms)` — the
+    /// [`crate::faults::FaultKind::TransportLoss`] translation.
+    pub fn with_loss_window(mut self, frac: f64, from_ms: Ms, to_ms: Ms) -> SimTransport {
+        self.windows.push(Window {
+            link: None,
+            from_ms,
+            to_ms,
+            loss: Some(frac.clamp(0.0, 1.0)),
+        });
+        self
+    }
+
+    fn link(&self, k: (u32, u32)) -> LinkCfg {
+        self.links
+            .iter()
+            .find(|(l, _)| *l == k)
+            .map(|(_, c)| *c)
+            .unwrap_or(self.default_link)
+    }
+
+    /// Is the link fully cut at `t`?
+    fn cut(&self, k: (u32, u32), t: Ms) -> bool {
+        self.windows.iter().any(|w| w.loss.is_none() && w.covers(k, t))
+    }
+
+    /// Window-added loss fraction at `t`.
+    fn window_loss(&self, k: (u32, u32), t: Ms) -> f64 {
+        self.windows
+            .iter()
+            .filter(|w| w.covers(k, t))
+            .filter_map(|w| w.loss)
+            .fold(0.0, f64::max)
+    }
+
+    fn latency(&mut self, cfg: &LinkCfg) -> Ms {
+        if cfg.jitter_sigma > 0.0 {
+            cfg.latency_ms * self.rng.lognormal(0.0, cfg.jitter_sigma)
+        } else {
+            cfg.latency_ms
+        }
+    }
+}
+
+impl Transport for SimTransport {
+    fn send(&mut self, env: Envelope, now: Ms) {
+        self.stats.sent += 1;
+        let k = Self::key(env.from, env.to);
+        let cfg = self.link(k);
+        if self.cut(k, now) {
+            self.stats.dropped += 1;
+            return;
+        }
+        let loss = (cfg.loss + self.window_loss(k, now)).clamp(0.0, 1.0);
+        // The loss draw happens unconditionally once past the outage
+        // check, so a loss knob change never shifts later draws' seeds
+        // relative to the duplicate draw below.
+        if loss > 0.0 && self.rng.f64() < loss {
+            self.stats.dropped += 1;
+            return;
+        }
+        let at = now + self.latency(&cfg);
+        self.heap.schedule(at, env);
+        if cfg.duplicate > 0.0 && self.rng.f64() < cfg.duplicate {
+            let at2 = now + self.latency(&cfg);
+            self.heap.schedule(at2, env);
+            self.stats.duplicated += 1;
+        }
+    }
+
+    fn poll(&mut self, now: Ms) -> Vec<(Ms, Envelope)> {
+        let mut out = Vec::new();
+        while let Some((at, env)) = self.heap.pop_due(now) {
+            // A partition also eats packets already in flight.
+            if self.cut(Self::key(env.from, env.to), at) {
+                self.stats.dropped += 1;
+                continue;
+            }
+            self.stats.delivered += 1;
+            out.push((at, env));
+        }
+        out
+    }
+
+    fn idle(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    fn stats(&self) -> TransportStats {
+        self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arbiter::TenantId;
+    use crate::federation::protocol::LeaseMsg;
+
+    fn env(seq: u64) -> Envelope {
+        Envelope {
+            from: NodeId(0),
+            to: NodeId(1),
+            seq,
+            msg: LeaseMsg::Renew { tenant: TenantId(0), cores: 1 },
+        }
+    }
+
+    #[test]
+    fn delivers_after_link_latency_in_order() {
+        let mut t = SimTransport::new(
+            LinkCfg { latency_ms: 50.0, ..LinkCfg::default() },
+            7,
+        );
+        t.send(env(1), 0.0);
+        t.send(env(2), 10.0);
+        assert!(t.poll(49.9).is_empty());
+        let got = t.poll(60.0);
+        assert_eq!(
+            got.iter().map(|(at, e)| (*at, e.seq)).collect::<Vec<_>>(),
+            vec![(50.0, 1), (60.0, 2)]
+        );
+        assert!(t.idle());
+        assert_eq!(t.stats().delivered, 2);
+    }
+
+    #[test]
+    fn outage_window_drops_sends_and_inflight() {
+        let mut t = SimTransport::new(
+            LinkCfg { latency_ms: 50.0, ..LinkCfg::default() },
+            7,
+        )
+        .with_outage(20.0, 100.0);
+        t.send(env(1), 0.0); // in flight when the window opens; dies at delivery
+        t.send(env(2), 30.0); // sent inside the window; dies at send
+        t.send(env(3), 100.0); // after heal; delivers
+        let got = t.poll(200.0);
+        assert_eq!(got.iter().map(|(_, e)| e.seq).collect::<Vec<_>>(), vec![3]);
+        assert_eq!(t.stats().dropped, 2);
+    }
+
+    #[test]
+    fn seeded_loss_is_deterministic() {
+        let run = || {
+            let mut t = SimTransport::new(
+                LinkCfg { latency_ms: 5.0, loss: 0.4, ..LinkCfg::default() },
+                42,
+            );
+            for i in 0..100 {
+                t.send(env(i), i as f64);
+            }
+            t.poll(1e9).iter().map(|(_, e)| e.seq).collect::<Vec<_>>()
+        };
+        let a = run();
+        assert_eq!(a, run());
+        assert!(a.len() > 30 && a.len() < 90, "loss way off: {}", a.len());
+    }
+
+    #[test]
+    fn duplication_and_jitter_reorder() {
+        let mut t = SimTransport::new(
+            LinkCfg {
+                latency_ms: 20.0,
+                jitter_sigma: 1.0,
+                duplicate: 0.5,
+                ..LinkCfg::default()
+            },
+            3,
+        );
+        for i in 0..50 {
+            t.send(env(i), 0.0);
+        }
+        let got = t.poll(1e9);
+        assert!(got.len() > 50, "some duplicates expected");
+        assert!(
+            got.windows(2).any(|w| w[0].1.seq > w[1].1.seq),
+            "jitter should reorder at least one pair"
+        );
+        let s = t.stats();
+        assert_eq!(s.delivered as usize, got.len());
+        assert_eq!(s.sent, 50);
+    }
+
+    #[test]
+    fn per_link_override_and_loss_window() {
+        let mut t = SimTransport::new(LinkCfg::default(), 1)
+            .with_link(
+                NodeId(0),
+                NodeId(1),
+                LinkCfg { latency_ms: 100.0, ..LinkCfg::default() },
+            )
+            .with_loss_window(1.0, 10.0, 20.0);
+        t.send(env(1), 0.0);
+        t.send(env(2), 15.0); // inside the total-loss window
+        let got = t.poll(1e9);
+        assert_eq!(got.iter().map(|(_, e)| e.seq).collect::<Vec<_>>(), vec![1]);
+        assert_eq!(t.stats().dropped, 1);
+    }
+}

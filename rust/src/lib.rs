@@ -88,6 +88,10 @@
 //!   [`faults::FaultPlan`] schedules (replica crashes, lease partitions,
 //!   transport loss, flaky executors) fired at exact virtual times
 //!   through the event heap; engines react, the plan stays pure data
+//! * [`federation`] — cross-node lease federation: one `CoreArbiter`
+//!   ledger per `NodeId`-addressed node, a `LeaseMsg` protocol over a
+//!   pluggable `Transport` (deterministic lossy `SimTransport` in sim),
+//!   TTL-bounded loans that conserve cores under arbitrary loss
 //! * [`workload`] — request types and arrival-process generators
 //! * [`network`] — 4G/LTE bandwidth traces and communication latency
 //! * [`monitoring`] — metrics registry, SLO tracking, Prometheus text
@@ -105,6 +109,7 @@ pub mod coordinator;
 pub mod engine;
 pub mod experiment;
 pub mod faults;
+pub mod federation;
 pub mod microbench;
 pub mod monitoring;
 pub mod network;

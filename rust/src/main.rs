@@ -86,13 +86,15 @@ fn command_help(cmd: &str) -> Option<&'static str> {
 Routes: GET /v1/models | POST /v1/models/{name}/infer |
         GET /v1/models/{name}/stats | POST /v1/pipelines/{name}/infer |
         GET /v1/pipelines/{name}/stats | POST /infer (default model) |
+        GET /v1/cluster | GET/POST /v1/cluster/peers |
         GET /metrics | GET /healthz
 "
         }
         "bench" => {
             "USAGE: sponge bench [OPTIONS]
 
-  --matrix NAME     experiment matrix: default | paper | scale | faults
+  --matrix NAME     experiment matrix: default | paper | scale | faults |
+                    federation
                     [default: default]
   --micro           run the hot-path microbench suite instead of a matrix
                     (queue snapshot, IP solve cold/warm, replica planning,
@@ -315,6 +317,9 @@ fn cmd_serve(args: &Args) -> Result<()> {
         );
         gateway = gateway.with_pipelines(specs).context("registering pipelines")?;
     }
+    // The cluster document reads the engine-wide ledger the scaler loops
+    // lease from; peers register over POST /v1/cluster/peers.
+    gateway = gateway.with_cluster(engine.arbiter());
     let gateway = Arc::new(gateway);
     let pipeline_names = gateway.pipeline_names();
     let handle = sponge::server::serve(&bind, Arc::clone(&gateway))?;
@@ -331,7 +336,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
     println!(
         "routes: GET /v1/models | POST /v1/models/{{name}}/infer | \
          GET /v1/models/{{name}}/stats | POST /v1/pipelines/{{name}}/infer | \
-         GET /v1/pipelines/{{name}}/stats | POST /infer | GET /metrics"
+         GET /v1/pipelines/{{name}}/stats | POST /infer | GET /v1/cluster | \
+         GET /metrics"
     );
     // Run until killed; `engine` stays alive so the coordinators do too.
     loop {
@@ -383,7 +389,7 @@ fn cmd_bench(args: &Args) -> Result<()> {
 
     let name = args.str_or("matrix", "default");
     let mut spec = ExperimentSpec::named(&name).ok_or_else(|| {
-        anyhow::anyhow!("unknown matrix '{name}' (default|paper|scale|faults)")
+        anyhow::anyhow!("unknown matrix '{name}' (default|paper|scale|faults|federation)")
     })?;
     if args.has("quick") {
         spec = spec.quick();

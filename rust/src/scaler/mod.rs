@@ -100,10 +100,12 @@ pub trait Autoscaler: Send {
     /// discrete-event drain loop uses this to fast-forward adaptation
     /// boundaries through quiescent gaps without changing outcomes.
     ///
-    /// Default `false` (conservative: never skip). Only override to
-    /// `true` for policies whose `decide` carries no wall-clock state;
-    /// time-stamped policies (e.g. FA2's reconfiguration cooldown) must
-    /// stay `false`.
+    /// Default `false` (conservative: never skip). Override to `true`
+    /// only when the policy can prove its idle `decide` mutates no
+    /// time-dependent state. Stateless policies return a constant
+    /// `true`; time-stamped policies must gate on their own quiescence
+    /// (FA2 returns `true` only after a reconfiguration pass came back
+    /// a no-op, because a no-op pass leaves its cooldown stamp alone).
     fn idle_fixpoint(&self) -> bool {
         false
     }
@@ -269,6 +271,11 @@ pub struct Fa2Scaler {
     pub headroom: f64,
     last_reconfig_ms: Ms,
     target_batch: BatchSize,
+    /// The last full reconfiguration pass was a no-op (fleet and batch
+    /// already at target). While true, `decide` is a pure function of
+    /// the observation — the virtual-time quiescence predicate behind
+    /// [`Autoscaler::idle_fixpoint`].
+    settled: bool,
 }
 
 impl Fa2Scaler {
@@ -279,6 +286,7 @@ impl Fa2Scaler {
             headroom: 0.5,
             last_reconfig_ms: f64::NEG_INFINITY,
             target_batch: 2,
+            settled: false,
         }
     }
 }
@@ -297,7 +305,6 @@ impl Autoscaler for Fa2Scaler {
         if obs.now_ms - self.last_reconfig_ms < self.reconfig_period_ms {
             return vec![Action::SetBatch { batch: self.target_batch }];
         }
-        self.last_reconfig_ms = obs.now_ms;
 
         let budget = (obs.slo_ms - obs.cl_max_ms).max(0.0);
         // Highest-throughput one-core batch fitting the headroom budget.
@@ -313,11 +320,24 @@ impl Autoscaler for Fa2Scaler {
         let Some((batch, h1)) = best else {
             // No one-core configuration can meet the budget: FA2 has no
             // move (the §2.1 failure case) — keep the fleet, keep batching.
+            // No state changes: repeated calls are identical.
+            self.settled = true;
             return vec![Action::SetBatch { batch: self.target_batch }];
         };
-        self.target_batch = batch;
         let want = (obs.lambda_rps / h1).ceil().max(1.0) as usize;
         let have: Vec<u32> = cluster.instances().map(|i| i.id).collect();
+        if batch == self.target_batch && want == have.len() {
+            // The pass found nothing to change. Crucially, the cooldown
+            // stamp is NOT burned on a no-op — the timer models the
+            // stabilization after an actual reconfiguration — so this
+            // branch mutates no time-dependent state and the idle drain
+            // loop may fast-forward over it bit-identically.
+            self.settled = true;
+            return vec![Action::SetBatch { batch }];
+        }
+        self.settled = false;
+        self.last_reconfig_ms = obs.now_ms;
+        self.target_batch = batch;
         let mut actions = vec![Action::SetBatch { batch }];
         if want > have.len() {
             for _ in 0..(want - have.len()) {
@@ -335,6 +355,14 @@ impl Autoscaler for Fa2Scaler {
         // Paper §2.1: five one-core instances handle 100 RPS at b=2; the
         // sim pre-warms the fleet FA2 would pick for the nominal workload.
         vec![1; 5]
+    }
+
+    /// True once a full reconfiguration pass came back a no-op: the
+    /// cooldown branch is stateless and the no-op pass stamps nothing,
+    /// so an idle boundary is a provably pure repeat either way. Any
+    /// structural change flips this back off until the next clean pass.
+    fn idle_fixpoint(&self) -> bool {
+        self.settled
     }
 }
 
@@ -601,6 +629,36 @@ mod tests {
             actions.iter().any(|a| matches!(a, Action::Terminate { .. })),
             "{actions:?}"
         );
+    }
+
+    #[test]
+    fn fa2_idle_fixpoint_after_noop_pass_and_pure_repeats() {
+        let model = LatencyModel::resnet_human_detector();
+        let mut s = Fa2Scaler::new(16);
+        assert!(!s.idle_fixpoint(), "not settled before any pass");
+        // Structural pass: the 2-instance fleet must grow — not settled.
+        let growing = ready_cluster(&[1; 2]);
+        let first = s.decide(&obs(&[], 100.0, 0.0), &growing, &model);
+        assert!(first.len() > 1);
+        assert!(!s.idle_fixpoint(), "a reconfiguration is not a fixpoint");
+        // Once the fleet matches the target (and the cooldown elapsed),
+        // the pass is a no-op: settled, and repeated idle calls return
+        // bit-identical actions without touching the cooldown stamp.
+        let want = first
+            .iter()
+            .filter(|a| matches!(a, Action::Launch { .. }))
+            .count()
+            + 2;
+        let sized = ready_cluster(&vec![1; want]);
+        let mut o = obs(&[], 100.0, 0.0);
+        o.now_ms = 30_000.0;
+        let a1 = s.decide(&o, &sized, &model);
+        assert!(s.idle_fixpoint(), "no-op pass should settle: {a1:?}");
+        let a2 = s.decide(&o, &sized, &model);
+        let a3 = s.decide(&o, &sized, &model);
+        assert_eq!(a1, a2);
+        assert_eq!(a2, a3);
+        assert!(s.idle_fixpoint());
     }
 
     #[test]

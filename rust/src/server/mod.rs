@@ -12,9 +12,23 @@
 //! | `/v1/models/{name}/stats` | GET | — | `200` `{"received", "completed", "dropped", "violated", "queue_len", "cores", "batch", "model_refits", "cores_granted", "cores_lent", "cores_stolen", "replicas": [{"replica", "received", "completed", "dropped", "violated", "queue_len", "cores", "batch", "cores_granted", "cores_lent", "cores_stolen"}]}` — top level is fleet-aggregated, `replicas` is per replica; the `cores_*` triple is the CoreArbiter lease accounting | `404` unknown model |
 //! | `/v1/pipelines/{name}/infer` | POST | infer JSON (below) | `200` pipeline infer response: `{"id", "pipeline", "e2e_ms", "violated", "dropped", "logits", "stages": [{"stage", "model", "deadline_ms", "queue_ms", "processing_ms", "server_ms", "violated", "dropped"}]}` | `400` bad JSON/body, `404` unknown pipeline, `504` timeout |
 //! | `/v1/pipelines/{name}/stats` | GET | — | `200` `{"pipeline", "apportionment", "received", "completed", "dropped", "violated", "stages": [{"stage", "model", "served", "violations", "mean_ms"}]}` | `404` unknown pipeline |
+//! | `/v1/cluster` | GET | — | `200` `{"federated", "arbiter", "budget", "granted", "expired_reclaims", "nodes": [{"node", "budget", "used", "lent", "free", "lendable", "leases": [{"tenant", "granted", "stolen", "lent", "peak_stolen"}]}]}` — the federation control plane's ledger view; on a non-federated gateway `federated` is `false` and `nodes` holds the single local partition set | — |
+//! | `/v1/cluster/peers` | GET | — | `200` `{"peers": [{"name", "addr"}]}` | — |
+//! | `/v1/cluster/peers` | POST | `{"name", "addr"}` | `200` updated peers doc (upsert by name) | `400` bad JSON / missing field |
 //! | `/infer` | POST | infer JSON | `200` — legacy alias for the **default** model | as above |
 //! | `/metrics` | GET | — | `200` Prometheus text (default model's registry) | — |
 //! | `/healthz` | GET | — | `200` `ok` | — |
+//!
+//! **Cluster semantics**: `GET /v1/cluster` renders the gateway's shared
+//! [`crate::arbiter::CoreArbiter`] ledger (attach one with
+//! [`Gateway::with_cluster`]). Against a
+//! [`crate::federation::FederatedArbiter`] each `nodes` entry is one
+//! node's floor partition and its lease table, and `expired_reclaims`
+//! counts cores that came back through lease-TTL expiry after a
+//! partition — the conservation evidence the federation bench greps for.
+//! The peers registry is deployment plumbing: peers announce themselves
+//! with `POST /v1/cluster/peers` and discover each other from the list;
+//! the simulator's `SimTransport` never touches it.
 //!
 //! **Pipeline semantics**: a pipeline (`serve --pipelines`) runs its
 //! stages in topological order against the stage models' own replica
@@ -57,6 +71,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
+use crate::arbiter::{CoreArbiter, SharedArbiter};
 use crate::coordinator::{Coordinator, LiveRequest};
 use crate::perfmodel::LatencyModel;
 use crate::pipeline::{apportion, PipelineSpec};
@@ -67,6 +82,9 @@ use crate::util::lock;
 const ROUTES: &[&str] = &[
     "GET /healthz",
     "GET /metrics",
+    "GET /v1/cluster",
+    "GET /v1/cluster/peers",
+    "POST /v1/cluster/peers",
     "GET /v1/models",
     "POST /v1/models/{name}/infer",
     "GET /v1/models/{name}/stats",
@@ -108,6 +126,20 @@ pub struct Gateway {
     by_name: BTreeMap<String, usize>,
     pipelines: Vec<PipelineRoute>,
     pipes_by_name: BTreeMap<String, usize>,
+    /// The shared core-arbiter ledger behind `GET /v1/cluster` — the same
+    /// handle the coordinators renew their leases against. `None` on
+    /// gateways started without [`Gateway::with_cluster`].
+    cluster: Option<SharedArbiter>,
+    /// The federation peer registry (`/v1/cluster/peers`): peers announce
+    /// themselves here in a real deployment; the sim wire bypasses it.
+    peers: Mutex<Vec<Peer>>,
+}
+
+/// One registered federation peer: a stable name and a dialable address.
+#[derive(Debug, Clone)]
+struct Peer {
+    name: String,
+    addr: String,
 }
 
 /// One served pipeline: the validated spec, its serial execution order,
@@ -155,7 +187,20 @@ impl Gateway {
             by_name,
             pipelines: Vec::new(),
             pipes_by_name: BTreeMap::new(),
+            cluster: None,
+            peers: Mutex::new(Vec::new()),
         })
+    }
+
+    /// Attach the shared arbiter ledger (builder style): `GET /v1/cluster`
+    /// then renders its node / lease / expiry accounting. Pass the same
+    /// handle the coordinators were started with
+    /// ([`crate::coordinator::Coordinator::start_with_arbiter`]) — for a
+    /// federated deployment that is the
+    /// [`crate::federation::FederatedArbiter`].
+    pub fn with_cluster(mut self, arbiter: SharedArbiter) -> Gateway {
+        self.cluster = Some(arbiter);
+        self
     }
 
     /// Register pipelines over the gateway's models (builder style, after
@@ -353,6 +398,9 @@ fn route(method: &str, path: &str, body: &[u8], gateway: &Gateway) -> Resp {
             }
         }
         ("GET", "/v1/models") => json(200, models_doc(gateway)),
+        ("GET", "/v1/cluster") => json(200, cluster_doc(gateway)),
+        ("GET", "/v1/cluster/peers") => json(200, peers_doc(gateway)),
+        ("POST", "/v1/cluster/peers") => peer_register_response(gateway, body),
         ("POST", "/infer") => {
             let (name, replicas) = gateway.default_entry();
             match least_loaded(replicas) {
@@ -474,6 +522,119 @@ fn models_doc(gateway: &Gateway) -> Json {
             })),
         ),
     ])
+}
+
+/// `GET /v1/cluster` payload: the shared arbiter ledger rendered as a
+/// node list with per-node lease tables. Each `nodes` entry is one
+/// partition (one node's guaranteed floor under a federated arbiter);
+/// `leases` holds the tenants drawing from it. Without an attached
+/// ledger the surface still answers — `federated: false`, empty nodes —
+/// so probes need no feature detection.
+fn cluster_doc(gateway: &Gateway) -> Json {
+    let Some(arbiter) = &gateway.cluster else {
+        return Json::obj(vec![
+            ("federated", Json::Bool(false)),
+            ("arbiter", Json::str("none")),
+            ("budget", Json::num(0.0)),
+            ("granted", Json::num(0.0)),
+            ("expired_reclaims", Json::num(0.0)),
+            ("nodes", Json::Arr(Vec::new())),
+        ]);
+    };
+    let (name, snap) = {
+        let arb = lock(arbiter);
+        (arb.name(), arb.snapshot(crate::coordinator::arbiter_now_ms()))
+    };
+    Json::obj(vec![
+        ("federated", Json::Bool(name == "federated")),
+        ("arbiter", Json::str(name)),
+        ("budget", Json::num(snap.budget as f64)),
+        ("granted", Json::num(snap.granted as f64)),
+        ("expired_reclaims", Json::num(snap.expired_reclaims as f64)),
+        (
+            "nodes",
+            Json::arr(snap.partitions.iter().map(|p| {
+                Json::obj(vec![
+                    ("node", Json::num(p.id.0 as f64)),
+                    ("budget", Json::num(p.budget as f64)),
+                    ("used", Json::num(p.used as f64)),
+                    ("lent", Json::num(p.lent as f64)),
+                    ("free", Json::num(p.free as f64)),
+                    ("lendable", Json::num(p.lendable as f64)),
+                    (
+                        "leases",
+                        Json::arr(
+                            snap.tenants
+                                .iter()
+                                .filter(|t| t.partition == p.id)
+                                .map(|t| {
+                                    Json::obj(vec![
+                                        ("tenant", Json::num(t.tenant.0 as f64)),
+                                        ("granted", Json::num(t.granted as f64)),
+                                        ("stolen", Json::num(t.stolen as f64)),
+                                        ("lent", Json::num(t.lent as f64)),
+                                        (
+                                            "peak_stolen",
+                                            Json::num(t.peak_stolen as f64),
+                                        ),
+                                    ])
+                                }),
+                        ),
+                    ),
+                ])
+            })),
+        ),
+    ])
+}
+
+/// `GET /v1/cluster/peers` payload.
+fn peers_doc(gateway: &Gateway) -> Json {
+    let peers = lock(&gateway.peers);
+    Json::obj(vec![(
+        "peers",
+        Json::arr(peers.iter().map(|p| {
+            Json::obj(vec![
+                ("name", Json::str(&p.name)),
+                ("addr", Json::str(&p.addr)),
+            ])
+        })),
+    )])
+}
+
+/// `POST /v1/cluster/peers`: upsert a peer by name. Malformed bodies are
+/// `400` with the field named; success answers with the updated list so
+/// a joining peer learns the membership in one round trip.
+fn peer_register_response(gateway: &Gateway, body: &[u8]) -> Resp {
+    let text = String::from_utf8_lossy(body);
+    let doc = match Json::parse(&text) {
+        Ok(d) => d,
+        Err(e) => {
+            return Resp::json(
+                400,
+                Json::obj(vec![("error", Json::str(&format!("bad json: {e}")))]),
+            )
+        }
+    };
+    let (name, addr) = match (doc.get("name").as_str(), doc.get("addr").as_str()) {
+        (Some(n), Some(a)) if !n.is_empty() && !a.is_empty() => (n, a),
+        _ => {
+            return Resp::json(
+                400,
+                Json::obj(vec![(
+                    "error",
+                    Json::str("peer registration needs non-empty 'name' and 'addr' strings"),
+                )]),
+            )
+        }
+    };
+    {
+        let mut peers = lock(&gateway.peers);
+        match peers.iter_mut().find(|p| p.name == name) {
+            Some(p) => p.addr = addr.to_string(),
+            None => peers.push(Peer { name: name.to_string(), addr: addr.to_string() }),
+        }
+    }
+    Resp::json(200, peers_doc(gateway))
 }
 
 /// `GET /v1/models/{name}/stats` payload: fleet-aggregated counters at

@@ -8,6 +8,7 @@ use sponge::experiment::{
     regression_gate, run_matrix, EngineKind, ExperimentSpec, GateOutcome, TraceSource,
     WorkloadSource, SCHEMA,
 };
+use sponge::faults::FaultPlan;
 use sponge::pipeline::Apportionment;
 use sponge::queue::QueueDiscipline;
 use sponge::solver::SolverChoice;
@@ -28,6 +29,8 @@ fn small_matrix(horizon_s: f64) -> ExperimentSpec {
         budgets: vec![48],
         replica_budgets: vec![1],
         arbiters: vec![ArbiterChoice::Static],
+        faults: vec![FaultPlan::none()],
+        federation: vec![None],
         horizon_ms: horizon_s * 1_000.0,
         model: "yolov5s".into(),
         seed: 42,
@@ -160,6 +163,8 @@ fn replicated_sponge_beats_single_replica_at_double_traffic() {
         budgets: vec![48],
         replica_budgets: vec![1, 2],
         arbiters: vec![ArbiterChoice::Static],
+        faults: vec![FaultPlan::none()],
+        federation: vec![None],
         horizon_ms: 60_000.0,
         model: "yolov5s".into(),
         seed: 42,
@@ -214,6 +219,34 @@ fn default_matrix_stays_ci_sized() {
         .any(|c| c.id() == "pipe3-p95/-/sim/sponge+edf+incremental@24c"));
 }
 
+#[test]
+fn federation_matrix_stays_ci_sized_and_greppable() {
+    let spec = ExperimentSpec::named("federation").unwrap().quick();
+    let cells = spec.expand();
+    // Static + stealing anchors, 3 fault-free federated knob points, and
+    // the wire-fault cells — the CI federation-matrix step greps two of
+    // these ids verbatim, so the grammar is pinned here.
+    assert!(
+        cells.iter().any(|c| c.id().contains("+fed-5000-20")
+            && !c.id().contains("+flt-")),
+        "missing the moderate-latency federated cell"
+    );
+    assert!(
+        cells.iter().any(|c| c
+            .id()
+            .ends_with("+steal+fed-5000-20+flt-fedcut")),
+        "missing the fully-partitioned federated cell CI greps"
+    );
+    // Federated knobs only ever ride on stealing contention cells.
+    for c in &cells {
+        if c.federation.is_some() {
+            assert!(c.id().contains("+steal"), "{}", c.id());
+            assert!(c.id().starts_with("contend-"), "{}", c.id());
+        }
+    }
+    assert!(cells.iter().all(|c| c.engine == EngineKind::Sim));
+}
+
 /// The pipeline-axis acceptance criterion: on the 3-stage chain
 /// (yolov5n → yolov5s → resnet) at equal total cores, percentile-aware
 /// slack apportionment yields strictly fewer end-to-end SLO violations
@@ -243,6 +276,8 @@ fn percentile_apportionment_beats_even_split_on_the_three_stage_chain() {
         budgets: vec![48], // overridden by the chain's stage floors (24)
         replica_budgets: vec![1],
         arbiters: vec![ArbiterChoice::Static],
+        faults: vec![FaultPlan::none()],
+        federation: vec![None],
         horizon_ms: 60_000.0,
         model: "yolov5s".into(),
         seed: 42,
@@ -308,6 +343,8 @@ fn stealing_beats_static_on_the_contention_pair() {
         budgets: vec![48], // overridden by the pair's calibrated total
         replica_budgets: vec![1],
         arbiters: vec![ArbiterChoice::Static, ArbiterChoice::Stealing],
+        faults: vec![FaultPlan::none()],
+        federation: vec![None],
         horizon_ms: 120_000.0, // two full burst periods per model
         model: "yolov5s".into(),
         seed: 42,

@@ -1,0 +1,185 @@
+//! Federation invariants under randomized wire interleavings.
+//!
+//! The cross-node lease protocol ([`sponge::federation`]) claims safety
+//! under *arbitrary* loss, reordering, and duplication — not just the
+//! handful of schedules the unit tests pin. This suite runs 1000 seeded
+//! interleavings per property (randomized link latency / jitter / loss /
+//! duplication, TTLs, tick cadences, node counts, and demand patterns)
+//! and checks, after every operation:
+//!
+//! * **per-node safety** — each node's local ledger never grants past
+//!   its budget, no matter what the wire delivers;
+//! * **cluster conservation** — Σ borrower holds (`stolen`) never
+//!   exceeds Σ lender loans (`lent`), and both drain to zero once
+//!   demand subsides (gracefully, or by TTL expiry when the releases
+//!   are eaten by the wire);
+//! * **expiry-back within one TTL** — a hard partition orphans every
+//!   in-flight loan, and both sides reclaim within one lease TTL of the
+//!   cut, with every expired core accounted in `expired_reclaims`.
+
+use sponge::arbiter::{CoreArbiter, CoreLease};
+use sponge::federation::{
+    FederatedArbiter, FederationCfg, LinkCfg, NodeMap, SimTransport,
+};
+use sponge::prop_assert;
+use sponge::util::proptest::run_prop;
+
+/// The two invariants every interleaving must hold at every instant.
+fn check_fed(fed: &FederatedArbiter, now: f64) -> Result<(), String> {
+    for n in 0..fed.node_count() {
+        let s = fed.node_snapshot(n, now);
+        prop_assert!(
+            s.granted <= s.budget,
+            "node {n} overcommitted at t={now}: granted {} > budget {}",
+            s.granted,
+            s.budget
+        );
+    }
+    let stats = fed.fed_stats();
+    prop_assert!(
+        stats.stolen <= stats.lent,
+        "conservation broken at t={now}: stolen {} > lent {}",
+        stats.stolen,
+        stats.lent
+    );
+    Ok(())
+}
+
+#[test]
+fn lossy_reordering_duplicating_wire_conserves_cluster_wide() {
+    run_prop("federation-lossy-conservation", 1_000, |g| {
+        let n = g.u32(2, 3);
+        let budget = g.u32(4, 12);
+        let ttl = g.f64(1_500.0, 6_000.0);
+        // Jitter past the mean latency reorders aggressively; loss and
+        // duplication each up to 40%.
+        let link = LinkCfg {
+            latency_ms: g.f64(5.0, 60.0),
+            jitter_sigma: g.f64(0.0, 1.0),
+            loss: g.f64(0.0, 0.4),
+            duplicate: g.f64(0.0, 0.4),
+        };
+        let seed = g.u32(0, 1_000_000) as u64;
+        let mut fed = FederatedArbiter::new(
+            NodeMap::homogeneous(n, budget),
+            Box::new(SimTransport::new(link, seed)),
+            FederationCfg { lease_ttl_ms: ttl, ..FederationCfg::default() },
+        );
+        let mut leases: Vec<CoreLease> = Vec::new();
+        for _ in 0..n {
+            let p = fed.add_partition(budget);
+            let t = fed.register_tenant(p);
+            leases.push(fed.request_lease(t, g.u32(1, budget), 0.0));
+        }
+        let mut now = 0.0;
+        for _ in 0..g.usize(15, 40) {
+            now += g.f64(200.0, 1_200.0);
+            for lease in leases.iter_mut() {
+                *lease = fed.renew(lease.id, g.u32(1, budget * 2), now);
+            }
+            check_fed(&fed, now)?;
+        }
+        // Drain: local-only demand for 2.5 TTLs. Graceful returns clean
+        // up when the wire lets them through; TTL expiry covers the
+        // releases the wire ate. Either way nothing may remain lent.
+        let t_end = now + ttl * 2.5;
+        while now < t_end {
+            now += 500.0;
+            for lease in leases.iter_mut() {
+                *lease = fed.renew(lease.id, 1, now);
+            }
+            check_fed(&fed, now)?;
+        }
+        let stats = fed.fed_stats();
+        prop_assert!(stats.stolen == 0, "holds survived the drain: {stats:?}");
+        prop_assert!(stats.lent == 0, "loans survived the drain: {stats:?}");
+        for lease in &leases {
+            prop_assert!(
+                lease.granted == 1,
+                "drained tenant holds {} cores, wanted 1",
+                lease.granted
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn orphaned_grants_expire_back_within_one_ttl_of_the_cut() {
+    run_prop("federation-expiry-within-one-ttl", 1_000, |g| {
+        let budget = g.u32(6, 10);
+        let ttl = g.f64(1_500.0, 5_000.0);
+        let tick = g.f64(300.0, 1_000.0);
+        // Clean wire (no loss) so the steal establishes deterministically;
+        // jitter still reorders the protocol legs.
+        let link = LinkCfg {
+            latency_ms: g.f64(5.0, 50.0),
+            jitter_sigma: g.f64(0.0, 0.5),
+            ..LinkCfg::default()
+        };
+        let seed = g.u32(0, 1_000_000) as u64;
+        let cut_at = 15_000.0;
+        let transport =
+            SimTransport::new(link, seed).with_outage(cut_at, 1.0e9);
+        let mut fed = FederatedArbiter::new(
+            NodeMap::homogeneous(2, budget),
+            Box::new(transport),
+            FederationCfg { lease_ttl_ms: ttl, ..FederationCfg::default() },
+        );
+        let pa = fed.add_partition(budget);
+        let pb = fed.add_partition(budget);
+        let ta = fed.register_tenant(pa);
+        let tb = fed.register_tenant(pb);
+        let la = fed.request_lease(ta, 2, 0.0);
+        let lb = fed.request_lease(tb, 1, 0.0);
+        let hot = budget + g.u32(2, budget);
+        // Age the lender's surplus past the hysteresis, then hold
+        // over-floor demand until the steal lands.
+        let mut now = 0.0;
+        let mut established = false;
+        while now + tick < cut_at {
+            now += tick;
+            let want = if now < 5_000.0 { 2 } else { hot };
+            let va = fed.renew(la.id, want, now);
+            let _ = fed.renew(lb.id, 1, now);
+            check_fed(&fed, now)?;
+            if va.stolen > 0 {
+                established = true;
+            }
+        }
+        prop_assert!(established, "steal never established before the cut");
+        let stolen_at_cut = fed.fed_stats().stolen;
+        prop_assert!(stolen_at_cut > 0, "loan already gone at the cut");
+        // Past the cut every message dies on the wire, so cleanup is
+        // TTL-driven on both sides: the borrower's hold stops being
+        // refreshed and the lender stops hearing renews. Both must be
+        // clean within one TTL of the cut (plus tick quantization).
+        let deadline = cut_at + ttl + 2.0 * tick;
+        let mut va = la;
+        while now < deadline {
+            now += tick;
+            va = fed.renew(la.id, hot, now);
+            let _ = fed.renew(lb.id, 1, now);
+            check_fed(&fed, now)?;
+        }
+        let stats = fed.fed_stats();
+        prop_assert!(
+            stats.stolen == 0,
+            "hold outlived the cut by more than one TTL: {stats:?}"
+        );
+        prop_assert!(
+            stats.lent == 0,
+            "loan outlived the cut by more than one TTL: {stats:?}"
+        );
+        prop_assert!(
+            stats.expired_reclaims >= stolen_at_cut as u64,
+            "expiry unaccounted: {} reclaims < {stolen_at_cut} orphaned cores",
+            stats.expired_reclaims
+        );
+        prop_assert!(
+            va.granted <= budget,
+            "borrower kept phantom cores after the cut: {va:?}"
+        );
+        Ok(())
+    });
+}
